@@ -1,0 +1,83 @@
+//! Full design-space sweep for one model with CSV export — the raw data
+//! behind Fig. 7-style scatter plots (TCO vs throughput per die size).
+//!
+//! ```sh
+//! cargo run --release --example design_sweep -- --model gpt3 --out results
+//! ```
+
+use chiplet_cloud::config::hardware::ExploreSpace;
+use chiplet_cloud::config::{ModelSpec, Workload};
+use chiplet_cloud::evaluate;
+use chiplet_cloud::explore::phase1;
+use chiplet_cloud::util::cli::Args;
+use chiplet_cloud::util::csv::write_csv;
+
+fn main() -> anyhow::Result<()> {
+    let args = Args::from_env();
+    let name = args.get("model").unwrap_or("gpt3");
+    let model =
+        ModelSpec::by_name(name).ok_or_else(|| anyhow::anyhow!("unknown model {name}"))?;
+    let ctx: usize = args.get_or("ctx", 2048);
+    let batch: usize = args.get_or("batch", 256);
+    let space = if args.has("full") { ExploreSpace::default() } else { ExploreSpace::coarse() };
+
+    let (servers, _) = phase1(&space);
+    let w = Workload::new(model.clone(), ctx, batch);
+    println!(
+        "sweeping {} server designs for {} (ctx {ctx}, batch {batch}) ...",
+        servers.len(),
+        model.display
+    );
+    let points = evaluate::sweep(&space, &servers, &w);
+    println!("{} evaluable design points", points.len());
+
+    let mut rows = vec![vec![
+        "die_mm2".to_string(),
+        "sram_mb".to_string(),
+        "tflops".to_string(),
+        "bw_gbps".to_string(),
+        "chips_per_server".to_string(),
+        "n_servers".to_string(),
+        "tp".to_string(),
+        "pp".to_string(),
+        "microbatch".to_string(),
+        "tokens_per_s".to_string(),
+        "tco_usd".to_string(),
+        "tco_per_mtok".to_string(),
+        "compute_util".to_string(),
+    ]];
+    for p in &points {
+        rows.push(vec![
+            format!("{}", p.server.chiplet.die_mm2),
+            format!("{:.1}", p.server.chiplet.sram_mb),
+            format!("{:.2}", p.server.chiplet.tflops),
+            format!("{:.0}", p.server.chiplet.mem_bw_gbps),
+            format!("{}", p.server.chips()),
+            format!("{}", p.n_servers),
+            format!("{}", p.mapping.tp),
+            format!("{}", p.mapping.pp),
+            format!("{}", p.mapping.microbatch),
+            format!("{:.1}", p.perf.tokens_per_s),
+            format!("{:.0}", p.tco.total()),
+            format!("{:.4}", p.tco_per_mtok()),
+            format!("{:.3}", p.perf.compute_util),
+        ]);
+    }
+    let out = args.get("out").unwrap_or("results");
+    let path = format!("{out}/sweep_{}.csv", model.name);
+    write_csv(&path, &rows)?;
+    println!("wrote {path}");
+
+    // headline: the best point
+    if let Some(best) =
+        points.iter().min_by(|a, b| a.tco_per_token.partial_cmp(&b.tco_per_token).unwrap())
+    {
+        println!(
+            "best: {:.0} mm² die, {} servers, ${:.4}/1M tokens",
+            best.server.chiplet.die_mm2,
+            best.n_servers,
+            best.tco_per_mtok()
+        );
+    }
+    Ok(())
+}

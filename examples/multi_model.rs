@@ -1,0 +1,84 @@
+//! Chip flexibility across models (paper §6.3 / Fig. 14): one chip design
+//! re-deployed for different LLMs by re-sizing servers and re-optimizing
+//! the mapping, plus the multi-model (geomean TCO/Token) chip objective.
+//!
+//! ```sh
+//! cargo run --release --example multi_model
+//! ```
+
+use chiplet_cloud::config::hardware::ExploreSpace;
+use chiplet_cloud::config::{ModelSpec, Workload};
+use chiplet_cloud::evaluate::{best_point, multi_model};
+use chiplet_cloud::explore::phase1;
+
+fn main() -> anyhow::Result<()> {
+    let space = ExploreSpace::coarse();
+    let (servers, _) = phase1(&space);
+
+    let operating: Vec<(ModelSpec, usize, usize)> = vec![
+        (ModelSpec::llama2_70b(), 2048, 64),
+        (ModelSpec::gopher(), 2048, 64),
+        (ModelSpec::gpt3(), 2048, 64),
+    ];
+
+    // Per-model optimal chips and costs.
+    let mut chips = Vec::new();
+    let mut opt = Vec::new();
+    for (m, ctx, b) in &operating {
+        let w = Workload::new(m.clone(), *ctx, *b);
+        let p = best_point(&space, &servers, &w)
+            .ok_or_else(|| anyhow::anyhow!("no design for {}", m.display))?;
+        println!(
+            "{:<10} optimal chip: {:>4.0} mm², {:>6.1} MB, {:>5.2} TFLOPS  -> ${:.4}/1M tok",
+            m.display,
+            p.server.chiplet.die_mm2,
+            p.server.chiplet.sram_mb,
+            p.server.chiplet.tflops,
+            p.tco_per_mtok()
+        );
+        chips.push(p.server.chiplet.clone());
+        opt.push(p.tco_per_token);
+    }
+
+    // Cross-model overhead matrix.
+    println!("\nTCO/Token overhead running model (column) on chip optimized for (row):");
+    print!("{:<12}", "");
+    for (m, _, _) in &operating {
+        print!("{:>12}", m.display);
+    }
+    println!();
+    for (ci, (cm, _, _)) in operating.iter().enumerate() {
+        print!("{:<12}", cm.display);
+        for (mi, (m, ctx, b)) in operating.iter().enumerate() {
+            match multi_model::best_for_chip(&space, &chips[ci], m, *ctx, *b) {
+                Some(p) => print!("{:>11.2}x", p.tco_per_token / opt[mi]),
+                None => print!("{:>12}", "-"),
+            }
+        }
+        println!();
+    }
+
+    // Multi-model objective.
+    if let Some(r) = multi_model::multi_model_search(&space, &chips, &operating) {
+        println!(
+            "\nmulti-model chip (geomean objective): {:.0} mm², {:.1} MB, {:.2} TFLOPS",
+            r.chip.die_mm2, r.chip.sram_mb, r.chip.tflops
+        );
+        let mut overhead = 1.0f64;
+        for (mi, p) in r.per_model.iter().enumerate() {
+            let x = p.tco_per_token / opt[mi];
+            overhead *= x;
+            println!(
+                "  on {:<10} {:.2}x of its model-optimized TCO/Token ({} chips)",
+                operating[mi].0.display,
+                x,
+                p.mapping.n_chips()
+            );
+        }
+        println!(
+            "  geomean overhead {:.2}x (paper: 1.16x average over 8 models)",
+            overhead.powf(1.0 / r.per_model.len() as f64)
+        );
+    }
+    Ok(())
+}

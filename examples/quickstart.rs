@@ -1,0 +1,56 @@
+//! Quickstart: run the two-phase co-design methodology for one model and
+//! print the TCO/Token-optimal Chiplet Cloud system.
+//!
+//! ```sh
+//! cargo run --release --example quickstart            # GPT-3, coarse sweep
+//! cargo run --release --example quickstart -- --model palm --full
+//! ```
+
+use chiplet_cloud::config::hardware::ExploreSpace;
+use chiplet_cloud::config::{ModelSpec, Workload};
+use chiplet_cloud::evaluate;
+use chiplet_cloud::explore::phase1;
+use chiplet_cloud::util::cli::Args;
+use chiplet_cloud::util::fmt_dollars;
+
+fn main() -> anyhow::Result<()> {
+    let args = Args::from_env();
+    let name = args.get("model").unwrap_or("gpt3");
+    let model = ModelSpec::by_name(name)
+        .ok_or_else(|| anyhow::anyhow!("unknown model {name} (try gpt3, palm, llama2-70b)"))?;
+    let space = if args.has("full") { ExploreSpace::default() } else { ExploreSpace::coarse() };
+
+    // Phase 1: LLM-agnostic hardware exploration.
+    println!("== Phase 1: hardware exploration ({} raw points)", space.n_points());
+    let (servers, stats) = phase1(&space);
+    println!(
+        "   {} feasible server designs (rejected: geometry {}, silicon {}, power {}, thermal {})",
+        servers.len(),
+        stats.rejected_geometry,
+        stats.rejected_silicon,
+        stats.rejected_power,
+        stats.rejected_thermal
+    );
+
+    // Phase 2: workload-aware software evaluation over the paper's grid.
+    println!("== Phase 2: software evaluation for {} ({:.1}B params)", model.display, model.n_params() / 1e9);
+    let grid = Workload::study_grid(&model);
+    let (w, p) = evaluate::best_over_grid(&space, &servers, &grid)
+        .ok_or_else(|| anyhow::anyhow!("no feasible design — widen the space"))?;
+
+    let chip = &p.server.chiplet;
+    println!("\nTCO/Token-optimal Chiplet Cloud for {}:", model.display);
+    println!("  chiplet:   {:.0} mm², {:.1} MB CC-MEM, {:.2} TFLOPS, {:.2} TB/s, {:.1} W",
+        chip.die_mm2, chip.sram_mb, chip.tflops, chip.mem_bw_gbps / 1e3, chip.tdp_w);
+    println!("  server:    {} chips ({} lanes × {}), {:.0} W wall, {} CapEx",
+        p.server.chips(), p.server.lanes, p.server.chips_per_lane,
+        p.server.server_power_w, fmt_dollars(p.server.server_capex));
+    println!("  system:    {} servers, {} chips total", p.n_servers, p.perf.n_chips);
+    println!("  mapping:   TP={} PP={} batch={} µbatch={} (ctx {})",
+        p.mapping.tp, p.mapping.pp, w.batch, p.mapping.microbatch, w.ctx);
+    println!("  decode:    {:.1} tokens/s/chip, {:.0}% compute util, {:.0}% of stage in comm",
+        p.perf.tokens_per_s_chip, p.perf.compute_util * 100.0, p.perf.comm_frac * 100.0);
+    println!("  cost:      {}/1M tokens  (CapEx share {:.0}%)",
+        fmt_dollars(p.tco_per_mtok()), p.tco.capex_frac() * 100.0);
+    Ok(())
+}

@@ -1,0 +1,174 @@
+"""AOT compile path: JAX → HLO **text** + weights.npz + manifest.json.
+
+Python runs exactly once (``make artifacts``); the Rust coordinator loads
+these files through PJRT and never touches Python again.
+
+Interchange format is HLO *text*, not serialized HloModuleProto: jax ≥ 0.5
+emits protos with 64-bit instruction ids that the crate's xla_extension
+0.5.1 rejects (``proto.id() <= INT_MAX``); the text parser reassigns ids
+and round-trips cleanly. See /opt/xla-example/README.md.
+
+Artifacts per model (default: ``cc-gpt-mini`` on the fast jnp path and
+``cc-tiny`` on the Pallas-kernel path — pytest proves the two paths
+numerically identical, so the serving artifact's HLO interface is the same
+either way):
+
+    artifacts/<name>.prefill.hlo.txt
+    artifacts/<name>.decode.hlo.txt
+    artifacts/<name>.weights.npz
+    artifacts/<name>.manifest.json
+    artifacts/<name>.fixture.json     (greedy-generation fixture for Rust)
+"""
+
+import argparse
+import json
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax._src.lib import xla_client as xc
+
+from . import model as M
+
+
+def to_hlo_text(lowered) -> str:
+    """Lowered jax function → XLA HLO text (return_tuple=True: the Rust
+    side unwraps with ``to_tuple``)."""
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def _spec(shape, dtype):
+    return jax.ShapeDtypeStruct(tuple(shape), dtype)
+
+
+def _arg_entry(name, shape, dtype):
+    return {"name": name, "shape": list(shape), "dtype": dtype}
+
+
+def build(config_name: str, batch: int, prompt_len: int, use_pallas: bool,
+          out_dir: str, seed: int = 0, fixture_tokens: int = 8) -> dict:
+    """Build all artifacts for one model config; returns the manifest."""
+    cfg = M.CONFIGS[config_name]
+    assert prompt_len + fixture_tokens <= cfg.max_ctx
+    params_np = M.init_params(cfg, seed)
+    names = list(params_np.keys())
+    pshapes = [params_np[n].shape for n in names]
+    n_params = len(names)
+
+    def prefill_fn(*args):
+        params = dict(zip(names, args[:n_params]))
+        ids = args[n_params]
+        return M.prefill(cfg, params, ids, use_pallas=use_pallas)
+
+    def decode_fn(*args):
+        params = dict(zip(names, args[:n_params]))
+        ids, pos, k, v = args[n_params:]
+        return M.decode_step(cfg, params, ids, pos, k, v, use_pallas=use_pallas)
+
+    param_specs = [_spec(s, jnp.float32) for s in pshapes]
+    ids_prefill = _spec((batch, prompt_len), jnp.int32)
+    ids_decode = _spec((batch,), jnp.int32)
+    pos_spec = _spec((), jnp.int32)
+    kv_shape = (cfg.n_layers, batch, cfg.n_heads, cfg.max_ctx, cfg.d_head)
+    kv_spec = _spec(kv_shape, jnp.float32)
+
+    print(f"[aot] lowering {config_name} prefill (pallas={use_pallas}) ...")
+    prefill_hlo = to_hlo_text(
+        jax.jit(prefill_fn).lower(*param_specs, ids_prefill)
+    )
+    print(f"[aot] lowering {config_name} decode ...")
+    decode_hlo = to_hlo_text(
+        jax.jit(decode_fn).lower(*param_specs, ids_decode, pos_spec, kv_spec, kv_spec)
+    )
+
+    os.makedirs(out_dir, exist_ok=True)
+    base = os.path.join(out_dir, config_name)
+    with open(base + ".prefill.hlo.txt", "w") as f:
+        f.write(prefill_hlo)
+    with open(base + ".decode.hlo.txt", "w") as f:
+        f.write(decode_hlo)
+    np.savez(base + ".weights.npz", **params_np)
+
+    # Greedy-generation fixture so the Rust runtime can assert exact
+    # numerics without Python on its path.
+    rng = np.random.default_rng(seed + 1)
+    prompt = rng.integers(0, cfg.vocab, (batch, prompt_len)).astype(np.int32)
+    generated = M.generate(cfg, {k: jnp.asarray(v) for k, v in params_np.items()},
+                           prompt, fixture_tokens, use_pallas=False)
+    fixture = {
+        "prompt": prompt.tolist(),
+        "generated": generated.tolist(),
+    }
+    with open(base + ".fixture.json", "w") as f:
+        json.dump(fixture, f)
+
+    manifest = {
+        "name": config_name,
+        "use_pallas": use_pallas,
+        "config": {
+            "d_model": cfg.d_model,
+            "n_layers": cfg.n_layers,
+            "n_heads": cfg.n_heads,
+            "d_ff": cfg.d_ff,
+            "vocab": cfg.vocab,
+            "max_ctx": cfg.max_ctx,
+        },
+        "batch": batch,
+        "prompt_len": prompt_len,
+        "params": [
+            _arg_entry(n, params_np[n].shape, "float32") for n in names
+        ],
+        "functions": {
+            "prefill": {
+                "hlo": f"{config_name}.prefill.hlo.txt",
+                "extra_args": [_arg_entry("ids", (batch, prompt_len), "int32")],
+                "outputs": ["logits", "k_cache", "v_cache"],
+            },
+            "decode": {
+                "hlo": f"{config_name}.decode.hlo.txt",
+                "extra_args": [
+                    _arg_entry("ids", (batch,), "int32"),
+                    _arg_entry("pos", (), "int32"),
+                    _arg_entry("k_cache", kv_shape, "float32"),
+                    _arg_entry("v_cache", kv_shape, "float32"),
+                ],
+                "outputs": ["logits", "k_cache", "v_cache"],
+            },
+        },
+        "weights": f"{config_name}.weights.npz",
+        "fixture": f"{config_name}.fixture.json",
+    }
+    with open(base + ".manifest.json", "w") as f:
+        json.dump(manifest, f, indent=1)
+    print(f"[aot] wrote {base}.{{prefill,decode}}.hlo.txt, weights, manifest")
+    return manifest
+
+
+def main():
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--out-dir", default="../artifacts")
+    ap.add_argument("--config", default=None,
+                    help="build a single config instead of the default set")
+    ap.add_argument("--batch", type=int, default=8)
+    ap.add_argument("--prompt", type=int, default=32)
+    ap.add_argument("--pallas", action="store_true")
+    ap.add_argument("--seed", type=int, default=0)
+    args = ap.parse_args()
+    if args.config:
+        build(args.config, args.batch, args.prompt, args.pallas, args.out_dir,
+              seed=args.seed)
+    else:
+        # default artifact set: serving model on the fast path,
+        # tiny model through the Pallas kernels (composition proof).
+        build("cc-gpt-mini", args.batch, args.prompt, False, args.out_dir,
+              seed=args.seed)
+        build("cc-tiny", 4, 16, True, args.out_dir, seed=args.seed)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,60 @@
+"""L1: Pallas decode-attention kernel (one new token against the KV cache).
+
+Grid is (batch, heads): each step keeps one head's KV history in VMEM and
+computes masked softmax(q·Kᵀ)·V for the single query token — the
+low-operational-intensity kernel whose bandwidth appetite motivates CC-MEM.
+The context axis is the streaming axis (the cache rides HBM→VMEM via
+BlockSpec, as the CC-MEM burst engine would stream a bank group).
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _attn_kernel(pos_ref, q_ref, k_ref, v_ref, o_ref):
+    """One (b, h) grid step: masked single-query attention over the cache."""
+    q = q_ref[0, 0, :]  # [hd]
+    k = k_ref[0, 0, :, :]  # [C, hd]
+    v = v_ref[0, 0, :, :]  # [C, hd]
+    hd = q.shape[-1]
+    scores = jnp.dot(k, q, preferred_element_type=jnp.float32) / jnp.sqrt(float(hd))
+    mask = jnp.arange(k.shape[0]) <= pos_ref[0]
+    scores = jnp.where(mask, scores, -1e30)
+    attn = jnp.exp(scores - scores.max())
+    attn = attn / attn.sum()
+    o_ref[0, 0, :] = jnp.dot(attn, v, preferred_element_type=jnp.float32)
+
+
+@jax.jit
+def decode_attention(q, k_cache, v_cache, pos):
+    """Single-token attention: q [B,H,hd] × cache [B,H,C,hd] → [B,H,hd].
+
+    ``pos`` is a scalar int32 — the batch decodes in lockstep (batch-
+    synchronous generation, as the paper's pipelined batching assumes).
+    """
+    b, h, hd = q.shape
+    c = k_cache.shape[2]
+    pos_arr = jnp.reshape(pos, (1,)).astype(jnp.int32)
+    return pl.pallas_call(
+        _attn_kernel,
+        grid=(b, h),
+        in_specs=[
+            pl.BlockSpec(memory_space=pltpu_any()),
+            pl.BlockSpec((1, 1, hd), lambda i, j: (i, j, 0)),
+            pl.BlockSpec((1, 1, c, hd), lambda i, j: (i, j, 0, 0)),
+            pl.BlockSpec((1, 1, c, hd), lambda i, j: (i, j, 0, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, 1, hd), lambda i, j: (i, j, 0)),
+        out_shape=jax.ShapeDtypeStruct((b, h, hd), jnp.float32),
+        interpret=True,
+    )(pos_arr, q, k_cache, v_cache)
+
+
+def pltpu_any():
+    """Whole-array memory space for the scalar position operand."""
+    from jax.experimental.pallas import tpu as pltpu
+
+    return pltpu.ANY

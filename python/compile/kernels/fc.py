@@ -1,0 +1,89 @@
+"""L1: Pallas tiled FC kernel (matmul + bias + activation).
+
+TPU-shaped blocking: weight tiles stream HBM→VMEM via BlockSpec (the role
+the CC-MEM burst engine plays in the paper's chiplet), the MXU consumes
+(bm, bk) × (bk, bn) blocks with an f32 accumulator in VMEM scratch, and the
+bias/activation epilogue runs once on the last k-step.
+
+``interpret=True`` everywhere: the CPU PJRT plugin cannot execute Mosaic
+custom-calls; interpret mode lowers to plain HLO, which is what the Rust
+runtime loads. On a real TPU the same kernel compiles natively (the
+BlockSpecs already express the HBM↔VMEM schedule; see DESIGN.md
+§Hardware-Adaptation).
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def apply_act(y, activation):
+    """Epilogue activation (SIMD-core work in the paper's chiplet)."""
+    if activation == "gelu":
+        return 0.5 * y * (1.0 + jnp.tanh(0.7978845608028654 * (y + 0.044715 * y**3)))
+    if activation == "relu":
+        return jnp.maximum(y, 0.0)
+    if activation == "none":
+        return y
+    raise ValueError(f"unknown activation {activation}")
+
+
+def _mm_kernel(x_ref, w_ref, b_ref, o_ref, acc_ref, *, nk, activation):
+    """One (i, j, k) grid step: accumulate a block product; epilogue at k end."""
+
+    @pl.when(pl.program_id(2) == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    acc_ref[...] += jnp.dot(x_ref[...], w_ref[...], preferred_element_type=jnp.float32)
+
+    @pl.when(pl.program_id(2) == nk - 1)
+    def _epilogue():
+        o_ref[...] = apply_act(acc_ref[...] + b_ref[...], activation)
+
+
+def pick_block(dim, target):
+    """Largest divisor of ``dim`` that is ≤ ``target`` (static block sizing)."""
+    b = max(1, min(dim, target))
+    while dim % b != 0:
+        b -= 1
+    return b
+
+
+@functools.partial(jax.jit, static_argnames=("activation", "block_m", "block_n", "block_k"))
+def matmul_bias_act(x, w, b, activation="none", block_m=128, block_n=128, block_k=128):
+    """Pallas FC: ``act(x @ w + b)`` with (bm, bn, bk) VMEM blocking.
+
+    x: [M, K] f32, w: [K, N] f32, b: [N] f32 → [M, N] f32.
+    Block sizes are clipped to divisors of the dims so the grid is exact.
+    """
+    m, k = x.shape
+    k2, n = w.shape
+    assert k == k2 and b.shape == (n,), (x.shape, w.shape, b.shape)
+    bm = pick_block(m, block_m)
+    bn = pick_block(n, block_n)
+    bk = pick_block(k, block_k)
+    nk = k // bk
+    return pl.pallas_call(
+        functools.partial(_mm_kernel, nk=nk, activation=activation),
+        grid=(m // bm, n // bn, nk),
+        in_specs=[
+            pl.BlockSpec((bm, bk), lambda i, j, kk: (i, kk)),
+            pl.BlockSpec((bk, bn), lambda i, j, kk: (kk, j)),
+            pl.BlockSpec((bn,), lambda i, j, kk: (j,)),
+        ],
+        out_specs=pl.BlockSpec((bm, bn), lambda i, j, kk: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((m, n), jnp.float32),
+        scratch_shapes=[pltpu.VMEM((bm, bn), jnp.float32)],
+        interpret=True,
+    )(x, w, b)
+
+
+def vmem_footprint_bytes(m, k, n, block_m=128, block_n=128, block_k=128):
+    """Estimated VMEM working set of one grid step (for DESIGN.md's
+    real-TPU analysis): x block + w block + bias + accumulator + output."""
+    bm, bn, bk = pick_block(m, block_m), pick_block(n, block_n), pick_block(k, block_k)
+    return 4 * (bm * bk + bk * bn + bn + 2 * bm * bn)

@@ -1,0 +1,129 @@
+"""Pure-jnp oracles for the Pallas kernels (the CORE correctness signal).
+
+Every kernel in this package is checked against these references by
+``python/tests/``; the Rust side never runs Python, so build-time equality
+here is what guarantees the AOT artifacts compute the right thing.
+"""
+
+import jax.numpy as jnp
+import numpy as np
+
+# Tile geometry of the CC-MEM compression decoder (paper §3.2, Fig. 4).
+TILE_ROWS = 32
+TILE_COLS = 8
+
+
+def matmul_bias_act(x, w, b, activation="none"):
+    """Reference FC layer: x @ w + b with an optional activation."""
+    y = jnp.matmul(x, w, preferred_element_type=jnp.float32) + b
+    if activation == "gelu":
+        # tanh-approximation GELU (GPT-2 style)
+        y = 0.5 * y * (1.0 + jnp.tanh(0.7978845608028654 * (y + 0.044715 * y**3)))
+    elif activation == "relu":
+        y = jnp.maximum(y, 0.0)
+    elif activation != "none":
+        raise ValueError(f"unknown activation {activation}")
+    return y
+
+
+def decode_attention(q, k_cache, v_cache, pos):
+    """Reference single-token attention over a KV cache.
+
+    q:        [B, H, hd]      query for the new token
+    k_cache:  [B, H, C, hd]   keys   (only positions <= pos are valid)
+    v_cache:  [B, H, C, hd]   values
+    pos:      scalar int32    index of the new token
+    returns   [B, H, hd]
+    """
+    hd = q.shape[-1]
+    scores = jnp.einsum("bhd,bhcd->bhc", q, k_cache) / jnp.sqrt(float(hd))
+    c = k_cache.shape[2]
+    mask = jnp.arange(c) <= pos
+    scores = jnp.where(mask[None, None, :], scores, -1e30)
+    attn = jnp.exp(scores - scores.max(axis=-1, keepdims=True))
+    attn = attn / attn.sum(axis=-1, keepdims=True)
+    return jnp.einsum("bhc,bhcd->bhd", attn, v_cache)
+
+
+# --------------------------------------------------------------------------
+# Tile-CSR (Store-as-Compressed, Load-as-Dense) reference codec.
+#
+# A sparse word packs a bf16 value (top 16 bits of the f32 pattern), a 5-bit
+# row and a 3-bit column into 24 bits: word = value16 << 8 | r << 3 | c.
+# Tiles are (32, 8); every tile is padded to the same word capacity so the
+# Pallas kernel's BlockSpecs stay static (documented deviation: the hardware
+# stores variable-length tiles with an index memory, see the rust ccmem
+# simulator which models that exactly).
+# --------------------------------------------------------------------------
+
+
+def to_bf16_bits(x):
+    """Round f32 → bf16 and return the 16-bit patterns (numpy)."""
+    x32 = np.ascontiguousarray(np.asarray(x, dtype=np.float32))
+    bits = x32.view(np.uint32)
+    # round-to-nearest-even on the truncated mantissa
+    rounded = (bits + 0x7FFF + ((bits >> 16) & 1)) >> 16
+    return rounded.astype(np.uint32)
+
+
+def from_bf16_bits(bits):
+    """16-bit bf16 patterns → f32 (numpy)."""
+    return np.ascontiguousarray((np.asarray(bits, dtype=np.uint32) << 16)).view(
+        np.float32
+    )
+
+
+def bf16_quantize(x):
+    """Quantize f32 to bf16 precision (what compression stores)."""
+    return from_bf16_bits(to_bf16_bits(x)).reshape(np.shape(x))
+
+
+def encode_tile_csr(w):
+    """Encode a dense [K, N] matrix to padded tile-CSR arrays.
+
+    Returns (words[tr, tc, cap] int32, nnz[tr, tc] int32) with
+    tr = K/32, tc = N/8 and cap = max nnz over tiles (min 1).
+    Values are bf16-quantized; zeros are dropped.
+    """
+    w = np.asarray(w, dtype=np.float32)
+    k, n = w.shape
+    assert k % TILE_ROWS == 0 and n % TILE_COLS == 0, (k, n)
+    tr, tc = k // TILE_ROWS, n // TILE_COLS
+    tiles = w.reshape(tr, TILE_ROWS, tc, TILE_COLS).transpose(0, 2, 1, 3)
+    vbits = to_bf16_bits(tiles).reshape(tr, tc, TILE_ROWS, TILE_COLS)
+    nz = vbits != 0  # bf16 zero pattern == numeric zero
+    nnz = nz.sum(axis=(2, 3)).astype(np.int32)
+    cap = max(int(nnz.max()), 1)
+    words = np.zeros((tr, tc, cap), dtype=np.int64)
+    for i in range(tr):
+        for j in range(tc):
+            rr, cc = np.nonzero(nz[i, j])
+            packed = (vbits[i, j, rr, cc].astype(np.int64) << 8) | (rr << 3) | cc
+            words[i, j, : len(packed)] = packed
+    return words.astype(np.int32), nnz
+
+
+def decode_tile_csr(words, nnz, k, n):
+    """Reference decode back to a dense [K, N] f32 matrix."""
+    words = np.asarray(words).astype(np.int64) & 0xFFFFFF
+    tr, tc, cap = words.shape
+    assert tr * TILE_ROWS == k and tc * TILE_COLS == n
+    out = np.zeros((tr, tc, TILE_ROWS, TILE_COLS), dtype=np.float32)
+    valid = np.arange(cap)[None, None, :] < np.asarray(nnz)[:, :, None]
+    vals = from_bf16_bits((words >> 8) & 0xFFFF).reshape(words.shape)
+    rows = (words >> 3) & 0x1F
+    cols = words & 0x7
+    for i in range(tr):
+        for j in range(tc):
+            m = valid[i, j]
+            out[i, j, rows[i, j, m], cols[i, j, m]] = vals[i, j, m]
+    return out.transpose(0, 2, 1, 3).reshape(k, n)
+
+
+def sparse_matmul(x, words, nnz, k, n, b=None):
+    """Reference SaC-LaD FC: decode then dense matmul (+bias)."""
+    w = decode_tile_csr(words, nnz, k, n)
+    y = jnp.matmul(jnp.asarray(x), jnp.asarray(w), preferred_element_type=jnp.float32)
+    if b is not None:
+        y = y + b
+    return y

@@ -1,0 +1,111 @@
+"""L1: SaC-LaD sparse FC kernel — Store-as-Compressed, Load-as-Dense.
+
+The kernel-level expression of the paper's CC-MEM compression decoder
+(§3.2, Fig. 4): the weight matrix lives in memory as tile-CSR sparse words
+(24-bit: bf16 value ‖ 5-bit row ‖ 3-bit col, tiles of (32, 8)); the kernel
+*prologue* decodes the block's tiles into a dense VMEM scratch tile —
+playing the bank-group decoder's role — and the matmul body then runs the
+exact same dense computation as ``fc.py``. Compute stays sparsity-agnostic,
+as the paper prescribes.
+
+Storage layout (static-shape concession for Pallas BlockSpecs): every tile
+is padded to the same word capacity ``cap``; hardware instead uses variable
+tiles plus an index memory — that exact behaviour is modelled by the Rust
+cycle simulator (``rust/src/ccmem/decoder.rs``). Padding affects footprint
+accounting only, never values: padded slots carry ``valid=False``.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+from . import ref
+
+TILE_ROWS = ref.TILE_ROWS
+TILE_COLS = ref.TILE_COLS
+
+
+def _decode_block(words, nnz):
+    """Decode [tr, tc, cap] sparse words into a dense (tr·32, tc·8) block.
+
+    Pure jnp — runs inside the kernel (interpret mode) exactly as the
+    decoder hardware would: value = bf16 bits → f32, zeros inserted by
+    (row, col), padded slots masked off.
+    """
+    tr, tc, cap = words.shape
+    w = words.astype(jnp.uint32)
+    vals = jax.lax.bitcast_convert_type((w >> 8) << 16, jnp.float32)
+    rows = ((w >> 3) & 0x1F).astype(jnp.int32)
+    cols = (w & 0x7).astype(jnp.int32)
+    valid = jnp.arange(cap)[None, None, :] < nnz[:, :, None]
+    vals = jnp.where(valid, vals, 0.0)
+    # scatter into (tr, tc, 32, 8); padded slots all write slot (r=0,c=0)
+    # with value 0.0 — but a real word may also target (0,0), so scatter-add
+    # with zeros is the safe composition.
+    dense = jnp.zeros((tr, tc, TILE_ROWS, TILE_COLS), jnp.float32)
+    ti = jnp.arange(tr)[:, None, None]
+    tj = jnp.arange(tc)[None, :, None]
+    ti = jnp.broadcast_to(ti, (tr, tc, cap))
+    tj = jnp.broadcast_to(tj, (tr, tc, cap))
+    dense = dense.at[ti, tj, rows, cols].add(vals)
+    return dense.transpose(0, 2, 1, 3).reshape(tr * TILE_ROWS, tc * TILE_COLS)
+
+
+def _sparse_mm_kernel(x_ref, words_ref, nnz_ref, b_ref, o_ref, acc_ref, *, nk, activation):
+    """Grid step (i, j, k): decode the (k, j) weight block, then dense FMA."""
+
+    @pl.when(pl.program_id(2) == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    w_block = _decode_block(words_ref[...], nnz_ref[...])  # Load-as-Dense
+    acc_ref[...] += jnp.dot(x_ref[...], w_block, preferred_element_type=jnp.float32)
+
+    @pl.when(pl.program_id(2) == nk - 1)
+    def _epilogue():
+        from .fc import apply_act
+
+        o_ref[...] = apply_act(acc_ref[...] + b_ref[...], activation)
+
+
+@functools.partial(
+    jax.jit, static_argnames=("k", "n", "activation", "block_n", "block_k")
+)
+def sparse_matmul_bias_act(
+    x, words, nnz, b, k, n, activation="none", block_n=128, block_k=128
+):
+    """SaC-LaD FC: ``act(x @ decode(words, nnz) + b)``.
+
+    x: [M, K] f32; words: [K/32, N/8, cap] int32; nnz: [K/32, N/8] int32;
+    b: [N] f32 → [M, N] f32. K, N are static (the dense shape of the
+    compressed weights).
+    """
+    m = x.shape[0]
+    tr, tc, cap = words.shape
+    assert tr * TILE_ROWS == k and tc * TILE_COLS == n, (words.shape, k, n)
+    from .fc import pick_block
+
+    bm = m  # decode micro-batches are small; one block row
+    bn = pick_block(n, block_n)
+    bk = pick_block(k, block_k)
+    # block tile counts
+    btr, btc = bk // TILE_ROWS, bn // TILE_COLS
+    assert bk % TILE_ROWS == 0 and bn % TILE_COLS == 0
+    nk = k // bk
+    return pl.pallas_call(
+        functools.partial(_sparse_mm_kernel, nk=nk, activation=activation),
+        grid=(m // bm, n // bn, nk),
+        in_specs=[
+            pl.BlockSpec((bm, bk), lambda i, j, kk: (i, kk)),
+            pl.BlockSpec((btr, btc, cap), lambda i, j, kk: (kk, j, 0)),
+            pl.BlockSpec((btr, btc), lambda i, j, kk: (kk, j)),
+            pl.BlockSpec((bn,), lambda i, j, kk: (j,)),
+        ],
+        out_specs=pl.BlockSpec((bm, bn), lambda i, j, kk: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((m, n), jnp.float32),
+        scratch_shapes=[pltpu.VMEM((bm, bn), jnp.float32)],
+        interpret=True,
+    )(x, words, nnz, b)

@@ -1,0 +1,211 @@
+"""L2: the served workload — a GPT-style decoder-only transformer in JAX.
+
+This is the *model* the Chiplet Cloud coordinator serves (the paper's
+system serves GPT-3-class models; our end-to-end driver serves the ~110M
+``cc-gpt-mini`` and the test-sized ``cc-tiny``). Two function entry points
+are AOT-lowered by ``aot.py`` and executed from Rust through PJRT:
+
+* ``prefill(params, ids[B, P])``   → (logits[B, V], k/v caches primed to P)
+* ``decode_step(params, ids[B], pos, k, v)`` → (logits[B, V], updated k/v)
+
+``use_pallas=True`` routes every FC layer through the L1 Pallas kernel
+(``kernels/fc.py``) so the kernels lower into the same HLO; the jnp path is
+numerically equivalent (asserted by pytest) and lowers to faster CPU code,
+which is what the serving artifact uses (see DESIGN.md §6).
+
+Weights are plain f32 numpy arrays in a flat, ordered dict — the order *is*
+the AOT calling convention (recorded in the artifact manifest).
+"""
+
+from dataclasses import dataclass
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from .kernels import attention as attn_kernel
+from .kernels import fc as fc_kernel
+
+
+@dataclass(frozen=True)
+class TransformerConfig:
+    """Model hyper-parameters (mirrors rust ``config::models::ModelSpec``)."""
+
+    name: str
+    d_model: int
+    n_layers: int
+    n_heads: int
+    d_ff: int
+    vocab: int
+    max_ctx: int
+
+    @property
+    def d_head(self) -> int:
+        assert self.d_model % self.n_heads == 0
+        return self.d_model // self.n_heads
+
+    def n_params(self) -> int:
+        per_layer = 4 * self.d_model * self.d_model + 2 * self.d_model * self.d_ff
+        return per_layer * self.n_layers + self.vocab * self.d_model
+
+
+CONFIGS = {
+    # fast tests + the Pallas-path artifact
+    "cc-tiny": TransformerConfig("cc-tiny", 256, 4, 4, 1024, 512, 128),
+    # the ~110M end-to-end serving model (GPT-2-small shape)
+    "cc-gpt-mini": TransformerConfig("cc-gpt-mini", 768, 12, 12, 3072, 32000, 128),
+}
+
+
+def param_spec(cfg: TransformerConfig):
+    """Ordered (name, shape) list — the AOT calling convention."""
+    d, f, v, c = cfg.d_model, cfg.d_ff, cfg.vocab, cfg.max_ctx
+    spec = [("wte", (v, d)), ("wpe", (c, d))]
+    for i in range(cfg.n_layers):
+        p = f"h{i}_"
+        spec += [
+            (p + "ln1_g", (d,)),
+            (p + "ln1_b", (d,)),
+            (p + "qkv_w", (d, 3 * d)),
+            (p + "qkv_b", (3 * d,)),
+            (p + "o_w", (d, d)),
+            (p + "o_b", (d,)),
+            (p + "ln2_g", (d,)),
+            (p + "ln2_b", (d,)),
+            (p + "fc1_w", (d, f)),
+            (p + "fc1_b", (f,)),
+            (p + "fc2_w", (f, d)),
+            (p + "fc2_b", (d,)),
+        ]
+    spec += [("lnf_g", (d,)), ("lnf_b", (d,))]
+    return spec
+
+
+def init_params(cfg: TransformerConfig, seed: int = 0):
+    """GPT-2-style initialization (f32 numpy), as an ordered dict."""
+    rng = np.random.default_rng(seed)
+    params = {}
+    for name, shape in param_spec(cfg):
+        if name.endswith(("_g",)):
+            params[name] = np.ones(shape, np.float32)
+        elif name.endswith(("_b",)):
+            params[name] = np.zeros(shape, np.float32)
+        else:
+            std = 0.02
+            if name.endswith(("o_w", "fc2_w")):
+                std = 0.02 / np.sqrt(2.0 * cfg.n_layers)  # GPT-2 residual scaling
+            params[name] = rng.normal(0.0, std, shape).astype(np.float32)
+    return params
+
+
+def _layernorm(x, g, b, eps=1e-5):
+    mu = x.mean(axis=-1, keepdims=True)
+    var = ((x - mu) ** 2).mean(axis=-1, keepdims=True)
+    return (x - mu) / jnp.sqrt(var + eps) * g + b
+
+
+def _gelu(x):
+    return 0.5 * x * (1.0 + jnp.tanh(0.7978845608028654 * (x + 0.044715 * x**3)))
+
+
+def _fc(x, w, b, activation, use_pallas):
+    """FC dispatch: Pallas kernel (L1) or plain jnp (equivalent, faster CPU)."""
+    if use_pallas:
+        flat = x.reshape(-1, x.shape[-1])
+        y = fc_kernel.matmul_bias_act(flat, w, b, activation=activation)
+        return y.reshape(*x.shape[:-1], w.shape[-1])
+    y = jnp.matmul(x, w, preferred_element_type=jnp.float32) + b
+    return _gelu(y) if activation == "gelu" else y
+
+
+def _split_heads(x, n_heads):
+    b, t, d = x.shape
+    return x.reshape(b, t, n_heads, d // n_heads).transpose(0, 2, 1, 3)  # [B,H,T,hd]
+
+
+def prefill(cfg: TransformerConfig, params, ids, use_pallas=False):
+    """Process a [B, P] prompt; return (last-position logits, primed caches).
+
+    Caches are [L, B, H, max_ctx, hd], zero beyond position P-1.
+    """
+    b, p = ids.shape
+    h, hd, c = cfg.n_heads, cfg.d_head, cfg.max_ctx
+    x = params["wte"][ids] + params["wpe"][:p][None, :, :]
+    k_cache = jnp.zeros((cfg.n_layers, b, h, c, hd), jnp.float32)
+    v_cache = jnp.zeros((cfg.n_layers, b, h, c, hd), jnp.float32)
+    causal = jnp.tril(jnp.ones((p, p), bool))
+    for i in range(cfg.n_layers):
+        pre = f"h{i}_"
+        ln1 = _layernorm(x, params[pre + "ln1_g"], params[pre + "ln1_b"])
+        qkv = _fc(ln1, params[pre + "qkv_w"], params[pre + "qkv_b"], "none", use_pallas)
+        q, k, v = jnp.split(qkv, 3, axis=-1)
+        q, k, v = (_split_heads(t, h) for t in (q, k, v))  # [B,H,P,hd]
+        scores = jnp.einsum("bhqd,bhkd->bhqk", q, k) / jnp.sqrt(float(hd))
+        scores = jnp.where(causal[None, None], scores, -1e30)
+        a = jax.nn.softmax(scores, axis=-1)
+        ctx = jnp.einsum("bhqk,bhkd->bhqd", a, v)
+        ctx = ctx.transpose(0, 2, 1, 3).reshape(b, p, cfg.d_model)
+        x = x + _fc(ctx, params[pre + "o_w"], params[pre + "o_b"], "none", use_pallas)
+        ln2 = _layernorm(x, params[pre + "ln2_g"], params[pre + "ln2_b"])
+        y = _fc(ln2, params[pre + "fc1_w"], params[pre + "fc1_b"], "gelu", use_pallas)
+        x = x + _fc(y, params[pre + "fc2_w"], params[pre + "fc2_b"], "none", use_pallas)
+        k_cache = k_cache.at[i, :, :, :p, :].set(k)
+        v_cache = v_cache.at[i, :, :, :p, :].set(v)
+    x = _layernorm(x, params["lnf_g"], params["lnf_b"])
+    logits = jnp.matmul(x[:, -1, :], params["wte"].T)  # tied unembedding
+    return logits, k_cache, v_cache
+
+
+def decode_step(cfg: TransformerConfig, params, ids, pos, k_cache, v_cache, use_pallas=False):
+    """One generation step for [B] token ids at position ``pos``.
+
+    Returns (logits [B, V], updated k_cache, updated v_cache).
+    """
+    b = ids.shape[0]
+    h, hd = cfg.n_heads, cfg.d_head
+    pos_emb = jax.lax.dynamic_slice_in_dim(params["wpe"], pos, 1, axis=0)
+    x = params["wte"][ids][:, None, :] + pos_emb[None, :, :]  # [B,1,d]
+    for i in range(cfg.n_layers):
+        pre = f"h{i}_"
+        ln1 = _layernorm(x, params[pre + "ln1_g"], params[pre + "ln1_b"])
+        qkv = _fc(ln1, params[pre + "qkv_w"], params[pre + "qkv_b"], "none", use_pallas)
+        q, k, v = jnp.split(qkv[:, 0, :], 3, axis=-1)  # [B, d]
+        q = q.reshape(b, h, hd)
+        k = k.reshape(b, h, hd)
+        v = v.reshape(b, h, hd)
+        # write the new K/V at `pos`
+        k_cache = jax.lax.dynamic_update_slice(
+            k_cache, k[None, :, :, None, :], (i, 0, 0, pos, 0)
+        )
+        v_cache = jax.lax.dynamic_update_slice(
+            v_cache, v[None, :, :, None, :], (i, 0, 0, pos, 0)
+        )
+        if use_pallas:
+            ctx = attn_kernel.decode_attention(q, k_cache[i], v_cache[i], pos)
+        else:
+            from .kernels import ref
+
+            ctx = ref.decode_attention(q, k_cache[i], v_cache[i], pos)
+        ctx = ctx.reshape(b, 1, cfg.d_model)
+        x = x + _fc(ctx, params[pre + "o_w"], params[pre + "o_b"], "none", use_pallas)
+        ln2 = _layernorm(x, params[pre + "ln2_g"], params[pre + "ln2_b"])
+        y = _fc(ln2, params[pre + "fc1_w"], params[pre + "fc1_b"], "gelu", use_pallas)
+        x = x + _fc(y, params[pre + "fc2_w"], params[pre + "fc2_b"], "none", use_pallas)
+    x = _layernorm(x, params["lnf_g"], params["lnf_b"])
+    logits = jnp.matmul(x[:, 0, :], params["wte"].T)
+    return logits, k_cache, v_cache
+
+
+def generate(cfg, params, prompt_ids, n_tokens, use_pallas=False):
+    """Greedy generation reference (used by tests and the AOT self-check)."""
+    logits, k, v = prefill(cfg, params, prompt_ids, use_pallas=use_pallas)
+    p = prompt_ids.shape[1]
+    out = []
+    tok = jnp.argmax(logits, axis=-1).astype(jnp.int32)
+    for step in range(n_tokens):
+        out.append(np.asarray(tok))
+        logits, k, v = decode_step(
+            cfg, params, tok, jnp.int32(p + step), k, v, use_pallas=use_pallas
+        )
+        tok = jnp.argmax(logits, axis=-1).astype(jnp.int32)
+    return np.stack(out, axis=1)  # [B, n_tokens]

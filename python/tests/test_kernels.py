@@ -1,0 +1,197 @@
+"""L1 kernel correctness: Pallas vs pure-jnp oracles (ref.py).
+
+This is the CORE correctness signal of the compile path — hypothesis sweeps
+shapes/sparsities so the kernels are right for every blocking the model can
+request, not just the shipped configs.
+"""
+
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+import jax.numpy as jnp
+
+from compile.kernels import attention, fc, ref, sparse_fc
+
+
+def rand(shape, seed, scale=1.0):
+    return (np.random.default_rng(seed).standard_normal(shape) * scale).astype(
+        np.float32
+    )
+
+
+# ---------------------------------------------------------------------------
+# Dense FC kernel
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("activation", ["none", "gelu", "relu"])
+def test_fc_matches_ref_fixed(activation):
+    x, w, b = rand((8, 256), 0), rand((256, 128), 1), rand((128,), 2)
+    got = np.asarray(fc.matmul_bias_act(x, w, b, activation=activation))
+    want = np.asarray(ref.matmul_bias_act(x, w, b, activation=activation))
+    np.testing.assert_allclose(got, want, rtol=2e-5, atol=2e-5)
+
+
+@settings(max_examples=25, deadline=None)
+@given(
+    m=st.sampled_from([1, 2, 4, 8, 16]),
+    k=st.sampled_from([32, 64, 128, 256, 384]),
+    n=st.sampled_from([8, 64, 128, 256]),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_fc_matches_ref_hypothesis(m, k, n, seed):
+    x, w, b = rand((m, k), seed), rand((k, n), seed + 1), rand((n,), seed + 2)
+    got = np.asarray(fc.matmul_bias_act(x, w, b))
+    want = np.asarray(ref.matmul_bias_act(x, w, b))
+    np.testing.assert_allclose(got, want, rtol=3e-4, atol=1e-3)
+
+
+def test_fc_block_clipping():
+    # dims that don't divide the default 128 blocks exercise pick_block
+    x, w, b = rand((3, 96), 3), rand((96, 40), 4), rand((40,), 5)
+    got = np.asarray(fc.matmul_bias_act(x, w, b))
+    want = np.asarray(ref.matmul_bias_act(x, w, b))
+    np.testing.assert_allclose(got, want, rtol=2e-5, atol=2e-5)
+
+
+def test_pick_block_divides():
+    for dim in [1, 7, 96, 128, 384, 1000]:
+        for target in [1, 8, 128]:
+            b = fc.pick_block(dim, target)
+            assert dim % b == 0 and 1 <= b <= max(1, min(dim, target))
+
+
+def test_vmem_footprint_reasonable():
+    # The shipped blocking must fit a TPU core's ~16 MB VMEM comfortably.
+    assert fc.vmem_footprint_bytes(8, 3072, 768) < 2 * 1024 * 1024
+
+
+# ---------------------------------------------------------------------------
+# Tile-CSR codec + SaC-LaD sparse FC kernel
+# ---------------------------------------------------------------------------
+
+
+@settings(max_examples=20, deadline=None)
+@given(
+    k=st.sampled_from([32, 64, 128, 256]),
+    n=st.sampled_from([8, 64, 128]),
+    sparsity=st.floats(0.0, 0.95),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_codec_roundtrip_hypothesis(k, n, sparsity, seed):
+    rng = np.random.default_rng(seed)
+    w = rng.standard_normal((k, n)).astype(np.float32)
+    w[rng.random((k, n)) < sparsity] = 0.0
+    words, nnz = ref.encode_tile_csr(w)
+    decoded = ref.decode_tile_csr(words, nnz, k, n)
+    np.testing.assert_array_equal(decoded, ref.bf16_quantize(w))
+
+
+def test_codec_word_format():
+    # One known word: value 1.0 (bf16 0x3F80) at tile row 31, col 7.
+    w = np.zeros((32, 8), np.float32)
+    w[31, 7] = 1.0
+    words, nnz = ref.encode_tile_csr(w)
+    assert nnz[0, 0] == 1
+    word = int(words[0, 0, 0])
+    assert word == (0x3F80 << 8) | (31 << 3) | 7
+    assert word < (1 << 24), "sparse words are 24-bit"
+
+
+def test_bf16_quantization_roundtrip():
+    xs = np.array([0.0, 1.0, -2.5, 3.14159, 65504.0, 1e-8], np.float32)
+    q = ref.bf16_quantize(xs)
+    # bf16 exactly represents powers of two and small integers
+    assert q[0] == 0.0 and q[1] == 1.0 and q[2] == -2.5
+    # and is within 1% elsewhere
+    np.testing.assert_allclose(q, xs, rtol=1e-2)
+
+
+@settings(max_examples=15, deadline=None)
+@given(
+    m=st.sampled_from([1, 4, 8]),
+    k=st.sampled_from([64, 128, 256]),
+    n=st.sampled_from([64, 128]),
+    sparsity=st.sampled_from([0.0, 0.3, 0.6, 0.9]),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_sparse_fc_matches_ref_hypothesis(m, k, n, sparsity, seed):
+    rng = np.random.default_rng(seed)
+    x = rng.standard_normal((m, k)).astype(np.float32)
+    w = rng.standard_normal((k, n)).astype(np.float32)
+    w[rng.random((k, n)) < sparsity] = 0.0
+    b = rng.standard_normal((n,)).astype(np.float32)
+    words, nnz = ref.encode_tile_csr(w)
+    got = np.asarray(sparse_fc.sparse_matmul_bias_act(x, words, nnz, b, k, n))
+    want = np.asarray(ref.sparse_matmul(x, words, nnz, k, n, b))
+    np.testing.assert_allclose(got, want, rtol=3e-4, atol=1e-3)
+
+
+def test_sparse_fc_equals_dense_fc_on_quantized_weights():
+    # SaC-LaD promise: compute is sparsity-agnostic — the sparse kernel on
+    # compressed weights == the dense kernel on the bf16-quantized weights.
+    rng = np.random.default_rng(9)
+    m, k, n = 8, 128, 128
+    x = rng.standard_normal((m, k)).astype(np.float32)
+    w = rng.standard_normal((k, n)).astype(np.float32)
+    w[rng.random((k, n)) < 0.6] = 0.0
+    b = np.zeros(n, np.float32)
+    words, nnz = ref.encode_tile_csr(w)
+    sparse_out = np.asarray(sparse_fc.sparse_matmul_bias_act(x, words, nnz, b, k, n))
+    dense_out = np.asarray(fc.matmul_bias_act(x, ref.bf16_quantize(w), b))
+    np.testing.assert_allclose(sparse_out, dense_out, rtol=2e-5, atol=2e-5)
+
+
+def test_compression_breakeven():
+    # 24-bit words: compression wins only above 1/3 sparsity (Fig. 13's
+    # low-sparsity overhead), matching the rust sparse::stats model.
+    k = n = 256
+    rng = np.random.default_rng(3)
+    for sparsity, should_win in [(0.1, False), (0.6, True)]:
+        w = rng.standard_normal((k, n)).astype(np.float32)
+        w[rng.random((k, n)) < sparsity] = 0.0
+        words, nnz = ref.encode_tile_csr(w)
+        dense_bits = k * n * 16
+        sparse_bits = int(nnz.sum()) * 24
+        assert (sparse_bits < dense_bits) == should_win, (sparsity, sparse_bits)
+
+
+# ---------------------------------------------------------------------------
+# Decode-attention kernel
+# ---------------------------------------------------------------------------
+
+
+@settings(max_examples=15, deadline=None)
+@given(
+    b=st.sampled_from([1, 2, 4]),
+    h=st.sampled_from([1, 4, 8]),
+    c=st.sampled_from([16, 32, 128]),
+    hd=st.sampled_from([32, 64]),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_attention_matches_ref_hypothesis(b, h, c, hd, seed):
+    rng = np.random.default_rng(seed)
+    q = rng.standard_normal((b, h, hd)).astype(np.float32)
+    k = rng.standard_normal((b, h, c, hd)).astype(np.float32)
+    v = rng.standard_normal((b, h, c, hd)).astype(np.float32)
+    pos = int(rng.integers(0, c))
+    got = np.asarray(attention.decode_attention(q, k, v, jnp.int32(pos)))
+    want = np.asarray(ref.decode_attention(q, k, v, jnp.int32(pos)))
+    np.testing.assert_allclose(got, want, rtol=2e-4, atol=2e-4)
+
+
+def test_attention_masks_future_positions():
+    # poisoning cache entries beyond pos must not change the result
+    rng = np.random.default_rng(5)
+    b, h, c, hd = 2, 2, 16, 32
+    q = rng.standard_normal((b, h, hd)).astype(np.float32)
+    k = rng.standard_normal((b, h, c, hd)).astype(np.float32)
+    v = rng.standard_normal((b, h, c, hd)).astype(np.float32)
+    pos = 5
+    base = np.asarray(attention.decode_attention(q, k, v, jnp.int32(pos)))
+    k2, v2 = k.copy(), v.copy()
+    k2[:, :, pos + 1 :, :] = 1e6
+    v2[:, :, pos + 1 :, :] = -1e6
+    poisoned = np.asarray(attention.decode_attention(q, k2, v2, jnp.int32(pos)))
+    np.testing.assert_array_equal(base, poisoned)

@@ -1,0 +1,53 @@
+//! Coordinator hot-path benchmarks: batcher formation under load and the
+//! end-to-end serve loop over the PJRT engine (queue → batch → prefill →
+//! lockstep decode → responses).
+
+use std::time::Duration;
+
+use chiplet_cloud::coordinator::{Batcher, BatcherConfig, Coordinator, CoordinatorConfig, Request};
+use chiplet_cloud::util::bench::Bench;
+
+fn main() {
+    let mut b = Bench::new();
+
+    // Batcher formation micro-bench (allocation-sensitive hot path).
+    let cfg = BatcherConfig {
+        batch: 8,
+        prompt_len: 32,
+        max_wait: Duration::from_millis(0),
+        pad_token: 0,
+    };
+    b.run("coordinator/batch-formation-8x32", || {
+        let batcher = Batcher::new(cfg.clone());
+        for i in 0..8 {
+            batcher.submit(Request::new(i, vec![1; 24], 8));
+        }
+        batcher.next_batch()
+    });
+
+    // Prompt fitting micro-bench.
+    let batcher = Batcher::new(cfg);
+    let long: Vec<i32> = (0..512).collect();
+    b.run("coordinator/fit-prompt-512to32", || batcher.fit_prompt(&long));
+
+    // End-to-end serve loop on the tiny artifact.
+    let dir = "artifacts";
+    if !std::path::Path::new(dir).join("cc-tiny.manifest.json").exists() {
+        eprintln!("bench_coordinator: artifacts missing — run `make artifacts` first");
+        return;
+    }
+    let mut e2e = Bench::new();
+    e2e.max_iters = 3;
+    e2e.run("coordinator/e2e-8req-4tok", || {
+        let coord = Coordinator::start(
+            dir,
+            "cc-tiny",
+            CoordinatorConfig { max_wait: Duration::from_millis(5), replicas: 1 },
+        )
+        .unwrap();
+        for i in 0..8 {
+            coord.submit(vec![(i % 50) as i32 + 1; 12], 4);
+        }
+        coord.shutdown().unwrap()
+    });
+}

@@ -1,0 +1,25 @@
+//! Bench + regeneration of **Fig. 12 (vs TPUv4 across batch)**.
+//!
+//! Set `CC_BENCH_FULL=1` for the paper-scale sweep.
+
+use chiplet_cloud::config::hardware::ExploreSpace;
+use chiplet_cloud::report::{self, Ctx};
+use chiplet_cloud::util::bench::Bench;
+
+fn main() {
+    let space = if std::env::var("CC_BENCH_FULL").is_ok() {
+        ExploreSpace::default()
+    } else {
+        ExploreSpace::coarse()
+    };
+    let ctx = Ctx::new(space);
+    let mut b = Bench::new();
+    b.max_iters = 3;
+    let mut last = None;
+    b.run("harness/fig12", || {
+        last = Some(report::fig12(&ctx, Some(std::path::Path::new("results"))));
+    });
+    if let Some(t) = last {
+        print!("{}", t.render());
+    }
+}

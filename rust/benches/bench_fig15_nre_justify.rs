@@ -1,0 +1,16 @@
+//! Bench + regeneration of **Fig. 15**: minimum TCO/Token improvement that
+//! justifies the ASIC NRE, vs the incumbent workload's yearly TCO.
+
+use chiplet_cloud::report;
+use chiplet_cloud::util::bench::Bench;
+
+fn main() {
+    let mut b = Bench::new();
+    let mut last = None;
+    b.run("harness/fig15", || {
+        last = Some(report::fig15(Some(std::path::Path::new("results"))));
+    });
+    if let Some(t) = last {
+        print!("{}", t.render());
+    }
+}

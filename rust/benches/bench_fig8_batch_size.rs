@@ -1,0 +1,26 @@
+//! Bench + regeneration of **Fig. 8**: optimal TCO/1K tokens vs batch size
+//! across models and context lengths (MHA vs MQA/GQA KV-cache effect).
+//!
+//! Set `CC_BENCH_FULL=1` for the paper-scale sweep and full batch grid.
+
+use chiplet_cloud::config::hardware::ExploreSpace;
+use chiplet_cloud::report::{self, Ctx};
+use chiplet_cloud::util::bench::Bench;
+
+fn main() {
+    let full = std::env::var("CC_BENCH_FULL").is_ok();
+    let space = if full { ExploreSpace::default() } else { ExploreSpace::coarse() };
+    let ctx = Ctx::new(space);
+    let ctxs: Vec<usize> = if full { vec![1024, 2048, 4096] } else { vec![2048] };
+    let batches: Vec<usize> =
+        if full { vec![1, 4, 16, 64, 256, 1024] } else { vec![1, 16, 256, 1024] };
+    let mut b = Bench::new();
+    b.max_iters = 3;
+    let mut last = None;
+    b.run("harness/fig8", || {
+        last = Some(report::fig8(&ctx, &ctxs, &batches, Some(std::path::Path::new("results"))));
+    });
+    if let Some(t) = last {
+        print!("{}", t.render());
+    }
+}

@@ -1,0 +1,48 @@
+//! PJRT runtime benchmarks: artifact load, prefill latency, decode-step
+//! latency and tokens/s on the AOT-compiled model (the L3 hot path of the
+//! serving stack). Uses `cc-tiny` by default; set `CC_BENCH_MODEL=cc-gpt-mini`
+//! for the ~110M serving model.
+
+use chiplet_cloud::runtime::ModelEngine;
+use chiplet_cloud::util::bench::Bench;
+
+fn main() {
+    let model = std::env::var("CC_BENCH_MODEL").unwrap_or_else(|_| "cc-tiny".to_string());
+    let dir = "artifacts";
+    if !std::path::Path::new(dir).join(format!("{model}.manifest.json")).exists() {
+        eprintln!("bench_runtime: artifacts missing — run `make artifacts` first");
+        return;
+    }
+    let engine = ModelEngine::load(dir, &model).expect("load artifacts");
+    println!(
+        "loaded {model}: {} params tensors, batch={}, load {:.1}s",
+        engine.manifest.params.len(),
+        engine.manifest.batch,
+        engine.load_time_s
+    );
+    let (prompt, _) = engine.manifest.load_fixture().expect("fixture");
+
+    let mut b = Bench::new();
+    b.max_iters = 50;
+    b.run("runtime/prefill", || engine.prefill(&prompt).unwrap());
+
+    let (tokens, state0) = engine.prefill(&prompt).unwrap();
+    // decode step latency (re-prime state each iter to keep pos legal)
+    let mut state = state0;
+    let mut toks = tokens.clone();
+    let s = b.run("runtime/decode-step", || {
+        if state.pos + 1 >= engine.manifest.max_ctx {
+            let (t2, s2) = engine.prefill(&prompt).unwrap();
+            toks = t2;
+            state = s2;
+        }
+        toks = engine.decode_step(&toks, &mut state).unwrap();
+    });
+    let batch = engine.manifest.batch as f64;
+    println!(
+        "decode throughput: {:.1} tokens/s (batch {} x {:.1} steps/s)",
+        batch / s.mean_s,
+        batch,
+        1.0 / s.mean_s
+    );
+}

@@ -1,0 +1,35 @@
+//! Bench + regeneration of **Table 2**: TCO/Token-optimal Chiplet Cloud
+//! systems for the eight case-study models.
+//!
+//! Set `CC_BENCH_FULL=1` for the paper-scale sweep (Table-1 ranges).
+
+use chiplet_cloud::config::hardware::ExploreSpace;
+use chiplet_cloud::config::ModelSpec;
+use chiplet_cloud::report::{self, Ctx};
+use chiplet_cloud::util::bench::Bench;
+
+fn space() -> ExploreSpace {
+    if std::env::var("CC_BENCH_FULL").is_ok() {
+        ExploreSpace::default()
+    } else {
+        ExploreSpace::coarse()
+    }
+}
+
+fn main() {
+    let mut b = Bench::new();
+    // time phase 1 alone (the hardware exploration hot loop)
+    b.run("phase1/hardware-exploration", || chiplet_cloud::explore::phase1(&space()));
+
+    let ctx = Ctx::new(space());
+    // time one full per-model optimization (phase 2 hot loop)
+    let gpt3 = ModelSpec::gpt3();
+    b.run("phase2/gpt3-grid-optimum", || {
+        let grid = chiplet_cloud::config::Workload::study_grid(&gpt3);
+        chiplet_cloud::evaluate::best_over_grid(&ctx.space, &ctx.servers, &grid)
+    });
+
+    // regenerate the table for all eight models
+    let t = report::table2(&ctx, &ModelSpec::paper_models(), Some(std::path::Path::new("results")));
+    print!("{}", t.render());
+}

@@ -1,0 +1,152 @@
+//! Architecture design-point datatypes: chiplet → server → system.
+//!
+//! These are *descriptions* produced by Phase 1 ([`crate::explore`]) and
+//! consumed by Phase 2 ([`crate::evaluate`]); the cycle-level behaviour of
+//! the memory system they describe is modelled in [`crate::ccmem`].
+
+/// One chiplet accelerator module (paper Fig. 3(b)): SIMD cores + CC-MEM.
+#[derive(Clone, Debug, PartialEq)]
+pub struct ChipletDesign {
+    /// Die area, mm².
+    pub die_mm2: f64,
+    /// CC-MEM capacity, MB.
+    pub sram_mb: f64,
+    /// Peak compute, TFLOPS (fp16 MAC).
+    pub tflops: f64,
+    /// CC-MEM aggregate read bandwidth, GB/s.
+    pub mem_bw_gbps: f64,
+    /// Number of CC-MEM bank groups (crossbar radix on the memory side).
+    pub n_bank_groups: usize,
+    /// Chip-to-chip IO bandwidth per link, GB/s.
+    pub io_link_gbps: f64,
+    /// Number of chip-to-chip links.
+    pub io_links: usize,
+    /// Peak (TDP) power, W.
+    pub tdp_w: f64,
+}
+
+impl ChipletDesign {
+    /// Peak aggregate off-chip bandwidth, GB/s.
+    pub fn io_bw_gbps(&self) -> f64 {
+        self.io_link_gbps * self.io_links as f64
+    }
+
+    /// Peak arithmetic intensity the chip can feed from CC-MEM
+    /// (FLOP per byte at which compute and memory are balanced).
+    pub fn balance_flop_per_byte(&self) -> f64 {
+        self.tflops * 1e12 / (self.mem_bw_gbps * 1e9)
+    }
+
+    /// Power density, W/mm².
+    pub fn power_density(&self) -> f64 {
+        self.tdp_w / self.die_mm2
+    }
+}
+
+/// A 1U Chiplet Cloud server (paper Fig. 3(c)): lanes of chiplets on a PCB
+/// with a controller and an off-PCB NIC, chiplets in a 2D torus.
+#[derive(Clone, Debug, PartialEq)]
+pub struct ServerDesign {
+    /// The replicated chiplet.
+    pub chiplet: ChipletDesign,
+    /// Chips per lane.
+    pub chips_per_lane: usize,
+    /// Lanes per server.
+    pub lanes: usize,
+    /// Peak server power at the wall (after PSU/DCDC losses), W.
+    pub server_power_w: f64,
+    /// Server CapEx (dies + packages + BOM), $.
+    pub server_capex: f64,
+}
+
+impl ServerDesign {
+    /// Total chips per server.
+    pub fn chips(&self) -> usize {
+        self.chips_per_lane * self.lanes
+    }
+
+    /// Total CC-MEM capacity per server, MB.
+    pub fn sram_mb(&self) -> f64 {
+        self.chiplet.sram_mb * self.chips() as f64
+    }
+
+    /// Total compute per server, TFLOPS.
+    pub fn tflops(&self) -> f64 {
+        self.chiplet.tflops * self.chips() as f64
+    }
+
+    /// Total silicon per server, mm².
+    pub fn silicon_mm2(&self) -> f64 {
+        self.chiplet.die_mm2 * self.chips() as f64
+    }
+}
+
+/// A full Chiplet Cloud deployment for one workload: `n_servers` replicas
+/// of a server design running a specific parallel mapping.
+#[derive(Clone, Debug)]
+pub struct SystemDesign {
+    /// The replicated server.
+    pub server: ServerDesign,
+    /// Number of servers the model is partitioned across (pipeline axis
+    /// spans servers; tensor parallel axis spans chips within a server).
+    pub n_servers: usize,
+}
+
+impl SystemDesign {
+    /// Total chips in the system.
+    pub fn total_chips(&self) -> usize {
+        self.server.chips() * self.n_servers
+    }
+
+    /// Total CC-MEM capacity, bytes.
+    pub fn total_sram_bytes(&self) -> f64 {
+        self.server.sram_mb() * 1e6 * self.n_servers as f64
+    }
+
+    /// Total peak compute, TFLOPS.
+    pub fn total_tflops(&self) -> f64 {
+        self.server.tflops() * self.n_servers as f64
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    pub(crate) fn sample_chiplet() -> ChipletDesign {
+        ChipletDesign {
+            die_mm2: 140.0,
+            sram_mb: 225.8,
+            tflops: 5.5,
+            mem_bw_gbps: 2750.0,
+            n_bank_groups: 64,
+            io_link_gbps: 25.0,
+            io_links: 4,
+            tdp_w: 7.15,
+        }
+    }
+
+    #[test]
+    fn chiplet_derived_metrics() {
+        let c = sample_chiplet();
+        assert_eq!(c.io_bw_gbps(), 100.0);
+        // 5.5 TFLOPS / 2.75 TB/s = 2 FLOP/byte balance point
+        assert!((c.balance_flop_per_byte() - 2.0).abs() < 1e-9);
+        assert!(c.power_density() < 1.0);
+    }
+
+    #[test]
+    fn server_aggregation() {
+        let s = ServerDesign {
+            chiplet: sample_chiplet(),
+            chips_per_lane: 17,
+            lanes: 8,
+            server_power_w: 1200.0,
+            server_capex: 40_000.0,
+        };
+        assert_eq!(s.chips(), 136); // Table 2 GPT-3 row
+        assert!((s.sram_mb() - 225.8 * 136.0).abs() < 1e-6);
+        let sys = SystemDesign { server: s, n_servers: 96 };
+        assert_eq!(sys.total_chips(), 13056);
+    }
+}

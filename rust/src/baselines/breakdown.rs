@@ -1,0 +1,124 @@
+//! TCO/Token improvement breakdown (paper Fig. 11).
+//!
+//! Walks the baseline → Chiplet Cloud ladder one design decision at a time,
+//! so each factor isolates one contribution:
+//!
+//! 1. **Own the chip** — the baseline's silicon through our TCO model
+//!    instead of cloud rental (paper: 12.7× GPU / 12.4× TPU).
+//! 2. **Memory system (CC-MEM)** — a reticle-class CC die with SRAM-backed
+//!    bandwidth vs the HBM-starved baseline, same conservative mapping
+//!    (paper: 5.1× / 1.5×).
+//! 3. **Die sizing** — shrink from the reticle-class die to the DSE-optimal
+//!    die (paper: 1.3× / 1.1×).
+//! 4. **2D weight-stationary** — vs 1D tensor-parallel comm (paper: 1.1×;
+//!    already present in the TPU baseline).
+//! 5. **Batch size** — optimal batch vs the baseline's (paper: 1.2×;
+//!    already present in the TPU baseline).
+
+use crate::arch::ServerDesign;
+use crate::config::hardware::ExploreSpace;
+use crate::config::{ModelSpec, Workload};
+use crate::evaluate;
+
+/// Multiplicative factor ladder (each ≥ 1 when the step helps).
+#[derive(Clone, Debug)]
+pub struct Breakdown {
+    /// Rented → fabricated, same silicon and throughput.
+    pub rent_to_own: f64,
+    /// Fabricated baseline → big-die Chiplet Cloud (CC-MEM).
+    pub memory_system: f64,
+    /// Big die → DSE-optimal die.
+    pub die_sizing: f64,
+    /// 1D → 2D weight-stationary mapping.
+    pub mapping_2dws: f64,
+    /// Baseline batch → optimal batch.
+    pub batch: f64,
+    /// Product of all factors (total rented-baseline → CC improvement).
+    pub total: f64,
+}
+
+/// Best TCO/Token over servers whose die size satisfies `die_pred`.
+fn best_constrained(
+    space: &ExploreSpace,
+    servers: &[ServerDesign],
+    w: &Workload,
+    die_pred: impl Fn(f64) -> bool,
+) -> Option<f64> {
+    let subset: Vec<ServerDesign> =
+        servers.iter().filter(|s| die_pred(s.chiplet.die_mm2)).cloned().collect();
+    evaluate::best_point(space, &subset, w).map(|p| p.tco_per_token)
+}
+
+/// Build the Fig.-11 ladder for a model against a rented/owned baseline
+/// pair (GPU: GPT-3; TPU: PaLM) evaluated at `base_batch` and `ctx`.
+pub fn breakdown(
+    space: &ExploreSpace,
+    servers: &[ServerDesign],
+    model: &ModelSpec,
+    ctx: usize,
+    base_batch: usize,
+    rented_per_token: f64,
+    owned_per_token: f64,
+) -> Option<Breakdown> {
+    // Step 2: CC with a reticle-class die (≥ 400 mm²), 1D comm, base batch.
+    let w_big = Workload::new(model.clone(), ctx, base_batch).with_1d_comm();
+    let big_die = best_constrained(space, servers, &w_big, |d| d >= 400.0)?;
+    // Step 3: optimal die, still 1D comm + base batch.
+    let opt_die_1d = best_constrained(space, servers, &w_big, |_| true)?;
+    // Step 4: 2D weight-stationary.
+    let w_2d = Workload::new(model.clone(), ctx, base_batch);
+    let opt_die_2d = best_constrained(space, servers, &w_2d, |_| true)?;
+    // Step 5: batch tuning over the paper grid.
+    let grid = Workload::study_grid(model);
+    let (_, best) = evaluate::best_over_grid(space, servers, &grid)?;
+
+    let rent_to_own = rented_per_token / owned_per_token;
+    let memory_system = owned_per_token / big_die;
+    let die_sizing = big_die / opt_die_1d;
+    let mapping_2dws = opt_die_1d / opt_die_2d;
+    let batch = opt_die_2d / best.tco_per_token;
+    Some(Breakdown {
+        rent_to_own,
+        memory_system,
+        die_sizing,
+        mapping_2dws,
+        batch,
+        total: rented_per_token / best.tco_per_token,
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::baselines::gpu;
+    use crate::explore::phase1;
+
+    #[test]
+    fn gpu_ladder_shape() {
+        let space = ExploreSpace::coarse();
+        let (servers, _) = phase1(&space);
+        let spec = gpu::a100();
+        let b = breakdown(
+            &space,
+            &servers,
+            &ModelSpec::gpt3(),
+            2048,
+            64,
+            gpu::rented_tco_per_token(&spec),
+            gpu::fabricated_tco_per_token(&spec, &space),
+        )
+        .expect("ladder computable");
+        // Every step is a (weak) improvement and the big ones are big:
+        assert!(b.rent_to_own > 5.0, "own {}", b.rent_to_own);
+        assert!(b.memory_system > 1.2, "mem {}", b.memory_system);
+        assert!(b.die_sizing >= 1.0, "die {}", b.die_sizing);
+        assert!(b.mapping_2dws >= 0.99, "2dws {}", b.mapping_2dws);
+        assert!(b.batch >= 1.0, "batch {}", b.batch);
+        // Paper headline: ~97–106× total over the rented GPU.
+        assert!((30.0..400.0).contains(&b.total), "total {}", b.total);
+        // Factors compose (each step divides the previous TCO).
+        let product =
+            b.rent_to_own * b.memory_system * b.die_sizing * b.mapping_2dws * b.batch;
+        assert!((product / b.total - 1.0).abs() < 1e-9);
+    }
+}

@@ -1,0 +1,184 @@
+//! Compression decoder unit (paper §3.2, Fig. 4).
+//!
+//! Sits inside each bank group. To read sparse data the decoder fetches the
+//! tile's (start, end) from index memory, streams sparse words from data
+//! memory into a double buffer at up to 8 words/cycle, inserts zeros per
+//! the (row, col) indices, and emits dense words at a constant 8/cycle —
+//! as long as the input side keeps up.
+//!
+//! Rate analysis (what [`dense_bytes_per_cycle`](Decoder::dense_bytes_per_cycle)
+//! models): the SRAM port moves [`PORT_BYTES`] = 16 B/cycle. A sparse word
+//! is 24 bits, so the input side reads 16·8/24 ≈ 5.33 words/cycle. Filling
+//! one (32,8) tile of 256 dense words takes `nnz/5.33` cycles; draining it
+//! takes 32 cycles at 8 dense words/cycle. With double buffering the output
+//! is constant while `nnz ≤ 5.33·32 ≈ 170` (sparsity ≥ ~33%); below that
+//! the decoder is input-limited and the dense-equivalent bandwidth drops by
+//! `170.6/nnz` — the paper's encoding-overhead regime (Fig. 13, 10–20%).
+//!
+//! The cycle-accurate double-buffer behaviour is exercised by
+//! [`decode_tile_trace`](Decoder::decode_tile_trace), which replays an
+//! actual [`SparseTile`](crate::sparse::SparseTile) word-by-word and must
+//! agree with both the rate model and the software codec's output.
+
+use super::PORT_BYTES;
+use crate::sparse::{SparseTile, TILE_COLS, TILE_ROWS};
+
+/// Dense words per output cycle (Fig. 4: "constantly output 8 dense words
+/// per cycle").
+pub const DENSE_WORDS_PER_CYCLE: usize = 8;
+/// Max sparse words accepted per cycle from data memory (Fig. 4: "reads
+/// data memory at a rate of up to 8 sparse words per cycle"), before the
+/// port-width bound.
+pub const SPARSE_WORDS_PER_CYCLE: usize = 8;
+/// Bits per sparse word (16b value + 5b row + 3b col).
+pub const SPARSE_WORD_BITS: usize = 24;
+/// Dense elements per tile.
+pub const TILE_ELEMS: usize = TILE_ROWS * TILE_COLS;
+
+/// Decoder state for the active sparse region.
+pub struct Decoder {
+    /// Average non-zeros per tile of the active region (rate model input).
+    nnz_per_tile: u16,
+    /// Tiles decoded (stats).
+    pub tiles_decoded: u64,
+}
+
+impl Decoder {
+    /// New idle decoder.
+    pub fn new() -> Decoder {
+        Decoder { nnz_per_tile: 0, tiles_decoded: 0 }
+    }
+
+    /// Begin decoding a region with the given average tile occupancy.
+    pub fn start_region(&mut self, nnz_per_tile: u16) {
+        assert!((nnz_per_tile as usize) <= TILE_ELEMS);
+        self.nnz_per_tile = nnz_per_tile;
+    }
+
+    /// Effective sparse-word input rate, words/cycle: the lesser of the
+    /// decoder's 8/cycle and what the 128-bit port sustains at 24 b/word.
+    pub fn input_words_per_cycle() -> f64 {
+        (PORT_BYTES as f64 * 8.0 / SPARSE_WORD_BITS as f64).min(SPARSE_WORDS_PER_CYCLE as f64)
+    }
+
+    /// Steady-state dense-equivalent output, bytes/cycle, for the active
+    /// region (double-buffered; see module docs for the derivation).
+    pub fn dense_bytes_per_cycle(&self) -> usize {
+        let nnz = self.nnz_per_tile.max(1) as f64;
+        let fill_cycles = nnz / Self::input_words_per_cycle();
+        let drain_cycles = (TILE_ELEMS / DENSE_WORDS_PER_CYCLE) as f64;
+        let out_rate = DENSE_WORDS_PER_CYCLE as f64 * (drain_cycles / fill_cycles.max(drain_cycles));
+        (out_rate * 2.0) as usize // 2 B per dense fp16 word
+    }
+
+    /// Cycle-accurate decode of one tile: returns (dense tile, cycles).
+    ///
+    /// Replays Fig. 4 exactly: read ≤ input-rate sparse words per cycle into
+    /// the working buffer (inserting zeros by index), then the double buffer
+    /// swaps and drains at 8 dense words/cycle while the next fill proceeds;
+    /// for a single tile the cycle count is fill + drain.
+    pub fn decode_tile_trace(&mut self, tile: &SparseTile) -> (Vec<u16>, u64) {
+        let mut dense = vec![0u16; TILE_ELEMS];
+        let in_rate = Self::input_words_per_cycle();
+        let mut credit = 0.0f64;
+        let mut consumed = 0usize;
+        let mut fill_cycles = 0u64;
+        while consumed < tile.words.len() {
+            fill_cycles += 1;
+            credit += in_rate;
+            while credit >= 1.0 && consumed < tile.words.len() {
+                let w = tile.words[consumed];
+                dense[w.row() as usize * TILE_COLS + w.col() as usize] = w.value();
+                consumed += 1;
+                credit -= 1.0;
+            }
+        }
+        let drain_cycles = (TILE_ELEMS / DENSE_WORDS_PER_CYCLE) as u64;
+        self.tiles_decoded += 1;
+        (dense, fill_cycles.max(drain_cycles))
+    }
+}
+
+impl Default for Decoder {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::prop::check;
+
+    #[test]
+    fn input_rate_is_port_limited() {
+        // 16 B × 8 b / 24 b = 5.33 words/cycle < the decoder's 8/cycle max
+        assert!((Decoder::input_words_per_cycle() - 5.333).abs() < 0.01);
+    }
+
+    #[test]
+    fn high_sparsity_sustains_dense_rate() {
+        let mut d = Decoder::new();
+        d.start_region(102); // 60% sparse
+        assert_eq!(d.dense_bytes_per_cycle(), PORT_BYTES);
+    }
+
+    #[test]
+    fn low_sparsity_is_input_limited() {
+        let mut d = Decoder::new();
+        d.start_region(230); // 10% sparse
+        let rate = d.dense_bytes_per_cycle();
+        assert!(rate < PORT_BYTES, "rate={rate}");
+        // analytic: 8 * (32 / (230/5.333)) * 2B ≈ 11 B/cycle
+        assert!((10..=13).contains(&rate), "rate={rate}");
+    }
+
+    #[test]
+    fn breakeven_occupancy() {
+        // nnz = 170 is the knee: ≥ dense rate up to there
+        let mut d = Decoder::new();
+        d.start_region(170);
+        assert_eq!(d.dense_bytes_per_cycle(), PORT_BYTES);
+        d.start_region(180);
+        assert!(d.dense_bytes_per_cycle() < PORT_BYTES);
+    }
+
+    /// The cycle-accurate trace must reproduce the software codec's dense
+    /// output exactly, for any tile contents.
+    #[test]
+    fn trace_matches_codec_property() {
+        check("decoder trace == codec decode", 100, |rng| {
+            let dense: Vec<u16> = (0..TILE_ELEMS)
+                .map(|_| if rng.chance(0.6) { 0 } else { rng.below(65536) as u16 })
+                .collect();
+            let tile = SparseTile::encode(&dense);
+            let mut d = Decoder::new();
+            let (decoded, cycles) = d.decode_tile_trace(&tile);
+            assert_eq!(decoded, dense);
+            // cycle count ≥ drain time, and ≥ fill time at the port rate
+            let fill = (tile.nnz() as f64 / Decoder::input_words_per_cycle()).ceil() as u64;
+            assert_eq!(cycles, fill.max(32));
+        });
+    }
+
+    /// Trace cycle counts agree with the steady-state rate model within
+    /// one cycle of quantization.
+    #[test]
+    fn trace_agrees_with_rate_model() {
+        for sparsity in [0.1, 0.33, 0.6, 0.9] {
+            let nnz = ((1.0 - sparsity) * TILE_ELEMS as f64) as usize;
+            let mut dense = vec![0u16; TILE_ELEMS];
+            for (i, v) in dense.iter_mut().enumerate().take(nnz) {
+                *v = (i + 1) as u16;
+            }
+            let tile = SparseTile::encode(&dense);
+            let mut d = Decoder::new();
+            d.start_region(nnz as u16);
+            let model_rate = d.dense_bytes_per_cycle() as f64; // B/cycle
+            let (_, cycles) = d.decode_tile_trace(&tile);
+            let trace_rate = (TILE_ELEMS * 2) as f64 / cycles as f64;
+            let rel = (model_rate - trace_rate).abs() / trace_rate;
+            assert!(rel < 0.15, "sparsity={sparsity}: model={model_rate} trace={trace_rate}");
+        }
+    }
+}

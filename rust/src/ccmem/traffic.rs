@@ -1,0 +1,163 @@
+//! Traffic generators + whole-memory simulations.
+//!
+//! Two patterns matter for the paper's claims:
+//!
+//! * **Scheduled GEMM streaming** — each core walks its own set of bank
+//!   groups with burst reads (weight-stationary inner loop). Conflict-free
+//!   by construction ⇒ the crossbar must reach ~100% of the *cores'* port
+//!   bandwidth ("100% saturated throughput with reasonable network
+//!   scheduling").
+//! * **Random access** — uniformly random bank targets, the worst case the
+//!   paper's scheduling avoids; measures the conflict penalty.
+
+use super::bank::{Burst, BurstMode};
+use super::{CcMem, CcMemConfig, PORT_BYTES};
+use crate::util::rng::Rng;
+
+/// Result of a traffic run.
+#[derive(Clone, Debug)]
+pub struct TrafficResult {
+    /// Cycles taken.
+    pub cycles: u64,
+    /// Dense-equivalent bytes delivered.
+    pub bytes: u64,
+    /// Fraction of the cores' aggregate port bandwidth achieved.
+    pub core_bw_utilization: f64,
+    /// Conflict rate per request.
+    pub conflict_rate: f64,
+}
+
+/// Run a scheduled GEMM-style stream: core `i` bursts through bank groups
+/// `i, i+n_cores, i+2·n_cores, …`, `bytes_per_group` from each, in `mode`.
+/// The static schedule never collides, modelling the paper's network
+/// scheduling of highly structured GEMM kernels.
+pub fn run_gemm_stream(
+    cfg: &CcMemConfig,
+    bytes_per_group: usize,
+    mode: BurstMode,
+) -> TrafficResult {
+    let mut mem = CcMem::new(cfg.clone());
+    // Each core owns a disjoint stripe of groups.
+    let mut core_groups: Vec<Vec<usize>> = vec![Vec::new(); cfg.n_cores];
+    for g in 0..cfg.n_groups {
+        core_groups[g % cfg.n_cores].push(g);
+    }
+    // Program every group's burst up front (CSR setup phase).
+    for g in 0..cfg.n_groups {
+        mem.program_burst(g, Burst { base: 0, len: bytes_per_group, mode });
+    }
+    let mut cursor = vec![0usize; cfg.n_cores]; // which stripe entry each core drains
+    let mut total = 0u64;
+    loop {
+        let requests: Vec<Option<usize>> = (0..cfg.n_cores)
+            .map(|c| {
+                while cursor[c] < core_groups[c].len() {
+                    let g = core_groups[c][cursor[c]];
+                    if mem.groups[g].busy() {
+                        return Some(g);
+                    }
+                    cursor[c] += 1;
+                }
+                None
+            })
+            .collect();
+        if requests.iter().all(|r| r.is_none()) {
+            break;
+        }
+        let delivered = mem.tick(&requests);
+        total += delivered.iter().sum::<usize>() as u64;
+    }
+    let cycles = mem.stats.cycles;
+    TrafficResult {
+        cycles,
+        bytes: total,
+        core_bw_utilization: total as f64
+            / (cycles as f64 * (cfg.n_cores * PORT_BYTES) as f64),
+        conflict_rate: mem.stats.conflict_rate(),
+    }
+}
+
+/// Run uniformly random single-beat reads for `n_cycles` cycles.
+pub fn run_random(cfg: &CcMemConfig, n_cycles: u64, seed: u64) -> TrafficResult {
+    let mut mem = CcMem::new(cfg.clone());
+    let mut rng = Rng::new(seed);
+    // Keep every group loaded with a full-capacity dense burst so beats are
+    // available; re-arm when drained.
+    let arm = |mem: &mut CcMem, g: usize| {
+        let len = mem.groups[g].capacity;
+        mem.program_burst(g, Burst { base: 0, len, mode: BurstMode::Dense });
+    };
+    for g in 0..cfg.n_groups {
+        arm(&mut mem, g);
+    }
+    let mut total = 0u64;
+    for _ in 0..n_cycles {
+        for g in 0..cfg.n_groups {
+            if !mem.groups[g].busy() {
+                arm(&mut mem, g);
+            }
+        }
+        let requests: Vec<Option<usize>> =
+            (0..cfg.n_cores).map(|_| Some(rng.below(cfg.n_groups))).collect();
+        total += mem.tick(&requests).iter().sum::<usize>() as u64;
+    }
+    TrafficResult {
+        cycles: n_cycles,
+        bytes: total,
+        core_bw_utilization: total as f64
+            / (n_cycles as f64 * (cfg.n_cores * PORT_BYTES) as f64),
+        conflict_rate: mem.stats.conflict_rate(),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    /// The headline CC-MEM claim: scheduled GEMM traffic saturates the
+    /// cores' bandwidth (>99%).
+    #[test]
+    fn gemm_stream_saturates() {
+        let cfg = CcMemConfig::small();
+        let r = run_gemm_stream(&cfg, 4096, BurstMode::Dense);
+        assert!(r.core_bw_utilization > 0.99, "util={}", r.core_bw_utilization);
+        assert_eq!(r.conflict_rate, 0.0);
+    }
+
+    /// Random traffic suffers conflicts; with cores ≪ groups the loss is
+    /// modest (birthday-style collisions).
+    #[test]
+    fn random_traffic_conflicts() {
+        let cfg = CcMemConfig::small(); // 4 cores on 32 groups
+        let r = run_random(&cfg, 5_000, 42);
+        assert!(r.conflict_rate > 0.02, "should see conflicts: {}", r.conflict_rate);
+        assert!(r.core_bw_utilization > 0.80, "util={}", r.core_bw_utilization);
+        // Analytic check: P(lose) ≈ 1 − (1 − 1/32)^3/… ~ 4.6%; allow slack.
+        assert!(r.conflict_rate < 0.10);
+    }
+
+    /// 60%-sparse streams deliver the same *dense-equivalent* bytes at full
+    /// rate; 10%-sparse streams take measurably longer (input-limited).
+    #[test]
+    fn sparse_stream_dense_equivalence() {
+        let cfg = CcMemConfig::small();
+        let dense = run_gemm_stream(&cfg, 4096, BurstMode::Dense);
+        let s60 = run_gemm_stream(&cfg, 4096, BurstMode::Sparse { nnz_per_tile: 102 });
+        let s10 = run_gemm_stream(&cfg, 4096, BurstMode::Sparse { nnz_per_tile: 230 });
+        assert_eq!(dense.bytes, s60.bytes);
+        assert_eq!(dense.cycles, s60.cycles, "60% sparsity must not cost bandwidth");
+        assert!(s10.cycles > dense.cycles * 5 / 4, "10% sparsity must be slower");
+    }
+
+    /// More cores on the same groups: aggregate delivered bandwidth is
+    /// capped by the groups, not the cores.
+    #[test]
+    fn group_bandwidth_caps_aggregate() {
+        let cfg = CcMemConfig { n_groups: 4, group_bytes: 1 << 20, n_cores: 8, xbar_depth: 6 };
+        let r = run_random(&cfg, 2_000, 7);
+        let group_peak = (cfg.n_groups * PORT_BYTES) as f64;
+        let achieved = r.bytes as f64 / r.cycles as f64;
+        assert!(achieved <= group_peak + 1e-9);
+        assert!(achieved > 0.5 * group_peak);
+    }
+}

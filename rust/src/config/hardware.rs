@@ -1,0 +1,277 @@
+//! Hardware exploration constants and sweep ranges (paper Table 1).
+//!
+//! All constants are the paper's published inputs. Where the paper scales a
+//! 12nm Synopsys implementation to 7nm we encode the resulting 7nm densities
+//! directly (High-Density SRAM bitcell area and CPP×MMP routing scaling, see
+//! DESIGN.md substitution ledger).
+
+/// Technology / economics constants (Table 1 plus §4 text).
+#[derive(Clone, Debug)]
+pub struct TechParams {
+    /// Process node label.
+    pub node: &'static str,
+    /// Compute density, mm² per TFLOPS (Table 1: 2.65, derived from A100).
+    pub compute_mm2_per_tflops: f64,
+    /// Compute power, W per TFLOPS (Table 1: 1.3, derived from A100 TDP).
+    pub compute_w_per_tflops: f64,
+    /// Max chip power density, W/mm² (Table 1: < 1).
+    pub max_power_density_w_mm2: f64,
+    /// SRAM storage density at 7nm, MB per mm².
+    ///
+    /// TSMC N7 HD bitcell = 0.027 µm²/bit ⇒ raw 4.63 MB/mm²; array
+    /// efficiency (periphery, sense amps, redundancy) ≈ 45% ⇒ effective
+    /// ≈ 2.1 MB/mm². This reproduces Table 2's MB-per-chip/die-size ratios
+    /// (e.g. GPT-3: 225.8 MB in a 140 mm² die alongside 5.5 TFLOPS).
+    pub sram_mb_per_mm2: f64,
+    /// CC-MEM bank-group streaming bandwidth, GB/s (128 b/cycle @ 1 GHz).
+    /// Chip bandwidth = n_bank_groups × this; Phase 1 sweeps the group
+    /// count via the bytes-per-FLOP ratio (`ExploreSpace::bw_ratios`).
+    pub bank_group_gbps: f64,
+    /// Min/max SRAM capacity per bank group, MB (bank geometry limits from
+    /// the 12nm implementation).
+    pub bank_group_mb_range: (f64, f64),
+    /// Crossbar area coefficient, mm² per port² (quadratic radix scaling,
+    /// already discounted for NoC symbiosis — routing rides over the SRAM).
+    pub xbar_mm2_per_port2: f64,
+    /// Compression decoder + burst control area per bank group, mm².
+    pub decoder_mm2_per_group: f64,
+    /// SRAM dynamic read energy, pJ per byte at 7nm.
+    pub sram_pj_per_byte: f64,
+    /// Crossbar transfer energy, pJ per byte per hop.
+    pub xbar_pj_per_byte: f64,
+    /// Chip-to-chip IO: bandwidth per link, GB/s (Table 1: 25 GB/s).
+    pub io_link_gbps: f64,
+    /// Chip-to-chip IO links per chip (Table 1: 4).
+    pub io_links: usize,
+    /// Off-chip link energy, pJ per byte (GRS-class links ≈ 1.17 pJ/b).
+    pub io_pj_per_byte: f64,
+    /// IO + auxiliary (PHY, controller, PLL) area overhead per chip, mm².
+    pub aux_area_mm2: f64,
+    /// Wafer cost, $ (Table 1: 10 000 for 7nm 300mm).
+    pub wafer_cost: f64,
+    /// Wafer diameter, mm (300mm line).
+    pub wafer_diameter_mm: f64,
+    /// Defect density, defects/cm² (Table 1: 0.1).
+    pub defect_density_per_cm2: f64,
+    /// Negative-binomial cluster parameter α [12].
+    pub yield_alpha: f64,
+    /// Per-die test cost, $.
+    pub test_cost: f64,
+    /// Max die size considered manufacturable (reticle limit ≈ 800 mm²).
+    pub reticle_mm2: f64,
+}
+
+impl Default for TechParams {
+    fn default() -> Self {
+        TechParams {
+            node: "7nm",
+            compute_mm2_per_tflops: 2.65,
+            compute_w_per_tflops: 1.3,
+            max_power_density_w_mm2: 1.0,
+            sram_mb_per_mm2: 2.1,
+            bank_group_gbps: 16.0,
+            bank_group_mb_range: (0.25, 4.0),
+            xbar_mm2_per_port2: 2.0e-4,
+            decoder_mm2_per_group: 0.01,
+            sram_pj_per_byte: 1.6,
+            xbar_pj_per_byte: 0.6,
+            io_link_gbps: 25.0,
+            io_links: 4,
+            io_pj_per_byte: 9.4, // 1.17 pJ/b GRS [38]
+            aux_area_mm2: 6.0,
+            wafer_cost: 10_000.0,
+            wafer_diameter_mm: 300.0,
+            defect_density_per_cm2: 0.1,
+            yield_alpha: 2.0,
+            test_cost: 2.0,
+            reticle_mm2: 800.0,
+        }
+    }
+}
+
+/// Server-level constants (Table 1).
+#[derive(Clone, Debug)]
+pub struct ServerParams {
+    /// Lanes per 1U 19-inch server (Table 1: 8).
+    pub lanes: usize,
+    /// Max total silicon per lane, mm² (Table 1: < 6000).
+    pub max_silicon_per_lane_mm2: f64,
+    /// Chips per lane sweep bound (Table 1: 1 to 20).
+    pub max_chips_per_lane: usize,
+    /// Max power per lane, W (Table 1: < 250; refined by thermal model).
+    pub max_power_per_lane_w: f64,
+    /// Power supply efficiency (Table 1: 0.95).
+    pub psu_efficiency: f64,
+    /// DC-DC conversion efficiency (Table 1: 0.95).
+    pub dcdc_efficiency: f64,
+    /// Ethernet NIC cost, $ (Table 1: 100 GbE, $450).
+    pub ethernet_cost: f64,
+    /// Server life for TCO amortization, years (Table 1: 1.5).
+    pub server_life_years: f64,
+    /// Controller (FPGA/µC) cost per server, $.
+    pub controller_cost: f64,
+    /// PCB cost per server, $ (large 1U board, organic substrate chiplets).
+    pub pcb_cost: f64,
+    /// Heatsink cost per chip, $.
+    pub heatsink_cost_per_chip: f64,
+    /// Fan cost per lane, $.
+    pub fan_cost_per_lane: f64,
+    /// PSU cost per server per kW, $.
+    pub psu_cost_per_kw: f64,
+    /// Package (flip-chip BGA, organic substrate) cost per chip: fixed + per-mm².
+    pub package_fixed_cost: f64,
+    /// Package cost per mm² of die.
+    pub package_cost_per_mm2: f64,
+}
+
+impl Default for ServerParams {
+    fn default() -> Self {
+        ServerParams {
+            lanes: 8,
+            max_silicon_per_lane_mm2: 6000.0,
+            max_chips_per_lane: 20,
+            max_power_per_lane_w: 250.0,
+            psu_efficiency: 0.95,
+            dcdc_efficiency: 0.95,
+            ethernet_cost: 450.0,
+            server_life_years: 1.5,
+            controller_cost: 300.0,
+            pcb_cost: 800.0,
+            heatsink_cost_per_chip: 10.0,
+            fan_cost_per_lane: 16.0,
+            psu_cost_per_kw: 120.0,
+            package_fixed_cost: 5.0,
+            package_cost_per_mm2: 0.05,
+        }
+    }
+}
+
+/// Datacenter (Barroso-style) TCO constants.
+#[derive(Clone, Debug)]
+pub struct DatacenterParams {
+    /// Electricity price, $/kWh (US industrial average).
+    pub electricity_per_kwh: f64,
+    /// Power usage effectiveness of the facility.
+    pub pue: f64,
+    /// Datacenter capex amortized per provisioned watt per year, $/W/yr
+    /// (build-out ~$10/W over ~12y, Barroso et al.).
+    pub facility_capex_per_w_year: f64,
+    /// Non-power OpEx (staff, maintenance) as a fraction of server CapEx/yr.
+    pub opex_maintenance_frac: f64,
+}
+
+impl Default for DatacenterParams {
+    fn default() -> Self {
+        DatacenterParams {
+            electricity_per_kwh: 0.07,
+            pue: 1.1,
+            facility_capex_per_w_year: 0.8,
+            opex_maintenance_frac: 0.03,
+        }
+    }
+}
+
+/// Phase-1 sweep ranges.
+#[derive(Clone, Debug)]
+pub struct ExploreSpace {
+    /// Technology constants.
+    pub tech: TechParams,
+    /// Server constants.
+    pub server: ServerParams,
+    /// Datacenter constants.
+    pub dc: DatacenterParams,
+    /// Die sizes to sweep, mm² (Table 1: 20..800).
+    pub die_sizes_mm2: Vec<f64>,
+    /// Fractions of die devoted to SRAM (vs compute) to sweep.
+    pub sram_fracs: Vec<f64>,
+    /// CC-MEM bandwidth provisioning, bytes of SRAM read per FLOP of
+    /// compute. Sets the bank-group count: the chip can saturate its MACs
+    /// at micro-batch ≈ bytes_per_param / ratio. Table 2 optima land on
+    /// 0.125 (PaLM, µb=8) … 0.67 (MT-NLG, µb=1).
+    pub bw_ratios: Vec<f64>,
+    /// Chips per lane to sweep (Table 1: 1..20).
+    pub chips_per_lane: Vec<usize>,
+}
+
+impl Default for ExploreSpace {
+    fn default() -> Self {
+        ExploreSpace {
+            tech: TechParams::default(),
+            server: ServerParams::default(),
+            dc: DatacenterParams::default(),
+            die_sizes_mm2: (1..=40).map(|i| i as f64 * 20.0).collect(),
+            sram_fracs: (1..=19).map(|i| i as f64 * 0.05).collect(),
+            bw_ratios: vec![0.125, 0.25, 0.5, 0.667, 1.0],
+            chips_per_lane: (1..=20).collect(),
+        }
+    }
+}
+
+impl ExploreSpace {
+    /// A reduced sweep for fast tests and the quickstart example
+    /// (~1/8 of the full space, same qualitative optima).
+    pub fn coarse() -> Self {
+        ExploreSpace {
+            die_sizes_mm2: (1..=16).map(|i| i as f64 * 50.0).collect(),
+            sram_fracs: (1..=9).map(|i| i as f64 * 0.1).collect(),
+            bw_ratios: vec![0.125, 0.25, 0.5, 1.0],
+            chips_per_lane: vec![1, 2, 4, 6, 8, 10, 12, 16, 20],
+            ..Default::default()
+        }
+    }
+
+    /// Total number of (die, sram, bw, chips/lane) combinations swept.
+    pub fn n_points(&self) -> usize {
+        self.die_sizes_mm2.len() * self.sram_fracs.len() * self.bw_ratios.len() * self.chips_per_lane.len()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn defaults_match_table1() {
+        let t = TechParams::default();
+        assert_eq!(t.compute_mm2_per_tflops, 2.65);
+        assert_eq!(t.compute_w_per_tflops, 1.3);
+        assert_eq!(t.wafer_cost, 10_000.0);
+        assert_eq!(t.defect_density_per_cm2, 0.1);
+        assert_eq!(t.io_links, 4);
+        assert_eq!(t.io_link_gbps, 25.0);
+        let s = ServerParams::default();
+        assert_eq!(s.lanes, 8);
+        assert_eq!(s.max_chips_per_lane, 20);
+        assert_eq!(s.max_power_per_lane_w, 250.0);
+        assert_eq!(s.ethernet_cost, 450.0);
+        assert!((s.server_life_years - 1.5).abs() < 1e-12);
+    }
+
+    #[test]
+    fn sweep_covers_table1_ranges() {
+        let e = ExploreSpace::default();
+        assert_eq!(*e.die_sizes_mm2.first().unwrap(), 20.0);
+        assert_eq!(*e.die_sizes_mm2.last().unwrap(), 800.0);
+        assert_eq!(*e.chips_per_lane.last().unwrap(), 20);
+        assert!(e.n_points() > 10_000, "phase-1 sweep should produce >10k raw points");
+    }
+
+    #[test]
+    fn sram_density_supports_table2_designs() {
+        // Table 2 GPT-3 design: 140 mm² die with 225.8 MB and 5.5 TFLOPS.
+        // compute area = 5.5 * 2.65 = 14.6 mm²; aux = 6 mm²;
+        // SRAM area available ≈ 119.4 mm² ⇒ need ≥ 1.89 MB/mm².
+        let t = TechParams::default();
+        let sram_area = 140.0 - 5.5 * t.compute_mm2_per_tflops - t.aux_area_mm2;
+        assert!(sram_area * t.sram_mb_per_mm2 >= 225.8, "got {}", sram_area * t.sram_mb_per_mm2);
+    }
+
+    #[test]
+    fn bw_ratio_sweep_brackets_table2() {
+        // Table 2 BW/TFLOPS ratios: PaLM 0.125 … MT-NLG 0.667 B/FLOP.
+        let e = ExploreSpace::default();
+        let min = e.bw_ratios.iter().cloned().fold(f64::INFINITY, f64::min);
+        let max = e.bw_ratios.iter().cloned().fold(0.0, f64::max);
+        assert!(min <= 0.125 && max >= 0.667);
+    }
+}

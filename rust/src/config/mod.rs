@@ -1,0 +1,15 @@
+//! Workload and hardware configuration.
+//!
+//! * [`models`] — the eight paper LLMs (Table 2 hyper-parameters) plus the
+//!   small serving configs used by the real PJRT runtime.
+//! * [`hardware`] — Table 1 exploration constants (technology, wafer
+//!   economics, server envelope) and the sweep ranges of Phase 1.
+//! * [`workload`] — serving workload descriptions (batch, context, tokens).
+
+pub mod hardware;
+pub mod models;
+pub mod workload;
+
+pub use hardware::{ExploreSpace, TechParams};
+pub use models::{Attention, ModelSpec};
+pub use workload::Workload;

@@ -1,0 +1,428 @@
+//! LLM model specifications.
+//!
+//! The eight case-study models of the paper (Table 2) plus OPT-175B (used by
+//! the sparsity evaluation, Fig. 13) and two small serving configs (`cc-tiny`
+//! and `cc-gpt-mini`) that the real PJRT runtime executes end-to-end.
+//!
+//! All hyper-parameters are the publicly released values the paper uses;
+//! no actual weights are involved in the DSE (the paper does the same).
+
+/// Attention variant — determines KV-cache size per token.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Attention {
+    /// Multi-head attention: KV heads == query heads.
+    MultiHead,
+    /// Multi-query attention (PaLM): one KV head shared by all query heads.
+    MultiQuery,
+    /// Grouped-query attention (Llama-2-70B): `n_kv` KV head groups.
+    GroupedQuery {
+        /// Number of KV head groups.
+        n_kv: usize,
+    },
+}
+
+/// Hyper-parameters of a decoder-only transformer LLM.
+#[derive(Clone, Debug)]
+pub struct ModelSpec {
+    /// Short identifier, e.g. "gpt3".
+    pub name: &'static str,
+    /// Human-readable name as printed in Table 2.
+    pub display: &'static str,
+    /// Model (embedding) dimension d_model.
+    pub d_model: usize,
+    /// Number of transformer decoder layers.
+    pub n_layers: usize,
+    /// Number of attention (query) heads.
+    pub n_heads: usize,
+    /// Head dimension. Usually d_model/n_heads, but PaLM decouples them
+    /// (d=18432, 48 heads × 256).
+    pub d_head: usize,
+    /// Feed-forward inner dimension (usually 4·d, PaLM/Llama use variants).
+    pub d_ff: usize,
+    /// Number of FFN weight matrices: 2 for the classic 2-layer MLP, 3 for
+    /// GLU variants (SwiGLU in PaLM and Llama-2 — [47]).
+    pub ffn_mats: usize,
+    /// Attention variant.
+    pub attention: Attention,
+    /// Vocabulary size (used for the embedding/unembedding FLOPs + bytes).
+    pub vocab: usize,
+    /// Max context length the model was trained for.
+    pub max_ctx: usize,
+    /// Bytes per parameter as served (paper serves fp16 ⇒ 2).
+    pub bytes_per_param: f64,
+}
+
+impl ModelSpec {
+    /// KV heads for this model's attention variant.
+    pub fn kv_heads(&self) -> usize {
+        match self.attention {
+            Attention::MultiHead => self.n_heads,
+            Attention::MultiQuery => 1,
+            Attention::GroupedQuery { n_kv } => n_kv,
+        }
+    }
+
+    /// Attention inner width (n_heads × d_head; equals d_model except PaLM).
+    pub fn d_attn(&self) -> usize {
+        self.n_heads * self.d_head
+    }
+
+    /// Total parameter count.
+    ///
+    /// Decoder layer: attention (q,k,v,o) + FFN (`ffn_mats` mats of d×d_ff)
+    /// + small norm/bias terms (ignored, <0.1%). Embedding: vocab×d (tied).
+    pub fn n_params(&self) -> f64 {
+        let d = self.d_model as f64;
+        let d_attn = self.d_attn() as f64;
+        let d_kv = (self.kv_heads() * self.d_head) as f64;
+        // q: d×d_attn, o: d_attn×d, k and v: d×d_kv each
+        let attn = 2.0 * d * d_attn + 2.0 * d * d_kv;
+        let ffn = self.ffn_mats as f64 * d * self.d_ff as f64;
+        let per_layer = attn + ffn;
+        per_layer * self.n_layers as f64 + (self.vocab as f64) * d
+    }
+
+    /// Total weight bytes as served.
+    pub fn weight_bytes(&self) -> f64 {
+        self.n_params() * self.bytes_per_param
+    }
+
+    /// KV-cache bytes per sequence at context length `ctx`.
+    ///
+    /// 2 (K and V) × layers × ctx × kv_heads × d_head × bytes.
+    pub fn kv_bytes_per_seq(&self, ctx: usize) -> f64 {
+        2.0 * self.n_layers as f64
+            * ctx as f64
+            * self.kv_heads() as f64
+            * self.d_head as f64
+            * self.bytes_per_param
+    }
+
+    /// FLOPs for one token generation step for one sequence at context `ctx`
+    /// (MACs ×2). FC layers dominate: 2·n_params per token plus attention
+    /// reads of the KV cache.
+    pub fn flops_per_token(&self, ctx: usize) -> f64 {
+        let matmul = 2.0 * self.n_params();
+        // attention: q·K^T and attn·V over the cached context
+        let attn = 2.0
+            * 2.0
+            * self.n_layers as f64
+            * ctx as f64
+            * self.d_attn() as f64;
+        matmul + attn
+    }
+
+    /// The paper's eight case-study models (Table 2) in table order.
+    pub fn paper_models() -> Vec<ModelSpec> {
+        vec![
+            Self::gpt2(),
+            Self::megatron(),
+            Self::gpt3(),
+            Self::gopher(),
+            Self::mt_nlg(),
+            Self::bloom(),
+            Self::palm(),
+            Self::llama2_70b(),
+        ]
+    }
+
+    /// Look up any known model by short name.
+    pub fn by_name(name: &str) -> Option<ModelSpec> {
+        let all = [
+            Self::gpt2(),
+            Self::megatron(),
+            Self::gpt3(),
+            Self::gopher(),
+            Self::mt_nlg(),
+            Self::bloom(),
+            Self::palm(),
+            Self::llama2_70b(),
+            Self::opt_175b(),
+            Self::cc_tiny(),
+            Self::cc_gpt_mini(),
+        ];
+        all.iter().find(|m| m.name == name).cloned()
+    }
+
+    /// GPT-2 1.5B [41].
+    pub fn gpt2() -> ModelSpec {
+        ModelSpec {
+            name: "gpt2",
+            display: "GPT-2",
+            d_model: 1600,
+            n_layers: 48,
+            n_heads: 25,
+            d_head: 64,
+            d_ff: 6400,
+            ffn_mats: 2,
+            attention: Attention::MultiHead,
+            vocab: 50257,
+            max_ctx: 1024,
+            bytes_per_param: 2.0,
+        }
+    }
+
+    /// Megatron-LM 8.3B [48].
+    pub fn megatron() -> ModelSpec {
+        ModelSpec {
+            name: "megatron",
+            display: "Megatron",
+            d_model: 3072,
+            n_layers: 72,
+            n_heads: 32,
+            d_head: 96,
+            d_ff: 12288,
+            ffn_mats: 2,
+            attention: Attention::MultiHead,
+            vocab: 51200,
+            max_ctx: 1024,
+            bytes_per_param: 2.0,
+        }
+    }
+
+    /// GPT-3 175B [8].
+    pub fn gpt3() -> ModelSpec {
+        ModelSpec {
+            name: "gpt3",
+            display: "GPT-3",
+            d_model: 12288,
+            n_layers: 96,
+            n_heads: 96,
+            d_head: 128,
+            d_ff: 49152,
+            ffn_mats: 2,
+            attention: Attention::MultiHead,
+            vocab: 50257,
+            max_ctx: 4096,
+            bytes_per_param: 2.0,
+        }
+    }
+
+    /// Gopher 280B [42].
+    pub fn gopher() -> ModelSpec {
+        ModelSpec {
+            name: "gopher",
+            display: "Gopher",
+            d_model: 16384,
+            n_layers: 80,
+            n_heads: 128,
+            d_head: 128,
+            d_ff: 65536,
+            ffn_mats: 2,
+            attention: Attention::MultiHead,
+            vocab: 32000,
+            max_ctx: 2048,
+            bytes_per_param: 2.0,
+        }
+    }
+
+    /// Megatron-Turing NLG 530B [50].
+    pub fn mt_nlg() -> ModelSpec {
+        ModelSpec {
+            name: "mt-nlg",
+            display: "MT-NLG",
+            d_model: 20480,
+            n_layers: 105,
+            n_heads: 128,
+            d_head: 160,
+            d_ff: 81920,
+            ffn_mats: 2,
+            attention: Attention::MultiHead,
+            vocab: 50257,
+            max_ctx: 2048,
+            bytes_per_param: 2.0,
+        }
+    }
+
+    /// BLOOM 176B [7].
+    pub fn bloom() -> ModelSpec {
+        ModelSpec {
+            name: "bloom",
+            display: "BLOOM",
+            d_model: 14336,
+            n_layers: 70,
+            n_heads: 112,
+            d_head: 128,
+            d_ff: 57344,
+            ffn_mats: 2,
+            attention: Attention::MultiHead,
+            vocab: 250880,
+            max_ctx: 2048,
+            bytes_per_param: 2.0,
+        }
+    }
+
+    /// PaLM 540B [9] — multi-query attention.
+    pub fn palm() -> ModelSpec {
+        ModelSpec {
+            name: "palm",
+            display: "PaLM",
+            d_model: 18432,
+            n_layers: 118,
+            n_heads: 48,
+            d_head: 256,
+            d_ff: 73728,
+            ffn_mats: 3,
+            attention: Attention::MultiQuery,
+            vocab: 256000,
+            max_ctx: 2048,
+            bytes_per_param: 2.0,
+        }
+    }
+
+    /// Llama-2 70B [55] — grouped-query attention (8 KV groups).
+    pub fn llama2_70b() -> ModelSpec {
+        ModelSpec {
+            name: "llama2-70b",
+            display: "Llama-2",
+            d_model: 8192,
+            n_layers: 80,
+            n_heads: 64,
+            d_head: 128,
+            d_ff: 28672,
+            ffn_mats: 3,
+            attention: Attention::GroupedQuery { n_kv: 8 },
+            vocab: 32000,
+            max_ctx: 4096,
+            bytes_per_param: 2.0,
+        }
+    }
+
+    /// OPT-175B [62] — same architecture family as GPT-3; used by the
+    /// sparsity study (Fig. 13) because SparseGPT [15] reports its
+    /// perplexity under unstructured pruning.
+    pub fn opt_175b() -> ModelSpec {
+        ModelSpec {
+            name: "opt-175b",
+            display: "OPT-175B",
+            d_model: 12288,
+            n_layers: 96,
+            n_heads: 96,
+            d_head: 128,
+            d_ff: 49152,
+            ffn_mats: 2,
+            attention: Attention::MultiHead,
+            vocab: 50272,
+            max_ctx: 2048,
+            bytes_per_param: 2.0,
+        }
+    }
+
+    /// Tiny config for fast tests and the Pallas-backed artifact
+    /// (d=256, 4 layers, ≈4.6M params).
+    pub fn cc_tiny() -> ModelSpec {
+        ModelSpec {
+            name: "cc-tiny",
+            display: "CC-Tiny",
+            d_model: 256,
+            n_layers: 4,
+            n_heads: 4,
+            d_head: 64,
+            d_ff: 1024,
+            ffn_mats: 2,
+            attention: Attention::MultiHead,
+            vocab: 512,
+            max_ctx: 128,
+            bytes_per_param: 4.0, // served fp32 on the CPU PJRT backend
+        }
+    }
+
+    /// ~110M-parameter GPT-style model served end-to-end by
+    /// `examples/serve_llm.rs` (d=768, 12 layers, GPT-2-small shape).
+    pub fn cc_gpt_mini() -> ModelSpec {
+        ModelSpec {
+            name: "cc-gpt-mini",
+            display: "CC-GPT-Mini",
+            d_model: 768,
+            n_layers: 12,
+            n_heads: 12,
+            d_head: 64,
+            d_ff: 3072,
+            ffn_mats: 2,
+            attention: Attention::MultiHead,
+            vocab: 32000,
+            max_ctx: 128,
+            bytes_per_param: 4.0,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    /// Parameter counts should land near the published sizes (Table 2 row 1).
+    #[test]
+    fn param_counts_match_published() {
+        let cases: &[(ModelSpec, f64, f64)] = &[
+            (ModelSpec::gpt2(), 1.5e9, 0.15),
+            (ModelSpec::megatron(), 8.3e9, 0.15),
+            (ModelSpec::gpt3(), 175e9, 0.05),
+            (ModelSpec::gopher(), 280e9, 0.10),
+            (ModelSpec::mt_nlg(), 530e9, 0.05),
+            (ModelSpec::bloom(), 176e9, 0.10),
+            (ModelSpec::palm(), 540e9, 0.10),
+            (ModelSpec::llama2_70b(), 70e9, 0.10),
+        ];
+        for (m, published, tol) in cases {
+            let got = m.n_params();
+            let rel = (got - published).abs() / published;
+            assert!(rel < *tol, "{}: got {:.1}B want {:.0}B (rel {:.2})", m.name, got / 1e9, published / 1e9, rel);
+        }
+    }
+
+    /// Paper §2.2.1 quotes "2 GB" of KV for GPT-3 at ctx=2K and "512 GB" at
+    /// batch 256, which does not follow from the standard KV formula
+    /// (2·layers·ctx·heads·d_head·2B = 9.66 GB/seq — the figure Pope et
+    /// al. [37] and every serving system use). We keep the standard formula
+    /// and pin it here; the deviation is documented in EXPERIMENTS.md.
+    #[test]
+    fn gpt3_kv_cache_standard_formula() {
+        let m = ModelSpec::gpt3();
+        let kv = m.kv_bytes_per_seq(2048);
+        assert!((kv / 1e9 - 9.66).abs() < 0.05, "kv={:.2} GB", kv / 1e9);
+        // and the paper's weights figure does hold: ~350 GB at fp16
+        assert!((m.weight_bytes() / 1e9 - 350.0).abs() / 350.0 < 0.05);
+    }
+
+    #[test]
+    fn attention_variants_shrink_kv() {
+        let mh = ModelSpec::gpt3().kv_bytes_per_seq(2048);
+        let mut mq = ModelSpec::gpt3();
+        mq.attention = Attention::MultiQuery;
+        assert!((mh / mq.kv_bytes_per_seq(2048) - 96.0).abs() < 1e-9);
+        let mut gq = ModelSpec::gpt3();
+        gq.attention = Attention::GroupedQuery { n_kv: 8 };
+        assert!((mh / gq.kv_bytes_per_seq(2048) - 12.0).abs() < 1e-9);
+    }
+
+    /// §2.1: the FC layers dominate GPT-3 compute (paper: ">99% of MACs";
+    /// with the full attention factor included the share is 94–98%
+    /// depending on context — we assert dominance, not the rounded claim).
+    #[test]
+    fn fc_layers_dominate_gpt3() {
+        let m = ModelSpec::gpt3();
+        for ctx in [1024, 2048, 4096] {
+            let total = m.flops_per_token(ctx);
+            let attn = total - 2.0 * m.n_params();
+            assert!(attn / total < 0.06, "ctx={ctx} attention share {:.4}", attn / total);
+        }
+    }
+
+    #[test]
+    fn lookup_by_name() {
+        assert!(ModelSpec::by_name("gpt3").is_some());
+        assert!(ModelSpec::by_name("palm").is_some());
+        assert!(ModelSpec::by_name("nonexistent").is_none());
+        assert_eq!(ModelSpec::paper_models().len(), 8);
+    }
+
+    #[test]
+    fn serving_configs_sized_right() {
+        let mini = ModelSpec::cc_gpt_mini();
+        let p = mini.n_params();
+        assert!((85e6..140e6).contains(&p), "cc-gpt-mini params {p}");
+        let tiny = ModelSpec::cc_tiny();
+        assert!(tiny.n_params() < 10e6);
+    }
+}

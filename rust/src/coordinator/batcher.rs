@@ -1,0 +1,207 @@
+//! Dynamic batcher: queue requests, emit fixed-size batches.
+//!
+//! The AOT artifact is compiled at a fixed batch size B and prompt length
+//! P (static shapes are what make the HLO loadable ahead of time), so the
+//! batcher forms batches of exactly B slots: it waits up to `max_wait` for
+//! the queue to fill, then pads the remainder with idle slots. Prompts are
+//! left-truncated / right-padded to P. This is the paper's batching model:
+//! throughput comes from weight reuse across the batch, and the batch
+//! decodes in lockstep.
+
+use std::collections::VecDeque;
+use std::sync::{Condvar, Mutex};
+use std::time::{Duration, Instant};
+
+use crate::coordinator::request::Request;
+
+/// Batcher tuning knobs.
+#[derive(Clone, Debug)]
+pub struct BatcherConfig {
+    /// Batch size (must equal the artifact's compiled batch).
+    pub batch: usize,
+    /// Prompt length (the artifact's compiled prompt length).
+    pub prompt_len: usize,
+    /// Max time to wait for a full batch before emitting a padded one.
+    pub max_wait: Duration,
+    /// Token id used for padding prompts and idle slots.
+    pub pad_token: i32,
+}
+
+/// A formed batch: B prompt rows plus the requests occupying them
+/// (None = idle padding slot).
+#[derive(Debug)]
+pub struct Batch {
+    /// [B, P] prompt token matrix.
+    pub prompts: Vec<Vec<i32>>,
+    /// Slot occupancy.
+    pub slots: Vec<Option<Request>>,
+    /// When the batch was formed.
+    pub formed: Instant,
+}
+
+impl Batch {
+    /// Number of live (non-padding) slots.
+    pub fn live(&self) -> usize {
+        self.slots.iter().filter(|s| s.is_some()).count()
+    }
+
+    /// Largest token budget among live slots (decode steps to run).
+    pub fn max_new_tokens(&self) -> usize {
+        self.slots.iter().flatten().map(|r| r.max_new_tokens).max().unwrap_or(0)
+    }
+}
+
+/// Thread-safe request queue + batch former.
+pub struct Batcher {
+    /// Configuration.
+    pub cfg: BatcherConfig,
+    queue: Mutex<VecDeque<Request>>,
+    nonempty: Condvar,
+    closed: Mutex<bool>,
+}
+
+impl Batcher {
+    /// New empty batcher.
+    pub fn new(cfg: BatcherConfig) -> Batcher {
+        Batcher {
+            cfg,
+            queue: Mutex::new(VecDeque::new()),
+            nonempty: Condvar::new(),
+            closed: Mutex::new(false),
+        }
+    }
+
+    /// Enqueue a request.
+    pub fn submit(&self, req: Request) {
+        self.queue.lock().unwrap().push_back(req);
+        self.nonempty.notify_all();
+    }
+
+    /// Number of queued requests.
+    pub fn queued(&self) -> usize {
+        self.queue.lock().unwrap().len()
+    }
+
+    /// Signal shutdown: `next_batch` returns None once drained.
+    pub fn close(&self) {
+        *self.closed.lock().unwrap() = true;
+        self.nonempty.notify_all();
+    }
+
+    /// Normalize a prompt to exactly P tokens (keep the most recent P,
+    /// right-pad with `pad_token`).
+    pub fn fit_prompt(&self, prompt: &[i32]) -> Vec<i32> {
+        let p = self.cfg.prompt_len;
+        let mut row: Vec<i32> = if prompt.len() > p {
+            prompt[prompt.len() - p..].to_vec()
+        } else {
+            prompt.to_vec()
+        };
+        row.resize(p, self.cfg.pad_token);
+        row
+    }
+
+    /// Block until a batch can be formed (or the batcher is closed and
+    /// empty → None). Waits up to `max_wait` for a full batch, then emits
+    /// a padded partial batch.
+    pub fn next_batch(&self) -> Option<Batch> {
+        let deadline = {
+            // wait for the first request
+            let mut q = self.queue.lock().unwrap();
+            loop {
+                if !q.is_empty() {
+                    break;
+                }
+                if *self.closed.lock().unwrap() {
+                    return None;
+                }
+                let (guard, _) = self.nonempty.wait_timeout(q, Duration::from_millis(20)).unwrap();
+                q = guard;
+            }
+            Instant::now() + self.cfg.max_wait
+        };
+        // wait for a full batch or the deadline
+        loop {
+            let q = self.queue.lock().unwrap();
+            if q.len() >= self.cfg.batch || Instant::now() >= deadline || *self.closed.lock().unwrap() {
+                break;
+            }
+            drop(q);
+            std::thread::sleep(Duration::from_millis(1));
+        }
+        let mut q = self.queue.lock().unwrap();
+        let n = q.len().min(self.cfg.batch);
+        let mut slots: Vec<Option<Request>> = Vec::with_capacity(self.cfg.batch);
+        let mut prompts = Vec::with_capacity(self.cfg.batch);
+        for _ in 0..n {
+            let req = q.pop_front().unwrap();
+            prompts.push(self.fit_prompt(&req.prompt));
+            slots.push(Some(req));
+        }
+        for _ in n..self.cfg.batch {
+            prompts.push(vec![self.cfg.pad_token; self.cfg.prompt_len]);
+            slots.push(None);
+        }
+        Some(Batch { prompts, slots, formed: Instant::now() })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn cfg() -> BatcherConfig {
+        BatcherConfig { batch: 4, prompt_len: 8, max_wait: Duration::from_millis(5), pad_token: 0 }
+    }
+
+    #[test]
+    fn full_batch_when_queue_full() {
+        let b = Batcher::new(cfg());
+        for i in 0..4 {
+            b.submit(Request::new(i, vec![1, 2, 3], 4));
+        }
+        let batch = b.next_batch().unwrap();
+        assert_eq!(batch.live(), 4);
+        assert_eq!(batch.prompts.len(), 4);
+        assert!(batch.prompts.iter().all(|p| p.len() == 8));
+    }
+
+    #[test]
+    fn partial_batch_after_timeout() {
+        let b = Batcher::new(cfg());
+        b.submit(Request::new(1, vec![5; 3], 2));
+        let batch = b.next_batch().unwrap();
+        assert_eq!(batch.live(), 1);
+        assert!(batch.slots[1].is_none());
+        assert_eq!(batch.max_new_tokens(), 2);
+    }
+
+    #[test]
+    fn prompt_fitting() {
+        let b = Batcher::new(cfg());
+        // short prompt: right-padded
+        assert_eq!(b.fit_prompt(&[1, 2]), vec![1, 2, 0, 0, 0, 0, 0, 0]);
+        // long prompt: keeps the last 8
+        let long: Vec<i32> = (0..12).collect();
+        assert_eq!(b.fit_prompt(&long), (4..12).collect::<Vec<i32>>());
+    }
+
+    #[test]
+    fn close_drains_then_none() {
+        let b = Batcher::new(cfg());
+        b.submit(Request::new(1, vec![1], 1));
+        b.close();
+        assert!(b.next_batch().is_some());
+        assert!(b.next_batch().is_none());
+    }
+
+    #[test]
+    fn close_unblocks_waiters() {
+        let b = std::sync::Arc::new(Batcher::new(cfg()));
+        let b2 = b.clone();
+        let h = std::thread::spawn(move || b2.next_batch().is_none());
+        std::thread::sleep(Duration::from_millis(10));
+        b.close();
+        assert!(h.join().unwrap());
+    }
+}

@@ -1,0 +1,148 @@
+//! Serving metrics: latency percentiles, throughput, batch occupancy.
+
+use std::sync::Mutex;
+
+use crate::coordinator::request::Response;
+use crate::util::stats;
+
+/// Aggregated serving metrics (thread safe).
+#[derive(Default)]
+pub struct Metrics {
+    inner: Mutex<Inner>,
+}
+
+#[derive(Default)]
+struct Inner {
+    responses: Vec<Response>,
+    batches: u64,
+    live_slots: u64,
+    total_slots: u64,
+    decode_steps: u64,
+    decode_time_s: f64,
+}
+
+/// A point-in-time summary of the metrics.
+#[derive(Clone, Debug)]
+pub struct Summary {
+    /// Requests completed.
+    pub completed: usize,
+    /// Generated tokens (all requests).
+    pub tokens: usize,
+    /// Tokens per second of decode time (system throughput).
+    pub decode_tokens_per_s: f64,
+    /// Mean per-token decode latency, s.
+    pub per_token_mean_s: f64,
+    /// p50 total request latency, s.
+    pub total_p50_s: f64,
+    /// p99 total request latency, s.
+    pub total_p99_s: f64,
+    /// Mean queueing delay, s.
+    pub queue_mean_s: f64,
+    /// Batch slot occupancy (1.0 = every batch full).
+    pub occupancy: f64,
+    /// Batches executed.
+    pub batches: u64,
+}
+
+impl Metrics {
+    /// New empty metrics.
+    pub fn new() -> Metrics {
+        Metrics::default()
+    }
+
+    /// Record one executed batch.
+    pub fn record_batch(&self, live: usize, total: usize, steps: usize, decode_s: f64) {
+        let mut m = self.inner.lock().unwrap();
+        m.batches += 1;
+        m.live_slots += live as u64;
+        m.total_slots += total as u64;
+        m.decode_steps += steps as u64;
+        m.decode_time_s += decode_s;
+    }
+
+    /// Record a completed response.
+    pub fn record_response(&self, resp: Response) {
+        self.inner.lock().unwrap().responses.push(resp);
+    }
+
+    /// Summarize.
+    pub fn summary(&self) -> Summary {
+        let m = self.inner.lock().unwrap();
+        let totals: Vec<f64> = m.responses.iter().map(|r| r.total_s()).collect();
+        let queues: Vec<f64> = m.responses.iter().map(|r| r.queue_s).collect();
+        let per_tok: Vec<f64> = m.responses.iter().map(|r| r.per_token_s()).collect();
+        let tokens: usize = m.responses.iter().map(|r| r.tokens.len()).sum();
+        Summary {
+            completed: m.responses.len(),
+            tokens,
+            decode_tokens_per_s: if m.decode_time_s > 0.0 {
+                tokens as f64 / m.decode_time_s
+            } else {
+                0.0
+            },
+            per_token_mean_s: stats::mean(&per_tok),
+            total_p50_s: stats::percentile(&totals, 50.0),
+            total_p99_s: stats::percentile(&totals, 99.0),
+            queue_mean_s: stats::mean(&queues),
+            occupancy: if m.total_slots > 0 {
+                m.live_slots as f64 / m.total_slots as f64
+            } else {
+                0.0
+            },
+            batches: m.batches,
+        }
+    }
+}
+
+impl Summary {
+    /// Render the summary as a small report.
+    pub fn render(&self) -> String {
+        format!(
+            "requests={} tokens={} throughput={:.1} tok/s per-token={} p50={} p99={} queue={} occupancy={:.0}% batches={}",
+            self.completed,
+            self.tokens,
+            self.decode_tokens_per_s,
+            crate::util::fmt_secs(self.per_token_mean_s),
+            crate::util::fmt_secs(self.total_p50_s),
+            crate::util::fmt_secs(self.total_p99_s),
+            crate::util::fmt_secs(self.queue_mean_s),
+            self.occupancy * 100.0,
+            self.batches,
+        )
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn summary_aggregates() {
+        let m = Metrics::new();
+        m.record_batch(3, 4, 10, 1.0);
+        m.record_batch(4, 4, 10, 1.0);
+        for i in 0..3 {
+            m.record_response(Response {
+                id: i,
+                tokens: vec![0; 10],
+                queue_s: 0.1,
+                prefill_s: 0.2,
+                decode_s: 1.0,
+            });
+        }
+        let s = m.summary();
+        assert_eq!(s.completed, 3);
+        assert_eq!(s.tokens, 30);
+        assert!((s.occupancy - 7.0 / 8.0).abs() < 1e-12);
+        assert!((s.decode_tokens_per_s - 15.0).abs() < 1e-12);
+        assert!(s.total_p99_s >= s.total_p50_s);
+    }
+
+    #[test]
+    fn empty_summary_is_zeroes() {
+        let s = Metrics::new().summary();
+        assert_eq!(s.completed, 0);
+        assert_eq!(s.decode_tokens_per_s, 0.0);
+        assert_eq!(s.occupancy, 0.0);
+    }
+}

@@ -1,0 +1,23 @@
+//! L3 serving coordinator — the leader process of a Chiplet Cloud server
+//! (paper Fig. 3(c): the controller "dispatches remote procedure calls
+//! from the off-PCB interface to all chiplets").
+//!
+//! * [`request`] — request/response types and token budgets.
+//! * [`batcher`] — dynamic batching to the artifact's compiled batch size
+//!   (batch-synchronous generation, the granularity the paper's pipeline
+//!   schedule assumes).
+//! * [`server`] — replica workers: each thread owns a `ModelEngine`
+//!   (PJRT handles are thread-affine) and pulls from the shared batcher,
+//!   which is exactly least-loaded routing (work stealing).
+//! * [`metrics`] — latency/throughput accounting for the end-to-end
+//!   example and benches.
+
+pub mod batcher;
+pub mod metrics;
+pub mod request;
+pub mod server;
+
+pub use batcher::{Batch, Batcher, BatcherConfig};
+pub use metrics::Metrics;
+pub use request::{Request, RequestId, Response};
+pub use server::{Coordinator, CoordinatorConfig};

@@ -1,0 +1,70 @@
+//! Request/response types for the serving coordinator.
+
+use std::time::Instant;
+
+/// Monotonic request identifier.
+pub type RequestId = u64;
+
+/// A generation request.
+#[derive(Clone, Debug)]
+pub struct Request {
+    /// Unique id.
+    pub id: RequestId,
+    /// Prompt token ids (padded/truncated to the artifact's prompt length
+    /// by the batcher).
+    pub prompt: Vec<i32>,
+    /// Tokens to generate.
+    pub max_new_tokens: usize,
+    /// Arrival time (for queueing-latency metrics).
+    pub arrived: Instant,
+}
+
+impl Request {
+    /// New request arriving now.
+    pub fn new(id: RequestId, prompt: Vec<i32>, max_new_tokens: usize) -> Request {
+        Request { id, prompt, max_new_tokens, arrived: Instant::now() }
+    }
+}
+
+/// A completed generation.
+#[derive(Clone, Debug)]
+pub struct Response {
+    /// Request id.
+    pub id: RequestId,
+    /// Generated token ids.
+    pub tokens: Vec<i32>,
+    /// Queue wait before the batch started, seconds.
+    pub queue_s: f64,
+    /// Prefill latency, seconds.
+    pub prefill_s: f64,
+    /// Decode time, seconds.
+    pub decode_s: f64,
+}
+
+impl Response {
+    /// Total time from arrival to completion.
+    pub fn total_s(&self) -> f64 {
+        self.queue_s + self.prefill_s + self.decode_s
+    }
+
+    /// Per-generated-token decode latency.
+    pub fn per_token_s(&self) -> f64 {
+        if self.tokens.is_empty() {
+            0.0
+        } else {
+            self.decode_s / self.tokens.len() as f64
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn response_metrics() {
+        let r = Response { id: 1, tokens: vec![1, 2, 3, 4], queue_s: 0.1, prefill_s: 0.2, decode_s: 0.8 };
+        assert!((r.total_s() - 1.1).abs() < 1e-12);
+        assert!((r.per_token_s() - 0.2).abs() < 1e-12);
+    }
+}

@@ -1,0 +1,226 @@
+//! The serving loop: replica worker threads drain the batcher — prefill
+//! once per batch, then lockstep decode steps until every live slot's
+//! budget is met.
+//!
+//! PJRT handles are not `Send` (the CPU client is thread-affine), so each
+//! replica thread *owns* its `ModelEngine`; the shared [`Batcher`] queue is
+//! the router: an idle replica pulls the next batch, which is exactly
+//! least-loaded dispatch (work stealing). Per-replica batch counts are
+//! tracked for balance reporting.
+
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{Arc, Mutex};
+use std::thread::JoinHandle;
+use std::time::{Duration, Instant};
+
+use crate::coordinator::batcher::{Batch, Batcher, BatcherConfig};
+use crate::coordinator::metrics::Metrics;
+use crate::coordinator::request::{Request, RequestId, Response};
+use crate::runtime::ModelEngine;
+use crate::{Error, Result};
+
+/// Coordinator configuration.
+#[derive(Clone, Debug)]
+pub struct CoordinatorConfig {
+    /// Max wait for a full batch.
+    pub max_wait: Duration,
+    /// Engine replicas (one worker thread each).
+    pub replicas: usize,
+}
+
+impl Default for CoordinatorConfig {
+    fn default() -> Self {
+        CoordinatorConfig { max_wait: Duration::from_millis(50), replicas: 1 }
+    }
+}
+
+/// The serving coordinator: batcher + replica workers + metrics.
+pub struct Coordinator {
+    /// Request batcher (the shared work queue = the router).
+    pub batcher: Arc<Batcher>,
+    /// Serving metrics.
+    pub metrics: Arc<Metrics>,
+    /// Batches executed per replica (dispatch balance).
+    pub replica_batches: Arc<Vec<AtomicU64>>,
+    responses: Arc<Mutex<Vec<Response>>>,
+    next_id: AtomicU64,
+    workers: Vec<JoinHandle<Result<()>>>,
+}
+
+impl Coordinator {
+    /// Load `cfg.replicas` copies of the artifact and start their worker
+    /// threads. The manifest is read once up front to size the batcher.
+    pub fn start(
+        dir: impl AsRef<std::path::Path>,
+        model: &str,
+        cfg: CoordinatorConfig,
+    ) -> Result<Coordinator> {
+        let dir = dir.as_ref().to_path_buf();
+        let manifest = crate::runtime::Manifest::load(&dir, model)?;
+        let batcher = Arc::new(Batcher::new(BatcherConfig {
+            batch: manifest.batch,
+            prompt_len: manifest.prompt_len,
+            max_wait: cfg.max_wait,
+            pad_token: 0,
+        }));
+        let metrics = Arc::new(Metrics::new());
+        let responses = Arc::new(Mutex::new(Vec::new()));
+        let replica_batches =
+            Arc::new((0..cfg.replicas.max(1)).map(|_| AtomicU64::new(0)).collect::<Vec<_>>());
+        let mut workers = Vec::new();
+        for rid in 0..cfg.replicas.max(1) {
+            let batcher = batcher.clone();
+            let metrics = metrics.clone();
+            let responses = responses.clone();
+            let replica_batches = replica_batches.clone();
+            let dir = dir.clone();
+            let model = model.to_string();
+            workers.push(std::thread::spawn(move || -> Result<()> {
+                // the engine lives and dies on this thread (PJRT affinity)
+                let engine = ModelEngine::load(&dir, &model)?;
+                while let Some(batch) = batcher.next_batch() {
+                    let rs = run_batch(&engine, &metrics, batch)?;
+                    replica_batches[rid].fetch_add(1, Ordering::Relaxed);
+                    responses.lock().unwrap().extend(rs);
+                }
+                Ok(())
+            }));
+        }
+        Ok(Coordinator {
+            batcher,
+            metrics,
+            replica_batches,
+            responses,
+            next_id: AtomicU64::new(1),
+            workers,
+        })
+    }
+
+    /// Submit a generation request; returns its id.
+    pub fn submit(&self, prompt: Vec<i32>, max_new_tokens: usize) -> RequestId {
+        let id = self.next_id.fetch_add(1, Ordering::Relaxed);
+        self.batcher.submit(Request::new(id, prompt, max_new_tokens));
+        id
+    }
+
+    /// Stop accepting requests, drain the queue, join workers, and return
+    /// all responses (sorted by request id).
+    pub fn shutdown(mut self) -> Result<Vec<Response>> {
+        self.batcher.close();
+        for w in self.workers.drain(..) {
+            w.join().map_err(|_| Error::Runtime("worker panicked".into()))??;
+        }
+        let mut rs = std::mem::take(&mut *self.responses.lock().unwrap());
+        rs.sort_by_key(|r| r.id);
+        Ok(rs)
+    }
+}
+
+/// Execute one batch on this replica's engine.
+fn run_batch(engine: &ModelEngine, metrics: &Metrics, batch: Batch) -> Result<Vec<Response>> {
+    let t0 = Instant::now();
+    let (mut tokens, mut state) = engine.prefill(&batch.prompts)?;
+    let prefill_s = t0.elapsed().as_secs_f64();
+
+    let steps = batch
+        .max_new_tokens()
+        .min(engine.manifest.max_ctx.saturating_sub(engine.manifest.prompt_len));
+    let mut generated: Vec<Vec<i32>> = vec![Vec::new(); batch.slots.len()];
+    let t1 = Instant::now();
+    for _ in 0..steps {
+        for (i, tok) in tokens.iter().enumerate() {
+            generated[i].push(*tok);
+        }
+        tokens = engine.decode_step(&tokens, &mut state)?;
+    }
+    let decode_s = t1.elapsed().as_secs_f64();
+    metrics.record_batch(batch.live(), batch.slots.len(), steps, decode_s);
+
+    let mut out = Vec::new();
+    for (i, slot) in batch.slots.iter().enumerate() {
+        let Some(req) = slot else { continue };
+        let n = req.max_new_tokens.min(steps);
+        let resp = Response {
+            id: req.id,
+            tokens: generated[i][..n].to_vec(),
+            queue_s: (batch.formed - req.arrived).as_secs_f64().max(0.0),
+            prefill_s,
+            decode_s: decode_s * n as f64 / steps.max(1) as f64,
+        };
+        metrics.record_response(resp.clone());
+        out.push(resp);
+    }
+    Ok(out)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn artifacts_dir() -> std::path::PathBuf {
+        std::path::PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("artifacts")
+    }
+
+    #[test]
+    fn serves_batches_end_to_end() {
+        let dir = artifacts_dir();
+        if !dir.join("cc-tiny.manifest.json").exists() {
+            eprintln!("skipping: run `make artifacts` first");
+            return;
+        }
+        let coord = Coordinator::start(
+            &dir,
+            "cc-tiny",
+            CoordinatorConfig { max_wait: Duration::from_millis(20), replicas: 1 },
+        )
+        .unwrap();
+        for i in 0..6 {
+            coord.submit(vec![(i % 100) as i32 + 1; 10], 4);
+        }
+        let responses = coord.shutdown().unwrap();
+        assert_eq!(responses.len(), 6);
+        for r in &responses {
+            assert_eq!(r.tokens.len(), 4);
+            assert!(r.total_s() > 0.0);
+        }
+    }
+
+    #[test]
+    fn deterministic_across_runs() {
+        let dir = artifacts_dir();
+        if !dir.join("cc-tiny.manifest.json").exists() {
+            return;
+        }
+        let run = || {
+            let coord = Coordinator::start(&dir, "cc-tiny", CoordinatorConfig::default()).unwrap();
+            let id = coord.submit(vec![7, 8, 9], 5);
+            let rs = coord.shutdown().unwrap();
+            rs.into_iter().find(|r| r.id == id).unwrap().tokens
+        };
+        assert_eq!(run(), run());
+    }
+
+    #[test]
+    fn two_replicas_share_the_queue() {
+        let dir = artifacts_dir();
+        if !dir.join("cc-tiny.manifest.json").exists() {
+            return;
+        }
+        let coord = Coordinator::start(
+            &dir,
+            "cc-tiny",
+            CoordinatorConfig { max_wait: Duration::from_millis(5), replicas: 2 },
+        )
+        .unwrap();
+        // many small batches so both replicas get work
+        for i in 0..12 {
+            coord.submit(vec![i as i32 + 1; 4], 2);
+            std::thread::sleep(Duration::from_millis(8));
+        }
+        let batches = coord.replica_batches.clone();
+        let responses = coord.shutdown().unwrap();
+        assert_eq!(responses.len(), 12);
+        let loads: Vec<u64> = batches.iter().map(|x| x.load(Ordering::Relaxed)).collect();
+        assert!(loads.iter().sum::<u64>() >= 1);
+    }
+}

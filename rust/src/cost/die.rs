@@ -1,0 +1,65 @@
+//! Die cost: `cost_die = (cost_wafer / DPW + cost_test) / Y_die` with the
+//! classical negative-binomial yield model [12] (paper §4.2).
+
+use crate::config::hardware::TechParams;
+use crate::cost::wafer::dies_per_wafer;
+
+/// Negative-binomial die yield: `Y = (1 + A·D0/α)^(−α)` with `A` in cm².
+pub fn die_yield(tech: &TechParams, die_area_mm2: f64) -> f64 {
+    let a_cm2 = die_area_mm2 / 100.0;
+    (1.0 + a_cm2 * tech.defect_density_per_cm2 / tech.yield_alpha).powf(-tech.yield_alpha)
+}
+
+/// Cost of one known-good die, $.
+pub fn die_cost(tech: &TechParams, die_area_mm2: f64) -> f64 {
+    let dpw = dies_per_wafer(tech.wafer_diameter_mm, die_area_mm2).max(1) as f64;
+    (tech.wafer_cost / dpw + tech.test_cost) / die_yield(tech, die_area_mm2)
+}
+
+/// $ per mm² of known-good silicon at a given die size — used to reproduce
+/// the paper's §2.3.2 claim that a 750 mm² die costs ~2× per mm² what a
+/// 150 mm² die costs at D0 = 0.1/cm².
+pub fn cost_per_mm2(tech: &TechParams, die_area_mm2: f64) -> f64 {
+    die_cost(tech, die_area_mm2) / die_area_mm2
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn yield_decreases_with_area() {
+        let t = TechParams::default();
+        assert!(die_yield(&t, 20.0) > die_yield(&t, 800.0));
+        assert!(die_yield(&t, 150.0) > 0.85);
+        assert!(die_yield(&t, 750.0) < 0.6);
+    }
+
+    /// §2.3.2: "For TSMC 7nm technology with a defect density of 0.1 per
+    /// cm², the unit price of a 750 mm² chip is twice that of a 150 mm²
+    /// chip" (unit price per mm² of good silicon).
+    #[test]
+    fn paper_2x_unit_price_claim() {
+        let t = TechParams::default();
+        let ratio = cost_per_mm2(&t, 750.0) / cost_per_mm2(&t, 150.0);
+        assert!((1.6..=2.4).contains(&ratio), "ratio={ratio}");
+    }
+
+    #[test]
+    fn die_cost_magnitudes() {
+        let t = TechParams::default();
+        // 140 mm² @ $10k wafer: dozens of dollars.
+        let c = die_cost(&t, 140.0);
+        assert!((15.0..60.0).contains(&c), "c={c}");
+        // 800 mm²: several hundred dollars.
+        let big = die_cost(&t, 800.0);
+        assert!((200.0..600.0).contains(&big), "big={big}");
+    }
+
+    #[test]
+    fn superlinear_in_area() {
+        let t = TechParams::default();
+        // doubling area more than doubles cost (yield + packing losses)
+        assert!(die_cost(&t, 400.0) > 2.0 * die_cost(&t, 200.0));
+    }
+}

@@ -1,0 +1,14 @@
+//! Cost models: die fabrication, server BOM, TCO, and NRE (paper §4.2
+//! "TCO Estimation" and §6.4 "NRE Discussion").
+
+pub mod die;
+pub mod nre;
+pub mod server;
+pub mod tco;
+pub mod wafer;
+
+pub use die::{die_cost, die_yield};
+pub use nre::NreModel;
+pub use server::server_capex;
+pub use tco::{Tco, TcoModel};
+pub use wafer::dies_per_wafer;

@@ -1,0 +1,90 @@
+//! Non-recurring engineering cost model (paper §6.4, extended from
+//! Moonwalk [24] to a 7nm node; the paper's estimate is ≈ $35M).
+
+/// NRE line items for a 7nm ASIC program, $.
+#[derive(Clone, Debug)]
+pub struct NreModel {
+    /// Full mask set at 7nm.
+    pub masks: f64,
+    /// CAD tool licenses over the program.
+    pub cad_tools: f64,
+    /// IP licensing (SerDes, PLLs, SRAM compilers, ...).
+    pub ip_licensing: f64,
+    /// Engineering labor.
+    pub labor: f64,
+    /// Flip-chip BGA package NRE + server design.
+    pub package_and_server: f64,
+}
+
+impl Default for NreModel {
+    fn default() -> Self {
+        // Moonwalk-extended 7nm split summing to the paper's $35M estimate.
+        NreModel {
+            masks: 12.0e6,
+            cad_tools: 8.0e6,
+            ip_licensing: 6.0e6,
+            labor: 6.0e6,
+            package_and_server: 3.0e6,
+        }
+    }
+}
+
+impl NreModel {
+    /// Total NRE, $.
+    pub fn total(&self) -> f64 {
+        self.masks + self.cad_tools + self.ip_licensing + self.labor + self.package_and_server
+    }
+
+    /// (NRE + TCO)/token given a TCO/token and a total token volume —
+    /// the y-axis of Fig. 10.
+    pub fn nre_plus_tco_per_token(&self, tco_per_token: f64, total_tokens: f64) -> f64 {
+        tco_per_token + self.total() / total_tokens
+    }
+
+    /// Minimum TCO/Token improvement factor over an incumbent platform that
+    /// justifies the NRE (Fig. 15): with yearly incumbent spend `S` $/yr
+    /// over `years`, ASIC spend is `S/x`; break-even at
+    /// `S·years − S·years/x = NRE` ⇒ `x = 1 / (1 − NRE/(S·years))`.
+    pub fn breakeven_improvement(&self, incumbent_spend_per_year: f64, years: f64) -> Option<f64> {
+        let spend = incumbent_spend_per_year * years;
+        if spend <= self.total() {
+            return None; // workload too small — ASIC can never pay back
+        }
+        Some(1.0 / (1.0 - self.total() / spend))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn totals_35m() {
+        assert!((NreModel::default().total() - 35e6).abs() < 1.0);
+    }
+
+    /// Fig. 15: ChatGPT at $255M/yr needs only ~1.14× TCO/Token improvement
+    /// to justify a $35M NRE (1-year horizon).
+    #[test]
+    fn chatgpt_breakeven_matches_paper() {
+        let nre = NreModel::default();
+        let x = nre.breakeven_improvement(255e6, 1.0).unwrap();
+        assert!((x - 1.14).abs() < 0.03, "x={x}");
+    }
+
+    #[test]
+    fn small_workloads_never_break_even() {
+        let nre = NreModel::default();
+        assert!(nre.breakeven_improvement(10e6, 1.0).is_none());
+        assert!(nre.breakeven_improvement(36e6, 1.0).is_some());
+    }
+
+    #[test]
+    fn nre_amortizes_with_volume() {
+        let nre = NreModel::default();
+        let small = nre.nre_plus_tco_per_token(1e-7, 1e12);
+        let large = nre.nre_plus_tco_per_token(1e-7, 1e15);
+        assert!(small > large);
+        assert!((large - 1e-7) < (small - 1e-7) / 100.0);
+    }
+}

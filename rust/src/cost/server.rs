@@ -1,0 +1,120 @@
+//! Server CapEx: dies + packages + PCB + PSU + heatsinks + fans + NIC +
+//! controller (paper §4.2: "The CapEx includes the silicon die cost,
+//! package cost, PCB cost, power supply unit cost, heatsink cost, fan
+//! costs, Ethernet controller cost, and control processor cost").
+
+use crate::arch::ChipletDesign;
+use crate::config::hardware::{ServerParams, TechParams};
+use crate::cost::die::die_cost;
+
+/// Itemized server CapEx, $.
+#[derive(Clone, Debug, Default)]
+pub struct ServerBom {
+    /// Known-good dies.
+    pub dies: f64,
+    /// Flip-chip BGA organic-substrate packages (board-level chiplets — no
+    /// silicon interposer, per §3.3).
+    pub packages: f64,
+    /// Printed circuit board.
+    pub pcb: f64,
+    /// Power supply unit.
+    pub psu: f64,
+    /// Heatsinks.
+    pub heatsinks: f64,
+    /// Fans.
+    pub fans: f64,
+    /// 100 GbE NIC.
+    pub ethernet: f64,
+    /// Control processor (FPGA/µC).
+    pub controller: f64,
+}
+
+impl ServerBom {
+    /// Total server CapEx, $.
+    pub fn total(&self) -> f64 {
+        self.dies
+            + self.packages
+            + self.pcb
+            + self.psu
+            + self.heatsinks
+            + self.fans
+            + self.ethernet
+            + self.controller
+    }
+
+    /// Silicon (dies) share of CapEx.
+    pub fn silicon_frac(&self) -> f64 {
+        self.dies / self.total()
+    }
+}
+
+/// Build the BOM for a server of `n_chips` chiplets with the given wall
+/// power (for PSU sizing).
+pub fn server_bom(
+    tech: &TechParams,
+    sp: &ServerParams,
+    chip: &ChipletDesign,
+    n_chips: usize,
+    wall_power_w: f64,
+) -> ServerBom {
+    let n = n_chips as f64;
+    ServerBom {
+        dies: die_cost(tech, chip.die_mm2) * n,
+        packages: (sp.package_fixed_cost + sp.package_cost_per_mm2 * chip.die_mm2) * n,
+        pcb: sp.pcb_cost,
+        psu: sp.psu_cost_per_kw * wall_power_w / 1000.0,
+        heatsinks: sp.heatsink_cost_per_chip * n,
+        fans: sp.fan_cost_per_lane * sp.lanes as f64,
+        ethernet: sp.ethernet_cost,
+        controller: sp.controller_cost,
+    }
+}
+
+/// Total server CapEx, $.
+pub fn server_capex(
+    tech: &TechParams,
+    sp: &ServerParams,
+    chip: &ChipletDesign,
+    n_chips: usize,
+    wall_power_w: f64,
+) -> f64 {
+    server_bom(tech, sp, chip, n_chips, wall_power_w).total()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn chip() -> ChipletDesign {
+        ChipletDesign {
+            die_mm2: 140.0,
+            sram_mb: 225.8,
+            tflops: 5.5,
+            mem_bw_gbps: 2750.0,
+            n_bank_groups: 172,
+            io_link_gbps: 25.0,
+            io_links: 4,
+            tdp_w: 14.1,
+        }
+    }
+
+    #[test]
+    fn bom_magnitudes() {
+        let t = TechParams::default();
+        let sp = ServerParams::default();
+        let bom = server_bom(&t, &sp, &chip(), 136, 2100.0);
+        // 136 dies at ~$25-30 each ⇒ silicon should dominate.
+        assert!(bom.silicon_frac() > 0.4, "silicon frac {}", bom.silicon_frac());
+        assert!((3_000.0..12_000.0).contains(&bom.total()), "total={}", bom.total());
+        assert_eq!(bom.ethernet, 450.0);
+    }
+
+    #[test]
+    fn capex_scales_with_chips() {
+        let t = TechParams::default();
+        let sp = ServerParams::default();
+        let c1 = server_capex(&t, &sp, &chip(), 40, 700.0);
+        let c2 = server_capex(&t, &sp, &chip(), 160, 2600.0);
+        assert!(c2 > 2.5 * c1);
+    }
+}

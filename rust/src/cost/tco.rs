@@ -1,0 +1,134 @@
+//! TCO model (paper §3 `TCO = CapEx + Life × OpEx`, based on Barroso's
+//! warehouse-scale machine model [6]).
+//!
+//! * **CapEx** — server BOM (see [`crate::cost::server`]).
+//! * **OpEx** — electricity at the wall × PUE, datacenter facility CapEx
+//!   amortized per provisioned watt, and a maintenance fraction.
+//!
+//! `TCO/Token` divides the TCO *rate* ($/s over the server life) by the
+//! sustained token throughput — the paper's headline metric.
+
+use crate::config::hardware::{DatacenterParams, ServerParams};
+
+/// Seconds in a year.
+pub const YEAR_S: f64 = 365.25 * 24.0 * 3600.0;
+
+/// TCO breakdown for one server over its life.
+#[derive(Clone, Debug, Default)]
+pub struct Tco {
+    /// Server CapEx, $.
+    pub capex: f64,
+    /// Energy OpEx over the life, $.
+    pub energy: f64,
+    /// Facility (datacenter) cost over the life, $.
+    pub facility: f64,
+    /// Maintenance OpEx over the life, $.
+    pub maintenance: f64,
+    /// Server life, years.
+    pub life_years: f64,
+}
+
+impl Tco {
+    /// Total cost of ownership, $.
+    pub fn total(&self) -> f64 {
+        self.capex + self.energy + self.facility + self.maintenance
+    }
+
+    /// CapEx share of TCO (the paper tracks this: >80% for most CC designs,
+    /// 97.7% for retail A100s at 50% utilization).
+    pub fn capex_frac(&self) -> f64 {
+        self.capex / self.total()
+    }
+
+    /// TCO per second of operation, $/s.
+    pub fn rate_per_s(&self) -> f64 {
+        self.total() / (self.life_years * YEAR_S)
+    }
+
+    /// $ per token at a sustained throughput (tokens/s).
+    pub fn per_token(&self, tokens_per_s: f64) -> f64 {
+        self.rate_per_s() / tokens_per_s
+    }
+
+    /// $ per 1M tokens (Table 2's bottom row).
+    pub fn per_mtok(&self, tokens_per_s: f64) -> f64 {
+        self.per_token(tokens_per_s) * 1e6
+    }
+}
+
+/// Parameters + construction of [`Tco`] values.
+#[derive(Clone, Debug, Default)]
+pub struct TcoModel {
+    /// Server-level constants (life, PSU, ...).
+    pub server: ServerParams,
+    /// Datacenter constants (electricity, PUE, facility $/W).
+    pub dc: DatacenterParams,
+}
+
+impl TcoModel {
+    /// TCO of a server with the given CapEx and *average* wall power.
+    pub fn server_tco(&self, capex: f64, avg_wall_w: f64) -> Tco {
+        let life = self.server.server_life_years;
+        let kwh = avg_wall_w / 1000.0 * life * YEAR_S / 3600.0;
+        Tco {
+            capex,
+            energy: kwh * self.dc.electricity_per_kwh * self.dc.pue,
+            facility: avg_wall_w * self.dc.facility_capex_per_w_year * life,
+            maintenance: capex * self.dc.opex_maintenance_frac * life,
+            life_years: life,
+        }
+    }
+
+    /// TCO of a server *rented* at an hourly price (GPU/TPU cloud
+    /// baselines): everything is OpEx.
+    pub fn rented_tco(&self, hourly_rate: f64, life_years: f64) -> Tco {
+        Tco {
+            capex: 0.0,
+            energy: hourly_rate * life_years * YEAR_S / 3600.0,
+            facility: 0.0,
+            maintenance: 0.0,
+            life_years,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn rate_and_per_token() {
+        let m = TcoModel::default();
+        let tco = m.server_tco(10_000.0, 1000.0);
+        assert!(tco.total() > 10_000.0);
+        let per_tok = tco.per_token(1000.0);
+        assert!(per_tok > 0.0);
+        assert!((tco.per_mtok(1000.0) - per_tok * 1e6).abs() < 1e-12);
+    }
+
+    /// CapEx dominance: a cheap-to-run ASIC server is mostly CapEx (paper
+    /// finds >80% for most Chiplet Cloud designs).
+    #[test]
+    fn asic_server_capex_dominated() {
+        let m = TcoModel::default();
+        // GPT-3-like server: ~$5.3k CapEx, ~2.2 kW wall at full tilt
+        let tco = m.server_tco(5_300.0, 1_200.0);
+        assert!(tco.capex_frac() > 0.5, "capex frac {}", tco.capex_frac());
+    }
+
+    #[test]
+    fn rented_is_pure_opex() {
+        let m = TcoModel::default();
+        let tco = m.rented_tco(2.0, 1.5);
+        assert_eq!(tco.capex, 0.0);
+        assert!((tco.total() - 2.0 * 1.5 * YEAR_S / 3600.0).abs() < 1e-6);
+    }
+
+    #[test]
+    fn energy_scales_with_power() {
+        let m = TcoModel::default();
+        let lo = m.server_tco(1000.0, 500.0);
+        let hi = m.server_tco(1000.0, 1000.0);
+        assert!((hi.energy / lo.energy - 2.0).abs() < 1e-9);
+    }
+}

@@ -1,0 +1,100 @@
+//! Dies-per-wafer (DPW) for a 300 mm line.
+//!
+//! The paper: "we first calculate the number of fully patterned dies per
+//! wafer (DPW). This is the number of rectangular dies with the given die
+//! size dimensions that we can slice out of a traditional 300 mm circular
+//! wafer." We implement both the exact grid-packing count and the classical
+//! closed-form approximation; the exact count is used by the cost model.
+
+/// Exact grid packing: count positions of a `w`×`h` mm die on a circular
+/// wafer of the given diameter (3 mm edge exclusion, 0.1 mm scribe lanes),
+/// maximized over grid phase offsets.
+pub fn dies_per_wafer_rect(diameter_mm: f64, w: f64, h: f64) -> usize {
+    let scribe = 0.1;
+    let r = diameter_mm / 2.0 - 3.0; // edge exclusion
+    let (pw, ph) = (w + scribe, h + scribe);
+    let mut best = 0usize;
+    // Try a few grid phases; the optimum is usually centered or half-offset.
+    for &ox in &[0.0, pw / 2.0] {
+        for &oy in &[0.0, ph / 2.0] {
+            let mut count = 0usize;
+            let nx = (2.0 * r / pw).ceil() as i64 + 2;
+            let ny = (2.0 * r / ph).ceil() as i64 + 2;
+            for i in -nx..nx {
+                for j in -ny..ny {
+                    let x0 = ox + i as f64 * pw;
+                    let y0 = oy + j as f64 * ph;
+                    let corners = [
+                        (x0, y0),
+                        (x0 + w, y0),
+                        (x0, y0 + h),
+                        (x0 + w, y0 + h),
+                    ];
+                    if corners.iter().all(|&(x, y)| x * x + y * y <= r * r) {
+                        count += 1;
+                    }
+                }
+            }
+            best = best.max(count);
+        }
+    }
+    best
+}
+
+/// DPW for a square die of the given area (mm²).
+pub fn dies_per_wafer(diameter_mm: f64, die_area_mm2: f64) -> usize {
+    let side = die_area_mm2.sqrt();
+    dies_per_wafer_rect(diameter_mm, side, side)
+}
+
+/// Classical closed-form approximation:
+/// `DPW ≈ π·(d/2)²/A − π·d/√(2A)` — kept for validation.
+pub fn dies_per_wafer_approx(diameter_mm: f64, die_area_mm2: f64) -> f64 {
+    let d = diameter_mm;
+    let a = die_area_mm2;
+    (std::f64::consts::PI * (d / 2.0) * (d / 2.0) / a
+        - std::f64::consts::PI * d / (2.0 * a).sqrt())
+    .max(0.0)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn exact_close_to_approx() {
+        for area in [50.0, 100.0, 150.0, 400.0, 750.0] {
+            let exact = dies_per_wafer(300.0, area) as f64;
+            let approx = dies_per_wafer_approx(300.0, area);
+            let rel = (exact - approx).abs() / approx;
+            assert!(rel < 0.15, "area={area}: exact={exact} approx={approx}");
+        }
+    }
+
+    #[test]
+    fn known_magnitudes() {
+        // ~800 mm² (A100-class): ~60-90 dies from a 300 mm wafer.
+        let big = dies_per_wafer(300.0, 800.0);
+        assert!((55..=95).contains(&big), "big={big}");
+        // 100 mm²: several hundred dies.
+        let small = dies_per_wafer(300.0, 100.0);
+        assert!((550..=700).contains(&small), "small={small}");
+    }
+
+    #[test]
+    fn monotone_in_area() {
+        let mut prev = usize::MAX;
+        for area in [25.0, 50.0, 100.0, 200.0, 400.0, 800.0] {
+            let n = dies_per_wafer(300.0, area);
+            assert!(n < prev, "DPW must shrink with area");
+            prev = n;
+        }
+    }
+
+    #[test]
+    fn rectangle_orientation_irrelevant_for_square_equivalents() {
+        let a = dies_per_wafer_rect(300.0, 10.0, 20.0);
+        let b = dies_per_wafer_rect(300.0, 20.0, 10.0);
+        assert_eq!(a, b);
+    }
+}

@@ -1,0 +1,171 @@
+//! Design-choice ablations (DESIGN.md's per-choice studies): quantify each
+//! Chiplet Cloud architectural decision by switching it off and re-running
+//! the two-phase search.
+
+use crate::config::hardware::ExploreSpace;
+use crate::config::{ModelSpec, Workload};
+use crate::cost::die::cost_per_mm2;
+use crate::evaluate::best_point;
+use crate::explore::phase1;
+use crate::util::table::Table;
+
+/// One ablation row: what was disabled, and the TCO/Token penalty.
+#[derive(Clone, Debug)]
+pub struct Ablation {
+    /// Ablation name.
+    pub name: String,
+    /// TCO/Token with the feature on (the full system).
+    pub with_feature: f64,
+    /// TCO/Token with the feature disabled.
+    pub without: f64,
+}
+
+impl Ablation {
+    /// Penalty factor for removing the feature.
+    pub fn penalty(&self) -> f64 {
+        self.without / self.with_feature
+    }
+}
+
+/// Run the ablation suite for a model at an operating point.
+pub fn ablate(
+    space: &ExploreSpace,
+    model: &ModelSpec,
+    ctx: usize,
+    batch: usize,
+) -> Vec<Ablation> {
+    let (servers, _) = phase1(space);
+    let w = Workload::new(model.clone(), ctx, batch);
+    let Some(full) = best_point(space, &servers, &w) else { return Vec::new() };
+    let mut out = Vec::new();
+
+    // 1. Chiplets → monolithic: restrict to reticle-class dies.
+    let mono: Vec<_> =
+        servers.iter().filter(|s| s.chiplet.die_mm2 >= 700.0).cloned().collect();
+    if let Some(p) = best_point(space, &mono, &w) {
+        out.push(Ablation {
+            name: "chiplets (vs >=700mm2 monolithic)".into(),
+            with_feature: full.tco_per_token,
+            without: p.tco_per_token,
+        });
+    }
+
+    // 2. 2D weight-stationary mapping → 1D tensor parallelism.
+    if let Some(p) = best_point(space, &servers, &w.clone().with_1d_comm()) {
+        out.push(Ablation {
+            name: "2D weight-stationary (vs 1D comm)".into(),
+            with_feature: full.tco_per_token,
+            without: p.tco_per_token,
+        });
+    }
+
+    // 3. Micro-batch tuning → fixed microbatch of 1.
+    {
+        use crate::cost::tco::TcoModel;
+        use crate::mapping::optimizer;
+        let tcom = TcoModel { server: space.server.clone(), dc: space.dc.clone() };
+        let mut best: Option<f64> = None;
+        for s in &servers {
+            let score = |mapping: &crate::mapping::Mapping, perf: &crate::perf::DecodePerf| {
+                let n_servers = mapping.n_chips().div_ceil(s.chips().max(1));
+                crate::evaluate::system_tco(space, &tcom, s, n_servers, perf)
+                    .per_token(perf.tokens_per_s)
+            };
+            if let Some((m, perf, cost)) = optimizer::optimize_mapping(s, &w, score) {
+                if m.microbatch == 1 {
+                    let _ = perf;
+                    best = Some(best.map_or(cost, |b: f64| b.min(cost)));
+                } else {
+                    // re-evaluate at microbatch 1 with the same tp/pp
+                    let m1 = crate::mapping::Mapping { microbatch: 1, ..m };
+                    if let Some(p1) = crate::perf::simulate(s, &w, &m1) {
+                        let n_servers = m1.n_chips().div_ceil(s.chips().max(1));
+                        let c1 = crate::evaluate::system_tco(space, &tcom, s, n_servers, &p1)
+                            .per_token(p1.tokens_per_s);
+                        best = Some(best.map_or(c1, |b: f64| b.min(c1)));
+                    }
+                }
+            }
+        }
+        if let Some(c) = best {
+            out.push(Ablation {
+                name: "micro-batch tuning (vs ub=1)".into(),
+                with_feature: full.tco_per_token,
+                without: c,
+            });
+        }
+    }
+
+    // 4. Batch-size tuning → batch 1.
+    if let Some(p) = best_point(space, &servers, &Workload::new(model.clone(), ctx, 1)) {
+        out.push(Ablation {
+            name: "batching (vs batch=1)".into(),
+            with_feature: full.tco_per_token,
+            without: p.tco_per_token,
+        });
+    }
+
+    out
+}
+
+/// Yield-model ablation: the negative-binomial clustering assumption vs a
+/// Poisson model (α → ∞). Returns ($/mm² ratio big/small die) under each —
+/// clustering is why big dies are *less* catastrophic than Poisson predicts.
+pub fn yield_model_ablation(space: &ExploreSpace) -> (f64, f64) {
+    let nb = cost_per_mm2(&space.tech, 750.0) / cost_per_mm2(&space.tech, 150.0);
+    let mut poisson_tech = space.tech.clone();
+    poisson_tech.yield_alpha = 1e6;
+    let poisson = cost_per_mm2(&poisson_tech, 750.0) / cost_per_mm2(&poisson_tech, 150.0);
+    (nb, poisson)
+}
+
+/// Render the ablation suite as a table.
+pub fn ablation_table(space: &ExploreSpace, model: &ModelSpec, ctx: usize, batch: usize) -> Table {
+    let mut t = Table::new(vec!["Design choice", "TCO/Token penalty when removed"])
+        .with_title(format!(
+            "Ablations: {} @ ctx {ctx}, batch {batch} (coarse sweep)",
+            model.display
+        ));
+    for a in ablate(space, model, ctx, batch) {
+        t.row(vec![a.name.clone(), format!("{:.2}x", a.penalty())]);
+    }
+    let (nb, poisson) = yield_model_ablation(space);
+    t.row(vec![
+        "negative-binomial yield (vs Poisson)".into(),
+        format!("big-die $/mm2 ratio {:.2}x vs {:.2}x", nb, poisson),
+    ]);
+    t
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn ablations_all_penalize() {
+        let space = ExploreSpace::coarse();
+        let rows = ablate(&space, &ModelSpec::gpt3(), 2048, 256);
+        assert!(rows.len() >= 3, "expected >=3 ablations, got {}", rows.len());
+        for a in &rows {
+            assert!(
+                a.penalty() >= 0.99,
+                "removing '{}' should not help: {:.3}x",
+                a.name,
+                a.penalty()
+            );
+        }
+        // chiplets and batching are the big levers
+        let chiplet = rows.iter().find(|a| a.name.starts_with("chiplets")).unwrap();
+        assert!(chiplet.penalty() > 1.2, "chiplet penalty {:.2}", chiplet.penalty());
+        let batching = rows.iter().find(|a| a.name.starts_with("batching")).unwrap();
+        assert!(batching.penalty() > 1.5, "batching penalty {:.2}", batching.penalty());
+    }
+
+    #[test]
+    fn clustering_softens_big_die_cost() {
+        let space = ExploreSpace::coarse();
+        let (nb, poisson) = yield_model_ablation(&space);
+        assert!(nb < poisson, "negative binomial must be kinder to big dies");
+        assert!((1.5..=2.5).contains(&nb), "paper's ~2x claim: {nb}");
+    }
+}

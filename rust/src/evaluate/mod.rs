@@ -1,0 +1,192 @@
+//! Phase 2 — software evaluation (paper §4.2, Fig. 5(b)) and the
+//! system cost-performance analysis.
+//!
+//! For each feasible server design and workload, search the mapping space,
+//! simulate decode performance, build the system TCO, and keep the
+//! TCO/Token-optimal points. Also exposes the sweep data the evaluation
+//! figures plot (TCO vs die size, batch sweeps, multi-model objectives).
+
+pub mod ablation;
+pub mod multi_model;
+pub mod sensitivity;
+pub mod sparsity;
+
+use crate::arch::ServerDesign;
+use crate::config::hardware::ExploreSpace;
+use crate::config::Workload;
+use crate::cost::tco::{Tco, TcoModel};
+use crate::mapping::{optimizer, Mapping};
+use crate::perf::DecodePerf;
+use crate::power;
+
+/// A fully evaluated design point: hardware + mapping + performance + cost.
+#[derive(Clone, Debug)]
+pub struct DesignPoint {
+    /// The server design.
+    pub server: ServerDesign,
+    /// The chosen mapping.
+    pub mapping: Mapping,
+    /// Whole servers deployed (mapping chips / chips-per-server, ceil).
+    pub n_servers: usize,
+    /// Simulated decode performance.
+    pub perf: DecodePerf,
+    /// System TCO over the server life (all servers).
+    pub tco: Tco,
+    /// $ per generated token.
+    pub tco_per_token: f64,
+}
+
+impl DesignPoint {
+    /// $ per 1K tokens (Fig. 8's axis).
+    pub fn tco_per_ktok(&self) -> f64 {
+        self.tco_per_token * 1e3
+    }
+
+    /// $ per 1M tokens (Table 2's row).
+    pub fn tco_per_mtok(&self) -> f64 {
+        self.tco_per_token * 1e6
+    }
+}
+
+/// Evaluate one server design for a workload: find its TCO/Token-optimal
+/// mapping. Returns None if nothing fits.
+pub fn evaluate_server(
+    space: &ExploreSpace,
+    server: &ServerDesign,
+    w: &Workload,
+) -> Option<DesignPoint> {
+    let tcom = TcoModel { server: space.server.clone(), dc: space.dc.clone() };
+    let cps = server.chips().max(1);
+    let score = |mapping: &Mapping, perf: &DecodePerf| -> f64 {
+        let n_servers = mapping.n_chips().div_ceil(cps);
+        system_tco(space, &tcom, server, n_servers, perf).per_token(perf.tokens_per_s)
+    };
+    let (mapping, perf, tco_per_token) = optimizer::optimize_mapping(server, w, score)?;
+    let n_servers = mapping.n_chips().div_ceil(cps);
+    let tco = system_tco(space, &tcom, server, n_servers, &perf);
+    Some(DesignPoint { server: server.clone(), mapping, n_servers, perf, tco, tco_per_token })
+}
+
+/// System TCO: `n_servers` replicas at the utilization the simulation found.
+pub fn system_tco(
+    space: &ExploreSpace,
+    tcom: &TcoModel,
+    server: &ServerDesign,
+    n_servers: usize,
+    perf: &DecodePerf,
+) -> Tco {
+    let avg_wall = power::server_avg_power(
+        server,
+        &space.tech,
+        &space.server,
+        perf.compute_util,
+        perf.mem_util,
+    );
+    let per_server = tcom.server_tco(server.server_capex, avg_wall);
+    Tco {
+        capex: per_server.capex * n_servers as f64,
+        energy: per_server.energy * n_servers as f64,
+        facility: per_server.facility * n_servers as f64,
+        maintenance: per_server.maintenance * n_servers as f64,
+        life_years: per_server.life_years,
+    }
+}
+
+/// Phase-2 over a set of servers: the best point per server (the scatter
+/// the paper's Fig. 7 plots) — use [`best_point`] for the global optimum.
+pub fn sweep(space: &ExploreSpace, servers: &[ServerDesign], w: &Workload) -> Vec<DesignPoint> {
+    servers.iter().filter_map(|s| evaluate_server(space, s, w)).collect()
+}
+
+/// Global TCO/Token-optimal point for a workload.
+pub fn best_point(
+    space: &ExploreSpace,
+    servers: &[ServerDesign],
+    w: &Workload,
+) -> Option<DesignPoint> {
+    sweep(space, servers, w)
+        .into_iter()
+        .min_by(|a, b| a.tco_per_token.partial_cmp(&b.tco_per_token).unwrap())
+}
+
+/// Best point for a model across a workload grid (the Table-2 procedure:
+/// ctx ∈ {1024, 2048, 4096} × batch 1..1024, keep the global optimum).
+pub fn best_over_grid(
+    space: &ExploreSpace,
+    servers: &[ServerDesign],
+    grid: &[Workload],
+) -> Option<(Workload, DesignPoint)> {
+    let mut best: Option<(Workload, DesignPoint)> = None;
+    for w in grid {
+        if let Some(p) = best_point(space, servers, w) {
+            if best.as_ref().map(|(_, b)| p.tco_per_token < b.tco_per_token).unwrap_or(true) {
+                best = Some((w.clone(), p));
+            }
+        }
+    }
+    best
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::ModelSpec;
+    use crate::explore::phase1;
+
+    fn setup() -> (ExploreSpace, Vec<ServerDesign>) {
+        let space = ExploreSpace::coarse();
+        let (servers, _) = phase1(&space);
+        (space, servers)
+    }
+
+    #[test]
+    fn finds_a_gpt3_optimum() {
+        let (space, servers) = setup();
+        let w = Workload::new(ModelSpec::gpt3(), 2048, 256);
+        let p = best_point(&space, &servers, &w).expect("feasible design exists");
+        // Table 2: $0.161 / 1M tokens; coarse grid within ~3x
+        assert!(
+            (0.05..=0.5).contains(&p.tco_per_mtok()),
+            "TCO/1M tok = {}",
+            p.tco_per_mtok()
+        );
+        // CapEx-dominated (paper: >80% for most designs)
+        assert!(p.tco.capex_frac() > 0.5, "capex frac {}", p.tco.capex_frac());
+    }
+
+    #[test]
+    fn optimal_die_is_small_not_reticle() {
+        let (space, servers) = setup();
+        let w = Workload::new(ModelSpec::gpt3(), 2048, 256);
+        let p = best_point(&space, &servers, &w).unwrap();
+        // Fig. 7: optima live below ~300 mm², far from the 800 mm² limit
+        assert!(p.server.chiplet.die_mm2 <= 400.0, "die={}", p.server.chiplet.die_mm2);
+    }
+
+    #[test]
+    fn small_model_costs_less_per_token() {
+        let (space, servers) = setup();
+        let small = best_point(&space, &servers, &Workload::new(ModelSpec::gpt2(), 1024, 128))
+            .unwrap()
+            .tco_per_token;
+        let large = best_point(&space, &servers, &Workload::new(ModelSpec::gpt3(), 1024, 128))
+            .unwrap()
+            .tco_per_token;
+        // Table 2: GPT-2 $0.001/M vs GPT-3 $0.161/M — orders of magnitude
+        assert!(large / small > 20.0, "ratio={}", large / small);
+    }
+
+    #[test]
+    fn grid_optimum_not_worse_than_members() {
+        let (space, servers) = setup();
+        let m = ModelSpec::megatron();
+        let grid: Vec<Workload> =
+            [32usize, 128].iter().map(|&b| Workload::new(m.clone(), 1024, b)).collect();
+        let (_, best) = best_over_grid(&space, &servers, &grid).unwrap();
+        for w in &grid {
+            if let Some(p) = best_point(&space, &servers, w) {
+                assert!(best.tco_per_token <= p.tco_per_token + 1e-15);
+            }
+        }
+    }
+}

@@ -1,0 +1,120 @@
+//! Sparse-model evaluation (paper §6.2, Fig. 13).
+//!
+//! Weights are stored tile-CSR compressed in CC-MEM (Store-as-Compressed)
+//! and decoded to dense on load (Load-as-Dense), so sparsity changes the
+//! *memory footprint* (fewer chips needed) and — below the decoder's knee —
+//! the *weight-read time*, while the compute units stay sparsity-agnostic.
+//! TCO/Token of the system is capacity-limited, so footprint drives cost.
+
+use crate::arch::ServerDesign;
+use crate::config::hardware::ExploreSpace;
+use crate::config::{ModelSpec, Workload};
+use crate::evaluate::{best_point, DesignPoint};
+use crate::sparse::stats::opt175b_perplexity;
+
+/// One row of the Fig. 13 (top) sweep.
+#[derive(Clone, Debug)]
+pub struct SparsityPoint {
+    /// Weight sparsity (fraction of zeros).
+    pub sparsity: f64,
+    /// TCO/Token-optimal design at this sparsity.
+    pub point: DesignPoint,
+    /// TCO/Token change vs dense (negative = cheaper).
+    pub tco_delta_frac: f64,
+    /// Model perplexity at this sparsity (quoted from SparseGPT [15]).
+    pub perplexity: f64,
+}
+
+/// Sweep sparsity for a model (Fig. 13 top: OPT-175B, 0..80%).
+pub fn sparsity_sweep(
+    space: &ExploreSpace,
+    servers: &[ServerDesign],
+    model: &ModelSpec,
+    ctx: usize,
+    batch: usize,
+    sparsities: &[f64],
+) -> Vec<SparsityPoint> {
+    let dense = best_point(space, servers, &Workload::new(model.clone(), ctx, batch));
+    let Some(dense) = dense else { return Vec::new() };
+    let mut out = Vec::new();
+    for &s in sparsities {
+        let w = Workload::new(model.clone(), ctx, batch).with_sparsity(s);
+        if let Some(point) = best_point(space, servers, &w) {
+            let delta = point.tco_per_token / dense.tco_per_token - 1.0;
+            out.push(SparsityPoint {
+                sparsity: s,
+                point,
+                tco_delta_frac: delta,
+                perplexity: opt175b_perplexity(s),
+            });
+        }
+    }
+    out
+}
+
+/// Largest model (parameter multiple of `model`) servable on a *fixed*
+/// system at the given sparsity (Fig. 13 bottom: 1.7× at 60%).
+pub fn max_model_scale_on_system(
+    model: &ModelSpec,
+    ctx: usize,
+    batch: usize,
+    system_bytes: f64,
+    sparsity: f64,
+) -> f64 {
+    let w = Workload::new(model.clone(), ctx, batch).with_sparsity(sparsity);
+    // scale s.t. scale·(stored weights) + scale·KV = capacity
+    // (KV is not compressed; model scale grows KV proportionally via layers/d)
+    let per_scale = w.stored_weight_bytes() + w.kv_bytes();
+    system_bytes / per_scale
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::explore::phase1;
+
+    #[test]
+    fn sparsity_sweep_reproduces_fig13_shape() {
+        let space = ExploreSpace::coarse();
+        let (servers, _) = phase1(&space);
+        // OPT-175B at modest batch (keeps the coarse sweep fast)
+        let pts = sparsity_sweep(
+            &space,
+            &servers,
+            &ModelSpec::opt_175b(),
+            2048,
+            64,
+            &[0.1, 0.2, 0.6],
+        );
+        assert_eq!(pts.len(), 3);
+        let at = |s: f64| pts.iter().find(|p| (p.sparsity - s).abs() < 1e-9).unwrap();
+        // Low sparsity: encoding overhead ⇒ TCO does not improve.
+        assert!(at(0.1).tco_delta_frac > -0.02, "10%: {}", at(0.1).tco_delta_frac);
+        // 60%: TCO improves (paper: −7.4%).
+        assert!(at(0.6).tco_delta_frac < -0.01, "60%: {}", at(0.6).tco_delta_frac);
+        // and perplexity is still near-dense at 60%
+        assert!(at(0.6).perplexity < 8.7);
+    }
+
+    #[test]
+    fn model_scale_at_60pct_close_to_paper() {
+        // Fig. 13 bottom: 1.7× at 60% sparsity. The scale approaches the
+        // codec's 1.78× in the weights-dominated regime (small batch);
+        // large batches dilute it because the KV cache is not compressed.
+        use crate::config::Workload;
+        let m = ModelSpec::opt_175b();
+        let dense_sys = {
+            let w = Workload::new(m.clone(), 2048, 4);
+            w.stored_weight_bytes() + w.kv_bytes()
+        };
+        let scale = max_model_scale_on_system(&m, 2048, 4, dense_sys, 0.6);
+        assert!((1.5..=1.85).contains(&scale), "scale={scale}");
+        // and the dilution effect itself:
+        let big_sys = {
+            let w = Workload::new(m.clone(), 2048, 256);
+            w.stored_weight_bytes() + w.kv_bytes()
+        };
+        let diluted = max_model_scale_on_system(&m, 2048, 256, big_sys, 0.6);
+        assert!(diluted < scale);
+    }
+}

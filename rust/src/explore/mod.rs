@@ -1,0 +1,165 @@
+//! Phase 1 — hardware exploration (paper §4.1, Fig. 5(a)).
+//!
+//! A bottom-up, LLM-agnostic sweep over chiplet and server parameters,
+//! filtered by geometry ([`crate::area`]), power density
+//! ([`crate::power`]), lane thermals ([`crate::thermal`]) and the Table-1
+//! server envelope. Produces the *feasible server designs* Phase 2
+//! evaluates per workload.
+
+use crate::arch::{ChipletDesign, ServerDesign};
+use crate::config::hardware::ExploreSpace;
+use crate::cost::server::server_capex;
+use crate::power::server_wall_power;
+use crate::thermal::{lane_feasible, ThermalParams};
+
+/// Why a swept point was rejected (for exploration reports).
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub enum Rejection {
+    /// `design_chiplet` returned None (geometry / bank range / density).
+    Geometry,
+    /// Too much silicon per lane (Table 1: < 6000 mm²).
+    SiliconPerLane,
+    /// Lane power above the Table-1 cap.
+    LanePower,
+    /// Junction temperature violation.
+    Thermal,
+}
+
+/// Outcome statistics of a Phase-1 run.
+#[derive(Clone, Debug, Default)]
+pub struct ExploreStats {
+    /// Raw points swept.
+    pub swept: usize,
+    /// Feasible server designs produced.
+    pub feasible: usize,
+    /// Rejections by cause.
+    pub rejected_geometry: usize,
+    /// Silicon-per-lane rejections.
+    pub rejected_silicon: usize,
+    /// Lane-power rejections.
+    pub rejected_power: usize,
+    /// Thermal rejections.
+    pub rejected_thermal: usize,
+}
+
+/// Run the Phase-1 sweep: every (die size, SRAM fraction, bandwidth ratio,
+/// chips/lane) combination, validated bottom-up into a server design.
+pub fn phase1(space: &ExploreSpace) -> (Vec<ServerDesign>, ExploreStats) {
+    let tp = ThermalParams::default();
+    let mut out = Vec::new();
+    let mut stats = ExploreStats::default();
+    for &die in &space.die_sizes_mm2 {
+        for &frac in &space.sram_fracs {
+            for &bw in &space.bw_ratios {
+                let designed = crate::area::design_chiplet(&space.tech, die, frac, bw);
+                for &cpl in &space.chips_per_lane {
+                    stats.swept += 1;
+                    let Some((chip, _)) = designed.as_ref() else {
+                        stats.rejected_geometry += 1;
+                        continue;
+                    };
+                    match check_server(space, &tp, chip, cpl) {
+                        Ok(server) => {
+                            stats.feasible += 1;
+                            out.push(server);
+                        }
+                        Err(Rejection::Geometry) => stats.rejected_geometry += 1,
+                        Err(Rejection::SiliconPerLane) => stats.rejected_silicon += 1,
+                        Err(Rejection::LanePower) => stats.rejected_power += 1,
+                        Err(Rejection::Thermal) => stats.rejected_thermal += 1,
+                    }
+                }
+            }
+        }
+    }
+    (out, stats)
+}
+
+/// Validate one (chip, chips/lane) pair into a server design.
+pub fn check_server(
+    space: &ExploreSpace,
+    tp: &ThermalParams,
+    chip: &ChipletDesign,
+    chips_per_lane: usize,
+) -> Result<ServerDesign, Rejection> {
+    let sp = &space.server;
+    if chip.die_mm2 * chips_per_lane as f64 > sp.max_silicon_per_lane_mm2 {
+        return Err(Rejection::SiliconPerLane);
+    }
+    let lane_power = chip.tdp_w * chips_per_lane as f64;
+    if lane_power > sp.max_power_per_lane_w {
+        return Err(Rejection::LanePower);
+    }
+    if !lane_feasible(tp, chips_per_lane, chip.tdp_w, chip.die_mm2) {
+        return Err(Rejection::Thermal);
+    }
+    let n_chips = chips_per_lane * sp.lanes;
+    let wall = server_wall_power(chip.tdp_w * n_chips as f64, sp);
+    let capex = server_capex(&space.tech, sp, chip, n_chips, wall);
+    Ok(ServerDesign {
+        chiplet: chip.clone(),
+        chips_per_lane,
+        lanes: sp.lanes,
+        server_power_w: wall,
+        server_capex: capex,
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn full_sweep_produces_thousands() {
+        let space = ExploreSpace::default();
+        let (designs, stats) = phase1(&space);
+        assert_eq!(stats.swept, space.n_points());
+        assert!(
+            designs.len() > 5_000,
+            "paper: 'tens of thousands of feasible designs'; got {}",
+            designs.len()
+        );
+        assert_eq!(
+            stats.feasible
+                + stats.rejected_geometry
+                + stats.rejected_silicon
+                + stats.rejected_power
+                + stats.rejected_thermal,
+            stats.swept
+        );
+    }
+
+    #[test]
+    fn coarse_sweep_is_smaller_but_nonempty() {
+        let (designs, _) = phase1(&ExploreSpace::coarse());
+        assert!(designs.len() > 300);
+        assert!(designs.len() < 15_000);
+    }
+
+    #[test]
+    fn all_feasible_designs_respect_envelope() {
+        let space = ExploreSpace::coarse();
+        let (designs, _) = phase1(&space);
+        for s in &designs {
+            let lane_silicon = s.chiplet.die_mm2 * s.chips_per_lane as f64;
+            assert!(lane_silicon <= space.server.max_silicon_per_lane_mm2);
+            let lane_power = s.chiplet.tdp_w * s.chips_per_lane as f64;
+            assert!(lane_power <= space.server.max_power_per_lane_w);
+            assert!(s.chiplet.power_density() <= space.tech.max_power_density_w_mm2);
+            assert!(s.server_capex > 0.0);
+            assert!(s.server_power_w > 0.0);
+        }
+    }
+
+    #[test]
+    fn big_hot_dies_get_rejected() {
+        let space = ExploreSpace::default();
+        let (designs, stats) = phase1(&space);
+        // Some thermal/power rejections must occur (big dies, many per lane)
+        assert!(stats.rejected_power + stats.rejected_thermal + stats.rejected_silicon > 0);
+        // And no 800 mm² die should appear at 20 chips/lane (16000 mm²)
+        assert!(!designs
+            .iter()
+            .any(|s| s.chiplet.die_mm2 >= 790.0 && s.chips_per_lane == 20));
+    }
+}

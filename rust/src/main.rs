@@ -1,0 +1,154 @@
+//! `ccloud` — the Chiplet Cloud design tool and serving leader.
+//!
+//! Subcommands:
+//! * `explore`                — Phase-1 hardware exploration summary
+//! * `optimize --model NAME`  — full two-phase DSE for one model
+//! * `table2` / `fig7`..`fig15` — regenerate a paper table/figure
+//! * `serve`                  — load AOT artifacts and serve a demo stream
+//! * `ccmem`                  — run the CC-MEM cycle simulator validations
+//!
+//! `--full` switches from the coarse sweep (default, seconds) to the
+//! paper-scale sweep (Table-1 ranges; minutes on one core).
+//! `--out results` writes each table as CSV.
+
+use std::path::PathBuf;
+use std::time::Duration;
+
+use chiplet_cloud::config::hardware::ExploreSpace;
+use chiplet_cloud::config::ModelSpec;
+use chiplet_cloud::coordinator::{Coordinator, CoordinatorConfig};
+use chiplet_cloud::report::{self, Ctx};
+use chiplet_cloud::util::cli::Args;
+use chiplet_cloud::util::rng::Rng;
+
+fn usage() -> ! {
+    eprintln!(
+        "usage: ccloud <cmd> [--full] [--out DIR] [--model NAME] ...\n\
+         cmds: explore optimize table2 fig7..fig15 ablate serve ccmem"
+    );
+    std::process::exit(2)
+}
+
+fn main() -> anyhow::Result<()> {
+    let args = Args::from_env();
+    let cmd = args.positional.first().cloned().unwrap_or_else(|| usage());
+    let out_dir: Option<PathBuf> = args.get("out").map(PathBuf::from);
+    let out = out_dir.as_deref();
+    let space = if args.has("full") { ExploreSpace::default() } else { ExploreSpace::coarse() };
+
+    match cmd.as_str() {
+        "explore" => {
+            let (servers, stats) = chiplet_cloud::explore::phase1(&space);
+            println!(
+                "phase 1: swept {} points -> {} feasible servers \
+                 (rejected: geometry {}, silicon/lane {}, power {}, thermal {})",
+                stats.swept,
+                servers.len(),
+                stats.rejected_geometry,
+                stats.rejected_silicon,
+                stats.rejected_power,
+                stats.rejected_thermal
+            );
+        }
+        "optimize" => {
+            let name = args.get("model").unwrap_or("gpt3");
+            let model = ModelSpec::by_name(name)
+                .ok_or_else(|| anyhow::anyhow!("unknown model {name}"))?;
+            let ctx = Ctx::new(space);
+            let t = report::table2(&ctx, &[model], out);
+            print!("{}", t.render());
+        }
+        "table2" => {
+            let ctx = Ctx::new(space);
+            let t = report::table2(&ctx, &ModelSpec::paper_models(), out);
+            print!("{}", t.render());
+        }
+        "fig7" => print!("{}", report::fig7(&Ctx::new(space), out).render()),
+        "fig8" => {
+            let ctxs = [1024usize, 2048, 4096];
+            let batches = [1usize, 4, 16, 64, 256, 1024];
+            print!("{}", report::fig8(&Ctx::new(space), &ctxs, &batches, out).render())
+        }
+        "fig9" => print!("{}", report::fig9(&Ctx::new(space), &[16, 64, 256], out).render()),
+        "fig10" => print!("{}", report::fig10(&Ctx::new(space), out).render()),
+        "fig11" => print!("{}", report::fig11(&Ctx::new(space), out).render()),
+        "fig12" => print!("{}", report::fig12(&Ctx::new(space), out).render()),
+        "fig13" => print!("{}", report::fig13(&Ctx::new(space), out).render()),
+        "fig14" => print!("{}", report::fig14(&Ctx::new(space), out).render()),
+        "fig15" => print!("{}", report::fig15(out).render()),
+        "ablate" => {
+            let name = args.get("model").unwrap_or("gpt3");
+            let model = ModelSpec::by_name(name)
+                .ok_or_else(|| anyhow::anyhow!("unknown model {name}"))?;
+            let t = chiplet_cloud::evaluate::ablation::ablation_table(
+                &space,
+                &model,
+                args.get_or("ctx", 2048),
+                args.get_or("batch", 256),
+            );
+            print!("{}", t.render());
+        }
+        "serve" => serve(&args)?,
+        "ccmem" => ccmem(),
+        _ => usage(),
+    }
+    Ok(())
+}
+
+/// Demo serving loop on the AOT artifacts (see examples/serve_llm.rs for
+/// the full end-to-end driver).
+fn serve(args: &Args) -> anyhow::Result<()> {
+    let dir = args.get("artifacts").unwrap_or("artifacts").to_string();
+    let model = args.get("model").unwrap_or("cc-tiny").to_string();
+    let requests: usize = args.get_or("requests", 8);
+    let tokens: usize = args.get_or("tokens", 8);
+    println!("loading {model} from {dir} ...");
+    let coord = Coordinator::start(
+        &dir,
+        &model,
+        CoordinatorConfig {
+            max_wait: Duration::from_millis(30),
+            replicas: args.get_or("replicas", 1),
+        },
+    )?;
+    let mut rng = Rng::new(42);
+    for _ in 0..requests {
+        let len = 4 + rng.below(12);
+        let prompt: Vec<i32> = (0..len).map(|_| rng.below(400) as i32 + 1).collect();
+        coord.submit(prompt, tokens);
+    }
+    let metrics = coord.metrics.clone();
+    let responses = coord.shutdown()?;
+    println!("served {} requests", responses.len());
+    println!("{}", metrics.summary().render());
+    Ok(())
+}
+
+/// CC-MEM simulator validation runs (saturation, conflicts, sparse rates).
+fn ccmem() {
+    use chiplet_cloud::ccmem::bank::BurstMode;
+    use chiplet_cloud::ccmem::traffic::{run_gemm_stream, run_random};
+    use chiplet_cloud::ccmem::CcMemConfig;
+    let cfg = CcMemConfig::small();
+    let dense = run_gemm_stream(&cfg, 64 << 10, BurstMode::Dense);
+    println!(
+        "GEMM stream: {} cycles, core BW util {:.1}%, conflicts {:.2}%",
+        dense.cycles,
+        dense.core_bw_utilization * 100.0,
+        dense.conflict_rate * 100.0
+    );
+    let s60 = run_gemm_stream(&cfg, 64 << 10, BurstMode::Sparse { nnz_per_tile: 102 });
+    let s10 = run_gemm_stream(&cfg, 64 << 10, BurstMode::Sparse { nnz_per_tile: 230 });
+    println!(
+        "sparse 60%: {} cycles (dense-rate: {}), sparse 10%: {} cycles (input-limited)",
+        s60.cycles,
+        s60.cycles == dense.cycles,
+        s10.cycles
+    );
+    let rnd = run_random(&cfg, 20_000, 7);
+    println!(
+        "random traffic: BW util {:.1}%, conflict rate {:.2}%",
+        rnd.core_bw_utilization * 100.0,
+        rnd.conflict_rate * 100.0
+    );
+}

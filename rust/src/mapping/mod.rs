@@ -1,0 +1,45 @@
+//! Software mapping: tensor parallelism × pipeline parallelism ×
+//! micro-batching (paper §4.2 "Software Optimizer").
+
+pub mod optimizer;
+pub mod partition;
+
+pub use optimizer::{candidate_mappings, optimize_mapping};
+pub use partition::ChipProfile;
+
+/// One parallel mapping of a model onto a chiplet system.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct Mapping {
+    /// Tensor-parallel width (chips per pipeline stage, 2D weight-stationary
+    /// layout within the stage per Pope et al. [37]).
+    pub tp: usize,
+    /// Pipeline-parallel depth (number of stages).
+    pub pp: usize,
+    /// Micro-batch size.
+    pub microbatch: usize,
+}
+
+impl Mapping {
+    /// Total chips used by the mapping.
+    pub fn n_chips(&self) -> usize {
+        self.tp * self.pp
+    }
+
+    /// Number of in-flight micro-batches for a batch size.
+    pub fn n_micro(&self, batch: usize) -> usize {
+        (batch + self.microbatch - 1) / self.microbatch
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn chip_and_micro_counts() {
+        let m = Mapping { tp: 136, pp: 96, microbatch: 2 };
+        assert_eq!(m.n_chips(), 13_056); // Table 2 GPT-3 system
+        assert_eq!(m.n_micro(256), 128);
+        assert_eq!(m.n_micro(255), 128); // ceil
+    }
+}

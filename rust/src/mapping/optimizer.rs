@@ -1,0 +1,153 @@
+//! Mapping search (paper §4.2 "Software Optimizer").
+//!
+//! For a server design and workload, enumerate (tp, pp, µbatch) candidates:
+//! the memory capacity fixes the minimum chip count, whole servers quantize
+//! it, pipeline depth ranges over the divisors of the layer count, and the
+//! micro-batch over powers of two. The caller scores candidates (Phase 2
+//! scores by TCO/Token; a latency-focused user can score by token period).
+
+use crate::arch::ServerDesign;
+use crate::config::Workload;
+use crate::mapping::Mapping;
+use crate::perf::{simulate, DecodePerf};
+
+/// Divisors of `n`, ascending.
+pub fn divisors(n: usize) -> Vec<usize> {
+    let mut out = Vec::new();
+    for d in 1..=n {
+        if d * d > n {
+            break;
+        }
+        if n % d == 0 {
+            out.push(d);
+            if d != n / d {
+                out.push(n / d);
+            }
+        }
+    }
+    out.sort_unstable();
+    out
+}
+
+/// Minimum chips needed to hold the workload (weights + KV + activations).
+pub fn min_chips(server: &ServerDesign, w: &Workload) -> usize {
+    let per_chip = server.chiplet.sram_mb * 1e6 * 0.98;
+    (w.resident_bytes() / per_chip).ceil().max(1.0) as usize
+}
+
+/// Enumerate candidate mappings for a server/workload pair.
+///
+/// Chip counts are quantized to whole servers (scale 1×, 2×, 4× beyond the
+/// memory minimum — extra replicas trade CapEx for pipeline throughput).
+pub fn candidate_mappings(server: &ServerDesign, w: &Workload) -> Vec<Mapping> {
+    let cps = server.chips().max(1);
+    let n_min = min_chips(server, w);
+    let servers_min = n_min.div_ceil(cps);
+    let mut out = Vec::new();
+    for scale in [1usize, 2, 4] {
+        let n = servers_min * scale * cps;
+        for &pp in &divisors(w.model.n_layers) {
+            if pp > n {
+                continue;
+            }
+            let tp = n / pp;
+            if tp == 0 || tp * pp < n_min {
+                continue;
+            }
+            let mut ub = 1usize;
+            while ub <= w.batch {
+                out.push(Mapping { tp, pp, microbatch: ub });
+                ub *= 2;
+            }
+        }
+    }
+    out
+}
+
+/// Best mapping for a server/workload under a score function
+/// (lower = better). Returns the mapping, its simulated performance and
+/// score.
+pub fn optimize_mapping<F>(
+    server: &ServerDesign,
+    w: &Workload,
+    score: F,
+) -> Option<(Mapping, DecodePerf, f64)>
+where
+    F: Fn(&Mapping, &DecodePerf) -> f64,
+{
+    let mut best: Option<(Mapping, DecodePerf, f64)> = None;
+    for mapping in candidate_mappings(server, w) {
+        if let Some(perf) = simulate(server, w, &mapping) {
+            let s = score(&mapping, &perf);
+            if best.as_ref().map(|(_, _, bs)| s < *bs).unwrap_or(true) {
+                best = Some((mapping, perf, s));
+            }
+        }
+    }
+    best
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::arch::ChipletDesign;
+    use crate::config::ModelSpec;
+
+    fn server() -> ServerDesign {
+        ServerDesign {
+            chiplet: ChipletDesign {
+                die_mm2: 140.0,
+                sram_mb: 225.8,
+                tflops: 5.5,
+                mem_bw_gbps: 2750.0,
+                n_bank_groups: 172,
+                io_link_gbps: 25.0,
+                io_links: 4,
+                tdp_w: 14.1,
+            },
+            chips_per_lane: 17,
+            lanes: 8,
+            server_power_w: 2020.0,
+            server_capex: 5300.0,
+        }
+    }
+
+    #[test]
+    fn divisors_of_96() {
+        assert_eq!(divisors(96), vec![1, 2, 3, 4, 6, 8, 12, 16, 24, 32, 48, 96]);
+        assert_eq!(divisors(1), vec![1]);
+    }
+
+    #[test]
+    fn min_chips_covers_memory() {
+        let w = Workload::new(ModelSpec::gpt3(), 2048, 256);
+        let n = min_chips(&server(), &w);
+        // weights 350 GB + KV 2.47 TB over 221 MB/chip ⇒ ~12.8k chips
+        assert!((11_000..16_000).contains(&n), "n={n}");
+    }
+
+    #[test]
+    fn candidates_fit_memory_and_layers() {
+        let w = Workload::new(ModelSpec::gpt3(), 2048, 64);
+        let s = server();
+        let cands = candidate_mappings(&s, &w);
+        assert!(!cands.is_empty());
+        let n_min = min_chips(&s, &w);
+        for c in &cands {
+            assert!(c.n_chips() >= n_min);
+            assert!(c.pp <= w.model.n_layers);
+            assert!(c.microbatch <= w.batch);
+        }
+    }
+
+    #[test]
+    fn optimizer_prefers_deep_pipelines_for_throughput() {
+        let w = Workload::new(ModelSpec::gpt3(), 2048, 256);
+        let (mapping, perf, _) =
+            optimize_mapping(&server(), &w, |_, p| 1.0 / p.tokens_per_s).expect("feasible");
+        // Fig. 9: the throughput-optimal pipeline depth is large (≈ batch,
+        // bounded by layers = 96)
+        assert!(mapping.pp >= 32, "pp={}", mapping.pp);
+        assert!(perf.tokens_per_s > 0.0);
+    }
+}

@@ -1,0 +1,122 @@
+//! Model partitioning: what one chip holds and computes under a mapping
+//! (the paper's "chiplet memory profile" and "chiplet compute profile").
+
+use crate::config::{ModelSpec, Workload};
+use crate::mapping::Mapping;
+
+/// Per-chip memory and compute profile for a (workload, mapping) pair.
+#[derive(Clone, Debug)]
+pub struct ChipProfile {
+    /// Weight bytes resident on the chip.
+    pub weight_bytes: f64,
+    /// KV-cache bytes resident on the chip (full batch).
+    pub kv_bytes: f64,
+    /// Activation working-set bytes (double-buffered boundaries).
+    pub act_bytes: f64,
+    /// FLOPs this chip performs per layer per micro-batch decode step.
+    pub flops_per_layer_ub: f64,
+    /// Weight bytes this chip streams per layer per micro-batch step.
+    pub weight_read_per_layer_ub: f64,
+    /// KV bytes this chip streams per layer per micro-batch step.
+    pub kv_read_per_layer_ub: f64,
+    /// Layers per pipeline stage (ceil).
+    pub layers_per_stage: usize,
+}
+
+/// Parameters per decoder layer (excluding embeddings).
+pub fn params_per_layer(m: &ModelSpec) -> f64 {
+    (m.n_params() - (m.vocab as f64) * m.d_model as f64) / m.n_layers as f64
+}
+
+/// Build the per-chip profile. The model's layers are split across `pp`
+/// stages; within a stage, weights and KV heads are sharded across `tp`
+/// chips (2D weight-stationary for the FC layers [37]).
+pub fn profile(w: &Workload, mapping: &Mapping) -> ChipProfile {
+    let m = &w.model;
+    let n = mapping.n_chips() as f64;
+    let layers_per_stage = m.n_layers.div_ceil(mapping.pp);
+    let ub = mapping.microbatch as f64;
+
+    let p_layer = params_per_layer(m);
+    let weight_bytes = w.stored_weight_bytes() / n;
+    let kv_bytes = w.kv_bytes() / n;
+    // boundary activations: µb × d in and out, double buffered, per resident layer
+    let act_bytes =
+        4.0 * ub * m.d_model as f64 * m.bytes_per_param * layers_per_stage as f64;
+
+    // Per layer, per micro-batch decode step, on ONE of the tp chips:
+    let flops_fc = 2.0 * ub * p_layer / mapping.tp as f64;
+    let kv_layer_per_seq =
+        2.0 * w.ctx as f64 * (m.kv_heads() * m.d_head) as f64 * m.bytes_per_param;
+    let flops_attn = 2.0 * ub * 2.0 * w.ctx as f64 * m.d_attn() as f64 / mapping.tp as f64;
+    ChipProfile {
+        weight_bytes,
+        kv_bytes,
+        act_bytes,
+        flops_per_layer_ub: flops_fc + flops_attn,
+        weight_read_per_layer_ub: p_layer * m.bytes_per_param * w.weight_read_scale
+            / mapping.tp as f64,
+        kv_read_per_layer_ub: ub * kv_layer_per_seq / mapping.tp as f64,
+        layers_per_stage,
+    }
+}
+
+impl ChipProfile {
+    /// Total resident bytes on the chip.
+    pub fn resident_bytes(&self) -> f64 {
+        self.weight_bytes + self.kv_bytes + self.act_bytes
+    }
+
+    /// Does the profile fit a chip with `sram_mb` of CC-MEM? A small margin
+    /// is reserved for CSRs, index memory and scheduling slack.
+    pub fn fits(&self, sram_mb: f64) -> bool {
+        self.resident_bytes() <= sram_mb * 1e6 * 0.98
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::ModelSpec;
+
+    fn gpt3_wl() -> Workload {
+        Workload::new(ModelSpec::gpt3(), 2048, 256)
+    }
+
+    #[test]
+    fn table2_gpt3_fits_its_chip() {
+        // Table 2: GPT-3 on 13,056 chips × 225.8 MB.
+        let mapping = Mapping { tp: 136, pp: 96, microbatch: 2 };
+        let p = profile(&gpt3_wl(), &mapping);
+        assert!(p.fits(225.8), "resident={} MB", p.resident_bytes() / 1e6);
+        // weights ≈ 350 GB / 13056 ≈ 26.8 MB per chip
+        assert!((p.weight_bytes / 1e6 - 26.8).abs() < 1.5);
+        // KV ≈ 2.47 TB / 13056 ≈ 189 MB per chip — KV dominates at batch 256
+        assert!(p.kv_bytes > p.weight_bytes);
+    }
+
+    #[test]
+    fn memory_shrinks_with_more_chips() {
+        let w = gpt3_wl();
+        let small = profile(&w, &Mapping { tp: 64, pp: 96, microbatch: 2 });
+        let large = profile(&w, &Mapping { tp: 256, pp: 96, microbatch: 2 });
+        assert!(large.resident_bytes() < small.resident_bytes());
+    }
+
+    #[test]
+    fn flops_scale_with_microbatch() {
+        let w = gpt3_wl();
+        let m1 = profile(&w, &Mapping { tp: 136, pp: 96, microbatch: 1 });
+        let m4 = profile(&w, &Mapping { tp: 136, pp: 96, microbatch: 4 });
+        assert!((m4.flops_per_layer_ub / m1.flops_per_layer_ub - 4.0).abs() < 1e-9);
+        // but the weight traffic does not (weight reuse across the µbatch)
+        assert_eq!(m4.weight_read_per_layer_ub, m1.weight_read_per_layer_ub);
+    }
+
+    #[test]
+    fn uneven_pp_uses_ceil() {
+        let w = gpt3_wl(); // 96 layers
+        let p = profile(&w, &Mapping { tp: 8, pp: 36, microbatch: 1 });
+        assert_eq!(p.layers_per_stage, 3); // ceil(96/36)
+    }
+}

@@ -1,0 +1,85 @@
+//! Collective communication model (paper §4.2).
+//!
+//! An all-reduce of `D` bytes across `N` nodes decomposes into one
+//! reduce-scatter plus one all-gather, each costing
+//! `T = (N−1)·(D/N)/B + T_init` where `B` is the bandwidth of the slowest
+//! link (ring algorithm — the reason board-level organic-substrate links
+//! suffice: the in-package fast links would not help the slowest hop,
+//! §3.3).
+//!
+//! For the feed-forward layers the 2D weight-stationary layout [37] reduces
+//! the communicated activation volume to `O(1/√N)` of the 1D layout.
+
+/// Link initialization/synchronization latency, s (on-PCB torus hop).
+pub const T_INIT: f64 = 1.0e-7;
+
+/// One reduce-scatter or all-gather of `d_bytes` across `n` nodes at
+/// `link_gbps` per link.
+pub fn phase_latency(d_bytes: f64, n: usize, link_gbps: f64) -> f64 {
+    if n <= 1 {
+        return 0.0;
+    }
+    let nf = n as f64;
+    (nf - 1.0) * (d_bytes / nf) / (link_gbps * 1e9) + T_INIT
+}
+
+/// Full all-reduce (reduce-scatter + all-gather).
+pub fn allreduce_latency(d_bytes: f64, n: usize, link_gbps: f64) -> f64 {
+    2.0 * phase_latency(d_bytes, n, link_gbps)
+}
+
+/// All-reduce under the 2D weight-stationary layout: the activation volume
+/// each ring carries shrinks by √N versus 1D tensor parallelism.
+pub fn allreduce_2d_ws(d_bytes: f64, n: usize, link_gbps: f64) -> f64 {
+    allreduce_latency(d_bytes / (n as f64).sqrt(), n, link_gbps)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn single_node_is_free() {
+        assert_eq!(allreduce_latency(1e6, 1, 25.0), 0.0);
+    }
+
+    #[test]
+    fn matches_paper_formula() {
+        // T_rs = (N-1) * (D/N) / B + T_init, N=4, D=1 MB, B=25 GB/s
+        let t = phase_latency(1e6, 4, 25.0);
+        let expect = 3.0 * 0.25e6 / 25e9 + T_INIT;
+        assert!((t - expect).abs() < 1e-15);
+    }
+
+    /// §2.3.2: with 2D weight-stationary, FFN communication scales
+    /// O(1/√n) — quadrupling the chips halves the time (for bandwidth-
+    /// dominated sizes).
+    #[test]
+    fn two_d_ws_scaling() {
+        let d = 64e6; // large buffer so T_init is negligible
+        let t4 = allreduce_2d_ws(d, 4, 25.0);
+        let t16 = allreduce_2d_ws(d, 16, 25.0);
+        // bandwidth term: (N-1)/N · D/√N / B ⇒ ratio ≈ (3/4·1/2) / (15/16·1/4) = 1.6
+        let ratio = t4 / t16;
+        assert!((1.4..=1.8).contains(&ratio), "ratio={ratio}");
+    }
+
+    #[test]
+    fn latency_floor_at_tiny_sizes() {
+        // tiny messages are dominated by 2·T_init per phase pair
+        let t = allreduce_latency(8.0, 64, 25.0);
+        assert!(t >= 2.0 * T_INIT);
+        assert!(t < 3.0 * T_INIT);
+    }
+
+    #[test]
+    fn monotone_in_nodes_for_fixed_total() {
+        // For fixed D the per-node share shrinks but (N-1) grows: the
+        // bandwidth term approaches D/B asymptotically from below.
+        let d = 1e6;
+        let t2 = allreduce_latency(d, 2, 25.0);
+        let t64 = allreduce_latency(d, 64, 25.0);
+        assert!(t64 > t2);
+        assert!(t64 < 2.0 * (d / 25e9) + 3.0 * T_INIT);
+    }
+}

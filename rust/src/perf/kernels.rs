@@ -1,0 +1,91 @@
+//! Roofline kernel latencies on one chiplet.
+//!
+//! A decode-step GEMM with the weights resident in CC-MEM is limited by
+//! `max(flops / peak_flops, bytes / mem_bw)`; the CC-MEM burst engine keeps
+//! the port at near-peak rate for the highly structured GEMM access pattern
+//! (validated by [`crate::ccmem::traffic`]), so no extra derating is applied
+//! to the memory term. Elementwise work (norms, activations, embeddings)
+//! rides the SIMD cores and is folded into a small epilogue factor.
+
+use crate::arch::ChipletDesign;
+
+/// Fraction of peak MACs achievable on the GEMM body (systolic/SIMD
+/// efficiency at decode tile shapes).
+pub const MAC_EFFICIENCY: f64 = 0.9;
+
+/// Epilogue overhead factor for elementwise ops (layernorm, activation,
+/// residual) relative to the GEMM time.
+pub const EPILOGUE_FACTOR: f64 = 1.03;
+
+/// Latency (s) of a kernel with the given FLOPs and CC-MEM traffic on one
+/// chip. Compute and memory streams overlap (double-buffered bursts), so
+/// the kernel sits on the roofline.
+pub fn kernel_latency(chip: &ChipletDesign, flops: f64, bytes: f64) -> f64 {
+    let t_compute = flops / (chip.tflops * 1e12 * MAC_EFFICIENCY);
+    let t_memory = bytes / (chip.mem_bw_gbps * 1e9);
+    t_compute.max(t_memory) * EPILOGUE_FACTOR
+}
+
+/// Compute-side utilization implied by a kernel (1.0 = compute-bound).
+pub fn kernel_compute_util(chip: &ChipletDesign, flops: f64, bytes: f64) -> f64 {
+    let t = kernel_latency(chip, flops, bytes);
+    (flops / (chip.tflops * 1e12)) / t
+}
+
+/// The micro-batch at which a chip's FC kernels transition from
+/// memory-bound to compute-bound: `µb* = bytes_per_param · F / (2B)`.
+pub fn balanced_microbatch(chip: &ChipletDesign, bytes_per_param: f64) -> f64 {
+    bytes_per_param * chip.tflops * 1e12 / (2.0 * chip.mem_bw_gbps * 1e9 / MAC_EFFICIENCY)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn chip() -> ChipletDesign {
+        ChipletDesign {
+            die_mm2: 140.0,
+            sram_mb: 225.8,
+            tflops: 5.5,
+            mem_bw_gbps: 2750.0,
+            n_bank_groups: 172,
+            io_link_gbps: 25.0,
+            io_links: 4,
+            tdp_w: 14.1,
+        }
+    }
+
+    #[test]
+    fn memory_bound_small_microbatch() {
+        let c = chip();
+        // µb=1 FC shard: OI = 1 FLOP/byte < balance 2 ⇒ memory-bound
+        let bytes = 26.6e6; // ~weights of one GPT-3 layer / 136 chips
+        let flops = bytes; // 2·µb·P/tp with µb=1, fp16
+        let t = kernel_latency(&c, flops, bytes);
+        assert!((t - bytes / 2.75e12 * EPILOGUE_FACTOR).abs() / t < 1e-9);
+        assert!(kernel_compute_util(&c, flops, bytes) < 0.6);
+    }
+
+    #[test]
+    fn compute_bound_large_microbatch() {
+        let c = chip();
+        let bytes = 26.6e6;
+        let flops = bytes * 32.0; // µb = 32
+        let util = kernel_compute_util(&c, flops, bytes);
+        assert!(util > 0.85, "util={util}");
+    }
+
+    #[test]
+    fn balance_point_matches_table2_intuition() {
+        // bw_ratio 0.5 B/FLOP chip with fp16 weights balances near µb=2
+        let ub = balanced_microbatch(&chip(), 2.0);
+        assert!((1.5..=2.5).contains(&ub), "ub={ub}");
+    }
+
+    #[test]
+    fn latency_monotone() {
+        let c = chip();
+        assert!(kernel_latency(&c, 2e9, 1e6) > kernel_latency(&c, 1e9, 1e6));
+        assert!(kernel_latency(&c, 1e6, 2e9) > kernel_latency(&c, 1e6, 1e9));
+    }
+}

@@ -1,0 +1,16 @@
+//! Analytical inference simulation (paper §4.2 "Inference Simulation").
+//!
+//! * [`kernels`] — roofline latency of the per-chip compute/memory kernels.
+//! * [`allreduce`] — collective latency `T = (N−1)·(D/N)/B + T_init`, with
+//!   the 2D weight-stationary `O(1/√n)` communication scaling [37].
+//! * [`pipeline`] — the pipeline/micro-batch schedule
+//!   `l_all = l_prefill + (t−1)·max(l_mb, n·l_s)` (paper Fig. 6).
+//! * [`simulator`] — end-to-end: per-token latency, throughput, utilization
+//!   for a (server, workload, mapping) triple.
+
+pub mod allreduce;
+pub mod kernels;
+pub mod pipeline;
+pub mod simulator;
+
+pub use simulator::{simulate, DecodePerf};

@@ -1,0 +1,79 @@
+//! Pipeline-parallel micro-batch schedule (paper §4.2, Fig. 6).
+//!
+//! With micro-batch latency `l_mb` (one micro-batch through all stages),
+//! stage latency `l_s`, and `n` micro-batches per batch:
+//!
+//! * per-token generation latency = `max(l_mb, n·l_s)` — either the
+//!   pipeline is deep enough that the batch refill dominates (`n·l_s`), or
+//!   a single micro-batch's trip dominates (`l_mb`);
+//! * `l_all = l_prefill + (t−1)·max(l_mb, n·l_s)` for `t` tokens;
+//! * throughput ≈ `N / max(l_mb, n·l_s)`.
+
+/// The per-generated-token period of the pipeline.
+pub fn token_period(l_mb: f64, l_s: f64, n_micro: usize) -> f64 {
+    l_mb.max(n_micro as f64 * l_s)
+}
+
+/// End-to-end latency to generate `t` tokens after a prefill.
+pub fn total_latency(l_prefill: f64, l_mb: f64, l_s: f64, n_micro: usize, t: usize) -> f64 {
+    l_prefill + (t.saturating_sub(1)) as f64 * token_period(l_mb, l_s, n_micro)
+}
+
+/// Sustained generation throughput (tokens/s) for batch size `batch`.
+pub fn throughput(batch: usize, l_mb: f64, l_s: f64, n_micro: usize) -> f64 {
+    batch as f64 / token_period(l_mb, l_s, n_micro)
+}
+
+/// Pipeline bubble fraction: how much of the steady-state period the
+/// stages sit idle. Zero when `n·l_s ≥ l_mb` (the schedule of Fig. 6(b)).
+pub fn bubble_fraction(l_mb: f64, l_s: f64, n_micro: usize) -> f64 {
+    let period = token_period(l_mb, l_s, n_micro);
+    let busy = (n_micro as f64 * l_s).min(period);
+    1.0 - busy / period
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn period_is_max_of_both_constraints() {
+        assert_eq!(token_period(1.0, 0.1, 4), 1.0); // l_mb-bound (Fig. 6a)
+        assert_eq!(token_period(1.0, 0.1, 20), 2.0); // n·l_s-bound (Fig. 6b)
+    }
+
+    /// §4.2: with `l_s = l_mb / p`, throughput is maximized when both n and
+    /// p grow; at n ≈ p the two constraints meet and utilization peaks —
+    /// the Fig. 9 finding that stages ≈ batch is optimal.
+    #[test]
+    fn optimum_at_n_equal_p() {
+        let l_unit = 1.0; // l_mb for p stages: l_mb = l_unit (independent of p)
+        let batch = 64;
+        let mut best_p = 0;
+        let mut best_thr = 0.0;
+        for p in [1usize, 2, 4, 8, 16, 32, 64] {
+            let l_s = l_unit / p as f64;
+            // µb = 1 ⇒ n = batch
+            let thr = throughput(batch, l_unit, l_s, batch);
+            if thr > best_thr {
+                best_thr = thr;
+                best_p = p;
+            }
+        }
+        assert_eq!(best_p, 64, "pipeline depth should match batch");
+    }
+
+    #[test]
+    fn no_bubbles_when_saturated() {
+        assert_eq!(bubble_fraction(1.0, 0.1, 10), 0.0);
+        assert!(bubble_fraction(1.0, 0.1, 2) > 0.7);
+    }
+
+    #[test]
+    fn total_latency_includes_prefill_once() {
+        let l = total_latency(3.0, 1.0, 0.2, 4, 11);
+        assert!((l - (3.0 + 10.0 * 1.0)).abs() < 1e-12);
+        // one token: prefill only
+        assert_eq!(total_latency(3.0, 1.0, 0.2, 4, 1), 3.0);
+    }
+}

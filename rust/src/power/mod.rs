@@ -1,0 +1,111 @@
+//! Power model (paper §4.1 "Thermal Power Evaluation").
+//!
+//! The paper normalizes the A100's TDP to W/FLOPS (1.3 W/TFLOPS, Table 1) —
+//! a deliberately conservative estimate since a large share of GPU power is
+//! DRAM, which Chiplet Cloud does not have. We add explicit CC-MEM access
+//! energy (SRAM + crossbar) and chip-to-chip link energy so the OpEx side of
+//! TCO responds to the memory-system design, then enforce the ≤1 W/mm²
+//! density cap from Table 1.
+
+use crate::arch::{ChipletDesign, ServerDesign};
+use crate::config::hardware::{ServerParams, TechParams};
+
+/// Peak (TDP) power of a chiplet, W.
+///
+/// `bw_gbps` is the provisioned CC-MEM bandwidth; at peak the burst engines
+/// stream at full rate and every byte crosses the crossbar once.
+pub fn chip_tdp(tech: &TechParams, tflops: f64, bw_gbps: f64) -> f64 {
+    let compute = tech.compute_w_per_tflops * tflops;
+    let sram = bw_gbps * tech.sram_pj_per_byte * 1e-3; // GB/s · pJ/B = mW·1e3
+    let xbar = bw_gbps * tech.xbar_pj_per_byte * 1e-3;
+    let io = (tech.io_link_gbps * tech.io_links as f64) * tech.io_pj_per_byte * 1e-3;
+    compute + sram + xbar + io
+}
+
+/// Average power of a chiplet at a given utilization of compute and memory.
+///
+/// Leakage + clocking floor is modelled as 15% of TDP (always-on), the rest
+/// scales with the utilization of the respective resource.
+pub fn chip_avg_power(chip: &ChipletDesign, tech: &TechParams, compute_util: f64, mem_util: f64) -> f64 {
+    let compute = tech.compute_w_per_tflops * chip.tflops;
+    let sram = chip.mem_bw_gbps * tech.sram_pj_per_byte * 1e-3;
+    let xbar = chip.mem_bw_gbps * tech.xbar_pj_per_byte * 1e-3;
+    let io = chip.io_bw_gbps() * tech.io_pj_per_byte * 1e-3;
+    let dynamic = compute * compute_util + (sram + xbar) * mem_util + io * mem_util;
+    0.15 * chip.tdp_w + 0.85 * dynamic.min(chip.tdp_w)
+}
+
+/// Peak wall power of a server: chip TDPs divided by the PSU and DC-DC
+/// conversion efficiencies, plus fans and the controller/NIC.
+pub fn server_wall_power(chips_tdp_w: f64, sp: &ServerParams) -> f64 {
+    let fans = sp.lanes as f64 * 12.0; // ~12 W per lane of 1U fans
+    let controller = 25.0;
+    (chips_tdp_w + fans + controller) / (sp.psu_efficiency * sp.dcdc_efficiency)
+}
+
+/// Average wall power of a server at the given utilizations.
+pub fn server_avg_power(
+    server: &ServerDesign,
+    tech: &TechParams,
+    sp: &ServerParams,
+    compute_util: f64,
+    mem_util: f64,
+) -> f64 {
+    let per_chip = chip_avg_power(&server.chiplet, tech, compute_util, mem_util);
+    server_wall_power(per_chip * server.chips() as f64, sp)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn gpt3_chip() -> ChipletDesign {
+        ChipletDesign {
+            die_mm2: 140.0,
+            sram_mb: 225.8,
+            tflops: 5.5,
+            mem_bw_gbps: 2750.0,
+            n_bank_groups: 172,
+            io_link_gbps: 25.0,
+            io_links: 4,
+            tdp_w: 0.0,
+        }
+    }
+
+    #[test]
+    fn tdp_components_reasonable() {
+        let t = TechParams::default();
+        let tdp = chip_tdp(&t, 5.5, 2750.0);
+        // compute 7.15 W + sram 4.4 W + xbar 1.65 W + io ~0.94 W ≈ 14.1 W
+        assert!((tdp - 14.1).abs() < 1.0, "tdp={tdp}");
+        // Table-1 lane budget: 17 such chips/lane ≈ 240 W < 250 W ✓
+        assert!(tdp * 17.0 < 250.0);
+    }
+
+    #[test]
+    fn density_cap_binding_for_compute_heavy() {
+        let t = TechParams::default();
+        // 100 TFLOPS in 100 mm² would be 1.3 W/mm² — above the cap.
+        let tdp = chip_tdp(&t, 100.0, 1000.0);
+        assert!(tdp / 100.0 > t.max_power_density_w_mm2);
+    }
+
+    #[test]
+    fn avg_power_below_tdp_and_floor() {
+        let t = TechParams::default();
+        let mut c = gpt3_chip();
+        c.tdp_w = chip_tdp(&t, c.tflops, c.mem_bw_gbps);
+        let idle = chip_avg_power(&c, &t, 0.0, 0.0);
+        let full = chip_avg_power(&c, &t, 1.0, 1.0);
+        assert!(idle > 0.0 && idle < 0.25 * c.tdp_w);
+        assert!(full <= c.tdp_w * 1.0 + 1e-9);
+        assert!(full > idle);
+    }
+
+    #[test]
+    fn psu_losses_increase_wall_power() {
+        let sp = ServerParams::default();
+        let wall = server_wall_power(1000.0, &sp);
+        assert!(wall > 1000.0 / (0.95 * 0.95));
+    }
+}

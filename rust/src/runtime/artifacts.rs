@@ -1,0 +1,240 @@
+//! AOT artifact manifest (written by `python/compile/aot.py`).
+
+use std::path::{Path, PathBuf};
+
+use crate::util::json::Json;
+use crate::{Error, Result};
+
+/// One declared argument (name, shape, dtype).
+#[derive(Clone, Debug, PartialEq)]
+pub struct ArgSpec {
+    /// Argument name.
+    pub name: String,
+    /// Shape (row-major dims; empty = scalar).
+    pub shape: Vec<usize>,
+    /// Dtype string ("float32" | "int32").
+    pub dtype: String,
+}
+
+impl ArgSpec {
+    fn from_json(v: &Json) -> Result<ArgSpec> {
+        let name = v
+            .get("name")
+            .and_then(Json::as_str)
+            .ok_or_else(|| Error::Runtime("arg missing name".into()))?
+            .to_string();
+        let shape = v
+            .get("shape")
+            .and_then(Json::as_arr)
+            .ok_or_else(|| Error::Runtime(format!("arg {name} missing shape")))?
+            .iter()
+            .map(|d| d.as_usize().ok_or_else(|| Error::Runtime("bad dim".into())))
+            .collect::<Result<Vec<_>>>()?;
+        let dtype = v
+            .get("dtype")
+            .and_then(Json::as_str)
+            .ok_or_else(|| Error::Runtime(format!("arg {name} missing dtype")))?
+            .to_string();
+        Ok(ArgSpec { name, shape, dtype })
+    }
+
+    /// Number of elements.
+    pub fn elems(&self) -> usize {
+        self.shape.iter().product::<usize>().max(1)
+    }
+}
+
+/// One AOT-compiled function (prefill or decode).
+#[derive(Clone, Debug)]
+pub struct FunctionSpec {
+    /// HLO text file (relative to the artifact dir).
+    pub hlo: String,
+    /// Arguments after the weight params.
+    pub extra_args: Vec<ArgSpec>,
+    /// Output names in tuple order.
+    pub outputs: Vec<String>,
+}
+
+/// Parsed artifact manifest.
+#[derive(Clone, Debug)]
+pub struct Manifest {
+    /// Model name.
+    pub name: String,
+    /// Directory the artifact files live in.
+    pub dir: PathBuf,
+    /// Model hyper-parameters.
+    pub d_model: usize,
+    /// Layers.
+    pub n_layers: usize,
+    /// Heads.
+    pub n_heads: usize,
+    /// Vocabulary size.
+    pub vocab: usize,
+    /// Max context (KV capacity).
+    pub max_ctx: usize,
+    /// Compiled batch size.
+    pub batch: usize,
+    /// Compiled prompt length.
+    pub prompt_len: usize,
+    /// Weight parameters in calling-convention order.
+    pub params: Vec<ArgSpec>,
+    /// Weights npz file (relative).
+    pub weights: String,
+    /// Greedy-generation fixture (relative).
+    pub fixture: String,
+    /// Prefill function.
+    pub prefill: FunctionSpec,
+    /// Decode function.
+    pub decode: FunctionSpec,
+    /// Whether the artifact was lowered through the Pallas kernels.
+    pub use_pallas: bool,
+}
+
+fn function_spec(v: &Json) -> Result<FunctionSpec> {
+    let hlo = v
+        .get("hlo")
+        .and_then(Json::as_str)
+        .ok_or_else(|| Error::Runtime("function missing hlo".into()))?
+        .to_string();
+    let extra_args = v
+        .get("extra_args")
+        .and_then(Json::as_arr)
+        .unwrap_or(&[])
+        .iter()
+        .map(ArgSpec::from_json)
+        .collect::<Result<Vec<_>>>()?;
+    let outputs = v
+        .get("outputs")
+        .and_then(Json::as_arr)
+        .unwrap_or(&[])
+        .iter()
+        .filter_map(|o| o.as_str().map(str::to_string))
+        .collect();
+    Ok(FunctionSpec { hlo, extra_args, outputs })
+}
+
+impl Manifest {
+    /// Load `artifacts/<name>.manifest.json`.
+    pub fn load(dir: impl AsRef<Path>, name: &str) -> Result<Manifest> {
+        let dir = dir.as_ref().to_path_buf();
+        let path = dir.join(format!("{name}.manifest.json"));
+        let text = std::fs::read_to_string(&path)
+            .map_err(|e| Error::Runtime(format!("read {path:?}: {e}")))?;
+        let v = Json::parse(&text).map_err(|e| Error::Runtime(format!("parse {path:?}: {e}")))?;
+        let cfg = v.get("config").ok_or_else(|| Error::Runtime("missing config".into()))?;
+        let get = |obj: &Json, key: &str| -> Result<usize> {
+            obj.get(key)
+                .and_then(Json::as_usize)
+                .ok_or_else(|| Error::Runtime(format!("missing {key}")))
+        };
+        let funcs = v.get("functions").ok_or_else(|| Error::Runtime("missing functions".into()))?;
+        Ok(Manifest {
+            name: v
+                .get("name")
+                .and_then(Json::as_str)
+                .unwrap_or(name)
+                .to_string(),
+            dir,
+            d_model: get(cfg, "d_model")?,
+            n_layers: get(cfg, "n_layers")?,
+            n_heads: get(cfg, "n_heads")?,
+            vocab: get(cfg, "vocab")?,
+            max_ctx: get(cfg, "max_ctx")?,
+            batch: get(&v, "batch")?,
+            prompt_len: get(&v, "prompt_len")?,
+            params: v
+                .get("params")
+                .and_then(Json::as_arr)
+                .ok_or_else(|| Error::Runtime("missing params".into()))?
+                .iter()
+                .map(ArgSpec::from_json)
+                .collect::<Result<Vec<_>>>()?,
+            weights: v
+                .get("weights")
+                .and_then(Json::as_str)
+                .ok_or_else(|| Error::Runtime("missing weights".into()))?
+                .to_string(),
+            fixture: v.get("fixture").and_then(Json::as_str).unwrap_or_default().to_string(),
+            prefill: function_spec(
+                funcs.get("prefill").ok_or_else(|| Error::Runtime("missing prefill".into()))?,
+            )?,
+            decode: function_spec(
+                funcs.get("decode").ok_or_else(|| Error::Runtime("missing decode".into()))?,
+            )?,
+            use_pallas: v.get("use_pallas").and_then(Json::as_bool).unwrap_or(false),
+        })
+    }
+
+    /// Absolute path of a relative artifact file.
+    pub fn path(&self, rel: &str) -> PathBuf {
+        self.dir.join(rel)
+    }
+
+    /// KV-cache shape [L, B, H, C, hd].
+    pub fn kv_shape(&self) -> Vec<usize> {
+        vec![
+            self.n_layers,
+            self.batch,
+            self.n_heads,
+            self.max_ctx,
+            self.d_model / self.n_heads,
+        ]
+    }
+
+    /// The greedy-generation fixture: (prompt [B][P], generated [B][T]).
+    pub fn load_fixture(&self) -> Result<(Vec<Vec<i32>>, Vec<Vec<i32>>)> {
+        let text = std::fs::read_to_string(self.path(&self.fixture))?;
+        let v = Json::parse(&text).map_err(Error::Runtime)?;
+        let mat = |key: &str| -> Result<Vec<Vec<i32>>> {
+            v.get(key)
+                .and_then(Json::as_arr)
+                .ok_or_else(|| Error::Runtime(format!("fixture missing {key}")))?
+                .iter()
+                .map(|row| {
+                    row.as_arr()
+                        .ok_or_else(|| Error::Runtime("bad fixture row".into()))?
+                        .iter()
+                        .map(|x| {
+                            x.as_f64()
+                                .map(|f| f as i32)
+                                .ok_or_else(|| Error::Runtime("bad token".into()))
+                        })
+                        .collect()
+                })
+                .collect()
+        };
+        Ok((mat("prompt")?, mat("generated")?))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn artifacts_dir() -> PathBuf {
+        PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("artifacts")
+    }
+
+    #[test]
+    fn loads_cc_tiny_manifest() {
+        let dir = artifacts_dir();
+        if !dir.join("cc-tiny.manifest.json").exists() {
+            eprintln!("skipping: run `make artifacts` first");
+            return;
+        }
+        let m = Manifest::load(&dir, "cc-tiny").unwrap();
+        assert_eq!(m.d_model, 256);
+        assert_eq!(m.n_layers, 4);
+        assert_eq!(m.decode.outputs, vec!["logits", "k_cache", "v_cache"]);
+        assert_eq!(m.params.len(), 2 + 12 * 4 + 2);
+        assert_eq!(m.kv_shape(), vec![4, m.batch, 4, 128, 64]);
+        let (prompt, generated) = m.load_fixture().unwrap();
+        assert_eq!(prompt.len(), m.batch);
+        assert!(!generated[0].is_empty());
+    }
+
+    #[test]
+    fn missing_manifest_errors() {
+        assert!(Manifest::load("/nonexistent", "nope").is_err());
+    }
+}

@@ -1,0 +1,276 @@
+//! The loaded model: PJRT client + compiled executables + resident state.
+//!
+//! Weights are uploaded to device buffers once at load (the expensive
+//! transfer happens exactly once — the Rust analogue of the paper's "all
+//! model parameters stay resident in CC-MEM"). The KV cache round-trips as
+//! literals each step: the AOT module returns one (logits, k, v) tuple, so
+//! a host download is unavoidable with this crate's API, and re-uploading
+//! at the point of use is what keeps the crate's fire-and-forget uploads
+//! memory-safe (see the safety notes below).
+
+use std::time::Instant;
+
+use xla::{FromRawBytes, Literal, PjRtBuffer, PjRtClient, PjRtLoadedExecutable};
+
+use crate::runtime::artifacts::Manifest;
+use crate::{Error, Result};
+
+/// A loaded, executable model.
+///
+/// SAFETY NOTE on literal lifetimes: the xla crate's
+/// `buffer_from_host_literal` starts an *asynchronous* host→device copy
+/// (the C wrapper never awaits it), so every literal backing a buffer must
+/// stay alive until a subsequent synchronization point proves the copy
+/// (and any execution reading it) finished. The engine therefore keeps the
+/// weight literals alive for its own lifetime, and [`BatchState`] keeps
+/// the KV literals alive across steps.
+pub struct ModelEngine {
+    /// Artifact manifest.
+    pub manifest: Manifest,
+    client: PjRtClient,
+    prefill_exe: PjRtLoadedExecutable,
+    decode_exe: PjRtLoadedExecutable,
+    /// Weight buffers in calling-convention order (device resident).
+    weights: Vec<PjRtBuffer>,
+    /// Host literals backing `weights` (see safety note).
+    _weight_literals: Vec<Literal>,
+    /// Wall time spent loading + compiling.
+    pub load_time_s: f64,
+}
+
+/// The mutable generation state for one batch: **device-resident** KV
+/// cache buffers plus the current position.
+///
+/// The vendored xla crate is patched to set `untuple_result`, so the AOT
+/// module's (logits, k, v) outputs arrive as three separate `PjRtBuffer`s;
+/// k and v never touch the host between steps. These buffers are execution
+/// *outputs* (PJRT-owned, fully materialized once the logits download
+/// completes), so no host literal anchoring is needed — unlike inputs
+/// uploaded through the crate's fire-and-forget `buffer_from_host_literal`
+/// (see the safety note on [`ModelEngine`]).
+pub struct BatchState {
+    /// K cache buffer [L, B, H, C, hd] (device resident).
+    pub k: PjRtBuffer,
+    /// V cache buffer (device resident).
+    pub v: PjRtBuffer,
+    /// Next position to be written (== tokens processed so far).
+    pub pos: usize,
+}
+
+impl ModelEngine {
+    /// Load artifacts for `name` from `dir`, compile both functions on the
+    /// CPU PJRT client and upload the weights.
+    pub fn load(dir: impl AsRef<std::path::Path>, name: &str) -> Result<ModelEngine> {
+        let t0 = Instant::now();
+        let manifest = Manifest::load(dir, name)?;
+        let client = PjRtClient::cpu()?;
+
+        let compile = |rel: &str| -> Result<PjRtLoadedExecutable> {
+            let proto = xla::HloModuleProto::from_text_file(manifest.path(rel))?;
+            let comp = xla::XlaComputation::from_proto(&proto);
+            Ok(client.compile(&comp)?)
+        };
+        let prefill_exe = compile(&manifest.prefill.hlo.clone())?;
+        let decode_exe = compile(&manifest.decode.hlo.clone())?;
+
+        // Upload weights in manifest order. Note: the xla crate's
+        // `PjRtBuffer::read_npz_by_name` mis-types f32 arrays as f16, so we
+        // go through Literals (correctly typed) and upload those.
+        let names: Vec<&str> = manifest.params.iter().map(|p| p.name.as_str()).collect();
+        let lits = Literal::read_npz_by_name(manifest.path(&manifest.weights), &(), &names)?;
+        let weights = lits
+            .iter()
+            .map(|l| client.buffer_from_host_literal(None, l))
+            .collect::<std::result::Result<Vec<_>, _>>()?;
+        Ok(ModelEngine {
+            manifest,
+            client,
+            prefill_exe,
+            decode_exe,
+            weights,
+            _weight_literals: lits,
+            load_time_s: t0.elapsed().as_secs_f64(),
+        })
+    }
+
+    /// The PJRT platform name (e.g. "cpu") — for logs.
+    pub fn platform(&self) -> String {
+        self.client.platform_name()
+    }
+
+    fn buffer_from_literal(&self, lit: &Literal) -> Result<PjRtBuffer> {
+        Ok(self.client.buffer_from_host_literal(None, lit)?)
+    }
+
+    /// Run prefill on a [B, P] prompt (row-major token ids). Returns the
+    /// greedy next token per sequence and the primed batch state.
+    pub fn prefill(&self, prompt: &[Vec<i32>]) -> Result<(Vec<i32>, BatchState)> {
+        let b = self.manifest.batch;
+        let p = self.manifest.prompt_len;
+        if prompt.len() != b || prompt.iter().any(|r| r.len() != p) {
+            return Err(Error::Runtime(format!(
+                "prompt must be [{b}, {p}] (compiled shape)"
+            )));
+        }
+        let flat: Vec<i32> = prompt.iter().flatten().copied().collect();
+        // `ids` must outlive the synchronous download in take_three.
+        let ids = Literal::vec1(&flat).reshape(&[b as i64, p as i64])?;
+        let ids_buf = self.buffer_from_literal(&ids)?;
+        let mut args: Vec<&PjRtBuffer> = self.weights.iter().collect();
+        args.push(&ids_buf);
+        let outs = self.prefill_exe.execute_b::<&PjRtBuffer>(&args)?;
+        let mut row = outs.into_iter().next().unwrap().into_iter();
+        // return_tuple=True → single tuple output; handle an untupling
+        // runtime too.
+        let (logits, state) = self.take_outputs(&mut row, p)?;
+        let tokens = self.argmax_logits(&logits)?;
+        Ok((tokens, state))
+    }
+
+    /// One decode step: feed `tokens` (the batch's current tokens) at
+    /// `state.pos`, update the device-resident caches, return the greedy
+    /// next tokens.
+    pub fn decode_step(&self, tokens: &[i32], state: &mut BatchState) -> Result<Vec<i32>> {
+        let b = self.manifest.batch;
+        if tokens.len() != b {
+            return Err(Error::Runtime(format!("need {b} tokens")));
+        }
+        if state.pos >= self.manifest.max_ctx {
+            return Err(Error::Runtime("context exhausted".into()));
+        }
+        // literals must outlive the synchronous download in take_outputs
+        let ids = Literal::vec1(tokens);
+        let pos = Literal::scalar(state.pos as i32);
+        let ids_buf = self.buffer_from_literal(&ids)?;
+        let pos_buf = self.buffer_from_literal(&pos)?;
+        let mut args: Vec<&PjRtBuffer> = self.weights.iter().collect();
+        args.push(&ids_buf);
+        args.push(&pos_buf);
+        args.push(&state.k);
+        args.push(&state.v);
+        let outs = self.decode_exe.execute_b::<&PjRtBuffer>(&args)?;
+        let mut row = outs.into_iter().next().unwrap().into_iter();
+        let (logits, new_state) = self.take_outputs(&mut row, state.pos + 1)?;
+        *state = new_state;
+        self.argmax_logits(&logits)
+    }
+
+    /// Greedy-generate `n_tokens` after a prefill; returns [B][n] tokens.
+    pub fn generate(&self, prompt: &[Vec<i32>], n_tokens: usize) -> Result<Vec<Vec<i32>>> {
+        let (mut tokens, mut state) = self.prefill(prompt)?;
+        let b = self.manifest.batch;
+        let mut out: Vec<Vec<i32>> = vec![Vec::with_capacity(n_tokens); b];
+        for _ in 0..n_tokens {
+            for (i, &t) in tokens.iter().enumerate() {
+                out[i].push(t);
+            }
+            tokens = self.decode_step(&tokens, &mut state)?;
+        }
+        Ok(out)
+    }
+
+    /// Consume an execution's output row into (logits, next BatchState).
+    ///
+    /// With the untuple patch the module's (logits, k, v) arrive as three
+    /// buffers: logits is downloaded (the synchronization point proving the
+    /// step's input literals were consumed), k/v stay on device. A legacy
+    /// single-tuple layout is still handled for unpatched runtimes.
+    fn take_outputs(
+        &self,
+        row: &mut impl Iterator<Item = PjRtBuffer>,
+        pos: usize,
+    ) -> Result<(Literal, BatchState)> {
+        let first = row.next().ok_or_else(|| Error::Runtime("no outputs".into()))?;
+        match (row.next(), row.next()) {
+            (Some(k), Some(v)) => {
+                // untupled fast path: KV never leaves the device
+                let logits = first.to_literal_sync()?;
+                Ok((logits, BatchState { k, v, pos }))
+            }
+            _ => {
+                // legacy tuple layout: host round-trip + re-upload
+                let tuple = first.to_literal_sync()?;
+                let mut parts = tuple.to_tuple()?;
+                if parts.len() != 3 {
+                    return Err(Error::Runtime(format!(
+                        "expected 3 outputs, got {}",
+                        parts.len()
+                    )));
+                }
+                let v_lit = parts.pop().unwrap();
+                let k_lit = parts.pop().unwrap();
+                let logits = parts.pop().unwrap();
+                let k = self.buffer_from_literal(&k_lit)?;
+                let v = self.buffer_from_literal(&v_lit)?;
+                // anchor the uploads: await a 1-element readback before the
+                // literals drop (the crate's upload is fire-and-forget)
+                let mut probe = [0f32; 1];
+                k.copy_raw_to_host_sync(&mut probe, 0)?;
+                v.copy_raw_to_host_sync(&mut probe, 0)?;
+                Ok((logits, BatchState { k, v, pos }))
+            }
+        }
+    }
+
+    /// Greedy argmax over the last axis of a [B, V] logits literal.
+    fn argmax_logits(&self, logits: &Literal) -> Result<Vec<i32>> {
+        let b = self.manifest.batch;
+        let v = self.manifest.vocab;
+        let data = logits.to_vec::<f32>()?;
+        if data.len() != b * v {
+            return Err(Error::Runtime(format!(
+                "logits size {} != {}x{}",
+                data.len(),
+                b,
+                v
+            )));
+        }
+        Ok((0..b)
+            .map(|i| {
+                let row = &data[i * v..(i + 1) * v];
+                let mut best = 0usize;
+                for (j, &x) in row.iter().enumerate() {
+                    if x > row[best] {
+                        best = j;
+                    }
+                }
+                best as i32
+            })
+            .collect())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::path::PathBuf;
+
+    fn artifacts_dir() -> PathBuf {
+        PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("artifacts")
+    }
+
+    /// End-to-end numerics: the Rust PJRT path must reproduce the Python
+    /// fixture's greedy generation exactly.
+    #[test]
+    fn cc_tiny_matches_python_fixture() {
+        let dir = artifacts_dir();
+        if !dir.join("cc-tiny.manifest.json").exists() {
+            eprintln!("skipping: run `make artifacts` first");
+            return;
+        }
+        let engine = ModelEngine::load(&dir, "cc-tiny").expect("load");
+        let (prompt, expected) = engine.manifest.load_fixture().unwrap();
+        let got = engine.generate(&prompt, expected[0].len()).expect("generate");
+        assert_eq!(got, expected, "rust PJRT generation must match the jax fixture");
+    }
+
+    #[test]
+    fn rejects_wrong_prompt_shape() {
+        let dir = artifacts_dir();
+        if !dir.join("cc-tiny.manifest.json").exists() {
+            return;
+        }
+        let engine = ModelEngine::load(&dir, "cc-tiny").unwrap();
+        assert!(engine.prefill(&[vec![1, 2, 3]]).is_err());
+    }
+}

@@ -1,0 +1,13 @@
+//! PJRT runtime: load AOT artifacts and execute them — Python is never on
+//! this path.
+//!
+//! * [`artifacts`] — manifest parsing (`artifacts/<name>.manifest.json`).
+//! * [`engine`] — the loaded model: weights resident as device buffers,
+//!   compiled prefill/decode executables, buffer-resident KV cache so the
+//!   decode hot loop never round-trips activations through the host.
+
+pub mod artifacts;
+pub mod engine;
+
+pub use artifacts::Manifest;
+pub use engine::ModelEngine;

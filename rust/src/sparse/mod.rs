@@ -1,0 +1,16 @@
+//! Tile-based compressed sparse row format (paper §3.2, after
+//! TileSpMV [34]) — the storage format behind *Store-as-Compressed,
+//! Load-as-Dense*.
+//!
+//! A weight matrix is divided into tiles of shape (32, 8). Non-zero values
+//! (16-bit) are encoded with a 5-bit row index and a 3-bit column index,
+//! forming a **24-bit sparse word** stored in data memory. Per-tile start
+//! offsets live in a separate index memory (placed with the crossbar
+//! routing tracks in hardware). The decoder streams up to 8 sparse words
+//! per cycle and emits fully dense tiles (see [`crate::ccmem::decoder`]).
+
+pub mod stats;
+pub mod tilecsr;
+
+pub use stats::{compression_ratio, max_model_scale, sparse_bytes};
+pub use tilecsr::{SparseMatrix, SparseTile, SparseWord, TILE_COLS, TILE_ROWS};

@@ -1,0 +1,116 @@
+//! Analytic compression statistics — the memory-footprint side of the
+//! sparsity evaluation (Fig. 13).
+//!
+//! A dense fp16 value is 16 bits; a stored sparse word is 24 bits plus the
+//! (amortized, tiny) index memory. At sparsity `s` the expected compressed
+//! size per dense bit is `(1−s)·24/16`, so compression only *wins* above
+//! s = 1/3 — exactly the paper's observation that low sparsity (10–20%)
+//! **increases** TCO/Token due to encoding overhead.
+
+/// Compressed bytes for a model of `weight_bytes` dense fp16 bytes at
+/// unstructured sparsity `s` (0..1), including tile-index overhead.
+pub fn sparse_bytes(weight_bytes: f64, sparsity: f64) -> f64 {
+    assert!((0.0..=1.0).contains(&sparsity));
+    let elems = weight_bytes / 2.0; // fp16
+    let nnz = elems * (1.0 - sparsity);
+    let data = nnz * 3.0; // 24-bit words
+    let tiles = elems / (crate::sparse::TILE_ROWS * crate::sparse::TILE_COLS) as f64;
+    let index = tiles * 4.0;
+    data + index
+}
+
+/// Compression ratio (dense / compressed); >1 means compression wins.
+pub fn compression_ratio(sparsity: f64) -> f64 {
+    sparse_bytes(1e9, sparsity).recip() * 1e9
+}
+
+/// How much *larger* a model fits in the same memory at sparsity `s`
+/// (Fig. 13 bottom: 1.7× at 60%).
+pub fn max_model_scale(sparsity: f64) -> f64 {
+    compression_ratio(sparsity)
+}
+
+/// SparseGPT [15] perplexity of OPT-175B under unstructured sparsity —
+/// quoted values (the paper does the same), WikiText2.
+pub fn opt175b_perplexity(sparsity: f64) -> f64 {
+    // (sparsity, perplexity) — 8.34 dense; negligible rise through 60%.
+    const TABLE: &[(f64, f64)] = &[
+        (0.0, 8.34),
+        (0.1, 8.34),
+        (0.2, 8.35),
+        (0.3, 8.36),
+        (0.4, 8.39),
+        (0.5, 8.40),
+        (0.6, 8.62),
+        (0.7, 10.05),
+        (0.8, 17.52),
+    ];
+    // piecewise-linear interpolation
+    let mut prev = TABLE[0];
+    for &(s, p) in TABLE {
+        if sparsity <= s {
+            if s == prev.0 {
+                return p;
+            }
+            let t = (sparsity - prev.0) / (s - prev.0);
+            return prev.1 + t * (p - prev.1);
+        }
+        prev = (s, p);
+    }
+    prev.1
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn breakeven_at_one_third() {
+        assert!(compression_ratio(0.0) < 1.0);
+        assert!(compression_ratio(0.2) < 1.0, "20% sparsity should still lose");
+        assert!(compression_ratio(0.34) > 1.0);
+        assert!(compression_ratio(0.6) > 1.0);
+    }
+
+    /// Fig. 13 bottom: 1.7× larger model at 60% sparsity.
+    #[test]
+    fn sixty_pct_supports_1_7x_model() {
+        let scale = max_model_scale(0.6);
+        assert!((scale - 1.7).abs() < 0.1, "scale={scale}");
+    }
+
+    #[test]
+    fn perplexity_table_shape() {
+        // negligible rise through 60%, rapid increase after
+        assert!(opt175b_perplexity(0.6) - opt175b_perplexity(0.0) < 0.3);
+        assert!(opt175b_perplexity(0.8) > 2.0 * opt175b_perplexity(0.0));
+        // interpolation is monotone here
+        assert!(opt175b_perplexity(0.65) > opt175b_perplexity(0.6));
+    }
+
+    #[test]
+    fn sparse_bytes_monotone() {
+        let w = 350e9;
+        let mut prev = f64::INFINITY;
+        for s in [0.0, 0.2, 0.4, 0.6, 0.8] {
+            let b = sparse_bytes(w, s);
+            assert!(b < prev);
+            prev = b;
+        }
+    }
+
+    /// Cross-check the analytic model against the actual codec.
+    #[test]
+    fn analytic_matches_codec() {
+        use crate::sparse::SparseMatrix;
+        use crate::util::rng::Rng;
+        let mut rng = Rng::new(77);
+        let (rows, cols) = (512, 512);
+        let dense: Vec<u16> =
+            (0..rows * cols).map(|_| if rng.chance(0.6) { 0 } else { 1 }).collect();
+        let m = SparseMatrix::encode(&dense, rows, cols);
+        let analytic = sparse_bytes((rows * cols) as f64 * 2.0, m.sparsity());
+        let rel = (m.total_bytes() - analytic).abs() / analytic;
+        assert!(rel < 0.02, "rel={rel}");
+    }
+}

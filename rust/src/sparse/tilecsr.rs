@@ -1,0 +1,262 @@
+//! Tile-CSR encode/decode (the software model of the CC-MEM decoder's
+//! storage format).
+
+/// Tile height (row index is 5 bits ⇒ 32 rows).
+pub const TILE_ROWS: usize = 32;
+/// Tile width (column index is 3 bits ⇒ 8 columns).
+pub const TILE_COLS: usize = 8;
+/// Values per tile.
+pub const TILE_ELEMS: usize = TILE_ROWS * TILE_COLS;
+
+/// One 24-bit sparse word: 16-bit value + 5-bit row + 3-bit column.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct SparseWord(pub u32);
+
+impl SparseWord {
+    /// Pack (value, row, col) into a sparse word.
+    pub fn pack(value: u16, row: u8, col: u8) -> SparseWord {
+        debug_assert!((row as usize) < TILE_ROWS && (col as usize) < TILE_COLS);
+        SparseWord(((value as u32) << 8) | ((row as u32) << 3) | col as u32)
+    }
+
+    /// The 16-bit payload value.
+    pub fn value(self) -> u16 {
+        (self.0 >> 8) as u16
+    }
+
+    /// Row index within the tile (0..32).
+    pub fn row(self) -> u8 {
+        ((self.0 >> 3) & 0x1f) as u8
+    }
+
+    /// Column index within the tile (0..8).
+    pub fn col(self) -> u8 {
+        (self.0 & 0x7) as u8
+    }
+}
+
+/// A compressed (32, 8) tile: its non-zero words in row-major CSR order.
+#[derive(Clone, Debug, Default, PartialEq)]
+pub struct SparseTile {
+    /// Non-zero words, sorted by (row, col).
+    pub words: Vec<SparseWord>,
+}
+
+impl SparseTile {
+    /// Encode a dense tile (row-major, length [`TILE_ELEMS`]); zeros are
+    /// dropped. Values are raw 16-bit payloads (fp16/bf16 bit patterns).
+    pub fn encode(dense: &[u16]) -> SparseTile {
+        assert_eq!(dense.len(), TILE_ELEMS, "tile must be 32x8");
+        let mut words = Vec::new();
+        for r in 0..TILE_ROWS {
+            for c in 0..TILE_COLS {
+                let v = dense[r * TILE_COLS + c];
+                if v != 0 {
+                    words.push(SparseWord::pack(v, r as u8, c as u8));
+                }
+            }
+        }
+        SparseTile { words }
+    }
+
+    /// Decode back to a dense row-major tile — the reference behaviour the
+    /// hardware decoder (and the Pallas kernel) must match.
+    pub fn decode(&self) -> [u16; TILE_ELEMS] {
+        let mut out = [0u16; TILE_ELEMS];
+        for w in &self.words {
+            out[w.row() as usize * TILE_COLS + w.col() as usize] = w.value();
+        }
+        out
+    }
+
+    /// Number of non-zero values.
+    pub fn nnz(&self) -> usize {
+        self.words.len()
+    }
+
+    /// Storage bits in data memory (24 bits per sparse word).
+    pub fn storage_bits(&self) -> usize {
+        self.nnz() * 24
+    }
+}
+
+/// A matrix stored in tile-CSR: tile grid + per-tile offsets (the "index
+/// memory") and the flattened word stream (the "data memory").
+#[derive(Clone, Debug)]
+pub struct SparseMatrix {
+    /// Rows of the dense matrix.
+    pub rows: usize,
+    /// Columns of the dense matrix.
+    pub cols: usize,
+    /// Tile grid dimensions (tiles_r, tiles_c).
+    pub tiles: (usize, usize),
+    /// Per-tile (start, end) offsets into `words` — the index memory.
+    pub index: Vec<(u32, u32)>,
+    /// Concatenated sparse words — the data memory.
+    pub words: Vec<SparseWord>,
+}
+
+impl SparseMatrix {
+    /// Encode a dense row-major matrix; dimensions must be tile multiples.
+    pub fn encode(dense: &[u16], rows: usize, cols: usize) -> SparseMatrix {
+        assert_eq!(dense.len(), rows * cols);
+        assert_eq!(rows % TILE_ROWS, 0, "rows must be a multiple of 32");
+        assert_eq!(cols % TILE_COLS, 0, "cols must be a multiple of 8");
+        let (tr, tc) = (rows / TILE_ROWS, cols / TILE_COLS);
+        let mut index = Vec::with_capacity(tr * tc);
+        let mut words = Vec::new();
+        let mut tile_buf = [0u16; TILE_ELEMS];
+        for ti in 0..tr {
+            for tj in 0..tc {
+                for r in 0..TILE_ROWS {
+                    let src = (ti * TILE_ROWS + r) * cols + tj * TILE_COLS;
+                    tile_buf[r * TILE_COLS..(r + 1) * TILE_COLS]
+                        .copy_from_slice(&dense[src..src + TILE_COLS]);
+                }
+                let start = words.len() as u32;
+                let tile = SparseTile::encode(&tile_buf);
+                words.extend_from_slice(&tile.words);
+                index.push((start, words.len() as u32));
+            }
+        }
+        SparseMatrix { rows, cols, tiles: (tr, tc), index, words }
+    }
+
+    /// Decode the full dense matrix (row-major).
+    pub fn decode(&self) -> Vec<u16> {
+        let mut out = vec![0u16; self.rows * self.cols];
+        let (_, tc) = self.tiles;
+        for (t, &(start, end)) in self.index.iter().enumerate() {
+            let (ti, tj) = (t / tc, t % tc);
+            for w in &self.words[start as usize..end as usize] {
+                let r = ti * TILE_ROWS + w.row() as usize;
+                let c = tj * TILE_COLS + w.col() as usize;
+                out[r * self.cols + c] = w.value();
+            }
+        }
+        out
+    }
+
+    /// Tile word range — what the decoder fetches from index memory.
+    pub fn tile_range(&self, ti: usize, tj: usize) -> (u32, u32) {
+        self.index[ti * self.tiles.1 + tj]
+    }
+
+    /// Total non-zeros.
+    pub fn nnz(&self) -> usize {
+        self.words.len()
+    }
+
+    /// Measured sparsity (fraction of zeros).
+    pub fn sparsity(&self) -> f64 {
+        1.0 - self.nnz() as f64 / (self.rows * self.cols) as f64
+    }
+
+    /// Bytes in data memory (24-bit words, packed).
+    pub fn data_bytes(&self) -> f64 {
+        self.nnz() as f64 * 3.0
+    }
+
+    /// Bytes in index memory (two 32-bit offsets per tile; hardware stores
+    /// start-only + next-start, i.e. 4 B per tile amortized).
+    pub fn index_bytes(&self) -> f64 {
+        self.index.len() as f64 * 4.0
+    }
+
+    /// Total compressed bytes.
+    pub fn total_bytes(&self) -> f64 {
+        self.data_bytes() + self.index_bytes()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::prop::check;
+    use crate::util::rng::Rng;
+
+    fn random_tile(rng: &mut Rng, sparsity: f64) -> Vec<u16> {
+        (0..TILE_ELEMS)
+            .map(|_| {
+                if rng.chance(sparsity) {
+                    0
+                } else {
+                    // never 0 for a kept value so nnz is exact
+                    (1 + rng.below(65535)) as u16
+                }
+            })
+            .collect()
+    }
+
+    #[test]
+    fn word_pack_unpack() {
+        let w = SparseWord::pack(0xBEEF, 31, 7);
+        assert_eq!(w.value(), 0xBEEF);
+        assert_eq!(w.row(), 31);
+        assert_eq!(w.col(), 7);
+        assert!(w.0 < (1 << 24), "must fit in 24 bits");
+    }
+
+    #[test]
+    fn tile_roundtrip_property() {
+        check("tile encode/decode roundtrip", 200, |rng| {
+            let sparsity = rng.f64();
+            let dense = random_tile(rng, sparsity);
+            let tile = SparseTile::encode(&dense);
+            assert_eq!(tile.decode().to_vec(), dense);
+        });
+    }
+
+    #[test]
+    fn matrix_roundtrip_property() {
+        check("matrix encode/decode roundtrip", 50, |rng| {
+            let rows = TILE_ROWS * (1 + rng.below(4));
+            let cols = TILE_COLS * (1 + rng.below(8));
+            let dense: Vec<u16> = (0..rows * cols)
+                .map(|_| if rng.chance(0.6) { 0 } else { rng.below(65536) as u16 })
+                .collect();
+            let m = SparseMatrix::encode(&dense, rows, cols);
+            assert_eq!(m.decode(), dense);
+        });
+    }
+
+    #[test]
+    fn csr_order_within_tile() {
+        let mut dense = vec![0u16; TILE_ELEMS];
+        dense[5] = 10; // row 0 col 5
+        dense[TILE_COLS * 3 + 2] = 20; // row 3 col 2
+        dense[TILE_COLS * 3 + 7] = 30; // row 3 col 7
+        let t = SparseTile::encode(&dense);
+        let rc: Vec<(u8, u8)> = t.words.iter().map(|w| (w.row(), w.col())).collect();
+        assert_eq!(rc, vec![(0, 5), (3, 2), (3, 7)]);
+    }
+
+    #[test]
+    fn empty_and_full_tiles() {
+        let zeros = vec![0u16; TILE_ELEMS];
+        assert_eq!(SparseTile::encode(&zeros).nnz(), 0);
+        let ones = vec![1u16; TILE_ELEMS];
+        let full = SparseTile::encode(&ones);
+        assert_eq!(full.nnz(), TILE_ELEMS);
+        // fully dense tile stored sparse costs 24/16 = 1.5x the dense bits
+        assert_eq!(full.storage_bits(), TILE_ELEMS * 24);
+    }
+
+    #[test]
+    fn measured_sparsity_close_to_requested() {
+        let mut rng = Rng::new(1234);
+        let rows = 256;
+        let cols = 256;
+        let dense: Vec<u16> =
+            (0..rows * cols).map(|_| if rng.chance(0.6) { 0 } else { 1 }).collect();
+        let m = SparseMatrix::encode(&dense, rows, cols);
+        assert!((m.sparsity() - 0.6).abs() < 0.02);
+    }
+
+    #[test]
+    fn index_memory_is_small() {
+        let dense = vec![1u16; 1024 * 1024];
+        let m = SparseMatrix::encode(&dense, 1024, 1024);
+        assert!(m.index_bytes() < 0.01 * m.data_bytes());
+    }
+}

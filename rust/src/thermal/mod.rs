@@ -1,0 +1,153 @@
+//! Server thermal model (paper Table 1: "Server Thermal — adapted from
+//! ASIC Clouds [29]").
+//!
+//! A 1U, 19-inch server has `lanes` front-to-back airflow lanes. Chips in a
+//! lane share the airstream: air heats up as it passes over each chip, so
+//! downstream chips see a hotter inlet. A chip is thermally feasible when
+//!
+//! `T_junction = T_air_local + P_chip · θ_sa  ≤  T_j,max`
+//!
+//! where `θ_sa` is the sink-to-air resistance of the per-chip heatsink at
+//! the lane's airflow, and `T_air_local` is the inlet temperature plus the
+//! cumulative heating from upstream chips (`ΔT = P_upstream / (ṁ·c_p)`).
+//! This is the mechanism that makes *many small chips* thermally easier
+//! than few large ones — a key Chiplet Cloud effect.
+
+/// Thermal constants for a 1U lane.
+#[derive(Clone, Debug)]
+pub struct ThermalParams {
+    /// Datacenter cold-aisle inlet temperature, °C.
+    pub inlet_c: f64,
+    /// Max junction temperature, °C.
+    pub tj_max_c: f64,
+    /// Volumetric airflow per lane, CFM (1U high-static-pressure fans).
+    pub cfm_per_lane: f64,
+    /// Sink-to-air resistance of a *full-lane-length* 1U duct heatsink at
+    /// the lane airflow, °C/W. With `n` chips sharing the lane each chip's
+    /// sink is 1/n of the length, so per-chip θ_sa = `theta_sa_ref · n`.
+    pub theta_sa_ref: f64,
+    /// Heat-spreading floor on θ_sa, °C/W: one small die cannot exploit an
+    /// arbitrarily long sink (base-spreading resistance dominates). This is
+    /// what makes one big hot chip worse than many small cool ones.
+    pub theta_sa_min: f64,
+    /// Junction-to-case + TIM resistance, °C/W·cm² (scales inversely with
+    /// die area: bigger dies spread heat better).
+    pub theta_jc_cm2: f64,
+}
+
+impl Default for ThermalParams {
+    fn default() -> Self {
+        ThermalParams {
+            inlet_c: 30.0,
+            tj_max_c: 85.0,
+            cfm_per_lane: 12.0,
+            theta_sa_ref: 0.08,
+            theta_sa_min: 0.25,
+            theta_jc_cm2: 0.15,
+        }
+    }
+}
+
+/// Mass-flow heat capacity of a lane's airstream, W/°C.
+///
+/// 1 CFM of air carries ≈ 0.566 W/°C (ρ·c_p at ~35 °C).
+pub fn lane_w_per_c(tp: &ThermalParams) -> f64 {
+    0.566 * tp.cfm_per_lane
+}
+
+/// Junction temperature of the hottest (most downstream) chip in a lane of
+/// `n_chips` chips each dissipating `p_chip` W with die area `die_mm2`.
+pub fn worst_tj(tp: &ThermalParams, n_chips: usize, p_chip: f64, die_mm2: f64) -> f64 {
+    if n_chips == 0 {
+        return tp.inlet_c;
+    }
+    // Heatsink per chip: lane-length is shared, so each chip's sink gets
+    // 1/n of the lane; θ_sa scales inversely with sink length, floored by
+    // base-spreading resistance.
+    let theta_sa = (tp.theta_sa_ref * n_chips as f64).max(tp.theta_sa_min);
+    let theta_jc = tp.theta_jc_cm2 / (die_mm2 / 100.0);
+    // Air heating upstream of the last chip.
+    let d_t_air = (n_chips as f64 - 1.0) * p_chip / lane_w_per_c(tp);
+    tp.inlet_c + d_t_air + p_chip * (theta_sa + theta_jc)
+}
+
+/// Is a lane of `n_chips` × (`p_chip` W, `die_mm2`) chips thermally feasible?
+pub fn lane_feasible(tp: &ThermalParams, n_chips: usize, p_chip: f64, die_mm2: f64) -> bool {
+    worst_tj(tp, n_chips, p_chip, die_mm2) <= tp.tj_max_c
+}
+
+/// Max total lane power (W) for which some chip count in `1..=max_chips`
+/// is feasible — used to refine the Table-1 250 W/lane cap per design.
+pub fn max_feasible_lane_power(tp: &ThermalParams, p_chip: f64, die_mm2: f64, max_chips: usize) -> f64 {
+    let mut best = 0.0f64;
+    for n in 1..=max_chips {
+        if lane_feasible(tp, n, p_chip, die_mm2) {
+            best = best.max(n as f64 * p_chip);
+        }
+    }
+    best
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn empty_lane_is_at_inlet() {
+        let tp = ThermalParams::default();
+        assert_eq!(worst_tj(&tp, 0, 10.0, 100.0), tp.inlet_c);
+    }
+
+    #[test]
+    fn downstream_chips_run_hotter() {
+        let tp = ThermalParams::default();
+        let t4 = worst_tj(&tp, 4, 14.0, 140.0);
+        let t12 = worst_tj(&tp, 12, 14.0, 140.0);
+        assert!(t12 > t4);
+    }
+
+    /// The paper's Table-2 designs (≈14 W chips, ≈17/lane) must pass.
+    #[test]
+    fn table2_lane_is_feasible() {
+        let tp = ThermalParams::default();
+        assert!(lane_feasible(&tp, 17, 14.1, 140.0), "tj={}", worst_tj(&tp, 17, 14.1, 140.0));
+    }
+
+    /// One 700 mm² / ~400 W monolithic die per lane is NOT feasible with 1U
+    /// air cooling — the reason GPUs need liquid cooling at these densities.
+    #[test]
+    fn monolithic_hot_chip_infeasible() {
+        let tp = ThermalParams::default();
+        assert!(!lane_feasible(&tp, 1, 400.0, 700.0));
+    }
+
+    #[test]
+    fn many_small_beats_one_big_at_equal_power() {
+        let tp = ThermalParams::default();
+        // 200 W total per lane: 16×12.5 W is fine, 1×200 W hits the
+        // spreading floor and violates Tj.
+        let small = worst_tj(&tp, 16, 12.5, 100.0);
+        let big = worst_tj(&tp, 1, 200.0, 400.0);
+        // small-chip lane stays under Tj; single 200 W package exceeds it
+        assert!(small <= tp.tj_max_c, "small={small}");
+        assert!(big > tp.tj_max_c, "big={big}");
+    }
+
+    /// Table-1's 250 W/lane envelope emerges from the thermal model: at
+    /// ~12.5 W per chip the 20-chip lane sits right at the Tj limit.
+    #[test]
+    fn lane_envelope_matches_table1() {
+        let tp = ThermalParams::default();
+        let max_p = max_feasible_lane_power(&tp, 12.5, 140.0, 20);
+        assert!((200.0..=260.0).contains(&max_p), "max lane power {max_p}");
+    }
+
+    #[test]
+    fn max_power_monotone_in_chip_power() {
+        let tp = ThermalParams::default();
+        let lo = max_feasible_lane_power(&tp, 10.0, 140.0, 20);
+        assert!(lo > 0.0);
+        // An infeasible chip yields zero budget.
+        assert_eq!(max_feasible_lane_power(&tp, 1000.0, 140.0, 20), 0.0);
+    }
+}

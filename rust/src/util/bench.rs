@@ -1,0 +1,125 @@
+//! Micro-benchmark harness (criterion is unavailable offline).
+//!
+//! Each `rust/benches/*.rs` target is a `harness = false` binary that uses
+//! [`Bench`] for warmup + timed iterations with mean/p50/p99 reporting, and
+//! then prints the paper table/figure rows it regenerates.
+
+use std::time::{Duration, Instant};
+
+/// Result summary of one benchmark.
+#[derive(Clone, Debug)]
+pub struct BenchStats {
+    /// Benchmark label.
+    pub name: String,
+    /// Number of timed iterations.
+    pub iters: u64,
+    /// Mean wall time per iteration (seconds).
+    pub mean_s: f64,
+    /// Median wall time (seconds).
+    pub p50_s: f64,
+    /// 99th percentile wall time (seconds).
+    pub p99_s: f64,
+    /// Min wall time (seconds).
+    pub min_s: f64,
+}
+
+impl BenchStats {
+    /// One-line human-readable report.
+    pub fn report(&self) -> String {
+        format!(
+            "bench {:<40} iters={:<6} mean={:<10} p50={:<10} p99={:<10} min={}",
+            self.name,
+            self.iters,
+            crate::util::fmt_secs(self.mean_s),
+            crate::util::fmt_secs(self.p50_s),
+            crate::util::fmt_secs(self.p99_s),
+            crate::util::fmt_secs(self.min_s),
+        )
+    }
+}
+
+/// Benchmark runner with a wall-clock budget per benchmark.
+pub struct Bench {
+    /// Warmup duration before timing starts.
+    pub warmup: Duration,
+    /// Measurement budget.
+    pub measure: Duration,
+    /// Upper bound on timed iterations (keeps huge-per-iter benches sane).
+    pub max_iters: u64,
+    results: Vec<BenchStats>,
+}
+
+impl Default for Bench {
+    fn default() -> Self {
+        // Fast-mode default so `cargo bench` over 13 targets stays tractable
+        // on the single-core CI box; override via CC_BENCH_SECS.
+        let secs: f64 = std::env::var("CC_BENCH_SECS").ok().and_then(|s| s.parse().ok()).unwrap_or(1.0);
+        Bench {
+            warmup: Duration::from_secs_f64(secs * 0.25),
+            measure: Duration::from_secs_f64(secs),
+            max_iters: 10_000,
+            results: Vec::new(),
+        }
+    }
+}
+
+impl Bench {
+    /// Create with defaults (see [`Default`]).
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Time `f`, preventing the result from being optimized away.
+    pub fn run<T, F: FnMut() -> T>(&mut self, name: &str, mut f: F) -> BenchStats {
+        // Warmup.
+        let start = Instant::now();
+        while start.elapsed() < self.warmup {
+            black_box(f());
+        }
+        // Measure.
+        let mut samples = Vec::new();
+        let start = Instant::now();
+        while start.elapsed() < self.measure && (samples.len() as u64) < self.max_iters {
+            let t0 = Instant::now();
+            black_box(f());
+            samples.push(t0.elapsed().as_secs_f64());
+        }
+        let stats = BenchStats {
+            name: name.to_string(),
+            iters: samples.len() as u64,
+            mean_s: crate::util::stats::mean(&samples),
+            p50_s: crate::util::stats::percentile(&samples, 50.0),
+            p99_s: crate::util::stats::percentile(&samples, 99.0),
+            min_s: crate::util::stats::min(&samples),
+        };
+        println!("{}", stats.report());
+        self.results.push(stats.clone());
+        stats
+    }
+
+    /// All recorded results.
+    pub fn results(&self) -> &[BenchStats] {
+        &self.results
+    }
+}
+
+/// Opaque value sink (stable `std::hint::black_box`).
+#[inline]
+pub fn black_box<T>(x: T) -> T {
+    std::hint::black_box(x)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn times_something() {
+        std::env::set_var("CC_BENCH_SECS", "0.05");
+        let mut b = Bench::new();
+        let s = b.run("noop-sum", || (0..100u64).sum::<u64>());
+        assert!(s.iters > 0);
+        assert!(s.mean_s >= 0.0);
+        assert!(s.p99_s >= s.p50_s * 0.5);
+    }
+}

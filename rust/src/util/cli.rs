@@ -1,0 +1,105 @@
+//! Hand-rolled CLI argument parsing (clap is unavailable offline).
+//!
+//! Supports `--flag`, `--key value`, `--key=value` and positional args.
+
+use std::collections::BTreeMap;
+
+/// Parsed command-line arguments.
+#[derive(Debug, Default, Clone)]
+pub struct Args {
+    /// Positional arguments in order.
+    pub positional: Vec<String>,
+    /// `--key value` / `--key=value` options.
+    pub options: BTreeMap<String, String>,
+    /// Bare `--flag`s.
+    pub flags: Vec<String>,
+}
+
+impl Args {
+    /// Parse from an iterator of argument strings (exclusive of argv[0]).
+    pub fn parse<I: IntoIterator<Item = String>>(argv: I) -> Args {
+        let mut out = Args::default();
+        let mut it = argv.into_iter().peekable();
+        while let Some(arg) = it.next() {
+            if let Some(body) = arg.strip_prefix("--") {
+                if let Some((k, v)) = body.split_once('=') {
+                    out.options.insert(k.to_string(), v.to_string());
+                } else if it.peek().map(|n| !n.starts_with("--")).unwrap_or(false) {
+                    let v = it.next().unwrap();
+                    out.options.insert(body.to_string(), v);
+                } else {
+                    out.flags.push(body.to_string());
+                }
+            } else {
+                out.positional.push(arg);
+            }
+        }
+        out
+    }
+
+    /// Parse from the process environment.
+    pub fn from_env() -> Args {
+        Args::parse(std::env::args().skip(1))
+    }
+
+    /// Is `--name` present (as flag or option)?
+    pub fn has(&self, name: &str) -> bool {
+        self.flags.iter().any(|f| f == name) || self.options.contains_key(name)
+    }
+
+    /// String option.
+    pub fn get(&self, name: &str) -> Option<&str> {
+        self.options.get(name).map(|s| s.as_str())
+    }
+
+    /// Typed option with default.
+    pub fn get_or<T: std::str::FromStr>(&self, name: &str, default: T) -> T {
+        self.get(name).and_then(|s| s.parse().ok()).unwrap_or(default)
+    }
+
+    /// Required typed option.
+    pub fn require<T: std::str::FromStr>(&self, name: &str) -> Result<T, String> {
+        self.get(name)
+            .ok_or_else(|| format!("missing required option --{name}"))?
+            .parse()
+            .map_err(|_| format!("option --{name} has invalid value"))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn args(s: &[&str]) -> Args {
+        Args::parse(s.iter().map(|x| x.to_string()))
+    }
+
+    #[test]
+    fn positional_and_options() {
+        let a = args(&["table2", "--model", "gpt3", "--ctx=2048", "--verbose"]);
+        assert_eq!(a.positional, vec!["table2"]);
+        assert_eq!(a.get("model"), Some("gpt3"));
+        assert_eq!(a.get_or::<usize>("ctx", 0), 2048);
+        assert!(a.has("verbose"));
+        assert!(!a.has("quiet"));
+    }
+
+    #[test]
+    fn flag_before_positional() {
+        // `--flag` followed by a positional: the positional is consumed as
+        // the flag's value (documented --key value behaviour).
+        let a = args(&["--out", "results", "fig7"]);
+        assert_eq!(a.get("out"), Some("results"));
+        assert_eq!(a.positional, vec!["fig7"]);
+    }
+
+    #[test]
+    fn require_errors() {
+        let a = args(&[]);
+        assert!(a.require::<usize>("batch").is_err());
+        let a = args(&["--batch", "abc"]);
+        assert!(a.require::<usize>("batch").is_err());
+        let a = args(&["--batch", "8"]);
+        assert_eq!(a.require::<usize>("batch").unwrap(), 8);
+    }
+}

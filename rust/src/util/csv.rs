@@ -1,0 +1,49 @@
+//! Minimal CSV writing (RFC-4180 quoting) for `results/*.csv` dumps.
+
+use std::io::Write;
+use std::path::Path;
+
+/// Quote a single CSV field if needed.
+pub fn csv_field(s: &str) -> String {
+    if s.contains(',') || s.contains('"') || s.contains('\n') {
+        format!("\"{}\"", s.replace('"', "\"\""))
+    } else {
+        s.to_string()
+    }
+}
+
+/// Render one CSV line (with trailing newline).
+pub fn csv_line<S: AsRef<str>>(fields: &[S]) -> String {
+    let mut out = fields.iter().map(|f| csv_field(f.as_ref())).collect::<Vec<_>>().join(",");
+    out.push('\n');
+    out
+}
+
+/// Write rows (first row = header) to a CSV file, creating parent dirs.
+pub fn write_csv<P: AsRef<Path>>(path: P, rows: &[Vec<String>]) -> std::io::Result<()> {
+    if let Some(parent) = path.as_ref().parent() {
+        std::fs::create_dir_all(parent)?;
+    }
+    let mut f = std::fs::File::create(path)?;
+    for row in rows {
+        f.write_all(csv_line(row).as_bytes())?;
+    }
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn quoting() {
+        assert_eq!(csv_field("plain"), "plain");
+        assert_eq!(csv_field("a,b"), "\"a,b\"");
+        assert_eq!(csv_field("say \"hi\""), "\"say \"\"hi\"\"\"");
+    }
+
+    #[test]
+    fn line() {
+        assert_eq!(csv_line(&["a", "b,c"]), "a,\"b,c\"\n");
+    }
+}

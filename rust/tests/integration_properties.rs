@@ -1,0 +1,202 @@
+//! Cross-module property tests and failure injection: invariants that must
+//! hold over randomized inputs, plus edge/error paths through the stack.
+
+use chiplet_cloud::arch::ChipletDesign;
+use chiplet_cloud::config::hardware::{ExploreSpace, TechParams};
+use chiplet_cloud::config::{ModelSpec, Workload};
+use chiplet_cloud::cost::{die_cost, die_yield, TcoModel};
+use chiplet_cloud::mapping::{optimizer, Mapping};
+use chiplet_cloud::perf::simulate;
+use chiplet_cloud::util::prop::check;
+use chiplet_cloud::util::rng::Rng;
+
+fn random_chip(rng: &mut Rng) -> ChipletDesign {
+    let die = 40.0 + rng.f64() * 600.0;
+    let tflops = 2.0 + rng.f64() * 30.0;
+    let bw = tflops * 1e3 * (0.1 + rng.f64());
+    ChipletDesign {
+        die_mm2: die,
+        sram_mb: 50.0 + rng.f64() * 500.0,
+        tflops,
+        mem_bw_gbps: bw,
+        n_bank_groups: 16 + rng.below(256),
+        io_link_gbps: 25.0,
+        io_links: 4,
+        tdp_w: 5.0 + rng.f64() * 30.0,
+    }
+}
+
+fn random_server(rng: &mut Rng) -> chiplet_cloud::arch::ServerDesign {
+    chiplet_cloud::arch::ServerDesign {
+        chiplet: random_chip(rng),
+        chips_per_lane: 1 + rng.below(20),
+        lanes: 8,
+        server_power_w: 500.0 + rng.f64() * 2000.0,
+        server_capex: 2_000.0 + rng.f64() * 30_000.0,
+    }
+}
+
+/// Yield and die cost are monotone in area for any valid defect density.
+#[test]
+fn die_economics_monotone_property() {
+    check("die cost monotone in area", 100, |rng| {
+        let mut t = TechParams::default();
+        t.defect_density_per_cm2 = 0.05 + rng.f64() * 0.3;
+        let a = 20.0 + rng.f64() * 350.0;
+        let b = a + 10.0 + rng.f64() * 300.0;
+        assert!(die_yield(&t, a) > die_yield(&t, b));
+        assert!(die_cost(&t, a) < die_cost(&t, b));
+    });
+}
+
+/// TCO accounting identities hold for any inputs.
+#[test]
+fn tco_identities_property() {
+    check("tco identities", 100, |rng| {
+        let m = TcoModel::default();
+        let capex = rng.f64() * 1e5;
+        let watts = rng.f64() * 3e3;
+        let tco = m.server_tco(capex, watts);
+        let sum = tco.capex + tco.energy + tco.facility + tco.maintenance;
+        assert!((tco.total() - sum).abs() < 1e-9);
+        assert!(tco.capex_frac() >= 0.0 && tco.capex_frac() <= 1.0);
+        let tput = 1.0 + rng.f64() * 1e5;
+        assert!((tco.per_mtok(tput) - tco.per_token(tput) * 1e6).abs() < 1e-9);
+    });
+}
+
+/// Simulation sanity over random hardware/mapping: throughput positive,
+/// utilizations in [0,1], and the pipeline law period = max(l_mb, n·l_s).
+#[test]
+fn simulation_invariants_property() {
+    let model = ModelSpec::megatron();
+    check("simulate invariants", 150, |rng| {
+        let server = random_server(rng);
+        let w = Workload::new(model.clone(), 1024 << rng.below(3), 1 << rng.below(9));
+        let pp = *rng.pick(&optimizer::divisors(model.n_layers));
+        let n_min = optimizer::min_chips(&server, &w);
+        let tp = n_min.div_ceil(pp).max(1);
+        let mapping = Mapping { tp, pp, microbatch: 1 << rng.below(4) };
+        if let Some(p) = simulate(&server, &w, &mapping) {
+            assert!(p.tokens_per_s > 0.0);
+            assert!((0.0..=1.0).contains(&p.compute_util));
+            assert!((0.0..=1.0).contains(&p.mem_util));
+            assert!((0.0..=1.0).contains(&p.comm_frac));
+            let n_micro = mapping.n_micro(w.batch);
+            let expect = p.microbatch_latency.max(n_micro as f64 * p.stage_latency);
+            assert!((p.token_period - expect).abs() / expect < 1e-9);
+            assert!(
+                (p.tokens_per_s - w.batch as f64 / p.token_period).abs() / p.tokens_per_s < 1e-9
+            );
+        }
+    });
+}
+
+/// Feasibility is monotone in SRAM: if a mapping fits a chip, it fits any
+/// chip with more SRAM (all else equal).
+#[test]
+fn memory_feasibility_monotone_property() {
+    let model = ModelSpec::llama2_70b();
+    check("sram monotonicity", 100, |rng| {
+        let mut server = random_server(rng);
+        let w = Workload::new(model.clone(), 2048, 1 << rng.below(7));
+        let pp = *rng.pick(&optimizer::divisors(model.n_layers));
+        let tp = optimizer::min_chips(&server, &w).div_ceil(pp).max(1);
+        let mapping = Mapping { tp, pp, microbatch: 1 };
+        let fits_small = simulate(&server, &w, &mapping).is_some();
+        server.chiplet.sram_mb *= 2.0;
+        let fits_big = simulate(&server, &w, &mapping).is_some();
+        if fits_small {
+            assert!(fits_big, "doubling SRAM must not break feasibility");
+        }
+    });
+}
+
+/// More sparsity never increases the stored footprint, and the read scale
+/// is never below dense.
+#[test]
+fn sparsity_scales_property() {
+    check("sparsity scales", 100, |rng| {
+        let s1 = rng.f64() * 0.9;
+        let s2 = s1 + rng.f64() * (0.9 - s1);
+        let m = ModelSpec::opt_175b();
+        let w1 = Workload::new(m.clone(), 2048, 8).with_sparsity(s1);
+        let w2 = Workload::new(m.clone(), 2048, 8).with_sparsity(s2);
+        assert!(w2.stored_weight_bytes() <= w1.stored_weight_bytes() + 1e-3);
+        assert!(w1.weight_read_scale >= 1.0 && w2.weight_read_scale >= 1.0);
+    });
+}
+
+/// Phase-1 → Phase-2 composition never produces a design point violating
+/// the hard constraints it was filtered by.
+#[test]
+fn phase2_points_respect_phase1_constraints() {
+    let space = ExploreSpace::coarse();
+    let (servers, _) = chiplet_cloud::explore::phase1(&space);
+    let w = Workload::new(ModelSpec::gpt3(), 2048, 64);
+    for p in chiplet_cloud::evaluate::sweep(&space, &servers, &w).iter().take(200) {
+        assert!(p.server.chiplet.die_mm2 <= space.tech.reticle_mm2);
+        assert!(
+            p.server.chiplet.power_density() <= space.tech.max_power_density_w_mm2 + 1e-9
+        );
+        assert!(p.n_servers * p.server.chips() >= p.mapping.n_chips());
+        assert!(p.tco.total() > 0.0);
+        assert!(p.tco_per_token.is_finite());
+    }
+}
+
+/// Failure injection: unknown models, impossible workloads, and broken
+/// artifacts fail loudly rather than corrupting results.
+#[test]
+fn failure_paths_are_errors() {
+    // unknown model name
+    assert!(ModelSpec::by_name("gpt17-zeta").is_none());
+    // unmappable: pipeline deeper than the layer count
+    let server = {
+        let mut rng = Rng::new(5);
+        random_server(&mut rng)
+    };
+    let w = Workload::new(ModelSpec::megatron(), 1024, 8);
+    assert!(simulate(&server, &w, &Mapping { tp: 4, pp: 10_000, microbatch: 1 }).is_none());
+    // microbatch larger than batch
+    assert!(simulate(&server, &w, &Mapping { tp: 400, pp: 8, microbatch: 64 }).is_none());
+    // broken artifact dir
+    assert!(chiplet_cloud::runtime::Manifest::load("/nonexistent", "cc-tiny").is_err());
+    // malformed manifest JSON
+    let dir = std::env::temp_dir().join("cc-bad-artifacts");
+    std::fs::create_dir_all(&dir).unwrap();
+    std::fs::write(dir.join("bad.manifest.json"), b"{not json").unwrap();
+    assert!(chiplet_cloud::runtime::Manifest::load(&dir, "bad").is_err());
+}
+
+/// A request served in a padded (partial) batch generates exactly the same
+/// tokens as when its batch is full — per-sequence independence through
+/// the entire AOT/PJRT/coordinator stack.
+#[test]
+fn padded_batch_matches_full_batch() {
+    let dir = std::path::PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("artifacts");
+    if !dir.join("cc-tiny.manifest.json").exists() {
+        eprintln!("skipping: run `make artifacts` first");
+        return;
+    }
+    use chiplet_cloud::coordinator::{Coordinator, CoordinatorConfig};
+    use std::time::Duration;
+    let probe_prompt = vec![42, 7, 99, 3];
+    let run = |extra: usize| {
+        let coord = Coordinator::start(
+            &dir,
+            "cc-tiny",
+            CoordinatorConfig { max_wait: Duration::from_millis(5), replicas: 1 },
+        )
+        .unwrap();
+        let id = coord.submit(probe_prompt.clone(), 5);
+        for i in 0..extra {
+            coord.submit(vec![i as i32 + 1; 6], 5);
+        }
+        let rs = coord.shutdown().unwrap();
+        rs.into_iter().find(|r| r.id == id).unwrap().tokens
+    };
+    let alone = run(0); // padded batch (1 live slot of 4)
+    let full = run(3); // full batch
+    assert_eq!(alone, full, "padding slots must not perturb live sequences");
+}

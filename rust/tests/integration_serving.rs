@@ -1,0 +1,103 @@
+//! Integration tests over the serving stack: AOT artifacts → PJRT engine →
+//! coordinator, with exact-numerics checks against the Python fixture.
+//!
+//! These tests are skipped (with a notice) when `make artifacts` has not
+//! been run — `make test` always builds artifacts first.
+
+use std::path::PathBuf;
+use std::time::Duration;
+
+use chiplet_cloud::coordinator::{Coordinator, CoordinatorConfig};
+use chiplet_cloud::runtime::{Manifest, ModelEngine};
+
+fn artifacts() -> Option<PathBuf> {
+    let dir = PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("artifacts");
+    if dir.join("cc-tiny.manifest.json").exists() {
+        Some(dir)
+    } else {
+        eprintln!("skipping: run `make artifacts` first");
+        None
+    }
+}
+
+/// The core end-to-end numerics contract: Rust PJRT generation ==
+/// the JAX reference generation, token for token.
+#[test]
+fn rust_generation_matches_jax_fixture() {
+    let Some(dir) = artifacts() else { return };
+    let engine = ModelEngine::load(&dir, "cc-tiny").unwrap();
+    let (prompt, expected) = engine.manifest.load_fixture().unwrap();
+    let got = engine.generate(&prompt, expected[0].len()).unwrap();
+    assert_eq!(got, expected);
+}
+
+/// The Pallas-kernel-lowered artifact serves the same interface: the
+/// cc-tiny artifact was built with `--pallas`, proving L1 kernels lower
+/// into the HLO the Rust runtime loads.
+#[test]
+fn pallas_artifact_flag_recorded() {
+    let Some(dir) = artifacts() else { return };
+    let m = Manifest::load(&dir, "cc-tiny").unwrap();
+    assert!(m.use_pallas, "cc-tiny must be the Pallas-path artifact");
+}
+
+/// Decode must respect the KV capacity: stepping past max_ctx errors
+/// instead of corrupting the cache.
+#[test]
+fn context_exhaustion_is_an_error() {
+    let Some(dir) = artifacts() else { return };
+    let engine = ModelEngine::load(&dir, "cc-tiny").unwrap();
+    let (prompt, _) = engine.manifest.load_fixture().unwrap();
+    let (mut toks, mut state) = engine.prefill(&prompt).unwrap();
+    let budget = engine.manifest.max_ctx - engine.manifest.prompt_len;
+    for _ in 0..budget {
+        toks = engine.decode_step(&toks, &mut state).unwrap();
+    }
+    assert!(engine.decode_step(&toks, &mut state).is_err());
+}
+
+/// Coordinator end-to-end: mixed prompt lengths, queueing, padded batches.
+#[test]
+fn coordinator_serves_mixed_stream() {
+    let Some(dir) = artifacts() else { return };
+    let coord = Coordinator::start(
+        &dir,
+        "cc-tiny",
+        CoordinatorConfig { max_wait: Duration::from_millis(10), replicas: 1 },
+    )
+    .unwrap();
+    let mut ids = Vec::new();
+    for i in 0..9usize {
+        // prompt lengths 1..40: exercises truncation and padding
+        let prompt: Vec<i32> = (0..(1 + i * 5)).map(|j| (j % 100) as i32 + 1).collect();
+        ids.push(coord.submit(prompt, 3 + (i % 3)));
+    }
+    let metrics = coord.metrics.clone();
+    let rs = coord.shutdown().unwrap();
+    assert_eq!(rs.len(), 9);
+    for (i, r) in rs.iter().enumerate() {
+        assert_eq!(r.id, ids[i]);
+        assert_eq!(r.tokens.len(), 3 + (i % 3));
+    }
+    let s = metrics.summary();
+    assert_eq!(s.completed, 9);
+    assert!(s.decode_tokens_per_s > 0.0);
+    assert!(s.occupancy > 0.0 && s.occupancy <= 1.0);
+}
+
+/// Two serving runs of the same stream produce identical tokens — the
+/// whole stack is deterministic.
+#[test]
+fn serving_is_deterministic() {
+    let Some(dir) = artifacts() else { return };
+    let run = || {
+        let coord =
+            Coordinator::start(&dir, "cc-tiny", CoordinatorConfig::default()).unwrap();
+        let a = coord.submit(vec![11, 22, 33, 44], 6);
+        let b = coord.submit(vec![5; 20], 6);
+        let rs = coord.shutdown().unwrap();
+        let find = |id| rs.iter().find(|r| r.id == id).unwrap().tokens.clone();
+        (find(a), find(b))
+    };
+    assert_eq!(run(), run());
+}
