@@ -1,0 +1,123 @@
+//! End-to-end sweep-engine benchmark: the GPT-3 Table-2 grid (3 contexts ×
+//! batch 1..1024) through three configurations of the co-design search —
+//!
+//! * `sequential` — the seed behaviour: single thread, exhaustive;
+//! * `parallel`   — fork-join only (no pruning, no Pareto ordering);
+//! * `engine`     — parallel + branch-and-bound pruning + Pareto-first
+//!   ordering (the default `SweepEngine`).
+//!
+//! All three must return the **identical** optimum (asserted, bit-exact);
+//! the engine targets ≥ 5× end-to-end over sequential on 8 cores. Phase 1
+//! is also timed sequential vs parallel.
+//!
+//! Set `CC_BENCH_FULL=1` for the paper-scale Table-1 space.
+
+use std::time::Instant;
+
+use chiplet_cloud::config::hardware::ExploreSpace;
+use chiplet_cloud::config::{ModelSpec, Workload};
+use chiplet_cloud::evaluate::SweepEngine;
+use chiplet_cloud::explore::{self, pareto};
+
+fn space() -> ExploreSpace {
+    if std::env::var("CC_BENCH_FULL").is_ok() {
+        ExploreSpace::default()
+    } else {
+        ExploreSpace::coarse()
+    }
+}
+
+fn main() {
+    let space = space();
+    let threads = chiplet_cloud::util::parallel::num_threads();
+    println!("sweep engine bench: {} worker threads", threads);
+
+    // --- Phase 1: hardware exploration -------------------------------
+    let t0 = Instant::now();
+    let (servers_seq, _) = explore::phase1_seq(&space);
+    let p1_seq = t0.elapsed().as_secs_f64();
+    let t0 = Instant::now();
+    let (servers, _) = explore::phase1(&space);
+    let p1_par = t0.elapsed().as_secs_f64();
+    assert_eq!(servers, servers_seq, "parallel phase 1 diverged");
+    println!(
+        "phase1: {} feasible servers | sequential {:.3}s, parallel {:.3}s ({:.2}x)",
+        servers.len(),
+        p1_seq,
+        p1_par,
+        p1_seq / p1_par.max(1e-9)
+    );
+    let frontier = pareto::frontier_indices(&servers).len();
+    println!("pareto frontier: {} of {} servers", frontier, servers.len());
+
+    // --- Phase 2: GPT-3 over the Table-2 grid -------------------------
+    let grid = Workload::study_grid(&ModelSpec::gpt3());
+
+    let t0 = Instant::now();
+    let seq = SweepEngine::sequential().best_over_grid(&space, &servers, &grid);
+    let t_seq = t0.elapsed().as_secs_f64();
+
+    let par_only = SweepEngine { threads: 0, prune: false, pareto_order: false };
+    let t0 = Instant::now();
+    let par = par_only.best_over_grid(&space, &servers, &grid);
+    let t_par = t0.elapsed().as_secs_f64();
+
+    let engine = SweepEngine { threads: 0, prune: true, pareto_order: true };
+    let t0 = Instant::now();
+    let (full, stats) = engine.best_over_grid_stats(&space, &servers, &grid);
+    let t_full = t0.elapsed().as_secs_f64();
+
+    // Byte-identical optima across all three configurations.
+    let (w_seq, p_seq) = seq.expect("sequential optimum");
+    for (label, result) in [("parallel", par), ("engine", full)] {
+        let (w, p) = result.expect("optimum");
+        assert_eq!((w.ctx, w.batch), (w_seq.ctx, w_seq.batch), "{label}: workload diverged");
+        assert_eq!(p.mapping, p_seq.mapping, "{label}: mapping diverged");
+        assert_eq!(p.server, p_seq.server, "{label}: server diverged");
+        assert_eq!(p.n_servers, p_seq.n_servers, "{label}: server count diverged");
+        assert_eq!(
+            p.tco_per_token.to_bits(),
+            p_seq.tco_per_token.to_bits(),
+            "{label}: TCO/Token diverged"
+        );
+    }
+
+    println!(
+        "phase2 (gpt3 x {} workloads): sequential {:.2}s | parallel {:.2}s ({:.2}x) | \
+         engine {:.2}s ({:.2}x)",
+        grid.len(),
+        t_seq,
+        t_par,
+        t_seq / t_par.max(1e-9),
+        t_full,
+        t_seq / t_full.max(1e-9)
+    );
+    println!(
+        "engine counters: {} pairs ({} bound-skipped), {} candidates, {} simulated, {} pruned",
+        stats.servers,
+        stats.servers_pruned,
+        stats.candidates,
+        stats.simulated,
+        stats.mappings_pruned
+    );
+    println!(
+        "optimum: ${:.3}/1M tok @ ctx {} batch {} (tp={} pp={} ub={}) — identical across configs",
+        p_seq.tco_per_mtok(),
+        w_seq.ctx,
+        w_seq.batch,
+        p_seq.mapping.tp,
+        p_seq.mapping.pp,
+        p_seq.mapping.microbatch
+    );
+
+    let speedup = t_seq / t_full.max(1e-9);
+    let target = 5.0;
+    if speedup >= target {
+        println!("PASS: engine speedup {speedup:.2}x >= {target}x");
+    } else {
+        println!(
+            "NOTE: engine speedup {speedup:.2}x < {target}x on this machine \
+             ({threads} threads; the 5x target assumes 8 cores)"
+        );
+    }
+}

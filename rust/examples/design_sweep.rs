@@ -12,11 +12,11 @@ use chiplet_cloud::explore::phase1;
 use chiplet_cloud::util::cli::Args;
 use chiplet_cloud::util::csv::write_csv;
 
-fn main() -> anyhow::Result<()> {
+fn main() -> chiplet_cloud::Result<()> {
     let args = Args::from_env();
     let name = args.get("model").unwrap_or("gpt3");
     let model =
-        ModelSpec::by_name(name).ok_or_else(|| anyhow::anyhow!("unknown model {name}"))?;
+        ModelSpec::by_name(name).ok_or_else(|| chiplet_cloud::Error::Config(format!("unknown model {name}")))?;
     let ctx: usize = args.get_or("ctx", 2048);
     let batch: usize = args.get_or("batch", 256);
     let space = if args.has("full") { ExploreSpace::default() } else { ExploreSpace::coarse() };

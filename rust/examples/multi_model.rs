@@ -11,7 +11,7 @@ use chiplet_cloud::config::{ModelSpec, Workload};
 use chiplet_cloud::evaluate::{best_point, multi_model};
 use chiplet_cloud::explore::phase1;
 
-fn main() -> anyhow::Result<()> {
+fn main() -> chiplet_cloud::Result<()> {
     let space = ExploreSpace::coarse();
     let (servers, _) = phase1(&space);
 
@@ -27,7 +27,7 @@ fn main() -> anyhow::Result<()> {
     for (m, ctx, b) in &operating {
         let w = Workload::new(m.clone(), *ctx, *b);
         let p = best_point(&space, &servers, &w)
-            .ok_or_else(|| anyhow::anyhow!("no design for {}", m.display))?;
+            .ok_or_else(|| chiplet_cloud::Error::Config(format!("no design for {}", m.display)))?;
         println!(
             "{:<10} optimal chip: {:>4.0} mm², {:>6.1} MB, {:>5.2} TFLOPS  -> ${:.4}/1M tok",
             m.display,

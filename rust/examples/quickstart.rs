@@ -13,11 +13,11 @@ use chiplet_cloud::explore::phase1;
 use chiplet_cloud::util::cli::Args;
 use chiplet_cloud::util::fmt_dollars;
 
-fn main() -> anyhow::Result<()> {
+fn main() -> chiplet_cloud::Result<()> {
     let args = Args::from_env();
     let name = args.get("model").unwrap_or("gpt3");
     let model = ModelSpec::by_name(name)
-        .ok_or_else(|| anyhow::anyhow!("unknown model {name} (try gpt3, palm, llama2-70b)"))?;
+        .ok_or_else(|| chiplet_cloud::Error::Config(format!("unknown model {name} (try gpt3, palm, llama2-70b)")))?;
     let space = if args.has("full") { ExploreSpace::default() } else { ExploreSpace::coarse() };
 
     // Phase 1: LLM-agnostic hardware exploration.
@@ -36,7 +36,7 @@ fn main() -> anyhow::Result<()> {
     println!("== Phase 2: software evaluation for {} ({:.1}B params)", model.display, model.n_params() / 1e9);
     let grid = Workload::study_grid(&model);
     let (w, p) = evaluate::best_over_grid(&space, &servers, &grid)
-        .ok_or_else(|| anyhow::anyhow!("no feasible design — widen the space"))?;
+        .ok_or_else(|| chiplet_cloud::Error::Config("no feasible design — widen the space".to_string()))?;
 
     let chip = &p.server.chiplet;
     println!("\nTCO/Token-optimal Chiplet Cloud for {}:", model.display);

@@ -19,7 +19,7 @@ use chiplet_cloud::coordinator::{Coordinator, CoordinatorConfig};
 use chiplet_cloud::util::cli::Args;
 use chiplet_cloud::util::rng::Rng;
 
-fn main() -> anyhow::Result<()> {
+fn main() -> chiplet_cloud::Result<()> {
     let args = Args::from_env();
     let dir = args.get("artifacts").unwrap_or("artifacts").to_string();
     let model = args.get("model").unwrap_or("cc-gpt-mini").to_string();

@@ -14,7 +14,7 @@ use chiplet_cloud::explore::phase1;
 use chiplet_cloud::sparse::{compression_ratio, SparseMatrix, SparseTile, TILE_COLS, TILE_ROWS};
 use chiplet_cloud::util::rng::Rng;
 
-fn main() -> anyhow::Result<()> {
+fn main() -> chiplet_cloud::Result<()> {
     // 1. The codec: encode a 60%-sparse matrix, verify the exact roundtrip.
     let mut rng = Rng::new(11);
     let (rows, cols) = (512, 512);

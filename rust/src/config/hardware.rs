@@ -2,8 +2,8 @@
 //!
 //! All constants are the paper's published inputs. Where the paper scales a
 //! 12nm Synopsys implementation to 7nm we encode the resulting 7nm densities
-//! directly (High-Density SRAM bitcell area and CPP×MMP routing scaling, see
-//! DESIGN.md substitution ledger).
+//! directly (High-Density SRAM bitcell area and CPP×MMP routing scaling; the
+//! provenance of each substitution is documented on the field it feeds).
 
 /// Technology / economics constants (Table 1 plus §4 text).
 #[derive(Clone, Debug)]

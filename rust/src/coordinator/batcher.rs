@@ -9,6 +9,7 @@
 //! decodes in lockstep.
 
 use std::collections::VecDeque;
+use std::sync::atomic::{AtomicBool, Ordering};
 use std::sync::{Condvar, Mutex};
 use std::time::{Duration, Instant};
 
@@ -51,13 +52,14 @@ impl Batch {
     }
 }
 
-/// Thread-safe request queue + batch former.
+/// Thread-safe request queue + batch former. Consumers block on a condvar
+/// — no polling loops, so an idle serving leader burns no CPU.
 pub struct Batcher {
     /// Configuration.
     pub cfg: BatcherConfig,
     queue: Mutex<VecDeque<Request>>,
     nonempty: Condvar,
-    closed: Mutex<bool>,
+    closed: AtomicBool,
 }
 
 impl Batcher {
@@ -67,7 +69,7 @@ impl Batcher {
             cfg,
             queue: Mutex::new(VecDeque::new()),
             nonempty: Condvar::new(),
-            closed: Mutex::new(false),
+            closed: AtomicBool::new(false),
         }
     }
 
@@ -83,9 +85,19 @@ impl Batcher {
     }
 
     /// Signal shutdown: `next_batch` returns None once drained.
+    ///
+    /// The flag is flipped while holding the queue lock: every waiter is
+    /// either parked in a wait (and gets the notify) or still holds the
+    /// lock (and re-checks the flag before parking), so no wakeup can be
+    /// missed and the waits need no insurance timeouts.
     pub fn close(&self) {
-        *self.closed.lock().unwrap() = true;
+        let _q = self.queue.lock().unwrap();
+        self.closed.store(true, Ordering::SeqCst);
         self.nonempty.notify_all();
+    }
+
+    fn is_closed(&self) -> bool {
+        self.closed.load(Ordering::SeqCst)
     }
 
     /// Normalize a prompt to exactly P tokens (keep the most recent P,
@@ -104,32 +116,32 @@ impl Batcher {
     /// Block until a batch can be formed (or the batcher is closed and
     /// empty → None). Waits up to `max_wait` for a full batch, then emits
     /// a padded partial batch.
+    ///
+    /// Both waits park on the `nonempty` condvar — `submit`/`close` wake us
+    /// — instead of the old 1 ms sleep-poll loop, which burned a core per
+    /// idle replica and added up to 1 ms of needless latency per request.
+    /// `close()` flips the shutdown flag under the queue lock, so neither
+    /// wait can miss its wakeup (see [`Batcher::close`]) and an idle
+    /// replica truly sleeps.
     pub fn next_batch(&self) -> Option<Batch> {
-        let deadline = {
-            // wait for the first request
-            let mut q = self.queue.lock().unwrap();
-            loop {
-                if !q.is_empty() {
-                    break;
-                }
-                if *self.closed.lock().unwrap() {
-                    return None;
-                }
-                let (guard, _) = self.nonempty.wait_timeout(q, Duration::from_millis(20)).unwrap();
-                q = guard;
+        let mut q = self.queue.lock().unwrap();
+        // Wait for the first request (or shutdown).
+        while q.is_empty() {
+            if self.is_closed() {
+                return None;
             }
-            Instant::now() + self.cfg.max_wait
-        };
-        // wait for a full batch or the deadline
-        loop {
-            let q = self.queue.lock().unwrap();
-            if q.len() >= self.cfg.batch || Instant::now() >= deadline || *self.closed.lock().unwrap() {
+            q = self.nonempty.wait(q).unwrap();
+        }
+        // Wait for a full batch, the deadline, or shutdown.
+        let deadline = Instant::now() + self.cfg.max_wait;
+        while q.len() < self.cfg.batch && !self.is_closed() {
+            let now = Instant::now();
+            if now >= deadline {
                 break;
             }
-            drop(q);
-            std::thread::sleep(Duration::from_millis(1));
+            let (guard, _) = self.nonempty.wait_timeout(q, deadline - now).unwrap();
+            q = guard;
         }
-        let mut q = self.queue.lock().unwrap();
         let n = q.len().min(self.cfg.batch);
         let mut slots: Vec<Option<Request>> = Vec::with_capacity(self.cfg.batch);
         let mut prompts = Vec::with_capacity(self.cfg.batch);
@@ -193,6 +205,30 @@ mod tests {
         b.close();
         assert!(b.next_batch().is_some());
         assert!(b.next_batch().is_none());
+    }
+
+    #[test]
+    fn late_submits_wake_the_batch_wait() {
+        // A filling batch must complete on the submit wakeup, not wait out
+        // the deadline (generous margins: deadline 5 s, expect ≪ 1 s).
+        let b = std::sync::Arc::new(Batcher::new(BatcherConfig {
+            max_wait: Duration::from_secs(5),
+            ..cfg()
+        }));
+        b.submit(Request::new(1, vec![1], 1));
+        let b2 = b.clone();
+        let h = std::thread::spawn(move || {
+            let t0 = std::time::Instant::now();
+            let batch = b2.next_batch().unwrap();
+            (batch.live(), t0.elapsed())
+        });
+        std::thread::sleep(Duration::from_millis(30));
+        for i in 2..=4 {
+            b.submit(Request::new(i, vec![1], 1));
+        }
+        let (live, waited) = h.join().unwrap();
+        assert_eq!(live, 4);
+        assert!(waited < Duration::from_secs(2), "waited {waited:?} — condvar wakeup missing");
     }
 
     #[test]

@@ -1,6 +1,5 @@
-//! Design-choice ablations (DESIGN.md's per-choice studies): quantify each
-//! Chiplet Cloud architectural decision by switching it off and re-running
-//! the two-phase search.
+//! Design-choice ablations: quantify each Chiplet Cloud architectural
+//! decision by switching it off and re-running the two-phase search.
 
 use crate::config::hardware::ExploreSpace;
 use crate::config::{ModelSpec, Workload};
@@ -59,34 +58,36 @@ pub fn ablate(
         });
     }
 
-    // 3. Micro-batch tuning → fixed microbatch of 1.
+    // 3. Micro-batch tuning → fixed microbatch of 1. The per-server
+    // re-scoring is embarrassingly parallel; min-reduction over the costs
+    // is order-independent, so the fork-join changes wall-clock only.
     {
         use crate::cost::tco::TcoModel;
         use crate::mapping::optimizer;
         let tcom = TcoModel { server: space.server.clone(), dc: space.dc.clone() };
-        let mut best: Option<f64> = None;
-        for s in &servers {
+        let costs = crate::util::parallel::par_map(&servers, 0, |s| -> Option<f64> {
             let score = |mapping: &crate::mapping::Mapping, perf: &crate::perf::DecodePerf| {
                 let n_servers = mapping.n_chips().div_ceil(s.chips().max(1));
                 crate::evaluate::system_tco(space, &tcom, s, n_servers, perf)
                     .per_token(perf.tokens_per_s)
             };
-            if let Some((m, perf, cost)) = optimizer::optimize_mapping(s, &w, score) {
-                if m.microbatch == 1 {
-                    let _ = perf;
-                    best = Some(best.map_or(cost, |b: f64| b.min(cost)));
-                } else {
-                    // re-evaluate at microbatch 1 with the same tp/pp
-                    let m1 = crate::mapping::Mapping { microbatch: 1, ..m };
-                    if let Some(p1) = crate::perf::simulate(s, &w, &m1) {
-                        let n_servers = m1.n_chips().div_ceil(s.chips().max(1));
-                        let c1 = crate::evaluate::system_tco(space, &tcom, s, n_servers, &p1)
-                            .per_token(p1.tokens_per_s);
-                        best = Some(best.map_or(c1, |b: f64| b.min(c1)));
-                    }
-                }
+            let (m, _perf, cost) = optimizer::optimize_mapping(s, &w, score)?;
+            if m.microbatch == 1 {
+                Some(cost)
+            } else {
+                // re-evaluate at microbatch 1 with the same tp/pp
+                let m1 = crate::mapping::Mapping { microbatch: 1, ..m };
+                let p1 = crate::perf::simulate(s, &w, &m1)?;
+                let n_servers = m1.n_chips().div_ceil(s.chips().max(1));
+                Some(
+                    crate::evaluate::system_tco(space, &tcom, s, n_servers, &p1)
+                        .per_token(p1.tokens_per_s),
+                )
             }
-        }
+        });
+        let best = costs.into_iter().flatten().fold(None, |acc: Option<f64>, c| {
+            Some(acc.map_or(c, |b| b.min(c)))
+        });
         if let Some(c) = best {
             out.push(Ablation {
                 name: "micro-batch tuning (vs ub=1)".into(),

@@ -1,0 +1,433 @@
+//! The co-design sweep engine: parallel, Pareto-guided, branch-and-bound
+//! Phase-2 evaluation.
+//!
+//! The exhaustive Phase-2 procedure scores every feasible server design
+//! against a workload (or a whole Table-2 workload grid) by searching its
+//! mapping space with the analytical simulator. That product —
+//! thousands of servers × 33 grid points × hundreds of candidate mappings —
+//! is the hottest path in the codebase. The engine attacks it three ways,
+//! none of which changes the answer:
+//!
+//! 1. **Parallelism** — servers (and workload×server pairs) are evaluated
+//!    across a scoped-thread (or rayon) fork-join with deterministic,
+//!    input-order reduction ([`crate::util::parallel`]).
+//! 2. **Pruning** — an admissible TCO/Token lower bound (CapEx-only TCO at
+//!    the roofline-ideal token throughput, [`WorkloadBounds`]) skips whole
+//!    servers and individual candidate mappings whose bound already
+//!    exceeds the incumbent best, which is shared across workers through an
+//!    atomic f64. Because the bound never overestimates and the cutoff is
+//!    strict, the surviving optimum is **identical** to the exhaustive
+//!    search — ties included (first-in-order wins, as in the sequential
+//!    path).
+//! 3. **Ordering** — Pareto-frontier servers ([`crate::explore::pareto`])
+//!    are evaluated first so the incumbent drops to near-optimal almost
+//!    immediately and the dominated bulk of the space prunes cheaply. Order
+//!    affects wall-clock only, never results.
+//!
+//! `SweepEngine::default()` is what [`crate::evaluate::sweep`],
+//! [`crate::evaluate::best_point`] and [`crate::evaluate::best_over_grid`]
+//! run; `SweepEngine::sequential()` reproduces the seed's single-threaded
+//! exhaustive behaviour for benchmarks and regression tests.
+
+use crate::arch::{ChipletDesign, ServerDesign};
+use crate::config::hardware::ExploreSpace;
+use crate::config::Workload;
+use crate::cost::tco::{TcoModel, YEAR_S};
+use crate::evaluate::{system_tco, DesignPoint};
+use crate::explore::pareto;
+use crate::mapping::optimizer::{optimize_mapping_bounded, SearchStats};
+use crate::mapping::{partition, Mapping};
+use crate::perf::kernels::{KernelCache, MAC_EFFICIENCY};
+use crate::perf::DecodePerf;
+use crate::util::parallel::{self, AtomicF64};
+
+/// Aggregated counters from one engine run.
+#[derive(Clone, Copy, Debug, Default)]
+pub struct SweepStats {
+    /// (workload, server) pairs considered.
+    pub servers: usize,
+    /// Pairs skipped entirely by the server-level lower bound.
+    pub servers_pruned: usize,
+    /// Candidate mappings enumerated across all searches.
+    pub candidates: usize,
+    /// Candidate mappings simulated.
+    pub simulated: usize,
+    /// Candidate mappings skipped by the mapping-level lower bound.
+    pub mappings_pruned: usize,
+    /// Candidate mappings the simulator rejected (memory/shape misfit).
+    pub mappings_infeasible: usize,
+}
+
+/// Admissible per-workload bounds: model-derived constants from which a
+/// server-independent upper bound on achievable tokens/s (and hence a lower
+/// bound on TCO/Token) follows.
+///
+/// Derivation (all quantities per generated-token round of the whole
+/// batch): every mapping runs at least `F = (2·P_layer + 4·ctx·d_attn)·L`
+/// FLOPs per batch element, streams the stored weights at least once and
+/// each sequence's KV cache exactly once per round, and the pipeline period
+/// is at least the aggregate roofline time of that work spread over the
+/// mapping's `n` chips (epilogue and communication terms only add to it).
+/// Dividing the CapEx-only TCO rate by that ideal throughput cancels `n`,
+/// giving a bound that holds for *every* mapping on the server.
+#[derive(Clone, Copy, Debug)]
+pub struct WorkloadBounds {
+    /// Minimum decode FLOPs per generated token per sequence.
+    flops_per_token: f64,
+    /// Weight bytes streamed at least once per token round.
+    weight_bytes_round: f64,
+    /// KV bytes streamed per sequence per token round.
+    kv_bytes_per_seq_round: f64,
+    /// Batch size (sequences decoded concurrently).
+    batch: f64,
+}
+
+impl WorkloadBounds {
+    /// Compute the bounds for one workload.
+    pub fn new(w: &Workload) -> WorkloadBounds {
+        let m = &w.model;
+        let layers = m.n_layers as f64;
+        let p_layer = partition::params_per_layer(m);
+        WorkloadBounds {
+            flops_per_token: (2.0 * p_layer + 4.0 * w.ctx as f64 * m.d_attn() as f64) * layers,
+            weight_bytes_round: p_layer * m.bytes_per_param * w.weight_read_scale * layers,
+            kv_bytes_per_seq_round: 2.0
+                * w.ctx as f64
+                * (m.kv_heads() * m.d_head) as f64
+                * m.bytes_per_param
+                * layers,
+            batch: w.batch as f64,
+        }
+    }
+
+    /// Upper bound on sustainable decode tokens/s **per chip** for any
+    /// mapping of this workload onto `chip` (compute and memory rooflines).
+    pub fn ideal_tokens_per_s_chip(&self, chip: &ChipletDesign) -> f64 {
+        let peak = chip.tflops * 1e12 * MAC_EFFICIENCY;
+        let compute = if self.flops_per_token > 0.0 {
+            peak / self.flops_per_token
+        } else {
+            f64::INFINITY
+        };
+        let bytes = self.weight_bytes_round + self.batch * self.kv_bytes_per_seq_round;
+        let memory = if bytes > 0.0 {
+            chip.mem_bw_gbps * 1e9 * self.batch / bytes
+        } else {
+            f64::INFINITY
+        };
+        compute.min(memory)
+    }
+
+    /// Lower bound on TCO/Token achievable by **any** mapping on `server`:
+    /// CapEx-only TCO at the ideal token throughput (the chip count
+    /// cancels). Returns 0.0 (never prunes) when the bound is degenerate.
+    pub fn server_lower_bound(&self, space: &ExploreSpace, server: &ServerDesign) -> f64 {
+        let tpsc = self.ideal_tokens_per_s_chip(&server.chiplet);
+        if !tpsc.is_finite() || tpsc <= 0.0 {
+            return 0.0;
+        }
+        let cps = server.chips().max(1) as f64;
+        server.server_capex / (cps * space.server.server_life_years * YEAR_S * tpsc)
+    }
+}
+
+/// The sweep engine configuration. See the module docs.
+#[derive(Clone, Copy, Debug)]
+pub struct SweepEngine {
+    /// Worker threads; 0 = auto (`CC_SWEEP_THREADS` or the machine width).
+    pub threads: usize,
+    /// Enable the branch-and-bound lower-bound cutoff.
+    pub prune: bool,
+    /// Evaluate Pareto-frontier servers first (wall-clock heuristic only).
+    pub pareto_order: bool,
+}
+
+impl Default for SweepEngine {
+    /// The production configuration; `CC_SWEEP_PRUNE=0` / `CC_SWEEP_PARETO=0`
+    /// environment knobs disable the respective stage (the `ccloud --seq`
+    /// flag sets all three knobs back to the seed's sequential behaviour).
+    fn default() -> Self {
+        let on = |var: &str| std::env::var(var).map(|v| v != "0").unwrap_or(true);
+        SweepEngine {
+            threads: 0,
+            prune: on("CC_SWEEP_PRUNE"),
+            pareto_order: on("CC_SWEEP_PARETO"),
+        }
+    }
+}
+
+impl SweepEngine {
+    /// The seed's exhaustive single-threaded path: no parallelism, no
+    /// pruning, no reordering. The reference for regression tests and the
+    /// baseline of `bench_sweep_engine`.
+    pub fn sequential() -> SweepEngine {
+        SweepEngine { threads: 1, prune: false, pareto_order: false }
+    }
+
+    fn order(&self, servers: &[ServerDesign]) -> Vec<usize> {
+        if self.pareto_order {
+            pareto::frontier_first_order(servers)
+        } else {
+            (0..servers.len()).collect()
+        }
+    }
+
+    /// Phase-2 over a set of servers: the best point **per server** (the
+    /// Fig.-7 scatter). Per-server results are exact (pruning uses only the
+    /// server's own incumbent), and the output order matches `servers`.
+    pub fn sweep(
+        &self,
+        space: &ExploreSpace,
+        servers: &[ServerDesign],
+        w: &Workload,
+    ) -> Vec<DesignPoint> {
+        let wb = WorkloadBounds::new(w);
+        parallel::par_map(servers, self.threads, |s| {
+            evaluate_server_bounded(space, s, w, &wb, self.prune, f64::INFINITY).0
+        })
+        .into_iter()
+        .flatten()
+        .collect()
+    }
+
+    /// Global TCO/Token-optimal point for a workload: the exhaustive
+    /// optimum, with exact `tco_per_token` ties resolved to the first
+    /// server in input order — every engine configuration (sequential,
+    /// parallel, pruned) implements this same reduction, so they agree
+    /// bit-for-bit even on ties.
+    pub fn best_point(
+        &self,
+        space: &ExploreSpace,
+        servers: &[ServerDesign],
+        w: &Workload,
+    ) -> Option<DesignPoint> {
+        self.best_over_grid_indexed(space, servers, std::slice::from_ref(w)).0.map(|(_, p)| p)
+    }
+
+    /// [`SweepEngine::best_point`] with engine counters.
+    pub fn best_point_stats(
+        &self,
+        space: &ExploreSpace,
+        servers: &[ServerDesign],
+        w: &Workload,
+    ) -> (Option<DesignPoint>, SweepStats) {
+        let (best, stats) = self.best_over_grid_indexed(space, servers, std::slice::from_ref(w));
+        (best.map(|(_, p)| p), stats)
+    }
+
+    /// Best point for a model across a workload grid (the Table-2
+    /// procedure), evaluating all (workload, server) pairs in parallel
+    /// under one shared incumbent.
+    pub fn best_over_grid(
+        &self,
+        space: &ExploreSpace,
+        servers: &[ServerDesign],
+        grid: &[Workload],
+    ) -> Option<(Workload, DesignPoint)> {
+        self.best_over_grid_stats(space, servers, grid).0
+    }
+
+    /// [`SweepEngine::best_over_grid`] with engine counters.
+    pub fn best_over_grid_stats(
+        &self,
+        space: &ExploreSpace,
+        servers: &[ServerDesign],
+        grid: &[Workload],
+    ) -> (Option<(Workload, DesignPoint)>, SweepStats) {
+        let (best, stats) = self.best_over_grid_indexed(space, servers, grid);
+        (best.map(|(wi, p)| (grid[wi].clone(), p)), stats)
+    }
+
+    /// Core reduction: evaluate all (workload, server) pairs, sharing one
+    /// atomic incumbent, and return the argmin by
+    /// (score, workload index, server index) — exactly the sequential
+    /// first-minimum semantics. Only scores travel through the parallel
+    /// reduction; the winner's full design point is recomputed exactly once
+    /// at the end.
+    fn best_over_grid_indexed(
+        &self,
+        space: &ExploreSpace,
+        servers: &[ServerDesign],
+        grid: &[Workload],
+    ) -> (Option<(usize, DesignPoint)>, SweepStats) {
+        let bounds: Vec<WorkloadBounds> = grid.iter().map(WorkloadBounds::new).collect();
+        let order = self.order(servers);
+        let mut pairs: Vec<(usize, usize)> = Vec::with_capacity(grid.len() * order.len());
+        for wi in 0..grid.len() {
+            for &si in &order {
+                pairs.push((wi, si));
+            }
+        }
+        let incumbent = AtomicF64::new(f64::INFINITY);
+        let results = parallel::par_map(&pairs, self.threads, |&(wi, si)| {
+            let server = &servers[si];
+            let wb = &bounds[wi];
+            if self.prune && wb.server_lower_bound(space, server) > incumbent.load() {
+                return (f64::INFINITY, SearchStats::default(), true);
+            }
+            let (point, stats) =
+                evaluate_server_bounded(space, server, &grid[wi], wb, self.prune, incumbent.load());
+            match point {
+                Some(p) => {
+                    incumbent.fetch_min(p.tco_per_token);
+                    (p.tco_per_token, stats, false)
+                }
+                None => (f64::INFINITY, stats, false),
+            }
+        });
+
+        let mut stats = SweepStats { servers: pairs.len(), ..Default::default() };
+        let mut best: Option<(f64, usize, usize)> = None; // (score, wi, si)
+        for (i, (score, st, server_pruned)) in results.iter().enumerate() {
+            stats.candidates += st.candidates;
+            stats.simulated += st.simulated;
+            stats.mappings_pruned += st.pruned;
+            stats.mappings_infeasible += st.infeasible;
+            if *server_pruned {
+                stats.servers_pruned += 1;
+            }
+            if !score.is_finite() {
+                continue;
+            }
+            let (wi, si) = pairs[i];
+            let better = match best {
+                None => true,
+                Some((bs, bwi, bsi)) => {
+                    *score < bs || (*score == bs && (wi, si) < (bwi, bsi))
+                }
+            };
+            if better {
+                best = Some((*score, wi, si));
+            }
+        }
+        let winner = best.map(|(_, wi, si)| {
+            // Exact, unpruned recomputation of the winning pair (cheap: one
+            // server × one workload).
+            let point = evaluate_server_bounded(
+                space,
+                &servers[si],
+                &grid[wi],
+                &bounds[wi],
+                false,
+                f64::INFINITY,
+            )
+            .0
+            .expect("winning pair must re-evaluate");
+            (wi, point)
+        });
+        (winner, stats)
+    }
+}
+
+/// Evaluate one server design for a workload with the TCO/Token objective,
+/// the admissible mapping-level lower bound, and an external incumbent.
+/// With `prune == false` this is exactly the seed's `evaluate_server`.
+pub(crate) fn evaluate_server_bounded(
+    space: &ExploreSpace,
+    server: &ServerDesign,
+    w: &Workload,
+    wb: &WorkloadBounds,
+    prune: bool,
+    incumbent: f64,
+) -> (Option<DesignPoint>, SearchStats) {
+    let tcom = TcoModel { server: space.server.clone(), dc: space.dc.clone() };
+    let cps = server.chips().max(1);
+    let score = |mapping: &Mapping, perf: &DecodePerf| -> f64 {
+        let n_servers = mapping.n_chips().div_ceil(cps);
+        system_tco(space, &tcom, server, n_servers, perf).per_token(perf.tokens_per_s)
+    };
+    let life = space.server.server_life_years;
+    let tpsc = wb.ideal_tokens_per_s_chip(&server.chiplet);
+    let lb = |mapping: &Mapping| -> f64 {
+        let n = mapping.n_chips();
+        let n_servers = n.div_ceil(cps) as f64;
+        let capex_rate = server.server_capex * n_servers / (life * YEAR_S);
+        let tps_ub = n as f64 * tpsc;
+        if tps_ub > 0.0 && tps_ub.is_finite() {
+            capex_rate / tps_ub
+        } else {
+            0.0
+        }
+    };
+    let bound: Option<&dyn Fn(&Mapping) -> f64> = if prune { Some(&lb) } else { None };
+    let mut cache = KernelCache::default();
+    let (found, stats) = optimize_mapping_bounded(
+        server,
+        w,
+        score,
+        if prune { incumbent } else { f64::INFINITY },
+        bound,
+        &mut cache,
+    );
+    let point = found.map(|(mapping, perf, tco_per_token)| {
+        let n_servers = mapping.n_chips().div_ceil(cps);
+        let tco = system_tco(space, &tcom, server, n_servers, &perf);
+        DesignPoint { server: server.clone(), mapping, n_servers, perf, tco, tco_per_token }
+    });
+    (point, stats)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::ModelSpec;
+    use crate::explore::phase1;
+
+    fn setup() -> (ExploreSpace, Vec<ServerDesign>) {
+        let space = ExploreSpace::coarse();
+        let (servers, _) = phase1(&space);
+        (space, servers)
+    }
+
+    #[test]
+    fn engine_configurations_agree_on_best_point() {
+        let (space, servers) = setup();
+        let w = Workload::new(ModelSpec::megatron(), 1024, 64);
+        let seq = SweepEngine::sequential().best_point(&space, &servers, &w).expect("feasible");
+        for engine in [
+            SweepEngine { threads: 0, prune: false, pareto_order: false },
+            SweepEngine { threads: 0, prune: true, pareto_order: false },
+            SweepEngine { threads: 0, prune: true, pareto_order: true },
+        ] {
+            let got = engine.best_point(&space, &servers, &w).expect("feasible");
+            assert_eq!(got.mapping, seq.mapping);
+            assert_eq!(got.server, seq.server);
+            assert_eq!(got.n_servers, seq.n_servers);
+            assert_eq!(got.tco_per_token.to_bits(), seq.tco_per_token.to_bits());
+        }
+    }
+
+    #[test]
+    fn pruning_actually_prunes() {
+        let (space, servers) = setup();
+        let w = Workload::new(ModelSpec::gpt3(), 2048, 256);
+        let engine = SweepEngine { threads: 0, prune: true, pareto_order: true };
+        let (_, stats) = engine.best_point_stats(&space, &servers, &w);
+        assert!(
+            stats.mappings_pruned + stats.servers_pruned > 0,
+            "lower-bound cutoff never fired: {stats:?}"
+        );
+        assert_eq!(
+            stats.candidates,
+            stats.simulated + stats.mappings_pruned + stats.mappings_infeasible
+        );
+    }
+
+    #[test]
+    fn server_lower_bound_is_admissible_on_real_points() {
+        let (space, servers) = setup();
+        let w = Workload::new(ModelSpec::megatron(), 1024, 32);
+        let wb = WorkloadBounds::new(&w);
+        let points = SweepEngine::sequential().sweep(&space, &servers, &w);
+        assert!(!points.is_empty());
+        for p in &points {
+            let lb = wb.server_lower_bound(&space, &p.server);
+            assert!(
+                lb <= p.tco_per_token * (1.0 + 1e-12),
+                "bound {lb} exceeds true score {} for {:?}",
+                p.tco_per_token,
+                p.server.chiplet
+            );
+        }
+    }
+}

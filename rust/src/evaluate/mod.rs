@@ -7,15 +7,18 @@
 //! figures plot (TCO vs die size, batch sweeps, multi-model objectives).
 
 pub mod ablation;
+pub mod engine;
 pub mod multi_model;
 pub mod sensitivity;
 pub mod sparsity;
+
+pub use engine::{SweepEngine, SweepStats, WorkloadBounds};
 
 use crate::arch::ServerDesign;
 use crate::config::hardware::ExploreSpace;
 use crate::config::Workload;
 use crate::cost::tco::{Tco, TcoModel};
-use crate::mapping::{optimizer, Mapping};
+use crate::mapping::Mapping;
 use crate::perf::DecodePerf;
 use crate::power;
 
@@ -49,22 +52,23 @@ impl DesignPoint {
 }
 
 /// Evaluate one server design for a workload: find its TCO/Token-optimal
-/// mapping. Returns None if nothing fits.
+/// mapping. Returns None if nothing fits. (The exhaustive single-server
+/// path: delegates to the engine's bounded evaluator with pruning off so
+/// the objective and DesignPoint assembly live in exactly one place.)
 pub fn evaluate_server(
     space: &ExploreSpace,
     server: &ServerDesign,
     w: &Workload,
 ) -> Option<DesignPoint> {
-    let tcom = TcoModel { server: space.server.clone(), dc: space.dc.clone() };
-    let cps = server.chips().max(1);
-    let score = |mapping: &Mapping, perf: &DecodePerf| -> f64 {
-        let n_servers = mapping.n_chips().div_ceil(cps);
-        system_tco(space, &tcom, server, n_servers, perf).per_token(perf.tokens_per_s)
-    };
-    let (mapping, perf, tco_per_token) = optimizer::optimize_mapping(server, w, score)?;
-    let n_servers = mapping.n_chips().div_ceil(cps);
-    let tco = system_tco(space, &tcom, server, n_servers, &perf);
-    Some(DesignPoint { server: server.clone(), mapping, n_servers, perf, tco, tco_per_token })
+    engine::evaluate_server_bounded(
+        space,
+        server,
+        w,
+        &WorkloadBounds::new(w),
+        false,
+        f64::INFINITY,
+    )
+    .0
 }
 
 /// System TCO: `n_servers` replicas at the utilization the simulation found.
@@ -94,37 +98,36 @@ pub fn system_tco(
 
 /// Phase-2 over a set of servers: the best point per server (the scatter
 /// the paper's Fig. 7 plots) — use [`best_point`] for the global optimum.
+///
+/// Runs on the default [`SweepEngine`] (parallel + pruned); per-server
+/// results and their order are identical to the sequential evaluation.
 pub fn sweep(space: &ExploreSpace, servers: &[ServerDesign], w: &Workload) -> Vec<DesignPoint> {
-    servers.iter().filter_map(|s| evaluate_server(space, s, w)).collect()
+    SweepEngine::default().sweep(space, servers, w)
 }
 
-/// Global TCO/Token-optimal point for a workload.
+/// Global TCO/Token-optimal point for a workload, via the default
+/// [`SweepEngine`] — the same optimal value and mapping as the exhaustive
+/// sweep. Exact ties on `tco_per_token` resolve to the **first** server in
+/// input order (the seed's `min_by` took the last; first-minimum is what
+/// both `SweepEngine::sequential()` and the parallel engine implement, so
+/// pruned/parallel/sequential all agree bit-for-bit).
 pub fn best_point(
     space: &ExploreSpace,
     servers: &[ServerDesign],
     w: &Workload,
 ) -> Option<DesignPoint> {
-    sweep(space, servers, w)
-        .into_iter()
-        .min_by(|a, b| a.tco_per_token.partial_cmp(&b.tco_per_token).unwrap())
+    SweepEngine::default().best_point(space, servers, w)
 }
 
 /// Best point for a model across a workload grid (the Table-2 procedure:
-/// ctx ∈ {1024, 2048, 4096} × batch 1..1024, keep the global optimum).
+/// ctx ∈ {1024, 2048, 4096} × batch 1..1024, keep the global optimum), via
+/// the default [`SweepEngine`].
 pub fn best_over_grid(
     space: &ExploreSpace,
     servers: &[ServerDesign],
     grid: &[Workload],
 ) -> Option<(Workload, DesignPoint)> {
-    let mut best: Option<(Workload, DesignPoint)> = None;
-    for w in grid {
-        if let Some(p) = best_point(space, servers, w) {
-            if best.as_ref().map(|(_, b)| p.tco_per_token < b.tco_per_token).unwrap_or(true) {
-                best = Some((w.clone(), p));
-            }
-        }
-    }
-    best
+    SweepEngine::default().best_over_grid(space, servers, grid)
 }
 
 #[cfg(test)]

@@ -48,34 +48,34 @@ pub struct MultiModelResult {
 
 /// Search `chips` for the design minimizing geomean TCO/Token across
 /// `models` (each evaluated at its own (ctx, batch) operating point).
+///
+/// Candidate chips are scored in parallel via the sweep engine's fork-join;
+/// the winner is reduced in input order (first minimum), so the result is
+/// deterministic and identical to the sequential search.
 pub fn multi_model_search(
     space: &ExploreSpace,
     chips: &[ChipletDesign],
     models: &[(ModelSpec, usize, usize)],
 ) -> Option<MultiModelResult> {
-    let mut best: Option<MultiModelResult> = None;
-    for chip in chips {
+    let scored = crate::util::parallel::par_map(chips, 0, |chip| {
         let mut pts = Vec::with_capacity(models.len());
-        let mut ok = true;
         for (m, ctx, batch) in models {
             match best_for_chip(space, chip, m, *ctx, *batch) {
                 Some(p) => pts.push(p),
-                None => {
-                    ok = false;
-                    break;
-                }
+                None => return None,
             }
         }
-        if !ok {
-            continue;
-        }
         let g = geomean(&pts.iter().map(|p| p.tco_per_token).collect::<Vec<_>>());
-        if best.as_ref().map(|b| g < b.geomean_tco_per_token).unwrap_or(true) {
-            best = Some(MultiModelResult {
-                chip: chip.clone(),
-                geomean_tco_per_token: g,
-                per_model: pts,
-            });
+        Some(MultiModelResult { chip: chip.clone(), geomean_tco_per_token: g, per_model: pts })
+    });
+    let mut best: Option<MultiModelResult> = None;
+    for candidate in scored.into_iter().flatten() {
+        if best
+            .as_ref()
+            .map(|b| candidate.geomean_tco_per_token < b.geomean_tco_per_token)
+            .unwrap_or(true)
+        {
+            best = Some(candidate);
         }
     }
     best

@@ -6,11 +6,14 @@
 //! server envelope. Produces the *feasible server designs* Phase 2
 //! evaluates per workload.
 
+pub mod pareto;
+
 use crate::arch::{ChipletDesign, ServerDesign};
 use crate::config::hardware::ExploreSpace;
 use crate::cost::server::server_capex;
 use crate::power::server_wall_power;
 use crate::thermal::{lane_feasible, ThermalParams};
+use crate::util::parallel;
 
 /// Why a swept point was rejected (for exploration reports).
 #[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
@@ -42,35 +45,75 @@ pub struct ExploreStats {
     pub rejected_thermal: usize,
 }
 
+impl ExploreStats {
+    /// Fold another partial sweep's counters into this one.
+    fn absorb(&mut self, o: &ExploreStats) {
+        self.swept += o.swept;
+        self.feasible += o.feasible;
+        self.rejected_geometry += o.rejected_geometry;
+        self.rejected_silicon += o.rejected_silicon;
+        self.rejected_power += o.rejected_power;
+        self.rejected_thermal += o.rejected_thermal;
+    }
+}
+
 /// Run the Phase-1 sweep: every (die size, SRAM fraction, bandwidth ratio,
 /// chips/lane) combination, validated bottom-up into a server design.
+///
+/// Parallel across (die, SRAM fraction, bandwidth) tuples — the expensive
+/// [`crate::area::design_chiplet`] derivation runs **once** per tuple and is
+/// shared by the whole chips-per-lane inner loop. Results are returned in
+/// the same deterministic order as the sequential sweep.
 pub fn phase1(space: &ExploreSpace) -> (Vec<ServerDesign>, ExploreStats) {
+    phase1_with_threads(space, 0)
+}
+
+/// The single-threaded Phase-1 sweep (the seed behaviour; kept for the
+/// engine benchmarks and as the reference in regression tests).
+pub fn phase1_seq(space: &ExploreSpace) -> (Vec<ServerDesign>, ExploreStats) {
+    phase1_with_threads(space, 1)
+}
+
+fn phase1_with_threads(space: &ExploreSpace, threads: usize) -> (Vec<ServerDesign>, ExploreStats) {
     let tp = ThermalParams::default();
-    let mut out = Vec::new();
-    let mut stats = ExploreStats::default();
+    let mut tuples = Vec::with_capacity(
+        space.die_sizes_mm2.len() * space.sram_fracs.len() * space.bw_ratios.len(),
+    );
     for &die in &space.die_sizes_mm2 {
         for &frac in &space.sram_fracs {
             for &bw in &space.bw_ratios {
-                let designed = crate::area::design_chiplet(&space.tech, die, frac, bw);
-                for &cpl in &space.chips_per_lane {
-                    stats.swept += 1;
-                    let Some((chip, _)) = designed.as_ref() else {
-                        stats.rejected_geometry += 1;
-                        continue;
-                    };
-                    match check_server(space, &tp, chip, cpl) {
-                        Ok(server) => {
-                            stats.feasible += 1;
-                            out.push(server);
-                        }
-                        Err(Rejection::Geometry) => stats.rejected_geometry += 1,
-                        Err(Rejection::SiliconPerLane) => stats.rejected_silicon += 1,
-                        Err(Rejection::LanePower) => stats.rejected_power += 1,
-                        Err(Rejection::Thermal) => stats.rejected_thermal += 1,
-                    }
-                }
+                tuples.push((die, frac, bw));
             }
         }
+    }
+    let parts = parallel::par_map(&tuples, threads, |&(die, frac, bw)| {
+        let designed = crate::area::design_chiplet(&space.tech, die, frac, bw);
+        let mut out = Vec::new();
+        let mut stats = ExploreStats::default();
+        for &cpl in &space.chips_per_lane {
+            stats.swept += 1;
+            let Some((chip, _)) = designed.as_ref() else {
+                stats.rejected_geometry += 1;
+                continue;
+            };
+            match check_server(space, &tp, chip, cpl) {
+                Ok(server) => {
+                    stats.feasible += 1;
+                    out.push(server);
+                }
+                Err(Rejection::Geometry) => stats.rejected_geometry += 1,
+                Err(Rejection::SiliconPerLane) => stats.rejected_silicon += 1,
+                Err(Rejection::LanePower) => stats.rejected_power += 1,
+                Err(Rejection::Thermal) => stats.rejected_thermal += 1,
+            }
+        }
+        (out, stats)
+    });
+    let mut out = Vec::new();
+    let mut stats = ExploreStats::default();
+    for (part, s) in parts {
+        out.extend(part);
+        stats.absorb(&s);
     }
     (out, stats)
 }
@@ -149,6 +192,20 @@ mod tests {
             assert!(s.server_capex > 0.0);
             assert!(s.server_power_w > 0.0);
         }
+    }
+
+    #[test]
+    fn parallel_sweep_matches_sequential() {
+        let space = ExploreSpace::coarse();
+        let (par, par_stats) = phase1(&space);
+        let (seq, seq_stats) = phase1_seq(&space);
+        assert_eq!(par, seq, "parallel phase 1 must be order- and value-identical");
+        assert_eq!(par_stats.swept, seq_stats.swept);
+        assert_eq!(par_stats.feasible, seq_stats.feasible);
+        assert_eq!(par_stats.rejected_geometry, seq_stats.rejected_geometry);
+        assert_eq!(par_stats.rejected_silicon, seq_stats.rejected_silicon);
+        assert_eq!(par_stats.rejected_power, seq_stats.rejected_power);
+        assert_eq!(par_stats.rejected_thermal, seq_stats.rejected_thermal);
     }
 
     #[test]

@@ -1,0 +1,156 @@
+//! Pareto dominance over Phase-1 server designs.
+//!
+//! The reference methodology (bespoke-silicon-group/reallm) outputs the
+//! Pareto frontier of realizable designs; we use the same dominance
+//! relation to (a) report the frontier and (b) drive the sweep engine's
+//! evaluation **order**: frontier servers are evaluated first so the
+//! branch-and-bound incumbent drops quickly and the dominated bulk of the
+//! space is pruned by the TCO/Token lower bound.
+//!
+//! Ordering-by-dominance is a pure heuristic — the engine never *drops* a
+//! server on dominance alone, so the exactness guarantee of the sweep
+//! (identical optimum to the exhaustive search) is preserved by
+//! construction. Use [`pareto_filter`] explicitly when a hard frontier cut
+//! is wanted (e.g. for plotting).
+
+use crate::arch::ServerDesign;
+use crate::util::parallel;
+
+/// The dominance attributes of a server design: two costs (lower is
+/// better) and two capabilities (higher is better).
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct Attrs {
+    /// Server CapEx, $ (cost).
+    pub capex: f64,
+    /// Peak wall power, W (cost).
+    pub power_w: f64,
+    /// Total CC-MEM capacity per server, MB (capability).
+    pub sram_mb: f64,
+    /// Total peak compute per server, TFLOPS (capability).
+    pub tflops: f64,
+}
+
+/// Extract the dominance attributes of a server design.
+pub fn attrs(s: &ServerDesign) -> Attrs {
+    Attrs {
+        capex: s.server_capex,
+        power_w: s.server_power_w,
+        sram_mb: s.sram_mb(),
+        tflops: s.tflops(),
+    }
+}
+
+/// Does `a` dominate `b`: no worse on every axis and strictly better on at
+/// least one?
+pub fn dominates(a: &Attrs, b: &Attrs) -> bool {
+    let no_worse = a.capex <= b.capex
+        && a.power_w <= b.power_w
+        && a.sram_mb >= b.sram_mb
+        && a.tflops >= b.tflops;
+    let strictly = a.capex < b.capex
+        || a.power_w < b.power_w
+        || a.sram_mb > b.sram_mb
+        || a.tflops > b.tflops;
+    no_worse && strictly
+}
+
+/// Indices of the Pareto-frontier members of `servers`, ascending.
+///
+/// Attribute-identical duplicates keep only the first occurrence on the
+/// frontier (the later copies are treated as dominated), so the frontier
+/// is duplicate-free under `Attrs` equality.
+pub fn frontier_indices(servers: &[ServerDesign]) -> Vec<usize> {
+    let at: Vec<Attrs> = servers.iter().map(attrs).collect();
+    let idx: Vec<usize> = (0..servers.len()).collect();
+    let on_frontier = parallel::par_map(&idx, 0, |&i| {
+        !at.iter()
+            .enumerate()
+            .any(|(j, a)| j != i && (dominates(a, &at[i]) || (j < i && *a == at[i])))
+    });
+    idx.into_iter().filter(|&i| on_frontier[i]).collect()
+}
+
+/// The Pareto-frontier subset of `servers` (a hard filter — see the module
+/// docs for when this is appropriate).
+pub fn pareto_filter(servers: &[ServerDesign]) -> Vec<ServerDesign> {
+    frontier_indices(servers).into_iter().map(|i| servers[i].clone()).collect()
+}
+
+/// An evaluation order for the sweep engine: frontier indices first (each
+/// group ascending), then everything else. A permutation of `0..len`.
+pub fn frontier_first_order(servers: &[ServerDesign]) -> Vec<usize> {
+    let frontier = frontier_indices(servers);
+    let mut on = vec![false; servers.len()];
+    for &i in &frontier {
+        on[i] = true;
+    }
+    let mut order = frontier;
+    order.extend((0..servers.len()).filter(|&i| !on[i]));
+    order
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::hardware::ExploreSpace;
+    use crate::explore::phase1;
+
+    fn coarse_servers() -> Vec<ServerDesign> {
+        phase1(&ExploreSpace::coarse()).0
+    }
+
+    #[test]
+    fn frontier_members_are_not_dominated() {
+        let servers = coarse_servers();
+        let at: Vec<Attrs> = servers.iter().map(attrs).collect();
+        let frontier = frontier_indices(&servers);
+        assert!(!frontier.is_empty());
+        assert!(frontier.len() < servers.len(), "some designs must be dominated");
+        for &i in &frontier {
+            assert!(
+                !at.iter().enumerate().any(|(j, a)| j != i && dominates(a, &at[i])),
+                "frontier member {i} is dominated"
+            );
+        }
+    }
+
+    #[test]
+    fn dropped_designs_are_covered_by_the_frontier() {
+        let servers = coarse_servers();
+        let at: Vec<Attrs> = servers.iter().map(attrs).collect();
+        let frontier = frontier_indices(&servers);
+        let on: std::collections::HashSet<usize> = frontier.iter().copied().collect();
+        for i in 0..servers.len() {
+            if on.contains(&i) {
+                continue;
+            }
+            assert!(
+                frontier.iter().any(|&j| dominates(&at[j], &at[i]) || at[j] == at[i]),
+                "dropped design {i} has no frontier cover"
+            );
+        }
+    }
+
+    #[test]
+    fn frontier_first_order_is_a_permutation() {
+        let servers = coarse_servers();
+        let mut order = frontier_first_order(&servers);
+        assert_eq!(order.len(), servers.len());
+        order.sort_unstable();
+        assert!(order.iter().copied().eq(0..servers.len()));
+    }
+
+    #[test]
+    fn dominance_relation_axioms() {
+        let a = Attrs { capex: 100.0, power_w: 50.0, sram_mb: 10.0, tflops: 5.0 };
+        let cheaper = Attrs { capex: 90.0, ..a };
+        let richer = Attrs { sram_mb: 20.0, ..a };
+        let mixed = Attrs { capex: 90.0, sram_mb: 5.0, ..a };
+        assert!(dominates(&cheaper, &a) && !dominates(&a, &cheaper));
+        assert!(dominates(&richer, &a));
+        // trade-offs do not dominate in either direction
+        assert!(!dominates(&mixed, &a) && !dominates(&a, &mixed));
+        // irreflexive
+        assert!(!dominates(&a, &a));
+    }
+}

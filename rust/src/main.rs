@@ -3,13 +3,16 @@
 //! Subcommands:
 //! * `explore`                — Phase-1 hardware exploration summary
 //! * `optimize --model NAME`  — full two-phase DSE for one model
+//! * `sweep [--model NAME]`   — sweep-engine report (frontier, pruning, wall time)
 //! * `table2` / `fig7`..`fig15` — regenerate a paper table/figure
 //! * `serve`                  — load AOT artifacts and serve a demo stream
 //! * `ccmem`                  — run the CC-MEM cycle simulator validations
 //!
 //! `--full` switches from the coarse sweep (default, seconds) to the
-//! paper-scale sweep (Table-1 ranges; minutes on one core).
-//! `--out results` writes each table as CSV.
+//! paper-scale sweep (Table-1 ranges). `--out results` writes each table as
+//! CSV. `--threads N` pins the sweep-engine worker count; `--seq` forces
+//! the sequential exhaustive path (no parallelism, no pruning, no Pareto
+//! ordering — the reference behaviour).
 
 use std::path::PathBuf;
 use std::time::Duration;
@@ -20,30 +23,43 @@ use chiplet_cloud::coordinator::{Coordinator, CoordinatorConfig};
 use chiplet_cloud::report::{self, Ctx};
 use chiplet_cloud::util::cli::Args;
 use chiplet_cloud::util::rng::Rng;
+use chiplet_cloud::{Error, Result};
 
 fn usage() -> ! {
     eprintln!(
-        "usage: ccloud <cmd> [--full] [--out DIR] [--model NAME] ...\n\
-         cmds: explore optimize table2 fig7..fig15 ablate serve ccmem"
+        "usage: ccloud <cmd> [--full] [--out DIR] [--model NAME] [--threads N] [--seq] ...\n\
+         cmds: explore optimize sweep table2 fig7..fig15 ablate serve ccmem"
     );
     std::process::exit(2)
 }
 
-fn main() -> anyhow::Result<()> {
+fn main() -> Result<()> {
     let args = Args::from_env();
     let cmd = args.positional.first().cloned().unwrap_or_else(|| usage());
     let out_dir: Option<PathBuf> = args.get("out").map(PathBuf::from);
     let out = out_dir.as_deref();
     let space = if args.has("full") { ExploreSpace::default() } else { ExploreSpace::coarse() };
 
+    // Sweep-engine knobs (read by SweepEngine::default / util::parallel).
+    if let Some(t) = args.get("threads") {
+        std::env::set_var("CC_SWEEP_THREADS", t);
+    }
+    if args.has("seq") {
+        std::env::set_var("CC_SWEEP_THREADS", "1");
+        std::env::set_var("CC_SWEEP_PRUNE", "0");
+        std::env::set_var("CC_SWEEP_PARETO", "0");
+    }
+
     match cmd.as_str() {
         "explore" => {
             let (servers, stats) = chiplet_cloud::explore::phase1(&space);
+            let frontier = chiplet_cloud::explore::pareto::frontier_indices(&servers);
             println!(
-                "phase 1: swept {} points -> {} feasible servers \
+                "phase 1: swept {} points -> {} feasible servers, {} on the Pareto frontier \
                  (rejected: geometry {}, silicon/lane {}, power {}, thermal {})",
                 stats.swept,
                 servers.len(),
+                frontier.len(),
                 stats.rejected_geometry,
                 stats.rejected_silicon,
                 stats.rejected_power,
@@ -53,9 +69,17 @@ fn main() -> anyhow::Result<()> {
         "optimize" => {
             let name = args.get("model").unwrap_or("gpt3");
             let model = ModelSpec::by_name(name)
-                .ok_or_else(|| anyhow::anyhow!("unknown model {name}"))?;
+                .ok_or_else(|| Error::Config(format!("unknown model {name}")))?;
             let ctx = Ctx::new(space);
             let t = report::table2(&ctx, &[model], out);
+            print!("{}", t.render());
+        }
+        "sweep" => {
+            let name = args.get("model").unwrap_or("gpt3");
+            let model = ModelSpec::by_name(name)
+                .ok_or_else(|| Error::Config(format!("unknown model {name}")))?;
+            let ctx = Ctx::new(space);
+            let t = report::sweep_summary(&ctx, &model, out);
             print!("{}", t.render());
         }
         "table2" => {
@@ -79,7 +103,7 @@ fn main() -> anyhow::Result<()> {
         "ablate" => {
             let name = args.get("model").unwrap_or("gpt3");
             let model = ModelSpec::by_name(name)
-                .ok_or_else(|| anyhow::anyhow!("unknown model {name}"))?;
+                .ok_or_else(|| Error::Config(format!("unknown model {name}")))?;
             let t = chiplet_cloud::evaluate::ablation::ablation_table(
                 &space,
                 &model,
@@ -97,7 +121,7 @@ fn main() -> anyhow::Result<()> {
 
 /// Demo serving loop on the AOT artifacts (see examples/serve_llm.rs for
 /// the full end-to-end driver).
-fn serve(args: &Args) -> anyhow::Result<()> {
+fn serve(args: &Args) -> Result<()> {
     let dir = args.get("artifacts").unwrap_or("artifacts").to_string();
     let model = args.get("model").unwrap_or("cc-tiny").to_string();
     let requests: usize = args.get_or("requests", 8);

@@ -4,7 +4,7 @@
 pub mod optimizer;
 pub mod partition;
 
-pub use optimizer::{candidate_mappings, optimize_mapping};
+pub use optimizer::{candidate_mappings, optimize_mapping, optimize_mapping_bounded, SearchStats};
 pub use partition::ChipProfile;
 
 /// One parallel mapping of a model onto a chiplet system.

@@ -32,6 +32,42 @@ pub fn kernel_compute_util(chip: &ChipletDesign, flops: f64, bytes: f64) -> f64 
     (flops / (chip.tflops * 1e12)) / t
 }
 
+/// Memo table for [`kernel_latency`] within one mapping search.
+///
+/// The roofline inputs of the per-layer kernel depend only on the
+/// (tensor-parallel width, micro-batch) pair — not on the pipeline depth or
+/// the server-count scale — so a search over hundreds of candidate mappings
+/// touches only a handful of distinct kernels. Keyed by `(tp, microbatch)`;
+/// **must not** be shared across different (chip, workload) pairs.
+#[derive(Clone, Debug, Default)]
+pub struct KernelCache {
+    entries: Vec<(usize, usize, f64)>,
+}
+
+impl KernelCache {
+    /// Cached latency for `(tp, microbatch)`, computing it via `f` on miss.
+    pub fn latency(&mut self, tp: usize, microbatch: usize, f: impl FnOnce() -> f64) -> f64 {
+        if let Some(&(_, _, v)) =
+            self.entries.iter().find(|&&(a, b, _)| a == tp && b == microbatch)
+        {
+            return v;
+        }
+        let v = f();
+        self.entries.push((tp, microbatch, v));
+        v
+    }
+
+    /// Number of distinct kernels memoized.
+    pub fn len(&self) -> usize {
+        self.entries.len()
+    }
+
+    /// True when nothing has been memoized yet.
+    pub fn is_empty(&self) -> bool {
+        self.entries.is_empty()
+    }
+}
+
 /// The micro-batch at which a chip's FC kernels transition from
 /// memory-bound to compute-bound: `µb* = bytes_per_param · F / (2B)`.
 pub fn balanced_microbatch(chip: &ChipletDesign, bytes_per_param: f64) -> f64 {
@@ -80,6 +116,26 @@ mod tests {
         // bw_ratio 0.5 B/FLOP chip with fp16 weights balances near µb=2
         let ub = balanced_microbatch(&chip(), 2.0);
         assert!((1.5..=2.5).contains(&ub), "ub={ub}");
+    }
+
+    #[test]
+    fn cache_memoizes_by_tp_and_microbatch() {
+        let c = chip();
+        let mut cache = KernelCache::default();
+        let mut calls = 0usize;
+        let mut get = |tp, ub, flops, bytes| {
+            cache.latency(tp, ub, || {
+                calls += 1;
+                kernel_latency(&c, flops, bytes)
+            })
+        };
+        let a = get(136, 2, 5.3e7, 2.7e7);
+        let b = get(136, 2, 5.3e7, 2.7e7); // hit
+        let d = get(68, 2, 1.06e8, 5.4e7); // different tp: miss
+        assert_eq!(a, b);
+        assert_eq!(calls, 2);
+        assert_ne!(a, d);
+        assert_eq!(cache.len(), 2);
     }
 
     #[test]

@@ -13,4 +13,4 @@ pub mod kernels;
 pub mod pipeline;
 pub mod simulator;
 
-pub use simulator::{simulate, DecodePerf};
+pub use simulator::{simulate, simulate_cached, DecodePerf};

@@ -40,6 +40,23 @@ pub struct DecodePerf {
 /// Simulate decode-phase serving. Returns `None` when the mapping does not
 /// fit chip memory or violates basic shape constraints.
 pub fn simulate(server: &ServerDesign, w: &Workload, mapping: &Mapping) -> Option<DecodePerf> {
+    simulate_cached(server, w, mapping, &mut kernels::KernelCache::default())
+}
+
+/// [`simulate`] with an external kernel-latency memo table.
+///
+/// A mapping search evaluates hundreds of candidates whose per-layer
+/// roofline kernel depends only on `(tp, microbatch)`; passing one
+/// [`kernels::KernelCache`] for the whole search skips the recomputation.
+/// The cache is keyed by `(tp, microbatch)` only, so it **must** be scoped
+/// to a single (server, workload) pair. Results are bit-identical to the
+/// uncached path.
+pub fn simulate_cached(
+    server: &ServerDesign,
+    w: &Workload,
+    mapping: &Mapping,
+    cache: &mut kernels::KernelCache,
+) -> Option<DecodePerf> {
     let m = &w.model;
     if mapping.pp > m.n_layers || mapping.tp == 0 || mapping.microbatch == 0 {
         return None;
@@ -55,7 +72,9 @@ pub fn simulate(server: &ServerDesign, w: &Workload, mapping: &Mapping) -> Optio
 
     // --- one layer, one micro-batch, on one chip ---------------------
     let bytes_layer = prof.weight_read_per_layer_ub + prof.kv_read_per_layer_ub;
-    let t_kernel = kernels::kernel_latency(chip, prof.flops_per_layer_ub, bytes_layer);
+    let t_kernel = cache.latency(mapping.tp, mapping.microbatch, || {
+        kernels::kernel_latency(chip, prof.flops_per_layer_ub, bytes_layer)
+    });
     // two all-reduces per layer (attention output, FFN output)
     let act_bytes = mapping.microbatch as f64 * m.d_model as f64 * m.bytes_per_param;
     let t_ar = if w.comm_1d {
@@ -171,6 +190,24 @@ mod tests {
         );
         // decode utilization should be substantial at batch 256
         assert!(p.compute_util > 0.3, "util={}", p.compute_util);
+    }
+
+    #[test]
+    fn cached_simulation_is_bit_identical() {
+        let s = gpt3_server();
+        let w = Workload::new(ModelSpec::gpt3(), 2048, 256);
+        let mut cache = crate::perf::kernels::KernelCache::default();
+        // vary pp at fixed (tp, µb): the kernel memo must be reused and the
+        // results must match the uncached path exactly.
+        for pp in [96usize, 48, 32] {
+            let m = Mapping { tp: 136, pp, microbatch: 2 };
+            let plain = simulate(&s, &w, &m).unwrap();
+            let cached = simulate_cached(&s, &w, &m, &mut cache).unwrap();
+            assert_eq!(plain.token_period.to_bits(), cached.token_period.to_bits());
+            assert_eq!(plain.tokens_per_s.to_bits(), cached.tokens_per_s.to_bits());
+            assert_eq!(plain.compute_util.to_bits(), cached.compute_util.to_bits());
+        }
+        assert_eq!(cache.len(), 1, "one distinct (tp, µb) kernel expected");
     }
 
     #[test]

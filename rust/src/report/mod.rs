@@ -48,6 +48,58 @@ fn fmt(v: f64, digits: usize) -> String {
     format!("{v:.digits$}")
 }
 
+/// **Sweep engine report** — the co-design search itself as an experiment:
+/// feasible-space and Pareto-frontier sizes, branch-and-bound counters for
+/// one model's full Table-2 grid, wall time, and the optimum found
+/// (`ccloud sweep [--model NAME]`).
+pub fn sweep_summary(ctx: &Ctx, model: &ModelSpec, out_dir: Option<&Path>) -> Table {
+    use crate::evaluate::SweepEngine;
+    let frontier = crate::explore::pareto::frontier_indices(&ctx.servers).len();
+    let grid = Workload::study_grid(model);
+    let engine = SweepEngine::default();
+    let t0 = std::time::Instant::now();
+    let (best, stats) = engine.best_over_grid_stats(&ctx.space, &ctx.servers, &grid);
+    let wall = t0.elapsed().as_secs_f64();
+    let mut t = Table::new(vec!["Metric", "Value"]).with_title(format!(
+        "Sweep engine: {} over the Table-2 grid ({} workloads)",
+        model.display,
+        grid.len()
+    ));
+    t.row(vec!["feasible servers (phase 1)".to_string(), ctx.servers.len().to_string()]);
+    t.row(vec!["pareto frontier".to_string(), frontier.to_string()]);
+    t.row(vec!["worker threads".to_string(), crate::util::parallel::num_threads().to_string()]);
+    t.row(vec![
+        "(workload, server) pairs".to_string(),
+        format!("{} ({} bound-skipped)", stats.servers, stats.servers_pruned),
+    ]);
+    t.row(vec!["candidate mappings".to_string(), stats.candidates.to_string()]);
+    t.row(vec!["mappings simulated".to_string(), stats.simulated.to_string()]);
+    t.row(vec!["mappings pruned".to_string(), stats.mappings_pruned.to_string()]);
+    t.row(vec!["phase-2 wall time".to_string(), crate::util::fmt_secs(wall)]);
+    match &best {
+        Some((w, p)) => {
+            t.row(vec![
+                "optimum".to_string(),
+                format!(
+                    "{:.0} mm² die, tp={} pp={} µb={} @ ctx {} batch {}",
+                    p.server.chiplet.die_mm2,
+                    p.mapping.tp,
+                    p.mapping.pp,
+                    p.mapping.microbatch,
+                    w.ctx,
+                    w.batch
+                ),
+            ]);
+            t.row(vec!["TCO/1M tokens".to_string(), format!("${:.3}", p.tco_per_mtok())]);
+        }
+        None => {
+            t.row(vec!["optimum".to_string(), "none (no feasible design)".to_string()]);
+        }
+    }
+    persist(&t, out_dir, "sweep");
+    t
+}
+
 /// **Table 2** — TCO/Token-optimal Chiplet Cloud system per model.
 pub fn table2(ctx: &Ctx, models: &[ModelSpec], out_dir: Option<&Path>) -> Table {
     let mut t = Table::new(vec![

@@ -1,0 +1,172 @@
+//! Deterministic fork-join parallelism for the sweep engine.
+//!
+//! The default implementation chunks the input across `std::thread::scope`
+//! workers and reassembles results **in input order**, so parallel sweeps
+//! are bit-identical to sequential ones. With the optional `rayon` feature
+//! the same API routes through the rayon pool (also order-preserving).
+//!
+//! Thread count resolution: an explicit per-call count wins, otherwise the
+//! `CC_SWEEP_THREADS` environment variable, otherwise
+//! `std::thread::available_parallelism()`.
+
+use std::sync::atomic::{AtomicU64, Ordering};
+
+/// Default worker count: `CC_SWEEP_THREADS` or the machine's parallelism.
+pub fn num_threads() -> usize {
+    std::env::var("CC_SWEEP_THREADS")
+        .ok()
+        .and_then(|s| s.parse::<usize>().ok())
+        .filter(|&n| n > 0)
+        .unwrap_or_else(|| std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1))
+}
+
+/// Resolve a requested thread count (0 = auto) against the input length.
+fn effective_threads(threads: usize, len: usize) -> usize {
+    let t = if threads == 0 { num_threads() } else { threads };
+    t.min(len.max(1))
+}
+
+/// Apply `f` to every item, in parallel, returning results in input order.
+///
+/// `threads == 0` selects the auto thread count; `threads == 1` runs inline
+/// (the exact sequential path). Results are deterministic regardless of the
+/// worker count: output index `i` is always `f(&items[i])`.
+#[cfg(not(feature = "rayon"))]
+pub fn par_map<T, R, F>(items: &[T], threads: usize, f: F) -> Vec<R>
+where
+    T: Sync,
+    R: Send,
+    F: Fn(&T) -> R + Sync + Send,
+{
+    let threads = effective_threads(threads, items.len());
+    if threads <= 1 || items.len() <= 1 {
+        return items.iter().map(|x| f(x)).collect();
+    }
+    let chunk = items.len().div_ceil(threads);
+    let f = &f;
+    let mut parts: Vec<Vec<R>> = Vec::with_capacity(threads);
+    std::thread::scope(|s| {
+        let handles: Vec<_> = items
+            .chunks(chunk)
+            .map(|c| s.spawn(move || c.iter().map(f).collect::<Vec<R>>()))
+            .collect();
+        for h in handles {
+            parts.push(h.join().expect("sweep worker panicked"));
+        }
+    });
+    parts.into_iter().flatten().collect()
+}
+
+/// Apply `f` to every item, in parallel, returning results in input order
+/// (rayon-pool variant; identical semantics to the scoped-thread default).
+#[cfg(feature = "rayon")]
+pub fn par_map<T, R, F>(items: &[T], threads: usize, f: F) -> Vec<R>
+where
+    T: Sync,
+    R: Send,
+    F: Fn(&T) -> R + Sync + Send,
+{
+    use rayon::prelude::*;
+    if effective_threads(threads, items.len()) <= 1 || items.len() <= 1 {
+        return items.iter().map(|x| f(x)).collect();
+    }
+    items.par_iter().map(f).collect()
+}
+
+/// An `f64` with atomic load / fetch-min, used as the shared branch-and-bound
+/// incumbent ("best TCO/Token seen so far") across sweep workers.
+///
+/// Correctness of the sweep does not depend on the freshness of this value:
+/// a stale (larger) incumbent only causes fewer candidates to be pruned,
+/// never a wrong result.
+pub struct AtomicF64(AtomicU64);
+
+impl AtomicF64 {
+    /// New atomic holding `v`.
+    pub fn new(v: f64) -> Self {
+        AtomicF64(AtomicU64::new(v.to_bits()))
+    }
+
+    /// Current value.
+    pub fn load(&self) -> f64 {
+        f64::from_bits(self.0.load(Ordering::Relaxed))
+    }
+
+    /// Lower the stored value to `v` if `v` is smaller; returns the value
+    /// observed before the update. NaN inputs are ignored.
+    pub fn fetch_min(&self, v: f64) -> f64 {
+        let mut cur = self.0.load(Ordering::Relaxed);
+        loop {
+            let curf = f64::from_bits(cur);
+            if !(v < curf) {
+                return curf;
+            }
+            match self.0.compare_exchange_weak(
+                cur,
+                v.to_bits(),
+                Ordering::Relaxed,
+                Ordering::Relaxed,
+            ) {
+                Ok(_) => return curf,
+                Err(actual) => cur = actual,
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn par_map_preserves_order() {
+        let xs: Vec<usize> = (0..1000).collect();
+        let seq: Vec<usize> = xs.iter().map(|x| x * 3 + 1).collect();
+        for threads in [0, 1, 2, 3, 7] {
+            assert_eq!(par_map(&xs, threads, |x| x * 3 + 1), seq, "threads={threads}");
+        }
+    }
+
+    #[test]
+    fn par_map_empty_and_single() {
+        let empty: Vec<u32> = Vec::new();
+        assert!(par_map(&empty, 0, |x| *x).is_empty());
+        assert_eq!(par_map(&[41u32], 0, |x| x + 1), vec![42]);
+    }
+
+    #[test]
+    fn par_map_more_threads_than_items() {
+        let xs = [1u64, 2, 3];
+        assert_eq!(par_map(&xs, 64, |x| x * x), vec![1, 4, 9]);
+    }
+
+    #[test]
+    fn atomic_f64_fetch_min() {
+        let a = AtomicF64::new(f64::INFINITY);
+        assert_eq!(a.load(), f64::INFINITY);
+        a.fetch_min(2.5);
+        assert_eq!(a.load(), 2.5);
+        a.fetch_min(3.0); // larger: no-op
+        assert_eq!(a.load(), 2.5);
+        a.fetch_min(1.0);
+        assert_eq!(a.load(), 1.0);
+        a.fetch_min(f64::NAN); // ignored
+        assert_eq!(a.load(), 1.0);
+    }
+
+    #[test]
+    fn atomic_f64_concurrent_min() {
+        let a = AtomicF64::new(f64::INFINITY);
+        std::thread::scope(|s| {
+            for t in 0..8 {
+                let a = &a;
+                s.spawn(move || {
+                    for i in 0..1000 {
+                        a.fetch_min((t * 1000 + i) as f64 / 7.0 + 1.0);
+                    }
+                });
+            }
+        });
+        assert_eq!(a.load(), 1.0);
+    }
+}

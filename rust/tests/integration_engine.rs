@@ -1,0 +1,148 @@
+//! Regression and property tests for the parallel, Pareto-guided,
+//! branch-and-bound sweep engine: the pruned/parallel search must return
+//! exactly what the seed's exhaustive sequential search returns — the
+//! Pareto guidance and lower-bound cutoff may only change wall-clock,
+//! never the optimum.
+
+use chiplet_cloud::config::hardware::ExploreSpace;
+use chiplet_cloud::config::{ModelSpec, Workload};
+use chiplet_cloud::evaluate::{self, SweepEngine, WorkloadBounds};
+use chiplet_cloud::explore::{pareto, phase1, phase1_seq};
+use chiplet_cloud::util::prop::check;
+
+fn setup() -> (ExploreSpace, Vec<chiplet_cloud::arch::ServerDesign>) {
+    let space = ExploreSpace::coarse();
+    let (servers, _) = phase1(&space);
+    (space, servers)
+}
+
+/// The headline regression: parallel + pruned + Pareto-ordered sweep ==
+/// exhaustive sequential sweep on `ExploreSpace::coarse()`, bit-exact.
+#[test]
+fn engine_best_point_matches_sequential_exhaustive() {
+    let (space, servers) = setup();
+    let w = Workload::new(ModelSpec::gpt3(), 2048, 256);
+    let seq = SweepEngine::sequential().best_point(&space, &servers, &w).expect("feasible");
+    let eng = SweepEngine::default().best_point(&space, &servers, &w).expect("feasible");
+    assert_eq!(eng.mapping, seq.mapping);
+    assert_eq!(eng.server, seq.server);
+    assert_eq!(eng.n_servers, seq.n_servers);
+    assert_eq!(eng.tco_per_token.to_bits(), seq.tco_per_token.to_bits());
+    assert_eq!(eng.perf.tokens_per_s.to_bits(), seq.perf.tokens_per_s.to_bits());
+}
+
+/// Grid version of the regression, over a multi-workload grid.
+#[test]
+fn engine_best_over_grid_matches_sequential_exhaustive() {
+    let (space, servers) = setup();
+    let m = ModelSpec::megatron();
+    let grid: Vec<Workload> = [(1024usize, 32usize), (1024, 128), (2048, 64)]
+        .iter()
+        .map(|&(c, b)| Workload::new(m.clone(), c, b))
+        .collect();
+    let (w_seq, p_seq) =
+        SweepEngine::sequential().best_over_grid(&space, &servers, &grid).expect("feasible");
+    let (w_eng, p_eng) =
+        SweepEngine::default().best_over_grid(&space, &servers, &grid).expect("feasible");
+    assert_eq!((w_eng.ctx, w_eng.batch), (w_seq.ctx, w_seq.batch));
+    assert_eq!(p_eng.mapping, p_seq.mapping);
+    assert_eq!(p_eng.server, p_seq.server);
+    assert_eq!(p_eng.tco_per_token.to_bits(), p_seq.tco_per_token.to_bits());
+}
+
+/// The per-server scatter (Fig. 7 input) must also be identical — order,
+/// length, and every point.
+#[test]
+fn engine_sweep_scatter_matches_sequential() {
+    let (space, servers) = setup();
+    let w = Workload::new(ModelSpec::megatron(), 1024, 64);
+    let seq = SweepEngine::sequential().sweep(&space, &servers, &w);
+    let eng = SweepEngine::default().sweep(&space, &servers, &w);
+    assert_eq!(seq.len(), eng.len());
+    for (a, b) in seq.iter().zip(eng.iter()) {
+        assert_eq!(a.server, b.server);
+        assert_eq!(a.mapping, b.mapping);
+        assert_eq!(a.tco_per_token.to_bits(), b.tco_per_token.to_bits());
+    }
+}
+
+/// Property: across randomized workloads, the Pareto-guided pruned engine
+/// never drops the global TCO/Token optimum — it returns exactly the
+/// exhaustive optimum (model, context, and batch drawn from a seeded RNG).
+#[test]
+fn property_pruned_engine_never_drops_the_optimum() {
+    let (space, servers) = setup();
+    let models = [ModelSpec::megatron(), ModelSpec::llama2_70b()];
+    check("pruned engine == exhaustive optimum", 4, |rng| {
+        let m = rng.pick(&models).clone();
+        let ctx = 1024 << rng.below(2); // 1024 or 2048
+        let batch = 1 << rng.below(9); // 1..256
+        let w = Workload::new(m, ctx, batch);
+        let seq = SweepEngine::sequential().best_point(&space, &servers, &w);
+        let eng = SweepEngine::default().best_point(&space, &servers, &w);
+        match (seq, eng) {
+            (None, None) => {}
+            (Some(s), Some(e)) => {
+                assert_eq!(
+                    e.tco_per_token.to_bits(),
+                    s.tco_per_token.to_bits(),
+                    "optimum diverged at ctx {ctx} batch {batch}"
+                );
+                assert_eq!(e.mapping, s.mapping);
+                assert_eq!(e.server, s.server);
+            }
+            (s, e) => panic!(
+                "feasibility diverged at ctx {ctx} batch {batch}: seq={} eng={}",
+                s.is_some(),
+                e.is_some()
+            ),
+        }
+    });
+}
+
+/// Property: the admissible lower bound really is admissible — it never
+/// exceeds the true TCO/Token of any evaluated design point.
+#[test]
+fn property_lower_bound_is_admissible() {
+    let (space, servers) = setup();
+    check("TCO/Token lower bound admissible", 4, |rng| {
+        let m = if rng.chance(0.5) { ModelSpec::megatron() } else { ModelSpec::gpt3() };
+        let w = Workload::new(m, 1024 << rng.below(2), 8 << rng.below(5));
+        let wb = WorkloadBounds::new(&w);
+        // Sample a slice of the server set to keep the property fast.
+        let start = rng.below(servers.len().max(1));
+        let sample: Vec<_> = servers.iter().skip(start).step_by(17).cloned().collect();
+        for p in evaluate::sweep(&space, &sample, &w) {
+            let lb = wb.server_lower_bound(&space, &p.server);
+            assert!(
+                lb <= p.tco_per_token * (1.0 + 1e-12),
+                "bound {lb} > true {} (die {})",
+                p.tco_per_token,
+                p.server.chiplet.die_mm2
+            );
+        }
+    });
+}
+
+/// The Pareto frontier is consistent with phase 1 and the engine ordering:
+/// a permutation that never loses a server (no hard drops on dominance).
+#[test]
+fn pareto_order_covers_every_server() {
+    let (_, servers) = setup();
+    let mut order = pareto::frontier_first_order(&servers);
+    assert_eq!(order.len(), servers.len());
+    order.sort_unstable();
+    assert!(order.iter().copied().eq(0..servers.len()));
+    let frontier = pareto::frontier_indices(&servers);
+    assert!(!frontier.is_empty() && frontier.len() < servers.len());
+}
+
+/// Parallel phase 1 must be order- and value-identical to the sequential
+/// sweep (the chiplet derivation is hoisted and shared per tuple).
+#[test]
+fn parallel_phase1_identical_to_sequential() {
+    let space = ExploreSpace::coarse();
+    let (par, _) = phase1(&space);
+    let (seq, _) = phase1_seq(&space);
+    assert_eq!(par, seq);
+}

@@ -1,0 +1,193 @@
+//! Offline stub of the `xla` PJRT bindings.
+//!
+//! The chiplet_cloud serving runtime ([`crate`]'s consumer,
+//! `chiplet_cloud::runtime`) talks to AOT-compiled HLO through the vendored
+//! `xla` crate on images that ship the XLA extension libraries. This stub
+//! provides the exact API surface the runtime uses so the whole workspace
+//! builds (and the design-space-exploration side runs) with **no** native
+//! XLA dependency. Every operation that would need a real PJRT client
+//! returns an [`Error`] at runtime; the runtime's callers already treat
+//! artifact loading as fallible and skip gracefully.
+//!
+//! Keep this in signature lock-step with `chiplet_cloud::runtime::engine` —
+//! that module is the sole consumer.
+
+use std::borrow::Borrow;
+use std::fmt;
+use std::path::Path;
+
+/// Error type mirroring the real crate's `xla::Error` (stringly here).
+#[derive(Clone, Debug)]
+pub struct Error(String);
+
+impl fmt::Display for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "{}", self.0)
+    }
+}
+
+impl std::error::Error for Error {}
+
+/// Result alias matching the real crate.
+pub type Result<T> = std::result::Result<T, Error>;
+
+fn unavailable<T>(what: &str) -> Result<T> {
+    Err(Error(format!(
+        "{what}: the XLA/PJRT backend is not available in this offline build \
+         (the `xla` crate is stubbed; install the vendored bindings to serve models)"
+    )))
+}
+
+/// A host-side literal (typed array). Stub: carries no data.
+#[derive(Clone, Debug, Default)]
+pub struct Literal {
+    _private: (),
+}
+
+impl Literal {
+    /// Build a rank-1 literal from a slice.
+    pub fn vec1<T: Copy>(_values: &[T]) -> Literal {
+        Literal::default()
+    }
+
+    /// Build a rank-0 literal from a scalar.
+    pub fn scalar<T>(_value: T) -> Literal {
+        Literal::default()
+    }
+
+    /// Reshape to the given dimensions.
+    pub fn reshape(&self, _dims: &[i64]) -> Result<Literal> {
+        unavailable("Literal::reshape")
+    }
+
+    /// Download the literal's data as a typed vector.
+    pub fn to_vec<T>(&self) -> Result<Vec<T>> {
+        unavailable("Literal::to_vec")
+    }
+
+    /// Destructure a tuple literal into its elements.
+    pub fn to_tuple(&self) -> Result<Vec<Literal>> {
+        unavailable("Literal::to_tuple")
+    }
+}
+
+/// Deserialization support (`.npz` weight archives in the real crate).
+pub trait FromRawBytes: Sized {
+    /// Read the named arrays from an `.npz` archive.
+    fn read_npz_by_name<P: AsRef<Path>, C>(path: P, ctx: &C, names: &[&str]) -> Result<Vec<Self>>;
+}
+
+impl FromRawBytes for Literal {
+    fn read_npz_by_name<P: AsRef<Path>, C>(
+        _path: P,
+        _ctx: &C,
+        _names: &[&str],
+    ) -> Result<Vec<Literal>> {
+        unavailable("Literal::read_npz_by_name")
+    }
+}
+
+/// A parsed HLO module proto.
+#[derive(Clone, Debug, Default)]
+pub struct HloModuleProto {
+    _private: (),
+}
+
+impl HloModuleProto {
+    /// Parse an HLO text file.
+    pub fn from_text_file<P: AsRef<Path>>(_path: P) -> Result<HloModuleProto> {
+        unavailable("HloModuleProto::from_text_file")
+    }
+}
+
+/// An XLA computation ready for compilation.
+#[derive(Clone, Debug, Default)]
+pub struct XlaComputation {
+    _private: (),
+}
+
+impl XlaComputation {
+    /// Wrap a module proto as a computation (infallible in the real crate).
+    pub fn from_proto(_proto: &HloModuleProto) -> XlaComputation {
+        XlaComputation::default()
+    }
+}
+
+/// A device-resident buffer.
+#[derive(Debug)]
+pub struct PjRtBuffer {
+    _private: (),
+}
+
+impl PjRtBuffer {
+    /// Synchronously download the buffer as a literal.
+    pub fn to_literal_sync(&self) -> Result<Literal> {
+        unavailable("PjRtBuffer::to_literal_sync")
+    }
+
+    /// Synchronously copy raw bytes into a host slice.
+    pub fn copy_raw_to_host_sync<T>(&self, _dst: &mut [T], _offset: usize) -> Result<()> {
+        unavailable("PjRtBuffer::copy_raw_to_host_sync")
+    }
+}
+
+/// A compiled, loaded executable.
+#[derive(Debug)]
+pub struct PjRtLoadedExecutable {
+    _private: (),
+}
+
+impl PjRtLoadedExecutable {
+    /// Execute with borrowed buffer arguments; returns per-device output rows.
+    pub fn execute_b<T: Borrow<PjRtBuffer>>(&self, _args: &[T]) -> Result<Vec<Vec<PjRtBuffer>>> {
+        unavailable("PjRtLoadedExecutable::execute_b")
+    }
+}
+
+/// A PJRT client (CPU platform in the runtime).
+#[derive(Debug)]
+pub struct PjRtClient {
+    _private: (),
+}
+
+impl PjRtClient {
+    /// Create a CPU client. Always errors in the stub.
+    pub fn cpu() -> Result<PjRtClient> {
+        unavailable("PjRtClient::cpu")
+    }
+
+    /// Compile a computation.
+    pub fn compile(&self, _computation: &XlaComputation) -> Result<PjRtLoadedExecutable> {
+        unavailable("PjRtClient::compile")
+    }
+
+    /// Start an asynchronous host→device upload of a literal.
+    pub fn buffer_from_host_literal(
+        &self,
+        _device: Option<usize>,
+        _literal: &Literal,
+    ) -> Result<PjRtBuffer> {
+        unavailable("PjRtClient::buffer_from_host_literal")
+    }
+
+    /// Platform name for logs.
+    pub fn platform_name(&self) -> String {
+        "offline-stub".to_string()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn stub_operations_error_cleanly() {
+        assert!(PjRtClient::cpu().is_err());
+        assert!(HloModuleProto::from_text_file("/nonexistent.hlo").is_err());
+        let lit = Literal::vec1(&[1i32, 2, 3]);
+        assert!(lit.reshape(&[3, 1]).is_err());
+        assert!(lit.to_vec::<f32>().is_err());
+        let err = PjRtClient::cpu().unwrap_err();
+        assert!(err.to_string().contains("offline"), "{err}");
+    }
+}
