@@ -42,7 +42,7 @@ fn main() {
         let coord = Coordinator::start(
             dir,
             "cc-tiny",
-            CoordinatorConfig { max_wait: Duration::from_millis(5), replicas: 1 },
+            CoordinatorConfig { max_wait: Duration::from_millis(5), ..CoordinatorConfig::default() },
         )
         .unwrap();
         for i in 0..8 {

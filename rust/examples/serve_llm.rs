@@ -32,7 +32,11 @@ fn main() -> chiplet_cloud::Result<()> {
     let coord = Coordinator::start(
         &dir,
         &model,
-        CoordinatorConfig { max_wait: Duration::from_millis(40), replicas: args.get_or("replicas", 1) },
+        CoordinatorConfig {
+            max_wait: Duration::from_millis(40),
+            replicas: args.get_or("replicas", 1),
+            ..CoordinatorConfig::default()
+        },
     )?;
     println!("   engine up in {:.1}s", t0.elapsed().as_secs_f64());
 
@@ -56,10 +60,8 @@ fn main() -> chiplet_cloud::Result<()> {
     let s = metrics.summary();
     println!("   {}", s.render());
     println!(
-        "   sustained generation throughput: {:.1} tokens/s ({} tokens / {:.1}s decode)",
-        s.decode_tokens_per_s,
-        s.tokens,
-        s.tokens as f64 / s.decode_tokens_per_s.max(1e-9)
+        "   throughput: {:.1} tokens/s wall ({:.1} tokens/s lockstep decode, {} tokens)",
+        s.wall_tokens_per_s, s.decode_tokens_per_s, s.tokens,
     );
     // sanity: every response satisfied its budget
     assert!(responses.iter().all(|r| r.tokens.len() == n_tokens.min(r.tokens.len())));

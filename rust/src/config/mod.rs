@@ -12,4 +12,4 @@ pub mod workload;
 
 pub use hardware::{ExploreSpace, TechParams};
 pub use models::{Attention, ModelSpec};
-pub use workload::Workload;
+pub use workload::{ArrivalProcess, ServeSpec, SloSpec, TrafficSpec, Workload};

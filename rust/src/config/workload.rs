@@ -2,6 +2,134 @@
 
 use crate::config::models::ModelSpec;
 
+/// Latency service-level objectives a design must meet under real traffic
+/// (the paper's Fig.-11 throughput–latency Pareto, made explicit).
+/// Unset targets are `f64::INFINITY`.
+#[derive(Clone, Copy, Debug)]
+pub struct SloSpec {
+    /// p99 time-to-first-token target, s.
+    pub ttft_p99_s: f64,
+    /// p99 time-per-output-token target, s.
+    pub tpot_p99_s: f64,
+}
+
+impl SloSpec {
+    /// Both targets at the given values.
+    pub fn new(ttft_p99_s: f64, tpot_p99_s: f64) -> SloSpec {
+        SloSpec { ttft_p99_s, tpot_p99_s }
+    }
+
+    /// No latency constraint (pure TCO/Token optimization).
+    pub fn unconstrained() -> SloSpec {
+        SloSpec { ttft_p99_s: f64::INFINITY, tpot_p99_s: f64::INFINITY }
+    }
+
+    /// True when neither target binds.
+    pub fn is_unconstrained(&self) -> bool {
+        self.ttft_p99_s.is_infinite() && self.tpot_p99_s.is_infinite()
+    }
+}
+
+impl Default for SloSpec {
+    fn default() -> Self {
+        SloSpec::unconstrained()
+    }
+}
+
+/// The request arrival process of a synthetic serving trace.
+#[derive(Clone, Copy, Debug)]
+pub enum ArrivalProcess {
+    /// Open-loop Poisson arrivals at `rps` requests/second.
+    Poisson {
+        /// Mean request rate, requests/second.
+        rps: f64,
+    },
+    /// Open-loop bursty arrivals: groups of `burst` back-to-back requests,
+    /// exponential gaps between groups sized so the long-run mean rate is
+    /// still `rps`.
+    Bursty {
+        /// Long-run mean request rate, requests/second.
+        rps: f64,
+        /// Requests per burst.
+        burst: usize,
+    },
+    /// Closed-loop: `clients` users, each submitting a new request
+    /// `think_s` seconds after its previous one completes.
+    ClosedLoop {
+        /// Concurrent users.
+        clients: usize,
+        /// Think time between a completion and the next submit, s.
+        think_s: f64,
+    },
+}
+
+/// A synthetic traffic description for the serving simulator: arrival
+/// process plus per-request shape, all seeded for reproducibility.
+#[derive(Clone, Copy, Debug)]
+pub struct TrafficSpec {
+    /// Arrival process.
+    pub arrival: ArrivalProcess,
+    /// Total requests in the trace.
+    pub requests: usize,
+    /// Prompt tokens per request.
+    pub prompt_tokens: usize,
+    /// Minimum generated tokens per request (inclusive).
+    pub new_tokens_lo: usize,
+    /// Maximum generated tokens per request (inclusive).
+    pub new_tokens_hi: usize,
+    /// PRNG seed for inter-arrival times and token budgets.
+    pub seed: u64,
+}
+
+impl TrafficSpec {
+    /// Poisson traffic with uniform token budgets in `[lo, hi]`.
+    pub fn poisson(rps: f64, requests: usize, prompt: usize, lo: usize, hi: usize) -> TrafficSpec {
+        TrafficSpec {
+            arrival: ArrivalProcess::Poisson { rps },
+            requests,
+            prompt_tokens: prompt,
+            new_tokens_lo: lo,
+            new_tokens_hi: hi,
+            seed: 42,
+        }
+    }
+
+    /// Closed-loop traffic with uniform token budgets in `[lo, hi]`.
+    pub fn closed_loop(
+        clients: usize,
+        think_s: f64,
+        requests: usize,
+        prompt: usize,
+        lo: usize,
+        hi: usize,
+    ) -> TrafficSpec {
+        TrafficSpec {
+            arrival: ArrivalProcess::ClosedLoop { clients, think_s },
+            requests,
+            prompt_tokens: prompt,
+            new_tokens_lo: lo,
+            new_tokens_hi: hi,
+            seed: 42,
+        }
+    }
+
+    /// Same spec with a different seed.
+    pub fn with_seed(mut self, seed: u64) -> TrafficSpec {
+        self.seed = seed;
+        self
+    }
+}
+
+/// Traffic plus the SLO it must be served under — the serving-layer spec a
+/// [`Workload`] optionally carries into the sweep.
+#[derive(Clone, Copy, Debug)]
+pub struct ServeSpec {
+    /// Synthetic traffic description.
+    pub traffic: TrafficSpec,
+    /// Latency targets.
+    pub slo: SloSpec,
+}
+
 /// A serving workload: a model plus the traffic shape to optimize for.
 #[derive(Clone, Debug)]
 pub struct Workload {
@@ -26,6 +154,10 @@ pub struct Workload {
     /// Use conventional 1D tensor-parallel communication instead of the 2D
     /// weight-stationary layout [37] — the Fig.-11 ablation knob.
     pub comm_1d: bool,
+    /// Optional serving-layer spec: the traffic shape and latency SLOs the
+    /// design must hold up under (drives the event simulator and the
+    /// SLO-constrained sweep; `None` = steady-state optimization only).
+    pub serve: Option<ServeSpec>,
 }
 
 impl Workload {
@@ -42,7 +174,14 @@ impl Workload {
             weight_store_scale: 1.0,
             weight_read_scale: 1.0,
             comm_1d: false,
+            serve: None,
         }
+    }
+
+    /// Attach a serving-layer traffic+SLO spec.
+    pub fn with_serve(mut self, serve: ServeSpec) -> Workload {
+        self.serve = Some(serve);
+        self
     }
 
     /// Fig.-11 ablation: fall back to 1D tensor-parallel communication.
@@ -117,6 +256,21 @@ mod tests {
         let w = Workload::new(ModelSpec::gpt3(), 2048, 256);
         assert!((w.kv_bytes() / 1e12 - 2.47).abs() < 0.05, "kv={}", w.kv_bytes() / 1e12);
         assert!((w.model.weight_bytes() / 1e9 - 350.0).abs() / 350.0 < 0.05);
+    }
+
+    #[test]
+    fn serve_spec_is_optional_and_attachable() {
+        let w = Workload::new(ModelSpec::gpt3(), 2048, 256);
+        assert!(w.serve.is_none());
+        let spec = ServeSpec {
+            traffic: TrafficSpec::poisson(10.0, 100, 64, 8, 32),
+            slo: SloSpec::new(0.5, 0.02),
+        };
+        let w = w.with_serve(spec);
+        let s = w.serve.expect("attached");
+        assert_eq!(s.traffic.requests, 100);
+        assert!(!s.slo.is_unconstrained());
+        assert!(SloSpec::unconstrained().is_unconstrained());
     }
 
     #[test]

@@ -1,19 +1,27 @@
-//! Dynamic batcher: queue requests, emit fixed-size batches.
+//! Request queue + policy-driven batch former.
 //!
-//! The AOT artifact is compiled at a fixed batch size B and prompt length
-//! P (static shapes are what make the HLO loadable ahead of time), so the
-//! batcher forms batches of exactly B slots: it waits up to `max_wait` for
-//! the queue to fill, then pads the remainder with idle slots. Prompts are
-//! left-truncated / right-padded to P. This is the paper's batching model:
-//! throughput comes from weight reuse across the batch, and the batch
-//! decodes in lockstep.
+//! The queueing machinery (submit, condvar waits, shutdown) lives here;
+//! the *decision* of when a batch forms and how many slots it fills lives
+//! in [`crate::sched`] — the same [`Policy`](crate::sched::Policy) trait
+//! the discrete-event serving simulator drives. The AOT artifact is
+//! compiled at a fixed batch size B and prompt length P (static shapes are
+//! what make the HLO loadable ahead of time), so an emitted [`Batch`] has
+//! exactly B slots: admitted requests first, idle padding slots after.
+//! Prompts are left-truncated / right-padded to P.
+//!
+//! Because the artifact's prefill is whole-batch, the live executor cannot
+//! refill slots mid-generation; the view it presents to the policy says so
+//! (`refill_mid_iteration = false`, `live = 0` between batches) and
+//! [`sanitize`](crate::sched::sanitize) guarantees no policy can emit an
+//! empty (all-padding) batch — the seed happily ran a full prefill on one.
 
 use std::collections::VecDeque;
 use std::sync::atomic::{AtomicBool, Ordering};
-use std::sync::{Condvar, Mutex};
+use std::sync::{Condvar, Mutex, MutexGuard};
 use std::time::{Duration, Instant};
 
 use crate::coordinator::request::Request;
+use crate::sched::{sanitize, Action, Policy, SchedView, StaticBatch};
 
 /// Batcher tuning knobs.
 #[derive(Clone, Debug)]
@@ -22,7 +30,12 @@ pub struct BatcherConfig {
     pub batch: usize,
     /// Prompt length (the artifact's compiled prompt length).
     pub prompt_len: usize,
-    /// Max time to wait for a full batch before emitting a padded one.
+    /// Max time to wait for a full batch before emitting a padded one —
+    /// the [`StaticBatch`] policy's window, measured from the *head-of-line
+    /// request's arrival* (an upper bound on its queueing delay). The seed
+    /// measured from when batch forming began instead, which let a request
+    /// that had already aged in the queue behind a running batch wait a
+    /// second full window.
     pub max_wait: Duration,
     /// Token id used for padding prompts and idle slots.
     pub pad_token: i32,
@@ -50,6 +63,12 @@ impl Batch {
     pub fn max_new_tokens(&self) -> usize {
         self.slots.iter().flatten().map(|r| r.max_new_tokens).max().unwrap_or(0)
     }
+
+    /// True when every slot is padding — running prefill on such a batch
+    /// is pure waste and the server skips it.
+    pub fn is_idle(&self) -> bool {
+        self.slots.iter().all(|s| s.is_none())
+    }
 }
 
 /// Thread-safe request queue + batch former. Consumers block on a condvar
@@ -57,6 +76,8 @@ impl Batch {
 pub struct Batcher {
     /// Configuration.
     pub cfg: BatcherConfig,
+    /// Time origin for the policy's `now_s`/arrival clocks.
+    epoch: Instant,
     queue: Mutex<VecDeque<Request>>,
     nonempty: Condvar,
     closed: AtomicBool,
@@ -67,10 +88,17 @@ impl Batcher {
     pub fn new(cfg: BatcherConfig) -> Batcher {
         Batcher {
             cfg,
+            epoch: Instant::now(),
             queue: Mutex::new(VecDeque::new()),
             nonempty: Condvar::new(),
             closed: AtomicBool::new(false),
         }
+    }
+
+    /// The default batch-forming policy: batch-synchronous with the
+    /// configured window (the seed's behaviour).
+    pub fn static_policy(&self) -> StaticBatch {
+        StaticBatch::new(self.cfg.max_wait.as_secs_f64())
     }
 
     /// Enqueue a request.
@@ -100,6 +128,16 @@ impl Batcher {
         self.closed.load(Ordering::SeqCst)
     }
 
+    /// Seconds since the batcher's epoch (the policy clock).
+    fn now_s(&self) -> f64 {
+        self.epoch.elapsed().as_secs_f64()
+    }
+
+    /// An instant on the policy clock (clamped to 0 before the epoch).
+    fn instant_s(&self, t: Instant) -> f64 {
+        t.saturating_duration_since(self.epoch).as_secs_f64()
+    }
+
     /// Normalize a prompt to exactly P tokens (keep the most recent P,
     /// right-pad with `pad_token`).
     pub fn fit_prompt(&self, prompt: &[i32]) -> Vec<i32> {
@@ -113,36 +151,10 @@ impl Batcher {
         row
     }
 
-    /// Block until a batch can be formed (or the batcher is closed and
-    /// empty → None). Waits up to `max_wait` for a full batch, then emits
-    /// a padded partial batch.
-    ///
-    /// Both waits park on the `nonempty` condvar — `submit`/`close` wake us
-    /// — instead of the old 1 ms sleep-poll loop, which burned a core per
-    /// idle replica and added up to 1 ms of needless latency per request.
-    /// `close()` flips the shutdown flag under the queue lock, so neither
-    /// wait can miss its wakeup (see [`Batcher::close`]) and an idle
-    /// replica truly sleeps.
-    pub fn next_batch(&self) -> Option<Batch> {
-        let mut q = self.queue.lock().unwrap();
-        // Wait for the first request (or shutdown).
-        while q.is_empty() {
-            if self.is_closed() {
-                return None;
-            }
-            q = self.nonempty.wait(q).unwrap();
-        }
-        // Wait for a full batch, the deadline, or shutdown.
-        let deadline = Instant::now() + self.cfg.max_wait;
-        while q.len() < self.cfg.batch && !self.is_closed() {
-            let now = Instant::now();
-            if now >= deadline {
-                break;
-            }
-            let (guard, _) = self.nonempty.wait_timeout(q, deadline - now).unwrap();
-            q = guard;
-        }
-        let n = q.len().min(self.cfg.batch);
+    /// Pop `n` requests into a padded B-slot batch. `n >= 1` is guaranteed
+    /// by the callers ([`sanitize`] never emits an empty admission).
+    fn form_batch(&self, q: &mut MutexGuard<'_, VecDeque<Request>>, n: usize) -> Batch {
+        let n = n.min(q.len()).min(self.cfg.batch);
         let mut slots: Vec<Option<Request>> = Vec::with_capacity(self.cfg.batch);
         let mut prompts = Vec::with_capacity(self.cfg.batch);
         for _ in 0..n {
@@ -154,13 +166,75 @@ impl Batcher {
             prompts.push(vec![self.cfg.pad_token; self.cfg.prompt_len]);
             slots.push(None);
         }
-        Some(Batch { prompts, slots, formed: Instant::now() })
+        Batch { prompts, slots, formed: Instant::now() }
+    }
+
+    /// Block until the default batch-synchronous policy forms a batch (or
+    /// the batcher is closed and empty → None).
+    pub fn next_batch(&self) -> Option<Batch> {
+        self.next_batch_policy(&mut self.static_policy())
+    }
+
+    /// Block until `policy` admits a batch (or the batcher is closed and
+    /// empty → None). The policy sees the live-executor view — zero live
+    /// slots between batches, no mid-iteration refill — and its decisions
+    /// pass through [`sanitize`], so an admission is always 1..=B requests.
+    ///
+    /// Both waits park on the `nonempty` condvar — `submit`/`close` wake us
+    /// — so an idle replica truly sleeps; `close()` flips the shutdown flag
+    /// under the queue lock, so no wakeup can be missed (see
+    /// [`Batcher::close`]).
+    pub fn next_batch_policy(&self, policy: &mut dyn Policy) -> Option<Batch> {
+        let mut q = self.queue.lock().unwrap();
+        loop {
+            if self.is_closed() {
+                if q.is_empty() {
+                    return None;
+                }
+                // Drain: emit what is queued without waiting for more.
+                return Some(self.form_batch(&mut q, self.cfg.batch));
+            }
+            let now_s = self.now_s();
+            let view = SchedView {
+                now_s,
+                queued: q.len(),
+                oldest_arrival_s: q
+                    .front()
+                    .map(|r| self.instant_s(r.arrived))
+                    .unwrap_or(now_s),
+                live: 0,
+                max_slots: self.cfg.batch,
+                kv_slots: self.cfg.batch,
+                refill_mid_iteration: false,
+            };
+            match sanitize(policy.decide(&view), &view) {
+                Action::Admit(n) => return Some(self.form_batch(&mut q, n)),
+                Action::Wait(Some(deadline_s)) => {
+                    if deadline_s <= now_s {
+                        // The window already expired; re-decide immediately
+                        // (the policy will admit on the next pass).
+                        continue;
+                    }
+                    let (guard, _) = self
+                        .nonempty
+                        .wait_timeout(q, Duration::from_secs_f64(deadline_s - now_s))
+                        .unwrap();
+                    q = guard;
+                }
+                // `sanitize` never returns Decode when `live == 0`; treat it
+                // like an open-ended wait if a custom policy insists.
+                Action::Wait(None) | Action::Decode => {
+                    q = self.nonempty.wait(q).unwrap();
+                }
+            }
+        }
     }
 }
 
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::sched::ContinuousBatch;
 
     fn cfg() -> BatcherConfig {
         BatcherConfig { batch: 4, prompt_len: 8, max_wait: Duration::from_millis(5), pad_token: 0 }
@@ -186,6 +260,19 @@ mod tests {
         assert_eq!(batch.live(), 1);
         assert!(batch.slots[1].is_none());
         assert_eq!(batch.max_new_tokens(), 2);
+        assert!(!batch.is_idle());
+    }
+
+    #[test]
+    fn continuous_policy_skips_the_window() {
+        // With the continuous policy a single queued request is admitted
+        // immediately — no batch-forming wait even with a huge window.
+        let b = Batcher::new(BatcherConfig { max_wait: Duration::from_secs(60), ..cfg() });
+        b.submit(Request::new(1, vec![7; 3], 2));
+        let t0 = Instant::now();
+        let batch = b.next_batch_policy(&mut ContinuousBatch).unwrap();
+        assert_eq!(batch.live(), 1);
+        assert!(t0.elapsed() < Duration::from_secs(2), "continuous policy must not wait");
     }
 
     #[test]
@@ -239,5 +326,27 @@ mod tests {
         std::thread::sleep(Duration::from_millis(10));
         b.close();
         assert!(h.join().unwrap());
+    }
+
+    /// Regression for the all-padding-batch bug: a policy that insists on
+    /// admitting from an empty queue must never produce an idle batch —
+    /// `sanitize` coerces it to a wait, and close() then yields None.
+    #[test]
+    fn empty_admission_never_forms_an_idle_batch() {
+        struct AlwaysAdmit;
+        impl Policy for AlwaysAdmit {
+            fn name(&self) -> &'static str {
+                "always-admit"
+            }
+            fn decide(&mut self, _: &SchedView) -> Action {
+                Action::Admit(4)
+            }
+        }
+        let b = std::sync::Arc::new(Batcher::new(cfg()));
+        let b2 = b.clone();
+        let h = std::thread::spawn(move || b2.next_batch_policy(&mut AlwaysAdmit));
+        std::thread::sleep(Duration::from_millis(10));
+        b.close();
+        assert!(h.join().unwrap().is_none(), "empty queue must yield None, not an idle batch");
     }
 }

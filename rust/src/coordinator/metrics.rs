@@ -1,6 +1,8 @@
-//! Serving metrics: latency percentiles, throughput, batch occupancy.
+//! Serving metrics: latency percentiles (including TTFT tails),
+//! throughput over wall time, batch occupancy.
 
 use std::sync::Mutex;
+use std::time::{Duration, Instant};
 
 use crate::coordinator::request::Response;
 use crate::util::stats;
@@ -19,6 +21,11 @@ struct Inner {
     total_slots: u64,
     decode_steps: u64,
     decode_time_s: f64,
+    /// Start of the first recorded batch (its record time minus its own
+    /// duration) — the origin of the wall-clock throughput window.
+    wall_start: Option<Instant>,
+    /// End of the most recent recorded batch.
+    wall_end: Option<Instant>,
 }
 
 /// A point-in-time summary of the metrics.
@@ -28,10 +35,18 @@ pub struct Summary {
     pub completed: usize,
     /// Generated tokens (all requests).
     pub tokens: usize,
-    /// Tokens per second of decode time (system throughput).
+    /// Tokens per second of decode time (lockstep decode rate).
     pub decode_tokens_per_s: f64,
+    /// Tokens per second of wall time across all recorded batches —
+    /// includes prefill and scheduling gaps, the rate a client actually
+    /// observes.
+    pub wall_tokens_per_s: f64,
     /// Mean per-token decode latency, s.
     pub per_token_mean_s: f64,
+    /// p50 time-to-first-token, s.
+    pub ttft_p50_s: f64,
+    /// p99 time-to-first-token, s.
+    pub ttft_p99_s: f64,
     /// p50 total request latency, s.
     pub total_p50_s: f64,
     /// p99 total request latency, s.
@@ -50,14 +65,23 @@ impl Metrics {
         Metrics::default()
     }
 
-    /// Record one executed batch.
-    pub fn record_batch(&self, live: usize, total: usize, steps: usize, decode_s: f64) {
+    /// Record one executed batch: occupancy counters plus its prefill and
+    /// decode wall time (which also advance the wall-clock window).
+    pub fn record_batch(&self, live: usize, total: usize, steps: usize, prefill_s: f64, decode_s: f64) {
+        let now = Instant::now();
+        let wall = (prefill_s + decode_s).max(0.0);
         let mut m = self.inner.lock().unwrap();
         m.batches += 1;
         m.live_slots += live as u64;
         m.total_slots += total as u64;
         m.decode_steps += steps as u64;
         m.decode_time_s += decode_s;
+        // Window start is the earliest batch *start* seen so far — with
+        // multiple replicas, a later-starting batch can record first, so
+        // keep the minimum rather than the first.
+        let start = now.checked_sub(Duration::from_secs_f64(wall)).unwrap_or(now);
+        m.wall_start = Some(m.wall_start.map_or(start, |ws| ws.min(start)));
+        m.wall_end = Some(now);
     }
 
     /// Record a completed response.
@@ -70,8 +94,13 @@ impl Metrics {
         let m = self.inner.lock().unwrap();
         let totals: Vec<f64> = m.responses.iter().map(|r| r.total_s()).collect();
         let queues: Vec<f64> = m.responses.iter().map(|r| r.queue_s).collect();
+        let ttfts: Vec<f64> = m.responses.iter().map(|r| r.ttft_s).collect();
         let per_tok: Vec<f64> = m.responses.iter().map(|r| r.per_token_s()).collect();
         let tokens: usize = m.responses.iter().map(|r| r.tokens.len()).sum();
+        let wall_s = match (m.wall_start, m.wall_end) {
+            (Some(a), Some(b)) => b.saturating_duration_since(a).as_secs_f64(),
+            _ => 0.0,
+        };
         Summary {
             completed: m.responses.len(),
             tokens,
@@ -80,7 +109,10 @@ impl Metrics {
             } else {
                 0.0
             },
+            wall_tokens_per_s: if wall_s > 0.0 { tokens as f64 / wall_s } else { 0.0 },
             per_token_mean_s: stats::mean(&per_tok),
+            ttft_p50_s: stats::percentile(&ttfts, 50.0),
+            ttft_p99_s: stats::percentile(&ttfts, 99.0),
             total_p50_s: stats::percentile(&totals, 50.0),
             total_p99_s: stats::percentile(&totals, 99.0),
             queue_mean_s: stats::mean(&queues),
@@ -98,11 +130,14 @@ impl Summary {
     /// Render the summary as a small report.
     pub fn render(&self) -> String {
         format!(
-            "requests={} tokens={} throughput={:.1} tok/s per-token={} p50={} p99={} queue={} occupancy={:.0}% batches={}",
+            "requests={} tokens={} wall={:.1} tok/s decode={:.1} tok/s per-token={} ttft p50={} p99={} total p50={} p99={} queue={} occupancy={:.0}% batches={}",
             self.completed,
             self.tokens,
+            self.wall_tokens_per_s,
             self.decode_tokens_per_s,
             crate::util::fmt_secs(self.per_token_mean_s),
+            crate::util::fmt_secs(self.ttft_p50_s),
+            crate::util::fmt_secs(self.ttft_p99_s),
             crate::util::fmt_secs(self.total_p50_s),
             crate::util::fmt_secs(self.total_p99_s),
             crate::util::fmt_secs(self.queue_mean_s),
@@ -119,8 +154,8 @@ mod tests {
     #[test]
     fn summary_aggregates() {
         let m = Metrics::new();
-        m.record_batch(3, 4, 10, 1.0);
-        m.record_batch(4, 4, 10, 1.0);
+        m.record_batch(3, 4, 10, 0.5, 1.0);
+        m.record_batch(4, 4, 10, 0.5, 1.0);
         for i in 0..3 {
             m.record_response(Response {
                 id: i,
@@ -128,6 +163,7 @@ mod tests {
                 queue_s: 0.1,
                 prefill_s: 0.2,
                 decode_s: 1.0,
+                ttft_s: 0.3,
             });
         }
         let s = m.summary();
@@ -136,6 +172,14 @@ mod tests {
         assert!((s.occupancy - 7.0 / 8.0).abs() < 1e-12);
         assert!((s.decode_tokens_per_s - 15.0).abs() < 1e-12);
         assert!(s.total_p99_s >= s.total_p50_s);
+        // TTFT tails come from the recorded first-token timestamps.
+        assert!((s.ttft_p50_s - 0.3).abs() < 1e-12);
+        assert!(s.ttft_p99_s >= s.ttft_p50_s);
+        // Wall throughput: the window spans at least the first batch's
+        // claimed 1.5 s of wall (record times here are back-to-back), so
+        // the rate is positive and cannot exceed 30 tokens / 1.5 s.
+        assert!(s.wall_tokens_per_s > 0.0);
+        assert!(s.wall_tokens_per_s <= 30.0 / 1.5 + 1e-9, "wall={}", s.wall_tokens_per_s);
     }
 
     #[test]
@@ -143,6 +187,8 @@ mod tests {
         let s = Metrics::new().summary();
         assert_eq!(s.completed, 0);
         assert_eq!(s.decode_tokens_per_s, 0.0);
+        assert_eq!(s.wall_tokens_per_s, 0.0);
+        assert_eq!(s.ttft_p99_s, 0.0);
         assert_eq!(s.occupancy, 0.0);
     }
 }

@@ -3,14 +3,16 @@
 //! from the off-PCB interface to all chiplets").
 //!
 //! * [`request`] — request/response types and token budgets.
-//! * [`batcher`] — dynamic batching to the artifact's compiled batch size
-//!   (batch-synchronous generation, the granularity the paper's pipeline
-//!   schedule assumes).
+//! * [`batcher`] — request queue + batch former; the *formation decision*
+//!   is a [`crate::sched::Policy`], the same trait the discrete-event
+//!   serving simulator drives.
 //! * [`server`] — replica workers: each thread owns a `ModelEngine`
-//!   (PJRT handles are thread-affine) and pulls from the shared batcher,
-//!   which is exactly least-loaded routing (work stealing).
-//! * [`metrics`] — latency/throughput accounting for the end-to-end
-//!   example and benches.
+//!   (PJRT handles are thread-affine) and pulls policy-formed batches from
+//!   the shared batcher, which is exactly least-loaded routing (work
+//!   stealing). [`server::BatchingMode`] selects static vs continuous
+//!   batching.
+//! * [`metrics`] — latency/throughput accounting (TTFT tails, wall-clock
+//!   tokens/s, occupancy) for the end-to-end example and benches.
 
 pub mod batcher;
 pub mod metrics;
@@ -20,4 +22,4 @@ pub mod server;
 pub use batcher::{Batch, Batcher, BatcherConfig};
 pub use metrics::Metrics;
 pub use request::{Request, RequestId, Response};
-pub use server::{Coordinator, CoordinatorConfig};
+pub use server::{BatchingMode, Coordinator, CoordinatorConfig};

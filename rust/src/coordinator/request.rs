@@ -39,6 +39,9 @@ pub struct Response {
     pub prefill_s: f64,
     /// Decode time, seconds.
     pub decode_s: f64,
+    /// Time to first token: queue wait + prefill (the first token emerges
+    /// from the prefill), seconds.
+    pub ttft_s: f64,
 }
 
 impl Response {
@@ -63,8 +66,16 @@ mod tests {
 
     #[test]
     fn response_metrics() {
-        let r = Response { id: 1, tokens: vec![1, 2, 3, 4], queue_s: 0.1, prefill_s: 0.2, decode_s: 0.8 };
+        let r = Response {
+            id: 1,
+            tokens: vec![1, 2, 3, 4],
+            queue_s: 0.1,
+            prefill_s: 0.2,
+            decode_s: 0.8,
+            ttft_s: 0.3,
+        };
         assert!((r.total_s() - 1.1).abs() < 1e-12);
         assert!((r.per_token_s() - 0.2).abs() < 1e-12);
+        assert!((r.ttft_s - (r.queue_s + r.prefill_s)).abs() < 1e-12);
     }
 }

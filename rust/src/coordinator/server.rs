@@ -1,12 +1,21 @@
-//! The serving loop: replica worker threads drain the batcher — prefill
-//! once per batch, then lockstep decode steps until every live slot's
-//! budget is met.
+//! The serving loop: replica worker threads drain the batcher under a
+//! [`crate::sched::Policy`] — prefill once per admitted batch, then
+//! lockstep decode steps until every live slot's budget is met.
 //!
 //! PJRT handles are not `Send` (the CPU client is thread-affine), so each
 //! replica thread *owns* its `ModelEngine`; the shared [`Batcher`] queue is
 //! the router: an idle replica pulls the next batch, which is exactly
 //! least-loaded dispatch (work stealing). Per-replica batch counts are
 //! tracked for balance reporting.
+//!
+//! The batch-formation *decision* is the policy's ([`BatchingMode`] picks
+//! which): batch-synchronous static batching (the artifact's native
+//! granularity) or the continuous policy, which admits greedily with no
+//! forming window. The AOT engine's whole-batch prefill cannot refill
+//! slots mid-generation, so continuous batching's iteration-level refill
+//! is exercised by the discrete-event simulator
+//! ([`crate::perf::events`]); live and simulated paths share the policy
+//! code itself.
 
 use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::{Arc, Mutex};
@@ -17,20 +26,38 @@ use crate::coordinator::batcher::{Batch, Batcher, BatcherConfig};
 use crate::coordinator::metrics::Metrics;
 use crate::coordinator::request::{Request, RequestId, Response};
 use crate::runtime::ModelEngine;
+use crate::sched::{ContinuousBatch, Policy};
 use crate::{Error, Result};
+
+/// Which scheduling policy the replica workers run.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub enum BatchingMode {
+    /// Batch-synchronous static batching with the configured wait window.
+    #[default]
+    Static,
+    /// Continuous (greedy, iteration-level) batching — on the whole-batch
+    /// AOT engine this admits without a forming window.
+    Continuous,
+}
 
 /// Coordinator configuration.
 #[derive(Clone, Debug)]
 pub struct CoordinatorConfig {
-    /// Max wait for a full batch.
+    /// Max wait for a full batch (the static policy's window).
     pub max_wait: Duration,
     /// Engine replicas (one worker thread each).
     pub replicas: usize,
+    /// Scheduling policy for batch formation.
+    pub mode: BatchingMode,
 }
 
 impl Default for CoordinatorConfig {
     fn default() -> Self {
-        CoordinatorConfig { max_wait: Duration::from_millis(50), replicas: 1 }
+        CoordinatorConfig {
+            max_wait: Duration::from_millis(50),
+            replicas: 1,
+            mode: BatchingMode::Static,
+        }
     }
 }
 
@@ -75,10 +102,18 @@ impl Coordinator {
             let replica_batches = replica_batches.clone();
             let dir = dir.clone();
             let model = model.to_string();
+            let mode = cfg.mode;
             workers.push(std::thread::spawn(move || -> Result<()> {
-                // the engine lives and dies on this thread (PJRT affinity)
+                // the engine lives and dies on this thread (PJRT affinity);
+                // each replica owns its policy instance
                 let engine = ModelEngine::load(&dir, &model)?;
-                while let Some(batch) = batcher.next_batch() {
+                let mut static_policy = batcher.static_policy();
+                let mut continuous_policy = ContinuousBatch;
+                let policy: &mut dyn Policy = match mode {
+                    BatchingMode::Static => &mut static_policy,
+                    BatchingMode::Continuous => &mut continuous_policy,
+                };
+                while let Some(batch) = batcher.next_batch_policy(policy) {
                     let rs = run_batch(&engine, &metrics, batch)?;
                     replica_batches[rid].fetch_add(1, Ordering::Relaxed);
                     responses.lock().unwrap().extend(rs);
@@ -117,7 +152,16 @@ impl Coordinator {
 }
 
 /// Execute one batch on this replica's engine.
+///
+/// Idle (all-padding) batches are skipped outright — running a full
+/// prefill on pure padding was the seed's bug; `sanitize` already prevents
+/// policies from forming such batches, and this guard keeps the invariant
+/// local to the executor too.
 fn run_batch(engine: &ModelEngine, metrics: &Metrics, batch: Batch) -> Result<Vec<Response>> {
+    if batch.is_idle() {
+        debug_assert!(batch.max_new_tokens() == 0);
+        return Ok(Vec::new());
+    }
     let t0 = Instant::now();
     let (mut tokens, mut state) = engine.prefill(&batch.prompts)?;
     let prefill_s = t0.elapsed().as_secs_f64();
@@ -134,18 +178,20 @@ fn run_batch(engine: &ModelEngine, metrics: &Metrics, batch: Batch) -> Result<Ve
         tokens = engine.decode_step(&tokens, &mut state)?;
     }
     let decode_s = t1.elapsed().as_secs_f64();
-    metrics.record_batch(batch.live(), batch.slots.len(), steps, decode_s);
+    metrics.record_batch(batch.live(), batch.slots.len(), steps, prefill_s, decode_s);
 
     let mut out = Vec::new();
     for (i, slot) in batch.slots.iter().enumerate() {
         let Some(req) = slot else { continue };
         let n = req.max_new_tokens.min(steps);
+        let queue_s = (batch.formed - req.arrived).as_secs_f64().max(0.0);
         let resp = Response {
             id: req.id,
             tokens: generated[i][..n].to_vec(),
-            queue_s: (batch.formed - req.arrived).as_secs_f64().max(0.0),
+            queue_s,
             prefill_s,
             decode_s: decode_s * n as f64 / steps.max(1) as f64,
+            ttft_s: queue_s + prefill_s,
         };
         metrics.record_response(resp.clone());
         out.push(resp);
@@ -171,18 +217,26 @@ mod tests {
         let coord = Coordinator::start(
             &dir,
             "cc-tiny",
-            CoordinatorConfig { max_wait: Duration::from_millis(20), replicas: 1 },
+            CoordinatorConfig {
+                max_wait: Duration::from_millis(20),
+                ..CoordinatorConfig::default()
+            },
         )
         .unwrap();
         for i in 0..6 {
             coord.submit(vec![(i % 100) as i32 + 1; 10], 4);
         }
+        let metrics = coord.metrics.clone();
         let responses = coord.shutdown().unwrap();
         assert_eq!(responses.len(), 6);
         for r in &responses {
             assert_eq!(r.tokens.len(), 4);
             assert!(r.total_s() > 0.0);
+            assert!(r.ttft_s > 0.0 && r.ttft_s <= r.total_s());
         }
+        let s = metrics.summary();
+        assert!(s.ttft_p99_s >= s.ttft_p50_s);
+        assert!(s.wall_tokens_per_s > 0.0);
     }
 
     #[test]
@@ -201,6 +255,30 @@ mod tests {
     }
 
     #[test]
+    fn continuous_mode_serves_the_same_stream() {
+        let dir = artifacts_dir();
+        if !dir.join("cc-tiny.manifest.json").exists() {
+            return;
+        }
+        let coord = Coordinator::start(
+            &dir,
+            "cc-tiny",
+            CoordinatorConfig {
+                max_wait: Duration::from_millis(20),
+                replicas: 1,
+                mode: BatchingMode::Continuous,
+            },
+        )
+        .unwrap();
+        for i in 0..5 {
+            coord.submit(vec![(i % 50) as i32 + 1; 8], 3);
+        }
+        let responses = coord.shutdown().unwrap();
+        assert_eq!(responses.len(), 5);
+        assert!(responses.iter().all(|r| r.tokens.len() == 3));
+    }
+
+    #[test]
     fn two_replicas_share_the_queue() {
         let dir = artifacts_dir();
         if !dir.join("cc-tiny.manifest.json").exists() {
@@ -209,7 +287,11 @@ mod tests {
         let coord = Coordinator::start(
             &dir,
             "cc-tiny",
-            CoordinatorConfig { max_wait: Duration::from_millis(5), replicas: 2 },
+            CoordinatorConfig {
+                max_wait: Duration::from_millis(5),
+                replicas: 2,
+                ..CoordinatorConfig::default()
+            },
         )
         .unwrap();
         // many small batches so both replicas get work

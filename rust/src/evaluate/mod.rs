@@ -12,7 +12,7 @@ pub mod multi_model;
 pub mod sensitivity;
 pub mod sparsity;
 
-pub use engine::{SweepEngine, SweepStats, WorkloadBounds};
+pub use engine::{validate_design_slo, SloSelection, SweepEngine, SweepStats, WorkloadBounds};
 
 use crate::arch::ServerDesign;
 use crate::config::hardware::ExploreSpace;

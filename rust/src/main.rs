@@ -3,7 +3,10 @@
 //! Subcommands:
 //! * `explore`                — Phase-1 hardware exploration summary
 //! * `optimize --model NAME`  — full two-phase DSE for one model
-//! * `sweep [--model NAME]`   — sweep-engine report (frontier, pruning, wall time)
+//! * `sweep [--model NAME]`   — sweep-engine report (frontier, pruning, wall
+//!   time); `--slo-ttft S --slo-tpot S` adds the SLO-constrained optimum
+//! * `serve-sim`              — discrete-event serving simulation: static vs
+//!   continuous batching on a seeded trace (`--smoke` for the CI preset)
 //! * `table2` / `fig7`..`fig15` — regenerate a paper table/figure
 //! * `serve`                  — load AOT artifacts and serve a demo stream
 //! * `ccmem`                  — run the CC-MEM cycle simulator validations
@@ -28,7 +31,7 @@ use chiplet_cloud::{Error, Result};
 fn usage() -> ! {
     eprintln!(
         "usage: ccloud <cmd> [--full] [--out DIR] [--model NAME] [--threads N] [--seq] ...\n\
-         cmds: explore optimize sweep table2 fig7..fig15 ablate serve ccmem"
+         cmds: explore optimize sweep serve-sim table2 fig7..fig15 ablate serve ccmem"
     );
     std::process::exit(2)
 }
@@ -78,10 +81,26 @@ fn main() -> Result<()> {
             let name = args.get("model").unwrap_or("gpt3");
             let model = ModelSpec::by_name(name)
                 .ok_or_else(|| Error::Config(format!("unknown model {name}")))?;
+            let slo_spec = slo_from_args(&args);
+            let serve_spec = if slo_spec.is_unconstrained() {
+                None
+            } else {
+                // The sweep has no per-design rate resolution, so default to
+                // a saturating closed loop unless a trace was given.
+                let mut traffic = traffic_from_args(&args);
+                if !args.has("trace") && !args.has("rps") {
+                    traffic.arrival = chiplet_cloud::config::ArrivalProcess::ClosedLoop {
+                        clients: args.get_or("clients", 64),
+                        think_s: args.get_or("think", 0.0),
+                    };
+                }
+                Some(chiplet_cloud::config::ServeSpec { traffic, slo: slo_spec })
+            };
             let ctx = Ctx::new(space);
-            let t = report::sweep_summary(&ctx, &model, out);
+            let t = report::sweep_summary(&ctx, &model, serve_spec.as_ref(), out);
             print!("{}", t.render());
         }
+        "serve-sim" => serve_sim(&args, space, out)?,
         "table2" => {
             let ctx = Ctx::new(space);
             let t = report::table2(&ctx, &ModelSpec::paper_models(), out);
@@ -119,6 +138,68 @@ fn main() -> Result<()> {
     Ok(())
 }
 
+/// SLO targets from `--slo-ttft` / `--slo-tpot` (seconds; absent = ∞).
+fn slo_from_args(args: &Args) -> chiplet_cloud::config::SloSpec {
+    chiplet_cloud::config::SloSpec::new(
+        args.get_or("slo-ttft", f64::INFINITY),
+        args.get_or("slo-tpot", f64::INFINITY),
+    )
+}
+
+/// Traffic description from the CLI flags. A zero `--rps` (the default)
+/// lets `report::serve_sim` resolve the rate from `--load` × the design's
+/// capacity; the `sweep --slo-*` path defaults to a saturating closed loop.
+fn traffic_from_args(args: &Args) -> chiplet_cloud::config::TrafficSpec {
+    use chiplet_cloud::config::{ArrivalProcess, TrafficSpec};
+    let requests: usize = args.get_or("requests", 400);
+    let prompt: usize = args.get_or("prompt-tokens", 64);
+    let lo: usize = args.get_or("tokens-lo", 16);
+    let hi: usize = args.get_or("tokens-hi", 128);
+    let rps: f64 = args.get_or("rps", 0.0);
+    let arrival = match args.get("trace").unwrap_or("poisson") {
+        "bursty" => ArrivalProcess::Bursty { rps, burst: args.get_or("burst", 8) },
+        "closed" => ArrivalProcess::ClosedLoop {
+            clients: args.get_or("clients", 64),
+            think_s: args.get_or("think", 0.0),
+        },
+        _ => ArrivalProcess::Poisson { rps },
+    };
+    TrafficSpec {
+        arrival,
+        requests,
+        prompt_tokens: prompt,
+        new_tokens_lo: lo,
+        new_tokens_hi: hi,
+        seed: args.get_or("seed", 42),
+    }
+}
+
+/// Discrete-event serving simulation (`ccloud serve-sim`): static vs
+/// continuous batching on the model's optimal design, plus the
+/// SLO-constrained selection when targets are given. `--smoke` is the CI
+/// preset: small model, short trace, seconds end to end.
+fn serve_sim(args: &Args, space: ExploreSpace, out: Option<&std::path::Path>) -> Result<()> {
+    let smoke = args.has("smoke");
+    let name = args.get("model").unwrap_or(if smoke { "gpt2" } else { "gpt3" });
+    let model = ModelSpec::by_name(name)
+        .ok_or_else(|| Error::Config(format!("unknown model {name}")))?;
+    let wctx: usize = args.get_or("ctx", 1024);
+    let batch: usize = args.get_or("batch", if smoke { 32 } else { 256 });
+    let mut traffic = traffic_from_args(args);
+    if smoke {
+        traffic.requests = args.get_or("requests", 120);
+        traffic.prompt_tokens = args.get_or("prompt-tokens", 32);
+        traffic.new_tokens_lo = args.get_or("tokens-lo", 8);
+        traffic.new_tokens_hi = args.get_or("tokens-hi", 32);
+    }
+    let slo = slo_from_args(args);
+    let w = chiplet_cloud::config::Workload::new(model, wctx, batch);
+    let ctx = Ctx::new(space);
+    let t = report::serve_sim(&ctx, &w, &traffic, args.get_or("load", 0.8), &slo, out);
+    print!("{}", t.render());
+    Ok(())
+}
+
 /// Demo serving loop on the AOT artifacts (see examples/serve_llm.rs for
 /// the full end-to-end driver).
 fn serve(args: &Args) -> Result<()> {
@@ -133,6 +214,7 @@ fn serve(args: &Args) -> Result<()> {
         CoordinatorConfig {
             max_wait: Duration::from_millis(30),
             replicas: args.get_or("replicas", 1),
+            ..CoordinatorConfig::default()
         },
     )?;
     let mut rng = Rng::new(42);

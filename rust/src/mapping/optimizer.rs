@@ -8,7 +8,7 @@
 
 use crate::arch::ServerDesign;
 use crate::config::Workload;
-use crate::mapping::Mapping;
+use crate::mapping::{partition, Mapping};
 use crate::perf::kernels::KernelCache;
 use crate::perf::{simulate_cached, DecodePerf};
 
@@ -44,7 +44,7 @@ pub fn divisors(n: usize) -> Vec<usize> {
 /// "unmappable on this server" (no candidates are enumerated); the old
 /// unchecked `as usize` cast silently saturated through f64 instead.
 pub fn min_chips(server: &ServerDesign, w: &Workload) -> usize {
-    let per_chip = server.chiplet.sram_mb * 1e6 * 0.98;
+    let per_chip = server.chiplet.sram_mb * 1e6 * partition::SRAM_USABLE_FRAC;
     if per_chip <= 0.0 {
         return usize::MAX;
     }

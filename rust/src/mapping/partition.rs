@@ -4,6 +4,12 @@
 use crate::config::{ModelSpec, Workload};
 use crate::mapping::Mapping;
 
+/// Fraction of CC-MEM usable for model state; the rest is reserved for
+/// CSRs, index memory and scheduling slack. Shared by every capacity
+/// check (profile fit, min chip count, max context, KV admission budget)
+/// so they cannot drift apart.
+pub const SRAM_USABLE_FRAC: f64 = 0.98;
+
 /// Per-chip memory and compute profile for a (workload, mapping) pair.
 #[derive(Clone, Debug)]
 pub struct ChipProfile {
@@ -70,7 +76,7 @@ impl ChipProfile {
     /// Does the profile fit a chip with `sram_mb` of CC-MEM? A small margin
     /// is reserved for CSRs, index memory and scheduling slack.
     pub fn fits(&self, sram_mb: f64) -> bool {
-        self.resident_bytes() <= sram_mb * 1e6 * 0.98
+        self.resident_bytes() <= sram_mb * 1e6 * SRAM_USABLE_FRAC
     }
 }
 

@@ -1,0 +1,584 @@
+//! Discrete-event serving simulator: synthetic arrival traces driven
+//! through a [`crate::sched::Policy`] with the analytic per-iteration
+//! latencies of [`crate::perf::simulator`].
+//!
+//! The steady-state simulator answers "what throughput does a saturated
+//! lockstep batch sustain"; this module answers the paper's *serving*
+//! question — what TTFT/TPOT tails, batch occupancy and goodput does a
+//! design deliver under real traffic, where requests queue, batches run
+//! partially full, and slots free at different times. Virtual time only:
+//! every iteration's duration comes from the analytic model
+//! ([`IterCost`]), so runs are deterministic, seeded, and fast enough to
+//! validate sweep candidates ([`crate::evaluate::SweepEngine::best_point_slo`]).
+//!
+//! Iteration model (matching the AOT runtime's shape): an *admission*
+//! iteration prefixes the newcomers' prompt processing to the incumbents'
+//! decode step — newcomers receive their first token from the prefill, so
+//! TTFT is measured at the end of the admitting iteration; a *decode*
+//! iteration advances every live slot by one token in lockstep at the
+//! pipeline's token period, regardless of occupancy (static shapes: padded
+//! slots are computed anyway, which is exactly why occupancy is worth
+//! measuring).
+
+use std::collections::VecDeque;
+
+use crate::config::workload::{ArrivalProcess, SloSpec, TrafficSpec};
+use crate::config::Workload;
+use crate::perf::DecodePerf;
+use crate::sched::{sanitize, Action, KvBudget, Policy, SchedView};
+use crate::util::rng::Rng;
+use crate::util::stats;
+
+/// One request arrival in a trace.
+#[derive(Clone, Copy, Debug)]
+pub struct Arrival {
+    /// Request id (ascending with arrival order).
+    pub id: u64,
+    /// Arrival time, seconds since trace start.
+    pub at_s: f64,
+    /// Prompt tokens to prefill.
+    pub prompt_tokens: usize,
+    /// Tokens to generate (>= 1; the first comes from the prefill).
+    pub new_tokens: usize,
+}
+
+/// Generate the open-loop arrival list for a traffic spec. Closed-loop
+/// specs return an empty list — their arrivals are produced *during* the
+/// simulation (each completion schedules the client's next request).
+pub fn open_loop_trace(t: &TrafficSpec) -> Vec<Arrival> {
+    let mut rng = Rng::new(t.seed);
+    let mut out = Vec::with_capacity(t.requests);
+    let mut now = 0.0f64;
+    match t.arrival {
+        ArrivalProcess::Poisson { rps } => {
+            for id in 0..t.requests {
+                now += rng.exponential(rps.max(1e-12));
+                out.push(arrival(&mut rng, t, id as u64, now));
+            }
+        }
+        ArrivalProcess::Bursty { rps, burst } => {
+            let burst = burst.max(1);
+            // Exponential gaps between bursts with mean burst/rps keep the
+            // long-run rate at `rps` while arrivals clump.
+            let mut id = 0u64;
+            while (id as usize) < t.requests {
+                now += rng.exponential((rps / burst as f64).max(1e-12));
+                for _ in 0..burst.min(t.requests - id as usize) {
+                    out.push(arrival(&mut rng, t, id, now));
+                    id += 1;
+                }
+            }
+        }
+        ArrivalProcess::ClosedLoop { .. } => {}
+    }
+    out
+}
+
+fn arrival(rng: &mut Rng, t: &TrafficSpec, id: u64, at_s: f64) -> Arrival {
+    let (lo, hi) = (t.new_tokens_lo.max(1), t.new_tokens_hi.max(t.new_tokens_lo).max(1));
+    Arrival { id, at_s, prompt_tokens: t.prompt_tokens, new_tokens: rng.range(lo, hi) }
+}
+
+/// Analytic per-iteration costs driving the simulator's virtual clock.
+#[derive(Clone, Copy, Debug)]
+pub struct IterCost {
+    /// Prefill seconds per *prompt token* of one admitted sequence.
+    pub prefill_s_per_token: f64,
+    /// One lockstep decode iteration over the batch, s (the pipeline's
+    /// token period).
+    pub decode_step_s: f64,
+}
+
+impl IterCost {
+    /// Derive the costs from a steady-state simulation of the workload:
+    /// decode iterations run at the pipeline token period; prefill charges
+    /// each sequence its per-token share of the whole-batch prefill.
+    pub fn from_perf(perf: &DecodePerf, w: &Workload) -> IterCost {
+        let prompt_tokens = (w.batch.max(1) * w.prompt_len.max(1)) as f64;
+        IterCost {
+            prefill_s_per_token: perf.prefill_latency / prompt_tokens,
+            decode_step_s: perf.token_period,
+        }
+    }
+}
+
+/// Simulator configuration: engine shape, KV budget and iteration costs.
+#[derive(Clone, Copy, Debug)]
+pub struct SimConfig {
+    /// Compiled batch slots.
+    pub max_slots: usize,
+    /// KV-capacity admission budget.
+    pub kv: KvBudget,
+    /// Iteration cost model.
+    pub cost: IterCost,
+}
+
+/// Per-request outcome record.
+#[derive(Clone, Copy, Debug)]
+pub struct ReqStats {
+    /// Request id.
+    pub id: u64,
+    /// Arrival time, s.
+    pub arrival_s: f64,
+    /// First-token completion time, s.
+    pub first_token_s: f64,
+    /// Final-token completion time, s.
+    pub finish_s: f64,
+    /// Tokens generated.
+    pub tokens: usize,
+}
+
+impl ReqStats {
+    /// Time to first token.
+    pub fn ttft_s(&self) -> f64 {
+        self.first_token_s - self.arrival_s
+    }
+
+    /// Time per output token after the first (0 for single-token requests).
+    pub fn tpot_s(&self) -> f64 {
+        if self.tokens > 1 {
+            (self.finish_s - self.first_token_s) / (self.tokens - 1) as f64
+        } else {
+            0.0
+        }
+    }
+
+    /// End-to-end latency.
+    pub fn total_s(&self) -> f64 {
+        self.finish_s - self.arrival_s
+    }
+
+    /// Did this request meet both per-request latency targets?
+    pub fn meets(&self, slo: &SloSpec) -> bool {
+        self.ttft_s() <= slo.ttft_p99_s && self.tpot_s() <= slo.tpot_p99_s
+    }
+}
+
+/// Aggregate report of one simulated trace.
+#[derive(Clone, Debug)]
+pub struct ServeReport {
+    /// Policy that produced the schedule.
+    pub policy: String,
+    /// Requests the trace offered.
+    pub offered: usize,
+    /// Requests completed.
+    pub completed: usize,
+    /// Tokens generated.
+    pub tokens: usize,
+    /// Virtual time from first arrival to last completion, s.
+    pub makespan_s: f64,
+    /// Tokens per second of wall (virtual) time.
+    pub tokens_per_s: f64,
+    /// Tokens per second counting only SLO-compliant requests.
+    pub goodput_tokens_per_s: f64,
+    /// Fraction of requests meeting the SLO.
+    pub slo_met_frac: f64,
+    /// TTFT p50, s.
+    pub ttft_p50_s: f64,
+    /// TTFT p99, s.
+    pub ttft_p99_s: f64,
+    /// TPOT p50, s.
+    pub tpot_p50_s: f64,
+    /// TPOT p99, s.
+    pub tpot_p99_s: f64,
+    /// End-to-end latency p50, s.
+    pub total_p50_s: f64,
+    /// End-to-end latency p99, s.
+    pub total_p99_s: f64,
+    /// Time-weighted decode-slot occupancy (1.0 = every iteration full).
+    pub occupancy: f64,
+    /// Engine iterations executed.
+    pub iterations: u64,
+    /// Peak concurrently-live sequences (must respect the KV budget).
+    pub peak_live: usize,
+    /// Per-request records (arrival order).
+    pub per_request: Vec<ReqStats>,
+}
+
+impl ServeReport {
+    /// Does the simulated run meet the SLO? Requires every offered request
+    /// to have completed — percentiles over a partial (or empty) set of
+    /// completions would otherwise declare a run that served nothing
+    /// SLO-compliant (e.g. a zero KV budget admits no one and produces
+    /// all-zero tails).
+    pub fn meets(&self, slo: &SloSpec) -> bool {
+        self.completed == self.offered
+            && self.ttft_p99_s <= slo.ttft_p99_s
+            && self.tpot_p99_s <= slo.tpot_p99_s
+    }
+}
+
+/// A live decode slot.
+#[derive(Clone, Copy, Debug)]
+struct Slot {
+    id: u64,
+    arrival_s: f64,
+    first_token_s: f64,
+    tokens: usize,
+    remaining: usize,
+    /// Closed-loop client that owns the request, if any.
+    client: Option<usize>,
+}
+
+/// Closed-loop arrival state: each client resubmits `think_s` after its
+/// previous request completes, until the request budget is spent.
+struct ClosedLoop {
+    /// Per-client next-submit time; `INFINITY` while a request is in flight.
+    ready: Vec<f64>,
+    think_s: f64,
+    budget: usize,
+}
+
+impl ClosedLoop {
+    /// Earliest future client submit time, if any client has budget left.
+    fn next_ready(&self) -> Option<f64> {
+        if self.budget == 0 {
+            return None;
+        }
+        self.ready.iter().copied().filter(|r| r.is_finite()).reduce(f64::min)
+    }
+}
+
+/// Drive a policy over a traffic spec and report the serving tails.
+///
+/// Deterministic in `(cfg, policy, traffic, slo)`: the virtual clock only
+/// advances by analytic iteration costs and seeded arrival draws.
+pub fn simulate_trace(
+    cfg: &SimConfig,
+    policy: &mut dyn Policy,
+    traffic: &TrafficSpec,
+    slo: &SloSpec,
+) -> ServeReport {
+    let mut rng = Rng::new(traffic.seed ^ 0x5EED_CAFE);
+    let mut pending: VecDeque<Arrival> = open_loop_trace(traffic).into();
+    let mut closed: Option<ClosedLoop> = match traffic.arrival {
+        ArrivalProcess::ClosedLoop { clients, think_s } => Some(ClosedLoop {
+            ready: vec![0.0; clients.max(1)],
+            think_s: think_s.max(0.0),
+            budget: traffic.requests,
+        }),
+        _ => None,
+    };
+    let mut next_id = 0u64;
+
+    let kv_slots = cfg.kv.concurrency(cfg.max_slots);
+    let mut queue: VecDeque<(Arrival, Option<usize>)> = VecDeque::new();
+    let mut slots: Vec<Option<Slot>> = vec![None; cfg.max_slots];
+    let mut done: Vec<ReqStats> = Vec::new();
+
+    let mut now = 0.0f64;
+    let mut first_arrival: Option<f64> = None;
+    let mut last_finish = 0.0f64;
+    let mut busy_slot_time = 0.0f64;
+    let mut busy_time = 0.0f64;
+    let mut iterations = 0u64;
+    let mut peak_live = 0usize;
+
+    loop {
+        // Materialize every arrival with `at_s <= now` into the queue.
+        while pending.front().map(|a| a.at_s <= now).unwrap_or(false) {
+            let a = pending.pop_front().unwrap();
+            first_arrival.get_or_insert(a.at_s);
+            queue.push_back((a, None));
+        }
+        if let Some(cl) = closed.as_mut() {
+            for c in 0..cl.ready.len() {
+                if cl.budget == 0 {
+                    break;
+                }
+                let r = cl.ready[c];
+                if r.is_finite() && r <= now {
+                    let a = arrival(&mut rng, traffic, next_id, r);
+                    next_id += 1;
+                    cl.budget -= 1;
+                    cl.ready[c] = f64::INFINITY; // in flight until completion
+                    first_arrival.get_or_insert(a.at_s);
+                    queue.push_back((a, Some(c)));
+                }
+            }
+        }
+
+        let live = slots.iter().filter(|s| s.is_some()).count();
+        // Next future arrival instant, for Wait actions.
+        let next_arrival = {
+            let open = pending.front().map(|a| a.at_s);
+            let cl = closed.as_ref().and_then(ClosedLoop::next_ready);
+            match (open, cl) {
+                (Some(a), Some(b)) => Some(a.min(b)),
+                (a, b) => a.or(b),
+            }
+        };
+
+        if queue.is_empty() && live == 0 && next_arrival.is_none() {
+            break;
+        }
+
+        let view = SchedView {
+            now_s: now,
+            queued: queue.len(),
+            oldest_arrival_s: queue.front().map(|(a, _)| a.at_s).unwrap_or(now),
+            live,
+            max_slots: cfg.max_slots,
+            kv_slots,
+            refill_mid_iteration: true,
+        };
+        match sanitize(policy.decide(&view), &view) {
+            Action::Admit(n) => {
+                // Interleaved iteration: newcomers prefill (first token),
+                // incumbents take one decode step.
+                let mut t_iter = if live > 0 { cfg.cost.decode_step_s } else { 0.0 };
+                let mut admitted: Vec<(Arrival, Option<usize>)> = Vec::with_capacity(n);
+                for _ in 0..n {
+                    let (a, c) = queue.pop_front().unwrap();
+                    t_iter += a.prompt_tokens as f64 * cfg.cost.prefill_s_per_token;
+                    admitted.push((a, c));
+                }
+                now += t_iter;
+                iterations += 1;
+                busy_slot_time += (live + admitted.len()) as f64 * t_iter;
+                busy_time += t_iter;
+                step_live_slots(&mut slots, now, &mut done, &mut closed, &mut last_finish);
+                for (a, c) in admitted {
+                    let slot = Slot {
+                        id: a.id,
+                        arrival_s: a.at_s,
+                        first_token_s: now,
+                        tokens: 1,
+                        remaining: a.new_tokens - 1,
+                        client: c,
+                    };
+                    if slot.remaining == 0 {
+                        finish_slot(&slot, now, &mut done, &mut closed, &mut last_finish);
+                    } else {
+                        let free = slots.iter().position(|s| s.is_none()).expect("free slot");
+                        slots[free] = Some(slot);
+                    }
+                }
+                peak_live = peak_live.max(slots.iter().filter(|s| s.is_some()).count());
+            }
+            Action::Decode => {
+                now += cfg.cost.decode_step_s;
+                iterations += 1;
+                busy_slot_time += live as f64 * cfg.cost.decode_step_s;
+                busy_time += cfg.cost.decode_step_s;
+                step_live_slots(&mut slots, now, &mut done, &mut closed, &mut last_finish);
+            }
+            Action::Wait(deadline) => {
+                let target = match (next_arrival, deadline) {
+                    (Some(a), Some(d)) => Some(a.min(d).max(now)),
+                    (Some(a), None) => Some(a.max(now)),
+                    (None, Some(d)) if live > 0 || !queue.is_empty() => Some(d.max(now)),
+                    _ => None,
+                };
+                match target {
+                    Some(t) if t > now => now = t,
+                    Some(_) => {
+                        // Deadline already passed but the policy keeps
+                        // waiting with work available — nudge time to the
+                        // next arrival to guarantee progress.
+                        match next_arrival {
+                            Some(a) if a > now => now = a,
+                            _ => break,
+                        }
+                    }
+                    None => break,
+                }
+            }
+        }
+    }
+
+    // --- aggregate --------------------------------------------------------
+    done.sort_by_key(|r| r.id);
+    let ttfts: Vec<f64> = done.iter().map(|r| r.ttft_s()).collect();
+    let tpots: Vec<f64> = done.iter().filter(|r| r.tokens > 1).map(|r| r.tpot_s()).collect();
+    let totals: Vec<f64> = done.iter().map(|r| r.total_s()).collect();
+    let tokens: usize = done.iter().map(|r| r.tokens).sum();
+    let good_tokens: usize = done.iter().filter(|r| r.meets(slo)).map(|r| r.tokens).sum();
+    let met = done.iter().filter(|r| r.meets(slo)).count();
+    let makespan = (last_finish - first_arrival.unwrap_or(0.0)).max(0.0);
+    ServeReport {
+        policy: policy.name().to_string(),
+        offered: traffic.requests,
+        completed: done.len(),
+        tokens,
+        makespan_s: makespan,
+        tokens_per_s: if makespan > 0.0 { tokens as f64 / makespan } else { 0.0 },
+        goodput_tokens_per_s: if makespan > 0.0 { good_tokens as f64 / makespan } else { 0.0 },
+        slo_met_frac: if done.is_empty() { 0.0 } else { met as f64 / done.len() as f64 },
+        ttft_p50_s: stats::percentile(&ttfts, 50.0),
+        ttft_p99_s: stats::percentile(&ttfts, 99.0),
+        tpot_p50_s: stats::percentile(&tpots, 50.0),
+        tpot_p99_s: stats::percentile(&tpots, 99.0),
+        total_p50_s: stats::percentile(&totals, 50.0),
+        total_p99_s: stats::percentile(&totals, 99.0),
+        occupancy: if busy_time > 0.0 {
+            busy_slot_time / (busy_time * cfg.max_slots as f64)
+        } else {
+            0.0
+        },
+        iterations,
+        peak_live,
+        per_request: done,
+    }
+}
+
+/// Advance every live slot by one token at time `now`; free finished ones.
+fn step_live_slots(
+    slots: &mut [Option<Slot>],
+    now: f64,
+    done: &mut Vec<ReqStats>,
+    closed: &mut Option<ClosedLoop>,
+    last_finish: &mut f64,
+) {
+    for s in slots.iter_mut() {
+        let Some(slot) = s else { continue };
+        slot.tokens += 1;
+        slot.remaining -= 1;
+        if slot.remaining == 0 {
+            let finished = *slot;
+            *s = None;
+            finish_slot(&finished, now, done, closed, last_finish);
+        }
+    }
+}
+
+/// Record a completed request; a closed-loop client starts thinking.
+fn finish_slot(
+    slot: &Slot,
+    now: f64,
+    done: &mut Vec<ReqStats>,
+    closed: &mut Option<ClosedLoop>,
+    last_finish: &mut f64,
+) {
+    done.push(ReqStats {
+        id: slot.id,
+        arrival_s: slot.arrival_s,
+        first_token_s: slot.first_token_s,
+        finish_s: now,
+        tokens: slot.tokens,
+    });
+    *last_finish = last_finish.max(now);
+    if let (Some(cl), Some(c)) = (closed.as_mut(), slot.client) {
+        cl.ready[c] = now + cl.think_s;
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::sched::{ContinuousBatch, StaticBatch};
+
+    fn cost() -> IterCost {
+        IterCost { prefill_s_per_token: 0.001, decode_step_s: 0.01 }
+    }
+
+    fn cfg(slots: usize) -> SimConfig {
+        SimConfig { max_slots: slots, kv: KvBudget::unlimited(), cost: cost() }
+    }
+
+    #[test]
+    fn poisson_trace_is_seeded_and_sorted() {
+        let t = TrafficSpec::poisson(100.0, 50, 16, 4, 8);
+        let a = open_loop_trace(&t);
+        let b = open_loop_trace(&t);
+        assert_eq!(a.len(), 50);
+        assert!(a.windows(2).all(|w| w[0].at_s <= w[1].at_s));
+        for (x, y) in a.iter().zip(&b) {
+            assert_eq!(x.at_s.to_bits(), y.at_s.to_bits());
+            assert_eq!(x.new_tokens, y.new_tokens);
+            assert!((4..=8).contains(&x.new_tokens));
+        }
+        let c = open_loop_trace(&t.with_seed(7));
+        assert!(a.iter().zip(&c).any(|(x, y)| x.at_s != y.at_s));
+    }
+
+    #[test]
+    fn bursty_trace_clumps_arrivals() {
+        let t = TrafficSpec {
+            arrival: ArrivalProcess::Bursty { rps: 100.0, burst: 5 },
+            ..TrafficSpec::poisson(100.0, 20, 16, 4, 8)
+        };
+        let a = open_loop_trace(&t);
+        assert_eq!(a.len(), 20);
+        // within a burst, arrivals share a timestamp
+        assert_eq!(a[0].at_s.to_bits(), a[4].at_s.to_bits());
+        assert!(a[5].at_s > a[4].at_s);
+    }
+
+    /// Hand-traceable single-request run: one arrival at t=0, prompt 10,
+    /// 3 new tokens. Admission iteration costs 10 × 1 ms (first token at
+    /// 10 ms), then two decode steps of 10 ms each finish it at 30 ms.
+    #[test]
+    fn single_request_timeline_is_exact() {
+        let t = TrafficSpec::poisson(1e9, 1, 10, 3, 3);
+        let rep = simulate_trace(&cfg(4), &mut ContinuousBatch, &t, &SloSpec::unconstrained());
+        assert_eq!(rep.completed, 1);
+        assert_eq!(rep.tokens, 3);
+        let r = rep.per_request[0];
+        assert!((r.ttft_s() - 0.010).abs() < 1e-12, "ttft={}", r.ttft_s());
+        assert!((r.finish_s - r.first_token_s - 0.020).abs() < 1e-12);
+        assert!((r.tpot_s() - 0.010).abs() < 1e-12);
+        assert_eq!(rep.iterations, 3);
+    }
+
+    #[test]
+    fn simulation_is_deterministic() {
+        let t = TrafficSpec::poisson(40.0, 200, 16, 4, 32).with_seed(123);
+        let run = || {
+            let rep = simulate_trace(&cfg(8), &mut ContinuousBatch, &t, &SloSpec::unconstrained());
+            (rep.tokens, rep.iterations, rep.ttft_p99_s.to_bits(), rep.makespan_s.to_bits())
+        };
+        assert_eq!(run(), run());
+    }
+
+    #[test]
+    fn every_request_completes_with_its_budget() {
+        let t = TrafficSpec::poisson(50.0, 300, 8, 1, 16).with_seed(9);
+        let mut st = StaticBatch::new(0.02);
+        let mut co = ContinuousBatch;
+        let policies: [&mut dyn Policy; 2] = [&mut st, &mut co];
+        for policy in policies {
+            let rep = simulate_trace(&cfg(8), policy, &t, &SloSpec::unconstrained());
+            assert_eq!(rep.completed, 300, "{}", rep.policy);
+            let trace = open_loop_trace(&t);
+            for (r, a) in rep.per_request.iter().zip(&trace) {
+                assert_eq!(r.id, a.id);
+                assert_eq!(r.tokens, a.new_tokens);
+                assert!(r.first_token_s >= a.at_s);
+                assert!(r.finish_s >= r.first_token_s);
+            }
+        }
+    }
+
+    #[test]
+    fn closed_loop_generates_exactly_the_request_budget() {
+        let t = TrafficSpec::closed_loop(4, 0.005, 40, 8, 4, 8).with_seed(3);
+        let rep = simulate_trace(&cfg(8), &mut ContinuousBatch, &t, &SloSpec::unconstrained());
+        assert_eq!(rep.completed, 40);
+        // at most `clients` requests are ever in flight
+        assert!(rep.peak_live <= 4, "peak={}", rep.peak_live);
+    }
+
+    #[test]
+    fn kv_budget_caps_concurrency() {
+        let mut c = cfg(8);
+        c.kv = KvBudget::seqs(3);
+        let t = TrafficSpec::poisson(1000.0, 60, 8, 8, 8);
+        let rep = simulate_trace(&c, &mut ContinuousBatch, &t, &SloSpec::unconstrained());
+        assert_eq!(rep.completed, 60);
+        assert!(rep.peak_live <= 3, "peak={}", rep.peak_live);
+    }
+
+    #[test]
+    fn static_batching_runs_batch_synchronous() {
+        // 8 simultaneous arrivals, 4 slots: two sequential full batches.
+        let t = TrafficSpec::poisson(1e9, 8, 10, 5, 5);
+        let rep = simulate_trace(&cfg(4), &mut StaticBatch::new(0.001), &t, &SloSpec::unconstrained());
+        assert_eq!(rep.completed, 8);
+        // batch 2 must start after batch 1 fully drains
+        let b1_finish = rep.per_request[..4].iter().map(|r| r.finish_s).fold(0.0, f64::max);
+        let b2_first = rep.per_request[4..].iter().map(|r| r.first_token_s).fold(f64::MAX, f64::min);
+        assert!(b2_first >= b1_finish - 1e-12);
+        assert!((rep.occupancy - 1.0).abs() < 1e-9);
+    }
+}

@@ -7,10 +7,15 @@
 //!   `l_all = l_prefill + (t−1)·max(l_mb, n·l_s)` (paper Fig. 6).
 //! * [`simulator`] — end-to-end: per-token latency, throughput, utilization
 //!   for a (server, workload, mapping) triple.
+//! * [`events`] — discrete-event *serving* simulation: synthetic arrival
+//!   traces through a [`crate::sched::Policy`] at the analytic iteration
+//!   latencies, reporting TTFT/TPOT tails, occupancy and goodput.
 
 pub mod allreduce;
+pub mod events;
 pub mod kernels;
 pub mod pipeline;
 pub mod simulator;
 
+pub use events::{simulate_trace, IterCost, ServeReport, SimConfig};
 pub use simulator::{simulate, simulate_cached, DecodePerf};

@@ -140,7 +140,7 @@ pub fn simulate_cached(
 /// chips with `sram_mb` each (Table 2's "Max Context Length" row).
 pub fn max_context(w: &Workload, n_chips: usize, sram_mb: f64) -> usize {
     let m = &w.model;
-    let total = n_chips as f64 * sram_mb * 1e6 * 0.98;
+    let total = n_chips as f64 * sram_mb * 1e6 * partition::SRAM_USABLE_FRAC;
     let spare = total - m.weight_bytes();
     if spare <= 0.0 {
         return 0;

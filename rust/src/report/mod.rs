@@ -50,9 +50,16 @@ fn fmt(v: f64, digits: usize) -> String {
 
 /// **Sweep engine report** — the co-design search itself as an experiment:
 /// feasible-space and Pareto-frontier sizes, branch-and-bound counters for
-/// one model's full Table-2 grid, wall time, and the optimum found
-/// (`ccloud sweep [--model NAME]`).
-pub fn sweep_summary(ctx: &Ctx, model: &ModelSpec, out_dir: Option<&Path>) -> Table {
+/// one model's full Table-2 grid, wall time, and the optimum found — with
+/// its steady-state latency bounds, and (when `slo` is given) the
+/// SLO-constrained optimum the event simulator confirmed
+/// (`ccloud sweep [--model NAME] [--slo-ttft S --slo-tpot S]`).
+pub fn sweep_summary(
+    ctx: &Ctx,
+    model: &ModelSpec,
+    slo: Option<&crate::config::ServeSpec>,
+    out_dir: Option<&Path>,
+) -> Table {
     use crate::evaluate::SweepEngine;
     let frontier = crate::explore::pareto::frontier_indices(&ctx.servers).len();
     let grid = Workload::study_grid(model);
@@ -91,12 +98,194 @@ pub fn sweep_summary(ctx: &Ctx, model: &ModelSpec, out_dir: Option<&Path>) -> Ta
                 ),
             ]);
             t.row(vec!["TCO/1M tokens".to_string(), format!("${:.3}", p.tco_per_mtok())]);
+            // Steady-state latency bounds of the optimum: what the analytic
+            // model alone can promise before any queueing.
+            t.row(vec![
+                "optimum token period (TPOT bound)".to_string(),
+                crate::util::fmt_secs(p.perf.token_period),
+            ]);
+            t.row(vec![
+                "optimum prefill/seq (TTFT bound)".to_string(),
+                crate::util::fmt_secs(p.perf.prefill_latency / w.batch.max(1) as f64),
+            ]);
         }
         None => {
             t.row(vec!["optimum".to_string(), "none (no feasible design)".to_string()]);
         }
     }
+    if let Some(spec) = slo {
+        let w = Workload::new(model.clone(), spec_ctx(&grid, &best), spec_batch(&grid, &best));
+        // An unresolved open-loop rate (rps <= 0) would make the SLO pass
+        // vacuous; pace it at 80% of the unconstrained optimum's capacity.
+        let traffic = match &best {
+            Some((_, p)) => resolve_rate(&spec.traffic, 0.8, p.perf.tokens_per_s),
+            None => spec.traffic,
+        };
+        match engine.best_point_slo(&ctx.space, &ctx.servers, &w, &spec.slo, &traffic) {
+            Some(sel) => {
+                t.row(vec![
+                    "SLO-constrained optimum".to_string(),
+                    format!(
+                        "{:.0} mm² die, tp={} pp={} µb={} — ${:.3}/1M tok ({} bound-feasible, {} sim-validated)",
+                        sel.point.server.chiplet.die_mm2,
+                        sel.point.mapping.tp,
+                        sel.point.mapping.pp,
+                        sel.point.mapping.microbatch,
+                        sel.point.tco_per_mtok(),
+                        sel.bound_feasible,
+                        sel.validated,
+                    ),
+                ]);
+                t.row(vec![
+                    "SLO-sim tails".to_string(),
+                    format!(
+                        "ttft p99 {} tpot p99 {} occupancy {:.0}%",
+                        crate::util::fmt_secs(sel.report.ttft_p99_s),
+                        crate::util::fmt_secs(sel.report.tpot_p99_s),
+                        sel.report.occupancy * 100.0,
+                    ),
+                ]);
+            }
+            None => {
+                t.row(vec![
+                    "SLO-constrained optimum".to_string(),
+                    "none (no design meets the SLO under this traffic)".to_string(),
+                ]);
+            }
+        }
+    }
     persist(&t, out_dir, "sweep");
+    t
+}
+
+/// The grid point the unconstrained optimum chose (fallback: a mid-grid
+/// default), so the SLO-constrained pass compares like for like.
+fn spec_ctx(grid: &[Workload], best: &Option<(Workload, crate::evaluate::DesignPoint)>) -> usize {
+    best.as_ref().map(|(w, _)| w.ctx).unwrap_or_else(|| grid[grid.len() / 2].ctx)
+}
+
+fn spec_batch(grid: &[Workload], best: &Option<(Workload, crate::evaluate::DesignPoint)>) -> usize {
+    best.as_ref().map(|(w, _)| w.batch).unwrap_or_else(|| grid[grid.len() / 2].batch)
+}
+
+/// Resolve a non-positive open-loop arrival rate to `load` × the design's
+/// steady-state *request* capacity (tokens/s over the mean token budget).
+/// An rps of 0 would otherwise space arrivals ~10¹² virtual seconds apart
+/// and make every SLO trivially pass. Closed-loop traffic is self-pacing
+/// and returned unchanged.
+fn resolve_rate(
+    traffic: &crate::config::TrafficSpec,
+    load: f64,
+    capacity_tokens_per_s: f64,
+) -> crate::config::TrafficSpec {
+    use crate::config::ArrivalProcess;
+    let mean_tokens = (traffic.new_tokens_lo + traffic.new_tokens_hi).max(2) as f64 / 2.0;
+    let capacity_rps = capacity_tokens_per_s / mean_tokens;
+    let mut traffic = *traffic;
+    match &mut traffic.arrival {
+        ArrivalProcess::Poisson { rps } | ArrivalProcess::Bursty { rps, .. } => {
+            if *rps <= 0.0 {
+                *rps = load.max(0.01) * capacity_rps;
+            }
+        }
+        ArrivalProcess::ClosedLoop { .. } => {}
+    }
+    traffic
+}
+
+/// **Serving simulation** — static vs continuous batching on the same
+/// seeded trace, on the model's TCO/Token-optimal design
+/// (`ccloud serve-sim`). One row per policy with throughput, goodput,
+/// latency tails and occupancy; with a binding SLO, extra rows report the
+/// SLO-constrained design selection.
+///
+/// A non-positive Poisson/bursty rate is resolved to `load` × the design's
+/// steady-state *request* capacity (tokens/s over the mean token budget),
+/// so traces stress the design rather than an arbitrary absolute rate.
+pub fn serve_sim(
+    ctx: &Ctx,
+    w: &Workload,
+    traffic: &crate::config::TrafficSpec,
+    load: f64,
+    slo: &crate::config::SloSpec,
+    out_dir: Option<&Path>,
+) -> Table {
+    use crate::perf::events::{simulate_trace, IterCost, ServeReport, SimConfig};
+    use crate::sched::{ContinuousBatch, KvBudget, Policy, StaticBatch};
+
+    let batch = w.batch;
+    let mut t = Table::new(vec![
+        "Policy", "Req", "Tokens", "Tok/s", "Goodput", "TTFT p50", "TTFT p99", "TPOT p99",
+        "Occup %", "SLO met %",
+    ])
+    .with_title(format!(
+        "Serving simulation: {} @ ctx {} batch {} ({} requests)",
+        w.model.display, w.ctx, batch, traffic.requests
+    ));
+    // Rows are fixed 10-wide; pad informational rows to the header arity.
+    let padded = |msg: &str| {
+        let mut v = vec![msg.to_string()];
+        v.resize(10, "-".to_string());
+        v
+    };
+    let Some(best) = evaluate::best_point(&ctx.space, &ctx.servers, w) else {
+        t.row(padded("no feasible design"));
+        persist(&t, out_dir, "serve_sim");
+        return t;
+    };
+
+    // Resolve a load-relative arrival rate against the design's capacity.
+    let traffic = resolve_rate(traffic, load, best.perf.tokens_per_s);
+
+    let cfg = SimConfig {
+        max_slots: batch.max(1),
+        kv: KvBudget::from_design(&best.server, w, &best.mapping),
+        cost: IterCost::from_perf(&best.perf, w),
+    };
+    // Static window: a couple of token periods — long enough to coalesce,
+    // short enough not to dominate TTFT at low load.
+    // One shared row shape for every report row, so the cells cannot
+    // drift from the 10-column header.
+    let report_row = |label: String, r: &ServeReport| -> Vec<String> {
+        vec![
+            label,
+            r.completed.to_string(),
+            r.tokens.to_string(),
+            fmt(r.tokens_per_s, 1),
+            fmt(r.goodput_tokens_per_s, 1),
+            crate::util::fmt_secs(r.ttft_p50_s),
+            crate::util::fmt_secs(r.ttft_p99_s),
+            crate::util::fmt_secs(r.tpot_p99_s),
+            fmt(r.occupancy * 100.0, 0),
+            fmt(r.slo_met_frac * 100.0, 0),
+        ]
+    };
+    let mut st = StaticBatch::new((2.0 * best.perf.token_period).max(0.005));
+    let mut co = ContinuousBatch;
+    let policies: [&mut dyn Policy; 2] = [&mut st, &mut co];
+    for policy in policies {
+        let r = simulate_trace(&cfg, policy, &traffic, slo);
+        t.row(report_row(r.policy.clone(), &r));
+    }
+    if !slo.is_unconstrained() {
+        use crate::evaluate::SweepEngine;
+        match SweepEngine::default().best_point_slo(&ctx.space, &ctx.servers, w, slo, &traffic) {
+            Some(sel) => {
+                let label = format!(
+                    "slo-opt ({:.0} mm², tp={} pp={}, ${:.3}/1M)",
+                    sel.point.server.chiplet.die_mm2,
+                    sel.point.mapping.tp,
+                    sel.point.mapping.pp,
+                    sel.point.tco_per_mtok(),
+                );
+                t.row(report_row(label, &sel.report));
+            }
+            None => {
+                t.row(padded("slo-opt: no design meets the SLO"));
+            }
+        }
+    }
+    persist(&t, out_dir, "serve_sim");
     t
 }
 

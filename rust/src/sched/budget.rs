@@ -1,0 +1,130 @@
+//! The KV-capacity admission budget: how many sequences may be resident at
+//! once before the CC-MEM of the mapped system overflows.
+//!
+//! The paper's designs keep weights *and* the KV cache in on-chip SRAM
+//! (§2.2.1), so concurrency is capacity-limited, not compute-limited: a
+//! scheduler that admits more sequences than the spare SRAM holds would
+//! spill KV off-chip and invalidate the whole performance model. The
+//! budget is derived from the same `arch`/`mapping` quantities the
+//! analytic simulator uses.
+
+use crate::arch::ServerDesign;
+use crate::config::Workload;
+use crate::mapping::{partition, Mapping};
+
+/// Maximum concurrently-resident sequences the KV capacity admits.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct KvBudget {
+    /// Hard cap on live sequences (full-context KV reserved per slot —
+    /// the static-shape artifact's allocation model).
+    pub max_seqs: usize,
+}
+
+impl KvBudget {
+    /// No capacity limit (the compiled batch size is the only cap).
+    pub fn unlimited() -> KvBudget {
+        KvBudget { max_seqs: usize::MAX }
+    }
+
+    /// Explicit sequence cap (tests and synthetic sims).
+    pub fn seqs(max_seqs: usize) -> KvBudget {
+        KvBudget { max_seqs }
+    }
+
+    /// Budget for a workload mapped onto a server: the mapping's total
+    /// CC-MEM minus resident weights and activation double-buffers,
+    /// divided by one sequence's full-context KV footprint.
+    ///
+    /// Uses the same per-chip profile as the analytic simulator
+    /// ([`partition::profile`]), so a mapping the simulator accepts always
+    /// yields `max_seqs >= w.batch`.
+    pub fn from_design(server: &ServerDesign, w: &Workload, mapping: &Mapping) -> KvBudget {
+        let n = mapping.n_chips() as f64;
+        let capacity = n * server.chiplet.sram_mb * 1e6 * partition::SRAM_USABLE_FRAC;
+        let prof = partition::profile(w, mapping);
+        let fixed = (prof.weight_bytes + prof.act_bytes) * n;
+        let per_seq = w.model.kv_bytes_per_seq(w.ctx);
+        let spare = capacity - fixed;
+        if spare <= 0.0 || per_seq <= 0.0 {
+            return KvBudget { max_seqs: 0 };
+        }
+        let seqs = (spare / per_seq).floor();
+        if !seqs.is_finite() || seqs >= usize::MAX as f64 {
+            return KvBudget::unlimited();
+        }
+        KvBudget { max_seqs: seqs as usize }
+    }
+
+    /// Effective concurrency for an engine with `max_slots` compiled batch
+    /// slots: the tighter of the two limits.
+    pub fn concurrency(&self, max_slots: usize) -> usize {
+        self.max_seqs.min(max_slots)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::arch::ChipletDesign;
+    use crate::config::ModelSpec;
+
+    fn gpt3_server() -> ServerDesign {
+        ServerDesign {
+            chiplet: ChipletDesign {
+                die_mm2: 140.0,
+                sram_mb: 225.8,
+                tflops: 5.5,
+                mem_bw_gbps: 2750.0,
+                n_bank_groups: 172,
+                io_link_gbps: 25.0,
+                io_links: 4,
+                tdp_w: 14.1,
+            },
+            chips_per_lane: 17,
+            lanes: 8,
+            server_power_w: 2020.0,
+            server_capex: 5300.0,
+        }
+    }
+
+    #[test]
+    fn table2_mapping_admits_its_own_batch() {
+        // The Table-2 GPT-3 mapping fits batch 256 by construction, so the
+        // derived budget must admit at least those 256 sequences.
+        let w = Workload::new(ModelSpec::gpt3(), 2048, 256);
+        let m = Mapping { tp: 136, pp: 96, microbatch: 2 };
+        let b = KvBudget::from_design(&gpt3_server(), &w, &m);
+        assert!(b.max_seqs >= 256, "max_seqs={}", b.max_seqs);
+        assert_eq!(b.concurrency(256), 256);
+    }
+
+    #[test]
+    fn tiny_system_admits_nothing() {
+        let w = Workload::new(ModelSpec::gpt3(), 2048, 256);
+        let m = Mapping { tp: 2, pp: 2, microbatch: 1 };
+        let b = KvBudget::from_design(&gpt3_server(), &w, &m);
+        assert_eq!(b.max_seqs, 0);
+    }
+
+    #[test]
+    fn budget_scales_with_chips() {
+        let w = Workload::new(ModelSpec::gpt3(), 2048, 256);
+        let small = KvBudget::from_design(
+            &gpt3_server(),
+            &w,
+            &Mapping { tp: 136, pp: 96, microbatch: 2 },
+        );
+        let large = KvBudget::from_design(
+            &gpt3_server(),
+            &w,
+            &Mapping { tp: 272, pp: 96, microbatch: 2 },
+        );
+        assert!(large.max_seqs > small.max_seqs);
+    }
+
+    #[test]
+    fn concurrency_clamps_to_slots() {
+        assert_eq!(KvBudget::unlimited().concurrency(64), 64);
+        assert_eq!(KvBudget::seqs(3).concurrency(64), 3);
+    }
+}

@@ -1,0 +1,209 @@
+//! Iteration-level scheduling policy, shared by the live coordinator and
+//! the discrete-event serving simulator ([`crate::perf::events`]).
+//!
+//! The paper selects designs by TCO/Token *under a latency target* (§4,
+//! Fig. 11's throughput–latency Pareto), which makes the scheduler — when
+//! batches form, when freed slots refill, how admission respects the
+//! CC-MEM KV budget — a first-class part of the model, not an
+//! implementation detail of the serving leader. This module extracts that
+//! decision logic out of `coordinator::{batcher, server}` into one place:
+//!
+//! * [`Policy`] — the decision trait: given a [`SchedView`] of the queue
+//!   and the decode slots, emit one [`Action`] for the next engine
+//!   iteration.
+//! * [`StaticBatch`] — the seed's batch-synchronous policy: form a full
+//!   batch (or wait out a window), run it to completion, repeat. Exactly
+//!   the granularity the AOT pipeline schedule assumes.
+//! * [`ContinuousBatch`] — iteration-level (Orca-style) batching: slots
+//!   free and refill *between decode steps*, prefill interleaves with
+//!   decode, and admission never exceeds the KV-capacity budget.
+//! * [`KvBudget`] — the CC-MEM KV-capacity admission limit, derived from
+//!   the (server, workload, mapping) triple of `arch`/`mapping`.
+//!
+//! Both drivers run the same trait. The discrete-event simulator executes
+//! every action literally (it owns virtual time and per-slot state). The
+//! live coordinator executes the policy at the granularity its engine
+//! supports: the AOT artifact's prefill is whole-batch (static shapes), so
+//! a live executor reports `refill_mid_iteration = false` in its view and
+//! [`sanitize`] coerces mid-batch admissions to plain decode steps. The
+//! policies themselves are executor-agnostic.
+
+pub mod budget;
+pub mod policy;
+
+pub use budget::KvBudget;
+pub use policy::{ContinuousBatch, StaticBatch};
+
+/// What a policy sees when deciding the next engine iteration.
+///
+/// Counts only — the drivers own the actual queues and slots, which keeps
+/// one policy instance usable from both a `Mutex`-guarded live queue and
+/// the simulator's single-threaded event loop.
+#[derive(Clone, Copy, Debug)]
+pub struct SchedView {
+    /// Current time, seconds since the driver's epoch.
+    pub now_s: f64,
+    /// Requests that have arrived and are waiting for a slot.
+    pub queued: usize,
+    /// Arrival time of the head-of-line request (meaningful when
+    /// `queued > 0`).
+    pub oldest_arrival_s: f64,
+    /// Slots currently mid-generation.
+    pub live: usize,
+    /// Compiled batch size — the hard slot count of the engine.
+    pub max_slots: usize,
+    /// Concurrency admitted by the KV-capacity budget (already clamped to
+    /// `max_slots`; see [`KvBudget::concurrency`]).
+    pub kv_slots: usize,
+    /// Whether the executor can admit new sequences while others are
+    /// mid-generation (the event simulator can; the whole-batch AOT engine
+    /// cannot).
+    pub refill_mid_iteration: bool,
+}
+
+impl SchedView {
+    /// Slots a policy may fill right now without violating the engine
+    /// shape or the KV budget.
+    pub fn free_slots(&self) -> usize {
+        self.kv_slots.saturating_sub(self.live)
+    }
+}
+
+/// One scheduling decision: what the engine does next.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub enum Action {
+    /// Admit the `n` oldest queued requests into free slots and run their
+    /// prefill (interleaved with one decode step for any live incumbents).
+    Admit(usize),
+    /// Run one lockstep decode iteration over the live slots.
+    Decode,
+    /// Nothing runnable: block for arrivals, optionally only until the
+    /// given deadline (seconds since the driver's epoch).
+    Wait(Option<f64>),
+}
+
+/// The scheduling policy contract shared by the live coordinator and the
+/// event simulator.
+pub trait Policy: Send {
+    /// Short policy name for reports and traces.
+    fn name(&self) -> &'static str;
+
+    /// Decide the next engine iteration. Must be deterministic in `view`
+    /// and internal state — both drivers rely on replayability.
+    fn decide(&mut self, view: &SchedView) -> Action;
+}
+
+/// Clamp a policy decision to what the view actually permits. This is the
+/// single place the admission invariants live, for every driver:
+///
+/// * never admit more requests than are queued or than fit the free
+///   (KV-budgeted) slots;
+/// * never emit an *empty* admission — an all-padding batch would still
+///   pay a full prefill (the seed served exactly that bug);
+/// * never admit mid-generation on an executor that cannot
+///   (`refill_mid_iteration == false`) — coerced to [`Action::Decode`];
+/// * never decode with zero live slots — coerced to [`Action::Wait`];
+/// * never wait while sequences are mid-generation — coerced to
+///   [`Action::Decode`] (decode iterations are how time passes for live
+///   slots; a waiting executor would strand them, and the event simulator
+///   would otherwise end a trace with requests still in flight).
+pub fn sanitize(action: Action, view: &SchedView) -> Action {
+    match action {
+        Action::Admit(n) => {
+            let n = n.min(view.queued).min(view.free_slots());
+            if n > 0 && view.live > 0 && !view.refill_mid_iteration {
+                Action::Decode
+            } else if n > 0 {
+                Action::Admit(n)
+            } else if view.live > 0 {
+                Action::Decode
+            } else {
+                Action::Wait(None)
+            }
+        }
+        Action::Decode => {
+            if view.live > 0 {
+                Action::Decode
+            } else {
+                Action::Wait(None)
+            }
+        }
+        Action::Wait(_) if view.live > 0 => Action::Decode,
+        Action::Wait(deadline) => Action::Wait(deadline.filter(|d| d.is_finite())),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn view(queued: usize, live: usize) -> SchedView {
+        SchedView {
+            now_s: 0.0,
+            queued,
+            oldest_arrival_s: 0.0,
+            live,
+            max_slots: 8,
+            kv_slots: 8,
+            refill_mid_iteration: true,
+        }
+    }
+
+    #[test]
+    fn sanitize_caps_admission_to_queue_and_slots() {
+        assert_eq!(sanitize(Action::Admit(100), &view(3, 0)), Action::Admit(3));
+        assert_eq!(sanitize(Action::Admit(100), &view(100, 6)), Action::Admit(2));
+    }
+
+    #[test]
+    fn sanitize_never_emits_empty_admission() {
+        // The all-padding-batch regression: an Admit(0) must never reach an
+        // executor as an admission.
+        assert_eq!(sanitize(Action::Admit(0), &view(0, 0)), Action::Wait(None));
+        assert_eq!(sanitize(Action::Admit(0), &view(0, 4)), Action::Decode);
+        // queue non-empty but all slots full: decode, don't admit
+        assert_eq!(sanitize(Action::Admit(5), &view(5, 8)), Action::Decode);
+    }
+
+    #[test]
+    fn sanitize_respects_whole_batch_executors() {
+        let mut v = view(4, 2);
+        v.refill_mid_iteration = false;
+        assert_eq!(sanitize(Action::Admit(4), &v), Action::Decode);
+        v.live = 0;
+        assert_eq!(sanitize(Action::Admit(4), &v), Action::Admit(4));
+    }
+
+    #[test]
+    fn sanitize_respects_kv_budget() {
+        let mut v = view(8, 0);
+        v.kv_slots = 3;
+        assert_eq!(sanitize(Action::Admit(8), &v), Action::Admit(3));
+    }
+
+    #[test]
+    fn sanitize_decode_needs_live_slots() {
+        assert_eq!(sanitize(Action::Decode, &view(2, 0)), Action::Wait(None));
+        assert_eq!(sanitize(Action::Decode, &view(0, 1)), Action::Decode);
+    }
+
+    #[test]
+    fn sanitize_drops_non_finite_deadlines() {
+        assert_eq!(
+            sanitize(Action::Wait(Some(f64::INFINITY)), &view(0, 0)),
+            Action::Wait(None)
+        );
+        assert_eq!(
+            sanitize(Action::Wait(Some(1.5)), &view(0, 0)),
+            Action::Wait(Some(1.5))
+        );
+    }
+
+    #[test]
+    fn sanitize_never_waits_with_live_slots() {
+        // A naive policy waiting for arrivals mid-generation would strand
+        // the in-flight sequences; decode is how their time passes.
+        assert_eq!(sanitize(Action::Wait(None), &view(0, 2)), Action::Decode);
+        assert_eq!(sanitize(Action::Wait(Some(9.0)), &view(3, 1)), Action::Decode);
+    }
+}

@@ -1,0 +1,150 @@
+//! The two batching policies: batch-synchronous (the seed's behaviour) and
+//! continuous (iteration-level) batching.
+
+use crate::sched::{Action, Policy, SchedView};
+
+/// Batch-synchronous static batching — the granularity the paper's AOT
+/// pipeline schedule assumes. While a batch is in flight the policy only
+/// decodes; with idle slots it waits up to `max_wait_s` (measured from the
+/// head-of-line request's *arrival*, bounding its queueing delay) for a
+/// full batch, then admits whatever is queued.
+#[derive(Clone, Copy, Debug)]
+pub struct StaticBatch {
+    /// Max time the head-of-line request may wait for a full batch, s.
+    pub max_wait_s: f64,
+}
+
+impl StaticBatch {
+    /// Policy with the given batch-forming window.
+    pub fn new(max_wait_s: f64) -> StaticBatch {
+        StaticBatch { max_wait_s }
+    }
+}
+
+impl Policy for StaticBatch {
+    fn name(&self) -> &'static str {
+        "static"
+    }
+
+    fn decide(&mut self, v: &SchedView) -> Action {
+        if v.live > 0 {
+            return Action::Decode;
+        }
+        if v.queued == 0 {
+            return Action::Wait(None);
+        }
+        let full = v.kv_slots.min(v.max_slots);
+        if v.queued >= full {
+            return Action::Admit(full);
+        }
+        let deadline = v.oldest_arrival_s + self.max_wait_s;
+        if v.now_s >= deadline {
+            Action::Admit(v.queued)
+        } else {
+            Action::Wait(Some(deadline))
+        }
+    }
+}
+
+/// Continuous (iteration-level) batching: any freed slot refills on the
+/// very next iteration, prefill interleaves with decode, and admission is
+/// greedy — there is no batch-forming window, because a newcomer never
+/// has to wait for stragglers to finish.
+///
+/// On an executor that cannot refill mid-generation (the whole-batch AOT
+/// engine), [`crate::sched::sanitize`] degrades admissions to decode steps
+/// and the policy behaves as greedy static batching without the wait
+/// window — still a meaningful latency/occupancy trade, with identical
+/// code driving both executors.
+#[derive(Clone, Copy, Debug, Default)]
+pub struct ContinuousBatch;
+
+impl Policy for ContinuousBatch {
+    fn name(&self) -> &'static str {
+        "continuous"
+    }
+
+    fn decide(&mut self, v: &SchedView) -> Action {
+        let n = v.queued.min(v.free_slots());
+        if n > 0 && (v.live == 0 || v.refill_mid_iteration) {
+            Action::Admit(n)
+        } else if v.live > 0 {
+            Action::Decode
+        } else {
+            Action::Wait(None)
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn view(queued: usize, live: usize, now_s: f64) -> SchedView {
+        SchedView {
+            now_s,
+            queued,
+            oldest_arrival_s: 0.0,
+            live,
+            max_slots: 4,
+            kv_slots: 4,
+            refill_mid_iteration: true,
+        }
+    }
+
+    #[test]
+    fn static_fills_or_waits_out_the_window() {
+        let mut p = StaticBatch::new(0.05);
+        // full queue: admit a full batch immediately
+        assert_eq!(p.decide(&view(9, 0, 0.0)), Action::Admit(4));
+        // partial queue inside the window: wait until the deadline
+        assert_eq!(p.decide(&view(2, 0, 0.01)), Action::Wait(Some(0.05)));
+        // window expired: emit the partial batch
+        assert_eq!(p.decide(&view(2, 0, 0.06)), Action::Admit(2));
+        // batch in flight: decode, never admit
+        assert_eq!(p.decide(&view(9, 3, 0.0)), Action::Decode);
+        // idle and empty: sleep
+        assert_eq!(p.decide(&view(0, 0, 1.0)), Action::Wait(None));
+    }
+
+    #[test]
+    fn static_respects_kv_limited_batch() {
+        let mut p = StaticBatch::new(0.05);
+        let mut v = view(9, 0, 0.0);
+        v.kv_slots = 3;
+        assert_eq!(p.decide(&v), Action::Admit(3));
+    }
+
+    #[test]
+    fn continuous_refills_freed_slots_immediately() {
+        let mut p = ContinuousBatch;
+        // two free slots, three queued: admit two, no waiting window
+        assert_eq!(p.decide(&view(3, 2, 0.0)), Action::Admit(2));
+        // slots full: decode
+        assert_eq!(p.decide(&view(3, 4, 0.0)), Action::Decode);
+        // nothing queued but generation in flight: decode
+        assert_eq!(p.decide(&view(0, 1, 0.0)), Action::Decode);
+        // fully idle: sleep
+        assert_eq!(p.decide(&view(0, 0, 0.0)), Action::Wait(None));
+    }
+
+    #[test]
+    fn continuous_defers_admission_on_whole_batch_executors() {
+        let mut p = ContinuousBatch;
+        let mut v = view(3, 2, 0.0);
+        v.refill_mid_iteration = false;
+        assert_eq!(p.decide(&v), Action::Decode);
+        v.live = 0;
+        assert_eq!(p.decide(&v), Action::Admit(3));
+    }
+
+    #[test]
+    fn continuous_never_exceeds_kv_budget() {
+        let mut p = ContinuousBatch;
+        let mut v = view(8, 1, 0.0);
+        v.kv_slots = 2;
+        assert_eq!(p.decide(&v), Action::Admit(1));
+        v.live = 2;
+        assert_eq!(p.decide(&v), Action::Decode);
+    }
+}

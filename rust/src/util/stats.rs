@@ -27,11 +27,20 @@ pub fn stddev(xs: &[f64]) -> f64 {
     (xs.iter().map(|&x| (x - m) * (x - m)).sum::<f64>() / xs.len() as f64).sqrt()
 }
 
-/// Percentile with linear interpolation; `q` in [0, 100].
+/// Percentile with linear interpolation.
+///
+/// Hardened for the tail-latency reporting paths: empty input returns 0.0,
+/// a single element is its own percentile for every `q`, and `q` is
+/// clamped into [0, 100] (a NaN `q` reads as 0) — out-of-range quantiles
+/// used to index past the end of the sorted vector.
 pub fn percentile(xs: &[f64], q: f64) -> f64 {
     if xs.is_empty() {
         return 0.0;
     }
+    if xs.len() == 1 {
+        return xs[0];
+    }
+    let q = if q.is_nan() { 0.0 } else { q.clamp(0.0, 100.0) };
     let mut v = xs.to_vec();
     v.sort_by(|a, b| a.partial_cmp(b).unwrap());
     let pos = (q / 100.0) * (v.len() - 1) as f64;
@@ -122,5 +131,24 @@ mod tests {
         assert_eq!(mean(&[]), 0.0);
         assert_eq!(geomean(&[]), 0.0);
         assert_eq!(percentile(&[], 50.0), 0.0);
+        assert_eq!(percentile(&[], 0.0), 0.0);
+        assert_eq!(percentile(&[], 200.0), 0.0);
+    }
+
+    #[test]
+    fn single_element_is_every_percentile() {
+        for q in [0.0, 1.0, 50.0, 99.0, 100.0] {
+            assert_eq!(percentile(&[7.5], q), 7.5);
+        }
+    }
+
+    #[test]
+    fn out_of_range_quantiles_clamp() {
+        let xs: Vec<f64> = (1..=10).map(|x| x as f64).collect();
+        // These used to index past the sorted vector (panic) or saturate
+        // a negative position to 0 silently.
+        assert_eq!(percentile(&xs, 150.0), 10.0);
+        assert_eq!(percentile(&xs, -20.0), 1.0);
+        assert_eq!(percentile(&xs, f64::NAN), 1.0);
     }
 }

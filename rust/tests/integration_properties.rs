@@ -186,7 +186,7 @@ fn padded_batch_matches_full_batch() {
         let coord = Coordinator::start(
             &dir,
             "cc-tiny",
-            CoordinatorConfig { max_wait: Duration::from_millis(5), replicas: 1 },
+            CoordinatorConfig { max_wait: Duration::from_millis(5), ..CoordinatorConfig::default() },
         )
         .unwrap();
         let id = coord.submit(probe_prompt.clone(), 5);

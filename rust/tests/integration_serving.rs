@@ -63,7 +63,7 @@ fn coordinator_serves_mixed_stream() {
     let coord = Coordinator::start(
         &dir,
         "cc-tiny",
-        CoordinatorConfig { max_wait: Duration::from_millis(10), replicas: 1 },
+        CoordinatorConfig { max_wait: Duration::from_millis(10), ..CoordinatorConfig::default() },
     )
     .unwrap();
     let mut ids = Vec::new();

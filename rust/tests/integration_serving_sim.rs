@@ -1,0 +1,189 @@
+//! Integration tests over the trace-driven serving layer: the shared
+//! scheduling policies, the discrete-event simulator, and the
+//! SLO-constrained design selection.
+//!
+//! These run entirely on analytic/virtual time — no artifacts needed.
+
+use chiplet_cloud::arch::{ChipletDesign, ServerDesign};
+use chiplet_cloud::config::{ArrivalProcess, ModelSpec, SloSpec, TrafficSpec, Workload};
+use chiplet_cloud::mapping::Mapping;
+use chiplet_cloud::perf::events::{open_loop_trace, simulate_trace, IterCost, SimConfig};
+use chiplet_cloud::perf::simulate;
+use chiplet_cloud::sched::{ContinuousBatch, KvBudget, StaticBatch};
+use chiplet_cloud::util::prop::check;
+
+fn synthetic_cfg(slots: usize) -> SimConfig {
+    SimConfig {
+        max_slots: slots,
+        kv: KvBudget::unlimited(),
+        cost: IterCost { prefill_s_per_token: 0.0001, decode_step_s: 0.01 },
+    }
+}
+
+/// The Table-2 GPT-3 design used by the perf simulator's own tests.
+fn gpt3_server() -> ServerDesign {
+    ServerDesign {
+        chiplet: ChipletDesign {
+            die_mm2: 140.0,
+            sram_mb: 225.8,
+            tflops: 5.5,
+            mem_bw_gbps: 2750.0,
+            n_bank_groups: 172,
+            io_link_gbps: 25.0,
+            io_links: 4,
+            tdp_w: 14.1,
+        },
+        chips_per_lane: 17,
+        lanes: 8,
+        server_power_w: 2020.0,
+        server_capex: 5300.0,
+    }
+}
+
+/// Deterministic seeded-trace golden test: the same spec always produces
+/// the same trace and the same simulated tails, and a different seed
+/// produces a different schedule.
+#[test]
+fn seeded_trace_golden() {
+    let t = TrafficSpec::poisson(35.0, 250, 24, 4, 40).with_seed(2024);
+    let run = |seed: u64| {
+        let t = t.with_seed(seed);
+        let rep = simulate_trace(&synthetic_cfg(8), &mut ContinuousBatch, &t, &SloSpec::unconstrained());
+        (
+            rep.completed,
+            rep.tokens,
+            rep.iterations,
+            rep.ttft_p99_s.to_bits(),
+            rep.tpot_p99_s.to_bits(),
+            rep.makespan_s.to_bits(),
+        )
+    };
+    let a = run(2024);
+    assert_eq!(a, run(2024), "same seed must replay bit-identically");
+    assert_eq!(a.0, 250);
+    let b = run(77);
+    assert!(a.3 != b.3 || a.5 != b.5, "different seeds must differ");
+    // The trace itself is stable too.
+    let arr = open_loop_trace(&t);
+    let arr2 = open_loop_trace(&t);
+    assert_eq!(arr.len(), 250);
+    for (x, y) in arr.iter().zip(&arr2) {
+        assert_eq!(x.at_s.to_bits(), y.at_s.to_bits());
+        assert_eq!(x.new_tokens, y.new_tokens);
+    }
+}
+
+/// Property: closed-loop occupancy never exceeds the KV-capacity budget,
+/// across random budgets, client counts and token shapes.
+#[test]
+fn closed_loop_never_exceeds_kv_budget() {
+    check("closed-loop occupancy respects the KV budget", 40, |r| {
+        let slots = 2 + r.below(15);
+        let kv_seqs = 1 + r.below(slots + 4); // sometimes tighter than slots
+        let clients = 1 + r.below(30);
+        let t = TrafficSpec {
+            arrival: ArrivalProcess::ClosedLoop {
+                clients,
+                think_s: r.f64() * 0.02,
+            },
+            requests: 30 + r.below(60),
+            prompt_tokens: 1 + r.below(32),
+            new_tokens_lo: 1,
+            new_tokens_hi: 1 + r.below(24),
+            seed: r.next_u64(),
+        };
+        let cfg = SimConfig {
+            max_slots: slots,
+            kv: KvBudget::seqs(kv_seqs),
+            cost: IterCost { prefill_s_per_token: 0.0002, decode_step_s: 0.005 },
+        };
+        let rep = simulate_trace(&cfg, &mut ContinuousBatch, &t, &SloSpec::unconstrained());
+        let cap = kv_seqs.min(slots);
+        assert!(
+            rep.peak_live <= cap,
+            "peak live {} exceeds budget {} (slots {}, kv {})",
+            rep.peak_live,
+            cap,
+            slots,
+            kv_seqs
+        );
+        assert_eq!(rep.completed, t.requests, "every request must complete");
+    });
+}
+
+/// Sanity: with no latency constraint and saturating closed-loop traffic,
+/// the event simulator's throughput converges to the steady-state
+/// simulator's tokens/s (±10%) — the two performance models agree where
+/// their domains overlap.
+#[test]
+fn event_sim_converges_to_steady_state_throughput() {
+    let w = Workload::new(ModelSpec::gpt3(), 2048, 256);
+    let mapping = Mapping { tp: 136, pp: 96, microbatch: 2 };
+    let perf = simulate(&gpt3_server(), &w, &mapping).expect("fits");
+
+    // Tiny prompts + long generations keep the (decode-rate) steady-state
+    // metric comparable; clients == batch keeps every slot busy.
+    let t = TrafficSpec::closed_loop(256, 0.0, 1024, 1, 200, 200).with_seed(5);
+    let cfg = SimConfig {
+        max_slots: w.batch,
+        kv: KvBudget::from_design(&gpt3_server(), &w, &mapping),
+        cost: IterCost::from_perf(&perf, &w),
+    };
+    let rep = simulate_trace(&cfg, &mut ContinuousBatch, &t, &SloSpec::unconstrained());
+    assert_eq!(rep.completed, 1024);
+    assert!(rep.occupancy > 0.9, "saturating trace must fill slots: {}", rep.occupancy);
+    let ratio = rep.tokens_per_s / perf.tokens_per_s;
+    assert!(
+        (0.9..=1.1).contains(&ratio),
+        "event-sim {} vs steady-state {} tokens/s (ratio {ratio})",
+        rep.tokens_per_s,
+        perf.tokens_per_s
+    );
+}
+
+/// The headline acceptance property: on a seeded high-load Poisson trace,
+/// continuous batching beats the static batch-synchronous policy on both
+/// goodput and p99 TTFT.
+#[test]
+fn continuous_beats_static_at_high_load() {
+    // 8 slots at 10 ms/step ⇒ ~800 tok/s capacity; mean 18 tokens/request
+    // ⇒ ~44 req/s saturation. 30 req/s is high load without overload.
+    let t = TrafficSpec::poisson(30.0, 400, 16, 4, 32).with_seed(11);
+    let slo = SloSpec::new(0.25, 0.015);
+    let cfg = synthetic_cfg(8);
+    let st = simulate_trace(&cfg, &mut StaticBatch::new(0.05), &t, &slo);
+    let co = simulate_trace(&cfg, &mut ContinuousBatch, &t, &slo);
+    assert_eq!(st.completed, 400);
+    assert_eq!(co.completed, 400);
+    assert!(
+        co.goodput_tokens_per_s > st.goodput_tokens_per_s,
+        "continuous goodput {} must beat static {}",
+        co.goodput_tokens_per_s,
+        st.goodput_tokens_per_s
+    );
+    assert!(
+        co.ttft_p99_s < st.ttft_p99_s,
+        "continuous p99 TTFT {} must beat static {}",
+        co.ttft_p99_s,
+        st.ttft_p99_s
+    );
+    // Same total work, so raw token throughput is also no worse.
+    assert!(co.tokens_per_s >= st.tokens_per_s * 0.999);
+}
+
+/// Mirror of the live-coordinator regression: even under a pathological
+/// arrival pattern the simulator never executes an empty iteration — every
+/// iteration has at least one live or admitted sequence.
+#[test]
+fn no_empty_iterations_under_sparse_traffic() {
+    // Arrivals far apart relative to service time: the scheduler must idle
+    // between them, not spin.
+    let t = TrafficSpec::poisson(0.5, 20, 8, 2, 4).with_seed(3);
+    let rep = simulate_trace(&synthetic_cfg(4), &mut StaticBatch::new(0.01), &t, &SloSpec::unconstrained());
+    assert_eq!(rep.completed, 20);
+    // Each request needs at most 1 admission + (tokens-1) decode
+    // iterations; idle time must never manifest as extra iterations.
+    let max_iters: u64 = rep.per_request.iter().map(|r| r.tokens as u64).sum();
+    assert!(rep.iterations <= max_iters, "{} > {}", rep.iterations, max_iters);
+    assert!(rep.occupancy > 0.0);
+}
