@@ -16,6 +16,7 @@ fn main() {
         prompt_len: 32,
         max_wait: Duration::from_millis(0),
         pad_token: 0,
+        kv: chiplet_cloud::sched::KvBudget::unlimited(),
     };
     b.run("coordinator/batch-formation-8x32", || {
         let batcher = Batcher::new(cfg.clone());

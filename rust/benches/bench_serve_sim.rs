@@ -1,18 +1,29 @@
 //! Serving-simulator benchmarks: event-sim wall cost per simulated
-//! request, and the static vs continuous goodput comparison on one seeded
-//! high-load trace (continuous must win — asserted, not just printed).
+//! request, the static vs continuous goodput comparison on one seeded
+//! high-load trace (continuous must win — asserted, not just printed),
+//! and the chunked-prefill / multi-replica paths.
 
 use chiplet_cloud::config::{SloSpec, TrafficSpec};
-use chiplet_cloud::perf::events::{simulate_trace, IterCost, SimConfig};
-use chiplet_cloud::sched::{ContinuousBatch, KvBudget, StaticBatch};
+use chiplet_cloud::perf::events::{simulate_replicated, simulate_trace, IterCost, SimConfig};
+use chiplet_cloud::sched::{ContinuousBatch, KvBudget, RoutePolicy, StaticBatch};
 use chiplet_cloud::util::bench::{black_box, Bench};
 
 fn cfg() -> SimConfig {
     SimConfig {
         max_slots: 8,
         kv: KvBudget::unlimited(),
-        cost: IterCost { prefill_s_per_token: 0.0001, decode_step_s: 0.01 },
+        cost: IterCost { prefill_s_per_token: 0.0001, decode_step_s: 0.01, prefill_chunk: 0 },
+        paged_kv: false,
     }
+}
+
+/// The paged + chunked serving model over a binding synthetic budget.
+fn paged_cfg() -> SimConfig {
+    let mut c = cfg();
+    c.kv = KvBudget::tokens(512, 16);
+    c.paged_kv = true;
+    c.cost = c.cost.with_chunk(16);
+    c
 }
 
 fn main() {
@@ -28,6 +39,19 @@ fn main() {
     });
     b.run("serve_sim/continuous-400req", || {
         black_box(simulate_trace(&cfg(), &mut ContinuousBatch, &trace, &slo))
+    });
+    b.run("serve_sim/paged-chunked-400req", || {
+        black_box(simulate_trace(&paged_cfg(), &mut ContinuousBatch, &trace, &slo))
+    });
+    b.run("serve_sim/jsq-2replica-400req", || {
+        black_box(simulate_replicated(
+            &cfg(),
+            2,
+            RoutePolicy::Jsq,
+            &ContinuousBatch,
+            &trace,
+            &slo,
+        ))
     });
 
     let st = simulate_trace(&cfg(), &mut StaticBatch::new(0.05), &trace, &slo);

@@ -121,13 +121,61 @@ impl TrafficSpec {
 }
 
 /// Traffic plus the SLO it must be served under — the serving-layer spec a
-/// [`Workload`] optionally carries into the sweep.
+/// [`Workload`] optionally carries into the sweep — and the serving-model
+/// knobs the event simulator honours: chunked prefill, paged-KV
+/// accounting, and multi-replica routing.
 #[derive(Clone, Copy, Debug)]
 pub struct ServeSpec {
     /// Synthetic traffic description.
     pub traffic: TrafficSpec,
     /// Latency targets.
     pub slo: SloSpec,
+    /// Prompt tokens prefilled per slot per iteration during admission;
+    /// 0 = the whole prompt in one admission iteration (the
+    /// stall-the-batch model).
+    pub prefill_chunk: usize,
+    /// Per-slot paged KV accounting (block-granular ledger over the
+    /// design's spare CC-MEM) instead of full-context-per-slot
+    /// reservation.
+    pub paged_kv: bool,
+    /// Serving replicas (independent queues fed by `route`); >= 1.
+    pub replicas: usize,
+    /// Arrival routing policy across replicas.
+    pub route: crate::sched::RoutePolicy,
+}
+
+impl ServeSpec {
+    /// Seed-model semantics: whole-prompt admission, full-context KV
+    /// reservation, one replica.
+    pub fn new(traffic: TrafficSpec, slo: SloSpec) -> ServeSpec {
+        ServeSpec {
+            traffic,
+            slo,
+            prefill_chunk: 0,
+            paged_kv: false,
+            replicas: 1,
+            route: crate::sched::RoutePolicy::RoundRobin,
+        }
+    }
+
+    /// Enable chunked prefill at `chunk` tokens per iteration.
+    pub fn with_chunked_prefill(mut self, chunk: usize) -> ServeSpec {
+        self.prefill_chunk = chunk;
+        self
+    }
+
+    /// Enable per-slot paged-KV accounting.
+    pub fn with_paged_kv(mut self) -> ServeSpec {
+        self.paged_kv = true;
+        self
+    }
+
+    /// Serve with `replicas` replicas routed by `route`.
+    pub fn with_replicas(mut self, replicas: usize, route: crate::sched::RoutePolicy) -> ServeSpec {
+        self.replicas = replicas.max(1);
+        self.route = route;
+        self
+    }
 }
 
 /// A serving workload: a model plus the traffic shape to optimize for.
@@ -262,15 +310,32 @@ mod tests {
     fn serve_spec_is_optional_and_attachable() {
         let w = Workload::new(ModelSpec::gpt3(), 2048, 256);
         assert!(w.serve.is_none());
-        let spec = ServeSpec {
-            traffic: TrafficSpec::poisson(10.0, 100, 64, 8, 32),
-            slo: SloSpec::new(0.5, 0.02),
-        };
+        let spec =
+            ServeSpec::new(TrafficSpec::poisson(10.0, 100, 64, 8, 32), SloSpec::new(0.5, 0.02));
         let w = w.with_serve(spec);
         let s = w.serve.expect("attached");
         assert_eq!(s.traffic.requests, 100);
         assert!(!s.slo.is_unconstrained());
         assert!(SloSpec::unconstrained().is_unconstrained());
+        // seed-model defaults: stall-the-batch, full reservation, 1 replica
+        assert_eq!(s.prefill_chunk, 0);
+        assert!(!s.paged_kv);
+        assert_eq!(s.replicas, 1);
+    }
+
+    #[test]
+    fn serve_spec_builders_set_the_serving_model() {
+        let s = ServeSpec::new(TrafficSpec::poisson(10.0, 10, 64, 8, 32), SloSpec::unconstrained())
+            .with_chunked_prefill(64)
+            .with_paged_kv()
+            .with_replicas(3, crate::sched::RoutePolicy::Jsq);
+        assert_eq!(s.prefill_chunk, 64);
+        assert!(s.paged_kv);
+        assert_eq!(s.replicas, 3);
+        assert_eq!(s.route, crate::sched::RoutePolicy::Jsq);
+        // replicas clamp to >= 1
+        let s = s.with_replicas(0, crate::sched::RoutePolicy::RoundRobin);
+        assert_eq!(s.replicas, 1);
     }
 
     #[test]

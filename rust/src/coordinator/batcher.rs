@@ -21,7 +21,7 @@ use std::sync::{Condvar, Mutex, MutexGuard};
 use std::time::{Duration, Instant};
 
 use crate::coordinator::request::Request;
-use crate::sched::{sanitize, Action, Policy, SchedView, StaticBatch};
+use crate::sched::{sanitize, Action, KvBudget, Policy, SchedView, StaticBatch};
 
 /// Batcher tuning knobs.
 #[derive(Clone, Debug)]
@@ -39,6 +39,14 @@ pub struct BatcherConfig {
     pub max_wait: Duration,
     /// Token id used for padding prompts and idle slots.
     pub pad_token: i32,
+    /// KV-capacity budget of the deployment the artifact is served on
+    /// ([`KvBudget::unlimited`] when the engine shape is the only cap).
+    /// The whole-batch AOT engine holds every admitted request's KV for
+    /// the full batch, so admission charges each request's *actual*
+    /// footprint — truncated prompt plus its token budget — against a
+    /// fresh per-batch paged ledger rather than reserving full context
+    /// per slot.
+    pub kv: KvBudget,
 }
 
 /// A formed batch: B prompt rows plus the requests occupying them
@@ -138,6 +146,48 @@ impl Batcher {
         t.saturating_duration_since(self.epoch).as_secs_f64()
     }
 
+    /// Head-of-line requests the KV budget admits into one batch.
+    ///
+    /// Everything frees between whole batches, so a fresh ledger per
+    /// decision sees each queued request's actual KV footprint (the prompt
+    /// is truncated to the compiled length before prefill). A head request
+    /// whose footprint exceeds the *entire* capacity could never be
+    /// admitted by the ledger — since the per-batch ledger is always at
+    /// full capacity here, "doesn't fit now" means "never fits" — and a
+    /// live server must not deadlock on it (nor starve everything queued
+    /// behind it): it is admitted alone, best effort, and the deployment
+    /// model simply cannot hold its KV on-chip.
+    fn kv_admissible(&self, q: &VecDeque<Request>) -> usize {
+        if self.cfg.kv.capacity_tokens == usize::MAX {
+            // Unlimited ledger (the default): everything queued fits —
+            // skip the O(queue) footprint scan on every condvar wakeup.
+            return q.len();
+        }
+        let n = self.cfg.kv.ledger().admissible(
+            q.iter().map(|r| r.prompt.len().min(self.cfg.prompt_len) + r.max_new_tokens),
+        );
+        if n == 0 && !q.is_empty() {
+            1
+        } else {
+            n
+        }
+    }
+
+    /// Slot-count cap the view presents. The legacy full-context cap
+    /// (`max_seqs`) binds as the *tighter* of the two accounting models,
+    /// but — like the ledger path above — a `max_seqs == 0` deployment
+    /// (spare CC-MEM below one full-context footprint, exactly the
+    /// long-prompt case paged accounting exists for) must degrade to
+    /// serving one request at a time, never to a parked-forever batcher.
+    fn kv_slots(&self, queued: usize) -> usize {
+        let n = self.cfg.kv.concurrency(self.cfg.batch);
+        if n == 0 && queued > 0 {
+            1
+        } else {
+            n
+        }
+    }
+
     /// Normalize a prompt to exactly P tokens (keep the most recent P,
     /// right-pad with `pad_token`).
     pub fn fit_prompt(&self, prompt: &[i32]) -> Vec<i32> {
@@ -191,10 +241,14 @@ impl Batcher {
                 if q.is_empty() {
                     return None;
                 }
-                // Drain: emit what is queued without waiting for more.
-                return Some(self.form_batch(&mut q, self.cfg.batch));
+                // Drain: emit what is queued without waiting for more —
+                // still KV-budgeted batch by batch (workers loop on
+                // `next_batch_policy`, so the rest follows in later calls).
+                let n = self.kv_admissible(&q).min(self.kv_slots(q.len())).max(1);
+                return Some(self.form_batch(&mut q, n));
             }
             let now_s = self.now_s();
+            let kv_admissible = self.kv_admissible(&q);
             let view = SchedView {
                 now_s,
                 queued: q.len(),
@@ -204,7 +258,8 @@ impl Batcher {
                     .unwrap_or(now_s),
                 live: 0,
                 max_slots: self.cfg.batch,
-                kv_slots: self.cfg.batch,
+                kv_slots: self.kv_slots(q.len()),
+                kv_admissible,
                 refill_mid_iteration: false,
             };
             match sanitize(policy.decide(&view), &view) {
@@ -237,7 +292,13 @@ mod tests {
     use crate::sched::ContinuousBatch;
 
     fn cfg() -> BatcherConfig {
-        BatcherConfig { batch: 4, prompt_len: 8, max_wait: Duration::from_millis(5), pad_token: 0 }
+        BatcherConfig {
+            batch: 4,
+            prompt_len: 8,
+            max_wait: Duration::from_millis(5),
+            pad_token: 0,
+            kv: KvBudget::unlimited(),
+        }
     }
 
     #[test]
@@ -273,6 +334,81 @@ mod tests {
         let batch = b.next_batch_policy(&mut ContinuousBatch).unwrap();
         assert_eq!(batch.live(), 1);
         assert!(t0.elapsed() < Duration::from_secs(2), "continuous policy must not wait");
+    }
+
+    /// The paged KV budget caps live-path admission by *actual* request
+    /// footprints (truncated prompt + token budget), not slot count.
+    #[test]
+    fn kv_budget_caps_live_admission() {
+        // 40-token capacity in 8-token blocks; each request needs
+        // 8 (truncated prompt) + 4 = 12 tokens = 2 blocks → 2 requests.
+        let b = Batcher::new(BatcherConfig { kv: KvBudget::tokens(40, 8), ..cfg() });
+        for i in 0..4 {
+            b.submit(Request::new(i, vec![1; 16], 4));
+        }
+        let batch = b.next_batch().unwrap();
+        assert_eq!(batch.live(), 2, "ledger admits 2 of 4 despite 4 slots");
+        // the remaining two fit a fresh per-batch ledger next time
+        let batch = b.next_batch().unwrap();
+        assert_eq!(batch.live(), 2);
+    }
+
+    /// A request whose footprint exceeds the whole KV capacity must be
+    /// served (alone, best effort), not deadlock the batcher and starve
+    /// the queue behind it.
+    #[test]
+    fn oversized_request_is_served_alone_not_deadlocked() {
+        let b = Batcher::new(BatcherConfig { kv: KvBudget::tokens(40, 8), ..cfg() });
+        b.submit(Request::new(1, vec![1; 8], 100)); // 8 + 100 tokens >> 40
+        b.submit(Request::new(2, vec![1; 8], 4)); // fits comfortably
+        let batch = b.next_batch().unwrap();
+        assert_eq!(batch.live(), 1, "oversized head admitted alone");
+        assert_eq!(batch.slots[0].as_ref().unwrap().id, 1);
+        let batch = b.next_batch().unwrap();
+        assert_eq!(batch.slots[0].as_ref().unwrap().id, 2);
+    }
+
+    /// The shutdown drain stays KV-budgeted: it emits admissible-sized
+    /// batches until the queue empties rather than one over-budget flush.
+    #[test]
+    fn close_drain_respects_kv_budget() {
+        let b = Batcher::new(BatcherConfig { kv: KvBudget::tokens(40, 8), ..cfg() });
+        for i in 0..4 {
+            b.submit(Request::new(i, vec![1; 16], 4)); // 12 tokens = 2 blocks each
+        }
+        b.close();
+        let mut sizes = Vec::new();
+        while let Some(batch) = b.next_batch() {
+            sizes.push(batch.live());
+        }
+        assert_eq!(sizes, vec![2, 2], "5-block budget drains two 2-request batches");
+    }
+
+    /// The legacy sequence cap still binds through `kv_slots`.
+    #[test]
+    fn kv_seq_cap_limits_batch() {
+        let b = Batcher::new(BatcherConfig { kv: KvBudget::seqs(3), ..cfg() });
+        for i in 0..6 {
+            b.submit(Request::new(i, vec![1; 4], 2));
+        }
+        let batch = b.next_batch().unwrap();
+        assert_eq!(batch.live(), 3);
+    }
+
+    /// A deployment whose spare CC-MEM is below one *full-context*
+    /// footprint (`max_seqs == 0`) degrades to one request at a time —
+    /// it must never park the batcher forever.
+    #[test]
+    fn zero_seq_budget_degrades_to_singles_not_deadlock() {
+        let b = Batcher::new(BatcherConfig { kv: KvBudget::seqs(0), ..cfg() });
+        for i in 0..3 {
+            b.submit(Request::new(i, vec![1; 4], 2));
+        }
+        for expect in 0..3u64 {
+            let batch = b.next_batch().expect("served, not deadlocked");
+            assert_eq!(batch.live(), 1);
+            assert_eq!(batch.slots[0].as_ref().unwrap().id, expect);
+        }
     }
 
     #[test]

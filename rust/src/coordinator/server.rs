@@ -26,7 +26,7 @@ use crate::coordinator::batcher::{Batch, Batcher, BatcherConfig};
 use crate::coordinator::metrics::Metrics;
 use crate::coordinator::request::{Request, RequestId, Response};
 use crate::runtime::ModelEngine;
-use crate::sched::{ContinuousBatch, Policy};
+use crate::sched::{ContinuousBatch, KvBudget, Policy};
 use crate::{Error, Result};
 
 /// Which scheduling policy the replica workers run.
@@ -49,6 +49,11 @@ pub struct CoordinatorConfig {
     pub replicas: usize,
     /// Scheduling policy for batch formation.
     pub mode: BatchingMode,
+    /// KV-capacity budget of the target deployment; admission charges each
+    /// request's actual footprint against a per-batch paged ledger (see
+    /// [`BatcherConfig::kv`](crate::coordinator::batcher::BatcherConfig)).
+    /// Unlimited by default — the demo artifacts are tiny.
+    pub kv: KvBudget,
 }
 
 impl Default for CoordinatorConfig {
@@ -57,6 +62,7 @@ impl Default for CoordinatorConfig {
             max_wait: Duration::from_millis(50),
             replicas: 1,
             mode: BatchingMode::Static,
+            kv: KvBudget::unlimited(),
         }
     }
 }
@@ -89,6 +95,7 @@ impl Coordinator {
             prompt_len: manifest.prompt_len,
             max_wait: cfg.max_wait,
             pad_token: 0,
+            kv: cfg.kv,
         }));
         let metrics = Arc::new(Metrics::new());
         let responses = Arc::new(Mutex::new(Vec::new()));
@@ -267,6 +274,7 @@ mod tests {
                 max_wait: Duration::from_millis(20),
                 replicas: 1,
                 mode: BatchingMode::Continuous,
+                ..CoordinatorConfig::default()
             },
         )
         .unwrap();

@@ -31,14 +31,14 @@
 
 use crate::arch::{ChipletDesign, ServerDesign};
 use crate::config::hardware::ExploreSpace;
-use crate::config::workload::{SloSpec, TrafficSpec};
+use crate::config::workload::{ServeSpec, SloSpec, TrafficSpec};
 use crate::config::Workload;
 use crate::cost::tco::{TcoModel, YEAR_S};
 use crate::evaluate::{system_tco, DesignPoint};
 use crate::explore::pareto;
 use crate::mapping::optimizer::{candidate_mappings, optimize_mapping_bounded, SearchStats};
 use crate::mapping::{partition, Mapping};
-use crate::perf::events::{simulate_trace, IterCost, ServeReport, SimConfig};
+use crate::perf::events::{simulate_replicated, IterCost, ServeReport, SimConfig};
 use crate::perf::kernels::{KernelCache, MAC_EFFICIENCY};
 use crate::perf::{simulate_cached, DecodePerf};
 use crate::sched::{ContinuousBatch, KvBudget};
@@ -341,7 +341,11 @@ pub struct SloSelection {
 /// `prompt_tokens` on a design: its per-token share of the whole-batch
 /// prefill, with zero queueing. Derived from the *same* [`IterCost`] the
 /// event simulator charges, so the bound stays admissible by construction
-/// even if the prefill cost model changes.
+/// under every serving-model knob: chunked prefill splits the prompt into
+/// iterations whose prefill costs *sum* to this bound (decode interleaves
+/// only add to TTFT), paged accounting changes admission but never makes
+/// a prefill cheaper, and multi-replica routing only reduces queueing —
+/// which the bound already assumes is zero.
 fn prefill_bound_s(perf: &DecodePerf, w: &Workload, prompt_tokens: usize) -> f64 {
     IterCost::from_perf(perf, w).prefill_s_per_token * prompt_tokens as f64
 }
@@ -360,25 +364,33 @@ impl SweepEngine {
     /// 2. **Event-sim validation** — surviving candidates are validated in
     ///    ascending TCO/Token order by the discrete-event simulator
     ///    ([`crate::perf::events`]) with continuous batching on the
-    ///    traffic spec; the first design whose simulated p99 tails meet
-    ///    the SLO wins. Queueing and partial batches can push a bound-
-    ///    feasible design over its targets, which is exactly what the
-    ///    steady-state sweep alone cannot see.
+    ///    spec's traffic, under the spec's serving model (chunked
+    ///    prefill, paged-KV accounting, replicas — see
+    ///    [`validate_design_slo`]); the first design whose simulated p99
+    ///    tails meet the SLO wins. Queueing and partial batches can push
+    ///    a bound-feasible design over its targets, which is exactly what
+    ///    the steady-state sweep alone cannot see.
+    ///
+    /// With `spec.paged_kv` the validation admits by each request's
+    /// *actual* footprint instead of a full-context reservation, so a
+    /// design whose concurrency was KV-capacity-starved under full
+    /// reservation can pass — the selection is never costlier than the
+    /// full-reservation one on the same traffic.
     pub fn best_point_slo(
         &self,
         space: &ExploreSpace,
         servers: &[ServerDesign],
         w: &Workload,
-        slo: &SloSpec,
-        traffic: &TrafficSpec,
+        spec: &ServeSpec,
     ) -> Option<SloSelection> {
+        let slo = &spec.slo;
         // Deliberately exhaustive per server (no shared incumbent / cost
         // pruning), keeping each server's cheapest few bound-feasible
         // mappings rather than one: stage 2 may reject the cheapest
         // candidate on queueing, and the runner-up that validation needs
         // can be another mapping of the *same* server.
         let per_server = parallel::par_map(servers, self.threads, |s| {
-            evaluate_server_slo(space, s, w, slo, traffic)
+            evaluate_server_slo(space, s, w, slo, &spec.traffic)
         });
         let bound_feasible = per_server.iter().filter(|l| !l.is_empty()).count();
         // (server index, per-server rank, point) — ascending cost with the
@@ -398,7 +410,7 @@ impl SweepEngine {
         });
         let mut validated = 0;
         for (_, _, point) in pts {
-            let report = validate_design_slo(&point, w, slo, traffic);
+            let report = validate_design_slo(&point, w, spec);
             validated += 1;
             if report.meets(slo) {
                 return Some(SloSelection { point, report, bound_feasible, validated });
@@ -424,12 +436,12 @@ impl SweepEngine {
         match &w.serve {
             Some(spec) if spec.slo.is_unconstrained() => {
                 self.best_point(space, servers, w).map(|p| {
-                    let report = validate_design_slo(&p, w, &spec.slo, &spec.traffic);
+                    let report = validate_design_slo(&p, w, spec);
                     (p, Some(report))
                 })
             }
             Some(spec) => self
-                .best_point_slo(space, servers, w, &spec.slo, &spec.traffic)
+                .best_point_slo(space, servers, w, spec)
                 .map(|s| (s.point, Some(s.report))),
             None => self.best_point(space, servers, w).map(|p| (p, None)),
         }
@@ -490,20 +502,20 @@ pub(crate) fn evaluate_server_slo(
 }
 
 /// Event-sim validation of one design point: continuous batching over the
-/// traffic spec at the design's analytic iteration costs, with the KV
-/// budget its own mapping affords.
-pub fn validate_design_slo(
-    point: &DesignPoint,
-    w: &Workload,
-    slo: &SloSpec,
-    traffic: &TrafficSpec,
-) -> ServeReport {
+/// spec's traffic at the design's analytic iteration costs, with the KV
+/// budget its own mapping affords and the spec's serving model — chunked
+/// prefill, paged-KV accounting, and `spec.replicas` independent replicas
+/// of this design behind the spec's routing policy (the traffic then
+/// spreads across them, so the per-token cost of the *design* is
+/// unchanged; only queueing changes).
+pub fn validate_design_slo(point: &DesignPoint, w: &Workload, spec: &ServeSpec) -> ServeReport {
     let cfg = SimConfig {
         max_slots: w.batch.max(1),
         kv: KvBudget::from_design(&point.server, w, &point.mapping),
-        cost: IterCost::from_perf(&point.perf, w),
+        cost: IterCost::from_perf(&point.perf, w).with_chunk(spec.prefill_chunk),
+        paged_kv: spec.paged_kv,
     };
-    simulate_trace(&cfg, &mut ContinuousBatch, traffic, slo)
+    simulate_replicated(&cfg, spec.replicas, spec.route, &ContinuousBatch, &spec.traffic, &spec.slo)
 }
 
 /// Evaluate one server design for a workload with the TCO/Token objective,
@@ -605,9 +617,9 @@ mod tests {
         let (space, servers) = setup();
         let w = Workload::new(ModelSpec::megatron(), 1024, 64);
         let slo = SloSpec::unconstrained();
-        let traffic = TrafficSpec::poisson(2.0, 40, 16, 4, 16);
+        let spec = ServeSpec::new(TrafficSpec::poisson(2.0, 40, 16, 4, 16), slo);
         let engine = SweepEngine::default();
-        let sel = engine.best_point_slo(&space, &servers, &w, &slo, &traffic).expect("feasible");
+        let sel = engine.best_point_slo(&space, &servers, &w, &spec).expect("feasible");
         let best = engine.best_point(&space, &servers, &w).expect("feasible");
         // With no constraint the filter passes everything and the first
         // (cheapest) candidate validates trivially — the unconstrained
@@ -625,10 +637,8 @@ mod tests {
         let (space, servers) = setup();
         let w = Workload::new(ModelSpec::megatron(), 1024, 64);
         let slo = SloSpec::new(f64::INFINITY, 1e-15); // no pipeline decodes in 1 fs
-        let traffic = TrafficSpec::poisson(2.0, 10, 16, 4, 8);
-        assert!(SweepEngine::default()
-            .best_point_slo(&space, &servers, &w, &slo, &traffic)
-            .is_none());
+        let spec = ServeSpec::new(TrafficSpec::poisson(2.0, 10, 16, 4, 8), slo);
+        assert!(SweepEngine::default().best_point_slo(&space, &servers, &w, &spec).is_none());
     }
 
     /// The acceptance scenario: a binding TPOT constraint makes the engine
@@ -650,9 +660,9 @@ mod tests {
         let slo = SloSpec::new(f64::INFINITY, fastest * 1.001);
         // Single-request trace: validation reduces to the exact steady
         // bounds, so stage-2 must confirm whatever stage 1 admits.
-        let traffic = TrafficSpec::poisson(1.0, 1, 8, 4, 4);
+        let spec = ServeSpec::new(TrafficSpec::poisson(1.0, 1, 8, 4, 4), slo);
         let sel = engine
-            .best_point_slo(&space, &servers, &w, &slo, &traffic)
+            .best_point_slo(&space, &servers, &w, &spec)
             .expect("a design achieving the fastest period exists");
         assert!(sel.point.perf.token_period <= slo.tpot_p99_s);
         assert!(sel.report.meets(&slo), "event sim must confirm the selection");
@@ -676,10 +686,8 @@ mod tests {
         let plain = Workload::new(ModelSpec::megatron(), 1024, 64);
         let (p0, r0) = engine.best_point_serve(&space, &servers, &plain).expect("feasible");
         assert!(r0.is_none());
-        let spec = crate::config::ServeSpec {
-            traffic: TrafficSpec::poisson(2.0, 20, 16, 4, 8),
-            slo: SloSpec::unconstrained(),
-        };
+        let spec =
+            ServeSpec::new(TrafficSpec::poisson(2.0, 20, 16, 4, 8), SloSpec::unconstrained());
         let (p1, r1) = engine
             .best_point_serve(&space, &servers, &plain.clone().with_serve(spec))
             .expect("feasible");

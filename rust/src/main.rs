@@ -31,7 +31,9 @@ use chiplet_cloud::{Error, Result};
 fn usage() -> ! {
     eprintln!(
         "usage: ccloud <cmd> [--full] [--out DIR] [--model NAME] [--threads N] [--seq] ...\n\
-         cmds: explore optimize sweep serve-sim table2 fig7..fig15 ablate serve ccmem"
+         cmds: explore optimize sweep serve-sim table2 fig7..fig15 ablate serve ccmem\n\
+         serve-sim/sweep serving-model flags: [--slo-ttft S] [--slo-tpot S] [--prefill-chunk N]\n\
+         [--paged] [--replicas N] [--route rr|jsq] [--rps R] [--trace poisson|bursty|closed]"
     );
     std::process::exit(2)
 }
@@ -81,20 +83,32 @@ fn main() -> Result<()> {
             let name = args.get("model").unwrap_or("gpt3");
             let model = ModelSpec::by_name(name)
                 .ok_or_else(|| Error::Config(format!("unknown model {name}")))?;
-            let slo_spec = slo_from_args(&args);
+            let slo_spec = slo_from_args(&args)?;
             let serve_spec = if slo_spec.is_unconstrained() {
+                // The serving model only enters the sweep through the
+                // SLO-constrained selection; accepting these flags here
+                // and ignoring them would misrepresent the optimum.
+                for flag in ["paged", "prefill-chunk", "replicas", "route", "trace", "rps"] {
+                    if args.has(flag) {
+                        return Err(Error::Config(format!(
+                            "--{flag} has no effect on an unconstrained sweep — add \
+                             --slo-ttft/--slo-tpot targets (or drop the flag)"
+                        )));
+                    }
+                }
                 None
             } else {
                 // The sweep has no per-design rate resolution, so default to
                 // a saturating closed loop unless a trace was given.
-                let mut traffic = traffic_from_args(&args);
+                let mut traffic = traffic_from_args(&args)?;
                 if !args.has("trace") && !args.has("rps") {
                     traffic.arrival = chiplet_cloud::config::ArrivalProcess::ClosedLoop {
                         clients: args.get_or("clients", 64),
                         think_s: args.get_or("think", 0.0),
                     };
                 }
-                Some(chiplet_cloud::config::ServeSpec { traffic, slo: slo_spec })
+                let spec = chiplet_cloud::config::ServeSpec::new(traffic, slo_spec);
+                Some(serve_model_from_args(&args, spec)?)
             };
             let ctx = Ctx::new(space);
             let t = report::sweep_summary(&ctx, &model, serve_spec.as_ref(), out);
@@ -138,46 +152,112 @@ fn main() -> Result<()> {
     Ok(())
 }
 
-/// SLO targets from `--slo-ttft` / `--slo-tpot` (seconds; absent = ∞).
-fn slo_from_args(args: &Args) -> chiplet_cloud::config::SloSpec {
-    chiplet_cloud::config::SloSpec::new(
-        args.get_or("slo-ttft", f64::INFINITY),
-        args.get_or("slo-tpot", f64::INFINITY),
-    )
+/// Parse `--name` as a positive, finite f64. `Args::get_or` silently falls
+/// back to the default on a parse failure, which is exactly how a typo'd
+/// `--slo-ttft abc` used to become an unconstrained (∞) target — here it
+/// is an error instead.
+fn parse_positive_f64(args: &Args, name: &str) -> Result<Option<f64>> {
+    let Some(raw) = args.get(name) else { return Ok(None) };
+    let v: f64 = raw
+        .parse()
+        .map_err(|_| Error::Config(format!("--{name} must be a number (got '{raw}')")))?;
+    if !v.is_finite() || v <= 0.0 {
+        return Err(Error::Config(format!(
+            "--{name} must be positive and finite (got '{raw}')"
+        )));
+    }
+    Ok(Some(v))
 }
 
-/// Traffic description from the CLI flags. A zero `--rps` (the default)
-/// lets `report::serve_sim` resolve the rate from `--load` × the design's
-/// capacity; the `sweep --slo-*` path defaults to a saturating closed loop.
-fn traffic_from_args(args: &Args) -> chiplet_cloud::config::TrafficSpec {
+/// Parse `--name` as a usize, erroring on unparsable input instead of
+/// silently falling back to the default (the `Args::get_or` failure mode),
+/// and enforcing a minimum.
+fn parse_usize(args: &Args, name: &str, default: usize, min: usize) -> Result<usize> {
+    let v = match args.get(name) {
+        None => default,
+        Some(raw) => raw.parse().map_err(|_| {
+            Error::Config(format!("--{name} must be a non-negative integer (got '{raw}')"))
+        })?,
+    };
+    if v < min {
+        return Err(Error::Config(format!("--{name} must be >= {min} (got {v})")));
+    }
+    Ok(v)
+}
+
+/// SLO targets from `--slo-ttft` / `--slo-tpot` (seconds; absent = ∞).
+/// Non-positive or NaN targets are rejected: a zero or NaN target can
+/// never be met (every comparison fails) and would silently turn the
+/// whole SLO-constrained sweep into "no feasible design".
+fn slo_from_args(args: &Args) -> Result<chiplet_cloud::config::SloSpec> {
+    Ok(chiplet_cloud::config::SloSpec::new(
+        parse_positive_f64(args, "slo-ttft")?.unwrap_or(f64::INFINITY),
+        parse_positive_f64(args, "slo-tpot")?.unwrap_or(f64::INFINITY),
+    ))
+}
+
+/// Traffic description from the CLI flags. An *absent* `--rps` lets
+/// `report::serve_sim` resolve the rate from `--load` × the design's
+/// capacity; an explicit non-positive or NaN `--rps` is rejected — a zero
+/// rate would space open-loop arrivals ~10¹² virtual seconds apart, so
+/// the trace never makes progress and every SLO trivially "passes".
+fn traffic_from_args(args: &Args) -> Result<chiplet_cloud::config::TrafficSpec> {
     use chiplet_cloud::config::{ArrivalProcess, TrafficSpec};
-    let requests: usize = args.get_or("requests", 400);
-    let prompt: usize = args.get_or("prompt-tokens", 64);
-    let lo: usize = args.get_or("tokens-lo", 16);
-    let hi: usize = args.get_or("tokens-hi", 128);
-    let rps: f64 = args.get_or("rps", 0.0);
+    let requests = parse_usize(args, "requests", 400, 1)?;
+    let prompt = parse_usize(args, "prompt-tokens", 64, 0)?;
+    let lo = parse_usize(args, "tokens-lo", 16, 1)?;
+    let hi = parse_usize(args, "tokens-hi", 128, 1)?;
+    if lo > hi {
+        return Err(Error::Config(format!("--tokens-lo {lo} exceeds --tokens-hi {hi}")));
+    }
+    let rps: f64 = parse_positive_f64(args, "rps")?.unwrap_or(0.0);
     let arrival = match args.get("trace").unwrap_or("poisson") {
-        "bursty" => ArrivalProcess::Bursty { rps, burst: args.get_or("burst", 8) },
+        "bursty" => ArrivalProcess::Bursty { rps, burst: parse_usize(args, "burst", 8, 1)? },
         "closed" => ArrivalProcess::ClosedLoop {
-            clients: args.get_or("clients", 64),
+            clients: parse_usize(args, "clients", 64, 1)?,
             think_s: args.get_or("think", 0.0),
         },
-        _ => ArrivalProcess::Poisson { rps },
+        "poisson" => ArrivalProcess::Poisson { rps },
+        other => {
+            return Err(Error::Config(format!(
+                "--trace must be poisson, bursty or closed (got '{other}')"
+            )))
+        }
     };
-    TrafficSpec {
+    Ok(TrafficSpec {
         arrival,
         requests,
         prompt_tokens: prompt,
         new_tokens_lo: lo,
         new_tokens_hi: hi,
         seed: args.get_or("seed", 42),
-    }
+    })
+}
+
+/// The serving-model knobs shared by `serve-sim` and `sweep`: chunked
+/// prefill, paged-KV accounting and multi-replica routing.
+fn serve_model_from_args(
+    args: &Args,
+    mut spec: chiplet_cloud::config::ServeSpec,
+) -> Result<chiplet_cloud::config::ServeSpec> {
+    use chiplet_cloud::sched::RoutePolicy;
+    spec.prefill_chunk = parse_usize(args, "prefill-chunk", 0, 0)?;
+    spec.paged_kv = args.has("paged");
+    spec.replicas = parse_usize(args, "replicas", 1, 1)?;
+    spec.route = match args.get("route") {
+        None => RoutePolicy::RoundRobin,
+        Some(s) => RoutePolicy::parse(s)
+            .ok_or_else(|| Error::Config(format!("--route must be rr or jsq (got '{s}')")))?,
+    };
+    Ok(spec)
 }
 
 /// Discrete-event serving simulation (`ccloud serve-sim`): static vs
-/// continuous batching on the model's optimal design, plus the
-/// SLO-constrained selection when targets are given. `--smoke` is the CI
-/// preset: small model, short trace, seconds end to end.
+/// continuous batching on the model's optimal design — with `--paged`,
+/// `--prefill-chunk N` and `--replicas N --route rr|jsq` switching in the
+/// per-slot serving model — plus the SLO-constrained selection when
+/// targets are given. `--smoke` is the CI preset: small model, short
+/// trace, seconds end to end.
 fn serve_sim(args: &Args, space: ExploreSpace, out: Option<&std::path::Path>) -> Result<()> {
     let smoke = args.has("smoke");
     let name = args.get("model").unwrap_or(if smoke { "gpt2" } else { "gpt3" });
@@ -185,17 +265,36 @@ fn serve_sim(args: &Args, space: ExploreSpace, out: Option<&std::path::Path>) ->
         .ok_or_else(|| Error::Config(format!("unknown model {name}")))?;
     let wctx: usize = args.get_or("ctx", 1024);
     let batch: usize = args.get_or("batch", if smoke { 32 } else { 256 });
-    let mut traffic = traffic_from_args(args);
+    let mut traffic = traffic_from_args(args)?;
     if smoke {
-        traffic.requests = args.get_or("requests", 120);
-        traffic.prompt_tokens = args.get_or("prompt-tokens", 32);
-        traffic.new_tokens_lo = args.get_or("tokens-lo", 8);
-        traffic.new_tokens_hi = args.get_or("tokens-hi", 32);
+        // Smoke defaults apply only where the user gave no flag — the
+        // values behind explicit flags were already validated above, and
+        // re-reading them here would silently undo that.
+        if !args.has("requests") {
+            traffic.requests = 120;
+        }
+        if !args.has("prompt-tokens") {
+            traffic.prompt_tokens = 32;
+        }
+        if !args.has("tokens-lo") {
+            traffic.new_tokens_lo = 8;
+        }
+        if !args.has("tokens-hi") {
+            traffic.new_tokens_hi = 32;
+        }
+        if traffic.new_tokens_lo > traffic.new_tokens_hi {
+            return Err(Error::Config(format!(
+                "--tokens-lo {} exceeds --tokens-hi {} under the smoke defaults",
+                traffic.new_tokens_lo, traffic.new_tokens_hi
+            )));
+        }
     }
-    let slo = slo_from_args(args);
+    let load: f64 = parse_positive_f64(args, "load")?.unwrap_or(0.8);
+    let slo = slo_from_args(args)?;
+    let spec = serve_model_from_args(args, chiplet_cloud::config::ServeSpec::new(traffic, slo))?;
     let w = chiplet_cloud::config::Workload::new(model, wctx, batch);
     let ctx = Ctx::new(space);
-    let t = report::serve_sim(&ctx, &w, &traffic, args.get_or("load", 0.8), &slo, out);
+    let t = report::serve_sim(&ctx, &w, &spec, load, out);
     print!("{}", t.render());
     Ok(())
 }

@@ -12,20 +12,39 @@
 //! validate sweep candidates ([`crate::evaluate::SweepEngine::best_point_slo`]).
 //!
 //! Iteration model (matching the AOT runtime's shape): an *admission*
-//! iteration prefixes the newcomers' prompt processing to the incumbents'
-//! decode step — newcomers receive their first token from the prefill, so
-//! TTFT is measured at the end of the admitting iteration; a *decode*
-//! iteration advances every live slot by one token in lockstep at the
-//! pipeline's token period, regardless of occupancy (static shapes: padded
-//! slots are computed anyway, which is exactly why occupancy is worth
-//! measuring).
+//! iteration starts the newcomers' prompt processing alongside the
+//! incumbents' decode step; a *decode* iteration advances every decoding
+//! slot by one token in lockstep at the pipeline's token period,
+//! regardless of occupancy (static shapes: padded slots are computed
+//! anyway, which is exactly why occupancy is worth measuring).
+//!
+//! Two refinements over the seed model, both off by default so the legacy
+//! golden traces replay bit-identically:
+//!
+//! * **Chunked prefill** ([`IterCost::prefill_chunk`] > 0): a newcomer's
+//!   prompt is processed at most `prefill_chunk` tokens per iteration
+//!   instead of stalling the whole batch for the full prompt, so resident
+//!   decoders' inter-token gap during admissions is bounded by one chunk —
+//!   the Sarathi/DeepSpeed-FastGen schedule at the cost model's
+//!   granularity. The first token (and TTFT) lands when the last chunk
+//!   completes.
+//! * **Paged KV accounting** ([`SimConfig::paged_kv`]): admission charges
+//!   each request's *actual* maximum footprint (prompt + token budget,
+//!   block-granular) against a [`KvLedger`] and residency grows per token,
+//!   instead of reserving `w.ctx` full-context KV per slot. Requests whose
+//!   footprint exceeds the total capacity can never be admitted and are
+//!   reported as incomplete rather than silently dropped.
+//!
+//! [`simulate_replicated`] runs N independent replicas of the same design
+//! behind a [`RoutePolicy`] (round-robin or join-shortest-queue) so the
+//! simulator can answer fleet-level questions, not just single-server ones.
 
 use std::collections::VecDeque;
 
 use crate::config::workload::{ArrivalProcess, SloSpec, TrafficSpec};
 use crate::config::Workload;
 use crate::perf::DecodePerf;
-use crate::sched::{sanitize, Action, KvBudget, Policy, SchedView};
+use crate::sched::{sanitize, Action, KvBudget, KvLedger, Policy, RoutePolicy, SchedView};
 use crate::util::rng::Rng;
 use crate::util::stats;
 
@@ -42,7 +61,10 @@ pub struct Arrival {
     pub new_tokens: usize,
 }
 
-/// Generate the open-loop arrival list for a traffic spec. Closed-loop
+/// Generate the open-loop arrival list for a traffic spec, in `(at_s, id)`
+/// order — the id tie-break makes bursty traces (which emit equal
+/// timestamps by construction) a *total* order, so every consumer replays
+/// them identically regardless of float comparison quirks. Closed-loop
 /// specs return an empty list — their arrivals are produced *during* the
 /// simulation (each completion schedules the client's next request).
 pub fn open_loop_trace(t: &TrafficSpec) -> Vec<Arrival> {
@@ -71,6 +93,14 @@ pub fn open_loop_trace(t: &TrafficSpec) -> Vec<Arrival> {
         }
         ArrivalProcess::ClosedLoop { .. } => {}
     }
+    // Generation is already time-ordered (the clock only advances), but the
+    // tie-break by id is the contract consumers rely on — make it explicit.
+    out.sort_by(|a, b| {
+        a.at_s
+            .partial_cmp(&b.at_s)
+            .unwrap_or(std::cmp::Ordering::Equal)
+            .then(a.id.cmp(&b.id))
+    });
     out
 }
 
@@ -87,22 +117,46 @@ pub struct IterCost {
     /// One lockstep decode iteration over the batch, s (the pipeline's
     /// token period).
     pub decode_step_s: f64,
+    /// Max prompt tokens prefilled per prefilling slot per iteration;
+    /// 0 = the whole prompt in its admission iteration (the seed's
+    /// stall-the-batch model).
+    pub prefill_chunk: usize,
 }
 
 impl IterCost {
     /// Derive the costs from a steady-state simulation of the workload:
     /// decode iterations run at the pipeline token period; prefill charges
     /// each sequence its per-token share of the whole-batch prefill.
+    ///
+    /// Degenerate inputs must not *silently* poison the model: a
+    /// zero-token prompt (`w.ctx == 0` makes `prompt_len` 0) is clamped
+    /// out of the divisor, and a NaN or negative upstream latency — which
+    /// would otherwise flow NaN into every TTFT percentile, where all
+    /// comparisons are false and a broken design can slip through — is
+    /// pinned to `INFINITY` instead. Infinite cost fails every SLO
+    /// comparison *conservatively*: the event sim terminates immediately
+    /// (any horizon is reached) with requests incomplete, so
+    /// [`ServeReport::meets`] rejects the design rather than crowning it.
     pub fn from_perf(perf: &DecodePerf, w: &Workload) -> IterCost {
-        let prompt_tokens = (w.batch.max(1) * w.prompt_len.max(1)) as f64;
+        let prompt_tokens = (w.batch.max(1) as f64) * (w.prompt_len.max(1) as f64);
+        let sane = |v: f64| if v.is_nan() || v < 0.0 { f64::INFINITY } else { v };
         IterCost {
-            prefill_s_per_token: perf.prefill_latency / prompt_tokens,
-            decode_step_s: perf.token_period,
+            prefill_s_per_token: sane(perf.prefill_latency / prompt_tokens),
+            decode_step_s: sane(perf.token_period),
+            prefill_chunk: 0,
         }
+    }
+
+    /// Same costs with chunked prefill at `chunk` tokens per iteration
+    /// (0 restores whole-prompt admission).
+    pub fn with_chunk(mut self, chunk: usize) -> IterCost {
+        self.prefill_chunk = chunk;
+        self
     }
 }
 
-/// Simulator configuration: engine shape, KV budget and iteration costs.
+/// Simulator configuration: engine shape, KV budget, iteration costs and
+/// the KV accounting model.
 #[derive(Clone, Copy, Debug)]
 pub struct SimConfig {
     /// Compiled batch slots.
@@ -111,6 +165,10 @@ pub struct SimConfig {
     pub kv: KvBudget,
     /// Iteration cost model.
     pub cost: IterCost,
+    /// Per-slot paged accounting (block-granular [`KvLedger`] over
+    /// `kv.capacity_tokens`) instead of the legacy full-context-per-slot
+    /// reservation (`kv.max_seqs`).
+    pub paged_kv: bool,
 }
 
 /// Per-request outcome record.
@@ -159,6 +217,8 @@ impl ReqStats {
 pub struct ServeReport {
     /// Policy that produced the schedule.
     pub policy: String,
+    /// Serving replicas simulated (1 for [`simulate_trace`]).
+    pub replicas: usize,
     /// Requests the trace offered.
     pub offered: usize,
     /// Requests completed.
@@ -187,11 +247,19 @@ pub struct ServeReport {
     pub total_p99_s: f64,
     /// Time-weighted decode-slot occupancy (1.0 = every iteration full).
     pub occupancy: f64,
-    /// Engine iterations executed.
+    /// Engine iterations executed (summed across replicas).
     pub iterations: u64,
-    /// Peak concurrently-live sequences (must respect the KV budget).
+    /// Peak concurrently-live sequences on any one replica (must respect
+    /// the KV budget).
     pub peak_live: usize,
-    /// Per-request records (arrival order).
+    /// Peak resident KV tokens on any one replica's paged ledger (0 when
+    /// `paged_kv` is off).
+    pub peak_kv_tokens: usize,
+    /// Requests rejected because their footprint exceeds the paged KV
+    /// capacity outright (they count against `offered` but never
+    /// complete, so [`ServeReport::meets`] stays conservative).
+    pub rejected: usize,
+    /// Per-request records, sorted by request id.
     pub per_request: Vec<ReqStats>,
 }
 
@@ -208,14 +276,19 @@ impl ServeReport {
     }
 }
 
-/// A live decode slot.
+/// A live slot: prefilling while `prefill_remaining > 0` (tokens == 0),
+/// decoding afterwards.
 #[derive(Clone, Copy, Debug)]
 struct Slot {
     id: u64,
     arrival_s: f64,
     first_token_s: f64,
+    /// Tokens generated so far (0 while prefilling).
     tokens: usize,
+    /// Tokens still to generate.
     remaining: usize,
+    /// Prompt tokens still to prefill.
+    prefill_remaining: usize,
     /// Closed-loop client that owns the request, if any.
     client: Option<usize>,
 }
@@ -239,155 +312,358 @@ impl ClosedLoop {
     }
 }
 
-/// Drive a policy over a traffic spec and report the serving tails.
-///
-/// Deterministic in `(cfg, policy, traffic, slo)`: the virtual clock only
-/// advances by analytic iteration costs and seeded arrival draws.
-pub fn simulate_trace(
-    cfg: &SimConfig,
-    policy: &mut dyn Policy,
-    traffic: &TrafficSpec,
-    slo: &SloSpec,
-) -> ServeReport {
-    let mut rng = Rng::new(traffic.seed ^ 0x5EED_CAFE);
-    let mut pending: VecDeque<Arrival> = open_loop_trace(traffic).into();
-    let mut closed: Option<ClosedLoop> = match traffic.arrival {
-        ArrivalProcess::ClosedLoop { clients, think_s } => Some(ClosedLoop {
-            ready: vec![0.0; clients.max(1)],
-            think_s: think_s.max(0.0),
-            budget: traffic.requests,
-        }),
-        _ => None,
-    };
-    let mut next_id = 0u64;
+/// One engine replica's full simulation state: queue, slots, paged ledger
+/// and virtual clock. [`simulate_trace`] drives a single replica to
+/// completion; [`simulate_replicated`] interleaves several in global time
+/// order so arrivals can be routed on the fleet state at their instant.
+struct Replica {
+    cfg: SimConfig,
+    /// Slot-count concurrency cap presented to the policy.
+    kv_slots: usize,
+    ledger: Option<KvLedger>,
+    /// Open-loop arrivals owned by this replica, (time, id)-ordered.
+    pending: VecDeque<Arrival>,
+    /// Closed-loop synthesis state (None for open-loop replicas).
+    closed: Option<ClosedLoop>,
+    traffic: TrafficSpec,
+    rng: Rng,
+    /// Next closed-loop request id (offset per replica so merged reports
+    /// keep unique ids).
+    next_id: u64,
+    queue: VecDeque<(Arrival, Option<usize>)>,
+    slots: Vec<Option<Slot>>,
+    done: Vec<ReqStats>,
+    now: f64,
+    first_arrival: Option<f64>,
+    last_finish: f64,
+    busy_slot_time: f64,
+    busy_time: f64,
+    iterations: u64,
+    peak_live: usize,
+    peak_kv_tokens: usize,
+    rejected: usize,
+}
 
-    let kv_slots = cfg.kv.concurrency(cfg.max_slots);
-    let mut queue: VecDeque<(Arrival, Option<usize>)> = VecDeque::new();
-    let mut slots: Vec<Option<Slot>> = vec![None; cfg.max_slots];
-    let mut done: Vec<ReqStats> = Vec::new();
-
-    let mut now = 0.0f64;
-    let mut first_arrival: Option<f64> = None;
-    let mut last_finish = 0.0f64;
-    let mut busy_slot_time = 0.0f64;
-    let mut busy_time = 0.0f64;
-    let mut iterations = 0u64;
-    let mut peak_live = 0usize;
-
-    loop {
-        // Materialize every arrival with `at_s <= now` into the queue.
-        while pending.front().map(|a| a.at_s <= now).unwrap_or(false) {
-            let a = pending.pop_front().unwrap();
-            first_arrival.get_or_insert(a.at_s);
-            queue.push_back((a, None));
+impl Replica {
+    fn new(
+        cfg: &SimConfig,
+        traffic: &TrafficSpec,
+        pending: VecDeque<Arrival>,
+        closed: Option<ClosedLoop>,
+        id_base: u64,
+    ) -> Replica {
+        Replica {
+            cfg: *cfg,
+            kv_slots: if cfg.paged_kv {
+                cfg.max_slots
+            } else {
+                cfg.kv.concurrency(cfg.max_slots)
+            },
+            ledger: cfg.paged_kv.then(|| cfg.kv.ledger()),
+            pending,
+            closed,
+            traffic: *traffic,
+            rng: Rng::new(traffic.seed ^ 0x5EED_CAFE ^ id_base),
+            next_id: id_base,
+            queue: VecDeque::new(),
+            slots: vec![None; cfg.max_slots],
+            done: Vec::new(),
+            now: 0.0,
+            first_arrival: None,
+            last_finish: 0.0,
+            busy_slot_time: 0.0,
+            busy_time: 0.0,
+            iterations: 0,
+            peak_live: 0,
+            peak_kv_tokens: 0,
+            rejected: 0,
         }
-        if let Some(cl) = closed.as_mut() {
+    }
+
+    /// Externally-routed arrival (the replicated simulator's path).
+    fn enqueue(&mut self, a: Arrival) {
+        self.first_arrival.get_or_insert(a.at_s);
+        self.queue.push_back((a, None));
+    }
+
+    fn occupied(&self) -> usize {
+        self.slots.iter().filter(|s| s.is_some()).count()
+    }
+
+    /// Queued + resident requests — the join-shortest-queue load signal.
+    fn outstanding(&self) -> usize {
+        self.queue.len() + self.occupied()
+    }
+
+    /// Move every self-generated arrival with `at_s <= now` into the queue.
+    fn materialize(&mut self) {
+        while self.pending.front().map(|a| a.at_s <= self.now).unwrap_or(false) {
+            let a = self.pending.pop_front().unwrap();
+            self.first_arrival.get_or_insert(a.at_s);
+            self.queue.push_back((a, None));
+        }
+        if let Some(cl) = self.closed.as_mut() {
             for c in 0..cl.ready.len() {
                 if cl.budget == 0 {
                     break;
                 }
                 let r = cl.ready[c];
-                if r.is_finite() && r <= now {
-                    let a = arrival(&mut rng, traffic, next_id, r);
-                    next_id += 1;
+                if r.is_finite() && r <= self.now {
+                    let a = arrival(&mut self.rng, &self.traffic, self.next_id, r);
+                    self.next_id += 1;
                     cl.budget -= 1;
                     cl.ready[c] = f64::INFINITY; // in flight until completion
-                    first_arrival.get_or_insert(a.at_s);
-                    queue.push_back((a, Some(c)));
-                }
-            }
-        }
-
-        let live = slots.iter().filter(|s| s.is_some()).count();
-        // Next future arrival instant, for Wait actions.
-        let next_arrival = {
-            let open = pending.front().map(|a| a.at_s);
-            let cl = closed.as_ref().and_then(ClosedLoop::next_ready);
-            match (open, cl) {
-                (Some(a), Some(b)) => Some(a.min(b)),
-                (a, b) => a.or(b),
-            }
-        };
-
-        if queue.is_empty() && live == 0 && next_arrival.is_none() {
-            break;
-        }
-
-        let view = SchedView {
-            now_s: now,
-            queued: queue.len(),
-            oldest_arrival_s: queue.front().map(|(a, _)| a.at_s).unwrap_or(now),
-            live,
-            max_slots: cfg.max_slots,
-            kv_slots,
-            refill_mid_iteration: true,
-        };
-        match sanitize(policy.decide(&view), &view) {
-            Action::Admit(n) => {
-                // Interleaved iteration: newcomers prefill (first token),
-                // incumbents take one decode step.
-                let mut t_iter = if live > 0 { cfg.cost.decode_step_s } else { 0.0 };
-                let mut admitted: Vec<(Arrival, Option<usize>)> = Vec::with_capacity(n);
-                for _ in 0..n {
-                    let (a, c) = queue.pop_front().unwrap();
-                    t_iter += a.prompt_tokens as f64 * cfg.cost.prefill_s_per_token;
-                    admitted.push((a, c));
-                }
-                now += t_iter;
-                iterations += 1;
-                busy_slot_time += (live + admitted.len()) as f64 * t_iter;
-                busy_time += t_iter;
-                step_live_slots(&mut slots, now, &mut done, &mut closed, &mut last_finish);
-                for (a, c) in admitted {
-                    let slot = Slot {
-                        id: a.id,
-                        arrival_s: a.at_s,
-                        first_token_s: now,
-                        tokens: 1,
-                        remaining: a.new_tokens - 1,
-                        client: c,
-                    };
-                    if slot.remaining == 0 {
-                        finish_slot(&slot, now, &mut done, &mut closed, &mut last_finish);
-                    } else {
-                        let free = slots.iter().position(|s| s.is_none()).expect("free slot");
-                        slots[free] = Some(slot);
-                    }
-                }
-                peak_live = peak_live.max(slots.iter().filter(|s| s.is_some()).count());
-            }
-            Action::Decode => {
-                now += cfg.cost.decode_step_s;
-                iterations += 1;
-                busy_slot_time += live as f64 * cfg.cost.decode_step_s;
-                busy_time += cfg.cost.decode_step_s;
-                step_live_slots(&mut slots, now, &mut done, &mut closed, &mut last_finish);
-            }
-            Action::Wait(deadline) => {
-                let target = match (next_arrival, deadline) {
-                    (Some(a), Some(d)) => Some(a.min(d).max(now)),
-                    (Some(a), None) => Some(a.max(now)),
-                    (None, Some(d)) if live > 0 || !queue.is_empty() => Some(d.max(now)),
-                    _ => None,
-                };
-                match target {
-                    Some(t) if t > now => now = t,
-                    Some(_) => {
-                        // Deadline already passed but the policy keeps
-                        // waiting with work available — nudge time to the
-                        // next arrival to guarantee progress.
-                        match next_arrival {
-                            Some(a) if a > now => now = a,
-                            _ => break,
-                        }
-                    }
-                    None => break,
+                    self.first_arrival.get_or_insert(a.at_s);
+                    self.queue.push_back((a, Some(c)));
                 }
             }
         }
     }
 
-    // --- aggregate --------------------------------------------------------
+    /// Next future self-generated arrival instant, if any.
+    fn next_internal_arrival(&self) -> Option<f64> {
+        let open = self.pending.front().map(|a| a.at_s);
+        let cl = self.closed.as_ref().and_then(ClosedLoop::next_ready);
+        match (open, cl) {
+            (Some(a), Some(b)) => Some(a.min(b)),
+            (a, b) => a.or(b),
+        }
+    }
+
+    /// Head-of-line requests the paged ledger accepts right now.
+    fn kv_admissible(&self) -> usize {
+        match &self.ledger {
+            Some(l) => {
+                l.admissible(self.queue.iter().map(|(a, _)| a.prompt_tokens + a.new_tokens))
+            }
+            None => usize::MAX,
+        }
+    }
+
+    /// Reject queue-head requests whose footprint exceeds the paged
+    /// capacity *outright* — they could never be admitted, and FIFO
+    /// admission would otherwise starve every fitting request behind them
+    /// (the serving tail would read as a dead design instead of one that
+    /// cannot hold a single outlier). Rejected requests stay un-completed
+    /// in the report, so SLO validation still fails conservatively; a
+    /// closed-loop client whose request is rejected goes back to thinking.
+    fn reject_unservable(&mut self) {
+        let Some(l) = &self.ledger else { return };
+        let capacity = l.capacity_blocks();
+        while let Some((a, c)) = self.queue.front().copied() {
+            if self.ledger.as_ref().unwrap().blocks_for(a.prompt_tokens + a.new_tokens) <= capacity
+            {
+                break;
+            }
+            self.queue.pop_front();
+            self.rejected += 1;
+            if let (Some(cl), Some(c)) = (self.closed.as_mut(), c) {
+                cl.ready[c] = self.now + cl.think_s;
+            }
+        }
+    }
+
+    /// Record a completed request; a closed-loop client starts thinking.
+    fn finish(&mut self, slot: Slot) {
+        self.done.push(ReqStats {
+            id: slot.id,
+            arrival_s: slot.arrival_s,
+            first_token_s: slot.first_token_s,
+            finish_s: self.now,
+            tokens: slot.tokens,
+        });
+        self.last_finish = self.last_finish.max(self.now);
+        if let Some(l) = self.ledger.as_mut() {
+            l.release(slot.id);
+        }
+        if let (Some(cl), Some(c)) = (self.closed.as_mut(), slot.client) {
+            cl.ready[c] = self.now + cl.think_s;
+        }
+    }
+
+    /// Execute one engine iteration: admit `n` newcomers (their prefill
+    /// starts this iteration), advance every prefilling slot by one chunk
+    /// and every decoding slot by one token.
+    // index loops: completions mutate `self.slots[i]` *and* call
+    // `self.finish(&mut self)`, which an iterator borrow cannot express
+    #[allow(clippy::needless_range_loop)]
+    fn run_iteration(&mut self, n: usize) {
+        // Decoding slots are the ones past their prefill at iteration start.
+        let decoding: Vec<usize> = (0..self.slots.len())
+            .filter(|&i| matches!(self.slots[i], Some(s) if s.prefill_remaining == 0))
+            .collect();
+        let mut t = if decoding.is_empty() { 0.0 } else { self.cfg.cost.decode_step_s };
+        for _ in 0..n {
+            let (a, c) = self.queue.pop_front().expect("sanitized admission");
+            if let Some(l) = self.ledger.as_mut() {
+                let ok = l.admit(a.id, a.prompt_tokens, a.prompt_tokens + a.new_tokens);
+                debug_assert!(ok, "sanitize admitted past the paged KV capacity");
+            }
+            let free = self.slots.iter().position(|s| s.is_none()).expect("free slot");
+            self.slots[free] = Some(Slot {
+                id: a.id,
+                arrival_s: a.at_s,
+                first_token_s: f64::NAN,
+                tokens: 0,
+                remaining: a.new_tokens,
+                prefill_remaining: a.prompt_tokens,
+                client: c,
+            });
+        }
+        // One prefill chunk per prefilling slot (admitted or resident).
+        for s in self.slots.iter_mut().flatten() {
+            if s.prefill_remaining > 0 {
+                let step = if self.cfg.cost.prefill_chunk == 0 {
+                    s.prefill_remaining
+                } else {
+                    s.prefill_remaining.min(self.cfg.cost.prefill_chunk)
+                };
+                t += step as f64 * self.cfg.cost.prefill_s_per_token;
+                s.prefill_remaining -= step;
+            }
+        }
+        let occ = self.occupied();
+        self.now += t;
+        self.iterations += 1;
+        self.busy_time += t;
+        self.busy_slot_time += occ as f64 * t;
+        self.peak_live = self.peak_live.max(occ);
+        // Decode completions for the slots decoding at iteration start.
+        for i in decoding {
+            let s = self.slots[i].as_mut().expect("decoding slot");
+            s.tokens += 1;
+            s.remaining -= 1;
+            let (id, finished) = (s.id, s.remaining == 0);
+            if let Some(l) = self.ledger.as_mut() {
+                l.append(id);
+            }
+            if finished {
+                let slot = self.slots[i].take().expect("finished slot");
+                self.finish(slot);
+            }
+        }
+        // Prefill completions: the first token emerges with the last chunk.
+        for i in 0..self.slots.len() {
+            let Some(s) = self.slots[i].as_mut() else { continue };
+            if s.tokens == 0 && s.prefill_remaining == 0 {
+                s.first_token_s = self.now;
+                s.tokens = 1;
+                s.remaining -= 1;
+                let (id, finished) = (s.id, s.remaining == 0);
+                if let Some(l) = self.ledger.as_mut() {
+                    l.append(id);
+                }
+                if finished {
+                    let slot = self.slots[i].take().expect("finished slot");
+                    self.finish(slot);
+                }
+            }
+        }
+        if let Some(l) = &self.ledger {
+            self.peak_kv_tokens = self.peak_kv_tokens.max(l.peak_resident_tokens());
+        }
+    }
+
+    /// Drive this replica's policy loop, running every iteration that
+    /// starts strictly before `horizon` (`INFINITY` = drain to
+    /// completion). Returns when blocked on arrivals the replica does not
+    /// generate itself (the replicated router's cue to feed it more).
+    fn advance(&mut self, policy: &mut dyn Policy, horizon: f64) {
+        loop {
+            self.materialize();
+            self.reject_unservable();
+            let live = self.occupied();
+            if live == 0 && self.queue.is_empty() {
+                // Idle: jump to the next self-generated arrival, if any.
+                match self.next_internal_arrival() {
+                    Some(t) if t < horizon => {
+                        self.now = self.now.max(t);
+                        continue;
+                    }
+                    _ => return,
+                }
+            }
+            if live == 0 {
+                // Externally-routed arrivals (the replicated path) can be
+                // stamped later than an idle replica's local clock; an
+                // admission must not start before its request arrives.
+                if let Some(&(a, _)) = self.queue.front() {
+                    if a.at_s > self.now {
+                        self.now = a.at_s;
+                    }
+                }
+            }
+            if self.now >= horizon {
+                return;
+            }
+            let view = SchedView {
+                now_s: self.now,
+                queued: self.queue.len(),
+                oldest_arrival_s: self.queue.front().map(|(a, _)| a.at_s).unwrap_or(self.now),
+                live,
+                max_slots: self.cfg.max_slots,
+                kv_slots: self.kv_slots,
+                kv_admissible: self.kv_admissible(),
+                refill_mid_iteration: true,
+            };
+            match sanitize(policy.decide(&view), &view) {
+                Action::Admit(n) => self.run_iteration(n),
+                Action::Decode => self.run_iteration(0),
+                Action::Wait(deadline) => {
+                    // live == 0 here: sanitize coerces waits to decodes
+                    // whenever sequences are in flight.
+                    let next = self.next_internal_arrival();
+                    let target = match (next, deadline) {
+                        (Some(a), Some(d)) => Some(a.min(d)),
+                        (Some(a), None) => Some(a),
+                        (None, Some(d)) if !self.queue.is_empty() => Some(d),
+                        _ => None,
+                    };
+                    match target {
+                        Some(t) if t >= horizon => return,
+                        Some(t) if t > self.now => self.now = t,
+                        Some(_) => {
+                            // Deadline already passed but the policy keeps
+                            // waiting with work queued — nudge time to the
+                            // next arrival to guarantee progress.
+                            match next {
+                                Some(a) if a > self.now && a < horizon => self.now = a,
+                                _ => return,
+                            }
+                        }
+                        None => return,
+                    }
+                }
+            }
+        }
+    }
+}
+
+/// Merge per-replica outcomes into one report.
+fn aggregate(replicas: Vec<Replica>, policy: &str, offered: usize, slo: &SloSpec) -> ServeReport {
+    let n = replicas.len().max(1);
+    let max_slots = replicas.first().map(|r| r.cfg.max_slots).unwrap_or(1);
+    let mut done: Vec<ReqStats> = Vec::new();
+    let mut first_arrival: Option<f64> = None;
+    let mut last_finish = 0.0f64;
+    let (mut busy_slot_time, mut busy_time) = (0.0f64, 0.0f64);
+    let mut iterations = 0u64;
+    let (mut peak_live, mut peak_kv) = (0usize, 0usize);
+    let mut rejected = 0usize;
+    for r in replicas {
+        rejected += r.rejected;
+        done.extend(r.done);
+        first_arrival = match (first_arrival, r.first_arrival) {
+            (Some(a), Some(b)) => Some(a.min(b)),
+            (a, b) => a.or(b),
+        };
+        last_finish = last_finish.max(r.last_finish);
+        busy_slot_time += r.busy_slot_time;
+        busy_time += r.busy_time;
+        iterations += r.iterations;
+        peak_live = peak_live.max(r.peak_live);
+        peak_kv = peak_kv.max(r.peak_kv_tokens);
+    }
     done.sort_by_key(|r| r.id);
     let ttfts: Vec<f64> = done.iter().map(|r| r.ttft_s()).collect();
     let tpots: Vec<f64> = done.iter().filter(|r| r.tokens > 1).map(|r| r.tpot_s()).collect();
@@ -397,8 +673,9 @@ pub fn simulate_trace(
     let met = done.iter().filter(|r| r.meets(slo)).count();
     let makespan = (last_finish - first_arrival.unwrap_or(0.0)).max(0.0);
     ServeReport {
-        policy: policy.name().to_string(),
-        offered: traffic.requests,
+        policy: policy.to_string(),
+        replicas: n,
+        offered,
         completed: done.len(),
         tokens,
         makespan_s: makespan,
@@ -412,55 +689,136 @@ pub fn simulate_trace(
         total_p50_s: stats::percentile(&totals, 50.0),
         total_p99_s: stats::percentile(&totals, 99.0),
         occupancy: if busy_time > 0.0 {
-            busy_slot_time / (busy_time * cfg.max_slots as f64)
+            busy_slot_time / (busy_time * max_slots as f64)
         } else {
             0.0
         },
         iterations,
         peak_live,
+        peak_kv_tokens: peak_kv,
+        rejected,
         per_request: done,
     }
 }
 
-/// Advance every live slot by one token at time `now`; free finished ones.
-fn step_live_slots(
-    slots: &mut [Option<Slot>],
-    now: f64,
-    done: &mut Vec<ReqStats>,
-    closed: &mut Option<ClosedLoop>,
-    last_finish: &mut f64,
-) {
-    for s in slots.iter_mut() {
-        let Some(slot) = s else { continue };
-        slot.tokens += 1;
-        slot.remaining -= 1;
-        if slot.remaining == 0 {
-            let finished = *slot;
-            *s = None;
-            finish_slot(&finished, now, done, closed, last_finish);
-        }
+/// Closed-loop state over exactly `clients` clients — zero is legal (an
+/// inert replica in a partition wider than the client count).
+fn closed_loop_state(traffic: &TrafficSpec, clients: usize, budget: usize) -> ClosedLoop {
+    match traffic.arrival {
+        ArrivalProcess::ClosedLoop { think_s, .. } => ClosedLoop {
+            ready: vec![0.0; clients],
+            think_s: think_s.max(0.0),
+            budget,
+        },
+        _ => unreachable!("closed_loop_state on an open-loop spec"),
     }
 }
 
-/// Record a completed request; a closed-loop client starts thinking.
-fn finish_slot(
-    slot: &Slot,
-    now: f64,
-    done: &mut Vec<ReqStats>,
-    closed: &mut Option<ClosedLoop>,
-    last_finish: &mut f64,
-) {
-    done.push(ReqStats {
-        id: slot.id,
-        arrival_s: slot.arrival_s,
-        first_token_s: slot.first_token_s,
-        finish_s: now,
-        tokens: slot.tokens,
-    });
-    *last_finish = last_finish.max(now);
-    if let (Some(cl), Some(c)) = (closed.as_mut(), slot.client) {
-        cl.ready[c] = now + cl.think_s;
+/// Drive a policy over a traffic spec and report the serving tails.
+///
+/// Deterministic in `(cfg, policy, traffic, slo)`: the virtual clock only
+/// advances by analytic iteration costs and seeded arrival draws.
+pub fn simulate_trace(
+    cfg: &SimConfig,
+    policy: &mut dyn Policy,
+    traffic: &TrafficSpec,
+    slo: &SloSpec,
+) -> ServeReport {
+    let pending: VecDeque<Arrival> = open_loop_trace(traffic).into();
+    let closed = match traffic.arrival {
+        ArrivalProcess::ClosedLoop { clients, .. } => {
+            Some(closed_loop_state(traffic, clients.max(1), traffic.requests))
+        }
+        _ => None,
+    };
+    let mut replica = Replica::new(cfg, traffic, pending, closed, 0);
+    replica.advance(policy, f64::INFINITY);
+    let name = policy.name().to_string();
+    aggregate(vec![replica], &name, traffic.requests, slo)
+}
+
+/// Simulate `replicas` independent copies of the same design behind a
+/// routing policy, each replica running its own clone of `policy`.
+///
+/// Open-loop arrivals are routed **at their arrival instant** on the fleet
+/// state at that instant (every replica is first advanced to the arrival
+/// time), so join-shortest-queue sees real queue depths, not a static
+/// split. Arrivals are processed in `(time, id)` order and JSQ ties break
+/// to the lowest replica index — the schedule is bit-reproducible.
+///
+/// Closed-loop traffic is self-routing by nature — a client resubmits to
+/// the replica serving it — so clients and the request budget are
+/// partitioned round-robin across replicas up front and each replica runs
+/// its loop independently (the routing policy is moot there).
+pub fn simulate_replicated<P: Policy + Clone>(
+    cfg: &SimConfig,
+    replicas: usize,
+    route: RoutePolicy,
+    policy: &P,
+    traffic: &TrafficSpec,
+    slo: &SloSpec,
+) -> ServeReport {
+    let n = replicas.max(1);
+    if n == 1 {
+        let mut p = policy.clone();
+        return simulate_trace(cfg, &mut p, traffic, slo);
     }
+    let mut pols: Vec<P> = (0..n).map(|_| policy.clone()).collect();
+    let mut reps: Vec<Replica> = Vec::with_capacity(n);
+    let label = |p: &P| format!("{} x{} {}", p.name(), n, route.name());
+
+    if let ArrivalProcess::ClosedLoop { clients, .. } = traffic.arrival {
+        // Fewer clients than replicas leaves the surplus replicas inert —
+        // a 1-client spec must model 1 client's concurrency no matter how
+        // many replicas stand by — and the request budget is split only
+        // among the replicas that actually own clients.
+        let clients = clients.max(1);
+        let active = clients.min(n);
+        for r in 0..n {
+            let clients_r = clients / n + usize::from(r < clients % n);
+            let budget_r = if r < active {
+                traffic.requests / active + usize::from(r < traffic.requests % active)
+            } else {
+                0
+            };
+            let closed = closed_loop_state(traffic, clients_r, budget_r);
+            let id_base = (r as u64) << 32;
+            reps.push(Replica::new(cfg, traffic, VecDeque::new(), Some(closed), id_base));
+        }
+        for (rep, pol) in reps.iter_mut().zip(pols.iter_mut()) {
+            rep.advance(pol, f64::INFINITY);
+        }
+        let name = label(policy);
+        return aggregate(reps, &name, traffic.requests, slo);
+    }
+
+    for _ in 0..n {
+        reps.push(Replica::new(cfg, traffic, VecDeque::new(), None, 0));
+    }
+    let mut rr_next = 0usize;
+    for a in open_loop_trace(traffic) {
+        // Bring the whole fleet up to the arrival instant so the router
+        // sees each replica's queue as of `a.at_s`.
+        for (rep, pol) in reps.iter_mut().zip(pols.iter_mut()) {
+            rep.advance(pol, a.at_s);
+        }
+        let target = match route {
+            RoutePolicy::RoundRobin => {
+                let t = rr_next % n;
+                rr_next += 1;
+                t
+            }
+            RoutePolicy::Jsq => {
+                (0..n).min_by_key(|&i| (reps[i].outstanding(), i)).expect("replicas > 0")
+            }
+        };
+        reps[target].enqueue(a);
+    }
+    for (rep, pol) in reps.iter_mut().zip(pols.iter_mut()) {
+        rep.advance(pol, f64::INFINITY);
+    }
+    let name = label(policy);
+    aggregate(reps, &name, traffic.requests, slo)
 }
 
 #[cfg(test)]
@@ -469,11 +827,11 @@ mod tests {
     use crate::sched::{ContinuousBatch, StaticBatch};
 
     fn cost() -> IterCost {
-        IterCost { prefill_s_per_token: 0.001, decode_step_s: 0.01 }
+        IterCost { prefill_s_per_token: 0.001, decode_step_s: 0.01, prefill_chunk: 0 }
     }
 
     fn cfg(slots: usize) -> SimConfig {
-        SimConfig { max_slots: slots, kv: KvBudget::unlimited(), cost: cost() }
+        SimConfig { max_slots: slots, kv: KvBudget::unlimited(), cost: cost(), paged_kv: false }
     }
 
     #[test]
@@ -493,16 +851,18 @@ mod tests {
     }
 
     #[test]
-    fn bursty_trace_clumps_arrivals() {
+    fn bursty_trace_clumps_arrivals_in_id_order() {
         let t = TrafficSpec {
             arrival: ArrivalProcess::Bursty { rps: 100.0, burst: 5 },
             ..TrafficSpec::poisson(100.0, 20, 16, 4, 8)
         };
         let a = open_loop_trace(&t);
         assert_eq!(a.len(), 20);
-        // within a burst, arrivals share a timestamp
+        // within a burst, arrivals share a timestamp but keep id order —
+        // the (time, id) total order bursty replay depends on
         assert_eq!(a[0].at_s.to_bits(), a[4].at_s.to_bits());
         assert!(a[5].at_s > a[4].at_s);
+        assert!(a.windows(2).all(|w| (w[0].at_s, w[0].id) < (w[1].at_s, w[1].id)));
     }
 
     /// Hand-traceable single-request run: one arrival at t=0, prompt 10,
@@ -519,6 +879,48 @@ mod tests {
         assert!((r.finish_s - r.first_token_s - 0.020).abs() < 1e-12);
         assert!((r.tpot_s() - 0.010).abs() < 1e-12);
         assert_eq!(rep.iterations, 3);
+    }
+
+    /// The same single request under chunked prefill (chunk 4): three
+    /// prefill iterations of 4+4+2 tokens — TTFT unchanged at 10 ms
+    /// because no decoder shares the batch — then two decode steps.
+    #[test]
+    fn single_request_chunked_timeline_is_exact() {
+        let t = TrafficSpec::poisson(1e9, 1, 10, 3, 3);
+        let mut c = cfg(4);
+        c.cost = c.cost.with_chunk(4);
+        let rep = simulate_trace(&c, &mut ContinuousBatch, &t, &SloSpec::unconstrained());
+        assert_eq!(rep.completed, 1);
+        let r = rep.per_request[0];
+        assert!((r.ttft_s() - 0.010).abs() < 1e-12, "ttft={}", r.ttft_s());
+        assert!((r.tpot_s() - 0.010).abs() < 1e-12);
+        // 3 prefill iterations + 2 decode iterations
+        assert_eq!(rep.iterations, 5);
+    }
+
+    /// Chunked prefill bounds the stall resident decoders eat during an
+    /// admission: under the stall-the-batch model a short request alive
+    /// across one 512-token admission pays the whole 0.512 s as a single
+    /// inter-token gap; with chunk 64 the gap is one chunk + one decode
+    /// step, so the per-request TPOT tail drops strictly.
+    #[test]
+    fn chunked_prefill_improves_tpot_tail() {
+        let t = TrafficSpec::poisson(12.0, 120, 512, 4, 32).with_seed(7);
+        let run = |chunk: usize| {
+            let mut c = cfg(8);
+            c.cost = c.cost.with_chunk(chunk);
+            simulate_trace(&c, &mut ContinuousBatch, &t, &SloSpec::unconstrained())
+        };
+        let stall = run(0);
+        let chunked = run(64);
+        assert_eq!(stall.completed, 120);
+        assert_eq!(chunked.completed, 120);
+        assert!(
+            chunked.tpot_p99_s < stall.tpot_p99_s,
+            "chunked p99 TPOT {} must beat stall-the-batch {}",
+            chunked.tpot_p99_s,
+            stall.tpot_p99_s
+        );
     }
 
     #[test]
@@ -570,15 +972,214 @@ mod tests {
     }
 
     #[test]
+    fn paged_ledger_caps_resident_tokens() {
+        // Capacity of 64 tokens in 8-token blocks; every request needs
+        // 8 + 8 = 16 tokens = 2 blocks, so at most 4 resident at once.
+        let mut c = cfg(8);
+        c.kv = KvBudget::tokens(64, 8);
+        c.paged_kv = true;
+        let t = TrafficSpec::poisson(1000.0, 60, 8, 8, 8);
+        let rep = simulate_trace(&c, &mut ContinuousBatch, &t, &SloSpec::unconstrained());
+        assert_eq!(rep.completed, 60);
+        assert!(rep.peak_live <= 4, "peak={}", rep.peak_live);
+        assert!(rep.peak_kv_tokens <= 64, "peak kv={}", rep.peak_kv_tokens);
+    }
+
+    #[test]
+    fn paged_admits_more_than_full_reservation() {
+        // Full-context reservation at ctx 64 admits 2 sequences into 128
+        // tokens of KV; the actual footprint is 8+8=16 tokens, so paged
+        // accounting fits 8 — strictly more concurrency from the same SRAM.
+        let t = TrafficSpec::poisson(1000.0, 60, 8, 8, 8);
+        let mut legacy = cfg(8);
+        legacy.kv = KvBudget { max_seqs: 2, capacity_tokens: 128, block_tokens: 8 };
+        let l = simulate_trace(&legacy, &mut ContinuousBatch, &t, &SloSpec::unconstrained());
+        let mut paged = legacy;
+        paged.paged_kv = true;
+        let p = simulate_trace(&paged, &mut ContinuousBatch, &t, &SloSpec::unconstrained());
+        assert!(l.peak_live <= 2);
+        assert!(p.peak_live > l.peak_live, "paged {} vs legacy {}", p.peak_live, l.peak_live);
+        assert!(p.makespan_s < l.makespan_s, "more concurrency must finish sooner");
+    }
+
+    #[test]
+    fn oversized_request_reports_incomplete_not_hang() {
+        // Requests whose footprint (40 tokens) exceeds the whole paged
+        // capacity (32) can never be admitted; the sim must terminate and
+        // report them rejected instead of spinning.
+        let mut c = cfg(4);
+        c.kv = KvBudget::tokens(32, 8);
+        c.paged_kv = true;
+        let t = TrafficSpec::poisson(1e9, 3, 32, 8, 8);
+        let rep = simulate_trace(&c, &mut ContinuousBatch, &t, &SloSpec::unconstrained());
+        assert_eq!(rep.completed, 0, "nothing fits, nothing completes");
+        assert_eq!(rep.rejected, 3);
+        assert!(!rep.meets(&SloSpec::unconstrained()));
+    }
+
+    /// Never-fitting outliers must not starve the fitting traffic queued
+    /// behind them: they are rejected at the queue head and everything
+    /// else serves. Footprint = 8 prompt + new tokens against a 3-block
+    /// (24-token) capacity: new <= 16 fits, new >= 17 can never fit.
+    #[test]
+    fn oversized_outliers_do_not_starve_the_tail() {
+        let mut c = cfg(4);
+        c.kv = KvBudget::tokens(24, 8);
+        c.paged_kv = true;
+        let t = TrafficSpec::poisson(200.0, 60, 8, 4, 32).with_seed(5);
+        let rep = simulate_trace(&c, &mut ContinuousBatch, &t, &SloSpec::unconstrained());
+        assert!(rep.rejected > 0, "the wide token range must sample outliers");
+        assert!(rep.completed > 0, "fitting requests must be served");
+        assert_eq!(rep.completed + rep.rejected, 60, "every request is served or rejected");
+        assert!(rep.peak_kv_tokens <= 24);
+    }
+
+    #[test]
     fn static_batching_runs_batch_synchronous() {
         // 8 simultaneous arrivals, 4 slots: two sequential full batches.
         let t = TrafficSpec::poisson(1e9, 8, 10, 5, 5);
-        let rep = simulate_trace(&cfg(4), &mut StaticBatch::new(0.001), &t, &SloSpec::unconstrained());
+        let rep =
+            simulate_trace(&cfg(4), &mut StaticBatch::new(0.001), &t, &SloSpec::unconstrained());
         assert_eq!(rep.completed, 8);
         // batch 2 must start after batch 1 fully drains
         let b1_finish = rep.per_request[..4].iter().map(|r| r.finish_s).fold(0.0, f64::max);
-        let b2_first = rep.per_request[4..].iter().map(|r| r.first_token_s).fold(f64::MAX, f64::min);
+        let b2_first =
+            rep.per_request[4..].iter().map(|r| r.first_token_s).fold(f64::MAX, f64::min);
         assert!(b2_first >= b1_finish - 1e-12);
         assert!((rep.occupancy - 1.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn iter_cost_guards_degenerate_inputs() {
+        // A NaN prefill latency (e.g. an upstream 0/0) on a zero-token
+        // prompt must not poison the cost model with NaN — it pins to
+        // INFINITY, which fails SLO validation conservatively instead of
+        // letting a broken design pass with all-zero tails.
+        let perf = DecodePerf {
+            stage_latency: 0.0,
+            microbatch_latency: 0.0,
+            token_period: f64::NAN,
+            tokens_per_s: 0.0,
+            tokens_per_s_chip: 0.0,
+            prefill_latency: f64::NAN,
+            compute_util: 0.0,
+            mem_util: 0.0,
+            comm_frac: 0.0,
+            n_chips: 1,
+        };
+        let mut w = Workload::new(crate::config::ModelSpec::gpt2(), 1024, 4);
+        w.prompt_len = 0; // the degenerate zero-token prompt
+        let c = IterCost::from_perf(&perf, &w);
+        assert!(!c.prefill_s_per_token.is_nan());
+        assert!(!c.decode_step_s.is_nan());
+        assert_eq!(c.prefill_s_per_token, f64::INFINITY);
+        assert_eq!(c.decode_step_s, f64::INFINITY);
+        // The sim must terminate on infinite costs and reject, not hang or
+        // trivially pass.
+        let cfg = SimConfig { max_slots: 4, kv: KvBudget::unlimited(), cost: c, paged_kv: false };
+        let t = TrafficSpec::poisson(100.0, 5, 8, 2, 4);
+        let rep = simulate_trace(&cfg, &mut ContinuousBatch, &t, &SloSpec::unconstrained());
+        assert!(rep.completed < rep.offered);
+        assert!(!rep.meets(&SloSpec::unconstrained()));
+        // A healthy zero-token-prompt workload stays finite and harmless.
+        let healthy = DecodePerf { token_period: 0.01, prefill_latency: 0.0, ..perf };
+        let c = IterCost::from_perf(&healthy, &w);
+        assert_eq!(c.prefill_s_per_token, 0.0);
+        assert_eq!(c.decode_step_s, 0.01);
+    }
+
+    #[test]
+    fn replicated_single_matches_simulate_trace() {
+        let t = TrafficSpec::poisson(40.0, 100, 16, 4, 16).with_seed(5);
+        let a = simulate_trace(&cfg(8), &mut ContinuousBatch, &t, &SloSpec::unconstrained());
+        let b = simulate_replicated(
+            &cfg(8),
+            1,
+            RoutePolicy::Jsq,
+            &ContinuousBatch,
+            &t,
+            &SloSpec::unconstrained(),
+        );
+        assert_eq!(a.completed, b.completed);
+        assert_eq!(a.iterations, b.iterations);
+        assert_eq!(a.ttft_p99_s.to_bits(), b.ttft_p99_s.to_bits());
+    }
+
+    #[test]
+    fn two_replicas_complete_everything_and_split_load() {
+        let t = TrafficSpec::poisson(60.0, 200, 16, 4, 16).with_seed(21);
+        for route in [RoutePolicy::RoundRobin, RoutePolicy::Jsq] {
+            let rep = simulate_replicated(
+                &cfg(4),
+                2,
+                route,
+                &ContinuousBatch,
+                &t,
+                &SloSpec::unconstrained(),
+            );
+            assert_eq!(rep.completed, 200, "{route:?}");
+            assert_eq!(rep.replicas, 2);
+            // two replicas halve the per-replica load: faster than one
+            let single =
+                simulate_trace(&cfg(4), &mut ContinuousBatch, &t, &SloSpec::unconstrained());
+            assert!(rep.makespan_s <= single.makespan_s + 1e-9);
+        }
+    }
+
+    #[test]
+    fn replicated_runs_are_bit_reproducible_on_tied_arrivals() {
+        // Bursty traces emit equal timestamps; the (time, id) order and
+        // lowest-index JSQ tie-break must make replay exact.
+        let t = TrafficSpec {
+            arrival: ArrivalProcess::Bursty { rps: 80.0, burst: 8 },
+            ..TrafficSpec::poisson(80.0, 160, 16, 4, 24)
+        }
+        .with_seed(99);
+        let run = || {
+            let rep = simulate_replicated(
+                &cfg(4),
+                3,
+                RoutePolicy::Jsq,
+                &ContinuousBatch,
+                &t,
+                &SloSpec::unconstrained(),
+            );
+            (rep.completed, rep.iterations, rep.ttft_p99_s.to_bits(), rep.makespan_s.to_bits())
+        };
+        assert_eq!(run(), run());
+    }
+
+    #[test]
+    fn closed_loop_replicas_partition_clients() {
+        let t = TrafficSpec::closed_loop(6, 0.001, 60, 8, 4, 8).with_seed(17);
+        let rep = simulate_replicated(
+            &cfg(8),
+            2,
+            RoutePolicy::RoundRobin,
+            &ContinuousBatch,
+            &t,
+            &SloSpec::unconstrained(),
+        );
+        assert_eq!(rep.completed, 60);
+        // 3 clients per replica bound per-replica concurrency
+        assert!(rep.peak_live <= 3, "peak={}", rep.peak_live);
+    }
+
+    #[test]
+    fn closed_loop_fewer_clients_than_replicas_stays_honest() {
+        // A 1-client spec across 3 replicas must model exactly one
+        // in-flight request fleet-wide — no phantom clients — and still
+        // serve the whole budget.
+        let t = TrafficSpec::closed_loop(1, 0.0, 20, 8, 2, 4).with_seed(8);
+        let rep = simulate_replicated(
+            &cfg(4),
+            3,
+            RoutePolicy::Jsq,
+            &ContinuousBatch,
+            &t,
+            &SloSpec::unconstrained(),
+        );
+        assert_eq!(rep.completed, 20);
+        assert_eq!(rep.peak_live, 1, "one client => one in-flight request");
     }
 }

@@ -116,12 +116,18 @@ pub fn sweep_summary(
     if let Some(spec) = slo {
         let w = Workload::new(model.clone(), spec_ctx(&grid, &best), spec_batch(&grid, &best));
         // An unresolved open-loop rate (rps <= 0) would make the SLO pass
-        // vacuous; pace it at 80% of the unconstrained optimum's capacity.
+        // vacuous; pace it at 80% of the unconstrained optimum's capacity —
+        // the whole fleet's when the spec serves several replicas, matching
+        // `serve_sim` (validation spreads the traffic across them).
         let traffic = match &best {
-            Some((_, p)) => resolve_rate(&spec.traffic, 0.8, p.perf.tokens_per_s),
+            Some((_, p)) => {
+                let fleet = p.perf.tokens_per_s * spec.replicas.max(1) as f64;
+                resolve_rate(&spec.traffic, 0.8, fleet)
+            }
             None => spec.traffic,
         };
-        match engine.best_point_slo(&ctx.space, &ctx.servers, &w, &spec.slo, &traffic) {
+        let spec = crate::config::ServeSpec { traffic, ..*spec };
+        match engine.best_point_slo(&ctx.space, &ctx.servers, &w, &spec) {
             Some(sel) => {
                 t.row(vec![
                     "SLO-constrained optimum".to_string(),
@@ -196,8 +202,13 @@ fn resolve_rate(
 /// **Serving simulation** — static vs continuous batching on the same
 /// seeded trace, on the model's TCO/Token-optimal design
 /// (`ccloud serve-sim`). One row per policy with throughput, goodput,
-/// latency tails and occupancy; with a binding SLO, extra rows report the
-/// SLO-constrained design selection.
+/// latency tails and occupancy; with `spec.replicas > 1`, extra rows
+/// compare round-robin against join-shortest-queue routing over that many
+/// replicas at the fleet rate, while the single-replica baseline rows
+/// serve their per-replica share of it (every row runs at the same
+/// `load` relative to its own capacity); with a binding SLO, extra rows
+/// report the SLO-constrained design selection. The spec's
+/// chunked-prefill and paged-KV knobs apply to every row.
 ///
 /// A non-positive Poisson/bursty rate is resolved to `load` × the design's
 /// steady-state *request* capacity (tokens/s over the mean token budget),
@@ -205,22 +216,33 @@ fn resolve_rate(
 pub fn serve_sim(
     ctx: &Ctx,
     w: &Workload,
-    traffic: &crate::config::TrafficSpec,
+    spec: &crate::config::ServeSpec,
     load: f64,
-    slo: &crate::config::SloSpec,
     out_dir: Option<&Path>,
 ) -> Table {
-    use crate::perf::events::{simulate_trace, IterCost, ServeReport, SimConfig};
-    use crate::sched::{ContinuousBatch, KvBudget, Policy, StaticBatch};
+    use crate::perf::events::{
+        simulate_replicated, simulate_trace, IterCost, ServeReport, SimConfig,
+    };
+    use crate::sched::{ContinuousBatch, KvBudget, Policy, RoutePolicy, StaticBatch};
 
     let batch = w.batch;
+    let slo = &spec.slo;
     let mut t = Table::new(vec![
         "Policy", "Req", "Tokens", "Tok/s", "Goodput", "TTFT p50", "TTFT p99", "TPOT p99",
         "Occup %", "SLO met %",
     ])
     .with_title(format!(
-        "Serving simulation: {} @ ctx {} batch {} ({} requests)",
-        w.model.display, w.ctx, batch, traffic.requests
+        "Serving simulation: {} @ ctx {} batch {} ({} requests{}{})",
+        w.model.display,
+        w.ctx,
+        batch,
+        spec.traffic.requests,
+        if spec.paged_kv { ", paged KV" } else { "" },
+        if spec.prefill_chunk > 0 {
+            format!(", prefill chunk {}", spec.prefill_chunk)
+        } else {
+            String::new()
+        },
     ));
     // Rows are fixed 10-wide; pad informational rows to the header arity.
     let padded = |msg: &str| {
@@ -234,16 +256,32 @@ pub fn serve_sim(
         return t;
     };
 
-    // Resolve a load-relative arrival rate against the design's capacity.
-    let traffic = resolve_rate(traffic, load, best.perf.tokens_per_s);
+    // Resolve a load-relative arrival rate against the design's capacity
+    // (the whole fleet's when several replicas share the traffic). The
+    // single-replica baseline rows get the per-replica *share* of that
+    // rate, so every row serves the same `load` relative to its own
+    // capacity instead of one server silently eating the fleet's traffic.
+    let n_replicas = spec.replicas.max(1);
+    let fleet_capacity = best.perf.tokens_per_s * n_replicas as f64;
+    let traffic = resolve_rate(&spec.traffic, load, fleet_capacity);
+    let spec = crate::config::ServeSpec { traffic, ..*spec };
+    let mut single_traffic = traffic;
+    if n_replicas > 1 {
+        match &mut single_traffic.arrival {
+            crate::config::ArrivalProcess::Poisson { rps }
+            | crate::config::ArrivalProcess::Bursty { rps, .. } => *rps /= n_replicas as f64,
+            // closed loops self-pace; the partitioned replicated run
+            // splits the clients itself
+            crate::config::ArrivalProcess::ClosedLoop { .. } => {}
+        }
+    }
 
     let cfg = SimConfig {
         max_slots: batch.max(1),
         kv: KvBudget::from_design(&best.server, w, &best.mapping),
-        cost: IterCost::from_perf(&best.perf, w),
+        cost: IterCost::from_perf(&best.perf, w).with_chunk(spec.prefill_chunk),
+        paged_kv: spec.paged_kv,
     };
-    // Static window: a couple of token periods — long enough to coalesce,
-    // short enough not to dominate TTFT at low load.
     // One shared row shape for every report row, so the cells cannot
     // drift from the 10-column header.
     let report_row = |label: String, r: &ServeReport| -> Vec<String> {
@@ -260,16 +298,25 @@ pub fn serve_sim(
             fmt(r.slo_met_frac * 100.0, 0),
         ]
     };
+    // Static window: a couple of token periods — long enough to coalesce,
+    // short enough not to dominate TTFT at low load.
     let mut st = StaticBatch::new((2.0 * best.perf.token_period).max(0.005));
     let mut co = ContinuousBatch;
     let policies: [&mut dyn Policy; 2] = [&mut st, &mut co];
     for policy in policies {
-        let r = simulate_trace(&cfg, policy, &traffic, slo);
+        let r = simulate_trace(&cfg, policy, &single_traffic, slo);
         t.row(report_row(r.policy.clone(), &r));
+    }
+    if spec.replicas > 1 {
+        for route in [RoutePolicy::RoundRobin, RoutePolicy::Jsq] {
+            let r =
+                simulate_replicated(&cfg, spec.replicas, route, &ContinuousBatch, &traffic, slo);
+            t.row(report_row(r.policy.clone(), &r));
+        }
     }
     if !slo.is_unconstrained() {
         use crate::evaluate::SweepEngine;
-        match SweepEngine::default().best_point_slo(&ctx.space, &ctx.servers, w, slo, &traffic) {
+        match SweepEngine::default().best_point_slo(&ctx.space, &ctx.servers, w, &spec) {
             Some(sel) => {
                 let label = format!(
                     "slo-opt ({:.0} mm², tp={} pp={}, ${:.3}/1M)",

@@ -11,29 +11,59 @@
 use crate::arch::ServerDesign;
 use crate::config::Workload;
 use crate::mapping::{partition, Mapping};
+use crate::sched::KvLedger;
 
-/// Maximum concurrently-resident sequences the KV capacity admits.
+/// Largest paged-KV block size we derive, tokens. Bank geometry on tiny
+/// mappings can suggest enormous blocks; past this the block granularity
+/// would defeat paging's point.
+const MAX_BLOCK_TOKENS: usize = 256;
+
+/// The KV-capacity admission limit, in both granularities the drivers use:
+/// the legacy full-context per-slot cap (`max_seqs`) and the per-token
+/// paged capacity (`capacity_tokens` / `block_tokens`) that a [`KvLedger`]
+/// allocates against.
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
 pub struct KvBudget {
-    /// Hard cap on live sequences (full-context KV reserved per slot —
-    /// the static-shape artifact's allocation model).
+    /// Hard cap on live sequences with full-context KV reserved per slot —
+    /// the static-shape artifact's allocation model, and what
+    /// non-paged drivers enforce.
     pub max_seqs: usize,
+    /// Total KV tokens the spare CC-MEM holds (`usize::MAX` = unlimited).
+    /// Always >= `max_seqs * ctx`: per-token accounting can only admit
+    /// more than full-context reservation, never less.
+    pub capacity_tokens: usize,
+    /// Paged-allocation block size, tokens (>= 1) — derived from the
+    /// CC-MEM bank geometry in [`KvBudget::from_design`].
+    pub block_tokens: usize,
 }
 
 impl KvBudget {
     /// No capacity limit (the compiled batch size is the only cap).
     pub fn unlimited() -> KvBudget {
-        KvBudget { max_seqs: usize::MAX }
+        KvBudget { max_seqs: usize::MAX, capacity_tokens: usize::MAX, block_tokens: 1 }
     }
 
-    /// Explicit sequence cap (tests and synthetic sims).
+    /// Explicit sequence cap (tests and synthetic sims); token capacity is
+    /// unlimited, so paged accounting does not bind.
     pub fn seqs(max_seqs: usize) -> KvBudget {
-        KvBudget { max_seqs }
+        KvBudget { max_seqs, capacity_tokens: usize::MAX, block_tokens: 1 }
+    }
+
+    /// Explicit paged capacity (tests and synthetic sims); the sequence
+    /// cap is unlimited, so only the ledger binds.
+    pub fn tokens(capacity_tokens: usize, block_tokens: usize) -> KvBudget {
+        KvBudget { max_seqs: usize::MAX, capacity_tokens, block_tokens: block_tokens.max(1) }
     }
 
     /// Budget for a workload mapped onto a server: the mapping's total
-    /// CC-MEM minus resident weights and activation double-buffers,
-    /// divided by one sequence's full-context KV footprint.
+    /// CC-MEM minus resident weights and activation double-buffers, as a
+    /// sequence cap (spare over one full-context KV footprint) *and* as a
+    /// paged token capacity (spare over one token's KV footprint).
+    ///
+    /// The block size comes from the CC-MEM bank geometry: the smallest
+    /// token count whose per-chip KV shard feeds every bank group at least
+    /// one full port beat ([`crate::ccmem::PORT_BYTES`]), so a block read
+    /// saturates the banked SRAM exactly like the dense GEMM streams do.
     ///
     /// Uses the same per-chip profile as the analytic simulator
     /// ([`partition::profile`]), so a mapping the simulator accepts always
@@ -43,22 +73,36 @@ impl KvBudget {
         let capacity = n * server.chiplet.sram_mb * 1e6 * partition::SRAM_USABLE_FRAC;
         let prof = partition::profile(w, mapping);
         let fixed = (prof.weight_bytes + prof.act_bytes) * n;
+        // kv_bytes_per_seq is linear in ctx, so ctx=1 is the per-token cost.
+        let per_tok = w.model.kv_bytes_per_seq(1);
         let per_seq = w.model.kv_bytes_per_seq(w.ctx);
         let spare = capacity - fixed;
-        if spare <= 0.0 || per_seq <= 0.0 {
-            return KvBudget { max_seqs: 0 };
+        if spare <= 0.0 || per_tok <= 0.0 {
+            return KvBudget { max_seqs: 0, capacity_tokens: 0, block_tokens: 1 };
         }
-        let seqs = (spare / per_seq).floor();
-        if !seqs.is_finite() || seqs >= usize::MAX as f64 {
-            return KvBudget::unlimited();
-        }
-        KvBudget { max_seqs: seqs as usize }
+        let beat_bytes = (crate::ccmem::PORT_BYTES * server.chiplet.n_bank_groups) as f64 * n;
+        let block_tokens = ((beat_bytes / per_tok).ceil() as usize).clamp(1, MAX_BLOCK_TOKENS);
+        let tokens = (spare / per_tok).floor();
+        let capacity_tokens = if tokens.is_finite() && tokens < usize::MAX as f64 {
+            tokens as usize
+        } else {
+            usize::MAX
+        };
+        let seqs = if per_seq > 0.0 { (spare / per_seq).floor() } else { f64::INFINITY };
+        let max_seqs =
+            if seqs.is_finite() && seqs < usize::MAX as f64 { seqs as usize } else { usize::MAX };
+        KvBudget { max_seqs, capacity_tokens, block_tokens }
     }
 
     /// Effective concurrency for an engine with `max_slots` compiled batch
     /// slots: the tighter of the two limits.
     pub fn concurrency(&self, max_slots: usize) -> usize {
         self.max_seqs.min(max_slots)
+    }
+
+    /// A fresh paged ledger over this budget's token capacity.
+    pub fn ledger(&self) -> KvLedger {
+        KvLedger::new(self.capacity_tokens, self.block_tokens)
     }
 }
 
@@ -126,5 +170,45 @@ mod tests {
     fn concurrency_clamps_to_slots() {
         assert_eq!(KvBudget::unlimited().concurrency(64), 64);
         assert_eq!(KvBudget::seqs(3).concurrency(64), 3);
+    }
+
+    #[test]
+    fn paged_capacity_dominates_full_reservation() {
+        // Per-token accounting must never admit less than the legacy
+        // full-context model: capacity_tokens >= max_seqs * ctx.
+        let w = Workload::new(ModelSpec::gpt3(), 2048, 256);
+        let m = Mapping { tp: 136, pp: 96, microbatch: 2 };
+        let b = KvBudget::from_design(&gpt3_server(), &w, &m);
+        assert!(b.capacity_tokens >= b.max_seqs.saturating_mul(w.ctx));
+        // ...and the slack is less than one full context (floor rounding).
+        assert!(b.capacity_tokens < (b.max_seqs + 1).saturating_mul(w.ctx) + w.ctx);
+    }
+
+    #[test]
+    fn block_size_follows_bank_geometry() {
+        // Table-2 GPT-3: one token's KV is ~4.7 MB system-wide over 13056
+        // chips (~361 B/chip); a 172-bank-group chip needs 172 × 16 B per
+        // beat row, so a block lands in the vLLM-ish 4..32-token range.
+        let w = Workload::new(ModelSpec::gpt3(), 2048, 256);
+        let m = Mapping { tp: 136, pp: 96, microbatch: 2 };
+        let b = KvBudget::from_design(&gpt3_server(), &w, &m);
+        assert!(
+            (4..=32).contains(&b.block_tokens),
+            "block_tokens={} outside the expected bank-geometry range",
+            b.block_tokens
+        );
+        // The ledger the budget constructs sees the same capacity.
+        let l = b.ledger();
+        assert_eq!(l.capacity_blocks(), b.capacity_tokens / b.block_tokens);
+        assert_eq!(l.block_tokens(), b.block_tokens);
+    }
+
+    #[test]
+    fn synthetic_token_budget() {
+        let b = KvBudget::tokens(1024, 16);
+        assert_eq!(b.max_seqs, usize::MAX);
+        assert_eq!(b.ledger().capacity_blocks(), 64);
+        // block_tokens is clamped to >= 1
+        assert_eq!(KvBudget::tokens(10, 0).block_tokens, 1);
     }
 }

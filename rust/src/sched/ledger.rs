@@ -1,0 +1,219 @@
+//! Block-granular, per-slot KV accounting — the paged-KV ledger.
+//!
+//! [`super::KvBudget::from_design`] historically reserved one *full-context*
+//! KV allocation per admitted sequence, which over-provisions any workload
+//! whose requests use less than `w.ctx` tokens (long prompts with short
+//! generations, mixed-context traffic). The ledger replaces that with the
+//! granularity real paged-KV allocators use: tokens resident per live slot,
+//! charged in fixed-size *blocks* whose size is derived from the CC-MEM
+//! bank geometry (see [`super::KvBudget::from_design`]), against a total
+//! token capacity derived from the same spare-SRAM computation.
+//!
+//! Admission **reserves** a request's maximum footprint (prompt plus its
+//! token budget, rounded up to blocks) so a sequence can never run out of
+//! KV mid-decode — the on-chip model has no swap path, so preemption is
+//! not an option — while **residency** grows token by token as the slot
+//! prefills and decodes. Reserved-vs-resident is exactly the gap a future
+//! preemptive scheduler could reclaim; both are tracked.
+
+use std::collections::BTreeMap;
+
+/// Per-slot allocation record.
+#[derive(Clone, Copy, Debug)]
+struct SlotKv {
+    /// KV tokens currently resident (prompt + generated so far).
+    resident_tokens: usize,
+    /// Blocks reserved at admission (covers the slot's maximum footprint).
+    reserved_blocks: usize,
+}
+
+/// Block-granular KV allocator state for one engine replica.
+#[derive(Clone, Debug)]
+pub struct KvLedger {
+    /// Allocation block size, tokens (>= 1).
+    block_tokens: usize,
+    /// Total capacity, blocks.
+    capacity_blocks: usize,
+    /// Blocks reserved across live slots.
+    reserved_blocks: usize,
+    /// KV tokens resident across live slots.
+    resident_tokens: usize,
+    /// High-water mark of `resident_tokens`.
+    peak_resident_tokens: usize,
+    slots: BTreeMap<u64, SlotKv>,
+}
+
+impl KvLedger {
+    /// Ledger over `capacity_tokens` of KV, allocated in blocks of
+    /// `block_tokens` (clamped to >= 1). A `usize::MAX` capacity means
+    /// unlimited.
+    pub fn new(capacity_tokens: usize, block_tokens: usize) -> KvLedger {
+        let block_tokens = block_tokens.max(1);
+        KvLedger {
+            block_tokens,
+            capacity_blocks: capacity_tokens / block_tokens,
+            reserved_blocks: 0,
+            resident_tokens: 0,
+            peak_resident_tokens: 0,
+            slots: BTreeMap::new(),
+        }
+    }
+
+    /// Blocks needed to hold `tokens` KV entries.
+    pub fn blocks_for(&self, tokens: usize) -> usize {
+        tokens.div_ceil(self.block_tokens).max(1)
+    }
+
+    /// Allocation block size, tokens.
+    pub fn block_tokens(&self) -> usize {
+        self.block_tokens
+    }
+
+    /// Total capacity, blocks.
+    pub fn capacity_blocks(&self) -> usize {
+        self.capacity_blocks
+    }
+
+    /// Unreserved blocks available for admission.
+    pub fn free_blocks(&self) -> usize {
+        self.capacity_blocks - self.reserved_blocks
+    }
+
+    /// KV tokens resident across live slots right now.
+    pub fn resident_tokens(&self) -> usize {
+        self.resident_tokens
+    }
+
+    /// High-water mark of resident KV tokens.
+    pub fn peak_resident_tokens(&self) -> usize {
+        self.peak_resident_tokens
+    }
+
+    /// Live (admitted, unreleased) slots.
+    pub fn live(&self) -> usize {
+        self.slots.len()
+    }
+
+    /// How many of the given requests — in order, no skipping, so FIFO
+    /// admission cannot starve an early large request behind later small
+    /// ones — fit in the free blocks right now. `footprints` yields each
+    /// queued request's *maximum* KV tokens (prompt + token budget).
+    pub fn admissible(&self, footprints: impl Iterator<Item = usize>) -> usize {
+        let mut free = self.free_blocks();
+        let mut n = 0;
+        for tokens in footprints {
+            let need = self.blocks_for(tokens);
+            if need > free {
+                break;
+            }
+            free -= need;
+            n += 1;
+        }
+        n
+    }
+
+    /// Admit a slot: reserve blocks for its maximum footprint
+    /// (`max_tokens`) and mark the prompt resident. Returns false (no
+    /// state change) when the reservation does not fit.
+    pub fn admit(&mut self, id: u64, prompt_tokens: usize, max_tokens: usize) -> bool {
+        let need = self.blocks_for(max_tokens.max(prompt_tokens));
+        if need > self.free_blocks() || self.slots.contains_key(&id) {
+            return false;
+        }
+        self.reserved_blocks += need;
+        self.resident_tokens += prompt_tokens;
+        self.peak_resident_tokens = self.peak_resident_tokens.max(self.resident_tokens);
+        self.slots.insert(id, SlotKv { resident_tokens: prompt_tokens, reserved_blocks: need });
+        true
+    }
+
+    /// One more token resident in slot `id` (a decode step, or the first
+    /// token emerging from the prefill).
+    pub fn append(&mut self, id: u64) {
+        let Some(slot) = self.slots.get_mut(&id) else { return };
+        slot.resident_tokens += 1;
+        debug_assert!(
+            slot.resident_tokens <= slot.reserved_blocks.saturating_mul(self.block_tokens),
+            "slot {id} outgrew its reservation"
+        );
+        self.resident_tokens += 1;
+        self.peak_resident_tokens = self.peak_resident_tokens.max(self.resident_tokens);
+    }
+
+    /// Free a finished slot's reservation and residency.
+    pub fn release(&mut self, id: u64) {
+        if let Some(slot) = self.slots.remove(&id) {
+            self.reserved_blocks -= slot.reserved_blocks;
+            self.resident_tokens -= slot.resident_tokens;
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn blocks_round_up() {
+        let l = KvLedger::new(1000, 16);
+        assert_eq!(l.capacity_blocks(), 62);
+        assert_eq!(l.blocks_for(1), 1);
+        assert_eq!(l.blocks_for(16), 1);
+        assert_eq!(l.blocks_for(17), 2);
+        // a zero-token footprint still pins one block (the slot exists)
+        assert_eq!(l.blocks_for(0), 1);
+    }
+
+    #[test]
+    fn admit_grow_release_roundtrip() {
+        let mut l = KvLedger::new(64, 8);
+        assert!(l.admit(1, 10, 20)); // 3 blocks reserved, 10 tokens resident
+        assert_eq!(l.free_blocks(), 8 - 3);
+        assert_eq!(l.resident_tokens(), 10);
+        for _ in 0..10 {
+            l.append(1);
+        }
+        assert_eq!(l.resident_tokens(), 20);
+        assert_eq!(l.peak_resident_tokens(), 20);
+        l.release(1);
+        assert_eq!(l.resident_tokens(), 0);
+        assert_eq!(l.free_blocks(), 8);
+        assert_eq!(l.peak_resident_tokens(), 20, "peak survives release");
+    }
+
+    #[test]
+    fn admission_respects_capacity() {
+        let mut l = KvLedger::new(32, 8); // 4 blocks
+        assert!(l.admit(1, 8, 16)); // 2 blocks
+        assert!(l.admit(2, 8, 16)); // 2 blocks
+        assert!(!l.admit(3, 1, 1), "full ledger must reject");
+        l.release(1);
+        assert!(l.admit(3, 1, 1));
+    }
+
+    #[test]
+    fn admissible_is_fifo_prefix() {
+        let mut l = KvLedger::new(32, 8); // 4 blocks
+        assert!(l.admit(9, 8, 8)); // 1 block used
+        // footprints: 16 tok (2 blocks), 24 tok (3 blocks — does not fit
+        // after the first), 1 tok (would fit, but FIFO stops at the block)
+        let n = l.admissible([16usize, 24, 1].into_iter());
+        assert_eq!(n, 1, "no skipping past a request that does not fit");
+    }
+
+    #[test]
+    fn unlimited_capacity_never_rejects() {
+        let mut l = KvLedger::new(usize::MAX, 16);
+        for id in 0..1000u64 {
+            assert!(l.admit(id, 100, 200));
+        }
+        assert_eq!(l.live(), 1000);
+    }
+
+    #[test]
+    fn duplicate_admission_rejected() {
+        let mut l = KvLedger::new(1000, 8);
+        assert!(l.admit(1, 4, 8));
+        assert!(!l.admit(1, 4, 8));
+    }
+}

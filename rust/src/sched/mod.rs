@@ -29,10 +29,46 @@
 //! policies themselves are executor-agnostic.
 
 pub mod budget;
+pub mod ledger;
 pub mod policy;
 
 pub use budget::KvBudget;
+pub use ledger::KvLedger;
 pub use policy::{ContinuousBatch, StaticBatch};
+
+/// How arrivals are routed across serving replicas (N independent queues,
+/// each running its own policy instance — see
+/// [`crate::perf::events::simulate_replicated`]).
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub enum RoutePolicy {
+    /// Cyclic assignment in arrival order, oblivious to load.
+    #[default]
+    RoundRobin,
+    /// Join-shortest-queue: each arrival goes to the replica with the
+    /// fewest outstanding requests (queued + resident) at its arrival
+    /// instant; ties break to the lowest replica index, so routing is
+    /// deterministic even on tied arrival timestamps.
+    Jsq,
+}
+
+impl RoutePolicy {
+    /// Short name for reports and CLI round-trips.
+    pub fn name(&self) -> &'static str {
+        match self {
+            RoutePolicy::RoundRobin => "rr",
+            RoutePolicy::Jsq => "jsq",
+        }
+    }
+
+    /// Parse a CLI spelling (`rr` / `round-robin` / `jsq`).
+    pub fn parse(s: &str) -> Option<RoutePolicy> {
+        match s {
+            "rr" | "round-robin" | "roundrobin" => Some(RoutePolicy::RoundRobin),
+            "jsq" | "shortest-queue" => Some(RoutePolicy::Jsq),
+            _ => None,
+        }
+    }
+}
 
 /// What a policy sees when deciding the next engine iteration.
 ///
@@ -53,8 +89,14 @@ pub struct SchedView {
     /// Compiled batch size — the hard slot count of the engine.
     pub max_slots: usize,
     /// Concurrency admitted by the KV-capacity budget (already clamped to
-    /// `max_slots`; see [`KvBudget::concurrency`]).
+    /// `max_slots`; see [`KvBudget::concurrency`]). Drivers running paged
+    /// accounting set this to `max_slots` — the ledger, not a per-slot
+    /// full-context reservation, is their capacity limit.
     pub kv_slots: usize,
+    /// How many head-of-line queued requests the paged KV ledger can
+    /// accept right now ([`KvLedger::admissible`]). Drivers without
+    /// per-token accounting pass `usize::MAX` (no paged constraint).
+    pub kv_admissible: usize,
     /// Whether the executor can admit new sequences while others are
     /// mid-generation (the event simulator can; the whole-batch AOT engine
     /// cannot).
@@ -96,8 +138,9 @@ pub trait Policy: Send {
 /// Clamp a policy decision to what the view actually permits. This is the
 /// single place the admission invariants live, for every driver:
 ///
-/// * never admit more requests than are queued or than fit the free
-///   (KV-budgeted) slots;
+/// * never admit more requests than are queued, than fit the free
+///   (KV-budgeted) slots, or than the paged KV ledger accepts
+///   (`kv_admissible`);
 /// * never emit an *empty* admission — an all-padding batch would still
 ///   pay a full prefill (the seed served exactly that bug);
 /// * never admit mid-generation on an executor that cannot
@@ -110,7 +153,7 @@ pub trait Policy: Send {
 pub fn sanitize(action: Action, view: &SchedView) -> Action {
     match action {
         Action::Admit(n) => {
-            let n = n.min(view.queued).min(view.free_slots());
+            let n = n.min(view.queued).min(view.free_slots()).min(view.kv_admissible);
             if n > 0 && view.live > 0 && !view.refill_mid_iteration {
                 Action::Decode
             } else if n > 0 {
@@ -145,6 +188,7 @@ mod tests {
             live,
             max_slots: 8,
             kv_slots: 8,
+            kv_admissible: usize::MAX,
             refill_mid_iteration: true,
         }
     }
@@ -179,6 +223,23 @@ mod tests {
         let mut v = view(8, 0);
         v.kv_slots = 3;
         assert_eq!(sanitize(Action::Admit(8), &v), Action::Admit(3));
+    }
+
+    #[test]
+    fn sanitize_respects_paged_ledger() {
+        // The paged ledger can be tighter than both the queue and the
+        // slot count — admission is capped to what it accepts.
+        let mut v = view(8, 0);
+        v.kv_admissible = 2;
+        assert_eq!(sanitize(Action::Admit(8), &v), Action::Admit(2));
+        // ledger full with incumbents live: decode, don't admit
+        v.kv_admissible = 0;
+        v.live = 3;
+        assert_eq!(sanitize(Action::Admit(8), &v), Action::Decode);
+        // ledger full and idle: wait for a release that will never come
+        // from decoding (the driver terminates or waits for arrivals)
+        v.live = 0;
+        assert_eq!(sanitize(Action::Admit(8), &v), Action::Wait(None));
     }
 
     #[test]

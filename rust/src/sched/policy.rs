@@ -65,7 +65,7 @@ impl Policy for ContinuousBatch {
     }
 
     fn decide(&mut self, v: &SchedView) -> Action {
-        let n = v.queued.min(v.free_slots());
+        let n = v.queued.min(v.free_slots()).min(v.kv_admissible);
         if n > 0 && (v.live == 0 || v.refill_mid_iteration) {
             Action::Admit(n)
         } else if v.live > 0 {
@@ -88,6 +88,7 @@ mod tests {
             live,
             max_slots: 4,
             kv_slots: 4,
+            kv_admissible: usize::MAX,
             refill_mid_iteration: true,
         }
     }
@@ -145,6 +146,18 @@ mod tests {
         v.kv_slots = 2;
         assert_eq!(p.decide(&v), Action::Admit(1));
         v.live = 2;
+        assert_eq!(p.decide(&v), Action::Decode);
+    }
+
+    #[test]
+    fn continuous_respects_paged_ledger() {
+        let mut p = ContinuousBatch;
+        // three free slots, three queued, but the ledger only takes one
+        let mut v = view(3, 1, 0.0);
+        v.kv_admissible = 1;
+        assert_eq!(p.decide(&v), Action::Admit(1));
+        // ledger saturated: decode the incumbents instead of admitting
+        v.kv_admissible = 0;
         assert_eq!(p.decide(&v), Action::Decode);
     }
 }
