@@ -1,7 +1,11 @@
 //! Serving-simulator benchmarks: event-sim wall cost per simulated
 //! request, the static vs continuous goodput comparison on one seeded
 //! high-load trace (continuous must win — asserted, not just printed),
-//! and the chunked-prefill / multi-replica paths.
+//! the chunked-prefill / multi-replica paths, and the decode fast-forward
+//! core against the step-by-step reference (bit-identical — asserted —
+//! and the speedup printed).
+
+use std::time::Instant;
 
 use chiplet_cloud::config::{SloSpec, TrafficSpec};
 use chiplet_cloud::perf::events::{simulate_replicated, simulate_trace, IterCost, SimConfig};
@@ -9,12 +13,12 @@ use chiplet_cloud::sched::{ContinuousBatch, KvBudget, RoutePolicy, StaticBatch};
 use chiplet_cloud::util::bench::{black_box, Bench};
 
 fn cfg() -> SimConfig {
-    SimConfig {
-        max_slots: 8,
-        kv: KvBudget::unlimited(),
-        cost: IterCost { prefill_s_per_token: 0.0001, decode_step_s: 0.01, prefill_chunk: 0 },
-        paged_kv: false,
-    }
+    SimConfig::new(
+        8,
+        KvBudget::unlimited(),
+        IterCost { prefill_s_per_token: 0.0001, decode_step_s: 0.01, prefill_chunk: 0 },
+        false,
+    )
 }
 
 /// The paged + chunked serving model over a binding synthetic budget.
@@ -53,6 +57,68 @@ fn main() {
             &slo,
         ))
     });
+
+    // --- Decode fast-forward vs reference stepping --------------------
+    // Long generations at moderate load: most virtual time is uniform
+    // decode, which the fast path jumps between events.
+    let decode_heavy = TrafficSpec::poisson(4.0, 200, 32, 128, 512).with_seed(23);
+    let fast_cfg = cfg();
+    let mut ref_cfg = cfg();
+    ref_cfg.reference_step = true;
+    let fast_stats = b.run("serve_sim/fastforward-200req-decode-heavy", || {
+        black_box(simulate_trace(&fast_cfg, &mut ContinuousBatch, &decode_heavy, &slo))
+    });
+    let ref_stats = b.run("serve_sim/reference-200req-decode-heavy", || {
+        black_box(simulate_trace(&ref_cfg, &mut ContinuousBatch, &decode_heavy, &slo))
+    });
+    let fast = simulate_trace(&fast_cfg, &mut ContinuousBatch, &decode_heavy, &slo);
+    let reference = simulate_trace(&ref_cfg, &mut ContinuousBatch, &decode_heavy, &slo);
+    assert_eq!(fast.completed, reference.completed, "fast-forward diverged: completed");
+    assert_eq!(fast.iterations, reference.iterations, "fast-forward diverged: iterations");
+    assert_eq!(
+        fast.ttft_p99_s.to_bits(),
+        reference.ttft_p99_s.to_bits(),
+        "fast-forward diverged: p99 TTFT"
+    );
+    assert_eq!(
+        fast.tpot_p99_s.to_bits(),
+        reference.tpot_p99_s.to_bits(),
+        "fast-forward diverged: p99 TPOT"
+    );
+    assert_eq!(
+        fast.makespan_s.to_bits(),
+        reference.makespan_s.to_bits(),
+        "fast-forward diverged: makespan"
+    );
+    println!(
+        "fast-forward vs reference (decode-heavy): {:.2}x on p50 wall time (bit-identical reports)",
+        ref_stats.p50_s / fast_stats.p50_s.max(1e-12)
+    );
+
+    // Early abort on a hopeless SLO: the simulation must get strictly
+    // cheaper, not just the report smaller.
+    let hopeless = SloSpec::new(f64::INFINITY, 1e-6);
+    let mut abort_cfg = fast_cfg;
+    abort_cfg.early_abort = true;
+    let t0 = Instant::now();
+    let full = simulate_trace(&fast_cfg, &mut ContinuousBatch, &decode_heavy, &hopeless);
+    let full_s = t0.elapsed().as_secs_f64();
+    let t0 = Instant::now();
+    let aborted = simulate_trace(&abort_cfg, &mut ContinuousBatch, &decode_heavy, &hopeless);
+    let abort_s = t0.elapsed().as_secs_f64();
+    assert!(aborted.aborted_early, "hopeless SLO must abort early");
+    assert!(
+        aborted.iterations < full.iterations,
+        "early abort must cut iterations: {} vs {}",
+        aborted.iterations,
+        full.iterations
+    );
+    println!(
+        "early abort (hopeless SLO): {} of {} iterations simulated ({:.2}x wall)",
+        aborted.iterations,
+        full.iterations,
+        full_s / abort_s.max(1e-12)
+    );
 
     let st = simulate_trace(&cfg(), &mut StaticBatch::new(0.05), &trace, &slo);
     let co = simulate_trace(&cfg(), &mut ContinuousBatch, &trace, &slo);

@@ -143,28 +143,39 @@ pub struct SweepEngine {
     pub prune: bool,
     /// Evaluate Pareto-frontier servers first (wall-clock heuristic only).
     pub pareto_order: bool,
+    /// Fast stage-2 SLO validation: decode fast-forward in the event
+    /// simulator plus early abort of provably-infeasible candidates (see
+    /// [`crate::perf::events`]). The selected design and its confirming
+    /// report are byte-identical either way — a passing validation never
+    /// aborts and fast-forward replays the reference stepping to the bit —
+    /// so this knob only exists for the regression tests and benches that
+    /// time the reference path.
+    pub fast_sim: bool,
 }
 
 impl Default for SweepEngine {
     /// The production configuration; `CC_SWEEP_PRUNE=0` / `CC_SWEEP_PARETO=0`
-    /// environment knobs disable the respective stage (the `ccloud --seq`
-    /// flag sets all three knobs back to the seed's sequential behaviour).
+    /// / `CC_SWEEP_FASTSIM=0` environment knobs disable the respective
+    /// stage (the `ccloud --seq` flag sets every knob back to the seed's
+    /// sequential behaviour).
     fn default() -> Self {
         let on = |var: &str| std::env::var(var).map(|v| v != "0").unwrap_or(true);
         SweepEngine {
             threads: 0,
             prune: on("CC_SWEEP_PRUNE"),
             pareto_order: on("CC_SWEEP_PARETO"),
+            fast_sim: on("CC_SWEEP_FASTSIM"),
         }
     }
 }
 
 impl SweepEngine {
     /// The seed's exhaustive single-threaded path: no parallelism, no
-    /// pruning, no reordering. The reference for regression tests and the
-    /// baseline of `bench_sweep_engine`.
+    /// pruning, no reordering, reference-stepped stage-2 validation. The
+    /// reference for regression tests and the baseline of
+    /// `bench_sweep_engine`.
     pub fn sequential() -> SweepEngine {
-        SweepEngine { threads: 1, prune: false, pareto_order: false }
+        SweepEngine { threads: 1, prune: false, pareto_order: false, fast_sim: false }
     }
 
     fn order(&self, servers: &[ServerDesign]) -> Vec<usize> {
@@ -333,8 +344,14 @@ pub struct SloSelection {
     /// Servers whose constrained mapping search passed the steady-state
     /// bound (stage-1 survivors).
     pub bound_feasible: usize,
-    /// Event-sim validations run before a design passed (stage-2 cost).
+    /// Event-sim validations run (stage-2 cost). The speculative parallel
+    /// scan validates candidates in waves, so this can exceed the winner's
+    /// rank in the ascending-TCO order — it counts simulations actually
+    /// paid for, including speculative ones.
     pub validated: usize,
+    /// Validations the simulator aborted early as provably SLO-infeasible
+    /// (a subset of `validated`; 0 when `fast_sim` is off).
+    pub aborted_early: usize,
 }
 
 /// Optimistic (admissible) steady-state TTFT bound for one request of
@@ -370,6 +387,18 @@ impl SweepEngine {
     ///    tails meet the SLO wins. Queueing and partial batches can push
     ///    a bound-feasible design over its targets, which is exactly what
     ///    the steady-state sweep alone cannot see.
+    ///
+    /// Stage 2 is **speculatively parallel**: candidates are simulated in
+    /// waves through [`crate::util::parallel`] — sized 1, 2, 4, … up to
+    /// `threads` — and the results committed in ascending-TCO order, so
+    /// the *first* feasible candidate returned is byte-identical to a
+    /// sequential scan; waves only trade wasted speculative simulations
+    /// for wall-clock, and the geometric ramp bounds that waste near 2x
+    /// the winner's rank. The first wave is a single candidate: with a
+    /// loose SLO the cheapest design passes immediately and nothing
+    /// speculative is paid. Each validation runs with decode fast-forward
+    /// and early abort when [`SweepEngine::fast_sim`] is on (the default)
+    /// — both are answer-preserving, see [`crate::perf::events`].
     ///
     /// With `spec.paged_kv` the validation admits by each request's
     /// *actual* footprint instead of a full-context reservation, so a
@@ -408,13 +437,53 @@ impl SweepEngine {
                 .then(a.0.cmp(&b.0))
                 .then(a.1.cmp(&b.1))
         });
-        let mut validated = 0;
-        for (_, _, point) in pts {
-            let report = validate_design_slo(&point, w, spec);
-            validated += 1;
-            if report.meets(slo) {
-                return Some(SloSelection { point, report, bound_feasible, validated });
+        // Speculative parallel scan: waves of candidates, results committed
+        // in input (ascending-TCO) order. Wave sizes ramp geometrically
+        // 1, 2, 4, … up to `threads`, so the common loose-SLO case
+        // (cheapest candidate passes) pays exactly one simulation like the
+        // sequential scan, and an early-rank winner wastes at most ~2x its
+        // rank in speculative simulations rather than a full thread-width
+        // wave.
+        let threads = parallel::resolve(self.threads).max(1);
+        let mut validated = 0usize;
+        let mut aborted_early = 0usize;
+        let mut start = 0usize;
+        let mut wave = 1usize;
+        while start < pts.len() {
+            let n = wave.min(pts.len() - start);
+            let batch = &pts[start..start + n];
+            let reports = parallel::par_map(batch, self.threads, |(_, _, point)| {
+                let mut cfg = slo_sim_config(point, w, spec);
+                cfg.reference_step = !self.fast_sim;
+                cfg.early_abort = self.fast_sim;
+                simulate_replicated(
+                    &cfg,
+                    spec.replicas,
+                    spec.route,
+                    &ContinuousBatch,
+                    &spec.traffic,
+                    slo,
+                )
+            });
+            // The whole wave was simulated before any result commits, so
+            // the cost counters cover every member — including speculative
+            // ones past the winner.
+            validated += reports.len();
+            aborted_early += reports.iter().filter(|r| r.aborted_early).count();
+            for (offset, report) in reports.into_iter().enumerate() {
+                if report.meets(slo) {
+                    let point = pts[start + offset].2.clone();
+                    return Some(SloSelection {
+                        point,
+                        report,
+                        bound_feasible,
+                        validated,
+                        aborted_early,
+                    });
+                }
             }
+            start += n;
+            wave = (wave * 2).min(threads);
         }
         None
     }
@@ -454,6 +523,20 @@ impl SweepEngine {
 /// the candidate list stays bounded on the full space.
 const SLO_MAPPINGS_PER_SERVER: usize = 4;
 
+/// A kept stage-1 candidate before it is materialized into a
+/// [`DesignPoint`]: everything but the `ServerDesign`, which is shared by
+/// every candidate of the server and cloned only for the final keeps —
+/// the insertion-sorted keep list churns (insert + truncate) on every
+/// better candidate, and cloning the server into each churned entry was
+/// pure allocation waste.
+struct SloCandidate {
+    mapping: Mapping,
+    n_servers: usize,
+    perf: DecodePerf,
+    tco: crate::cost::tco::Tco,
+    tco_per_token: f64,
+}
+
 /// One server's cheapest [`SLO_MAPPINGS_PER_SERVER`] mappings subject to
 /// the steady-state SLO bounds, ascending TCO/Token (candidate-enumeration
 /// order on exact ties, matching the unconstrained search's first-minimum
@@ -468,7 +551,7 @@ pub(crate) fn evaluate_server_slo(
     let tcom = TcoModel { server: space.server.clone(), dc: space.dc.clone() };
     let cps = server.chips().max(1);
     let mut cache = KernelCache::default();
-    let mut kept: Vec<DesignPoint> = Vec::new();
+    let mut kept: Vec<SloCandidate> = Vec::new();
     for mapping in candidate_mappings(server, w) {
         let Some(perf) = simulate_cached(server, w, &mapping, &mut cache) else { continue };
         if perf.token_period > slo.tpot_p99_s
@@ -492,13 +575,33 @@ pub(crate) fn evaluate_server_slo(
             .iter()
             .position(|p| tco_per_token < p.tco_per_token)
             .unwrap_or(kept.len());
-        kept.insert(
-            pos,
-            DesignPoint { server: server.clone(), mapping, n_servers, perf, tco, tco_per_token },
-        );
+        kept.insert(pos, SloCandidate { mapping, n_servers, perf, tco, tco_per_token });
         kept.truncate(SLO_MAPPINGS_PER_SERVER);
     }
-    kept
+    kept.into_iter()
+        .map(|c| DesignPoint {
+            server: server.clone(),
+            mapping: c.mapping,
+            n_servers: c.n_servers,
+            perf: c.perf,
+            tco: c.tco,
+            tco_per_token: c.tco_per_token,
+        })
+        .collect()
+}
+
+/// The event-simulator configuration [`validate_design_slo`] runs a design
+/// point under: the design's own analytic iteration costs and KV budget
+/// plus the spec's serving-model knobs. Public so benches and tests can
+/// flip the execution knobs (`reference_step`, `early_abort`) on exactly
+/// the configuration the sweep uses.
+pub fn slo_sim_config(point: &DesignPoint, w: &Workload, spec: &ServeSpec) -> SimConfig {
+    SimConfig::new(
+        w.batch.max(1),
+        KvBudget::from_design(&point.server, w, &point.mapping),
+        IterCost::from_perf(&point.perf, w).with_chunk(spec.prefill_chunk),
+        spec.paged_kv,
+    )
 }
 
 /// Event-sim validation of one design point: continuous batching over the
@@ -508,13 +611,13 @@ pub(crate) fn evaluate_server_slo(
 /// of this design behind the spec's routing policy (the traffic then
 /// spreads across them, so the per-token cost of the *design* is
 /// unchanged; only queueing changes).
+///
+/// Always a *complete* simulation (decode fast-forward on, early abort
+/// off): the report is full-fidelity and suitable for display. The sweep's
+/// internal stage-2 scan additionally enables early abort — see
+/// [`SweepEngine::best_point_slo`].
 pub fn validate_design_slo(point: &DesignPoint, w: &Workload, spec: &ServeSpec) -> ServeReport {
-    let cfg = SimConfig {
-        max_slots: w.batch.max(1),
-        kv: KvBudget::from_design(&point.server, w, &point.mapping),
-        cost: IterCost::from_perf(&point.perf, w).with_chunk(spec.prefill_chunk),
-        paged_kv: spec.paged_kv,
-    };
+    let cfg = slo_sim_config(point, w, spec);
     simulate_replicated(&cfg, spec.replicas, spec.route, &ContinuousBatch, &spec.traffic, &spec.slo)
 }
 
@@ -584,9 +687,9 @@ mod tests {
         let w = Workload::new(ModelSpec::megatron(), 1024, 64);
         let seq = SweepEngine::sequential().best_point(&space, &servers, &w).expect("feasible");
         for engine in [
-            SweepEngine { threads: 0, prune: false, pareto_order: false },
-            SweepEngine { threads: 0, prune: true, pareto_order: false },
-            SweepEngine { threads: 0, prune: true, pareto_order: true },
+            SweepEngine { threads: 0, prune: false, pareto_order: false, fast_sim: true },
+            SweepEngine { threads: 0, prune: true, pareto_order: false, fast_sim: true },
+            SweepEngine { threads: 0, prune: true, pareto_order: true, fast_sim: true },
         ] {
             let got = engine.best_point(&space, &servers, &w).expect("feasible");
             assert_eq!(got.mapping, seq.mapping);
@@ -600,7 +703,7 @@ mod tests {
     fn pruning_actually_prunes() {
         let (space, servers) = setup();
         let w = Workload::new(ModelSpec::gpt3(), 2048, 256);
-        let engine = SweepEngine { threads: 0, prune: true, pareto_order: true };
+        let engine = SweepEngine { threads: 0, prune: true, pareto_order: true, fast_sim: true };
         let (_, stats) = engine.best_point_stats(&space, &servers, &w);
         assert!(
             stats.mappings_pruned + stats.servers_pruned > 0,
@@ -676,6 +779,52 @@ mod tests {
                 sel.point.server != best.server || sel.point.mapping != best.mapping,
                 "SLO-violating unconstrained optimum cannot be re-selected"
             );
+        }
+    }
+
+    /// Fast stage 2 (fast-forward + early abort + speculative parallel
+    /// waves) against the sequential reference scan on a binding SLO under
+    /// real queueing: same design to the bit, and the winner's confirming
+    /// report identical too (a passing validation never aborts and
+    /// fast-forward replays the reference stepping exactly).
+    #[test]
+    fn fast_stage2_matches_sequential_reference_scan() {
+        let (space, servers) = setup();
+        let w = Workload::new(ModelSpec::megatron(), 1024, 64);
+        let fastest = SweepEngine::sequential()
+            .sweep(&space, &servers, &w)
+            .iter()
+            .map(|p| p.perf.token_period)
+            .fold(f64::INFINITY, f64::min);
+        assert!(fastest.is_finite());
+        // A mid-band TPOT target over a queueing trace: cheap candidates
+        // fail validation (exercising abort + speculation), some design
+        // passes.
+        let slo = SloSpec::new(f64::INFINITY, fastest * 4.0);
+        let spec = ServeSpec::new(TrafficSpec::closed_loop(8, 0.0, 60, 16, 8, 32), slo);
+        let reference = SweepEngine::sequential().best_point_slo(&space, &servers, &w, &spec);
+        let fast = SweepEngine { threads: 0, prune: true, pareto_order: true, fast_sim: true }
+            .best_point_slo(&space, &servers, &w, &spec);
+        match (reference, fast) {
+            (Some(r), Some(f)) => {
+                assert_eq!(f.point.mapping, r.point.mapping);
+                assert_eq!(f.point.server, r.point.server);
+                assert_eq!(f.point.n_servers, r.point.n_servers);
+                assert_eq!(f.point.tco_per_token.to_bits(), r.point.tco_per_token.to_bits());
+                assert!(f.report.meets(&slo) && r.report.meets(&slo));
+                assert!(!f.report.aborted_early);
+                assert_eq!(f.report.completed, r.report.completed);
+                assert_eq!(f.report.iterations, r.report.iterations);
+                assert_eq!(f.report.ttft_p99_s.to_bits(), r.report.ttft_p99_s.to_bits());
+                assert_eq!(f.report.tpot_p99_s.to_bits(), r.report.tpot_p99_s.to_bits());
+                assert_eq!(f.report.makespan_s.to_bits(), r.report.makespan_s.to_bits());
+            }
+            (None, None) => {} // both infeasible is also agreement
+            (r, f) => panic!(
+                "engines disagree on feasibility: reference {:?} vs fast {:?}",
+                r.is_some(),
+                f.is_some()
+            ),
         }
     }
 

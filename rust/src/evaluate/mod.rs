@@ -12,7 +12,9 @@ pub mod multi_model;
 pub mod sensitivity;
 pub mod sparsity;
 
-pub use engine::{validate_design_slo, SloSelection, SweepEngine, SweepStats, WorkloadBounds};
+pub use engine::{
+    slo_sim_config, validate_design_slo, SloSelection, SweepEngine, SweepStats, WorkloadBounds,
+};
 
 use crate::arch::ServerDesign;
 use crate::config::hardware::ExploreSpace;

@@ -13,9 +13,11 @@
 //!
 //! `--full` switches from the coarse sweep (default, seconds) to the
 //! paper-scale sweep (Table-1 ranges). `--out results` writes each table as
-//! CSV. `--threads N` pins the sweep-engine worker count; `--seq` forces
-//! the sequential exhaustive path (no parallelism, no pruning, no Pareto
-//! ordering — the reference behaviour).
+//! CSV. `--threads N` pins the sweep-engine worker count (phase 1, phase 2
+//! *and* the speculative stage-2 SLO validation waves); `--seq` forces the
+//! sequential exhaustive path (no parallelism, no pruning, no Pareto
+//! ordering, reference-stepped event simulation without early abort — the
+//! reference behaviour fast runs are held byte-identical to).
 
 use std::path::PathBuf;
 use std::time::Duration;
@@ -53,6 +55,8 @@ fn main() -> Result<()> {
         std::env::set_var("CC_SWEEP_THREADS", "1");
         std::env::set_var("CC_SWEEP_PRUNE", "0");
         std::env::set_var("CC_SWEEP_PARETO", "0");
+        // Stage-2 SLO validation too: reference stepping, no early abort.
+        std::env::set_var("CC_SWEEP_FASTSIM", "0");
     }
 
     match cmd.as_str() {

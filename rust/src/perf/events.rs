@@ -38,8 +38,42 @@
 //! [`simulate_replicated`] runs N independent replicas of the same design
 //! behind a [`RoutePolicy`] (round-robin or join-shortest-queue) so the
 //! simulator can answer fleet-level questions, not just single-server ones.
+//!
+//! ## Simulator throughput: decode fast-forward and early abort
+//!
+//! The SLO-constrained sweep ([`crate::evaluate::SweepEngine::best_point_slo`])
+//! runs one full trace per stage-2 candidate, so simulator wall-clock
+//! bounds how much of the design space can actually be validated. Two
+//! accelerations, neither of which changes any report a caller keeps:
+//!
+//! * **Decode fast-forward** (default): between scheduling events — the
+//!   next arrival, the next slot completion, the horizon — a decode-only
+//!   batch is *uniform*: every iteration decodes the same slots at the
+//!   same cost and the policy's decision cannot change
+//!   ([`crate::sched::Policy::decode_stable`]). The simulator advances
+//!   those stretches in bulk: the clock and busy-time accumulators replay
+//!   the reference path's exact per-iteration additions (three float adds
+//!   per skipped iteration, so the result is **bit-identical** — a closed
+//!   form `now + k·step` would round differently), while slot token
+//!   counts and the paged residency ledger jump in O(live slots) per
+//!   stretch instead of per iteration. All per-iteration policy calls,
+//!   queue scans and slot walks disappear. [`SimConfig::reference_step`]
+//!   forces the step-by-step reference path, which the property tests
+//!   hold the fast path bit-identical against.
+//! * **Early abort** ([`SimConfig::early_abort`], off by default): the
+//!   simulator counts completed requests whose TTFT/TPOT exceed the SLO
+//!   targets; once the count reaches the quantile violation budget
+//!   ([`crate::util::stats::quantile_violation_budget`] at the offered
+//!   request count) the final p99 provably exceeds the target no matter
+//!   how the rest of the trace fares, and the run stops with
+//!   [`ServeReport::aborted_early`] set (a paged-KV rejection aborts
+//!   immediately — the completed-all requirement of [`ServeReport::meets`]
+//!   is already unmeetable). A run that *passes* its SLO never crosses the
+//!   budget, so a passing report is bit-identical with or without the
+//!   flag; only provably-failing runs return early.
 
-use std::collections::VecDeque;
+use std::cmp::Reverse;
+use std::collections::{BinaryHeap, VecDeque};
 
 use crate::config::workload::{ArrivalProcess, SloSpec, TrafficSpec};
 use crate::config::Workload;
@@ -169,6 +203,27 @@ pub struct SimConfig {
     /// `kv.capacity_tokens`) instead of the legacy full-context-per-slot
     /// reservation (`kv.max_seqs`).
     pub paged_kv: bool,
+    /// Step every iteration through the full per-iteration path instead of
+    /// fast-forwarding uniform decode stretches. The reference behaviour
+    /// for regression tests and the fast-forward benchmarks; results are
+    /// bit-identical either way (asserted by the property suite), so
+    /// leave this off outside of testing.
+    pub reference_step: bool,
+    /// Stop simulating as soon as the SLO outcome is provably negative
+    /// (see the module docs). The returned report carries
+    /// [`ServeReport::aborted_early`] and fails [`ServeReport::meets`];
+    /// its tails describe a *partial* run, so enable this only where the
+    /// report is consumed as a feasibility verdict (stage-2 sweep
+    /// validation), not where it is shown to a reader.
+    pub early_abort: bool,
+}
+
+impl SimConfig {
+    /// Config with the default execution knobs: fast-forward on
+    /// (`reference_step: false`), early abort off.
+    pub fn new(max_slots: usize, kv: KvBudget, cost: IterCost, paged_kv: bool) -> SimConfig {
+        SimConfig { max_slots, kv, cost, paged_kv, reference_step: false, early_abort: false }
+    }
 }
 
 /// Per-request outcome record.
@@ -259,9 +314,18 @@ pub struct ServeReport {
     /// capacity outright (they count against `offered` but never
     /// complete, so [`ServeReport::meets`] stays conservative).
     pub rejected: usize,
+    /// The run stopped before serving the whole trace because the SLO
+    /// outcome was already provably negative ([`SimConfig::early_abort`]).
+    /// Tails then describe the partial run; `meets` is necessarily false.
+    pub aborted_early: bool,
     /// Per-request records, sorted by request id.
     pub per_request: Vec<ReqStats>,
 }
+
+/// A [`ServeReport`] flattened to bit-exact integers: every aggregate
+/// field (floats by `to_bits`) plus every per-request record. See
+/// [`ServeReport::fingerprint`].
+pub type ReportFingerprint = (Vec<u64>, Vec<(u64, [u64; 3], usize)>);
 
 impl ServeReport {
     /// Does the simulated run meet the SLO? Requires every offered request
@@ -273,6 +337,49 @@ impl ServeReport {
         self.completed == self.offered
             && self.ttft_p99_s <= slo.ttft_p99_s
             && self.tpot_p99_s <= slo.tpot_p99_s
+    }
+
+    /// Everything a bit-identity assertion between two runs must compare,
+    /// as exact integers: two reports fingerprint equal iff every count,
+    /// every float (to the bit) and every per-request record match. The
+    /// single shared definition the fast-forward/reference property tests
+    /// and benches assert on — one place to extend when a field is added,
+    /// so no suite's assertion can silently fall behind. The `policy`
+    /// label is deliberately excluded (compared runs share it by
+    /// construction).
+    pub fn fingerprint(&self) -> ReportFingerprint {
+        let agg = vec![
+            self.replicas as u64,
+            self.offered as u64,
+            self.completed as u64,
+            self.tokens as u64,
+            self.makespan_s.to_bits(),
+            self.tokens_per_s.to_bits(),
+            self.goodput_tokens_per_s.to_bits(),
+            self.slo_met_frac.to_bits(),
+            self.ttft_p50_s.to_bits(),
+            self.ttft_p99_s.to_bits(),
+            self.tpot_p50_s.to_bits(),
+            self.tpot_p99_s.to_bits(),
+            self.total_p50_s.to_bits(),
+            self.total_p99_s.to_bits(),
+            self.occupancy.to_bits(),
+            self.iterations,
+            self.peak_live as u64,
+            self.peak_kv_tokens as u64,
+            self.rejected as u64,
+            u64::from(self.aborted_early),
+        ];
+        let per = self
+            .per_request
+            .iter()
+            .map(|q| {
+                let times =
+                    [q.arrival_s.to_bits(), q.first_token_s.to_bits(), q.finish_s.to_bits()];
+                (q.id, times, q.tokens)
+            })
+            .collect();
+        (agg, per)
     }
 }
 
@@ -312,6 +419,34 @@ impl ClosedLoop {
     }
 }
 
+/// The early-abort rule of one run: latency targets plus the violation
+/// budget at the offered request count (see
+/// [`crate::util::stats::quantile_violation_budget`] for why the budget at
+/// the *offered* count is sound for every possible completion count).
+#[derive(Clone, Copy, Debug)]
+struct AbortRule {
+    /// p99 TTFT target, s.
+    ttft_s: f64,
+    /// p99 TPOT target, s.
+    tpot_s: f64,
+    /// Violators of either target that prove the final p99 over it.
+    budget: usize,
+}
+
+impl AbortRule {
+    /// The rule for a run, if early abort is on and a target binds.
+    fn new(cfg: &SimConfig, offered: usize, slo: &SloSpec) -> Option<AbortRule> {
+        if !cfg.early_abort || slo.is_unconstrained() {
+            return None;
+        }
+        Some(AbortRule {
+            ttft_s: slo.ttft_p99_s,
+            tpot_s: slo.tpot_p99_s,
+            budget: stats::quantile_violation_budget(offered, 99.0).max(1),
+        })
+    }
+}
+
 /// One engine replica's full simulation state: queue, slots, paged ledger
 /// and virtual clock. [`simulate_trace`] drives a single replica to
 /// completion; [`simulate_replicated`] interleaves several in global time
@@ -332,6 +467,25 @@ struct Replica {
     next_id: u64,
     queue: VecDeque<(Arrival, Option<usize>)>,
     slots: Vec<Option<Slot>>,
+    /// Free slot indices as a min-heap, so admission fills the lowest free
+    /// index in O(log slots) — the same order the reference
+    /// `position(is_none)` scan picked, which per-iteration ledger
+    /// interleaving (and thus `peak_kv_tokens`) depends on.
+    free_list: BinaryHeap<Reverse<usize>>,
+    /// Occupied slots, maintained incrementally (the per-iteration
+    /// `filter(is_some).count()` scan this replaces was O(slots) on the
+    /// hottest path).
+    live_count: usize,
+    /// Live slots still mid-prefill; decode fast-forward requires 0.
+    prefilling: usize,
+    /// Early-abort rule, when validation wants provably-failing runs cut.
+    abort: Option<AbortRule>,
+    /// Completed requests whose TTFT exceeded the abort rule's target.
+    ttft_violations: usize,
+    /// Completed multi-token requests whose TPOT exceeded the target.
+    tpot_violations: usize,
+    /// Set once the run is provably SLO-infeasible; the drive loop exits.
+    aborted: bool,
     done: Vec<ReqStats>,
     now: f64,
     first_arrival: Option<f64>,
@@ -351,6 +505,7 @@ impl Replica {
         pending: VecDeque<Arrival>,
         closed: Option<ClosedLoop>,
         id_base: u64,
+        abort: Option<AbortRule>,
     ) -> Replica {
         Replica {
             cfg: *cfg,
@@ -367,6 +522,13 @@ impl Replica {
             next_id: id_base,
             queue: VecDeque::new(),
             slots: vec![None; cfg.max_slots],
+            free_list: (0..cfg.max_slots).map(Reverse).collect(),
+            live_count: 0,
+            prefilling: 0,
+            abort,
+            ttft_violations: 0,
+            tpot_violations: 0,
+            aborted: false,
             done: Vec::new(),
             now: 0.0,
             first_arrival: None,
@@ -387,7 +549,7 @@ impl Replica {
     }
 
     fn occupied(&self) -> usize {
-        self.slots.iter().filter(|s| s.is_some()).count()
+        self.live_count
     }
 
     /// Queued + resident requests — the join-shortest-queue load signal.
@@ -457,22 +619,46 @@ impl Replica {
             }
             self.queue.pop_front();
             self.rejected += 1;
+            if self.abort.is_some() {
+                // A rejected request can never complete, so
+                // `completed == offered` — and hence `meets` — is already
+                // lost; stop paying for the rest of the trace.
+                self.aborted = true;
+            }
             if let (Some(cl), Some(c)) = (self.closed.as_mut(), c) {
                 cl.ready[c] = self.now + cl.think_s;
             }
         }
     }
 
-    /// Record a completed request; a closed-loop client starts thinking.
-    fn finish(&mut self, slot: Slot) {
-        self.done.push(ReqStats {
+    /// Record a completed request out of slot `idx`; a closed-loop client
+    /// starts thinking, the slot returns to the free list, and the
+    /// early-abort violation counters advance.
+    fn finish(&mut self, idx: usize, slot: Slot) {
+        let stats = ReqStats {
             id: slot.id,
             arrival_s: slot.arrival_s,
             first_token_s: slot.first_token_s,
             finish_s: self.now,
             tokens: slot.tokens,
-        });
+        };
+        if let Some(a) = self.abort {
+            // Strictly-above mirrors the percentile proof: p99 > target
+            // needs values > target, and `ReqStats::meets` uses `<=`.
+            if stats.ttft_s() > a.ttft_s {
+                self.ttft_violations += 1;
+            }
+            if stats.tokens > 1 && stats.tpot_s() > a.tpot_s {
+                self.tpot_violations += 1;
+            }
+            if self.ttft_violations >= a.budget || self.tpot_violations >= a.budget {
+                self.aborted = true;
+            }
+        }
+        self.done.push(stats);
         self.last_finish = self.last_finish.max(self.now);
+        self.free_list.push(Reverse(idx));
+        self.live_count -= 1;
         if let Some(l) = self.ledger.as_mut() {
             l.release(slot.id);
         }
@@ -499,7 +685,10 @@ impl Replica {
                 let ok = l.admit(a.id, a.prompt_tokens, a.prompt_tokens + a.new_tokens);
                 debug_assert!(ok, "sanitize admitted past the paged KV capacity");
             }
-            let free = self.slots.iter().position(|s| s.is_none()).expect("free slot");
+            // Lowest free index, as the reference `position(is_none)` scan
+            // picked — slot order decides per-iteration processing order.
+            let Reverse(free) = self.free_list.pop().expect("free slot");
+            debug_assert!(self.slots[free].is_none(), "free list desynced");
             self.slots[free] = Some(Slot {
                 id: a.id,
                 arrival_s: a.at_s,
@@ -509,8 +698,13 @@ impl Replica {
                 prefill_remaining: a.prompt_tokens,
                 client: c,
             });
+            self.live_count += 1;
+            if a.prompt_tokens > 0 {
+                self.prefilling += 1;
+            }
         }
         // One prefill chunk per prefilling slot (admitted or resident).
+        let mut prefills_done = 0usize;
         for s in self.slots.iter_mut().flatten() {
             if s.prefill_remaining > 0 {
                 let step = if self.cfg.cost.prefill_chunk == 0 {
@@ -520,8 +714,12 @@ impl Replica {
                 };
                 t += step as f64 * self.cfg.cost.prefill_s_per_token;
                 s.prefill_remaining -= step;
+                if s.prefill_remaining == 0 {
+                    prefills_done += 1;
+                }
             }
         }
+        self.prefilling -= prefills_done;
         let occ = self.occupied();
         self.now += t;
         self.iterations += 1;
@@ -539,7 +737,7 @@ impl Replica {
             }
             if finished {
                 let slot = self.slots[i].take().expect("finished slot");
-                self.finish(slot);
+                self.finish(i, slot);
             }
         }
         // Prefill completions: the first token emerges with the last chunk.
@@ -555,7 +753,7 @@ impl Replica {
                 }
                 if finished {
                     let slot = self.slots[i].take().expect("finished slot");
-                    self.finish(slot);
+                    self.finish(i, slot);
                 }
             }
         }
@@ -564,14 +762,89 @@ impl Replica {
         }
     }
 
+    /// Bulk-advance a uniform decode stretch: as many pure decode
+    /// iterations (no admissions, no prefill work, no completions) as
+    /// provably precede the next scheduling event — the earliest slot
+    /// completion, the next self-generated arrival, or the horizon. The
+    /// caller sits at a validated `Decode` decision point with no
+    /// prefilling slots and a [`Policy::decode_stable`] policy, so every
+    /// iteration in the stretch is identical and the policy need not be
+    /// consulted again until the event.
+    ///
+    /// Returns the number of iterations advanced (0 = nothing uniform to
+    /// skip; the caller runs the normal per-iteration path). The
+    /// completion iteration itself — and any iteration where an arrival or
+    /// the horizon may change the decision — is deliberately left to
+    /// [`Replica::run_iteration`], which is the single place completions,
+    /// admissions and ledger releases interleave.
+    ///
+    /// Bit-exactness: the clock and the busy-time accumulators replay the
+    /// reference path's per-iteration float additions (`now += step`, one
+    /// at a time) — a closed-form `now + k·step` would round differently.
+    /// The iteration *count* to the next event bounds the loop in closed
+    /// form; everything else (slot token counts, the paged residency
+    /// ledger, peaks) is caught up in O(live) after the loop, which is
+    /// exact because residency grows monotonically across the stretch.
+    fn fast_forward(&mut self, horizon: f64) -> usize {
+        // Stop one short of the earliest completion: that iteration
+        // releases slots/ledger blocks and must run through the full path.
+        let max_k = match self.slots.iter().flatten().map(|s| s.remaining).min() {
+            Some(r) if r > 1 => r - 1,
+            _ => return 0,
+        };
+        let step = self.cfg.cost.decode_step_s;
+        if !step.is_finite() || step <= 0.0 {
+            // Degenerate costs (pinned-to-INFINITY guards, zero periods)
+            // keep the reference path's exact termination behaviour.
+            return 0;
+        }
+        let next_arrival = self.next_internal_arrival().unwrap_or(f64::INFINITY);
+        let occ_step = self.live_count as f64 * step;
+        let mut k = 0usize;
+        loop {
+            // The first iteration's guards (now < horizon, no arrival due)
+            // were just checked by the caller's decision point; each
+            // further iteration re-checks them on the advanced clock,
+            // exactly as the reference loop's decision points would.
+            self.now += step;
+            self.busy_time += step;
+            self.busy_slot_time += occ_step;
+            k += 1;
+            if k >= max_k || self.now >= horizon || next_arrival <= self.now {
+                break;
+            }
+        }
+        self.iterations += k as u64;
+        self.peak_live = self.peak_live.max(self.live_count);
+        for s in self.slots.iter_mut().flatten() {
+            s.tokens += k;
+            s.remaining -= k;
+            if let Some(l) = self.ledger.as_mut() {
+                l.append_n(s.id, k);
+            }
+        }
+        if let Some(l) = &self.ledger {
+            self.peak_kv_tokens = self.peak_kv_tokens.max(l.peak_resident_tokens());
+        }
+        k
+    }
+
     /// Drive this replica's policy loop, running every iteration that
     /// starts strictly before `horizon` (`INFINITY` = drain to
     /// completion). Returns when blocked on arrivals the replica does not
-    /// generate itself (the replicated router's cue to feed it more).
+    /// generate itself (the replicated router's cue to feed it more), or
+    /// as soon as the run is provably SLO-infeasible under an early-abort
+    /// rule.
     fn advance(&mut self, policy: &mut dyn Policy, horizon: f64) {
         loop {
+            if self.aborted {
+                return;
+            }
             self.materialize();
             self.reject_unservable();
+            if self.aborted {
+                return;
+            }
             let live = self.occupied();
             if live == 0 && self.queue.is_empty() {
                 // Idle: jump to the next self-generated arrival, if any.
@@ -608,7 +881,21 @@ impl Replica {
             };
             match sanitize(policy.decide(&view), &view) {
                 Action::Admit(n) => self.run_iteration(n),
-                Action::Decode => self.run_iteration(0),
+                Action::Decode => {
+                    // A decode decision with nothing mid-prefill opens a
+                    // uniform stretch: fast-forward to the next event and
+                    // re-decide there (the event may admit, complete, or
+                    // end the horizon), unless the reference stepping was
+                    // requested or the policy gives no stability contract.
+                    if !self.cfg.reference_step
+                        && self.prefilling == 0
+                        && policy.decode_stable()
+                        && self.fast_forward(horizon) > 0
+                    {
+                        continue;
+                    }
+                    self.run_iteration(0)
+                }
                 Action::Wait(deadline) => {
                     // live == 0 here: sanitize coerces waits to decodes
                     // whenever sequences are in flight.
@@ -639,8 +926,25 @@ impl Replica {
     }
 }
 
-/// Merge per-replica outcomes into one report.
-fn aggregate(replicas: Vec<Replica>, policy: &str, offered: usize, slo: &SloSpec) -> ServeReport {
+/// Fleet-wide early-abort check: some replica already aborted locally, or
+/// the *summed* violation counters prove the final p99 over the target
+/// even though no single replica's share crosses the budget on its own.
+fn fleet_infeasible(reps: &[Replica], rule: &AbortRule) -> bool {
+    reps.iter().any(|r| r.aborted)
+        || reps.iter().map(|r| r.ttft_violations).sum::<usize>() >= rule.budget
+        || reps.iter().map(|r| r.tpot_violations).sum::<usize>() >= rule.budget
+}
+
+/// Merge per-replica outcomes into one report. `fleet_aborted` marks an
+/// early abort the *router* decided on fleet-wide violation counts (a
+/// replica-local abort is carried by the replica itself).
+fn aggregate(
+    replicas: Vec<Replica>,
+    policy: &str,
+    offered: usize,
+    slo: &SloSpec,
+    fleet_aborted: bool,
+) -> ServeReport {
     let n = replicas.len().max(1);
     let max_slots = replicas.first().map(|r| r.cfg.max_slots).unwrap_or(1);
     let mut done: Vec<ReqStats> = Vec::new();
@@ -650,8 +954,10 @@ fn aggregate(replicas: Vec<Replica>, policy: &str, offered: usize, slo: &SloSpec
     let mut iterations = 0u64;
     let (mut peak_live, mut peak_kv) = (0usize, 0usize);
     let mut rejected = 0usize;
+    let mut aborted_early = fleet_aborted;
     for r in replicas {
         rejected += r.rejected;
+        aborted_early |= r.aborted;
         done.extend(r.done);
         first_arrival = match (first_arrival, r.first_arrival) {
             (Some(a), Some(b)) => Some(a.min(b)),
@@ -665,9 +971,13 @@ fn aggregate(replicas: Vec<Replica>, policy: &str, offered: usize, slo: &SloSpec
         peak_kv = peak_kv.max(r.peak_kv_tokens);
     }
     done.sort_by_key(|r| r.id);
-    let ttfts: Vec<f64> = done.iter().map(|r| r.ttft_s()).collect();
-    let tpots: Vec<f64> = done.iter().filter(|r| r.tokens > 1).map(|r| r.tpot_s()).collect();
-    let totals: Vec<f64> = done.iter().map(|r| r.total_s()).collect();
+    // One sort per metric vector (the batch API), not one per quantile.
+    let mut ttfts: Vec<f64> = done.iter().map(|r| r.ttft_s()).collect();
+    let mut tpots: Vec<f64> = done.iter().filter(|r| r.tokens > 1).map(|r| r.tpot_s()).collect();
+    let mut totals: Vec<f64> = done.iter().map(|r| r.total_s()).collect();
+    let ttft_p = stats::percentiles(&mut ttfts, &[50.0, 99.0]);
+    let tpot_p = stats::percentiles(&mut tpots, &[50.0, 99.0]);
+    let total_p = stats::percentiles(&mut totals, &[50.0, 99.0]);
     let tokens: usize = done.iter().map(|r| r.tokens).sum();
     let good_tokens: usize = done.iter().filter(|r| r.meets(slo)).map(|r| r.tokens).sum();
     let met = done.iter().filter(|r| r.meets(slo)).count();
@@ -682,12 +992,12 @@ fn aggregate(replicas: Vec<Replica>, policy: &str, offered: usize, slo: &SloSpec
         tokens_per_s: if makespan > 0.0 { tokens as f64 / makespan } else { 0.0 },
         goodput_tokens_per_s: if makespan > 0.0 { good_tokens as f64 / makespan } else { 0.0 },
         slo_met_frac: if done.is_empty() { 0.0 } else { met as f64 / done.len() as f64 },
-        ttft_p50_s: stats::percentile(&ttfts, 50.0),
-        ttft_p99_s: stats::percentile(&ttfts, 99.0),
-        tpot_p50_s: stats::percentile(&tpots, 50.0),
-        tpot_p99_s: stats::percentile(&tpots, 99.0),
-        total_p50_s: stats::percentile(&totals, 50.0),
-        total_p99_s: stats::percentile(&totals, 99.0),
+        ttft_p50_s: ttft_p[0],
+        ttft_p99_s: ttft_p[1],
+        tpot_p50_s: tpot_p[0],
+        tpot_p99_s: tpot_p[1],
+        total_p50_s: total_p[0],
+        total_p99_s: total_p[1],
         occupancy: if busy_time > 0.0 {
             busy_slot_time / (busy_time * max_slots as f64)
         } else {
@@ -697,6 +1007,7 @@ fn aggregate(replicas: Vec<Replica>, policy: &str, offered: usize, slo: &SloSpec
         peak_live,
         peak_kv_tokens: peak_kv,
         rejected,
+        aborted_early,
         per_request: done,
     }
 }
@@ -731,10 +1042,11 @@ pub fn simulate_trace(
         }
         _ => None,
     };
-    let mut replica = Replica::new(cfg, traffic, pending, closed, 0);
+    let abort = AbortRule::new(cfg, traffic.requests, slo);
+    let mut replica = Replica::new(cfg, traffic, pending, closed, 0, abort);
     replica.advance(policy, f64::INFINITY);
     let name = policy.name().to_string();
-    aggregate(vec![replica], &name, traffic.requests, slo)
+    aggregate(vec![replica], &name, traffic.requests, slo, false)
 }
 
 /// Simulate `replicas` independent copies of the same design behind a
@@ -763,6 +1075,11 @@ pub fn simulate_replicated<P: Policy + Clone>(
         let mut p = policy.clone();
         return simulate_trace(cfg, &mut p, traffic, slo);
     }
+    // Every replica carries the *fleet-wide* violation budget — its own
+    // violators alone crossing it is sufficient (the fleet total can only
+    // be larger), so replica-local aborts stay sound; the router below
+    // additionally aborts on the fleet total between arrivals.
+    let abort = AbortRule::new(cfg, traffic.requests, slo);
     let mut pols: Vec<P> = (0..n).map(|_| policy.clone()).collect();
     let mut reps: Vec<Replica> = Vec::with_capacity(n);
     let label = |p: &P| format!("{} x{} {}", p.name(), n, route.name());
@@ -783,24 +1100,45 @@ pub fn simulate_replicated<P: Policy + Clone>(
             };
             let closed = closed_loop_state(traffic, clients_r, budget_r);
             let id_base = (r as u64) << 32;
-            reps.push(Replica::new(cfg, traffic, VecDeque::new(), Some(closed), id_base));
+            reps.push(Replica::new(cfg, traffic, VecDeque::new(), Some(closed), id_base, abort));
         }
-        for (rep, pol) in reps.iter_mut().zip(pols.iter_mut()) {
-            rep.advance(pol, f64::INFINITY);
+        // Each replica runs its whole partition in one drain, so check the
+        // fleet counters between drains: once one replica's run (or the
+        // sum so far) proves infeasibility, the remaining partitions need
+        // not be simulated at all.
+        let mut fleet_aborted = false;
+        for i in 0..reps.len() {
+            if let Some(rule) = &abort {
+                if fleet_infeasible(&reps, rule) {
+                    fleet_aborted = true;
+                    break;
+                }
+            }
+            reps[i].advance(&mut pols[i], f64::INFINITY);
         }
         let name = label(policy);
-        return aggregate(reps, &name, traffic.requests, slo);
+        return aggregate(reps, &name, traffic.requests, slo, fleet_aborted);
     }
 
     for _ in 0..n {
-        reps.push(Replica::new(cfg, traffic, VecDeque::new(), None, 0));
+        reps.push(Replica::new(cfg, traffic, VecDeque::new(), None, 0, abort));
     }
     let mut rr_next = 0usize;
+    let mut fleet_aborted = false;
     for a in open_loop_trace(traffic) {
         // Bring the whole fleet up to the arrival instant so the router
         // sees each replica's queue as of `a.at_s`.
         for (rep, pol) in reps.iter_mut().zip(pols.iter_mut()) {
             rep.advance(pol, a.at_s);
+        }
+        if let Some(rule) = &abort {
+            // Fleet-wide early abort: replica-local counters may each sit
+            // under the budget while their sum already proves the final
+            // p99 over the target.
+            if fleet_infeasible(&reps, rule) {
+                fleet_aborted = true;
+                break;
+            }
         }
         let target = match route {
             RoutePolicy::RoundRobin => {
@@ -814,11 +1152,22 @@ pub fn simulate_replicated<P: Policy + Clone>(
         };
         reps[target].enqueue(a);
     }
-    for (rep, pol) in reps.iter_mut().zip(pols.iter_mut()) {
-        rep.advance(pol, f64::INFINITY);
+    if !fleet_aborted {
+        // The decode tails drained here can dwarf the routed portion;
+        // re-check the fleet counters before each replica's drain so a
+        // proof of infeasibility reached mid-drain spares the rest.
+        for i in 0..reps.len() {
+            if let Some(rule) = &abort {
+                if fleet_infeasible(&reps, rule) {
+                    fleet_aborted = true;
+                    break;
+                }
+            }
+            reps[i].advance(&mut pols[i], f64::INFINITY);
+        }
     }
     let name = label(policy);
-    aggregate(reps, &name, traffic.requests, slo)
+    aggregate(reps, &name, traffic.requests, slo, fleet_aborted)
 }
 
 #[cfg(test)]
@@ -831,7 +1180,7 @@ mod tests {
     }
 
     fn cfg(slots: usize) -> SimConfig {
-        SimConfig { max_slots: slots, kv: KvBudget::unlimited(), cost: cost(), paged_kv: false }
+        SimConfig::new(slots, KvBudget::unlimited(), cost(), false)
     }
 
     #[test]
@@ -1076,7 +1425,7 @@ mod tests {
         assert_eq!(c.decode_step_s, f64::INFINITY);
         // The sim must terminate on infinite costs and reject, not hang or
         // trivially pass.
-        let cfg = SimConfig { max_slots: 4, kv: KvBudget::unlimited(), cost: c, paged_kv: false };
+        let cfg = SimConfig::new(4, KvBudget::unlimited(), c, false);
         let t = TrafficSpec::poisson(100.0, 5, 8, 2, 4);
         let rep = simulate_trace(&cfg, &mut ContinuousBatch, &t, &SloSpec::unconstrained());
         assert!(rep.completed < rep.offered);
@@ -1086,6 +1435,165 @@ mod tests {
         let c = IterCost::from_perf(&healthy, &w);
         assert_eq!(c.prefill_s_per_token, 0.0);
         assert_eq!(c.decode_step_s, 0.01);
+    }
+
+    /// The fast-forward core against the step-by-step reference on a
+    /// decode-heavy trace: same iteration count, same clock, same tails —
+    /// to the bit (the broader property sweep lives in the integration
+    /// suite; this is the quick in-module guard).
+    #[test]
+    fn fast_forward_is_bit_identical_to_reference_step() {
+        // Long generations and sparse arrivals maximize the uniform decode
+        // stretches the fast path jumps.
+        let t = TrafficSpec::poisson(3.0, 60, 32, 64, 256).with_seed(7);
+        let mut reference = cfg(8);
+        reference.reference_step = true;
+        let fast = cfg(8);
+        for policy_static in [false, true] {
+            let run = |c: &SimConfig| {
+                if policy_static {
+                    simulate_trace(c, &mut StaticBatch::new(0.02), &t, &SloSpec::unconstrained())
+                } else {
+                    simulate_trace(c, &mut ContinuousBatch, &t, &SloSpec::unconstrained())
+                }
+            };
+            let a = run(&reference);
+            let b = run(&fast);
+            assert_eq!(a.completed, 60);
+            assert_eq!(a.fingerprint(), b.fingerprint(), "static={policy_static}");
+        }
+    }
+
+    /// Paged accounting through the fast path: residency bulk-advance and
+    /// peak tracking must replay the per-iteration ledger exactly.
+    #[test]
+    fn fast_forward_matches_reference_under_paged_kv() {
+        let t = TrafficSpec::poisson(50.0, 80, 16, 32, 128).with_seed(9);
+        let mut c = cfg(6);
+        c.kv = KvBudget::tokens(1024, 16);
+        c.paged_kv = true;
+        c.cost = c.cost.with_chunk(8);
+        let mut reference = c;
+        reference.reference_step = true;
+        let a = simulate_trace(&reference, &mut ContinuousBatch, &t, &SloSpec::unconstrained());
+        let b = simulate_trace(&c, &mut ContinuousBatch, &t, &SloSpec::unconstrained());
+        assert!(a.peak_kv_tokens > 0);
+        assert_eq!(a.fingerprint(), b.fingerprint());
+    }
+
+    /// Early abort: a provably-failing run stops early (fewer iterations,
+    /// `aborted_early`, `meets` false), a passing run is untouched to the
+    /// bit, and the verdict always matches the full simulation's.
+    #[test]
+    fn early_abort_is_sound_and_cheaper() {
+        let t = TrafficSpec::poisson(30.0, 200, 16, 16, 64).with_seed(3);
+        // Hopeless TPOT target: every multi-token request violates 1 µs.
+        let hopeless = SloSpec::new(f64::INFINITY, 1e-6);
+        let full = simulate_trace(&cfg(4), &mut ContinuousBatch, &t, &hopeless);
+        let mut abort_cfg = cfg(4);
+        abort_cfg.early_abort = true;
+        let aborted = simulate_trace(&abort_cfg, &mut ContinuousBatch, &t, &hopeless);
+        assert!(!full.meets(&hopeless));
+        assert!(!aborted.meets(&hopeless));
+        assert!(aborted.aborted_early);
+        assert!(!full.aborted_early);
+        assert!(
+            aborted.iterations < full.iterations,
+            "abort must cut the trace short: {} vs {}",
+            aborted.iterations,
+            full.iterations
+        );
+        assert!(aborted.completed < aborted.offered);
+        // A comfortably-met SLO: abort never fires and the report is the
+        // full one, bit for bit.
+        let loose = SloSpec::new(1e6, 1e6);
+        let a = simulate_trace(&cfg(4), &mut ContinuousBatch, &t, &loose);
+        let b = simulate_trace(&abort_cfg, &mut ContinuousBatch, &t, &loose);
+        assert!(a.meets(&loose) && b.meets(&loose));
+        assert!(!b.aborted_early);
+        assert_eq!(a.fingerprint(), b.fingerprint());
+    }
+
+    /// Fleet-wide early abort on the replicated open-loop path: with
+    /// round-robin spreading violators evenly, the per-replica counters
+    /// stay under the budget while their *sum* crosses it — the router's
+    /// summed check must abort, and the verdict must match the full run.
+    #[test]
+    fn early_abort_sums_violations_across_replicas() {
+        // 200 offered => budget 3: the fleet aborts at 3 total violators,
+        // when each replica holds at most 2 (< 3) — only the summed check
+        // can fire. Hopeless TPOT target: every multi-token completion
+        // violates.
+        let t = TrafficSpec::poisson(30.0, 200, 16, 16, 64).with_seed(13);
+        let hopeless = SloSpec::new(f64::INFINITY, 1e-6);
+        let run = |early_abort: bool| {
+            let mut c = cfg(4);
+            c.early_abort = early_abort;
+            simulate_replicated(&c, 2, RoutePolicy::RoundRobin, &ContinuousBatch, &t, &hopeless)
+        };
+        let full = run(false);
+        let aborted = run(true);
+        assert!(!full.meets(&hopeless) && !aborted.meets(&hopeless));
+        assert!(aborted.aborted_early, "the fleet-sum check must fire");
+        assert!(!full.aborted_early);
+        assert!(
+            aborted.iterations < full.iterations,
+            "fleet abort must cut simulated work: {} vs {}",
+            aborted.iterations,
+            full.iterations
+        );
+        // A loose target across the same fleet never aborts and replays
+        // the full run bit for bit.
+        let loose = SloSpec::new(1e6, 1e6);
+        let run_loose = |early_abort: bool| {
+            let mut c = cfg(4);
+            c.early_abort = early_abort;
+            simulate_replicated(&c, 2, RoutePolicy::RoundRobin, &ContinuousBatch, &t, &loose)
+        };
+        let a = run_loose(false);
+        let b = run_loose(true);
+        assert!(a.meets(&loose) && b.meets(&loose) && !b.aborted_early);
+        assert_eq!(a.fingerprint(), b.fingerprint());
+    }
+
+    /// Closed-loop replicas drain their whole partition in one advance;
+    /// once one partition's run proves infeasibility, the remaining
+    /// partitions are skipped entirely.
+    #[test]
+    fn early_abort_skips_remaining_closed_loop_partitions() {
+        let t = TrafficSpec::closed_loop(4, 0.0, 120, 16, 16, 64).with_seed(19);
+        let hopeless = SloSpec::new(f64::INFINITY, 1e-6);
+        let run = |early_abort: bool| {
+            let mut c = cfg(4);
+            c.early_abort = early_abort;
+            simulate_replicated(&c, 2, RoutePolicy::RoundRobin, &ContinuousBatch, &t, &hopeless)
+        };
+        let full = run(false);
+        let aborted = run(true);
+        assert!(aborted.aborted_early);
+        assert!(!full.meets(&hopeless) && !aborted.meets(&hopeless));
+        assert!(
+            aborted.iterations * 2 < full.iterations,
+            "skipping a whole partition must save at least half the work: {} vs {}",
+            aborted.iterations,
+            full.iterations
+        );
+    }
+
+    /// A paged-KV rejection under early abort stops the run immediately —
+    /// completed-all is already unmeetable.
+    #[test]
+    fn early_abort_fires_on_rejection() {
+        let mut c = cfg(4);
+        c.kv = KvBudget::tokens(32, 8);
+        c.paged_kv = true;
+        c.early_abort = true;
+        // First request's footprint (40) exceeds the whole capacity (32).
+        let t = TrafficSpec::poisson(1e9, 10, 32, 8, 8);
+        let rep = simulate_trace(&c, &mut ContinuousBatch, &t, &SloSpec::new(1.0, 1.0));
+        assert!(rep.aborted_early);
+        assert!(rep.rejected >= 1);
+        assert!(!rep.meets(&SloSpec::new(1.0, 1.0)));
     }
 
     #[test]

@@ -140,6 +140,25 @@ impl KvLedger {
         self.peak_resident_tokens = self.peak_resident_tokens.max(self.resident_tokens);
     }
 
+    /// `n` consecutive [`KvLedger::append`]s to slot `id` as one O(1)
+    /// update — the event simulator's decode fast-forward advances every
+    /// live slot's residency in bulk between scheduling events. Residency
+    /// only grows here, so taking the high-water mark once at the end is
+    /// identical to updating it after each of the `n` single appends.
+    pub fn append_n(&mut self, id: u64, n: usize) {
+        if n == 0 {
+            return;
+        }
+        let Some(slot) = self.slots.get_mut(&id) else { return };
+        slot.resident_tokens += n;
+        debug_assert!(
+            slot.resident_tokens <= slot.reserved_blocks.saturating_mul(self.block_tokens),
+            "slot {id} outgrew its reservation"
+        );
+        self.resident_tokens += n;
+        self.peak_resident_tokens = self.peak_resident_tokens.max(self.resident_tokens);
+    }
+
     /// Free a finished slot's reservation and residency.
     pub fn release(&mut self, id: u64) {
         if let Some(slot) = self.slots.remove(&id) {
@@ -199,6 +218,29 @@ mod tests {
         // after the first), 1 tok (would fit, but FIFO stops at the block)
         let n = l.admissible([16usize, 24, 1].into_iter());
         assert_eq!(n, 1, "no skipping past a request that does not fit");
+    }
+
+    #[test]
+    fn append_n_matches_n_single_appends() {
+        let mut bulk = KvLedger::new(256, 8);
+        let mut single = bulk.clone();
+        assert!(bulk.admit(1, 10, 40) && single.admit(1, 10, 40));
+        assert!(bulk.admit(2, 4, 20) && single.admit(2, 4, 20));
+        bulk.append_n(1, 17);
+        bulk.append_n(2, 5);
+        bulk.append_n(9, 3); // unknown slot: no-op, like append
+        bulk.append_n(1, 0); // zero-length: no-op
+        for _ in 0..17 {
+            single.append(1);
+        }
+        for _ in 0..5 {
+            single.append(2);
+        }
+        single.append(9);
+        assert_eq!(bulk.resident_tokens(), single.resident_tokens());
+        assert_eq!(bulk.peak_resident_tokens(), single.peak_resident_tokens());
+        assert_eq!(bulk.free_blocks(), single.free_blocks());
+        assert_eq!(bulk.live(), single.live());
     }
 
     #[test]

@@ -133,6 +133,22 @@ pub trait Policy: Send {
     /// Decide the next engine iteration. Must be deterministic in `view`
     /// and internal state — both drivers rely on replayability.
     fn decide(&mut self, view: &SchedView) -> Action;
+
+    /// Whether this policy's decision is *stable across a decode run*:
+    /// while sequences are mid-generation (`view.live > 0`) and the queue,
+    /// slot occupancy and KV state are unchanged, repeated `decide` calls
+    /// return the same action regardless of `view.now_s` and of how many
+    /// times they are made (no hidden per-call state).
+    ///
+    /// Stable policies let the event simulator **fast-forward** uniform
+    /// decode stretches — jumping clock, residency and token counts to the
+    /// next scheduling event instead of consulting the policy every
+    /// iteration — with bit-identical results. The default is `false`
+    /// (conservative: every iteration is stepped and the policy consulted),
+    /// which is always correct; opt in only when the contract above holds.
+    fn decode_stable(&self) -> bool {
+        false
+    }
 }
 
 /// Clamp a policy decision to what the view actually permits. This is the

@@ -44,6 +44,12 @@ impl Policy for StaticBatch {
             Action::Wait(Some(deadline))
         }
     }
+
+    /// With a batch in flight the policy decodes unconditionally — the
+    /// clock (and the batch-forming window) only matter while idle.
+    fn decode_stable(&self) -> bool {
+        true
+    }
 }
 
 /// Continuous (iteration-level) batching: any freed slot refills on the
@@ -73,6 +79,12 @@ impl Policy for ContinuousBatch {
         } else {
             Action::Wait(None)
         }
+    }
+
+    /// Stateless and clock-free: the decision reads only the queue, slot
+    /// and KV counts, all of which are constant across a decode run.
+    fn decode_stable(&self) -> bool {
+        true
     }
 }
 

@@ -20,10 +20,20 @@ pub fn num_threads() -> usize {
         .unwrap_or_else(|| std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1))
 }
 
+/// Resolve a requested worker count: 0 = auto ([`num_threads`]), anything
+/// else verbatim. The sweep engine's speculative stage-2 uses this to size
+/// its validation waves to the workers that will actually run them.
+pub fn resolve(threads: usize) -> usize {
+    if threads == 0 {
+        num_threads()
+    } else {
+        threads
+    }
+}
+
 /// Resolve a requested thread count (0 = auto) against the input length.
 fn effective_threads(threads: usize, len: usize) -> usize {
-    let t = if threads == 0 { num_threads() } else { threads };
-    t.min(len.max(1))
+    resolve(threads).min(len.max(1))
 }
 
 /// Apply `f` to every item, in parallel, returning results in input order.

@@ -5,9 +5,10 @@
 //! never the optimum.
 
 use chiplet_cloud::config::hardware::ExploreSpace;
-use chiplet_cloud::config::{ModelSpec, Workload};
-use chiplet_cloud::evaluate::{self, SweepEngine, WorkloadBounds};
+use chiplet_cloud::config::{ModelSpec, ServeSpec, SloSpec, TrafficSpec, Workload};
+use chiplet_cloud::evaluate::{self, SloSelection, SweepEngine, WorkloadBounds};
 use chiplet_cloud::explore::{pareto, phase1, phase1_seq};
+use chiplet_cloud::sched::RoutePolicy;
 use chiplet_cloud::util::prop::check;
 
 fn setup() -> (ExploreSpace, Vec<chiplet_cloud::arch::ServerDesign>) {
@@ -122,6 +123,110 @@ fn property_lower_bound_is_admissible() {
             );
         }
     });
+}
+
+/// Compare two SLO selections: the chosen design byte-identical, the
+/// winner's confirming report `meets`-equivalent *and* tail-identical.
+fn assert_selection_identical(reference: Option<SloSelection>, fast: Option<SloSelection>) {
+    match (reference, fast) {
+        (Some(r), Some(f)) => {
+            assert_eq!(f.point.mapping, r.point.mapping, "mapping diverged");
+            assert_eq!(f.point.server, r.point.server, "server diverged");
+            assert_eq!(f.point.n_servers, r.point.n_servers, "server count diverged");
+            assert_eq!(
+                f.point.tco_per_token.to_bits(),
+                r.point.tco_per_token.to_bits(),
+                "TCO/Token diverged"
+            );
+            assert!(!f.report.aborted_early, "a winning validation must never abort");
+            assert_eq!(f.report.completed, r.report.completed);
+            assert_eq!(f.report.tokens, r.report.tokens);
+            assert_eq!(f.report.iterations, r.report.iterations);
+            assert_eq!(f.report.ttft_p99_s.to_bits(), r.report.ttft_p99_s.to_bits());
+            assert_eq!(f.report.tpot_p99_s.to_bits(), r.report.tpot_p99_s.to_bits());
+            assert_eq!(f.report.makespan_s.to_bits(), r.report.makespan_s.to_bits());
+            assert_eq!(f.report.occupancy.to_bits(), r.report.occupancy.to_bits());
+        }
+        (None, None) => {}
+        (r, f) => panic!(
+            "feasibility diverged: reference={} fast={}",
+            r.is_some(),
+            f.is_some()
+        ),
+    }
+}
+
+/// The acceptance regression for the fast SLO-validation path:
+/// fast-forward + early abort + speculative parallel stage-2 select a
+/// byte-identical design (and a `meets`-equivalent, tail-identical
+/// winner's report) versus the sequential reference scan, on the coarse
+/// space — under the plain serving model *and* with every serving-model
+/// knob on (chunked prefill, paged KV, 2 replicas behind JSQ).
+#[test]
+fn fast_slo_stage2_selects_identically_to_reference() {
+    let (space, servers) = setup();
+    let w = Workload::new(ModelSpec::megatron(), 1024, 64);
+    let fastest = SweepEngine::sequential()
+        .sweep(&space, &servers, &w)
+        .iter()
+        .map(|p| p.perf.token_period)
+        .fold(f64::INFINITY, f64::min);
+    assert!(fastest.is_finite());
+    let reference_engine = SweepEngine::sequential();
+    let fast_engine = SweepEngine { threads: 0, prune: true, pareto_order: true, fast_sim: true };
+
+    // Plain serving model, binding TPOT over a queueing open-loop trace.
+    let slo = SloSpec::new(f64::INFINITY, fastest * 2.0);
+    let plain = ServeSpec::new(TrafficSpec::poisson(0.5, 50, 24, 16, 64).with_seed(29), slo);
+    assert_selection_identical(
+        reference_engine.best_point_slo(&space, &servers, &w, &plain),
+        fast_engine.best_point_slo(&space, &servers, &w, &plain),
+    );
+
+    // Full serving model: chunked prefill + paged KV + 2 replicas (JSQ).
+    let full = ServeSpec::new(TrafficSpec::closed_loop(8, 0.0, 40, 512, 16, 64).with_seed(31), slo)
+        .with_chunked_prefill(64)
+        .with_paged_kv()
+        .with_replicas(2, RoutePolicy::Jsq);
+    assert_selection_identical(
+        reference_engine.best_point_slo(&space, &servers, &w, &full),
+        fast_engine.best_point_slo(&space, &servers, &w, &full),
+    );
+
+    // An impossible SLO agrees on infeasibility.
+    let impossible = ServeSpec::new(
+        TrafficSpec::poisson(0.5, 30, 24, 16, 64),
+        SloSpec::new(f64::INFINITY, 1e-15),
+    );
+    assert_selection_identical(
+        reference_engine.best_point_slo(&space, &servers, &w, &impossible),
+        fast_engine.best_point_slo(&space, &servers, &w, &impossible),
+    );
+}
+
+/// The speculative wave size must never change the selection: 1, 2 and
+/// auto threads agree bit-for-bit (waves only trade speculative work for
+/// wall-clock; results commit in ascending-TCO order).
+#[test]
+fn stage2_wave_size_never_changes_the_selection() {
+    let (space, servers) = setup();
+    let w = Workload::new(ModelSpec::megatron(), 1024, 64);
+    let fastest = SweepEngine::sequential()
+        .sweep(&space, &servers, &w)
+        .iter()
+        .map(|p| p.perf.token_period)
+        .fold(f64::INFINITY, f64::min);
+    let slo = SloSpec::new(f64::INFINITY, fastest * 2.0);
+    let spec = ServeSpec::new(TrafficSpec::poisson(0.5, 40, 24, 16, 64).with_seed(41), slo);
+    let base = SweepEngine { threads: 1, prune: true, pareto_order: true, fast_sim: true }
+        .best_point_slo(&space, &servers, &w, &spec);
+    for threads in [2usize, 0] {
+        let engine = SweepEngine { threads, prune: true, pareto_order: true, fast_sim: true };
+        assert_selection_identical(
+            base.clone(),
+            engine.best_point_slo(&space, &servers, &w, &spec),
+        );
+    }
 }
 
 /// The Pareto frontier is consistent with phase 1 and the engine ordering:

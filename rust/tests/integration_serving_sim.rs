@@ -15,12 +15,12 @@ use chiplet_cloud::sched::{ContinuousBatch, KvBudget, RoutePolicy, StaticBatch};
 use chiplet_cloud::util::prop::check;
 
 fn synthetic_cfg(slots: usize) -> SimConfig {
-    SimConfig {
-        max_slots: slots,
-        kv: KvBudget::unlimited(),
-        cost: IterCost { prefill_s_per_token: 0.0001, decode_step_s: 0.01, prefill_chunk: 0 },
-        paged_kv: false,
-    }
+    SimConfig::new(
+        slots,
+        KvBudget::unlimited(),
+        IterCost { prefill_s_per_token: 0.0001, decode_step_s: 0.01, prefill_chunk: 0 },
+        false,
+    )
 }
 
 /// The Table-2 GPT-3 design used by the perf simulator's own tests.
@@ -96,12 +96,12 @@ fn closed_loop_never_exceeds_kv_budget() {
             new_tokens_hi: 1 + r.below(24),
             seed: r.next_u64(),
         };
-        let cfg = SimConfig {
-            max_slots: slots,
-            kv: KvBudget::seqs(kv_seqs),
-            cost: IterCost { prefill_s_per_token: 0.0002, decode_step_s: 0.005, prefill_chunk: 0 },
-            paged_kv: false,
-        };
+        let cfg = SimConfig::new(
+            slots,
+            KvBudget::seqs(kv_seqs),
+            IterCost { prefill_s_per_token: 0.0002, decode_step_s: 0.005, prefill_chunk: 0 },
+            false,
+        );
         let rep = simulate_trace(&cfg, &mut ContinuousBatch, &t, &SloSpec::unconstrained());
         let cap = kv_seqs.min(slots);
         assert!(
@@ -129,12 +129,12 @@ fn event_sim_converges_to_steady_state_throughput() {
     // Tiny prompts + long generations keep the (decode-rate) steady-state
     // metric comparable; clients == batch keeps every slot busy.
     let t = TrafficSpec::closed_loop(256, 0.0, 1024, 1, 200, 200).with_seed(5);
-    let cfg = SimConfig {
-        max_slots: w.batch,
-        kv: KvBudget::from_design(&gpt3_server(), &w, &mapping),
-        cost: IterCost::from_perf(&perf, &w),
-        paged_kv: false,
-    };
+    let cfg = SimConfig::new(
+        w.batch,
+        KvBudget::from_design(&gpt3_server(), &w, &mapping),
+        IterCost::from_perf(&perf, &w),
+        false,
+    );
     let rep = simulate_trace(&cfg, &mut ContinuousBatch, &t, &SloSpec::unconstrained());
     assert_eq!(rep.completed, 1024);
     assert!(rep.occupancy > 0.9, "saturating trace must fill slots: {}", rep.occupancy);
@@ -200,16 +200,16 @@ fn paged_ledger_never_exceeds_design_capacity() {
             capacity_tokens: cap.min(design.capacity_tokens),
             block_tokens: design.block_tokens,
         };
-        let cfg = SimConfig {
-            max_slots: slots,
+        let cfg = SimConfig::new(
+            slots,
             kv,
-            cost: IterCost {
+            IterCost {
                 prefill_s_per_token: 0.0002,
                 decode_step_s: 0.005,
                 prefill_chunk: if r.chance(0.5) { 1 + r.below(32) } else { 0 },
             },
-            paged_kv: true,
-        };
+            true,
+        );
         let t =
             TrafficSpec::poisson(500.0, 30 + r.below(40), prompt, 1, hi).with_seed(r.next_u64());
         let rep = simulate_trace(&cfg, &mut ContinuousBatch, &t, &SloSpec::unconstrained());
@@ -360,6 +360,116 @@ fn paged_accounting_selects_no_worse_design_under_slo() {
     }
 }
 
+
+/// The tentpole property: decode fast-forward produces **bit-identical**
+/// `ServeReport`s to the step-by-step reference across randomized
+/// Poisson / bursty / closed-loop traces, paged and full-context KV,
+/// chunked and unchunked prefill, static and continuous policies, and
+/// 1 and 2 replicas under both routing policies.
+#[test]
+fn fast_forward_matches_reference_step_bit_for_bit() {
+    check("fast-forward == reference stepping", 30, |r| {
+        let slots = 2 + r.below(10);
+        let requests = 20 + r.below(60);
+        let prompt = r.below(48); // 0-prompt requests included
+        let lo = 1 + r.below(16);
+        let hi = lo + r.below(200); // up to ~216 tokens: long decode runs
+        let seed = r.next_u64();
+        let arrival = match r.below(3) {
+            0 => ArrivalProcess::Poisson { rps: 0.5 + r.f64() * 50.0 },
+            1 => ArrivalProcess::Bursty { rps: 0.5 + r.f64() * 30.0, burst: 1 + r.below(8) },
+            _ => ArrivalProcess::ClosedLoop { clients: 1 + r.below(8), think_s: r.f64() * 0.05 },
+        };
+        let t = TrafficSpec {
+            arrival,
+            requests,
+            prompt_tokens: prompt,
+            new_tokens_lo: lo,
+            new_tokens_hi: hi,
+            seed,
+        };
+        let mut cfg = synthetic_cfg(slots);
+        if r.chance(0.5) {
+            cfg.cost = cfg.cost.with_chunk(1 + r.below(24));
+        }
+        if r.chance(0.5) {
+            // Binding paged budget around a few requests' worth.
+            let footprint = prompt + hi;
+            cfg.kv = KvBudget::tokens(footprint + r.below(footprint * slots + 1), 8);
+            cfg.paged_kv = true;
+        } else if r.chance(0.3) {
+            cfg.kv = KvBudget::seqs(1 + r.below(slots + 2));
+        }
+        let mut reference = cfg;
+        reference.reference_step = true;
+        let replicas = 1 + r.below(2);
+        let route = if r.chance(0.5) { RoutePolicy::Jsq } else { RoutePolicy::RoundRobin };
+        let use_static = r.chance(0.3);
+        let wait_s = r.f64() * 0.05;
+        let slo = SloSpec::unconstrained();
+        let run = |c: &SimConfig| {
+            if use_static {
+                let p = StaticBatch::new(wait_s);
+                simulate_replicated(c, replicas, route, &p, &t, &slo)
+            } else {
+                simulate_replicated(c, replicas, route, &ContinuousBatch, &t, &slo)
+            }
+        };
+        let a = run(&reference);
+        let b = run(&cfg);
+        assert_eq!(
+            a.fingerprint(),
+            b.fingerprint(),
+            "fast-forward diverged (slots {slots}, requests {requests}, prompt {prompt}, \
+             tokens {lo}..{hi}, replicas {replicas}, static {use_static}, paged {}, chunk {})",
+            cfg.paged_kv,
+            cfg.cost.prefill_chunk
+        );
+    });
+}
+
+/// Early-abort soundness property: across randomized traces and SLO
+/// targets, the abort-enabled run reaches the same feasibility verdict as
+/// the full simulation, never costs more iterations, and — whenever the
+/// verdict is "meets" — produces the identical full-fidelity report.
+#[test]
+fn early_abort_verdict_always_matches_the_full_run() {
+    check("early abort is verdict-preserving", 25, |r| {
+        let slots = 2 + r.below(8);
+        let requests = 30 + r.below(80);
+        let t = TrafficSpec::poisson(
+            1.0 + r.f64() * 40.0,
+            requests,
+            1 + r.below(32),
+            1 + r.below(8),
+            8 + r.below(40),
+        )
+        .with_seed(r.next_u64());
+        // Targets straddling the achievable band: decode step is 10 ms, so
+        // TPOT targets in [5 ms, 45 ms] and TTFT in [10 ms, 2 s] produce a
+        // healthy mix of passes, near-misses and hopeless runs.
+        let slo = SloSpec::new(0.01 + r.f64() * 2.0, 0.005 + r.f64() * 0.04);
+        let cfg = synthetic_cfg(slots);
+        let mut abort_cfg = cfg;
+        abort_cfg.early_abort = true;
+        let full = simulate_trace(&cfg, &mut ContinuousBatch, &t, &slo);
+        let fast = simulate_trace(&abort_cfg, &mut ContinuousBatch, &t, &slo);
+        assert_eq!(
+            full.meets(&slo),
+            fast.meets(&slo),
+            "verdict diverged (slots {slots}, requests {requests})"
+        );
+        assert!(fast.iterations <= full.iterations, "abort may never cost extra work");
+        if full.meets(&slo) {
+            assert!(!fast.aborted_early, "a passing run must never abort");
+            assert_eq!(full.fingerprint(), fast.fingerprint());
+        }
+        if fast.aborted_early {
+            assert!(!full.meets(&slo), "abort on a feasible run is unsound");
+        }
+    });
+}
+
 /// Mirror of the live-coordinator regression: even under a pathological
 /// arrival pattern the simulator never executes an empty iteration — every
 /// iteration has at least one live or admitted sequence.
@@ -368,8 +478,8 @@ fn no_empty_iterations_under_sparse_traffic() {
     // Arrivals far apart relative to service time: the scheduler must idle
     // between them, not spin.
     let t = TrafficSpec::poisson(0.5, 20, 8, 2, 4).with_seed(3);
-    let rep =
-        simulate_trace(&synthetic_cfg(4), &mut StaticBatch::new(0.01), &t, &SloSpec::unconstrained());
+    let cfg = synthetic_cfg(4);
+    let rep = simulate_trace(&cfg, &mut StaticBatch::new(0.01), &t, &SloSpec::unconstrained());
     assert_eq!(rep.completed, 20);
     // Each request needs at most 1 admission + (tokens-1) decode
     // iterations; idle time must never manifest as extra iterations.
