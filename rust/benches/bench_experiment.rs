@@ -1,0 +1,81 @@
+//! Bench of the declarative experiment API: Phase-1 context sharing across
+//! a campaign vs cold per-spec engines, plus the spec-layer codec itself.
+//!
+//! Asserts the API contracts the numbers rest on: a shared-engine campaign
+//! produces bit-identical outcomes to cold runs (sharing is a pure
+//! wall-clock optimization), and the strict JSON codec round-trips.
+
+use chiplet_cloud::config::experiment::{EngineKnobs, Experiment, SpaceSpec, Task, WorkloadPoint};
+use chiplet_cloud::config::{ServeSpec, SloSpec, TrafficSpec};
+use chiplet_cloud::experiment::{self, Engine, Outcome};
+use chiplet_cloud::util::bench::Bench;
+use chiplet_cloud::util::json::Json;
+
+fn serve_spec(name: &str, seed: u64) -> Experiment {
+    Experiment {
+        name: name.into(),
+        task: Task::ServeSim,
+        models: vec!["gpt2".into()],
+        space: SpaceSpec::Coarse,
+        workload: Some(WorkloadPoint { ctx: 1024, batch: 32 }),
+        serve: Some(ServeSpec::new(
+            TrafficSpec::poisson(4.0, 60, 16, 4, 16).with_seed(seed),
+            SloSpec::unconstrained(),
+        )),
+        load: 0.8,
+        engine: EngineKnobs::default(),
+    }
+}
+
+fn main() {
+    let mut b = Bench::new();
+    let specs = [serve_spec("a", 1), serve_spec("b", 2), serve_spec("c", 3)];
+
+    // Codec throughput (parse ∘ serialize on a fully-populated spec).
+    let text = specs[0].to_json_string();
+    b.run("experiment/spec-json-round-trip", || {
+        Experiment::from_json_str(&text).expect("round trip")
+    });
+
+    // Campaign with one shared engine (Phase 1 swept once)...
+    let shared = b.run("experiment/campaign-3-specs-shared-engine", || {
+        let mut engine = Engine::new();
+        engine.run_campaign(&specs).expect("campaign runs")
+    });
+    // ...vs cold engines per spec (Phase 1 re-swept every time).
+    let cold = b.run("experiment/campaign-3-specs-cold-engines", || {
+        specs.iter().map(|e| experiment::run(e).expect("runs")).collect::<Vec<_>>()
+    });
+    println!(
+        "shared-engine campaign mean {} vs cold {} ({:.2}x)",
+        chiplet_cloud::util::fmt_secs(shared.mean_s),
+        chiplet_cloud::util::fmt_secs(cold.mean_s),
+        cold.mean_s / shared.mean_s.max(1e-12),
+    );
+    // Small timing-noise allowance: sharing does strictly less work (two
+    // fewer Phase-1 sweeps), but single-core CI boxes jitter.
+    assert!(
+        shared.min_s <= cold.min_s * 1.10,
+        "sharing the Phase-1 context must not be slower: shared {} vs cold {}",
+        shared.min_s,
+        cold.min_s
+    );
+
+    // Sharing is answer-preserving: shared vs cold outcomes, bit for bit
+    // (compared through the canonical JSON rendering).
+    let mut engine = Engine::new();
+    let shared_outcomes = engine.run_campaign(&specs).expect("campaign runs");
+    assert_eq!(engine.contexts(), 1, "one coarse space ⇒ one Phase-1 sweep");
+    for (e, (name, outcome)) in specs.iter().zip(&shared_outcomes) {
+        let cold_outcome = experiment::run(e).expect("runs");
+        assert_eq!(name, &e.name);
+        assert_eq!(
+            outcome.to_json().to_string(),
+            cold_outcome.to_json().to_string(),
+            "context sharing changed the outcome of {name}"
+        );
+        assert!(matches!(outcome, Outcome::Serve(s) if s.feasible));
+        Json::parse(&outcome.to_json().to_string()).expect("valid JSON");
+    }
+    println!("campaign outcomes identical across shared and cold engines");
+}

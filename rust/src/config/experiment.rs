@@ -1,0 +1,787 @@
+//! The declarative experiment spec: one serializable description of a
+//! whole co-design run.
+//!
+//! The paper's evaluation is a *campaign* — the same two-phase methodology
+//! applied across eight LLMs, workload grids and serving regimes. An
+//! [`Experiment`] captures everything one such run needs (task, models,
+//! exploration space, workload point, traffic + SLO + serving-model knobs,
+//! engine knobs) as plain data, so campaigns live in checked-in
+//! `experiments/*.json` files instead of bespoke CLI invocations or code.
+//!
+//! * [`Experiment::from_json_str`] / [`Experiment::to_json`] — a strict,
+//!   dependency-free JSON codec over [`crate::util::json`]. Round-trip is
+//!   guaranteed (`parse ∘ serialize = id` under `PartialEq`); **unknown
+//!   fields are rejected** with the offending key and its location, so a
+//!   typo'd knob fails loudly instead of silently running the default.
+//! * [`Experiment::validate`] — semantic checks (known models, task/field
+//!   compatibility, traffic sanity) shared by the JSON and CLI paths.
+//! * [`crate::experiment::Engine::run`] — executes a spec and returns a
+//!   structured [`crate::experiment::Outcome`].
+//!
+//! SLO targets serialize as JSON `null` when unconstrained (JSON has no
+//! `Infinity`); integers round-trip exactly up to 2^53 (they travel as
+//! f64, like every JSON number).
+
+use std::collections::BTreeMap;
+
+use crate::config::models::ModelSpec;
+use crate::config::workload::{ArrivalProcess, ServeSpec, SloSpec, TrafficSpec};
+use crate::sched::RoutePolicy;
+use crate::util::json::Json;
+
+/// The one set of spec defaults shared by the JSON codec (omitted fields)
+/// and the CLI translation (absent flags), so `ccloud serve-sim` and an
+/// equivalent JSON spec can never silently diverge.
+pub mod defaults {
+    /// Requests per synthetic trace.
+    pub const REQUESTS: usize = 400;
+    /// Prompt tokens per request.
+    pub const PROMPT_TOKENS: usize = 64;
+    /// Minimum generated tokens per request.
+    pub const NEW_TOKENS_LO: usize = 16;
+    /// Maximum generated tokens per request.
+    pub const NEW_TOKENS_HI: usize = 128;
+    /// Trace PRNG seed.
+    pub const SEED: u64 = 42;
+    /// Requests per burst (bursty arrivals).
+    pub const BURST: usize = 8;
+    /// Concurrent clients (closed-loop arrivals).
+    pub const CLIENTS: usize = 64;
+    /// Open-loop rate resolution: fraction of the design's capacity.
+    pub const LOAD: f64 = 0.8;
+}
+
+/// Which question an experiment asks.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Task {
+    /// Sweep-engine report over the model's full study grid: frontier and
+    /// pruning counters, the TCO/Token optimum, and — when a serving spec
+    /// with a binding SLO is attached — the SLO-constrained selection
+    /// (`ccloud sweep`).
+    Sweep,
+    /// Discrete-event serving simulation on the model's optimal design:
+    /// static vs continuous batching, routing policies across replicas,
+    /// and the SLO-constrained selection under a binding SLO
+    /// (`ccloud serve-sim`).
+    ServeSim,
+    /// TCO/Token-optimal system per model over the study grid — one row
+    /// per model, the Table-2 procedure (`ccloud optimize` / `table2`).
+    Optimize,
+}
+
+impl Task {
+    /// Stable spelling used in JSON specs and derived experiment names.
+    pub fn name(&self) -> &'static str {
+        match self {
+            Task::Sweep => "sweep",
+            Task::ServeSim => "serve-sim",
+            Task::Optimize => "optimize",
+        }
+    }
+
+    /// Parse a JSON/CLI spelling.
+    pub fn parse(s: &str) -> Option<Task> {
+        match s {
+            "sweep" => Some(Task::Sweep),
+            "serve-sim" => Some(Task::ServeSim),
+            "optimize" => Some(Task::Optimize),
+            _ => None,
+        }
+    }
+}
+
+/// Which Phase-1 exploration space the experiment sweeps.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum SpaceSpec {
+    /// The reduced sweep ([`crate::config::hardware::ExploreSpace::coarse`]):
+    /// seconds end to end, same qualitative optima.
+    Coarse,
+    /// The paper-scale Table-1 ranges
+    /// ([`crate::config::hardware::ExploreSpace::default`]).
+    Full,
+}
+
+impl SpaceSpec {
+    /// Stable spelling used in JSON specs.
+    pub fn name(&self) -> &'static str {
+        match self {
+            SpaceSpec::Coarse => "coarse",
+            SpaceSpec::Full => "full",
+        }
+    }
+
+    /// Parse a JSON/CLI spelling.
+    pub fn parse(s: &str) -> Option<SpaceSpec> {
+        match s {
+            "coarse" => Some(SpaceSpec::Coarse),
+            "full" => Some(SpaceSpec::Full),
+            _ => None,
+        }
+    }
+
+    /// Materialize the exploration space.
+    pub fn space(&self) -> crate::config::hardware::ExploreSpace {
+        match self {
+            SpaceSpec::Coarse => crate::config::hardware::ExploreSpace::coarse(),
+            SpaceSpec::Full => crate::config::hardware::ExploreSpace::default(),
+        }
+    }
+}
+
+/// A fixed workload operating point (serve-sim experiments; sweep and
+/// optimize explore the whole study grid instead).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct WorkloadPoint {
+    /// Context length (prompt + generated) budget per sequence.
+    pub ctx: usize,
+    /// Batch size (sequences decoded concurrently).
+    pub batch: usize,
+}
+
+/// Sweep-engine execution knobs. These never change *what* an experiment
+/// answers — only how fast — so they sit apart from the scientific fields.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct EngineKnobs {
+    /// Worker threads; 0 = auto (`CC_SWEEP_THREADS` or the machine width).
+    pub threads: usize,
+    /// Sequential reference path: single-threaded, no pruning, no Pareto
+    /// ordering, reference-stepped stage-2 validation without early abort —
+    /// the behaviour fast runs are held byte-identical to.
+    pub seq: bool,
+}
+
+impl Default for EngineKnobs {
+    fn default() -> Self {
+        EngineKnobs { threads: 0, seq: false }
+    }
+}
+
+/// A fully described co-design experiment: the one serializable input of
+/// [`crate::experiment::Engine::run`]. See the module docs for the JSON
+/// schema and `experiments/*.json` for checked-in examples.
+#[derive(Clone, Debug, PartialEq)]
+pub struct Experiment {
+    /// Identifier for reports and output files. Defaults to
+    /// `"<task>-<models>"` when absent from a JSON spec.
+    pub name: String,
+    /// The question being asked.
+    pub task: Task,
+    /// Model short names ([`ModelSpec::by_name`]); several models turn a
+    /// sweep/serve-sim into a per-model campaign and an optimize into the
+    /// multi-model Table-2 procedure.
+    pub models: Vec<String>,
+    /// Phase-1 exploration space.
+    pub space: SpaceSpec,
+    /// Fixed workload point (serve-sim only; `None` = study grid).
+    pub workload: Option<WorkloadPoint>,
+    /// Serving spec: traffic, SLO targets and serving-model knobs.
+    /// Required for serve-sim; arms the SLO-constrained selection on a
+    /// sweep; must be absent on optimize.
+    pub serve: Option<ServeSpec>,
+    /// Open-loop rate resolution: a non-positive Poisson/bursty rate in
+    /// `serve.traffic` resolves to `load` × the evaluated design's
+    /// steady-state capacity (closed-loop traffic self-paces).
+    pub load: f64,
+    /// Engine execution knobs.
+    pub engine: EngineKnobs,
+}
+
+impl Experiment {
+    /// The default experiment name: `"<task>-<model>[+<model>...]"`.
+    pub fn default_name(task: Task, models: &[String]) -> String {
+        format!("{}-{}", task.name(), models.join("+"))
+    }
+
+    /// Parse a spec from JSON text. Strict: unknown fields, wrong types
+    /// and malformed documents are all errors with the offending location.
+    pub fn from_json_str(s: &str) -> Result<Experiment, String> {
+        let v = Json::parse(s)?;
+        Experiment::from_json(&v)
+    }
+
+    /// Parse a spec from a parsed [`Json`] document (see
+    /// [`Experiment::from_json_str`]).
+    pub fn from_json(v: &Json) -> Result<Experiment, String> {
+        let m = as_obj(v, "experiment")?;
+        check_fields(
+            m,
+            "experiment",
+            &["name", "task", "models", "space", "workload", "serve", "load", "engine"],
+        )?;
+        let task_s = get_str(m, "experiment", "task")?
+            .ok_or("experiment is missing the required field 'task'")?;
+        let task = Task::parse(&task_s).ok_or_else(|| {
+            format!("field 'task': unknown task '{task_s}' (expected sweep, serve-sim or optimize)")
+        })?;
+        let models = match m.get("models") {
+            None => return Err("experiment is missing the required field 'models'".into()),
+            Some(Json::Arr(xs)) => {
+                let mut out = Vec::with_capacity(xs.len());
+                for (i, x) in xs.iter().enumerate() {
+                    out.push(
+                        x.as_str()
+                            .ok_or_else(|| format!("field 'models[{i}]': expected a model name string"))?
+                            .to_string(),
+                    );
+                }
+                out
+            }
+            Some(_) => {
+                return Err("field 'models': expected an array of model names, \
+                            e.g. [\"gpt3\"]"
+                    .into())
+            }
+        };
+        let name = get_str(m, "experiment", "name")?
+            .unwrap_or_else(|| Experiment::default_name(task, &models));
+        let space = match get_str(m, "experiment", "space")? {
+            None => SpaceSpec::Coarse,
+            Some(s) => SpaceSpec::parse(&s).ok_or_else(|| {
+                format!("field 'space': unknown space '{s}' (expected coarse or full)")
+            })?,
+        };
+        let workload = match m.get("workload") {
+            None | Some(Json::Null) => None,
+            Some(v) => Some(workload_from_json(v)?),
+        };
+        let serve = match m.get("serve") {
+            None | Some(Json::Null) => None,
+            Some(v) => Some(serve_from_json(v)?),
+        };
+        let load = get_f64(m, "experiment", "load")?.unwrap_or(defaults::LOAD);
+        let engine = match m.get("engine") {
+            None | Some(Json::Null) => EngineKnobs::default(),
+            Some(v) => engine_from_json(v)?,
+        };
+        Ok(Experiment { name, task, models, space, workload, serve, load, engine })
+    }
+
+    /// Canonical JSON form: every field emitted explicitly, so
+    /// `from_json(to_json(e)) == e` for every valid spec.
+    pub fn to_json(&self) -> Json {
+        let mut m = BTreeMap::new();
+        m.insert("name".into(), Json::Str(self.name.clone()));
+        m.insert("task".into(), Json::Str(self.task.name().into()));
+        m.insert(
+            "models".into(),
+            Json::Arr(self.models.iter().map(|s| Json::Str(s.clone())).collect()),
+        );
+        m.insert("space".into(), Json::Str(self.space.name().into()));
+        m.insert(
+            "workload".into(),
+            match &self.workload {
+                None => Json::Null,
+                Some(w) => workload_to_json(w),
+            },
+        );
+        m.insert(
+            "serve".into(),
+            match &self.serve {
+                None => Json::Null,
+                Some(s) => serve_to_json(s),
+            },
+        );
+        m.insert("load".into(), Json::Num(self.load));
+        m.insert("engine".into(), engine_to_json(&self.engine));
+        Json::Obj(m)
+    }
+
+    /// [`Experiment::to_json`] rendered as a compact string.
+    pub fn to_json_string(&self) -> String {
+        self.to_json().to_string()
+    }
+
+    /// Semantic validation shared by the JSON and CLI paths. Field-shape
+    /// errors (unknown fields, wrong types) are caught earlier by the
+    /// parser; this checks what the parser cannot: model names, task/field
+    /// compatibility and traffic sanity.
+    pub fn validate(&self) -> Result<(), String> {
+        if self.models.is_empty() {
+            return Err("'models' must name at least one model".into());
+        }
+        for name in &self.models {
+            if ModelSpec::by_name(name).is_none() {
+                return Err(format!(
+                    "unknown model '{name}' (known: gpt2, megatron, gpt3, gopher, mt-nlg, \
+                     bloom, palm, llama2-70b, opt-175b, cc-tiny, cc-gpt-mini)"
+                ));
+            }
+        }
+        if !self.load.is_finite() || self.load <= 0.0 {
+            return Err(format!("'load' must be positive and finite (got {})", self.load));
+        }
+        match self.task {
+            Task::Sweep => {
+                if self.workload.is_some() {
+                    return Err("a sweep explores the whole study grid; drop 'workload' \
+                                (use task serve-sim for a fixed operating point)"
+                        .into());
+                }
+                if let Some(s) = &self.serve {
+                    if s.slo.is_unconstrained() {
+                        return Err("a sweep with a 'serve' spec needs binding SLO targets \
+                                    (serve.slo) — the serving model only enters the sweep \
+                                    through the SLO-constrained selection"
+                            .into());
+                    }
+                }
+            }
+            Task::ServeSim => {
+                if self.workload.is_none() {
+                    return Err(
+                        "serve-sim needs a 'workload' operating point ({\"ctx\": .., \
+                         \"batch\": ..})"
+                            .into(),
+                    );
+                }
+                if self.serve.is_none() {
+                    return Err("serve-sim needs a 'serve' spec (traffic + slo)".into());
+                }
+            }
+            Task::Optimize => {
+                if self.workload.is_some() || self.serve.is_some() {
+                    return Err("optimize explores the study grid without a serving model; \
+                                drop 'workload' and 'serve'"
+                        .into());
+                }
+            }
+        }
+        if let Some(w) = &self.workload {
+            if w.ctx == 0 || w.batch == 0 {
+                return Err(format!(
+                    "'workload' needs ctx >= 1 and batch >= 1 (got ctx {}, batch {})",
+                    w.ctx, w.batch
+                ));
+            }
+        }
+        if let Some(s) = &self.serve {
+            validate_serve(s)?;
+        }
+        Ok(())
+    }
+}
+
+fn validate_serve(s: &ServeSpec) -> Result<(), String> {
+    let t = &s.traffic;
+    if t.requests == 0 {
+        return Err("'serve.traffic.requests' must be >= 1".into());
+    }
+    if t.new_tokens_lo == 0 {
+        return Err("'serve.traffic.new_tokens_lo' must be >= 1".into());
+    }
+    if t.new_tokens_lo > t.new_tokens_hi {
+        return Err(format!(
+            "'serve.traffic.new_tokens_lo' ({}) exceeds 'new_tokens_hi' ({})",
+            t.new_tokens_lo, t.new_tokens_hi
+        ));
+    }
+    match t.arrival {
+        ArrivalProcess::Poisson { rps } | ArrivalProcess::Bursty { rps, .. } => {
+            if !rps.is_finite() || rps < 0.0 {
+                return Err(format!(
+                    "'serve.traffic.arrival.rps' must be finite and >= 0 \
+                     (0 = resolve from 'load' × design capacity; got {rps})"
+                ));
+            }
+        }
+        ArrivalProcess::ClosedLoop { clients, think_s } => {
+            if clients == 0 {
+                return Err("'serve.traffic.arrival.clients' must be >= 1".into());
+            }
+            if !think_s.is_finite() || think_s < 0.0 {
+                return Err(format!(
+                    "'serve.traffic.arrival.think_s' must be finite and >= 0 (got {think_s})"
+                ));
+            }
+        }
+    }
+    if let ArrivalProcess::Bursty { burst, .. } = t.arrival {
+        if burst == 0 {
+            return Err("'serve.traffic.arrival.burst' must be >= 1".into());
+        }
+    }
+    for (name, v) in [("ttft_p99_s", s.slo.ttft_p99_s), ("tpot_p99_s", s.slo.tpot_p99_s)] {
+        if v.is_nan() || v <= 0.0 {
+            return Err(format!(
+                "'serve.slo.{name}' must be positive (null = unconstrained; got {v})"
+            ));
+        }
+    }
+    if s.replicas == 0 {
+        return Err("'serve.replicas' must be >= 1".into());
+    }
+    Ok(())
+}
+
+// ---------------------------------------------------------------------------
+// JSON helpers: strict object access with located, actionable errors.
+
+fn as_obj<'a>(v: &'a Json, path: &str) -> Result<&'a BTreeMap<String, Json>, String> {
+    match v {
+        Json::Obj(m) => Ok(m),
+        _ => Err(format!("{path}: expected a JSON object")),
+    }
+}
+
+/// Reject keys outside `allowed` — the "unknown fields rejected" contract.
+fn check_fields(m: &BTreeMap<String, Json>, path: &str, allowed: &[&str]) -> Result<(), String> {
+    for key in m.keys() {
+        if !allowed.contains(&key.as_str()) {
+            return Err(format!(
+                "unknown field '{key}' in {path} (expected one of: {})",
+                allowed.join(", ")
+            ));
+        }
+    }
+    Ok(())
+}
+
+fn get_str(m: &BTreeMap<String, Json>, path: &str, key: &str) -> Result<Option<String>, String> {
+    match m.get(key) {
+        None => Ok(None),
+        Some(Json::Str(s)) => Ok(Some(s.clone())),
+        Some(_) => Err(format!("field '{key}' in {path}: expected a string")),
+    }
+}
+
+fn get_f64(m: &BTreeMap<String, Json>, path: &str, key: &str) -> Result<Option<f64>, String> {
+    match m.get(key) {
+        None => Ok(None),
+        Some(Json::Num(x)) => Ok(Some(*x)),
+        Some(_) => Err(format!("field '{key}' in {path}: expected a number")),
+    }
+}
+
+fn get_usize(m: &BTreeMap<String, Json>, path: &str, key: &str) -> Result<Option<usize>, String> {
+    match m.get(key) {
+        None => Ok(None),
+        Some(v) => v
+            .as_usize()
+            .map(Some)
+            .ok_or_else(|| format!("field '{key}' in {path}: expected a non-negative integer")),
+    }
+}
+
+fn get_bool(m: &BTreeMap<String, Json>, path: &str, key: &str) -> Result<Option<bool>, String> {
+    match m.get(key) {
+        None => Ok(None),
+        Some(Json::Bool(b)) => Ok(Some(*b)),
+        Some(_) => Err(format!("field '{key}' in {path}: expected true or false")),
+    }
+}
+
+/// SLO target: number, or null/absent = unconstrained (JSON has no ∞).
+fn get_slo_target(m: &BTreeMap<String, Json>, path: &str, key: &str) -> Result<f64, String> {
+    match m.get(key) {
+        None | Some(Json::Null) => Ok(f64::INFINITY),
+        Some(Json::Num(x)) => Ok(*x),
+        Some(_) => Err(format!(
+            "field '{key}' in {path}: expected a number of seconds or null (unconstrained)"
+        )),
+    }
+}
+
+fn workload_from_json(v: &Json) -> Result<WorkloadPoint, String> {
+    let m = as_obj(v, "workload")?;
+    check_fields(m, "workload", &["ctx", "batch"])?;
+    Ok(WorkloadPoint {
+        ctx: get_usize(m, "workload", "ctx")?
+            .ok_or("workload is missing the required field 'ctx'")?,
+        batch: get_usize(m, "workload", "batch")?
+            .ok_or("workload is missing the required field 'batch'")?,
+    })
+}
+
+fn workload_to_json(w: &WorkloadPoint) -> Json {
+    let mut m = BTreeMap::new();
+    m.insert("ctx".into(), Json::Num(w.ctx as f64));
+    m.insert("batch".into(), Json::Num(w.batch as f64));
+    Json::Obj(m)
+}
+
+fn arrival_from_json(v: &Json) -> Result<ArrivalProcess, String> {
+    let m = as_obj(v, "serve.traffic.arrival")?;
+    let kind = get_str(m, "serve.traffic.arrival", "kind")?
+        .ok_or("serve.traffic.arrival is missing the required field 'kind'")?;
+    let path = "serve.traffic.arrival";
+    match kind.as_str() {
+        "poisson" => {
+            check_fields(m, path, &["kind", "rps"])?;
+            Ok(ArrivalProcess::Poisson { rps: get_f64(m, path, "rps")?.unwrap_or(0.0) })
+        }
+        "bursty" => {
+            check_fields(m, path, &["kind", "rps", "burst"])?;
+            Ok(ArrivalProcess::Bursty {
+                rps: get_f64(m, path, "rps")?.unwrap_or(0.0),
+                burst: get_usize(m, path, "burst")?.unwrap_or(defaults::BURST),
+            })
+        }
+        "closed" => {
+            check_fields(m, path, &["kind", "clients", "think_s"])?;
+            Ok(ArrivalProcess::ClosedLoop {
+                clients: get_usize(m, path, "clients")?.unwrap_or(defaults::CLIENTS),
+                think_s: get_f64(m, path, "think_s")?.unwrap_or(0.0),
+            })
+        }
+        other => Err(format!(
+            "field 'kind' in {path}: unknown arrival kind '{other}' \
+             (expected poisson, bursty or closed)"
+        )),
+    }
+}
+
+fn arrival_to_json(a: &ArrivalProcess) -> Json {
+    let mut m = BTreeMap::new();
+    match a {
+        ArrivalProcess::Poisson { rps } => {
+            m.insert("kind".into(), Json::Str("poisson".into()));
+            m.insert("rps".into(), Json::Num(*rps));
+        }
+        ArrivalProcess::Bursty { rps, burst } => {
+            m.insert("kind".into(), Json::Str("bursty".into()));
+            m.insert("rps".into(), Json::Num(*rps));
+            m.insert("burst".into(), Json::Num(*burst as f64));
+        }
+        ArrivalProcess::ClosedLoop { clients, think_s } => {
+            m.insert("kind".into(), Json::Str("closed".into()));
+            m.insert("clients".into(), Json::Num(*clients as f64));
+            m.insert("think_s".into(), Json::Num(*think_s));
+        }
+    }
+    Json::Obj(m)
+}
+
+fn traffic_from_json(v: &Json) -> Result<TrafficSpec, String> {
+    let m = as_obj(v, "serve.traffic")?;
+    let path = "serve.traffic";
+    check_fields(
+        m,
+        path,
+        &["arrival", "requests", "prompt_tokens", "new_tokens_lo", "new_tokens_hi", "seed"],
+    )?;
+    let arrival = match m.get("arrival") {
+        None => return Err("serve.traffic is missing the required field 'arrival'".into()),
+        Some(v) => arrival_from_json(v)?,
+    };
+    Ok(TrafficSpec {
+        arrival,
+        requests: get_usize(m, path, "requests")?.unwrap_or(defaults::REQUESTS),
+        prompt_tokens: get_usize(m, path, "prompt_tokens")?.unwrap_or(defaults::PROMPT_TOKENS),
+        new_tokens_lo: get_usize(m, path, "new_tokens_lo")?.unwrap_or(defaults::NEW_TOKENS_LO),
+        new_tokens_hi: get_usize(m, path, "new_tokens_hi")?.unwrap_or(defaults::NEW_TOKENS_HI),
+        seed: get_usize(m, path, "seed")?.unwrap_or(defaults::SEED as usize) as u64,
+    })
+}
+
+fn traffic_to_json(t: &TrafficSpec) -> Json {
+    let mut m = BTreeMap::new();
+    m.insert("arrival".into(), arrival_to_json(&t.arrival));
+    m.insert("requests".into(), Json::Num(t.requests as f64));
+    m.insert("prompt_tokens".into(), Json::Num(t.prompt_tokens as f64));
+    m.insert("new_tokens_lo".into(), Json::Num(t.new_tokens_lo as f64));
+    m.insert("new_tokens_hi".into(), Json::Num(t.new_tokens_hi as f64));
+    m.insert("seed".into(), Json::Num(t.seed as f64));
+    Json::Obj(m)
+}
+
+fn slo_from_json(v: &Json) -> Result<SloSpec, String> {
+    let m = as_obj(v, "serve.slo")?;
+    check_fields(m, "serve.slo", &["ttft_p99_s", "tpot_p99_s"])?;
+    Ok(SloSpec {
+        ttft_p99_s: get_slo_target(m, "serve.slo", "ttft_p99_s")?,
+        tpot_p99_s: get_slo_target(m, "serve.slo", "tpot_p99_s")?,
+    })
+}
+
+fn slo_to_json(s: &SloSpec) -> Json {
+    let target = |v: f64| if v.is_finite() { Json::Num(v) } else { Json::Null };
+    let mut m = BTreeMap::new();
+    m.insert("ttft_p99_s".into(), target(s.ttft_p99_s));
+    m.insert("tpot_p99_s".into(), target(s.tpot_p99_s));
+    Json::Obj(m)
+}
+
+fn serve_from_json(v: &Json) -> Result<ServeSpec, String> {
+    let m = as_obj(v, "serve")?;
+    let path = "serve";
+    check_fields(
+        m,
+        path,
+        &["traffic", "slo", "prefill_chunk", "paged_kv", "replicas", "route"],
+    )?;
+    let traffic = match m.get("traffic") {
+        None => return Err("serve is missing the required field 'traffic'".into()),
+        Some(v) => traffic_from_json(v)?,
+    };
+    let slo = match m.get("slo") {
+        None | Some(Json::Null) => SloSpec::unconstrained(),
+        Some(v) => slo_from_json(v)?,
+    };
+    let route = match get_str(m, path, "route")? {
+        None => RoutePolicy::RoundRobin,
+        Some(s) => RoutePolicy::parse(&s).ok_or_else(|| {
+            format!("field 'route' in serve: unknown policy '{s}' (expected rr, jsq or jsq-tokens)")
+        })?,
+    };
+    Ok(ServeSpec {
+        traffic,
+        slo,
+        prefill_chunk: get_usize(m, path, "prefill_chunk")?.unwrap_or(0),
+        paged_kv: get_bool(m, path, "paged_kv")?.unwrap_or(false),
+        replicas: get_usize(m, path, "replicas")?.unwrap_or(1),
+        route,
+    })
+}
+
+fn serve_to_json(s: &ServeSpec) -> Json {
+    let mut m = BTreeMap::new();
+    m.insert("traffic".into(), traffic_to_json(&s.traffic));
+    m.insert("slo".into(), slo_to_json(&s.slo));
+    m.insert("prefill_chunk".into(), Json::Num(s.prefill_chunk as f64));
+    m.insert("paged_kv".into(), Json::Bool(s.paged_kv));
+    m.insert("replicas".into(), Json::Num(s.replicas as f64));
+    m.insert("route".into(), Json::Str(s.route.name().into()));
+    Json::Obj(m)
+}
+
+fn engine_from_json(v: &Json) -> Result<EngineKnobs, String> {
+    let m = as_obj(v, "engine")?;
+    check_fields(m, "engine", &["threads", "seq"])?;
+    Ok(EngineKnobs {
+        threads: get_usize(m, "engine", "threads")?.unwrap_or(0),
+        seq: get_bool(m, "engine", "seq")?.unwrap_or(false),
+    })
+}
+
+fn engine_to_json(e: &EngineKnobs) -> Json {
+    let mut m = BTreeMap::new();
+    m.insert("threads".into(), Json::Num(e.threads as f64));
+    m.insert("seq".into(), Json::Bool(e.seq));
+    Json::Obj(m)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn minimal() -> Experiment {
+        Experiment {
+            name: "sweep-gpt3".into(),
+            task: Task::Sweep,
+            models: vec!["gpt3".into()],
+            space: SpaceSpec::Coarse,
+            workload: None,
+            serve: None,
+            load: 0.8,
+            engine: EngineKnobs::default(),
+        }
+    }
+
+    #[test]
+    fn minimal_spec_parses_with_defaults() {
+        let e = Experiment::from_json_str(r#"{"task": "sweep", "models": ["gpt3"]}"#).unwrap();
+        assert_eq!(e, minimal());
+        e.validate().unwrap();
+    }
+
+    #[test]
+    fn round_trip_is_identity() {
+        let mut e = minimal();
+        assert_eq!(Experiment::from_json_str(&e.to_json_string()).unwrap(), e);
+        e.serve = Some(
+            ServeSpec::new(TrafficSpec::poisson(12.5, 100, 64, 8, 32), SloSpec::new(0.5, 0.02))
+                .with_chunked_prefill(16)
+                .with_paged_kv()
+                .with_replicas(3, RoutePolicy::JsqTokens),
+        );
+        assert_eq!(Experiment::from_json_str(&e.to_json_string()).unwrap(), e);
+    }
+
+    #[test]
+    fn unconstrained_slo_round_trips_through_null() {
+        let mut e = minimal();
+        e.task = Task::ServeSim;
+        e.workload = Some(WorkloadPoint { ctx: 1024, batch: 32 });
+        e.serve =
+            Some(ServeSpec::new(TrafficSpec::poisson(1.0, 10, 8, 4, 8), SloSpec::unconstrained()));
+        let s = e.to_json_string();
+        assert!(s.contains("\"ttft_p99_s\":null"), "{s}");
+        let back = Experiment::from_json_str(&s).unwrap();
+        assert_eq!(back, e);
+        assert!(back.serve.unwrap().slo.is_unconstrained());
+    }
+
+    #[test]
+    fn unknown_fields_are_rejected_with_location() {
+        let err = Experiment::from_json_str(r#"{"task":"sweep","models":["gpt3"],"turbo":1}"#)
+            .unwrap_err();
+        assert!(err.contains("unknown field 'turbo'") && err.contains("experiment"), "{err}");
+        let err = Experiment::from_json_str(
+            r#"{"task":"sweep","models":["gpt3"],
+                "serve":{"traffic":{"arrival":{"kind":"poisson"},"rsp":3}}}"#,
+        )
+        .unwrap_err();
+        assert!(err.contains("unknown field 'rsp'") && err.contains("serve.traffic"), "{err}");
+    }
+
+    #[test]
+    fn wrong_types_are_actionable() {
+        let err = Experiment::from_json_str(r#"{"task":"sweep","models":"gpt3"}"#).unwrap_err();
+        assert!(err.contains("array of model names"), "{err}");
+        let err = Experiment::from_json_str(
+            r#"{"task":"serve-sim","models":["gpt2"],"workload":{"ctx":"big","batch":4}}"#,
+        )
+        .unwrap_err();
+        assert!(err.contains("'ctx'") && err.contains("integer"), "{err}");
+        let err = Experiment::from_json_str(r#"{"task":"explore","models":["gpt3"]}"#).unwrap_err();
+        assert!(err.contains("unknown task 'explore'"), "{err}");
+    }
+
+    #[test]
+    fn validation_enforces_task_shapes() {
+        let mut e = minimal();
+        e.models = vec!["gpt9".into()];
+        assert!(e.validate().unwrap_err().contains("unknown model 'gpt9'"));
+
+        let mut e = minimal();
+        e.workload = Some(WorkloadPoint { ctx: 1024, batch: 8 });
+        assert!(e.validate().unwrap_err().contains("study grid"));
+
+        let mut e = minimal();
+        e.task = Task::ServeSim;
+        assert!(e.validate().unwrap_err().contains("workload"));
+
+        let mut e = minimal();
+        e.serve =
+            Some(ServeSpec::new(TrafficSpec::poisson(1.0, 10, 8, 4, 8), SloSpec::unconstrained()));
+        assert!(e.validate().unwrap_err().contains("binding SLO"));
+
+        let mut e = minimal();
+        e.task = Task::Optimize;
+        e.serve = Some(ServeSpec::new(TrafficSpec::poisson(1.0, 10, 8, 4, 8), SloSpec::new(1.0, 0.1)));
+        assert!(e.validate().unwrap_err().contains("optimize"));
+    }
+
+    #[test]
+    fn validation_enforces_traffic_sanity() {
+        let serve = |t: TrafficSpec| {
+            let mut e = minimal();
+            e.serve = Some(ServeSpec::new(t, SloSpec::new(1.0, 0.1)));
+            e.validate()
+        };
+        assert!(serve(TrafficSpec::poisson(1.0, 0, 8, 4, 8)).unwrap_err().contains("requests"));
+        assert!(serve(TrafficSpec::poisson(1.0, 10, 8, 9, 3))
+            .unwrap_err()
+            .contains("new_tokens_lo"));
+        assert!(serve(TrafficSpec::poisson(f64::NAN, 10, 8, 4, 8)).unwrap_err().contains("rps"));
+        let mut e = minimal();
+        let mut s = ServeSpec::new(TrafficSpec::poisson(1.0, 10, 8, 4, 8), SloSpec::new(-1.0, 0.1));
+        e.serve = Some(s);
+        assert!(e.validate().unwrap_err().contains("ttft_p99_s"));
+        s.slo = SloSpec::new(1.0, 0.1);
+        s.replicas = 0;
+        let mut e = minimal();
+        e.serve = Some(s);
+        assert!(e.validate().unwrap_err().contains("replicas"));
+    }
+}

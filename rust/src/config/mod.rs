@@ -5,11 +5,16 @@
 //! * [`hardware`] — Table 1 exploration constants (technology, wafer
 //!   economics, server envelope) and the sweep ranges of Phase 1.
 //! * [`workload`] — serving workload descriptions (batch, context, tokens).
+//! * [`experiment`] — the declarative, serializable experiment spec every
+//!   `ccloud` subcommand translates into (see [`crate::experiment`] for
+//!   the runner).
 
+pub mod experiment;
 pub mod hardware;
 pub mod models;
 pub mod workload;
 
+pub use experiment::{EngineKnobs, Experiment, SpaceSpec, Task, WorkloadPoint};
 pub use hardware::{ExploreSpace, TechParams};
 pub use models::{Attention, ModelSpec};
 pub use workload::{ArrivalProcess, ServeSpec, SloSpec, TrafficSpec, Workload};

@@ -5,7 +5,7 @@ use crate::config::models::ModelSpec;
 /// Latency service-level objectives a design must meet under real traffic
 /// (the paper's Fig.-11 throughput–latency Pareto, made explicit).
 /// Unset targets are `f64::INFINITY`.
-#[derive(Clone, Copy, Debug)]
+#[derive(Clone, Copy, Debug, PartialEq)]
 pub struct SloSpec {
     /// p99 time-to-first-token target, s.
     pub ttft_p99_s: f64,
@@ -37,7 +37,7 @@ impl Default for SloSpec {
 }
 
 /// The request arrival process of a synthetic serving trace.
-#[derive(Clone, Copy, Debug)]
+#[derive(Clone, Copy, Debug, PartialEq)]
 pub enum ArrivalProcess {
     /// Open-loop Poisson arrivals at `rps` requests/second.
     Poisson {
@@ -65,7 +65,7 @@ pub enum ArrivalProcess {
 
 /// A synthetic traffic description for the serving simulator: arrival
 /// process plus per-request shape, all seeded for reproducibility.
-#[derive(Clone, Copy, Debug)]
+#[derive(Clone, Copy, Debug, PartialEq)]
 pub struct TrafficSpec {
     /// Arrival process.
     pub arrival: ArrivalProcess,
@@ -124,7 +124,7 @@ impl TrafficSpec {
 /// [`Workload`] optionally carries into the sweep — and the serving-model
 /// knobs the event simulator honours: chunked prefill, paged-KV
 /// accounting, and multi-replica routing.
-#[derive(Clone, Copy, Debug)]
+#[derive(Clone, Copy, Debug, PartialEq)]
 pub struct ServeSpec {
     /// Synthetic traffic description.
     pub traffic: TrafficSpec,

@@ -103,6 +103,12 @@ pub fn system_tco(
 ///
 /// Runs on the default [`SweepEngine`] (parallel + pruned); per-server
 /// results and their order are identical to the sequential evaluation.
+///
+/// *Deprecated shim*: new callers should describe the run as a
+/// [`crate::config::Experiment`] and dispatch through
+/// [`crate::experiment::Engine::run`], which routes to exactly this code —
+/// the shims stay so the figure harnesses and the behavioral-identity
+/// tests keep their direct handles.
 pub fn sweep(space: &ExploreSpace, servers: &[ServerDesign], w: &Workload) -> Vec<DesignPoint> {
     SweepEngine::default().sweep(space, servers, w)
 }
@@ -113,6 +119,8 @@ pub fn sweep(space: &ExploreSpace, servers: &[ServerDesign], w: &Workload) -> Ve
 /// input order (the seed's `min_by` took the last; first-minimum is what
 /// both `SweepEngine::sequential()` and the parallel engine implement, so
 /// pruned/parallel/sequential all agree bit-for-bit).
+///
+/// *Deprecated shim* — see [`sweep`]; prefer [`crate::experiment::Engine::run`].
 pub fn best_point(
     space: &ExploreSpace,
     servers: &[ServerDesign],
@@ -124,6 +132,8 @@ pub fn best_point(
 /// Best point for a model across a workload grid (the Table-2 procedure:
 /// ctx ∈ {1024, 2048, 4096} × batch 1..1024, keep the global optimum), via
 /// the default [`SweepEngine`].
+///
+/// *Deprecated shim* — see [`sweep`]; prefer [`crate::experiment::Engine::run`].
 pub fn best_over_grid(
     space: &ExploreSpace,
     servers: &[ServerDesign],

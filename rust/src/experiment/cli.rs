@@ -1,0 +1,269 @@
+//! CLI → [`Experiment`] translation: every experiment-shaped `ccloud`
+//! subcommand (`sweep`, `serve-sim`, `optimize`, `table2`) is a pure
+//! function from parsed flags to a spec, so the CLI surface is provably a
+//! thin skin over the declarative API (the golden-equivalence tests in
+//! `tests/integration_experiment.rs` pin every flag combination).
+//!
+//! Flag validation lives here too — unparsable numbers, non-positive
+//! SLO/rate targets and contradictory combinations error instead of
+//! silently falling back to defaults (see the per-helper docs).
+
+use std::path::Path;
+
+use crate::config::experiment::{defaults, EngineKnobs, Experiment, SpaceSpec, Task, WorkloadPoint};
+use crate::config::{ArrivalProcess, ModelSpec, ServeSpec, SloSpec, TrafficSpec};
+use crate::sched::RoutePolicy;
+use crate::util::cli::Args;
+use crate::{Error, Result};
+
+/// Translate one experiment-shaped subcommand into a validated spec.
+pub fn from_args(cmd: &str, args: &Args) -> Result<Experiment> {
+    let engine =
+        EngineKnobs { threads: parse_usize(args, "threads", 0, 0)?, seq: args.has("seq") };
+    let space = if args.has("full") { SpaceSpec::Full } else { SpaceSpec::Coarse };
+    let e = match cmd {
+        "sweep" => sweep_from_args(args, space, engine)?,
+        "serve-sim" => serve_sim_from_args(args, space, engine)?,
+        "optimize" => {
+            let models = vec![args.get("model").unwrap_or("gpt3").to_string()];
+            Experiment {
+                name: Experiment::default_name(Task::Optimize, &models),
+                task: Task::Optimize,
+                models,
+                space,
+                workload: None,
+                serve: None,
+                load: defaults::LOAD,
+                engine,
+            }
+        }
+        "table2" => {
+            let models: Vec<String> =
+                ModelSpec::paper_models().iter().map(|m| m.name.to_string()).collect();
+            Experiment {
+                name: "table2".to_string(),
+                task: Task::Optimize,
+                models,
+                space,
+                workload: None,
+                serve: None,
+                load: defaults::LOAD,
+                engine,
+            }
+        }
+        other => {
+            return Err(Error::Config(format!(
+                "subcommand '{other}' has no experiment translation"
+            )))
+        }
+    };
+    e.validate().map_err(Error::Config)?;
+    Ok(e)
+}
+
+fn sweep_from_args(args: &Args, space: SpaceSpec, engine: EngineKnobs) -> Result<Experiment> {
+    let models = vec![args.get("model").unwrap_or("gpt3").to_string()];
+    let slo_spec = slo_from_args(args)?;
+    let serve = if slo_spec.is_unconstrained() {
+        // The serving model only enters the sweep through the
+        // SLO-constrained selection; accepting these flags here and
+        // ignoring them would misrepresent the optimum.
+        for flag in ["paged", "prefill-chunk", "replicas", "route", "trace", "rps"] {
+            if args.has(flag) {
+                return Err(Error::Config(format!(
+                    "--{flag} has no effect on an unconstrained sweep — add \
+                     --slo-ttft/--slo-tpot targets (or drop the flag)"
+                )));
+            }
+        }
+        None
+    } else {
+        // The sweep has no per-design rate resolution, so default to a
+        // saturating closed loop unless a trace was given.
+        let mut traffic = traffic_from_args(args)?;
+        if !args.has("trace") && !args.has("rps") {
+            traffic.arrival = ArrivalProcess::ClosedLoop {
+                clients: args.get_or("clients", defaults::CLIENTS),
+                think_s: args.get_or("think", 0.0),
+            };
+        }
+        let spec = ServeSpec::new(traffic, slo_spec);
+        Some(serve_model_from_args(args, spec)?)
+    };
+    Ok(Experiment {
+        name: Experiment::default_name(Task::Sweep, &models),
+        task: Task::Sweep,
+        models,
+        space,
+        workload: None,
+        serve,
+        load: parse_positive_f64(args, "load")?.unwrap_or(defaults::LOAD),
+        engine,
+    })
+}
+
+fn serve_sim_from_args(args: &Args, space: SpaceSpec, engine: EngineKnobs) -> Result<Experiment> {
+    let smoke = args.has("smoke");
+    let models =
+        vec![args.get("model").unwrap_or(if smoke { "gpt2" } else { "gpt3" }).to_string()];
+    let wctx: usize = args.get_or("ctx", 1024);
+    let batch: usize = args.get_or("batch", if smoke { 32 } else { 256 });
+    let mut traffic = traffic_from_args(args)?;
+    if smoke {
+        // Smoke defaults apply only where the user gave no flag — the
+        // values behind explicit flags were already validated above, and
+        // re-reading them here would silently undo that.
+        if !args.has("requests") {
+            traffic.requests = 120;
+        }
+        if !args.has("prompt-tokens") {
+            traffic.prompt_tokens = 32;
+        }
+        if !args.has("tokens-lo") {
+            traffic.new_tokens_lo = 8;
+        }
+        if !args.has("tokens-hi") {
+            traffic.new_tokens_hi = 32;
+        }
+        if traffic.new_tokens_lo > traffic.new_tokens_hi {
+            return Err(Error::Config(format!(
+                "--tokens-lo {} exceeds --tokens-hi {} under the smoke defaults",
+                traffic.new_tokens_lo, traffic.new_tokens_hi
+            )));
+        }
+    }
+    let load: f64 = parse_positive_f64(args, "load")?.unwrap_or(defaults::LOAD);
+    let slo = slo_from_args(args)?;
+    let spec = serve_model_from_args(args, ServeSpec::new(traffic, slo))?;
+    Ok(Experiment {
+        name: Experiment::default_name(Task::ServeSim, &models),
+        task: Task::ServeSim,
+        models,
+        space,
+        workload: Some(WorkloadPoint { ctx: wctx, batch }),
+        serve: Some(spec),
+        load,
+        engine,
+    })
+}
+
+/// Load an experiment spec from a JSON file (strict parse; see
+/// [`Experiment::from_json_str`]). Validation runs in
+/// [`crate::experiment::Engine::run`], after any CLI engine overrides.
+pub fn load_spec(path: &Path) -> Result<Experiment> {
+    let text = std::fs::read_to_string(path)
+        .map_err(|e| Error::Config(format!("{}: {e}", path.display())))?;
+    Experiment::from_json_str(&text)
+        .map_err(|err| Error::Config(format!("{}: {err}", path.display())))
+}
+
+/// Fold `--threads N` / `--seq` CLI overrides into a loaded spec's engine
+/// knobs (`ccloud run spec.json --seq` must run the spec on the reference
+/// engine, exactly like the inline subcommands).
+pub fn apply_engine_overrides(e: &mut Experiment, args: &Args) -> Result<()> {
+    if args.has("threads") {
+        e.engine.threads = parse_usize(args, "threads", 0, 0)?;
+    }
+    if args.has("seq") {
+        e.engine.seq = true;
+    }
+    Ok(())
+}
+
+/// Parse `--name` as a positive, finite f64. `Args::get_or` silently falls
+/// back to the default on a parse failure, which is exactly how a typo'd
+/// `--slo-ttft abc` used to become an unconstrained (∞) target — here it
+/// is an error instead.
+pub(crate) fn parse_positive_f64(args: &Args, name: &str) -> Result<Option<f64>> {
+    let Some(raw) = args.get(name) else { return Ok(None) };
+    let v: f64 = raw
+        .parse()
+        .map_err(|_| Error::Config(format!("--{name} must be a number (got '{raw}')")))?;
+    if !v.is_finite() || v <= 0.0 {
+        return Err(Error::Config(format!(
+            "--{name} must be positive and finite (got '{raw}')"
+        )));
+    }
+    Ok(Some(v))
+}
+
+/// Parse `--name` as a usize, erroring on unparsable input instead of
+/// silently falling back to the default (the `Args::get_or` failure mode),
+/// and enforcing a minimum.
+pub(crate) fn parse_usize(args: &Args, name: &str, default: usize, min: usize) -> Result<usize> {
+    let v = match args.get(name) {
+        None => default,
+        Some(raw) => raw.parse().map_err(|_| {
+            Error::Config(format!("--{name} must be a non-negative integer (got '{raw}')"))
+        })?,
+    };
+    if v < min {
+        return Err(Error::Config(format!("--{name} must be >= {min} (got {v})")));
+    }
+    Ok(v)
+}
+
+/// SLO targets from `--slo-ttft` / `--slo-tpot` (seconds; absent = ∞).
+/// Non-positive or NaN targets are rejected: a zero or NaN target can
+/// never be met (every comparison fails) and would silently turn the
+/// whole SLO-constrained sweep into "no feasible design".
+fn slo_from_args(args: &Args) -> Result<SloSpec> {
+    Ok(SloSpec::new(
+        parse_positive_f64(args, "slo-ttft")?.unwrap_or(f64::INFINITY),
+        parse_positive_f64(args, "slo-tpot")?.unwrap_or(f64::INFINITY),
+    ))
+}
+
+/// Traffic description from the CLI flags. An *absent* `--rps` lets the
+/// serve harness resolve the rate from `--load` × the design's capacity;
+/// an explicit non-positive or NaN `--rps` is rejected — a zero rate
+/// would space open-loop arrivals ~10¹² virtual seconds apart, so the
+/// trace never makes progress and every SLO trivially "passes".
+fn traffic_from_args(args: &Args) -> Result<TrafficSpec> {
+    let requests = parse_usize(args, "requests", defaults::REQUESTS, 1)?;
+    let prompt = parse_usize(args, "prompt-tokens", defaults::PROMPT_TOKENS, 0)?;
+    let lo = parse_usize(args, "tokens-lo", defaults::NEW_TOKENS_LO, 1)?;
+    let hi = parse_usize(args, "tokens-hi", defaults::NEW_TOKENS_HI, 1)?;
+    if lo > hi {
+        return Err(Error::Config(format!("--tokens-lo {lo} exceeds --tokens-hi {hi}")));
+    }
+    let rps: f64 = parse_positive_f64(args, "rps")?.unwrap_or(0.0);
+    let arrival = match args.get("trace").unwrap_or("poisson") {
+        "bursty" => {
+            ArrivalProcess::Bursty { rps, burst: parse_usize(args, "burst", defaults::BURST, 1)? }
+        }
+        "closed" => ArrivalProcess::ClosedLoop {
+            clients: parse_usize(args, "clients", defaults::CLIENTS, 1)?,
+            think_s: args.get_or("think", 0.0),
+        },
+        "poisson" => ArrivalProcess::Poisson { rps },
+        other => {
+            return Err(Error::Config(format!(
+                "--trace must be poisson, bursty or closed (got '{other}')"
+            )))
+        }
+    };
+    Ok(TrafficSpec {
+        arrival,
+        requests,
+        prompt_tokens: prompt,
+        new_tokens_lo: lo,
+        new_tokens_hi: hi,
+        seed: args.get_or("seed", defaults::SEED),
+    })
+}
+
+/// The serving-model knobs shared by `serve-sim` and `sweep`: chunked
+/// prefill, paged-KV accounting and multi-replica routing.
+fn serve_model_from_args(args: &Args, mut spec: ServeSpec) -> Result<ServeSpec> {
+    spec.prefill_chunk = parse_usize(args, "prefill-chunk", 0, 0)?;
+    spec.paged_kv = args.has("paged");
+    spec.replicas = parse_usize(args, "replicas", 1, 1)?;
+    spec.route = match args.get("route") {
+        None => RoutePolicy::RoundRobin,
+        Some(s) => RoutePolicy::parse(s).ok_or_else(|| {
+            Error::Config(format!("--route must be rr, jsq or jsq-tokens (got '{s}')"))
+        })?,
+    };
+    Ok(spec)
+}

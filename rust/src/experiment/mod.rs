@@ -1,0 +1,878 @@
+//! The experiment engine: one `run()` entry point over the declarative
+//! [`Experiment`] spec, returning a structured, machine-readable
+//! [`Outcome`].
+//!
+//! This is the single dispatcher the `ccloud` subcommands (and the
+//! checked-in `experiments/*.json` campaign specs) route through:
+//!
+//! * [`Engine::run`] — execute one spec: resolve models, materialize the
+//!   Phase-1 exploration context (memoized per [`SpaceSpec`], so a
+//!   campaign sweeps Phase 1 once), build the sweep engine from the
+//!   spec's [`EngineKnobs`], and dispatch on [`Task`].
+//! * [`Engine::run_campaign`] — several specs through one engine in
+//!   deterministic input order, sharing the Phase-1 context cache.
+//! * [`Outcome`] — a structured enum (sweep optimum incl. the SLO
+//!   selection, serve report, multi-model optimize, campaign) that renders
+//!   both the classic ASCII tables ([`Outcome::named_tables`]) and JSON
+//!   ([`Outcome::to_json`]). The JSON splits engine-*variant* cost
+//!   counters (wall time, pruning/speculation counts) into a dedicated
+//!   `"engine"` object, so everything outside it is byte-identical across
+//!   engine configurations — the invariant CI's fast-vs-reference golden
+//!   diff checks.
+//!
+//! The old `SweepEngine`/`report` entry points remain as thin deprecated
+//! shims over the same outcome builders, so the equivalence between the
+//! old and new paths is by construction and locked by tests.
+
+pub mod cli;
+
+use std::time::Instant;
+
+pub use crate::config::experiment::{EngineKnobs, Experiment, SpaceSpec, Task, WorkloadPoint};
+
+use crate::config::{ArrivalProcess, ModelSpec, ServeSpec, TrafficSpec, Workload};
+use crate::evaluate::{DesignPoint, SloSelection, SweepEngine, SweepStats};
+use crate::perf::events::{
+    simulate_replicated, simulate_trace, IterCost, ServeReport, SimConfig,
+};
+use crate::perf::simulator::max_context;
+use crate::report::Ctx;
+use crate::sched::{ContinuousBatch, KvBudget, Policy, RoutePolicy, StaticBatch};
+use crate::util::json::Json;
+use crate::util::table::Table;
+use crate::{Error, Result};
+
+/// The experiment engine: memoizes the Phase-1 exploration context per
+/// space so multi-spec campaigns (and multi-model experiments) share it.
+#[derive(Default)]
+pub struct Engine {
+    ctxs: Vec<(SpaceSpec, Ctx)>,
+}
+
+impl Engine {
+    /// A fresh engine with an empty context cache.
+    pub fn new() -> Engine {
+        Engine::default()
+    }
+
+    /// Phase-1 contexts materialized so far (campaign sharing is
+    /// observable: N same-space specs still report 1).
+    pub fn contexts(&self) -> usize {
+        self.ctxs.len()
+    }
+
+    fn ctx_index(&mut self, space: SpaceSpec) -> usize {
+        if let Some(i) = self.ctxs.iter().position(|(s, _)| *s == space) {
+            return i;
+        }
+        self.ctxs.push((space, Ctx::new(space.space())));
+        self.ctxs.len() - 1
+    }
+
+    /// Execute one experiment. Validates the spec, then dispatches on its
+    /// task; several models turn a sweep/serve-sim into a per-model
+    /// [`Outcome::Campaign`] (optimize is inherently multi-model — one
+    /// Table-2 row per model).
+    pub fn run(&mut self, e: &Experiment) -> Result<Outcome> {
+        e.validate().map_err(Error::Config)?;
+        let models: Vec<ModelSpec> = e
+            .models
+            .iter()
+            .map(|name| {
+                ModelSpec::by_name(name)
+                    .ok_or_else(|| Error::Config(format!("unknown model {name}")))
+            })
+            .collect::<Result<_>>()?;
+        let engine = sweep_engine(&e.engine);
+        let ci = self.ctx_index(e.space);
+        let ctx = &self.ctxs[ci].1;
+        match e.task {
+            Task::Optimize => Ok(Outcome::Optimize(optimize_outcome(ctx, &models, &engine))),
+            Task::Sweep | Task::ServeSim if models.len() > 1 => {
+                let mut members = Vec::with_capacity(models.len());
+                for m in &models {
+                    let outcome = run_single(ctx, e, m, &engine);
+                    // '-'-joined, not '/': member names double as persist
+                    // file stems (`<name>.csv` / `<name>.json`), and a
+                    // path separator would point into a nonexistent
+                    // subdirectory.
+                    members.push((format!("{}-{}", e.name, m.name), outcome));
+                }
+                Ok(Outcome::Campaign(members))
+            }
+            Task::Sweep | Task::ServeSim => Ok(run_single(ctx, e, &models[0], &engine)),
+        }
+    }
+
+    /// Run several experiments through one engine, in input order, sharing
+    /// the Phase-1 context cache. Returns `(experiment name, outcome)`
+    /// pairs in the same order — the multi-spec campaign mode behind
+    /// `ccloud run a.json b.json ...`.
+    pub fn run_campaign(&mut self, specs: &[Experiment]) -> Result<Vec<(String, Outcome)>> {
+        let mut out = Vec::with_capacity(specs.len());
+        for e in specs {
+            out.push((e.name.clone(), self.run(e)?));
+        }
+        Ok(out)
+    }
+}
+
+/// One-shot convenience: run a single spec on a fresh [`Engine`].
+pub fn run(e: &Experiment) -> Result<Outcome> {
+    Engine::new().run(e)
+}
+
+/// Build the sweep engine a spec asks for: `seq` selects the sequential
+/// reference path ([`SweepEngine::sequential`]); otherwise the production
+/// engine with the spec's thread count (0 = auto).
+pub fn sweep_engine(knobs: &EngineKnobs) -> SweepEngine {
+    if knobs.seq {
+        SweepEngine::sequential()
+    } else {
+        SweepEngine { threads: knobs.threads, ..SweepEngine::default() }
+    }
+}
+
+fn run_single(ctx: &Ctx, e: &Experiment, model: &ModelSpec, engine: &SweepEngine) -> Outcome {
+    match e.task {
+        Task::Sweep => Outcome::Sweep(Box::new(sweep_outcome(
+            ctx,
+            model,
+            e.serve.as_ref(),
+            e.load,
+            engine,
+        ))),
+        Task::ServeSim => {
+            let wp = e.workload.expect("validated: serve-sim carries a workload");
+            let spec = e.serve.expect("validated: serve-sim carries a serve spec");
+            let w = Workload::new(model.clone(), wp.ctx, wp.batch);
+            Outcome::Serve(Box::new(serve_outcome(ctx, &w, &spec, e.load, engine)))
+        }
+        Task::Optimize => unreachable!("optimize dispatches in Engine::run"),
+    }
+}
+
+/// Structured result of one experiment — the machine-readable contract of
+/// the API. Renders the classic tables and JSON; see the module docs for
+/// the engine-variant/invariant split the JSON enforces.
+#[derive(Clone, Debug)]
+pub enum Outcome {
+    /// Sweep-engine report: frontier/pruning counters, the TCO/Token
+    /// optimum over the study grid, and the SLO-constrained selection when
+    /// the spec carried a binding SLO.
+    Sweep(Box<SweepOutcome>),
+    /// Serving-simulation report: policy/routing rows plus the
+    /// SLO-constrained selection row.
+    Serve(Box<ServeOutcome>),
+    /// TCO/Token-optimal system per model (the Table-2 procedure) — the
+    /// multi-model campaign outcome.
+    Optimize(OptimizeOutcome),
+    /// Several named outcomes (multi-model sweeps/serve-sims, or
+    /// `ccloud run` over several spec files), in deterministic input order.
+    Campaign(Vec<(String, Outcome)>),
+}
+
+impl Outcome {
+    /// Render as `(persist id, table)` pairs — one per leaf outcome. `id`
+    /// names the single-outcome artifact (the legacy `sweep` / `serve_sim`
+    /// / `table2` CSV ids, or the experiment name); campaign members use
+    /// their own names.
+    pub fn named_tables(&self, id: &str) -> Vec<(String, Table)> {
+        match self {
+            Outcome::Sweep(o) => vec![(id.to_string(), o.to_table())],
+            Outcome::Serve(o) => vec![(id.to_string(), o.to_table())],
+            Outcome::Optimize(o) => vec![(id.to_string(), o.to_table())],
+            Outcome::Campaign(members) => members
+                .iter()
+                .flat_map(|(name, o)| o.named_tables(name))
+                .collect(),
+        }
+    }
+
+    /// Machine-readable form. Engine-variant cost counters live under the
+    /// `"engine"` key of each leaf object; everything else is
+    /// byte-identical across engine configurations of the same spec.
+    pub fn to_json(&self) -> Json {
+        match self {
+            Outcome::Sweep(o) => o.to_json(),
+            Outcome::Serve(o) => o.to_json(),
+            Outcome::Optimize(o) => o.to_json(),
+            Outcome::Campaign(members) => obj(vec![
+                ("kind", Json::Str("campaign".into())),
+                (
+                    "experiments",
+                    Json::Arr(
+                        members
+                            .iter()
+                            .map(|(name, o)| {
+                                obj(vec![
+                                    ("name", Json::Str(name.clone())),
+                                    ("outcome", o.to_json()),
+                                ])
+                            })
+                            .collect(),
+                    ),
+                ),
+            ]),
+        }
+    }
+}
+
+/// Outcome of a sweep experiment (`ccloud sweep`): the co-design search
+/// itself as an experiment.
+#[derive(Clone, Debug)]
+pub struct SweepOutcome {
+    /// The model swept.
+    pub model: ModelSpec,
+    /// Workloads in the study grid.
+    pub grid_len: usize,
+    /// Feasible Phase-1 servers.
+    pub feasible_servers: usize,
+    /// Pareto-frontier size.
+    pub frontier: usize,
+    /// Worker threads the engine resolved to.
+    pub threads: usize,
+    /// Branch-and-bound counters (engine-variant).
+    pub stats: SweepStats,
+    /// Phase-2 wall time, s (engine-variant).
+    pub wall_s: f64,
+    /// The TCO/Token optimum over the grid, with its grid point.
+    pub best: Option<(Workload, DesignPoint)>,
+    /// SLO-constrained stage, when the spec carried a binding SLO.
+    pub slo: Option<SloPart>,
+}
+
+/// The SLO-constrained stage of a sweep outcome.
+#[derive(Clone, Debug)]
+pub struct SloPart {
+    /// The serving spec actually validated under (open-loop rate resolved
+    /// against the unconstrained optimum's fleet capacity).
+    pub spec: ServeSpec,
+    /// The grid point the selection ran at.
+    pub ctx: usize,
+    /// Batch of that grid point.
+    pub batch: usize,
+    /// The selection, or `None` when no design meets the SLO.
+    pub selection: Option<SloSelection>,
+}
+
+/// Outcome of a serve-sim experiment (`ccloud serve-sim`).
+#[derive(Clone, Debug)]
+pub struct ServeOutcome {
+    /// The model served.
+    pub model: ModelSpec,
+    /// Context budget of the operating point.
+    pub ctx: usize,
+    /// Batch of the operating point.
+    pub batch: usize,
+    /// The serving spec actually simulated (rate-resolved).
+    pub spec: ServeSpec,
+    /// Whether any design was feasible at all.
+    pub feasible: bool,
+    /// `(label, report)` rows: static & continuous batching, plus one row
+    /// per routing policy when the spec serves several replicas.
+    pub rows: Vec<(String, ServeReport)>,
+    /// `None` = unconstrained SLO (no selection row); `Some(None)` = no
+    /// design meets the SLO; `Some(Some(sel))` = the confirmed selection.
+    pub slo: Option<Option<SloSelection>>,
+}
+
+/// Outcome of an optimize experiment: one Table-2 row per model.
+#[derive(Clone, Debug)]
+pub struct OptimizeOutcome {
+    /// Per-model optima, in the spec's model order (models with no
+    /// feasible design are skipped, as in the paper table).
+    pub rows: Vec<OptimizeRow>,
+}
+
+/// One model's TCO/Token-optimal system.
+#[derive(Clone, Debug)]
+pub struct OptimizeRow {
+    /// The model.
+    pub model: ModelSpec,
+    /// The grid point the optimum chose.
+    pub workload: Workload,
+    /// The optimal design point.
+    pub point: DesignPoint,
+    /// Max servable context on that system (tokens).
+    pub max_ctx_tokens: usize,
+}
+
+fn fmt(v: f64, digits: usize) -> String {
+    format!("{v:.digits$}")
+}
+
+// ---------------------------------------------------------------------------
+// Outcome builders: the single implementation behind both the experiment
+// API and the legacy `report` shims.
+
+/// The grid point the unconstrained optimum chose (fallback: a mid-grid
+/// default), so the SLO-constrained pass compares like for like.
+fn spec_ctx(grid: &[Workload], best: &Option<(Workload, DesignPoint)>) -> usize {
+    best.as_ref().map(|(w, _)| w.ctx).unwrap_or_else(|| grid[grid.len() / 2].ctx)
+}
+
+fn spec_batch(grid: &[Workload], best: &Option<(Workload, DesignPoint)>) -> usize {
+    best.as_ref().map(|(w, _)| w.batch).unwrap_or_else(|| grid[grid.len() / 2].batch)
+}
+
+/// Resolve a non-positive open-loop arrival rate to `load` × the design's
+/// steady-state *request* capacity (tokens/s over the mean token budget).
+/// An rps of 0 would otherwise space arrivals ~10¹² virtual seconds apart
+/// and make every SLO trivially pass. Closed-loop traffic is self-pacing
+/// and returned unchanged.
+pub(crate) fn resolve_rate(
+    traffic: &TrafficSpec,
+    load: f64,
+    capacity_tokens_per_s: f64,
+) -> TrafficSpec {
+    let mean_tokens = (traffic.new_tokens_lo + traffic.new_tokens_hi).max(2) as f64 / 2.0;
+    let capacity_rps = capacity_tokens_per_s / mean_tokens;
+    let mut traffic = *traffic;
+    match &mut traffic.arrival {
+        ArrivalProcess::Poisson { rps } | ArrivalProcess::Bursty { rps, .. } => {
+            if *rps <= 0.0 {
+                *rps = load.max(0.01) * capacity_rps;
+            }
+        }
+        ArrivalProcess::ClosedLoop { .. } => {}
+    }
+    traffic
+}
+
+/// Build a sweep outcome: the full study-grid search plus, with a binding
+/// SLO spec, the SLO-constrained selection at the optimum's grid point
+/// (open-loop rate resolved to `load` × the optimum's fleet capacity).
+pub fn sweep_outcome(
+    ctx: &Ctx,
+    model: &ModelSpec,
+    serve: Option<&ServeSpec>,
+    load: f64,
+    engine: &SweepEngine,
+) -> SweepOutcome {
+    let frontier = crate::explore::pareto::frontier_indices(&ctx.servers).len();
+    let grid = Workload::study_grid(model);
+    let t0 = Instant::now();
+    let (best, stats) = engine.best_over_grid_stats(&ctx.space, &ctx.servers, &grid);
+    let wall_s = t0.elapsed().as_secs_f64();
+    let slo = serve.map(|spec| {
+        let wctx = spec_ctx(&grid, &best);
+        let wbatch = spec_batch(&grid, &best);
+        let w = Workload::new(model.clone(), wctx, wbatch);
+        // An unresolved open-loop rate (rps <= 0) would make the SLO pass
+        // vacuous; pace it against the unconstrained optimum's capacity —
+        // the whole fleet's when the spec serves several replicas,
+        // matching serve-sim (validation spreads the traffic across them).
+        let traffic = match &best {
+            Some((_, p)) => {
+                let fleet = p.perf.tokens_per_s * spec.replicas.max(1) as f64;
+                resolve_rate(&spec.traffic, load, fleet)
+            }
+            None => spec.traffic,
+        };
+        let spec = ServeSpec { traffic, ..*spec };
+        let selection = engine.best_point_slo(&ctx.space, &ctx.servers, &w, &spec);
+        SloPart { spec, ctx: wctx, batch: wbatch, selection }
+    });
+    SweepOutcome {
+        model: model.clone(),
+        grid_len: grid.len(),
+        feasible_servers: ctx.servers.len(),
+        frontier,
+        threads: crate::util::parallel::resolve(engine.threads),
+        stats,
+        wall_s,
+        best,
+        slo,
+    }
+}
+
+/// Build a serve-sim outcome: static vs continuous batching on the
+/// workload's TCO/Token-optimal design, routing-policy rows across
+/// replicas, and the SLO-constrained selection under a binding SLO.
+pub fn serve_outcome(
+    ctx: &Ctx,
+    w: &Workload,
+    spec: &ServeSpec,
+    load: f64,
+    engine: &SweepEngine,
+) -> ServeOutcome {
+    let batch = w.batch;
+    let slo = spec.slo;
+    let Some(best) = engine.best_point(&ctx.space, &ctx.servers, w) else {
+        return ServeOutcome {
+            model: w.model.clone(),
+            ctx: w.ctx,
+            batch,
+            spec: *spec,
+            feasible: false,
+            rows: Vec::new(),
+            slo: None,
+        };
+    };
+
+    // Resolve a load-relative arrival rate against the design's capacity
+    // (the whole fleet's when several replicas share the traffic). The
+    // single-replica baseline rows get the per-replica *share* of that
+    // rate, so every row serves the same `load` relative to its own
+    // capacity instead of one server silently eating the fleet's traffic.
+    let n_replicas = spec.replicas.max(1);
+    let fleet_capacity = best.perf.tokens_per_s * n_replicas as f64;
+    let traffic = resolve_rate(&spec.traffic, load, fleet_capacity);
+    let spec = ServeSpec { traffic, ..*spec };
+    let mut single_traffic = traffic;
+    if n_replicas > 1 {
+        match &mut single_traffic.arrival {
+            ArrivalProcess::Poisson { rps } | ArrivalProcess::Bursty { rps, .. } => {
+                *rps /= n_replicas as f64
+            }
+            // closed loops self-pace; the partitioned replicated run
+            // splits the clients itself
+            ArrivalProcess::ClosedLoop { .. } => {}
+        }
+    }
+
+    let cfg = SimConfig::new(
+        batch.max(1),
+        KvBudget::from_design(&best.server, w, &best.mapping),
+        IterCost::from_perf(&best.perf, w).with_chunk(spec.prefill_chunk),
+        spec.paged_kv,
+    );
+    let mut rows: Vec<(String, ServeReport)> = Vec::new();
+    // Static window: a couple of token periods — long enough to coalesce,
+    // short enough not to dominate TTFT at low load.
+    let mut st = StaticBatch::new((2.0 * best.perf.token_period).max(0.005));
+    let mut co = ContinuousBatch;
+    let policies: [&mut dyn Policy; 2] = [&mut st, &mut co];
+    for policy in policies {
+        let r = simulate_trace(&cfg, policy, &single_traffic, &slo);
+        rows.push((r.policy.clone(), r));
+    }
+    if spec.replicas > 1 {
+        for route in [RoutePolicy::RoundRobin, RoutePolicy::Jsq, RoutePolicy::JsqTokens] {
+            let r =
+                simulate_replicated(&cfg, spec.replicas, route, &ContinuousBatch, &traffic, &slo);
+            rows.push((r.policy.clone(), r));
+        }
+    }
+    let slo_part = if slo.is_unconstrained() {
+        None
+    } else {
+        Some(engine.best_point_slo(&ctx.space, &ctx.servers, w, &spec))
+    };
+    ServeOutcome {
+        model: w.model.clone(),
+        ctx: w.ctx,
+        batch,
+        spec,
+        feasible: true,
+        rows,
+        slo: slo_part,
+    }
+}
+
+/// Build the multi-model optimize outcome: one Table-2 row per model.
+pub fn optimize_outcome(
+    ctx: &Ctx,
+    models: &[ModelSpec],
+    engine: &SweepEngine,
+) -> OptimizeOutcome {
+    let mut rows = Vec::with_capacity(models.len());
+    for m in models {
+        let grid = Workload::study_grid(m);
+        let Some((w, p)) = engine.best_over_grid(&ctx.space, &ctx.servers, &grid) else {
+            continue;
+        };
+        let max_ctx_tokens = max_context(&w, p.mapping.n_chips(), p.server.chiplet.sram_mb);
+        rows.push(OptimizeRow { model: m.clone(), workload: w, point: p, max_ctx_tokens });
+    }
+    OptimizeOutcome { rows }
+}
+
+// ---------------------------------------------------------------------------
+// Table rendering: the exact row shapes the `report` harnesses always
+// produced (they now delegate here).
+
+impl SweepOutcome {
+    /// The classic `ccloud sweep` report table.
+    pub fn to_table(&self) -> Table {
+        let mut t = Table::new(vec!["Metric", "Value"]).with_title(format!(
+            "Sweep engine: {} over the Table-2 grid ({} workloads)",
+            self.model.display, self.grid_len
+        ));
+        t.row(vec!["feasible servers (phase 1)".to_string(), self.feasible_servers.to_string()]);
+        t.row(vec!["pareto frontier".to_string(), self.frontier.to_string()]);
+        t.row(vec!["worker threads".to_string(), self.threads.to_string()]);
+        t.row(vec![
+            "(workload, server) pairs".to_string(),
+            format!("{} ({} bound-skipped)", self.stats.servers, self.stats.servers_pruned),
+        ]);
+        t.row(vec!["candidate mappings".to_string(), self.stats.candidates.to_string()]);
+        t.row(vec!["mappings simulated".to_string(), self.stats.simulated.to_string()]);
+        t.row(vec!["mappings pruned".to_string(), self.stats.mappings_pruned.to_string()]);
+        t.row(vec!["phase-2 wall time".to_string(), crate::util::fmt_secs(self.wall_s)]);
+        match &self.best {
+            Some((w, p)) => {
+                t.row(vec![
+                    "optimum".to_string(),
+                    format!(
+                        "{:.0} mm² die, tp={} pp={} µb={} @ ctx {} batch {}",
+                        p.server.chiplet.die_mm2,
+                        p.mapping.tp,
+                        p.mapping.pp,
+                        p.mapping.microbatch,
+                        w.ctx,
+                        w.batch
+                    ),
+                ]);
+                t.row(vec!["TCO/1M tokens".to_string(), format!("${:.3}", p.tco_per_mtok())]);
+                // Steady-state latency bounds of the optimum: what the
+                // analytic model alone can promise before any queueing.
+                t.row(vec![
+                    "optimum token period (TPOT bound)".to_string(),
+                    crate::util::fmt_secs(p.perf.token_period),
+                ]);
+                t.row(vec![
+                    "optimum prefill/seq (TTFT bound)".to_string(),
+                    crate::util::fmt_secs(p.perf.prefill_latency / w.batch.max(1) as f64),
+                ]);
+            }
+            None => {
+                t.row(vec!["optimum".to_string(), "none (no feasible design)".to_string()]);
+            }
+        }
+        if let Some(part) = &self.slo {
+            match &part.selection {
+                Some(sel) => {
+                    // Design identity and tails only — every engine
+                    // configuration (fast or reference) produces these rows
+                    // byte-identically, which the CI golden comparison
+                    // relies on. Stage-2 cost counters vary with
+                    // speculation and early abort, so they get their own
+                    // row.
+                    t.row(vec![
+                        "SLO-constrained optimum".to_string(),
+                        format!(
+                            "{:.0} mm² die, tp={} pp={} µb={} — ${:.3}/1M tok",
+                            sel.point.server.chiplet.die_mm2,
+                            sel.point.mapping.tp,
+                            sel.point.mapping.pp,
+                            sel.point.mapping.microbatch,
+                            sel.point.tco_per_mtok(),
+                        ),
+                    ]);
+                    t.row(vec![
+                        "SLO-sim tails".to_string(),
+                        format!(
+                            "ttft p99 {} tpot p99 {} occupancy {:.0}%",
+                            crate::util::fmt_secs(sel.report.ttft_p99_s),
+                            crate::util::fmt_secs(sel.report.tpot_p99_s),
+                            sel.report.occupancy * 100.0,
+                        ),
+                    ]);
+                    t.row(vec![
+                        "SLO stage-2 cost".to_string(),
+                        format!(
+                            "{} bound-feasible servers, {} sim-validated, {} aborted early",
+                            sel.bound_feasible, sel.validated, sel.aborted_early,
+                        ),
+                    ]);
+                }
+                None => {
+                    t.row(vec![
+                        "SLO-constrained optimum".to_string(),
+                        "none (no design meets the SLO under this traffic)".to_string(),
+                    ]);
+                }
+            }
+        }
+        t
+    }
+
+    /// Machine-readable form; see [`Outcome::to_json`] for the
+    /// engine-variant/invariant split.
+    pub fn to_json(&self) -> Json {
+        let best = match &self.best {
+            Some((w, p)) => design_json(w.ctx, w.batch, p),
+            None => Json::Null,
+        };
+        let slo = match &self.slo {
+            None => Json::Null,
+            Some(part) => match &part.selection {
+                Some(sel) => obj(vec![
+                    ("feasible", Json::Bool(true)),
+                    ("design", design_json(part.ctx, part.batch, &sel.point)),
+                    ("report", report_json(&sel.report)),
+                    ("bound_feasible", int(sel.bound_feasible)),
+                ]),
+                None => obj(vec![("feasible", Json::Bool(false))]),
+            },
+        };
+        let (slo_validated, slo_aborted) = match &self.slo {
+            Some(SloPart { selection: Some(sel), .. }) => {
+                (int(sel.validated), int(sel.aborted_early))
+            }
+            _ => (Json::Null, Json::Null),
+        };
+        obj(vec![
+            ("kind", Json::Str("sweep".into())),
+            ("model", Json::Str(self.model.name.into())),
+            ("grid_workloads", int(self.grid_len)),
+            ("feasible_servers", int(self.feasible_servers)),
+            ("pareto_frontier", int(self.frontier)),
+            ("best", best),
+            ("slo", slo),
+            (
+                "engine",
+                obj(vec![
+                    ("threads", int(self.threads)),
+                    ("wall_s", num(self.wall_s)),
+                    ("pairs", int(self.stats.servers)),
+                    ("servers_pruned", int(self.stats.servers_pruned)),
+                    ("candidates", int(self.stats.candidates)),
+                    ("simulated", int(self.stats.simulated)),
+                    ("mappings_pruned", int(self.stats.mappings_pruned)),
+                    ("mappings_infeasible", int(self.stats.mappings_infeasible)),
+                    ("slo_validated", slo_validated),
+                    ("slo_aborted_early", slo_aborted),
+                ]),
+            ),
+        ])
+    }
+}
+
+impl ServeOutcome {
+    /// The classic `ccloud serve-sim` report table.
+    pub fn to_table(&self) -> Table {
+        let mut t = Table::new(vec![
+            "Policy", "Req", "Tokens", "Tok/s", "Goodput", "TTFT p50", "TTFT p99", "TPOT p99",
+            "Occup %", "SLO met %",
+        ])
+        .with_title(format!(
+            "Serving simulation: {} @ ctx {} batch {} ({} requests{}{})",
+            self.model.display,
+            self.ctx,
+            self.batch,
+            self.spec.traffic.requests,
+            if self.spec.paged_kv { ", paged KV" } else { "" },
+            if self.spec.prefill_chunk > 0 {
+                format!(", prefill chunk {}", self.spec.prefill_chunk)
+            } else {
+                String::new()
+            },
+        ));
+        // Rows are fixed 10-wide; pad informational rows to the header arity.
+        let padded = |msg: &str| {
+            let mut v = vec![msg.to_string()];
+            v.resize(10, "-".to_string());
+            v
+        };
+        if !self.feasible {
+            t.row(padded("no feasible design"));
+            return t;
+        }
+        for (label, r) in &self.rows {
+            t.row(report_row(label.clone(), r));
+        }
+        match &self.slo {
+            None => {}
+            Some(Some(sel)) => {
+                let label = format!(
+                    "slo-opt ({:.0} mm², tp={} pp={}, ${:.3}/1M)",
+                    sel.point.server.chiplet.die_mm2,
+                    sel.point.mapping.tp,
+                    sel.point.mapping.pp,
+                    sel.point.tco_per_mtok(),
+                );
+                t.row(report_row(label, &sel.report));
+            }
+            Some(None) => {
+                t.row(padded("slo-opt: no design meets the SLO"));
+            }
+        }
+        t
+    }
+
+    /// Machine-readable form. Every field is engine-invariant: the
+    /// simulated rows are bit-identical across fast/reference engines, and
+    /// the selection row is the confirming (never-aborted) report.
+    pub fn to_json(&self) -> Json {
+        let rows = self
+            .rows
+            .iter()
+            .map(|(label, r)| {
+                obj(vec![("label", Json::Str(label.clone())), ("report", report_json(r))])
+            })
+            .collect();
+        let slo = match &self.slo {
+            None => Json::Null,
+            Some(None) => obj(vec![("feasible", Json::Bool(false))]),
+            Some(Some(sel)) => obj(vec![
+                ("feasible", Json::Bool(true)),
+                ("design", design_json(self.ctx, self.batch, &sel.point)),
+                ("report", report_json(&sel.report)),
+                ("bound_feasible", int(sel.bound_feasible)),
+            ]),
+        };
+        obj(vec![
+            ("kind", Json::Str("serve-sim".into())),
+            ("model", Json::Str(self.model.name.into())),
+            ("ctx", int(self.ctx)),
+            ("batch", int(self.batch)),
+            ("requests", int(self.spec.traffic.requests)),
+            ("replicas", int(self.spec.replicas)),
+            ("route", Json::Str(self.spec.route.name().into())),
+            ("paged_kv", Json::Bool(self.spec.paged_kv)),
+            ("prefill_chunk", int(self.spec.prefill_chunk)),
+            ("feasible", Json::Bool(self.feasible)),
+            ("rows", Json::Arr(rows)),
+            ("slo", slo),
+        ])
+    }
+}
+
+/// One shared row shape for every serve report row, so the cells cannot
+/// drift from the 10-column header.
+fn report_row(label: String, r: &ServeReport) -> Vec<String> {
+    vec![
+        label,
+        r.completed.to_string(),
+        r.tokens.to_string(),
+        fmt(r.tokens_per_s, 1),
+        fmt(r.goodput_tokens_per_s, 1),
+        crate::util::fmt_secs(r.ttft_p50_s),
+        crate::util::fmt_secs(r.ttft_p99_s),
+        crate::util::fmt_secs(r.tpot_p99_s),
+        fmt(r.occupancy * 100.0, 0),
+        fmt(r.slo_met_frac * 100.0, 0),
+    ]
+}
+
+impl OptimizeOutcome {
+    /// The Table-2 layout: one row per model.
+    pub fn to_table(&self) -> Table {
+        let mut t = Table::new(vec![
+            "Model",
+            "Params (B)",
+            "Die (mm2)",
+            "MB/Chip",
+            "TFLOPS/Chip",
+            "BW (TB/s)",
+            "Chips/Server",
+            "Servers",
+            "TP",
+            "PP",
+            "Batch",
+            "uBatch",
+            "MaxCtx",
+            "Tok/s/Chip",
+            "TCO/1M Tok ($)",
+        ])
+        .with_title("Table 2: TCO/Token-optimal Chiplet Cloud systems");
+        for r in &self.rows {
+            let chip = &r.point.server.chiplet;
+            t.row(vec![
+                r.model.display.to_string(),
+                fmt(r.model.n_params() / 1e9, 1),
+                fmt(chip.die_mm2, 0),
+                fmt(chip.sram_mb, 1),
+                fmt(chip.tflops, 2),
+                fmt(chip.mem_bw_gbps / 1e3, 2),
+                r.point.server.chips().to_string(),
+                r.point.n_servers.to_string(),
+                r.point.mapping.tp.to_string(),
+                r.point.mapping.pp.to_string(),
+                r.workload.batch.to_string(),
+                r.point.mapping.microbatch.to_string(),
+                format!("{}K", r.max_ctx_tokens / 1024),
+                fmt(r.point.perf.tokens_per_s_chip, 1),
+                fmt(r.point.tco_per_mtok(), 3),
+            ]);
+        }
+        t
+    }
+
+    /// Machine-readable form (engine-invariant throughout).
+    pub fn to_json(&self) -> Json {
+        let rows = self
+            .rows
+            .iter()
+            .map(|r| {
+                obj(vec![
+                    ("model", Json::Str(r.model.name.into())),
+                    ("params_b", num(r.model.n_params() / 1e9)),
+                    ("design", design_json(r.workload.ctx, r.workload.batch, &r.point)),
+                    ("max_ctx_tokens", int(r.max_ctx_tokens)),
+                ])
+            })
+            .collect();
+        obj(vec![("kind", Json::Str("optimize".into())), ("rows", Json::Arr(rows))])
+    }
+}
+
+// ---------------------------------------------------------------------------
+// JSON helpers.
+
+fn obj(pairs: Vec<(&str, Json)>) -> Json {
+    Json::Obj(pairs.into_iter().map(|(k, v)| (k.to_string(), v)).collect())
+}
+
+/// Finite numbers only — JSON has no `Infinity`/`NaN`, so degenerate
+/// values (unconstrained targets, empty-tail percentiles) emit `null`.
+fn num(x: f64) -> Json {
+    if x.is_finite() {
+        Json::Num(x)
+    } else {
+        Json::Null
+    }
+}
+
+fn int(x: usize) -> Json {
+    Json::Num(x as f64)
+}
+
+/// A design point flattened to its identity and headline metrics.
+fn design_json(ctx: usize, batch: usize, p: &DesignPoint) -> Json {
+    obj(vec![
+        ("die_mm2", num(p.server.chiplet.die_mm2)),
+        ("sram_mb", num(p.server.chiplet.sram_mb)),
+        ("tflops", num(p.server.chiplet.tflops)),
+        ("mem_bw_gbps", num(p.server.chiplet.mem_bw_gbps)),
+        ("chips_per_server", int(p.server.chips())),
+        ("n_servers", int(p.n_servers)),
+        ("tp", int(p.mapping.tp)),
+        ("pp", int(p.mapping.pp)),
+        ("microbatch", int(p.mapping.microbatch)),
+        ("ctx", int(ctx)),
+        ("batch", int(batch)),
+        ("tokens_per_s", num(p.perf.tokens_per_s)),
+        ("tokens_per_s_chip", num(p.perf.tokens_per_s_chip)),
+        ("token_period_s", num(p.perf.token_period)),
+        ("tco_per_mtok", num(p.tco_per_mtok())),
+    ])
+}
+
+/// A serve report flattened to its aggregate metrics.
+fn report_json(r: &ServeReport) -> Json {
+    obj(vec![
+        ("policy", Json::Str(r.policy.clone())),
+        ("replicas", int(r.replicas)),
+        ("offered", int(r.offered)),
+        ("completed", int(r.completed)),
+        ("tokens", int(r.tokens)),
+        ("makespan_s", num(r.makespan_s)),
+        ("tokens_per_s", num(r.tokens_per_s)),
+        ("goodput_tokens_per_s", num(r.goodput_tokens_per_s)),
+        ("slo_met_frac", num(r.slo_met_frac)),
+        ("ttft_p50_s", num(r.ttft_p50_s)),
+        ("ttft_p99_s", num(r.ttft_p99_s)),
+        ("tpot_p50_s", num(r.tpot_p50_s)),
+        ("tpot_p99_s", num(r.tpot_p99_s)),
+        ("occupancy", num(r.occupancy)),
+        ("iterations", num(r.iterations as f64)),
+        ("peak_live", int(r.peak_live)),
+        ("peak_kv_tokens", int(r.peak_kv_tokens)),
+        ("rejected", int(r.rejected)),
+        ("aborted_early", Json::Bool(r.aborted_early)),
+    ])
+}

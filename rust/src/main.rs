@@ -7,35 +7,47 @@
 //!   time); `--slo-ttft S --slo-tpot S` adds the SLO-constrained optimum
 //! * `serve-sim`              — discrete-event serving simulation: static vs
 //!   continuous batching on a seeded trace (`--smoke` for the CI preset)
+//! * `run <spec.json>...`     — execute declarative experiment specs
+//!   (several files = a campaign sharing one engine; `--json` for
+//!   machine-readable outcomes)
+//! * `validate <spec.json>...` — strict-parse + validate experiment specs
 //! * `table2` / `fig7`..`fig15` — regenerate a paper table/figure
 //! * `serve`                  — load AOT artifacts and serve a demo stream
 //! * `ccmem`                  — run the CC-MEM cycle simulator validations
 //!
+//! The experiment-shaped subcommands (`sweep`, `serve-sim`, `optimize`,
+//! `table2`, `run`) are pure CLI→[`Experiment`] translations dispatched
+//! through [`experiment::Engine::run`]; `--json` renders the structured
+//! outcome instead of the table.
+//!
 //! `--full` switches from the coarse sweep (default, seconds) to the
 //! paper-scale sweep (Table-1 ranges). `--out results` writes each table as
-//! CSV. `--threads N` pins the sweep-engine worker count (phase 1, phase 2
-//! *and* the speculative stage-2 SLO validation waves); `--seq` forces the
-//! sequential exhaustive path (no parallelism, no pruning, no Pareto
-//! ordering, reference-stepped event simulation without early abort — the
-//! reference behaviour fast runs are held byte-identical to).
+//! CSV (or the outcome as JSON under `--json`). `--threads N` pins the
+//! sweep-engine worker count (phase 1, phase 2 *and* the speculative
+//! stage-2 SLO validation waves); `--seq` forces the sequential exhaustive
+//! path (no parallelism, no pruning, no Pareto ordering, reference-stepped
+//! event simulation without early abort — the reference behaviour fast
+//! runs are held byte-identical to).
 
-use std::path::PathBuf;
+use std::path::{Path, PathBuf};
 use std::time::Duration;
 
 use chiplet_cloud::config::hardware::ExploreSpace;
 use chiplet_cloud::config::ModelSpec;
 use chiplet_cloud::coordinator::{Coordinator, CoordinatorConfig};
-use chiplet_cloud::report::{self, Ctx};
+use chiplet_cloud::experiment::{self, cli, Outcome};
+use chiplet_cloud::report;
 use chiplet_cloud::util::cli::Args;
 use chiplet_cloud::util::rng::Rng;
 use chiplet_cloud::{Error, Result};
 
 fn usage() -> ! {
     eprintln!(
-        "usage: ccloud <cmd> [--full] [--out DIR] [--model NAME] [--threads N] [--seq] ...\n\
-         cmds: explore optimize sweep serve-sim table2 fig7..fig15 ablate serve ccmem\n\
+        "usage: ccloud <cmd> [--full] [--out DIR] [--json] [--model NAME] [--threads N] [--seq] ...\n\
+         cmds: explore optimize sweep serve-sim run validate table2 fig7..fig15 ablate serve ccmem\n\
+         run/validate: ccloud run experiments/spec.json [more.json ...] [--json]\n\
          serve-sim/sweep serving-model flags: [--slo-ttft S] [--slo-tpot S] [--prefill-chunk N]\n\
-         [--paged] [--replicas N] [--route rr|jsq] [--rps R] [--trace poisson|bursty|closed]"
+         [--paged] [--replicas N] [--route rr|jsq|jsq-tokens] [--rps R] [--trace poisson|bursty|closed]"
     );
     std::process::exit(2)
 }
@@ -43,11 +55,18 @@ fn usage() -> ! {
 fn main() -> Result<()> {
     let args = Args::from_env();
     let cmd = args.positional.first().cloned().unwrap_or_else(|| usage());
+    // The `--key value` grammar lets a boolean flag placed before a
+    // positional argument swallow it (`run --seq a.json b.json` would
+    // silently drop a.json from the campaign) — reject that loudly.
+    args.reject_valued_flags(&["json", "seq", "full", "paged", "smoke"])
+        .map_err(Error::Config)?;
     let out_dir: Option<PathBuf> = args.get("out").map(PathBuf::from);
     let out = out_dir.as_deref();
     let space = if args.has("full") { ExploreSpace::default() } else { ExploreSpace::coarse() };
 
-    // Sweep-engine knobs (read by SweepEngine::default / util::parallel).
+    // Legacy sweep-engine env knobs (read by SweepEngine::default inside
+    // the figure harnesses; the experiment path passes its knobs
+    // explicitly).
     if let Some(t) = args.get("threads") {
         std::env::set_var("CC_SWEEP_THREADS", t);
     }
@@ -75,67 +94,67 @@ fn main() -> Result<()> {
                 stats.rejected_thermal
             );
         }
-        "optimize" => {
-            let name = args.get("model").unwrap_or("gpt3");
-            let model = ModelSpec::by_name(name)
-                .ok_or_else(|| Error::Config(format!("unknown model {name}")))?;
-            let ctx = Ctx::new(space);
-            let t = report::table2(&ctx, &[model], out);
-            print!("{}", t.render());
-        }
-        "sweep" => {
-            let name = args.get("model").unwrap_or("gpt3");
-            let model = ModelSpec::by_name(name)
-                .ok_or_else(|| Error::Config(format!("unknown model {name}")))?;
-            let slo_spec = slo_from_args(&args)?;
-            let serve_spec = if slo_spec.is_unconstrained() {
-                // The serving model only enters the sweep through the
-                // SLO-constrained selection; accepting these flags here
-                // and ignoring them would misrepresent the optimum.
-                for flag in ["paged", "prefill-chunk", "replicas", "route", "trace", "rps"] {
-                    if args.has(flag) {
-                        return Err(Error::Config(format!(
-                            "--{flag} has no effect on an unconstrained sweep — add \
-                             --slo-ttft/--slo-tpot targets (or drop the flag)"
-                        )));
-                    }
-                }
-                None
-            } else {
-                // The sweep has no per-design rate resolution, so default to
-                // a saturating closed loop unless a trace was given.
-                let mut traffic = traffic_from_args(&args)?;
-                if !args.has("trace") && !args.has("rps") {
-                    traffic.arrival = chiplet_cloud::config::ArrivalProcess::ClosedLoop {
-                        clients: args.get_or("clients", 64),
-                        think_s: args.get_or("think", 0.0),
-                    };
-                }
-                let spec = chiplet_cloud::config::ServeSpec::new(traffic, slo_spec);
-                Some(serve_model_from_args(&args, spec)?)
+        // Experiment-shaped subcommands: translate flags to a spec, run it
+        // through the one dispatcher, render table or JSON.
+        "sweep" | "serve-sim" | "optimize" | "table2" => {
+            let exp = cli::from_args(&cmd, &args)?;
+            let outcome = experiment::Engine::new().run(&exp)?;
+            let id = match cmd.as_str() {
+                "sweep" => "sweep",
+                "serve-sim" => "serve_sim",
+                _ => "table2",
             };
-            let ctx = Ctx::new(space);
-            let t = report::sweep_summary(&ctx, &model, serve_spec.as_ref(), out);
-            print!("{}", t.render());
+            emit(&outcome, &args, out, id);
         }
-        "serve-sim" => serve_sim(&args, space, out)?,
-        "table2" => {
-            let ctx = Ctx::new(space);
-            let t = report::table2(&ctx, &ModelSpec::paper_models(), out);
-            print!("{}", t.render());
+        "run" => {
+            let paths: Vec<&String> = args.positional.iter().skip(1).collect();
+            if paths.is_empty() {
+                return Err(Error::Config(
+                    "run needs at least one spec file: ccloud run experiments/spec.json".into(),
+                ));
+            }
+            let mut specs = Vec::with_capacity(paths.len());
+            for p in &paths {
+                let mut e = cli::load_spec(Path::new(p.as_str()))?;
+                cli::apply_engine_overrides(&mut e, &args)?;
+                specs.push(e);
+            }
+            let mut engine = experiment::Engine::new();
+            let mut results = engine.run_campaign(&specs)?;
+            let (id, outcome) = if results.len() == 1 {
+                let (name, outcome) = results.pop().expect("one result");
+                (name, outcome)
+            } else {
+                ("campaign".to_string(), Outcome::Campaign(results))
+            };
+            emit(&outcome, &args, out, &id);
         }
-        "fig7" => print!("{}", report::fig7(&Ctx::new(space), out).render()),
+        "validate" => {
+            let paths: Vec<&String> = args.positional.iter().skip(1).collect();
+            if paths.is_empty() {
+                return Err(Error::Config(
+                    "validate needs at least one spec file: ccloud validate experiments/*.json"
+                        .into(),
+                ));
+            }
+            for p in &paths {
+                let e = cli::load_spec(Path::new(p.as_str()))?;
+                e.validate().map_err(|err| Error::Config(format!("{p}: {err}")))?;
+                println!("{p}: ok ({})", e.name);
+            }
+        }
+        "fig7" => print!("{}", report::fig7(&report::Ctx::new(space), out).render()),
         "fig8" => {
             let ctxs = [1024usize, 2048, 4096];
             let batches = [1usize, 4, 16, 64, 256, 1024];
-            print!("{}", report::fig8(&Ctx::new(space), &ctxs, &batches, out).render())
+            print!("{}", report::fig8(&report::Ctx::new(space), &ctxs, &batches, out).render())
         }
-        "fig9" => print!("{}", report::fig9(&Ctx::new(space), &[16, 64, 256], out).render()),
-        "fig10" => print!("{}", report::fig10(&Ctx::new(space), out).render()),
-        "fig11" => print!("{}", report::fig11(&Ctx::new(space), out).render()),
-        "fig12" => print!("{}", report::fig12(&Ctx::new(space), out).render()),
-        "fig13" => print!("{}", report::fig13(&Ctx::new(space), out).render()),
-        "fig14" => print!("{}", report::fig14(&Ctx::new(space), out).render()),
+        "fig9" => print!("{}", report::fig9(&report::Ctx::new(space), &[16, 64, 256], out).render()),
+        "fig10" => print!("{}", report::fig10(&report::Ctx::new(space), out).render()),
+        "fig11" => print!("{}", report::fig11(&report::Ctx::new(space), out).render()),
+        "fig12" => print!("{}", report::fig12(&report::Ctx::new(space), out).render()),
+        "fig13" => print!("{}", report::fig13(&report::Ctx::new(space), out).render()),
+        "fig14" => print!("{}", report::fig14(&report::Ctx::new(space), out).render()),
         "fig15" => print!("{}", report::fig15(out).render()),
         "ablate" => {
             let name = args.get("model").unwrap_or("gpt3");
@@ -156,151 +175,23 @@ fn main() -> Result<()> {
     Ok(())
 }
 
-/// Parse `--name` as a positive, finite f64. `Args::get_or` silently falls
-/// back to the default on a parse failure, which is exactly how a typo'd
-/// `--slo-ttft abc` used to become an unconstrained (∞) target — here it
-/// is an error instead.
-fn parse_positive_f64(args: &Args, name: &str) -> Result<Option<f64>> {
-    let Some(raw) = args.get(name) else { return Ok(None) };
-    let v: f64 = raw
-        .parse()
-        .map_err(|_| Error::Config(format!("--{name} must be a number (got '{raw}')")))?;
-    if !v.is_finite() || v <= 0.0 {
-        return Err(Error::Config(format!(
-            "--{name} must be positive and finite (got '{raw}')"
-        )));
-    }
-    Ok(Some(v))
-}
-
-/// Parse `--name` as a usize, erroring on unparsable input instead of
-/// silently falling back to the default (the `Args::get_or` failure mode),
-/// and enforcing a minimum.
-fn parse_usize(args: &Args, name: &str, default: usize, min: usize) -> Result<usize> {
-    let v = match args.get(name) {
-        None => default,
-        Some(raw) => raw.parse().map_err(|_| {
-            Error::Config(format!("--{name} must be a non-negative integer (got '{raw}')"))
-        })?,
-    };
-    if v < min {
-        return Err(Error::Config(format!("--{name} must be >= {min} (got {v})")));
-    }
-    Ok(v)
-}
-
-/// SLO targets from `--slo-ttft` / `--slo-tpot` (seconds; absent = ∞).
-/// Non-positive or NaN targets are rejected: a zero or NaN target can
-/// never be met (every comparison fails) and would silently turn the
-/// whole SLO-constrained sweep into "no feasible design".
-fn slo_from_args(args: &Args) -> Result<chiplet_cloud::config::SloSpec> {
-    Ok(chiplet_cloud::config::SloSpec::new(
-        parse_positive_f64(args, "slo-ttft")?.unwrap_or(f64::INFINITY),
-        parse_positive_f64(args, "slo-tpot")?.unwrap_or(f64::INFINITY),
-    ))
-}
-
-/// Traffic description from the CLI flags. An *absent* `--rps` lets
-/// `report::serve_sim` resolve the rate from `--load` × the design's
-/// capacity; an explicit non-positive or NaN `--rps` is rejected — a zero
-/// rate would space open-loop arrivals ~10¹² virtual seconds apart, so
-/// the trace never makes progress and every SLO trivially "passes".
-fn traffic_from_args(args: &Args) -> Result<chiplet_cloud::config::TrafficSpec> {
-    use chiplet_cloud::config::{ArrivalProcess, TrafficSpec};
-    let requests = parse_usize(args, "requests", 400, 1)?;
-    let prompt = parse_usize(args, "prompt-tokens", 64, 0)?;
-    let lo = parse_usize(args, "tokens-lo", 16, 1)?;
-    let hi = parse_usize(args, "tokens-hi", 128, 1)?;
-    if lo > hi {
-        return Err(Error::Config(format!("--tokens-lo {lo} exceeds --tokens-hi {hi}")));
-    }
-    let rps: f64 = parse_positive_f64(args, "rps")?.unwrap_or(0.0);
-    let arrival = match args.get("trace").unwrap_or("poisson") {
-        "bursty" => ArrivalProcess::Bursty { rps, burst: parse_usize(args, "burst", 8, 1)? },
-        "closed" => ArrivalProcess::ClosedLoop {
-            clients: parse_usize(args, "clients", 64, 1)?,
-            think_s: args.get_or("think", 0.0),
-        },
-        "poisson" => ArrivalProcess::Poisson { rps },
-        other => {
-            return Err(Error::Config(format!(
-                "--trace must be poisson, bursty or closed (got '{other}')"
-            )))
+/// Render an outcome: the classic tables (persisted as CSV under `--out`)
+/// or, with `--json`, the structured outcome document (written as
+/// `<id>.json` under `--out`).
+fn emit(outcome: &Outcome, args: &Args, out: Option<&Path>, id: &str) {
+    if args.has("json") {
+        let s = report::to_json(outcome);
+        println!("{s}");
+        if let Some(dir) = out {
+            let _ = std::fs::create_dir_all(dir);
+            let _ = std::fs::write(dir.join(format!("{id}.json")), s + "\n");
         }
-    };
-    Ok(TrafficSpec {
-        arrival,
-        requests,
-        prompt_tokens: prompt,
-        new_tokens_lo: lo,
-        new_tokens_hi: hi,
-        seed: args.get_or("seed", 42),
-    })
-}
-
-/// The serving-model knobs shared by `serve-sim` and `sweep`: chunked
-/// prefill, paged-KV accounting and multi-replica routing.
-fn serve_model_from_args(
-    args: &Args,
-    mut spec: chiplet_cloud::config::ServeSpec,
-) -> Result<chiplet_cloud::config::ServeSpec> {
-    use chiplet_cloud::sched::RoutePolicy;
-    spec.prefill_chunk = parse_usize(args, "prefill-chunk", 0, 0)?;
-    spec.paged_kv = args.has("paged");
-    spec.replicas = parse_usize(args, "replicas", 1, 1)?;
-    spec.route = match args.get("route") {
-        None => RoutePolicy::RoundRobin,
-        Some(s) => RoutePolicy::parse(s)
-            .ok_or_else(|| Error::Config(format!("--route must be rr or jsq (got '{s}')")))?,
-    };
-    Ok(spec)
-}
-
-/// Discrete-event serving simulation (`ccloud serve-sim`): static vs
-/// continuous batching on the model's optimal design — with `--paged`,
-/// `--prefill-chunk N` and `--replicas N --route rr|jsq` switching in the
-/// per-slot serving model — plus the SLO-constrained selection when
-/// targets are given. `--smoke` is the CI preset: small model, short
-/// trace, seconds end to end.
-fn serve_sim(args: &Args, space: ExploreSpace, out: Option<&std::path::Path>) -> Result<()> {
-    let smoke = args.has("smoke");
-    let name = args.get("model").unwrap_or(if smoke { "gpt2" } else { "gpt3" });
-    let model = ModelSpec::by_name(name)
-        .ok_or_else(|| Error::Config(format!("unknown model {name}")))?;
-    let wctx: usize = args.get_or("ctx", 1024);
-    let batch: usize = args.get_or("batch", if smoke { 32 } else { 256 });
-    let mut traffic = traffic_from_args(args)?;
-    if smoke {
-        // Smoke defaults apply only where the user gave no flag — the
-        // values behind explicit flags were already validated above, and
-        // re-reading them here would silently undo that.
-        if !args.has("requests") {
-            traffic.requests = 120;
-        }
-        if !args.has("prompt-tokens") {
-            traffic.prompt_tokens = 32;
-        }
-        if !args.has("tokens-lo") {
-            traffic.new_tokens_lo = 8;
-        }
-        if !args.has("tokens-hi") {
-            traffic.new_tokens_hi = 32;
-        }
-        if traffic.new_tokens_lo > traffic.new_tokens_hi {
-            return Err(Error::Config(format!(
-                "--tokens-lo {} exceeds --tokens-hi {} under the smoke defaults",
-                traffic.new_tokens_lo, traffic.new_tokens_hi
-            )));
+    } else {
+        for (tid, t) in outcome.named_tables(id) {
+            print!("{}", t.render());
+            report::persist(&t, out, &tid);
         }
     }
-    let load: f64 = parse_positive_f64(args, "load")?.unwrap_or(0.8);
-    let slo = slo_from_args(args)?;
-    let spec = serve_model_from_args(args, chiplet_cloud::config::ServeSpec::new(traffic, slo))?;
-    let w = chiplet_cloud::config::Workload::new(model, wctx, batch);
-    let ctx = Ctx::new(space);
-    let t = report::serve_sim(&ctx, &w, &spec, load, out);
-    print!("{}", t.render());
-    Ok(())
 }
 
 /// Demo serving loop on the AOT artifacts (see examples/serve_llm.rs for

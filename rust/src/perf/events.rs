@@ -36,8 +36,12 @@
 //!   reported as incomplete rather than silently dropped.
 //!
 //! [`simulate_replicated`] runs N independent replicas of the same design
-//! behind a [`RoutePolicy`] (round-robin or join-shortest-queue) so the
-//! simulator can answer fleet-level questions, not just single-server ones.
+//! behind a [`RoutePolicy`] (round-robin, join-shortest-queue, or
+//! token-weighted join-shortest-queue) so the simulator can answer
+//! fleet-level questions, not just single-server ones. The `*_on` variants
+//! ([`simulate_trace_on`], [`simulate_replicated_on`]) accept a
+//! pre-materialized [`open_loop_trace`] so callers validating many designs
+//! against the same traffic share one trace instead of re-drawing it.
 //!
 //! ## Simulator throughput: decode fast-forward and early abort
 //!
@@ -557,6 +561,19 @@ impl Replica {
         self.queue.len() + self.occupied()
     }
 
+    /// Outstanding token *work*: prompt + generation tokens still to be
+    /// processed across the queue and the live slots — the token-weighted
+    /// [`RoutePolicy::JsqTokens`] load signal. Under heavy-tailed token
+    /// budgets a queue-length count treats a 4-token request and a
+    /// 1000-token request as equal load; summed remaining work does not.
+    fn outstanding_tokens(&self) -> usize {
+        let queued: usize =
+            self.queue.iter().map(|(a, _)| a.prompt_tokens + a.new_tokens).sum();
+        let live: usize =
+            self.slots.iter().flatten().map(|s| s.prefill_remaining + s.remaining).sum();
+        queued + live
+    }
+
     /// Move every self-generated arrival with `at_s <= now` into the queue.
     fn materialize(&mut self) {
         while self.pending.front().map(|a| a.at_s <= self.now).unwrap_or(false) {
@@ -1035,7 +1052,27 @@ pub fn simulate_trace(
     traffic: &TrafficSpec,
     slo: &SloSpec,
 ) -> ServeReport {
-    let pending: VecDeque<Arrival> = open_loop_trace(traffic).into();
+    simulate_trace_on(cfg, policy, traffic, &open_loop_trace(traffic), slo)
+}
+
+/// [`simulate_trace`] over a pre-materialized open-loop arrival list — the
+/// cross-candidate warm start: callers validating many designs against the
+/// *same* traffic ([`crate::evaluate::SweepEngine::best_point_slo`])
+/// materialize [`open_loop_trace`] once and share it, instead of re-drawing
+/// the identical seeded trace per validation. Passing exactly
+/// `open_loop_trace(traffic)` makes this byte-identical to
+/// [`simulate_trace`] by construction; passing anything else is on the
+/// caller (the hand-built-trace tests use that deliberately). Closed-loop
+/// specs ignore `trace` (their arrivals are synthesized during the run —
+/// pass `&[]`).
+pub fn simulate_trace_on(
+    cfg: &SimConfig,
+    policy: &mut dyn Policy,
+    traffic: &TrafficSpec,
+    trace: &[Arrival],
+    slo: &SloSpec,
+) -> ServeReport {
+    let pending: VecDeque<Arrival> = trace.to_vec().into();
     let closed = match traffic.arrival {
         ArrivalProcess::ClosedLoop { clients, .. } => {
             Some(closed_loop_state(traffic, clients.max(1), traffic.requests))
@@ -1070,10 +1107,26 @@ pub fn simulate_replicated<P: Policy + Clone>(
     traffic: &TrafficSpec,
     slo: &SloSpec,
 ) -> ServeReport {
+    simulate_replicated_on(cfg, replicas, route, policy, traffic, &open_loop_trace(traffic), slo)
+}
+
+/// [`simulate_replicated`] over a pre-materialized open-loop arrival list
+/// (see [`simulate_trace_on`] for the warm-start contract). The routed
+/// schedule depends only on the arrival list and the fleet state, so a
+/// shared trace replays bit-identically to a per-call regeneration.
+pub fn simulate_replicated_on<P: Policy + Clone>(
+    cfg: &SimConfig,
+    replicas: usize,
+    route: RoutePolicy,
+    policy: &P,
+    traffic: &TrafficSpec,
+    trace: &[Arrival],
+    slo: &SloSpec,
+) -> ServeReport {
     let n = replicas.max(1);
     if n == 1 {
         let mut p = policy.clone();
-        return simulate_trace(cfg, &mut p, traffic, slo);
+        return simulate_trace_on(cfg, &mut p, traffic, trace, slo);
     }
     // Every replica carries the *fleet-wide* violation budget — its own
     // violators alone crossing it is sufficient (the fleet total can only
@@ -1125,7 +1178,7 @@ pub fn simulate_replicated<P: Policy + Clone>(
     }
     let mut rr_next = 0usize;
     let mut fleet_aborted = false;
-    for a in open_loop_trace(traffic) {
+    for a in trace.iter().copied() {
         // Bring the whole fleet up to the arrival instant so the router
         // sees each replica's queue as of `a.at_s`.
         for (rep, pol) in reps.iter_mut().zip(pols.iter_mut()) {
@@ -1148,6 +1201,9 @@ pub fn simulate_replicated<P: Policy + Clone>(
             }
             RoutePolicy::Jsq => {
                 (0..n).min_by_key(|&i| (reps[i].outstanding(), i)).expect("replicas > 0")
+            }
+            RoutePolicy::JsqTokens => {
+                (0..n).min_by_key(|&i| (reps[i].outstanding_tokens(), i)).expect("replicas > 0")
             }
         };
         reps[target].enqueue(a);
@@ -1671,6 +1727,105 @@ mod tests {
         assert_eq!(rep.completed, 60);
         // 3 clients per replica bound per-replica concurrency
         assert!(rep.peak_live <= 3, "peak={}", rep.peak_live);
+    }
+
+    /// The warm-start entry points over exactly `open_loop_trace(t)` must
+    /// replay the self-generating paths to the bit — the contract the
+    /// sweep's cross-candidate trace sharing rests on.
+    #[test]
+    fn warm_trace_entry_points_are_bit_identical() {
+        let t = TrafficSpec {
+            arrival: ArrivalProcess::Bursty { rps: 60.0, burst: 4 },
+            ..TrafficSpec::poisson(60.0, 120, 16, 4, 32)
+        }
+        .with_seed(31);
+        let trace = open_loop_trace(&t);
+        let slo = SloSpec::unconstrained();
+        let a = simulate_trace(&cfg(4), &mut ContinuousBatch, &t, &slo);
+        let b = simulate_trace_on(&cfg(4), &mut ContinuousBatch, &t, &trace, &slo);
+        assert_eq!(a.fingerprint(), b.fingerprint());
+        for route in [RoutePolicy::RoundRobin, RoutePolicy::Jsq, RoutePolicy::JsqTokens] {
+            let a = simulate_replicated(&cfg(4), 2, route, &ContinuousBatch, &t, &slo);
+            let b =
+                simulate_replicated_on(&cfg(4), 2, route, &ContinuousBatch, &t, &trace, &slo);
+            assert_eq!(a.fingerprint(), b.fingerprint(), "{route:?}");
+        }
+    }
+
+    /// Hand-built trace where count-based JSQ and token-weighted JSQ must
+    /// disagree: a 1000-token request parks on replica 0, and the third
+    /// arrival sees outstanding *counts* tied (1 vs 1) but outstanding
+    /// *work* wildly skewed (~1000 vs ~4 tokens). Count-JSQ ties to the
+    /// lowest index and strands the newcomer behind the long job;
+    /// token-JSQ routes it to the nearly-idle replica.
+    #[test]
+    fn jsq_tokens_routes_on_outstanding_work_not_count() {
+        let t = TrafficSpec::poisson(1.0, 3, 1, 1, 1000);
+        let trace = vec![
+            Arrival { id: 0, at_s: 0.0, prompt_tokens: 1, new_tokens: 1000 },
+            Arrival { id: 1, at_s: 0.001, prompt_tokens: 1, new_tokens: 4 },
+            Arrival { id: 2, at_s: 0.002, prompt_tokens: 1, new_tokens: 4 },
+        ];
+        let run = |route: RoutePolicy| {
+            simulate_replicated_on(
+                &cfg(1),
+                2,
+                route,
+                &ContinuousBatch,
+                &t,
+                &trace,
+                &SloSpec::unconstrained(),
+            )
+        };
+        let by_count = run(RoutePolicy::Jsq);
+        let by_tokens = run(RoutePolicy::JsqTokens);
+        assert_eq!(by_count.completed, 3);
+        assert_eq!(by_tokens.completed, 3);
+        let ttft = |r: &ServeReport| r.per_request[2].ttft_s();
+        assert!(
+            ttft(&by_count) > 1.0,
+            "count-JSQ must strand request 2 behind the 1000-token job (ttft {})",
+            ttft(&by_count)
+        );
+        assert!(
+            ttft(&by_tokens) < 0.5,
+            "token-JSQ must route request 2 to the short queue (ttft {})",
+            ttft(&by_tokens)
+        );
+    }
+
+    /// Token-weighted routing under heavy-tailed budgets: everything still
+    /// completes, replay is bit-reproducible, and across seeds the
+    /// aggregate p99 TTFT is no worse than load-oblivious round-robin.
+    #[test]
+    fn jsq_tokens_beats_round_robin_under_heavy_tails() {
+        let mk = |seed: u64| {
+            TrafficSpec {
+                arrival: ArrivalProcess::Bursty { rps: 5.0, burst: 6 },
+                ..TrafficSpec::poisson(5.0, 150, 16, 1, 256)
+            }
+            .with_seed(seed)
+        };
+        let run = |t: &TrafficSpec, route: RoutePolicy| {
+            simulate_replicated(&cfg(4), 2, route, &ContinuousBatch, t, &SloSpec::unconstrained())
+        };
+        let (mut rr_sum, mut jsqt_sum) = (0.0f64, 0.0f64);
+        for seed in [3u64, 7, 11] {
+            let t = mk(seed);
+            let rr = run(&t, RoutePolicy::RoundRobin);
+            let jsqt = run(&t, RoutePolicy::JsqTokens);
+            assert_eq!(rr.completed, 150);
+            assert_eq!(jsqt.completed, 150);
+            let again = run(&t, RoutePolicy::JsqTokens);
+            assert_eq!(jsqt.fingerprint(), again.fingerprint(), "seed {seed}");
+            rr_sum += rr.ttft_p99_s;
+            jsqt_sum += jsqt.ttft_p99_s;
+        }
+        assert!(
+            jsqt_sum <= rr_sum,
+            "token-weighted JSQ p99 TTFT (sum {jsqt_sum}) must not lose to round-robin \
+             (sum {rr_sum}) under heavy-tailed bursts"
+        );
     }
 
     #[test]

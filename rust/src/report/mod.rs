@@ -12,7 +12,6 @@ use crate::config::{ModelSpec, Workload};
 use crate::cost::nre::NreModel;
 use crate::evaluate::{self, multi_model, sparsity, DesignPoint};
 use crate::explore::phase1;
-use crate::perf::simulator::max_context;
 use crate::util::table::Table;
 
 /// Persist a table as CSV under `out_dir` when given.
@@ -54,175 +53,43 @@ fn fmt(v: f64, digits: usize) -> String {
 /// its steady-state latency bounds, and (when `slo` is given) the
 /// SLO-constrained optimum the event simulator confirmed
 /// (`ccloud sweep [--model NAME] [--slo-ttft S --slo-tpot S]`).
+///
+/// *Deprecated shim*: delegates to
+/// [`crate::experiment::sweep_outcome`] — prefer describing the run as a
+/// [`crate::config::Experiment`] and dispatching
+/// [`crate::experiment::Engine::run`]; this wrapper only renders and
+/// persists the table.
 pub fn sweep_summary(
     ctx: &Ctx,
     model: &ModelSpec,
     slo: Option<&crate::config::ServeSpec>,
     out_dir: Option<&Path>,
 ) -> Table {
-    use crate::evaluate::SweepEngine;
-    let frontier = crate::explore::pareto::frontier_indices(&ctx.servers).len();
-    let grid = Workload::study_grid(model);
-    let engine = SweepEngine::default();
-    let t0 = std::time::Instant::now();
-    let (best, stats) = engine.best_over_grid_stats(&ctx.space, &ctx.servers, &grid);
-    let wall = t0.elapsed().as_secs_f64();
-    let mut t = Table::new(vec!["Metric", "Value"]).with_title(format!(
-        "Sweep engine: {} over the Table-2 grid ({} workloads)",
-        model.display,
-        grid.len()
-    ));
-    t.row(vec!["feasible servers (phase 1)".to_string(), ctx.servers.len().to_string()]);
-    t.row(vec!["pareto frontier".to_string(), frontier.to_string()]);
-    t.row(vec!["worker threads".to_string(), crate::util::parallel::num_threads().to_string()]);
-    t.row(vec![
-        "(workload, server) pairs".to_string(),
-        format!("{} ({} bound-skipped)", stats.servers, stats.servers_pruned),
-    ]);
-    t.row(vec!["candidate mappings".to_string(), stats.candidates.to_string()]);
-    t.row(vec!["mappings simulated".to_string(), stats.simulated.to_string()]);
-    t.row(vec!["mappings pruned".to_string(), stats.mappings_pruned.to_string()]);
-    t.row(vec!["phase-2 wall time".to_string(), crate::util::fmt_secs(wall)]);
-    match &best {
-        Some((w, p)) => {
-            t.row(vec![
-                "optimum".to_string(),
-                format!(
-                    "{:.0} mm² die, tp={} pp={} µb={} @ ctx {} batch {}",
-                    p.server.chiplet.die_mm2,
-                    p.mapping.tp,
-                    p.mapping.pp,
-                    p.mapping.microbatch,
-                    w.ctx,
-                    w.batch
-                ),
-            ]);
-            t.row(vec!["TCO/1M tokens".to_string(), format!("${:.3}", p.tco_per_mtok())]);
-            // Steady-state latency bounds of the optimum: what the analytic
-            // model alone can promise before any queueing.
-            t.row(vec![
-                "optimum token period (TPOT bound)".to_string(),
-                crate::util::fmt_secs(p.perf.token_period),
-            ]);
-            t.row(vec![
-                "optimum prefill/seq (TTFT bound)".to_string(),
-                crate::util::fmt_secs(p.perf.prefill_latency / w.batch.max(1) as f64),
-            ]);
-        }
-        None => {
-            t.row(vec!["optimum".to_string(), "none (no feasible design)".to_string()]);
-        }
-    }
-    if let Some(spec) = slo {
-        let w = Workload::new(model.clone(), spec_ctx(&grid, &best), spec_batch(&grid, &best));
-        // An unresolved open-loop rate (rps <= 0) would make the SLO pass
-        // vacuous; pace it at 80% of the unconstrained optimum's capacity —
-        // the whole fleet's when the spec serves several replicas, matching
-        // `serve_sim` (validation spreads the traffic across them).
-        let traffic = match &best {
-            Some((_, p)) => {
-                let fleet = p.perf.tokens_per_s * spec.replicas.max(1) as f64;
-                resolve_rate(&spec.traffic, 0.8, fleet)
-            }
-            None => spec.traffic,
-        };
-        let spec = crate::config::ServeSpec { traffic, ..*spec };
-        match engine.best_point_slo(&ctx.space, &ctx.servers, &w, &spec) {
-            Some(sel) => {
-                // Design identity and tails only — every engine
-                // configuration (fast or reference) produces these rows
-                // byte-identically, which the CI golden comparison relies
-                // on. Stage-2 cost counters vary with speculation and
-                // early abort, so they get their own row.
-                t.row(vec![
-                    "SLO-constrained optimum".to_string(),
-                    format!(
-                        "{:.0} mm² die, tp={} pp={} µb={} — ${:.3}/1M tok",
-                        sel.point.server.chiplet.die_mm2,
-                        sel.point.mapping.tp,
-                        sel.point.mapping.pp,
-                        sel.point.mapping.microbatch,
-                        sel.point.tco_per_mtok(),
-                    ),
-                ]);
-                t.row(vec![
-                    "SLO-sim tails".to_string(),
-                    format!(
-                        "ttft p99 {} tpot p99 {} occupancy {:.0}%",
-                        crate::util::fmt_secs(sel.report.ttft_p99_s),
-                        crate::util::fmt_secs(sel.report.tpot_p99_s),
-                        sel.report.occupancy * 100.0,
-                    ),
-                ]);
-                t.row(vec![
-                    "SLO stage-2 cost".to_string(),
-                    format!(
-                        "{} bound-feasible servers, {} sim-validated, {} aborted early",
-                        sel.bound_feasible, sel.validated, sel.aborted_early,
-                    ),
-                ]);
-            }
-            None => {
-                t.row(vec![
-                    "SLO-constrained optimum".to_string(),
-                    "none (no design meets the SLO under this traffic)".to_string(),
-                ]);
-            }
-        }
-    }
+    let engine = crate::evaluate::SweepEngine::default();
+    let load = crate::config::experiment::defaults::LOAD;
+    let outcome = crate::experiment::sweep_outcome(ctx, model, slo, load, &engine);
+    let t = outcome.to_table();
     persist(&t, out_dir, "sweep");
     t
-}
-
-/// The grid point the unconstrained optimum chose (fallback: a mid-grid
-/// default), so the SLO-constrained pass compares like for like.
-fn spec_ctx(grid: &[Workload], best: &Option<(Workload, crate::evaluate::DesignPoint)>) -> usize {
-    best.as_ref().map(|(w, _)| w.ctx).unwrap_or_else(|| grid[grid.len() / 2].ctx)
-}
-
-fn spec_batch(grid: &[Workload], best: &Option<(Workload, crate::evaluate::DesignPoint)>) -> usize {
-    best.as_ref().map(|(w, _)| w.batch).unwrap_or_else(|| grid[grid.len() / 2].batch)
-}
-
-/// Resolve a non-positive open-loop arrival rate to `load` × the design's
-/// steady-state *request* capacity (tokens/s over the mean token budget).
-/// An rps of 0 would otherwise space arrivals ~10¹² virtual seconds apart
-/// and make every SLO trivially pass. Closed-loop traffic is self-pacing
-/// and returned unchanged.
-fn resolve_rate(
-    traffic: &crate::config::TrafficSpec,
-    load: f64,
-    capacity_tokens_per_s: f64,
-) -> crate::config::TrafficSpec {
-    use crate::config::ArrivalProcess;
-    let mean_tokens = (traffic.new_tokens_lo + traffic.new_tokens_hi).max(2) as f64 / 2.0;
-    let capacity_rps = capacity_tokens_per_s / mean_tokens;
-    let mut traffic = *traffic;
-    match &mut traffic.arrival {
-        ArrivalProcess::Poisson { rps } | ArrivalProcess::Bursty { rps, .. } => {
-            if *rps <= 0.0 {
-                *rps = load.max(0.01) * capacity_rps;
-            }
-        }
-        ArrivalProcess::ClosedLoop { .. } => {}
-    }
-    traffic
 }
 
 /// **Serving simulation** — static vs continuous batching on the same
 /// seeded trace, on the model's TCO/Token-optimal design
 /// (`ccloud serve-sim`). One row per policy with throughput, goodput,
 /// latency tails and occupancy; with `spec.replicas > 1`, extra rows
-/// compare round-robin against join-shortest-queue routing over that many
-/// replicas at the fleet rate, while the single-replica baseline rows
-/// serve their per-replica share of it (every row runs at the same
-/// `load` relative to its own capacity); with a binding SLO, extra rows
-/// report the SLO-constrained design selection. The spec's
-/// chunked-prefill and paged-KV knobs apply to every row.
+/// compare round-robin, join-shortest-queue and token-weighted JSQ
+/// routing over that many replicas at the fleet rate, while the
+/// single-replica baseline rows serve their per-replica share of it
+/// (every row runs at the same `load` relative to its own capacity); with
+/// a binding SLO, extra rows report the SLO-constrained design selection.
+/// The spec's chunked-prefill and paged-KV knobs apply to every row.
 ///
 /// A non-positive Poisson/bursty rate is resolved to `load` × the design's
 /// steady-state *request* capacity (tokens/s over the mean token budget),
 /// so traces stress the design rather than an arbitrary absolute rate.
+///
+/// *Deprecated shim*: delegates to
+/// [`crate::experiment::serve_outcome`] — see [`sweep_summary`].
 pub fn serve_sim(
     ctx: &Ctx,
     w: &Workload,
@@ -230,169 +97,29 @@ pub fn serve_sim(
     load: f64,
     out_dir: Option<&Path>,
 ) -> Table {
-    use crate::perf::events::{
-        simulate_replicated, simulate_trace, IterCost, ServeReport, SimConfig,
-    };
-    use crate::sched::{ContinuousBatch, KvBudget, Policy, RoutePolicy, StaticBatch};
-
-    let batch = w.batch;
-    let slo = &spec.slo;
-    let mut t = Table::new(vec![
-        "Policy", "Req", "Tokens", "Tok/s", "Goodput", "TTFT p50", "TTFT p99", "TPOT p99",
-        "Occup %", "SLO met %",
-    ])
-    .with_title(format!(
-        "Serving simulation: {} @ ctx {} batch {} ({} requests{}{})",
-        w.model.display,
-        w.ctx,
-        batch,
-        spec.traffic.requests,
-        if spec.paged_kv { ", paged KV" } else { "" },
-        if spec.prefill_chunk > 0 {
-            format!(", prefill chunk {}", spec.prefill_chunk)
-        } else {
-            String::new()
-        },
-    ));
-    // Rows are fixed 10-wide; pad informational rows to the header arity.
-    let padded = |msg: &str| {
-        let mut v = vec![msg.to_string()];
-        v.resize(10, "-".to_string());
-        v
-    };
-    let Some(best) = evaluate::best_point(&ctx.space, &ctx.servers, w) else {
-        t.row(padded("no feasible design"));
-        persist(&t, out_dir, "serve_sim");
-        return t;
-    };
-
-    // Resolve a load-relative arrival rate against the design's capacity
-    // (the whole fleet's when several replicas share the traffic). The
-    // single-replica baseline rows get the per-replica *share* of that
-    // rate, so every row serves the same `load` relative to its own
-    // capacity instead of one server silently eating the fleet's traffic.
-    let n_replicas = spec.replicas.max(1);
-    let fleet_capacity = best.perf.tokens_per_s * n_replicas as f64;
-    let traffic = resolve_rate(&spec.traffic, load, fleet_capacity);
-    let spec = crate::config::ServeSpec { traffic, ..*spec };
-    let mut single_traffic = traffic;
-    if n_replicas > 1 {
-        match &mut single_traffic.arrival {
-            crate::config::ArrivalProcess::Poisson { rps }
-            | crate::config::ArrivalProcess::Bursty { rps, .. } => *rps /= n_replicas as f64,
-            // closed loops self-pace; the partitioned replicated run
-            // splits the clients itself
-            crate::config::ArrivalProcess::ClosedLoop { .. } => {}
-        }
-    }
-
-    let cfg = SimConfig::new(
-        batch.max(1),
-        KvBudget::from_design(&best.server, w, &best.mapping),
-        IterCost::from_perf(&best.perf, w).with_chunk(spec.prefill_chunk),
-        spec.paged_kv,
-    );
-    // One shared row shape for every report row, so the cells cannot
-    // drift from the 10-column header.
-    let report_row = |label: String, r: &ServeReport| -> Vec<String> {
-        vec![
-            label,
-            r.completed.to_string(),
-            r.tokens.to_string(),
-            fmt(r.tokens_per_s, 1),
-            fmt(r.goodput_tokens_per_s, 1),
-            crate::util::fmt_secs(r.ttft_p50_s),
-            crate::util::fmt_secs(r.ttft_p99_s),
-            crate::util::fmt_secs(r.tpot_p99_s),
-            fmt(r.occupancy * 100.0, 0),
-            fmt(r.slo_met_frac * 100.0, 0),
-        ]
-    };
-    // Static window: a couple of token periods — long enough to coalesce,
-    // short enough not to dominate TTFT at low load.
-    let mut st = StaticBatch::new((2.0 * best.perf.token_period).max(0.005));
-    let mut co = ContinuousBatch;
-    let policies: [&mut dyn Policy; 2] = [&mut st, &mut co];
-    for policy in policies {
-        let r = simulate_trace(&cfg, policy, &single_traffic, slo);
-        t.row(report_row(r.policy.clone(), &r));
-    }
-    if spec.replicas > 1 {
-        for route in [RoutePolicy::RoundRobin, RoutePolicy::Jsq] {
-            let r =
-                simulate_replicated(&cfg, spec.replicas, route, &ContinuousBatch, &traffic, slo);
-            t.row(report_row(r.policy.clone(), &r));
-        }
-    }
-    if !slo.is_unconstrained() {
-        use crate::evaluate::SweepEngine;
-        match SweepEngine::default().best_point_slo(&ctx.space, &ctx.servers, w, &spec) {
-            Some(sel) => {
-                let label = format!(
-                    "slo-opt ({:.0} mm², tp={} pp={}, ${:.3}/1M)",
-                    sel.point.server.chiplet.die_mm2,
-                    sel.point.mapping.tp,
-                    sel.point.mapping.pp,
-                    sel.point.tco_per_mtok(),
-                );
-                t.row(report_row(label, &sel.report));
-            }
-            None => {
-                t.row(padded("slo-opt: no design meets the SLO"));
-            }
-        }
-    }
+    let engine = crate::evaluate::SweepEngine::default();
+    let outcome = crate::experiment::serve_outcome(ctx, w, spec, load, &engine);
+    let t = outcome.to_table();
     persist(&t, out_dir, "serve_sim");
     t
 }
 
 /// **Table 2** — TCO/Token-optimal Chiplet Cloud system per model.
+///
+/// *Deprecated shim*: delegates to
+/// [`crate::experiment::optimize_outcome`] — see [`sweep_summary`].
 pub fn table2(ctx: &Ctx, models: &[ModelSpec], out_dir: Option<&Path>) -> Table {
-    let mut t = Table::new(vec![
-        "Model",
-        "Params (B)",
-        "Die (mm2)",
-        "MB/Chip",
-        "TFLOPS/Chip",
-        "BW (TB/s)",
-        "Chips/Server",
-        "Servers",
-        "TP",
-        "PP",
-        "Batch",
-        "uBatch",
-        "MaxCtx",
-        "Tok/s/Chip",
-        "TCO/1M Tok ($)",
-    ])
-    .with_title("Table 2: TCO/Token-optimal Chiplet Cloud systems");
-    for m in models {
-        let grid = Workload::study_grid(m);
-        let Some((w, p)) = evaluate::best_over_grid(&ctx.space, &ctx.servers, &grid) else {
-            continue;
-        };
-        let chip = &p.server.chiplet;
-        let maxctx = max_context(&w, p.mapping.n_chips(), chip.sram_mb);
-        t.row(vec![
-            m.display.to_string(),
-            fmt(m.n_params() / 1e9, 1),
-            fmt(chip.die_mm2, 0),
-            fmt(chip.sram_mb, 1),
-            fmt(chip.tflops, 2),
-            fmt(chip.mem_bw_gbps / 1e3, 2),
-            p.server.chips().to_string(),
-            p.n_servers.to_string(),
-            p.mapping.tp.to_string(),
-            p.mapping.pp.to_string(),
-            w.batch.to_string(),
-            p.mapping.microbatch.to_string(),
-            format!("{}K", maxctx / 1024),
-            fmt(p.perf.tokens_per_s_chip, 1),
-            fmt(p.tco_per_mtok(), 3),
-        ]);
-    }
+    let engine = crate::evaluate::SweepEngine::default();
+    let outcome = crate::experiment::optimize_outcome(ctx, models, &engine);
+    let t = outcome.to_table();
     persist(&t, out_dir, "table2");
     t
+}
+
+/// Render an experiment outcome as a compact JSON string — the
+/// machine-readable sibling of the tables above (`ccloud ... --json`).
+pub fn to_json(outcome: &crate::experiment::Outcome) -> String {
+    outcome.to_json().to_string()
 }
 
 /// **Fig. 7** — TCO vs die size at a min-throughput constraint (left) and

@@ -49,6 +49,14 @@ pub enum RoutePolicy {
     /// instant; ties break to the lowest replica index, so routing is
     /// deterministic even on tied arrival timestamps.
     Jsq,
+    /// Token-weighted join-shortest-queue: each arrival goes to the replica
+    /// with the least outstanding token *work* (prompt + generation tokens
+    /// still to process across its queue and live slots) at its arrival
+    /// instant. Under heavy-tailed token budgets a count-based queue-length
+    /// signal treats a 4-token request and a 1000-token request as equal
+    /// load; the expected-work signal does not. Ties break to the lowest
+    /// replica index, like [`RoutePolicy::Jsq`].
+    JsqTokens,
 }
 
 impl RoutePolicy {
@@ -57,14 +65,16 @@ impl RoutePolicy {
         match self {
             RoutePolicy::RoundRobin => "rr",
             RoutePolicy::Jsq => "jsq",
+            RoutePolicy::JsqTokens => "jsq-tokens",
         }
     }
 
-    /// Parse a CLI spelling (`rr` / `round-robin` / `jsq`).
+    /// Parse a CLI spelling (`rr` / `round-robin` / `jsq` / `jsq-tokens`).
     pub fn parse(s: &str) -> Option<RoutePolicy> {
         match s {
             "rr" | "round-robin" | "roundrobin" => Some(RoutePolicy::RoundRobin),
             "jsq" | "shortest-queue" => Some(RoutePolicy::Jsq),
+            "jsq-tokens" | "jsqt" | "shortest-work" => Some(RoutePolicy::JsqTokens),
             _ => None,
         }
     }
@@ -274,6 +284,14 @@ mod tests {
             sanitize(Action::Wait(Some(1.5)), &view(0, 0)),
             Action::Wait(Some(1.5))
         );
+    }
+
+    #[test]
+    fn route_policy_names_round_trip() {
+        for p in [RoutePolicy::RoundRobin, RoutePolicy::Jsq, RoutePolicy::JsqTokens] {
+            assert_eq!(RoutePolicy::parse(p.name()), Some(p));
+        }
+        assert_eq!(RoutePolicy::parse("fastest"), None);
     }
 
     #[test]

@@ -64,6 +64,23 @@ impl Args {
             .parse()
             .map_err(|_| format!("option --{name} has invalid value"))
     }
+
+    /// Error when any of the given *boolean* flags swallowed a value. The
+    /// `--key value` grammar makes `--seq a.json b.json` parse as
+    /// `seq = "a.json"` — silently dropping `a.json` from the positional
+    /// list — so commands that mix positional file lists with boolean
+    /// flags call this to turn the silent drop into a loud error.
+    pub fn reject_valued_flags(&self, flags: &[&str]) -> Result<(), String> {
+        for f in flags {
+            if let Some(v) = self.options.get(*f) {
+                return Err(format!(
+                    "--{f} takes no value but got '{v}' — put boolean flags after the \
+                     positional arguments (or use --{f} last)"
+                ));
+            }
+        }
+        Ok(())
+    }
 }
 
 #[cfg(test)]
@@ -91,6 +108,20 @@ mod tests {
         let a = args(&["--out", "results", "fig7"]);
         assert_eq!(a.get("out"), Some("results"));
         assert_eq!(a.positional, vec!["fig7"]);
+    }
+
+    #[test]
+    fn reject_valued_flags_catches_swallowed_positionals() {
+        // `--seq a.json b.json`: a.json is consumed as seq's value and
+        // vanishes from positional — must be rejected, not silently run.
+        let a = args(&["run", "--seq", "a.json", "b.json"]);
+        assert_eq!(a.positional, vec!["run", "b.json"]);
+        let err = a.reject_valued_flags(&["seq", "json"]).unwrap_err();
+        assert!(err.contains("--seq") && err.contains("a.json"), "{err}");
+        // Flags in trailing position stay plain flags and pass the check.
+        let a = args(&["run", "a.json", "b.json", "--seq", "--json"]);
+        assert_eq!(a.positional, vec!["run", "a.json", "b.json"]);
+        a.reject_valued_flags(&["seq", "json"]).unwrap();
     }
 
     #[test]

@@ -1,0 +1,538 @@
+//! The declarative experiment API: spec-layer guarantees (JSON round-trip,
+//! strict rejection), CLI→`Experiment` golden equivalence for the flag
+//! surface, and behavioral identity between the one `run()` dispatcher and
+//! the legacy `SweepEngine`/`report` entry points it replaced.
+
+use std::path::Path;
+
+use chiplet_cloud::config::experiment::{EngineKnobs, Experiment, SpaceSpec, Task, WorkloadPoint};
+use chiplet_cloud::config::{
+    ArrivalProcess, ModelSpec, ServeSpec, SloSpec, TrafficSpec, Workload,
+};
+use chiplet_cloud::evaluate::{self, SweepEngine};
+use chiplet_cloud::experiment::{self, cli, Engine, Outcome};
+use chiplet_cloud::perf::events::{simulate_replicated, simulate_trace, IterCost, SimConfig};
+use chiplet_cloud::report;
+use chiplet_cloud::sched::{ContinuousBatch, KvBudget, RoutePolicy};
+use chiplet_cloud::util::cli::Args;
+use chiplet_cloud::util::json::Json;
+use chiplet_cloud::util::rng::Rng;
+
+fn args(argv: &[&str]) -> Args {
+    Args::parse(argv.iter().map(|s| s.to_string()))
+}
+
+fn translate(argv: &[&str]) -> chiplet_cloud::Result<Experiment> {
+    let a = args(argv);
+    cli::from_args(&a.positional[0], &a)
+}
+
+// ---------------------------------------------------------------------------
+// Spec layer: round-trip, strictness, shipped files.
+
+/// Every checked-in `experiments/*.json` spec must strict-parse, validate,
+/// and round-trip through the canonical serializer.
+#[test]
+fn shipped_specs_parse_validate_and_round_trip() {
+    let dir = Path::new(env!("CARGO_MANIFEST_DIR")).join("../experiments");
+    let mut seen = 0;
+    for entry in std::fs::read_dir(&dir).expect("experiments/ exists") {
+        let path = entry.unwrap().path();
+        if path.extension().and_then(|e| e.to_str()) != Some("json") {
+            continue;
+        }
+        seen += 1;
+        let text = std::fs::read_to_string(&path).unwrap();
+        let e = Experiment::from_json_str(&text)
+            .unwrap_or_else(|err| panic!("{}: {err}", path.display()));
+        e.validate().unwrap_or_else(|err| panic!("{}: {err}", path.display()));
+        let back = Experiment::from_json_str(&e.to_json_string()).unwrap();
+        assert_eq!(back, e, "{}", path.display());
+    }
+    assert!(seen >= 3, "expected the shipped example specs, found {seen}");
+}
+
+/// Seeded property: parse ∘ serialize = id over randomized specs covering
+/// every task, arrival process, routing policy and knob combination —
+/// including unconstrained (∞) SLO targets, which travel as JSON null.
+#[test]
+fn json_round_trip_property() {
+    let mut r = Rng::new(0xE5EED);
+    let names = ["gpt2", "megatron", "gpt3", "palm"];
+    for case in 0..60 {
+        let task = *r.pick(&[Task::Sweep, Task::ServeSim, Task::Optimize]);
+        let models: Vec<String> =
+            (0..1 + r.below(3)).map(|_| r.pick(&names).to_string()).collect();
+        let lo = 1 + r.below(64);
+        let arrival = match r.below(3) {
+            0 => ArrivalProcess::Poisson { rps: r.f64() * 100.0 },
+            1 => ArrivalProcess::Bursty { rps: r.f64() * 50.0, burst: 1 + r.below(16) },
+            _ => ArrivalProcess::ClosedLoop { clients: 1 + r.below(64), think_s: r.f64() },
+        };
+        let slo = SloSpec::new(
+            if r.chance(0.5) { f64::INFINITY } else { 0.001 + r.f64() },
+            if r.chance(0.5) { f64::INFINITY } else { 0.001 + r.f64() },
+        );
+        let serve = ServeSpec {
+            traffic: TrafficSpec {
+                arrival,
+                requests: 1 + r.below(500),
+                prompt_tokens: r.below(128),
+                new_tokens_lo: lo,
+                new_tokens_hi: lo + r.below(100),
+                seed: r.below(1_000_000) as u64,
+            },
+            slo,
+            prefill_chunk: r.below(64),
+            paged_kv: r.chance(0.5),
+            replicas: 1 + r.below(4),
+            route: *r.pick(&[RoutePolicy::RoundRobin, RoutePolicy::Jsq, RoutePolicy::JsqTokens]),
+        };
+        let e = Experiment {
+            name: format!("spec-{case}"),
+            task,
+            models,
+            space: *r.pick(&[SpaceSpec::Coarse, SpaceSpec::Full]),
+            workload: r
+                .chance(0.5)
+                .then(|| WorkloadPoint { ctx: 1 + r.below(4096), batch: 1 + r.below(512) }),
+            serve: r.chance(0.7).then_some(serve),
+            load: 0.1 + r.f64(),
+            engine: EngineKnobs { threads: r.below(8), seq: r.chance(0.5) },
+        };
+        let text = e.to_json_string();
+        let back = Experiment::from_json_str(&text)
+            .unwrap_or_else(|err| panic!("case {case}: {err}\n{text}"));
+        assert_eq!(back, e, "case {case}");
+    }
+}
+
+// ---------------------------------------------------------------------------
+// CLI → Experiment golden equivalence: the flag surface is a pure
+// translation, pinned combination by combination.
+
+#[test]
+fn cli_sweep_goldens() {
+    let base = Experiment {
+        name: "sweep-gpt3".into(),
+        task: Task::Sweep,
+        models: vec!["gpt3".into()],
+        space: SpaceSpec::Coarse,
+        workload: None,
+        serve: None,
+        load: 0.8,
+        engine: EngineKnobs::default(),
+    };
+    assert_eq!(translate(&["sweep"]).unwrap(), base);
+
+    let mut full = base.clone();
+    full.name = "sweep-megatron".into();
+    full.models = vec!["megatron".into()];
+    full.space = SpaceSpec::Full;
+    full.engine = EngineKnobs { threads: 2, seq: false };
+    assert_eq!(
+        translate(&["sweep", "--model", "megatron", "--threads", "2", "--full"]).unwrap(),
+        full
+    );
+
+    let mut seq = base.clone();
+    seq.engine = EngineKnobs { threads: 0, seq: true };
+    assert_eq!(translate(&["sweep", "--seq"]).unwrap(), seq);
+
+    // A binding SLO with no trace flags defaults to a saturating closed
+    // loop of 64 clients.
+    let mut slo = base.clone();
+    slo.serve = Some(ServeSpec::new(
+        TrafficSpec {
+            arrival: ArrivalProcess::ClosedLoop { clients: 64, think_s: 0.0 },
+            requests: 400,
+            prompt_tokens: 64,
+            new_tokens_lo: 16,
+            new_tokens_hi: 128,
+            seed: 42,
+        },
+        SloSpec::new(f64::INFINITY, 0.05),
+    ));
+    assert_eq!(translate(&["sweep", "--slo-tpot", "0.05"]).unwrap(), slo);
+
+    // The CI smoke flag combination, pinned exactly.
+    let mut smoke = base.clone();
+    smoke.name = "sweep-gpt2".into();
+    smoke.models = vec!["gpt2".into()];
+    smoke.engine = EngineKnobs { threads: 2, seq: false };
+    smoke.serve = Some(ServeSpec::new(
+        TrafficSpec {
+            arrival: ArrivalProcess::ClosedLoop { clients: 16, think_s: 0.0 },
+            requests: 80,
+            prompt_tokens: 64,
+            new_tokens_lo: 8,
+            new_tokens_hi: 32,
+            seed: 42,
+        },
+        SloSpec::new(2.0, 0.05),
+    ));
+    assert_eq!(
+        translate(&[
+            "sweep", "--model", "gpt2", "--slo-ttft", "2.0", "--slo-tpot", "0.05", "--trace",
+            "closed", "--requests", "80", "--clients", "16", "--tokens-lo", "8", "--tokens-hi",
+            "32", "--threads", "2",
+        ])
+        .unwrap(),
+        smoke
+    );
+
+    // Serving-model knobs ride along once an SLO binds; an explicit --rps
+    // keeps the open-loop trace.
+    let mut knobs = base.clone();
+    knobs.serve = Some(
+        ServeSpec::new(
+            TrafficSpec {
+                arrival: ArrivalProcess::Poisson { rps: 12.5 },
+                requests: 400,
+                prompt_tokens: 64,
+                new_tokens_lo: 16,
+                new_tokens_hi: 128,
+                seed: 42,
+            },
+            SloSpec::new(f64::INFINITY, 0.05),
+        )
+        .with_chunked_prefill(16)
+        .with_paged_kv()
+        .with_replicas(2, RoutePolicy::JsqTokens),
+    );
+    assert_eq!(
+        translate(&[
+            "sweep",
+            "--slo-tpot",
+            "0.05",
+            "--rps",
+            "12.5",
+            "--paged",
+            "--prefill-chunk",
+            "16",
+            "--replicas",
+            "2",
+            "--route",
+            "jsq-tokens",
+        ])
+        .unwrap(),
+        knobs
+    );
+}
+
+#[test]
+fn cli_serve_sim_goldens() {
+    // The CI smoke preset.
+    let smoke = Experiment {
+        name: "serve-sim-gpt2".into(),
+        task: Task::ServeSim,
+        models: vec!["gpt2".into()],
+        space: SpaceSpec::Coarse,
+        workload: Some(WorkloadPoint { ctx: 1024, batch: 32 }),
+        serve: Some(ServeSpec::new(
+            TrafficSpec {
+                arrival: ArrivalProcess::Poisson { rps: 0.0 },
+                requests: 120,
+                prompt_tokens: 32,
+                new_tokens_lo: 8,
+                new_tokens_hi: 32,
+                seed: 42,
+            },
+            SloSpec::unconstrained(),
+        )),
+        load: 0.8,
+        engine: EngineKnobs::default(),
+    };
+    assert_eq!(translate(&["serve-sim", "--smoke"]).unwrap(), smoke);
+
+    // Every serving flag at once.
+    let full = Experiment {
+        name: "serve-sim-gpt3".into(),
+        task: Task::ServeSim,
+        models: vec!["gpt3".into()],
+        space: SpaceSpec::Coarse,
+        workload: Some(WorkloadPoint { ctx: 2048, batch: 64 }),
+        serve: Some(
+            ServeSpec::new(
+                TrafficSpec {
+                    arrival: ArrivalProcess::Bursty { rps: 3.5, burst: 4 },
+                    requests: 50,
+                    prompt_tokens: 16,
+                    new_tokens_lo: 4,
+                    new_tokens_hi: 8,
+                    seed: 7,
+                },
+                SloSpec::new(1.5, 0.02),
+            )
+            .with_paged_kv()
+            .with_replicas(3, RoutePolicy::Jsq),
+        ),
+        load: 0.5,
+        engine: EngineKnobs::default(),
+    };
+    assert_eq!(
+        translate(&[
+            "serve-sim", "--ctx", "2048", "--batch", "64", "--load", "0.5", "--trace", "bursty",
+            "--rps", "3.5", "--burst", "4", "--requests", "50", "--prompt-tokens", "16",
+            "--tokens-lo", "4", "--tokens-hi", "8", "--seed", "7", "--slo-ttft", "1.5",
+            "--slo-tpot", "0.02", "--paged", "--replicas", "3", "--route", "jsq",
+        ])
+        .unwrap(),
+        full
+    );
+}
+
+#[test]
+fn cli_optimize_and_table2_goldens() {
+    let opt = translate(&["optimize"]).unwrap();
+    assert_eq!(opt.task, Task::Optimize);
+    assert_eq!(opt.models, vec!["gpt3".to_string()]);
+    assert_eq!(opt.name, "optimize-gpt3");
+    assert!(opt.serve.is_none() && opt.workload.is_none());
+
+    let palm = translate(&["optimize", "--model", "palm"]).unwrap();
+    assert_eq!(palm.models, vec!["palm".to_string()]);
+
+    let t2 = translate(&["table2", "--full"]).unwrap();
+    assert_eq!(t2.name, "table2");
+    assert_eq!(t2.space, SpaceSpec::Full);
+    let expected: Vec<String> =
+        ModelSpec::paper_models().iter().map(|m| m.name.to_string()).collect();
+    assert_eq!(t2.models, expected);
+    assert_eq!(t2.models.len(), 8);
+}
+
+#[test]
+fn cli_rejects_bad_flag_combinations() {
+    let err = |argv: &[&str]| translate(argv).unwrap_err().to_string();
+    // Serving knobs without a binding SLO misrepresent the optimum.
+    assert!(err(&["sweep", "--paged"]).contains("no effect"));
+    assert!(err(&["sweep", "--replicas", "2"]).contains("no effect"));
+    // Unparsable or degenerate numbers error instead of defaulting.
+    assert!(err(&["sweep", "--slo-ttft", "abc"]).contains("must be a number"));
+    assert!(err(&["sweep", "--slo-tpot", "0"]).contains("positive"));
+    assert!(err(&["serve-sim", "--tokens-lo", "9", "--tokens-hi", "3"]).contains("exceeds"));
+    assert!(err(&["serve-sim", "--requests", "0"]).contains(">= 1"));
+    // Typo'd enums error instead of silently defaulting.
+    assert!(err(&["serve-sim", "--route", "fastest", "--slo-tpot", "0.05"]).contains("--route"));
+    assert!(err(&["serve-sim", "--trace", "what"]).contains("--trace"));
+    // Unknown models are caught by spec validation.
+    assert!(err(&["sweep", "--model", "gpt9000"]).contains("unknown model"));
+}
+
+// ---------------------------------------------------------------------------
+// Behavioral identity: run() vs the legacy entry points.
+
+/// `run()` on a sweep spec must select exactly what the deprecated
+/// `SweepEngine::best_over_grid_stats` path selects — and the outcome JSON
+/// outside the "engine" section must be invariant across thread counts.
+#[test]
+fn run_sweep_matches_direct_engine_and_json_is_engine_invariant() {
+    let e = Experiment {
+        name: "sweep-gpt2".into(),
+        task: Task::Sweep,
+        models: vec!["gpt2".into()],
+        space: SpaceSpec::Coarse,
+        workload: None,
+        serve: None,
+        load: 0.8,
+        engine: EngineKnobs::default(),
+    };
+    let outcome = experiment::run(&e).unwrap();
+    let Outcome::Sweep(sw) = &outcome else { panic!("sweep spec → Sweep outcome") };
+    let ctx = report::Ctx::coarse();
+    let grid = Workload::study_grid(&ModelSpec::gpt2());
+    let (direct, _) =
+        SweepEngine::default().best_over_grid_stats(&ctx.space, &ctx.servers, &grid);
+    let (dw, dp) = direct.expect("gpt2 feasible");
+    let (ow, op) = sw.best.as_ref().expect("outcome feasible");
+    assert_eq!((ow.ctx, ow.batch), (dw.ctx, dw.batch));
+    assert_eq!(op.mapping, dp.mapping);
+    assert_eq!(op.server, dp.server);
+    assert_eq!(op.tco_per_token.to_bits(), dp.tco_per_token.to_bits());
+    assert_eq!(sw.grid_len, grid.len());
+    assert_eq!(sw.feasible_servers, ctx.servers.len());
+
+    // Thread-count invariance of the machine-readable outcome (the CI
+    // fast-vs-reference golden diff relies on this split).
+    let mut inline = e.clone();
+    inline.engine = EngineKnobs { threads: 1, seq: false };
+    let strip = |o: &Outcome| match o.to_json() {
+        Json::Obj(mut m) => {
+            assert!(m.remove("engine").is_some(), "leaf outcomes carry an engine section");
+            Json::Obj(m)
+        }
+        other => other,
+    };
+    let a = strip(&outcome);
+    let b = strip(&experiment::run(&inline).unwrap());
+    assert_eq!(a, b, "outcome JSON must not depend on engine configuration");
+    // And the document itself must be valid JSON.
+    let text = report::to_json(&outcome);
+    Json::parse(&text).expect("outcome JSON parses");
+}
+
+/// `run()` on a serve-sim spec reproduces the direct simulator calls the
+/// legacy `report::serve_sim` harness makes — row for row, to the bit.
+#[test]
+fn run_serve_sim_matches_direct_simulation() {
+    let traffic = TrafficSpec::poisson(4.0, 60, 16, 4, 16).with_seed(11);
+    let spec = ServeSpec::new(traffic, SloSpec::unconstrained())
+        .with_replicas(2, RoutePolicy::RoundRobin);
+    let e = Experiment {
+        name: "serve-sim-gpt2".into(),
+        task: Task::ServeSim,
+        models: vec!["gpt2".into()],
+        space: SpaceSpec::Coarse,
+        workload: Some(WorkloadPoint { ctx: 1024, batch: 32 }),
+        serve: Some(spec),
+        load: 0.8,
+        engine: EngineKnobs::default(),
+    };
+    let outcome = experiment::run(&e).unwrap();
+    let Outcome::Serve(so) = &outcome else { panic!("serve-sim spec → Serve outcome") };
+    assert!(so.feasible);
+    // static + continuous + rr/jsq/jsq-tokens routing rows
+    assert_eq!(so.rows.len(), 5);
+    assert!(so.slo.is_none(), "unconstrained SLO adds no selection row");
+
+    // Rebuild the simulator inputs exactly as the harness does and check
+    // the continuous-batching and routed rows bit for bit.
+    let ctx = report::Ctx::coarse();
+    let w = Workload::new(ModelSpec::gpt2(), 1024, 32);
+    let best = evaluate::best_point(&ctx.space, &ctx.servers, &w).expect("feasible");
+    let cfg = SimConfig::new(
+        w.batch,
+        KvBudget::from_design(&best.server, &w, &best.mapping),
+        IterCost::from_perf(&best.perf, &w),
+        false,
+    );
+    let mut single = traffic;
+    if let ArrivalProcess::Poisson { rps } = &mut single.arrival {
+        *rps /= 2.0;
+    }
+    let slo = SloSpec::unconstrained();
+    let direct_cont = simulate_trace(&cfg, &mut ContinuousBatch, &single, &slo);
+    assert_eq!(so.rows[1].1.fingerprint(), direct_cont.fingerprint());
+    let direct_jsqt = simulate_replicated(
+        &cfg,
+        2,
+        RoutePolicy::JsqTokens,
+        &ContinuousBatch,
+        &traffic,
+        &slo,
+    );
+    assert_eq!(so.rows[4].1.fingerprint(), direct_jsqt.fingerprint());
+    assert_eq!(so.rows[4].0, direct_jsqt.policy);
+}
+
+/// The optimize outcome renders byte-identically to the legacy
+/// `report::table2` harness (which now delegates to it) — and matches the
+/// deprecated `evaluate::best_over_grid` selection.
+#[test]
+fn optimize_outcome_equals_table2_shim() {
+    let ctx = report::Ctx::coarse();
+    let models = [ModelSpec::megatron()];
+    let engine = SweepEngine::default();
+    let outcome = experiment::optimize_outcome(&ctx, &models, &engine);
+    let shim = report::table2(&ctx, &models, None);
+    assert_eq!(outcome.to_table().render(), shim.render());
+    assert_eq!(outcome.rows.len(), 1);
+    let grid = Workload::study_grid(&ModelSpec::megatron());
+    let (_, direct) = evaluate::best_over_grid(&ctx.space, &ctx.servers, &grid).unwrap();
+    assert_eq!(
+        outcome.rows[0].point.tco_per_token.to_bits(),
+        direct.tco_per_token.to_bits()
+    );
+}
+
+/// The serve-sim shim renders byte-identically to the outcome table.
+#[test]
+fn serve_sim_shim_equals_outcome_table() {
+    let ctx = report::Ctx::coarse();
+    let w = Workload::new(ModelSpec::gpt2(), 1024, 16);
+    let spec = ServeSpec::new(TrafficSpec::poisson(3.0, 40, 16, 4, 8), SloSpec::unconstrained());
+    let engine = SweepEngine::default();
+    let outcome = experiment::serve_outcome(&ctx, &w, &spec, 0.8, &engine);
+    let shim = report::serve_sim(&ctx, &w, &spec, 0.8, None);
+    assert_eq!(outcome.to_table().render(), shim.render());
+}
+
+/// A campaign shares one Phase-1 context across same-space specs and
+/// returns outcomes in input order.
+#[test]
+fn campaign_shares_phase1_context_and_preserves_order() {
+    let serve = |name: &str, seed: u64| Experiment {
+        name: name.into(),
+        task: Task::ServeSim,
+        models: vec!["gpt2".into()],
+        space: SpaceSpec::Coarse,
+        workload: Some(WorkloadPoint { ctx: 1024, batch: 16 }),
+        serve: Some(ServeSpec::new(
+            TrafficSpec::poisson(3.0, 30, 16, 4, 8).with_seed(seed),
+            SloSpec::unconstrained(),
+        )),
+        load: 0.8,
+        engine: EngineKnobs::default(),
+    };
+    let specs = [serve("first", 1), serve("second", 2)];
+    let mut engine = Engine::new();
+    let results = engine.run_campaign(&specs).unwrap();
+    assert_eq!(engine.contexts(), 1, "same space ⇒ one shared Phase-1 sweep");
+    assert_eq!(results.len(), 2);
+    assert_eq!(results[0].0, "first");
+    assert_eq!(results[1].0, "second");
+    for (_, o) in &results {
+        assert!(matches!(o, Outcome::Serve(s) if s.feasible));
+    }
+    // The campaign wrapper renders each member under its own name.
+    let wrapped = Outcome::Campaign(results);
+    let tables = wrapped.named_tables("campaign");
+    assert_eq!(tables.len(), 2);
+    assert_eq!(tables[0].0, "first");
+    let json = wrapped.to_json().to_string();
+    let doc = Json::parse(&json).unwrap();
+    assert_eq!(doc.get("kind").and_then(|k| k.as_str()), Some("campaign"));
+    assert_eq!(doc.get("experiments").and_then(|e| e.as_arr()).map(|a| a.len()), Some(2));
+}
+
+/// A multi-model sweep spec fans out into a per-model campaign outcome.
+#[test]
+fn multi_model_spec_dispatches_a_campaign() {
+    let e = Experiment {
+        name: "pair".into(),
+        task: Task::ServeSim,
+        models: vec!["gpt2".into(), "megatron".into()],
+        space: SpaceSpec::Coarse,
+        workload: Some(WorkloadPoint { ctx: 1024, batch: 16 }),
+        serve: Some(ServeSpec::new(
+            TrafficSpec::poisson(3.0, 20, 16, 4, 8),
+            SloSpec::unconstrained(),
+        )),
+        load: 0.8,
+        engine: EngineKnobs::default(),
+    };
+    let outcome = experiment::run(&e).unwrap();
+    let Outcome::Campaign(members) = outcome else { panic!("multi-model → campaign") };
+    assert_eq!(members.len(), 2);
+    assert_eq!(members[0].0, "pair-gpt2");
+    assert_eq!(members[1].0, "pair-megatron");
+}
+
+/// Invalid specs fail `run()` with a config error, not a panic.
+#[test]
+fn run_rejects_invalid_specs() {
+    let mut e = Experiment {
+        name: "bad".into(),
+        task: Task::ServeSim,
+        models: vec!["gpt2".into()],
+        space: SpaceSpec::Coarse,
+        workload: None,
+        serve: None,
+        load: 0.8,
+        engine: EngineKnobs::default(),
+    };
+    assert!(experiment::run(&e).is_err(), "serve-sim without workload must be rejected");
+    e.models = vec![];
+    assert!(experiment::run(&e).is_err(), "empty model list must be rejected");
+}
