@@ -24,6 +24,7 @@ fn serve_spec(name: &str, seed: u64) -> Experiment {
         )),
         load: 0.8,
         engine: EngineKnobs::default(),
+        shard: None,
     }
 }
 
@@ -40,7 +41,7 @@ fn main() {
     // Campaign with one shared engine (Phase 1 swept once)...
     let shared = b.run("experiment/campaign-3-specs-shared-engine", || {
         let mut engine = Engine::new();
-        engine.run_campaign(&specs).expect("campaign runs")
+        engine.run_campaign(&specs)
     });
     // ...vs cold engines per spec (Phase 1 re-swept every time).
     let cold = b.run("experiment/campaign-3-specs-cold-engines", || {
@@ -64,7 +65,7 @@ fn main() {
     // Sharing is answer-preserving: shared vs cold outcomes, bit for bit
     // (compared through the canonical JSON rendering).
     let mut engine = Engine::new();
-    let shared_outcomes = engine.run_campaign(&specs).expect("campaign runs");
+    let shared_outcomes = engine.run_campaign(&specs);
     assert_eq!(engine.contexts(), 1, "one coarse space ⇒ one Phase-1 sweep");
     for (e, (name, outcome)) in specs.iter().zip(&shared_outcomes) {
         let cold_outcome = experiment::run(e).expect("runs");

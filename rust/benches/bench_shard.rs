@@ -1,0 +1,145 @@
+//! Shard/merge overhead benchmark: what does distributing a sweep cost
+//! versus just running it?
+//!
+//! Three configurations of the same gpt2 coarse sweep are timed —
+//!
+//! * `single`      — one `Engine::run` in this process;
+//! * `in-process`  — `plan` into 3 shards, run each shard on a shared
+//!   engine, `merge` the envelopes (the pure shard/merge algebra, no
+//!   process spawns);
+//! * `distributed` — the real orchestrator: 3 child worker processes with
+//!   checkpoints under a temp run directory (skipped when the `ccloud`
+//!   binary path is unavailable).
+//!
+//! All configurations must produce the identical outcome outside the
+//! `"engine"` counters (asserted, bit-exact), and the timings are written
+//! machine-readable to `BENCH_shard.json` (override the path with
+//! `CC_BENCH_SHARD_JSON`). Pass `--quick` (the CI mode) to shrink the
+//! measurement budget.
+
+use std::collections::BTreeMap;
+use std::path::PathBuf;
+use std::time::{Duration, Instant};
+
+use chiplet_cloud::config::experiment::{EngineKnobs, Experiment, SpaceSpec, Task};
+use chiplet_cloud::experiment::orchestrator::{self, OrchestratorConfig};
+use chiplet_cloud::experiment::shard::{merge, plan, strip_engine, Envelope};
+use chiplet_cloud::experiment::Engine;
+use chiplet_cloud::util::json::Json;
+
+const WORKERS: usize = 3;
+
+fn obj(fields: Vec<(&str, Json)>) -> Json {
+    Json::Obj(fields.into_iter().map(|(k, v)| (k.to_string(), v)).collect::<BTreeMap<_, _>>())
+}
+
+fn spec() -> Experiment {
+    let models = vec!["gpt2".to_string()];
+    Experiment {
+        name: Experiment::default_name(Task::Sweep, &models),
+        task: Task::Sweep,
+        models,
+        space: SpaceSpec::Coarse,
+        workload: None,
+        serve: None,
+        load: 0.8,
+        engine: EngineKnobs::default(),
+        shard: None,
+    }
+}
+
+fn main() {
+    let quick = std::env::args().any(|a| a == "--quick");
+    let e = spec();
+    let iters = if quick { 2 } else { 5 };
+
+    // Shared engine: Phase 1 is swept once, so the timings isolate the
+    // shard/merge overhead rather than re-measuring the hardware sweep.
+    let mut engine = Engine::new();
+    let golden = strip_engine(&engine.run(&e).expect("single run").to_json()).to_string();
+
+    let t0 = Instant::now();
+    for _ in 0..iters {
+        engine.run(&e).expect("single run");
+    }
+    let single_s = t0.elapsed().as_secs_f64() / iters as f64;
+
+    let shards = plan(&e, WORKERS, &mut engine).expect("plan");
+    let t0 = Instant::now();
+    let mut merged_inproc = String::new();
+    for _ in 0..iters {
+        let envs: Vec<Envelope> = shards
+            .iter()
+            .map(|s| Envelope::new(s.clone(), engine.run(s).expect("shard run").to_json()))
+            .collect();
+        let merged = merge(&envs).expect("merge");
+        merged_inproc = strip_engine(&merged.outcome).to_string();
+    }
+    let inproc_s = t0.elapsed().as_secs_f64() / iters as f64;
+    assert_eq!(merged_inproc, golden, "in-process shard/merge diverged from the single run");
+
+    // Distributed: the real child-process orchestrator, once (spawn +
+    // checkpoint IO dominate; repeating it buys no precision).
+    let exe: Option<PathBuf> = option_env!("CARGO_BIN_EXE_ccloud").map(PathBuf::from);
+    let distributed_s = match exe {
+        Some(exe) if exe.exists() => {
+            let run_dir =
+                std::env::temp_dir().join(format!("cc-bench-shard-{}", std::process::id()));
+            let _ = std::fs::remove_dir_all(&run_dir);
+            let cfg = OrchestratorConfig {
+                workers: WORKERS,
+                timeout: Duration::from_secs(600),
+                exe: Some(exe),
+                ..OrchestratorConfig::default()
+            };
+            let t0 = Instant::now();
+            let run = orchestrator::run_distributed(&e, &run_dir, false, &cfg)
+                .expect("distributed run");
+            let wall = t0.elapsed().as_secs_f64();
+            assert!(run.merged.missing.is_empty(), "distributed run lost shards");
+            assert_eq!(
+                strip_engine(&run.merged.outcome).to_string(),
+                golden,
+                "distributed outcome diverged from the single run"
+            );
+            let _ = std::fs::remove_dir_all(&run_dir);
+            Some(wall)
+        }
+        _ => {
+            println!("distributed: skipped (ccloud binary path unavailable)");
+            None
+        }
+    };
+
+    println!(
+        "shard overhead ({WORKERS} shards): single {single_s:.3}s | in-process {inproc_s:.3}s \
+         ({:.2}x) | distributed {}",
+        inproc_s / single_s.max(1e-9),
+        match distributed_s {
+            Some(d) => format!("{d:.3}s ({:.2}x)", d / single_s.max(1e-9)),
+            None => "skipped".to_string(),
+        }
+    );
+    println!("outcomes identical across single, in-process sharded, and distributed runs");
+
+    let out = obj(vec![
+        ("bench", Json::Str("bench_shard".into())),
+        ("mode", Json::Str(if quick { "quick".into() } else { "full".into() })),
+        ("workers", Json::Num(WORKERS as f64)),
+        ("single_s", Json::Num(single_s)),
+        ("inprocess_s", Json::Num(inproc_s)),
+        ("inprocess_overhead", Json::Num(inproc_s / single_s.max(1e-9))),
+        (
+            "distributed_s",
+            distributed_s.map(Json::Num).unwrap_or(Json::Null),
+        ),
+        (
+            "distributed_overhead",
+            distributed_s.map(|d| Json::Num(d / single_s.max(1e-9))).unwrap_or(Json::Null),
+        ),
+        ("identical_outcomes", Json::Bool(true)),
+    ]);
+    let path = std::env::var("CC_BENCH_SHARD_JSON").unwrap_or_else(|_| "BENCH_shard.json".into());
+    std::fs::write(&path, format!("{out}\n")).expect("write BENCH_shard.json");
+    println!("wrote {path}");
+}

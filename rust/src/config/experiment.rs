@@ -156,6 +156,31 @@ impl Default for EngineKnobs {
     }
 }
 
+/// Shard identity: marks a spec as one slice of a parent experiment split
+/// by [`crate::experiment::shard::plan`]. The `parent` fingerprint ties
+/// every shard outcome back to the spec it was cut from, so a merge (or a
+/// `--resume`d run directory) can refuse mixed or stale shards instead of
+/// silently combining them.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct ShardSel {
+    /// This shard's position in the plan, `0 <= index < of`.
+    pub index: usize,
+    /// Total shards in the plan.
+    pub of: usize,
+    /// Hex [`Experiment::fingerprint`] of the parent spec.
+    pub parent: String,
+    /// Model count of the parent spec — the shape of the merged outcome
+    /// (1 = a bare outcome, >1 = a per-model campaign).
+    pub parent_models: usize,
+    /// Half-open study-grid slice `[lo, hi)` this shard searches
+    /// (`None` = the whole grid). Only meaningful on single-model sweeps.
+    pub grid: Option<(usize, usize)>,
+    /// Half-open Phase-1 server slice `[lo, hi)` this shard searches
+    /// (`None` = all feasible servers). Only meaningful on single-model
+    /// sweeps, and only used when workers outnumber grid points.
+    pub servers: Option<(usize, usize)>,
+}
+
 /// A fully described co-design experiment: the one serializable input of
 /// [`crate::experiment::Engine::run`]. See the module docs for the JSON
 /// schema and `experiments/*.json` for checked-in examples.
@@ -184,6 +209,9 @@ pub struct Experiment {
     pub load: f64,
     /// Engine execution knobs.
     pub engine: EngineKnobs,
+    /// Shard identity when this spec is one slice of a distributed
+    /// campaign (`None` for ordinary specs). See [`ShardSel`].
+    pub shard: Option<ShardSel>,
 }
 
 impl Experiment {
@@ -206,7 +234,7 @@ impl Experiment {
         check_fields(
             m,
             "experiment",
-            &["name", "task", "models", "space", "workload", "serve", "load", "engine"],
+            &["name", "task", "models", "space", "workload", "serve", "load", "engine", "shard"],
         )?;
         let task_s = get_str(m, "experiment", "task")?
             .ok_or("experiment is missing the required field 'task'")?;
@@ -220,7 +248,7 @@ impl Experiment {
                 for (i, x) in xs.iter().enumerate() {
                     out.push(
                         x.as_str()
-                            .ok_or_else(|| format!("field 'models[{i}]': expected a model name string"))?
+                            .ok_or_else(|| format!("field 'models[{i}]': expected a model name"))?
                             .to_string(),
                     );
                 }
@@ -253,7 +281,11 @@ impl Experiment {
             None | Some(Json::Null) => EngineKnobs::default(),
             Some(v) => engine_from_json(v)?,
         };
-        Ok(Experiment { name, task, models, space, workload, serve, load, engine })
+        let shard = match m.get("shard") {
+            None | Some(Json::Null) => None,
+            Some(v) => Some(shard_from_json(v)?),
+        };
+        Ok(Experiment { name, task, models, space, workload, serve, load, engine, shard })
     }
 
     /// Canonical JSON form: every field emitted explicitly, so
@@ -283,12 +315,32 @@ impl Experiment {
         );
         m.insert("load".into(), Json::Num(self.load));
         m.insert("engine".into(), engine_to_json(&self.engine));
+        m.insert(
+            "shard".into(),
+            match &self.shard {
+                None => Json::Null,
+                Some(s) => shard_to_json(s),
+            },
+        );
         Json::Obj(m)
     }
 
     /// [`Experiment::to_json`] rendered as a compact string.
     pub fn to_json_string(&self) -> String {
         self.to_json().to_string()
+    }
+
+    /// Stable hex fingerprint of the spec's *scientific* content: the
+    /// canonical JSON with the engine knobs reset to default and any shard
+    /// marker stripped. Two specs that answer the same question get the
+    /// same fingerprint regardless of thread count, `--seq`, or which
+    /// shard of a plan they are — the identity shard/merge and
+    /// checkpoint-resume use to reject mismatched pieces.
+    pub fn fingerprint(&self) -> String {
+        let mut canon = self.clone();
+        canon.engine = EngineKnobs::default();
+        canon.shard = None;
+        format!("{:016x}", crate::util::fnv1a64(canon.to_json_string().as_bytes()))
     }
 
     /// Semantic validation shared by the JSON and CLI paths. Field-shape
@@ -356,6 +408,40 @@ impl Experiment {
         }
         if let Some(s) = &self.serve {
             validate_serve(s)?;
+        }
+        if let Some(sh) = &self.shard {
+            if sh.of == 0 {
+                return Err("'shard.of' must be >= 1".into());
+            }
+            if sh.index >= sh.of {
+                return Err(format!(
+                    "'shard.index' must be < 'shard.of' (got {} of {})",
+                    sh.index, sh.of
+                ));
+            }
+            if sh.parent.is_empty() {
+                return Err("'shard.parent' must carry the parent spec fingerprint".into());
+            }
+            if sh.parent_models == 0 {
+                return Err("'shard.parent_models' must be >= 1".into());
+            }
+            for (name, range) in [("grid", sh.grid), ("servers", sh.servers)] {
+                if let Some((lo, hi)) = range {
+                    if lo >= hi {
+                        return Err(format!(
+                            "'shard.{name}' must be a non-empty half-open range \
+                             (got [{lo}, {hi}))"
+                        ));
+                    }
+                }
+            }
+            if (sh.grid.is_some() || sh.servers.is_some())
+                && (self.task != Task::Sweep || self.models.len() != 1)
+            {
+                return Err("'shard.grid'/'shard.servers' slices only apply to a \
+                            single-model sweep shard"
+                    .into());
+            }
         }
         Ok(())
     }
@@ -660,6 +746,62 @@ fn engine_to_json(e: &EngineKnobs) -> Json {
     Json::Obj(m)
 }
 
+/// Half-open `[lo, hi)` index range: a 2-element integer array, or
+/// null/absent = the whole axis.
+fn get_range(
+    m: &BTreeMap<String, Json>,
+    path: &str,
+    key: &str,
+) -> Result<Option<(usize, usize)>, String> {
+    match m.get(key) {
+        None | Some(Json::Null) => Ok(None),
+        Some(Json::Arr(xs)) if xs.len() == 2 => {
+            let lo = xs[0].as_usize();
+            let hi = xs[1].as_usize();
+            match (lo, hi) {
+                (Some(lo), Some(hi)) => Ok(Some((lo, hi))),
+                _ => Err(format!(
+                    "field '{key}' in {path}: expected two non-negative integers [lo, hi)"
+                )),
+            }
+        }
+        Some(_) => Err(format!(
+            "field '{key}' in {path}: expected a [lo, hi) integer pair or null (whole axis)"
+        )),
+    }
+}
+
+fn shard_from_json(v: &Json) -> Result<ShardSel, String> {
+    let m = as_obj(v, "shard")?;
+    let path = "shard";
+    check_fields(m, path, &["index", "of", "parent", "parent_models", "grid", "servers"])?;
+    Ok(ShardSel {
+        index: get_usize(m, path, "index")?
+            .ok_or("shard is missing the required field 'index'")?,
+        of: get_usize(m, path, "of")?.ok_or("shard is missing the required field 'of'")?,
+        parent: get_str(m, path, "parent")?
+            .ok_or("shard is missing the required field 'parent'")?,
+        parent_models: get_usize(m, path, "parent_models")?.unwrap_or(1),
+        grid: get_range(m, path, "grid")?,
+        servers: get_range(m, path, "servers")?,
+    })
+}
+
+fn shard_to_json(s: &ShardSel) -> Json {
+    let range = |r: Option<(usize, usize)>| match r {
+        None => Json::Null,
+        Some((lo, hi)) => Json::Arr(vec![Json::Num(lo as f64), Json::Num(hi as f64)]),
+    };
+    let mut m = BTreeMap::new();
+    m.insert("index".into(), Json::Num(s.index as f64));
+    m.insert("of".into(), Json::Num(s.of as f64));
+    m.insert("parent".into(), Json::Str(s.parent.clone()));
+    m.insert("parent_models".into(), Json::Num(s.parent_models as f64));
+    m.insert("grid".into(), range(s.grid));
+    m.insert("servers".into(), range(s.servers));
+    Json::Obj(m)
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -674,6 +816,7 @@ mod tests {
             serve: None,
             load: 0.8,
             engine: EngineKnobs::default(),
+            shard: None,
         }
     }
 
@@ -758,8 +901,109 @@ mod tests {
 
         let mut e = minimal();
         e.task = Task::Optimize;
-        e.serve = Some(ServeSpec::new(TrafficSpec::poisson(1.0, 10, 8, 4, 8), SloSpec::new(1.0, 0.1)));
+        e.serve =
+            Some(ServeSpec::new(TrafficSpec::poisson(1.0, 10, 8, 4, 8), SloSpec::new(1.0, 0.1)));
         assert!(e.validate().unwrap_err().contains("optimize"));
+    }
+
+    #[test]
+    fn shard_round_trips_and_rejects_unknown_fields() {
+        let mut e = minimal();
+        e.shard = Some(ShardSel {
+            index: 2,
+            of: 8,
+            parent: e.fingerprint(),
+            parent_models: 1,
+            grid: Some((8, 12)),
+            servers: None,
+        });
+        e.validate().unwrap();
+        let s = e.to_json_string();
+        assert!(s.contains("\"grid\":[8,12]") && s.contains("\"servers\":null"), "{s}");
+        assert_eq!(Experiment::from_json_str(&s).unwrap(), e);
+        // Plain specs emit "shard":null and parse back to None.
+        let plain = minimal();
+        assert!(plain.to_json_string().contains("\"shard\":null"));
+        assert_eq!(Experiment::from_json_str(&plain.to_json_string()).unwrap(), plain);
+        // Unknown shard fields are rejected with location.
+        let err = Experiment::from_json_str(
+            r#"{"task":"sweep","models":["gpt3"],
+                "shard":{"index":0,"of":1,"parent":"ab","slice":[0,4]}}"#,
+        )
+        .unwrap_err();
+        assert!(err.contains("unknown field 'slice'") && err.contains("shard"), "{err}");
+        // A malformed range is a located error, not a silent whole-axis.
+        let err = Experiment::from_json_str(
+            r#"{"task":"sweep","models":["gpt3"],
+                "shard":{"index":0,"of":1,"parent":"ab","grid":[1]}}"#,
+        )
+        .unwrap_err();
+        assert!(err.contains("'grid'") && err.contains("[lo, hi)"), "{err}");
+    }
+
+    #[test]
+    fn shard_validation_rules() {
+        let fp = minimal().fingerprint();
+        let with = |f: &dyn Fn(&mut ShardSel, &mut Experiment)| {
+            let mut e = minimal();
+            let mut s = ShardSel {
+                index: 0,
+                of: 2,
+                parent: fp.clone(),
+                parent_models: 1,
+                grid: None,
+                servers: None,
+            };
+            f(&mut s, &mut e);
+            e.shard = Some(s);
+            e.validate()
+        };
+        with(&|_, _| {}).unwrap();
+        assert!(with(&|s, _| s.of = 0).unwrap_err().contains("shard.of"));
+        assert!(with(&|s, _| s.index = 2).unwrap_err().contains("shard.index"));
+        assert!(with(&|s, _| s.parent.clear()).unwrap_err().contains("shard.parent"));
+        assert!(with(&|s, _| s.grid = Some((4, 4))).unwrap_err().contains("half-open"));
+        // Slices are a single-model-sweep concept only.
+        assert!(with(&|s, e| {
+            s.grid = Some((0, 4));
+            e.models = vec!["gpt2".into(), "gpt3".into()];
+        })
+        .unwrap_err()
+        .contains("single-model sweep"));
+        assert!(with(&|s, e| {
+            s.servers = Some((0, 4));
+            e.task = Task::Optimize;
+        })
+        .unwrap_err()
+        .contains("single-model sweep"));
+    }
+
+    #[test]
+    fn fingerprint_ignores_engine_and_shard_only() {
+        let base = minimal();
+        let fp = base.fingerprint();
+        // Engine knobs and shard markers do not change identity...
+        let mut e = base.clone();
+        e.engine = EngineKnobs { threads: 7, seq: true };
+        e.shard = Some(ShardSel {
+            index: 0,
+            of: 2,
+            parent: fp.clone(),
+            parent_models: 1,
+            grid: Some((0, 4)),
+            servers: None,
+        });
+        assert_eq!(e.fingerprint(), fp);
+        // ...but every scientific field does.
+        let mut e = base.clone();
+        e.models = vec!["gpt2".into()];
+        assert_ne!(e.fingerprint(), fp);
+        let mut e = base.clone();
+        e.load = 0.9;
+        assert_ne!(e.fingerprint(), fp);
+        // 16 lowercase hex digits — stable printable form.
+        assert_eq!(fp.len(), 16);
+        assert!(fp.chars().all(|c| c.is_ascii_hexdigit()));
     }
 
     #[test]

@@ -217,7 +217,7 @@ impl SweepEngine {
         servers: &[ServerDesign],
         w: &Workload,
     ) -> Option<DesignPoint> {
-        self.best_over_grid_indexed(space, servers, std::slice::from_ref(w)).0.map(|(_, p)| p)
+        self.best_over_grid_argmin(space, servers, std::slice::from_ref(w)).0.map(|(_, _, p)| p)
     }
 
     /// [`SweepEngine::best_point`] with engine counters.
@@ -227,8 +227,8 @@ impl SweepEngine {
         servers: &[ServerDesign],
         w: &Workload,
     ) -> (Option<DesignPoint>, SweepStats) {
-        let (best, stats) = self.best_over_grid_indexed(space, servers, std::slice::from_ref(w));
-        (best.map(|(_, p)| p), stats)
+        let (best, stats) = self.best_over_grid_argmin(space, servers, std::slice::from_ref(w));
+        (best.map(|(_, _, p)| p), stats)
     }
 
     /// Best point for a model across a workload grid (the Table-2
@@ -250,8 +250,8 @@ impl SweepEngine {
         servers: &[ServerDesign],
         grid: &[Workload],
     ) -> (Option<(Workload, DesignPoint)>, SweepStats) {
-        let (best, stats) = self.best_over_grid_indexed(space, servers, grid);
-        (best.map(|(wi, p)| (grid[wi].clone(), p)), stats)
+        let (best, stats) = self.best_over_grid_argmin(space, servers, grid);
+        (best.map(|(wi, _, p)| (grid[wi].clone(), p)), stats)
     }
 
     /// Core reduction: evaluate all (workload, server) pairs, sharing one
@@ -259,13 +259,16 @@ impl SweepEngine {
     /// (score, workload index, server index) — exactly the sequential
     /// first-minimum semantics. Only scores travel through the parallel
     /// reduction; the winner's full design point is recomputed exactly once
-    /// at the end.
-    fn best_over_grid_indexed(
+    /// at the end. The winning `(workload index, server index)` is part of
+    /// the return value: it is the optimum's identity under the tie-break
+    /// order, which the shard merge needs to recombine partial sweeps
+    /// bit-identically (`pub(crate)` for the experiment layer).
+    pub(crate) fn best_over_grid_argmin(
         &self,
         space: &ExploreSpace,
         servers: &[ServerDesign],
         grid: &[Workload],
-    ) -> (Option<(usize, DesignPoint)>, SweepStats) {
+    ) -> (Option<(usize, usize, DesignPoint)>, SweepStats) {
         let bounds: Vec<WorkloadBounds> = grid.iter().map(WorkloadBounds::new).collect();
         let order = self.order(servers);
         let mut pairs: Vec<(usize, usize)> = Vec::with_capacity(grid.len() * order.len());
@@ -329,7 +332,7 @@ impl SweepEngine {
             )
             .0
             .expect("winning pair must re-evaluate");
-            (wi, point)
+            (wi, si, point)
         });
         (winner, stats)
     }

@@ -35,6 +35,7 @@ pub fn from_args(cmd: &str, args: &Args) -> Result<Experiment> {
                 serve: None,
                 load: defaults::LOAD,
                 engine,
+                shard: None,
             }
         }
         "table2" => {
@@ -49,6 +50,7 @@ pub fn from_args(cmd: &str, args: &Args) -> Result<Experiment> {
                 serve: None,
                 load: defaults::LOAD,
                 engine,
+                shard: None,
             }
         }
         other => {
@@ -99,6 +101,7 @@ fn sweep_from_args(args: &Args, space: SpaceSpec, engine: EngineKnobs) -> Result
         serve,
         load: parse_positive_f64(args, "load")?.unwrap_or(defaults::LOAD),
         engine,
+        shard: None,
     })
 }
 
@@ -144,6 +147,7 @@ fn serve_sim_from_args(args: &Args, space: SpaceSpec, engine: EngineKnobs) -> Re
         serve: Some(spec),
         load,
         engine,
+        shard: None,
     })
 }
 
@@ -174,7 +178,7 @@ pub fn apply_engine_overrides(e: &mut Experiment, args: &Args) -> Result<()> {
 /// back to the default on a parse failure, which is exactly how a typo'd
 /// `--slo-ttft abc` used to become an unconstrained (∞) target — here it
 /// is an error instead.
-pub(crate) fn parse_positive_f64(args: &Args, name: &str) -> Result<Option<f64>> {
+pub fn parse_positive_f64(args: &Args, name: &str) -> Result<Option<f64>> {
     let Some(raw) = args.get(name) else { return Ok(None) };
     let v: f64 = raw
         .parse()
@@ -190,7 +194,7 @@ pub(crate) fn parse_positive_f64(args: &Args, name: &str) -> Result<Option<f64>>
 /// Parse `--name` as a usize, erroring on unparsable input instead of
 /// silently falling back to the default (the `Args::get_or` failure mode),
 /// and enforcing a minimum.
-pub(crate) fn parse_usize(args: &Args, name: &str, default: usize, min: usize) -> Result<usize> {
+pub fn parse_usize(args: &Args, name: &str, default: usize, min: usize) -> Result<usize> {
     let v = match args.get(name) {
         None => default,
         Some(raw) => raw.parse().map_err(|_| {

@@ -25,10 +25,14 @@
 //! old and new paths is by construction and locked by tests.
 
 pub mod cli;
+pub mod orchestrator;
+pub mod shard;
 
 use std::time::Instant;
 
-pub use crate::config::experiment::{EngineKnobs, Experiment, SpaceSpec, Task, WorkloadPoint};
+pub use crate::config::experiment::{
+    EngineKnobs, Experiment, ShardSel, SpaceSpec, Task, WorkloadPoint,
+};
 
 use crate::config::{ArrivalProcess, ModelSpec, ServeSpec, TrafficSpec, Workload};
 use crate::evaluate::{DesignPoint, SloSelection, SweepEngine, SweepStats};
@@ -69,6 +73,14 @@ impl Engine {
         self.ctxs.len() - 1
     }
 
+    /// The memoized Phase-1 context for a space (materializing it on first
+    /// use). The shard planner needs the feasible-server count to split
+    /// the server axis.
+    pub(crate) fn ctx(&mut self, space: SpaceSpec) -> &Ctx {
+        let i = self.ctx_index(space);
+        &self.ctxs[i].1
+    }
+
     /// Execute one experiment. Validates the spec, then dispatches on its
     /// task; several models turn a sweep/serve-sim into a per-model
     /// [`Outcome::Campaign`] (optimize is inherently multi-model — one
@@ -86,6 +98,27 @@ impl Engine {
         let engine = sweep_engine(&e.engine);
         let ci = self.ctx_index(e.space);
         let ctx = &self.ctxs[ci].1;
+        // Shard slice bounds depend on run-time facts (the model's study
+        // grid, Phase 1's feasible-server count) the parser cannot see.
+        if let Some(sel) = &e.shard {
+            if let Some((_, hi)) = sel.grid {
+                let g = Workload::study_grid(&models[0]).len();
+                if hi > g {
+                    return Err(Error::Config(format!(
+                        "shard grid slice ends at {hi} but the study grid has {g} workloads"
+                    )));
+                }
+            }
+            if let Some((_, hi)) = sel.servers {
+                let n = ctx.servers.len();
+                if hi > n {
+                    return Err(Error::Config(format!(
+                        "shard server slice ends at {hi} but phase 1 produced {n} \
+                         feasible servers"
+                    )));
+                }
+            }
+        }
         match e.task {
             Task::Optimize => Ok(Outcome::Optimize(optimize_outcome(ctx, &models, &engine))),
             Task::Sweep | Task::ServeSim if models.len() > 1 => {
@@ -108,12 +141,21 @@ impl Engine {
     /// the Phase-1 context cache. Returns `(experiment name, outcome)`
     /// pairs in the same order — the multi-spec campaign mode behind
     /// `ccloud run a.json b.json ...`.
-    pub fn run_campaign(&mut self, specs: &[Experiment]) -> Result<Vec<(String, Outcome)>> {
+    ///
+    /// Graceful degradation: a spec that fails validation or execution
+    /// does not abort the campaign — its slot carries an
+    /// [`Outcome::Error`] with the message, and every other spec still
+    /// runs. Callers that need a nonzero exit inspect the members.
+    pub fn run_campaign(&mut self, specs: &[Experiment]) -> Vec<(String, Outcome)> {
         let mut out = Vec::with_capacity(specs.len());
         for e in specs {
-            out.push((e.name.clone(), self.run(e)?));
+            let outcome = match self.run(e) {
+                Ok(o) => o,
+                Err(err) => Outcome::Error(err.to_string()),
+            };
+            out.push((e.name.clone(), outcome));
         }
-        Ok(out)
+        out
     }
 }
 
@@ -135,12 +177,13 @@ pub fn sweep_engine(knobs: &EngineKnobs) -> SweepEngine {
 
 fn run_single(ctx: &Ctx, e: &Experiment, model: &ModelSpec, engine: &SweepEngine) -> Outcome {
     match e.task {
-        Task::Sweep => Outcome::Sweep(Box::new(sweep_outcome(
+        Task::Sweep => Outcome::Sweep(Box::new(sweep_outcome_sharded(
             ctx,
             model,
             e.serve.as_ref(),
             e.load,
             engine,
+            e.shard.as_ref(),
         ))),
         Task::ServeSim => {
             let wp = e.workload.expect("validated: serve-sim carries a workload");
@@ -170,6 +213,11 @@ pub enum Outcome {
     /// Several named outcomes (multi-model sweeps/serve-sims, or
     /// `ccloud run` over several spec files), in deterministic input order.
     Campaign(Vec<(String, Outcome)>),
+    /// A spec that failed validation or execution inside a campaign. The
+    /// campaign continues past it and carries the error as data (graceful
+    /// degradation); the message is what [`Engine::run`] would have
+    /// returned as `Err`.
+    Error(String),
 }
 
 impl Outcome {
@@ -186,6 +234,12 @@ impl Outcome {
                 .iter()
                 .flat_map(|(name, o)| o.named_tables(name))
                 .collect(),
+            Outcome::Error(err) => {
+                let mut t = Table::new(vec!["Experiment", "Error"])
+                    .with_title("Failed experiment".to_string());
+                t.row(vec![id.to_string(), err.clone()]);
+                vec![(id.to_string(), t)]
+            }
         }
     }
 
@@ -214,6 +268,10 @@ impl Outcome {
                     ),
                 ),
             ]),
+            Outcome::Error(err) => obj(vec![
+                ("kind", Json::Str("error".into())),
+                ("error", Json::Str(err.clone())),
+            ]),
         }
     }
 }
@@ -238,6 +296,11 @@ pub struct SweepOutcome {
     pub wall_s: f64,
     /// The TCO/Token optimum over the grid, with its grid point.
     pub best: Option<(Workload, DesignPoint)>,
+    /// Global `(grid index, server index)` of the optimum — its identity
+    /// under the engine's `(score, grid index, server index)` tie-break
+    /// order. Carried in the JSON so [`shard::merge`] recombines partial
+    /// sweeps exactly as the single-process argmin would.
+    pub best_index: Option<(usize, usize)>,
     /// SLO-constrained stage, when the spec carried a binding SLO.
     pub slo: Option<SloPart>,
 }
@@ -350,14 +413,41 @@ pub fn sweep_outcome(
     load: f64,
     engine: &SweepEngine,
 ) -> SweepOutcome {
+    sweep_outcome_sharded(ctx, model, serve, load, engine, None)
+}
+
+/// [`sweep_outcome`] restricted to a shard's grid/server slices (`None` =
+/// the whole axes, i.e. the ordinary single-process sweep). Grid length,
+/// server count and the optimum's indices are reported in *global*
+/// coordinates, and the SLO-constrained stage runs at the shard-local
+/// optimum's grid point over the **full** server set — exactly what the
+/// single-process run does at the winning shard's grid point — so
+/// [`shard::merge`] can recombine shard outcomes bit-identically (minus
+/// the `"engine"` counters).
+pub(crate) fn sweep_outcome_sharded(
+    ctx: &Ctx,
+    model: &ModelSpec,
+    serve: Option<&ServeSpec>,
+    load: f64,
+    engine: &SweepEngine,
+    sel: Option<&ShardSel>,
+) -> SweepOutcome {
     let frontier = crate::explore::pareto::frontier_indices(&ctx.servers).len();
-    let grid = Workload::study_grid(model);
+    let grid_full = Workload::study_grid(model);
+    let (glo, ghi) = sel.and_then(|s| s.grid).unwrap_or((0, grid_full.len()));
+    let (srv_lo, srv_hi) = sel.and_then(|s| s.servers).unwrap_or((0, ctx.servers.len()));
+    let grid = &grid_full[glo..ghi];
+    let servers = &ctx.servers[srv_lo..srv_hi];
     let t0 = Instant::now();
-    let (best, stats) = engine.best_over_grid_stats(&ctx.space, &ctx.servers, &grid);
+    let (win, stats) = engine.best_over_grid_argmin(&ctx.space, servers, grid);
     let wall_s = t0.elapsed().as_secs_f64();
+    let best_index = win.as_ref().map(|&(wi, si, _)| (glo + wi, srv_lo + si));
+    let best = win.map(|(wi, _, p)| (grid[wi].clone(), p));
     let slo = serve.map(|spec| {
-        let wctx = spec_ctx(&grid, &best);
-        let wbatch = spec_batch(&grid, &best);
+        // Fallback grid point for an all-infeasible slice: mid-point of
+        // the *full* grid, same as the single-process all-infeasible case.
+        let wctx = spec_ctx(&grid_full, &best);
+        let wbatch = spec_batch(&grid_full, &best);
         let w = Workload::new(model.clone(), wctx, wbatch);
         // An unresolved open-loop rate (rps <= 0) would make the SLO pass
         // vacuous; pace it against the unconstrained optimum's capacity —
@@ -376,13 +466,14 @@ pub fn sweep_outcome(
     });
     SweepOutcome {
         model: model.clone(),
-        grid_len: grid.len(),
+        grid_len: grid_full.len(),
         feasible_servers: ctx.servers.len(),
         frontier,
         threads: crate::util::parallel::resolve(engine.threads),
         stats,
         wall_s,
         best,
+        best_index,
         slo,
     }
 }
@@ -593,7 +684,20 @@ impl SweepOutcome {
     /// engine-variant/invariant split.
     pub fn to_json(&self) -> Json {
         let best = match &self.best {
-            Some((w, p)) => design_json(w.ctx, w.batch, p),
+            Some((w, p)) => {
+                let mut b = design_json(w.ctx, w.batch, p);
+                // The optimum's identity under the engine's tie-break
+                // order — (score, grid index, server index) — travels in
+                // the JSON so a shard merge reproduces the single-process
+                // argmin exactly. Engine-*invariant*: every engine
+                // configuration reports the same winner.
+                if let (Json::Obj(m), Some((gi, si))) = (&mut b, &self.best_index) {
+                    m.insert("grid_index".into(), int(*gi));
+                    m.insert("server_index".into(), int(*si));
+                    m.insert("tco_per_token".into(), num(p.tco_per_token));
+                }
+                b
+            }
             None => Json::Null,
         };
         let slo = match &self.slo {
@@ -813,13 +917,13 @@ impl OptimizeOutcome {
 // ---------------------------------------------------------------------------
 // JSON helpers.
 
-fn obj(pairs: Vec<(&str, Json)>) -> Json {
+pub(crate) fn obj(pairs: Vec<(&str, Json)>) -> Json {
     Json::Obj(pairs.into_iter().map(|(k, v)| (k.to_string(), v)).collect())
 }
 
 /// Finite numbers only — JSON has no `Infinity`/`NaN`, so degenerate
 /// values (unconstrained targets, empty-tail percentiles) emit `null`.
-fn num(x: f64) -> Json {
+pub(crate) fn num(x: f64) -> Json {
     if x.is_finite() {
         Json::Num(x)
     } else {
@@ -827,7 +931,7 @@ fn num(x: f64) -> Json {
     }
 }
 
-fn int(x: usize) -> Json {
+pub(crate) fn int(x: usize) -> Json {
     Json::Num(x as f64)
 }
 

@@ -1,0 +1,598 @@
+//! Supervising orchestrator for distributed campaigns.
+//!
+//! [`run_distributed`] shards one spec with [`super::shard::plan`], runs
+//! each shard as a child OS process (`ccloud run-shard`, spawned from the
+//! current executable — std::process only, fully offline), and merges the
+//! checkpointed outcome envelopes with [`super::shard::merge`]. The
+//! robustness contract:
+//!
+//! - per-shard wall-clock **timeouts** (overdue children are killed and
+//!   reaped, the attempt counts as failed);
+//! - bounded **retries** with deterministic exponential backoff
+//!   ([`crate::util::proc::backoff_delay`] — no jitter, so a seeded fault
+//!   plan reproduces the exact same schedule);
+//! - **atomic checkpoints** under `<run dir>/shards/` — a crash at any
+//!   instant leaves complete-or-absent files, never truncated ones;
+//! - **resume**: a fresh invocation with `resume = true` adopts valid
+//!   checkpoints (provenance-checked against the plan fingerprint) and
+//!   re-runs only missing or corrupt shards;
+//! - **graceful degradation**: exhausted retries produce a partial merged
+//!   outcome with an explicit missing-shard manifest instead of a crash.
+//!
+//! Fault injection for tests/CI is seeded through [`FaultPlan`]
+//! (`CC_FAULT_PLAN`): chosen shard *attempts* are killed, delayed, or made
+//! to write corrupt checkpoints, deterministically.
+
+use std::collections::VecDeque;
+use std::path::{Path, PathBuf};
+use std::process::{Child, Command, Stdio};
+use std::time::{Duration, Instant};
+
+use crate::config::experiment::Experiment;
+use crate::util::json::Json;
+use crate::util::proc::{atomic_write, backoff_delay, kill_and_reap};
+use crate::{Error, Result};
+
+use super::shard::{self, Envelope, Merged};
+use super::{int, num, obj, Engine};
+
+/// What an injected fault does to one shard attempt. The orchestrator sets
+/// `CC_FAULT` on the matching child; the `run-shard` subcommand sabotages
+/// itself accordingly, exercising the exact recovery path a real crash,
+/// hang, or torn write would.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum FaultAction {
+    /// The child exits (code 57) before writing its checkpoint.
+    Kill,
+    /// The child sleeps this many milliseconds before working (trips the
+    /// timeout when the delay exceeds it).
+    Delay(u64),
+    /// The child writes a truncated checkpoint and exits 0 — exit status
+    /// alone must not be trusted.
+    Corrupt,
+}
+
+impl FaultAction {
+    /// The `CC_FAULT` value handed to the child.
+    pub fn env_value(&self) -> String {
+        match self {
+            FaultAction::Kill => "kill".into(),
+            FaultAction::Delay(ms) => format!("delay:{ms}"),
+            FaultAction::Corrupt => "corrupt".into(),
+        }
+    }
+}
+
+/// A deterministic fault schedule: comma-separated entries
+/// `kill:<shard>@<attempt>`, `delay:<shard>@<attempt>:<millis>`, or
+/// `corrupt:<shard>@<attempt>` (attempts count from 0). Parsed from the
+/// `CC_FAULT_PLAN` environment variable by [`FaultPlan::from_env`].
+#[derive(Clone, Debug, Default)]
+pub struct FaultPlan {
+    entries: Vec<(usize, usize, FaultAction)>,
+}
+
+impl FaultPlan {
+    /// Parse a plan string; empty (or all-whitespace) means no faults.
+    pub fn parse(s: &str) -> std::result::Result<FaultPlan, String> {
+        let mut entries = Vec::new();
+        for raw in s.split(',').map(str::trim).filter(|t| !t.is_empty()) {
+            let (kind, rest) = raw
+                .split_once(':')
+                .ok_or_else(|| format!("fault '{raw}': expected <kind>:<shard>@<attempt>"))?;
+            let (target, delay_ms) = match kind {
+                "delay" => {
+                    let (t, ms) = rest
+                        .split_once(':')
+                        .ok_or_else(|| format!("fault '{raw}': delay needs a :<millis> suffix"))?;
+                    (t, Some(ms))
+                }
+                "kill" | "corrupt" => (rest, None),
+                other => return Err(format!("fault '{raw}': unknown kind '{other}'")),
+            };
+            let (shard, attempt) = target
+                .split_once('@')
+                .ok_or_else(|| format!("fault '{raw}': expected <shard>@<attempt>"))?;
+            let shard: usize = shard
+                .parse()
+                .map_err(|_| format!("fault '{raw}': bad shard index '{shard}'"))?;
+            let attempt: usize = attempt
+                .parse()
+                .map_err(|_| format!("fault '{raw}': bad attempt number '{attempt}'"))?;
+            let action = match kind {
+                "kill" => FaultAction::Kill,
+                "corrupt" => FaultAction::Corrupt,
+                _ => FaultAction::Delay(
+                    delay_ms
+                        .unwrap_or("")
+                        .parse()
+                        .map_err(|_| format!("fault '{raw}': bad delay millis"))?,
+                ),
+            };
+            entries.push((shard, attempt, action));
+        }
+        Ok(FaultPlan { entries })
+    }
+
+    /// Read `CC_FAULT_PLAN` from the environment (absent → no faults).
+    pub fn from_env() -> std::result::Result<FaultPlan, String> {
+        match std::env::var("CC_FAULT_PLAN") {
+            Ok(s) => FaultPlan::parse(&s),
+            Err(_) => Ok(FaultPlan::default()),
+        }
+    }
+
+    /// The fault (if any) scheduled for this shard attempt.
+    pub fn lookup(&self, shard: usize, attempt: usize) -> Option<FaultAction> {
+        self.entries
+            .iter()
+            .find(|&&(s, a, _)| s == shard && a == attempt)
+            .map(|&(_, _, f)| f)
+    }
+
+    /// True when no faults are scheduled.
+    pub fn is_empty(&self) -> bool {
+        self.entries.is_empty()
+    }
+}
+
+/// Orchestrator knobs. Defaults match the CLI defaults of
+/// `ccloud run --distributed`.
+#[derive(Clone, Debug)]
+pub struct OrchestratorConfig {
+    /// Worker processes to shard into and run concurrently.
+    pub workers: usize,
+    /// Per-attempt wall-clock timeout; overdue children are killed.
+    pub timeout: Duration,
+    /// Retries after the first attempt (total attempts = retries + 1).
+    pub retries: usize,
+    /// Base backoff before retry k: `backoff << k`, capped at 30 s.
+    pub backoff: Duration,
+    /// Seeded fault-injection schedule (tests/CI).
+    pub fault_plan: FaultPlan,
+    /// Supervision poll interval.
+    pub poll: Duration,
+    /// Child executable override (benches/tests that are not `ccloud`
+    /// themselves); `None` uses `std::env::current_exe()`.
+    pub exe: Option<PathBuf>,
+}
+
+impl Default for OrchestratorConfig {
+    fn default() -> OrchestratorConfig {
+        OrchestratorConfig {
+            workers: 2,
+            timeout: Duration::from_secs(600),
+            retries: 2,
+            backoff: Duration::from_millis(250),
+            fault_plan: FaultPlan::default(),
+            poll: Duration::from_millis(10),
+            exe: None,
+        }
+    }
+}
+
+/// Supervision record of one shard across all its attempts.
+#[derive(Clone, Debug)]
+pub struct ShardStatus {
+    /// Shard index in the plan.
+    pub index: usize,
+    /// Attempts launched this invocation (0 when adopted from checkpoint).
+    pub attempts: usize,
+    /// Attempts that hit the wall-clock timeout.
+    pub timeouts: usize,
+    /// Adopted from a valid checkpoint by `--resume`, not re-run.
+    pub from_checkpoint: bool,
+    /// A validated checkpoint exists.
+    pub ok: bool,
+    /// Last failure (kept for diagnostics even after a later success).
+    pub error: Option<String>,
+    /// Child wall-clock seconds summed over attempts.
+    pub wall_s: f64,
+}
+
+/// Everything `run_distributed` produced: the merged (possibly partial)
+/// outcome plus the per-shard supervision log.
+#[derive(Clone, Debug)]
+pub struct DistributedRun {
+    /// Merge result; `merged.missing` is the explicit failure manifest.
+    pub merged: Merged,
+    /// Per-shard supervision records, in shard order.
+    pub statuses: Vec<ShardStatus>,
+    /// The run directory holding plan, checkpoints, outcome, and status.
+    pub run_dir: PathBuf,
+}
+
+/// Checkpoint file name of shard `i`'s spec.
+pub fn spec_name(i: usize) -> String {
+    format!("shard-{i:03}.spec.json")
+}
+
+/// Checkpoint file name of shard `i`'s outcome envelope.
+pub fn outcome_name(i: usize) -> String {
+    format!("shard-{i:03}.outcome.json")
+}
+
+/// Shard a spec, supervise child processes through timeouts/retries, and
+/// merge the checkpoints. See the module docs for the robustness contract.
+///
+/// Fresh runs (`resume = false`) require a directory without a prior plan;
+/// `resume = true` requires one, verifies its fingerprint against `spec`,
+/// and re-runs only shards whose checkpoint is missing or invalid.
+/// Returns `Ok` even when shards are missing — callers decide the exit
+/// code from [`Merged::missing`]; `Err` is reserved for unusable input
+/// (bad spec, wrong run directory, unreadable plan).
+pub fn run_distributed(
+    spec: &Experiment,
+    run_dir: &Path,
+    resume: bool,
+    cfg: &OrchestratorConfig,
+) -> Result<DistributedRun> {
+    let fp = spec.fingerprint();
+    let plan_path = run_dir.join("plan.json");
+    let shards_dir = run_dir.join("shards");
+    let located =
+        |p: &Path, e: &dyn std::fmt::Display| Error::Config(format!("{}: {e}", p.display()));
+
+    let shards: Vec<Experiment> = if resume {
+        let text = std::fs::read_to_string(&plan_path).map_err(|e| located(&plan_path, &e))?;
+        let plan = Json::parse(&text).map_err(|e| located(&plan_path, &e))?;
+        let recorded = plan.get("fingerprint").and_then(Json::as_str).unwrap_or("");
+        if recorded != fp {
+            return Err(Error::Config(format!(
+                "{}: run directory belongs to a different spec \
+                 (fingerprint {recorded} != {fp})",
+                plan_path.display()
+            )));
+        }
+        let n = plan
+            .get("shards")
+            .and_then(Json::as_usize)
+            .ok_or_else(|| located(&plan_path, &"plan has no 'shards' count"))?;
+        let mut loaded = Vec::with_capacity(n);
+        for i in 0..n {
+            let p = shards_dir.join(spec_name(i));
+            let text = std::fs::read_to_string(&p).map_err(|e| located(&p, &e))?;
+            let v = Json::parse(&text).map_err(|e| located(&p, &e))?;
+            loaded.push(Experiment::from_json(&v).map_err(|e| located(&p, &e))?);
+        }
+        loaded
+    } else {
+        if plan_path.exists() {
+            return Err(Error::Config(format!(
+                "{}: run directory already holds a plan; pass --resume to \
+                 continue it or choose a fresh directory",
+                run_dir.display()
+            )));
+        }
+        let mut engine = Engine::new();
+        let shards = shard::plan(spec, cfg.workers, &mut engine)?;
+        // Shard specs first, plan last: a plan.json implies its shard
+        // specs are all on disk.
+        for (i, s) in shards.iter().enumerate() {
+            let p = shards_dir.join(spec_name(i));
+            atomic_write(&p, format!("{}\n", s.to_json()).as_bytes())
+                .map_err(|e| located(&p, &e))?;
+        }
+        let plan = obj(vec![
+            ("fingerprint", Json::Str(fp.clone())),
+            ("shards", int(shards.len())),
+            ("workers", int(cfg.workers)),
+            ("spec", spec.to_json()),
+        ]);
+        atomic_write(&plan_path, format!("{plan}\n").as_bytes())
+            .map_err(|e| located(&plan_path, &e))?;
+        shards
+    };
+
+    let n = shards.len();
+    let mut statuses: Vec<ShardStatus> = (0..n)
+        .map(|index| ShardStatus {
+            index,
+            attempts: 0,
+            timeouts: 0,
+            from_checkpoint: false,
+            ok: false,
+            error: None,
+            wall_s: 0.0,
+        })
+        .collect();
+    let mut envelopes: Vec<Option<Envelope>> = vec![None; n];
+
+    // Adopt valid checkpoints on resume; corrupt or foreign ones are
+    // reported per-file and re-run — never a panic, never silent trust.
+    if resume {
+        for (i, slot) in envelopes.iter_mut().enumerate() {
+            let p = shards_dir.join(outcome_name(i));
+            let text = match std::fs::read_to_string(&p) {
+                Ok(t) => t,
+                Err(_) => continue,
+            };
+            match Envelope::from_json_str(&text) {
+                Ok(env)
+                    if env.spec.shard.as_ref().is_some_and(|s| s.index == i && s.parent == fp) =>
+                {
+                    statuses[i].from_checkpoint = true;
+                    statuses[i].ok = true;
+                    *slot = Some(env);
+                }
+                Ok(_) => eprintln!(
+                    "{}: checkpoint belongs to a different shard or spec; re-running shard {i}",
+                    p.display()
+                ),
+                Err(e) => {
+                    eprintln!("{}: corrupt checkpoint ({e}); re-running shard {i}", p.display())
+                }
+            }
+        }
+    }
+
+    let exe = match &cfg.exe {
+        Some(p) => p.clone(),
+        None => std::env::current_exe()
+            .map_err(|e| Error::Config(format!("cannot locate own executable: {e}")))?,
+    };
+    struct Slot {
+        index: usize,
+        attempt: usize,
+        child: Child,
+        started: Instant,
+        deadline: Instant,
+    }
+    // (shard, attempt, not-before) — backoff is a not-before timestamp so
+    // other shards keep the workers busy while one waits out its delay.
+    let mut pending: VecDeque<(usize, usize, Instant)> = (0..n)
+        .filter(|&i| envelopes[i].is_none())
+        .map(|i| (i, 0, Instant::now()))
+        .collect();
+    let mut running: Vec<Slot> = Vec::new();
+    let workers = cfg.workers.max(1);
+
+    while !pending.is_empty() || !running.is_empty() {
+        // Launch ready shards while workers are free.
+        let now = Instant::now();
+        while running.len() < workers {
+            let Some(pos) = pending.iter().position(|&(_, _, t)| t <= now) else { break };
+            let (index, attempt, _) = pending.remove(pos).expect("position is in range");
+            let spec_path = shards_dir.join(spec_name(index));
+            let out_path = shards_dir.join(outcome_name(index));
+            let mut cmd = Command::new(&exe);
+            cmd.arg("run-shard")
+                .arg(spec_path)
+                .arg("--out-file")
+                .arg(out_path)
+                .stdout(Stdio::null())
+                .stderr(Stdio::inherit())
+                .env_remove("CC_FAULT")
+                .env_remove("CC_FAULT_PLAN");
+            if let Some(fault) = cfg.fault_plan.lookup(index, attempt) {
+                cmd.env("CC_FAULT", fault.env_value());
+            }
+            statuses[index].attempts += 1;
+            match cmd.spawn() {
+                Ok(child) => running.push(Slot {
+                    index,
+                    attempt,
+                    child,
+                    started: now,
+                    deadline: now + cfg.timeout,
+                }),
+                Err(e) => fail(
+                    &mut statuses[index],
+                    &mut pending,
+                    attempt,
+                    cfg,
+                    format!("spawn failed: {e}"),
+                ),
+            }
+        }
+        // Reap finished and overdue children.
+        let mut k = 0;
+        while k < running.len() {
+            let slot = &mut running[k];
+            let done: Option<std::result::Result<(), String>> = match slot.child.try_wait() {
+                Ok(Some(st)) if st.success() => Some(Ok(())),
+                Ok(Some(st)) => Some(Err(match st.code() {
+                    Some(c) => format!("exited with status {c}"),
+                    None => "killed by a signal".to_string(),
+                })),
+                Ok(None) if Instant::now() >= slot.deadline => {
+                    kill_and_reap(&mut slot.child);
+                    statuses[slot.index].timeouts += 1;
+                    Some(Err(format!("timed out after {:.1}s", cfg.timeout.as_secs_f64())))
+                }
+                Ok(None) => None,
+                Err(e) => Some(Err(format!("wait failed: {e}"))),
+            };
+            let Some(result) = done else {
+                k += 1;
+                continue;
+            };
+            let slot = running.swap_remove(k);
+            statuses[slot.index].wall_s += slot.started.elapsed().as_secs_f64();
+            // Validate the checkpoint even on a clean exit: a torn or
+            // fault-corrupted write must count as a failed attempt.
+            let validated = result.and_then(|()| {
+                let p = shards_dir.join(outcome_name(slot.index));
+                let text =
+                    std::fs::read_to_string(&p).map_err(|e| format!("{}: {e}", p.display()))?;
+                let env = Envelope::from_json_str(&text)
+                    .map_err(|e| format!("{}: {e}", p.display()))?;
+                let s = env.spec.shard.as_ref().expect("from_json_str checked the marker");
+                if s.index != slot.index || s.parent != fp {
+                    return Err(format!(
+                        "{}: checkpoint is for shard {} of fingerprint {}",
+                        p.display(),
+                        s.index,
+                        s.parent
+                    ));
+                }
+                Ok(env)
+            });
+            match validated {
+                Ok(env) => {
+                    statuses[slot.index].ok = true;
+                    envelopes[slot.index] = Some(env);
+                }
+                Err(e) => fail(&mut statuses[slot.index], &mut pending, slot.attempt, cfg, e),
+            }
+        }
+        if !pending.is_empty() || !running.is_empty() {
+            std::thread::sleep(cfg.poll);
+        }
+    }
+
+    let collected: Vec<Envelope> = envelopes.into_iter().flatten().collect();
+    let merged = if collected.is_empty() {
+        // Every shard failed — still degrade gracefully to an explicit
+        // all-missing outcome rather than erroring out.
+        Merged {
+            outcome: obj(vec![
+                ("kind", Json::Str("error".into())),
+                ("error", Json::Str("all shards failed".into())),
+                ("missing_shards", Json::Arr((0..n).map(int).collect())),
+            ]),
+            missing: (0..n).collect(),
+            of: n,
+        }
+    } else {
+        shard::merge(&collected).map_err(Error::Config)?
+    };
+
+    let out_path = run_dir.join("outcome.json");
+    atomic_write(&out_path, format!("{}\n", merged.outcome).as_bytes())
+        .map_err(|e| located(&out_path, &e))?;
+    let status_path = run_dir.join("status.json");
+    let status_json = status_to_json(&fp, &merged, &statuses);
+    atomic_write(&status_path, format!("{status_json}\n").as_bytes())
+        .map_err(|e| located(&status_path, &e))?;
+
+    Ok(DistributedRun { merged, statuses, run_dir: run_dir.to_path_buf() })
+}
+
+/// Record a failed attempt: requeue with deterministic backoff while
+/// retries remain, otherwise mark the shard exhausted.
+fn fail(
+    status: &mut ShardStatus,
+    pending: &mut VecDeque<(usize, usize, Instant)>,
+    attempt: usize,
+    cfg: &OrchestratorConfig,
+    err: String,
+) {
+    eprintln!("shard {} attempt {attempt}: {err}", status.index);
+    if attempt < cfg.retries {
+        let delay = backoff_delay(cfg.backoff, attempt.min(31) as u32, Duration::from_secs(30));
+        pending.push_back((status.index, attempt + 1, Instant::now() + delay));
+        status.error = Some(err);
+    } else {
+        status.error = Some(format!("{err} (retries exhausted after {} attempts)", attempt + 1));
+    }
+}
+
+/// The machine-readable supervision summary written to `status.json`.
+pub fn status_to_json(fingerprint: &str, merged: &Merged, statuses: &[ShardStatus]) -> Json {
+    obj(vec![
+        ("fingerprint", Json::Str(fingerprint.to_string())),
+        ("shards", int(merged.of)),
+        ("ok", Json::Bool(merged.missing.is_empty())),
+        ("missing", Json::Arr(merged.missing.iter().map(|&i| int(i)).collect())),
+        (
+            "status",
+            Json::Arr(
+                statuses
+                    .iter()
+                    .map(|s| {
+                        obj(vec![
+                            ("index", int(s.index)),
+                            ("attempts", int(s.attempts)),
+                            ("timeouts", int(s.timeouts)),
+                            ("from_checkpoint", Json::Bool(s.from_checkpoint)),
+                            ("ok", Json::Bool(s.ok)),
+                            ("error", s.error.clone().map(Json::Str).unwrap_or(Json::Null)),
+                            ("wall_s", num(s.wall_s)),
+                        ])
+                    })
+                    .collect(),
+            ),
+        ),
+    ])
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn fault_plan_parses_and_looks_up() {
+        let p = FaultPlan::parse("kill:1@0, delay:2@1:500 ,corrupt:0@2").unwrap();
+        assert!(!p.is_empty());
+        assert_eq!(p.lookup(1, 0), Some(FaultAction::Kill));
+        assert_eq!(p.lookup(2, 1), Some(FaultAction::Delay(500)));
+        assert_eq!(p.lookup(0, 2), Some(FaultAction::Corrupt));
+        assert_eq!(p.lookup(1, 1), None);
+        assert_eq!(p.lookup(0, 0), None);
+        assert!(FaultPlan::parse("").unwrap().is_empty());
+        assert!(FaultPlan::parse("   ").unwrap().is_empty());
+    }
+
+    #[test]
+    fn fault_plan_rejects_malformed_entries() {
+        for bad in [
+            "explode:1@0",
+            "kill:1",
+            "kill:x@0",
+            "kill:1@y",
+            "delay:1@0",
+            "delay:1@0:fast",
+        ] {
+            let err = FaultPlan::parse(bad).unwrap_err();
+            assert!(err.contains("fault"), "{bad}: {err}");
+        }
+    }
+
+    #[test]
+    fn fault_env_values_round_trip_intent() {
+        assert_eq!(FaultAction::Kill.env_value(), "kill");
+        assert_eq!(FaultAction::Delay(250).env_value(), "delay:250");
+        assert_eq!(FaultAction::Corrupt.env_value(), "corrupt");
+    }
+
+    #[test]
+    fn status_json_reports_missing_and_attempts() {
+        let merged = Merged {
+            outcome: Json::Null,
+            missing: vec![1],
+            of: 2,
+        };
+        let statuses = vec![
+            ShardStatus {
+                index: 0,
+                attempts: 1,
+                timeouts: 0,
+                from_checkpoint: false,
+                ok: true,
+                error: None,
+                wall_s: 0.5,
+            },
+            ShardStatus {
+                index: 1,
+                attempts: 3,
+                timeouts: 1,
+                from_checkpoint: false,
+                ok: false,
+                error: Some("timed out after 0.1s (retries exhausted after 3 attempts)".into()),
+                wall_s: 0.3,
+            },
+        ];
+        let v = status_to_json("deadbeefdeadbeef", &merged, &statuses);
+        assert_eq!(v.get("ok").and_then(Json::as_bool), Some(false));
+        assert_eq!(v.get("missing").and_then(Json::as_arr).map(<[Json]>::len), Some(1));
+        let rows = v.get("status").and_then(Json::as_arr).unwrap();
+        assert_eq!(rows[1].get("attempts").and_then(Json::as_usize), Some(3));
+        assert_eq!(rows[1].get("timeouts").and_then(Json::as_usize), Some(1));
+        assert!(rows[1]
+            .get("error")
+            .and_then(Json::as_str)
+            .unwrap()
+            .contains("exhausted"));
+    }
+}

@@ -1,0 +1,637 @@
+//! Shard planning and outcome merging for distributed campaigns.
+//!
+//! [`plan`] splits one [`Experiment`] into N child specs along the
+//! model × study-grid × Phase-1-server axes; each child is itself a valid
+//! spec (runnable by [`Engine::run`] in any process) tagged with a
+//! [`ShardSel`] marker carrying its slice and the parent's fingerprint.
+//! [`merge`] recombines shard outcome *envelopes* — `{spec, outcome}`
+//! documents written by `ccloud run-shard` — purely at the JSON level,
+//! reproducing the engine's exact `(tco_per_token, grid index, server
+//! index)` argmin tie-break, so the merged document is byte-identical to
+//! the single-process outcome outside the `"engine"` counters. That
+//! identity is the contract the integration property tests and the CI
+//! fault-injection smoke assert.
+//!
+//! Merging is total over malformed input: corrupt or foreign envelopes
+//! are per-document errors, never panics, and missing shards degrade to a
+//! partial merge with an explicit `"missing_shards"` manifest.
+
+use std::collections::BTreeMap;
+
+use crate::config::experiment::{Experiment, ShardSel, Task};
+use crate::config::{ModelSpec, Workload};
+use crate::util::json::Json;
+use crate::{Error, Result};
+
+use super::{obj, Engine};
+
+/// Split a spec into at most `workers` child shard specs.
+///
+/// Axis priority mirrors the cost structure: whole models first (each
+/// model's grid search is the expensive unit), then contiguous study-grid
+/// slices when workers outnumber models on a sweep, then Phase-1 server
+/// slices in the extreme case of more workers than grid points. Children
+/// are emitted in global `(model, grid, server)` order and keep the
+/// parent's name and engine knobs; `workers = 1` (or an unshardable task)
+/// yields a single trivial shard so the envelope/merge path is uniform.
+///
+/// The `engine` is only consulted (and Phase 1 only materialized) when the
+/// server axis actually needs splitting.
+pub fn plan(e: &Experiment, workers: usize, engine: &mut Engine) -> Result<Vec<Experiment>> {
+    e.validate().map_err(Error::Config)?;
+    if e.shard.is_some() {
+        return Err(Error::Config(format!(
+            "'{}' is already a shard; plan from the parent spec",
+            e.name
+        )));
+    }
+    let workers = workers.max(1);
+    let n_models = e.models.len();
+    // Work descriptions (models, grid slice, server slice); index/of are
+    // assigned once the total is known.
+    type Part = (Vec<String>, Option<(usize, usize)>, Option<(usize, usize)>);
+    let mut parts: Vec<Part> = Vec::new();
+    if workers <= n_models || e.task != Task::Sweep {
+        // Contiguous balanced model chunks (optimize/serve-sim never split
+        // below a model: their per-model outcomes have no finer merge).
+        for (lo, hi) in chunks(n_models, workers) {
+            parts.push((e.models[lo..hi].to_vec(), None, None));
+        }
+    } else {
+        for (mi, name) in e.models.iter().enumerate() {
+            let share = worker_share(workers, n_models, mi);
+            let model = ModelSpec::by_name(name).expect("validated model");
+            let grid_len = Workload::study_grid(&model).len();
+            if share <= 1 {
+                parts.push((vec![name.clone()], None, None));
+                continue;
+            }
+            let n_servers = if share > grid_len { engine.ctx(e.space).servers.len() } else { 0 };
+            if share <= grid_len || n_servers <= 1 {
+                for (lo, hi) in chunks(grid_len, share) {
+                    parts.push((vec![name.clone()], Some((lo, hi)), None));
+                }
+            } else {
+                // More workers than grid points: one group per grid point,
+                // each splitting the server axis.
+                for gi in 0..grid_len {
+                    let k = worker_share(share, grid_len, gi).max(1);
+                    for (lo, hi) in chunks(n_servers, k) {
+                        parts.push((vec![name.clone()], Some((gi, gi + 1)), Some((lo, hi))));
+                    }
+                }
+            }
+        }
+    }
+    let of = parts.len();
+    let parent = e.fingerprint();
+    Ok(parts
+        .into_iter()
+        .enumerate()
+        .map(|(index, (models, grid, servers))| Experiment {
+            models,
+            shard: Some(ShardSel {
+                index,
+                of,
+                parent: parent.clone(),
+                parent_models: n_models,
+                grid,
+                servers,
+            }),
+            ..e.clone()
+        })
+        .collect())
+}
+
+/// Contiguous balanced partition of `0..len` into `min(parts, len)` chunks
+/// (sizes differ by at most one, larger chunks first) — deterministic.
+fn chunks(len: usize, parts: usize) -> Vec<(usize, usize)> {
+    let parts = parts.min(len).max(1);
+    let base = len / parts;
+    let extra = len % parts;
+    let mut out = Vec::with_capacity(parts);
+    let mut lo = 0;
+    for i in 0..parts {
+        let sz = base + usize::from(i < extra);
+        out.push((lo, lo + sz));
+        lo += sz;
+    }
+    out
+}
+
+/// Workers allotted to unit `i` when `total` workers split over `units`.
+fn worker_share(total: usize, units: usize, i: usize) -> usize {
+    total / units + usize::from(i < total % units)
+}
+
+/// A shard outcome envelope: the child spec (with its [`ShardSel`] marker)
+/// plus the outcome JSON it produced. This is the document `ccloud
+/// run-shard` checkpoints and [`merge`] consumes — carrying the spec means
+/// a merge can verify provenance without any side channel.
+#[derive(Clone, Debug)]
+pub struct Envelope {
+    /// The shard spec that ran.
+    pub spec: Experiment,
+    /// Its [`super::Outcome::to_json`] document.
+    pub outcome: Json,
+}
+
+impl Envelope {
+    /// Wrap a shard run.
+    pub fn new(spec: Experiment, outcome: Json) -> Envelope {
+        Envelope { spec, outcome }
+    }
+
+    /// The `{"spec": ..., "outcome": ...}` document.
+    pub fn to_json(&self) -> Json {
+        obj(vec![("spec", self.spec.to_json()), ("outcome", self.outcome.clone())])
+    }
+
+    /// Strict parse of a checkpoint document: both fields required, the
+    /// spec must parse (unknown fields rejected) and carry a shard marker,
+    /// the outcome must be an object. Truncated or corrupt JSON is an
+    /// error, never a panic — the orchestrator treats it as a failed
+    /// attempt and the merge CLI reports it per-file.
+    pub fn from_json_str(s: &str) -> std::result::Result<Envelope, String> {
+        let v = Json::parse(s)?;
+        let m = match &v {
+            Json::Obj(m) => m,
+            _ => return Err("envelope: expected a JSON object".into()),
+        };
+        for key in m.keys() {
+            if key != "spec" && key != "outcome" {
+                return Err(format!("envelope: unknown field '{key}' (expected spec, outcome)"));
+            }
+        }
+        let spec =
+            Experiment::from_json(m.get("spec").ok_or("envelope is missing the field 'spec'")?)?;
+        if spec.shard.is_none() {
+            return Err(format!(
+                "'{}' is not a shard outcome (its spec has no shard marker)",
+                spec.name
+            ));
+        }
+        let outcome =
+            m.get("outcome").ok_or("envelope is missing the field 'outcome'")?.clone();
+        if !matches!(outcome, Json::Obj(_)) {
+            return Err("envelope: 'outcome' must be a JSON object".into());
+        }
+        Ok(Envelope { spec, outcome })
+    }
+}
+
+/// Result of [`merge`]: the recombined outcome document plus the explicit
+/// missing-shard manifest (empty on a complete merge).
+#[derive(Clone, Debug)]
+pub struct Merged {
+    /// The merged outcome JSON. When shards are missing it is the partial
+    /// merge over what arrived, with a top-level `"missing_shards"` array
+    /// naming the absent indices.
+    pub outcome: Json,
+    /// Shard indices of the plan that no envelope covered.
+    pub missing: Vec<usize>,
+    /// Total shards in the plan.
+    pub of: usize,
+}
+
+fn sel(env: &Envelope) -> &ShardSel {
+    env.spec.shard.as_ref().expect("merge checked the shard marker")
+}
+
+/// Recombine shard outcome envelopes into the parent outcome.
+///
+/// Verifies provenance (same parent fingerprint, same plan size, unique
+/// indices) and reproduces the engine's argmin semantics at the JSON
+/// level: sweep slices reduce by `(tco_per_token, grid_index,
+/// server_index)`, optimize shards concatenate rows in model order,
+/// multi-model campaigns reassemble members in plan order. Engine-variant
+/// counters are summed under `"engine"`; everything else is byte-identical
+/// to the single-process outcome. Missing shards degrade to a partial
+/// merge recorded in [`Merged::missing`] and the `"missing_shards"` key.
+pub fn merge(envs: &[Envelope]) -> std::result::Result<Merged, String> {
+    if envs.is_empty() {
+        return Err("nothing to merge: no shard outcomes".into());
+    }
+    for env in envs {
+        if env.spec.shard.is_none() {
+            return Err(format!(
+                "'{}' is not a shard outcome (its spec has no shard marker)",
+                env.spec.name
+            ));
+        }
+    }
+    let mut sorted: Vec<&Envelope> = envs.iter().collect();
+    sorted.sort_by_key(|e| sel(e).index);
+    let first = sel(sorted[0]);
+    let of = first.of;
+    let parent = first.parent.clone();
+    let parent_models = first.parent_models;
+    let name = sorted[0].spec.name.clone();
+    let task = sorted[0].spec.task;
+    let mut seen = vec![false; of];
+    for env in &sorted {
+        let s = sel(env);
+        if s.parent != parent {
+            return Err(format!(
+                "shard {} belongs to a different parent spec (fingerprint {} != {})",
+                s.index, s.parent, parent
+            ));
+        }
+        if s.of != of {
+            return Err(format!(
+                "shard {} comes from a different plan ({} shards != {})",
+                s.index, s.of, of
+            ));
+        }
+        if s.index >= of {
+            return Err(format!("shard index {} out of range (plan has {of} shards)", s.index));
+        }
+        if seen[s.index] {
+            return Err(format!("duplicate shard index {}", s.index));
+        }
+        seen[s.index] = true;
+    }
+    let missing: Vec<usize> = (0..of).filter(|&i| !seen[i]).collect();
+    let mut outcome = if of == 1 {
+        sorted[0].outcome.clone()
+    } else {
+        match task {
+            Task::Optimize => merge_optimize(&sorted)?,
+            Task::Sweep | Task::ServeSim if parent_models > 1 => merge_campaign(&name, &sorted)?,
+            Task::Sweep => merge_sweep(&sorted)?,
+            Task::ServeSim => {
+                return Err("a single-model serve-sim never shards; cannot merge".into())
+            }
+        }
+    };
+    if !missing.is_empty() {
+        if let Json::Obj(m) = &mut outcome {
+            m.insert(
+                "missing_shards".into(),
+                Json::Arr(missing.iter().map(|&i| Json::Num(i as f64)).collect()),
+            );
+        }
+    }
+    Ok(Merged { outcome, missing, of })
+}
+
+/// Optimize shards are model chunks: their Table-2 rows concatenate in
+/// shard (= model) order.
+fn merge_optimize(sorted: &[&Envelope]) -> std::result::Result<Json, String> {
+    let mut rows = Vec::new();
+    for env in sorted {
+        let idx = sel(env).index;
+        match env.outcome.get("kind").and_then(Json::as_str) {
+            Some("optimize") => {}
+            other => {
+                return Err(format!("shard {idx}: expected an optimize outcome, got {other:?}"))
+            }
+        }
+        let r = env
+            .outcome
+            .get("rows")
+            .and_then(Json::as_arr)
+            .ok_or_else(|| format!("shard {idx}: optimize outcome has no 'rows' array"))?;
+        rows.extend(r.iter().cloned());
+    }
+    Ok(obj(vec![("kind", Json::Str("optimize".into())), ("rows", Json::Arr(rows))]))
+}
+
+/// Multi-model sweep/serve-sim shards reassemble the per-model campaign:
+/// multi-model chunks contribute their campaign members verbatim,
+/// single-model groups merge their slices (or pass through) and are named
+/// `<parent name>-<model>` exactly as [`Engine::run`] names members.
+fn merge_campaign(name: &str, sorted: &[&Envelope]) -> std::result::Result<Json, String> {
+    let mut members: Vec<Json> = Vec::new();
+    let mut i = 0;
+    while i < sorted.len() {
+        let models = &sorted[i].spec.models;
+        let mut j = i + 1;
+        while j < sorted.len() && &sorted[j].spec.models == models {
+            j += 1;
+        }
+        let group = &sorted[i..j];
+        if models.len() > 1 {
+            for env in group {
+                let idx = sel(env).index;
+                let exps = env
+                    .outcome
+                    .get("experiments")
+                    .and_then(Json::as_arr)
+                    .ok_or_else(|| {
+                        format!("shard {idx}: expected a campaign outcome with 'experiments'")
+                    })?;
+                members.extend(exps.iter().cloned());
+            }
+        } else {
+            let sliced = group
+                .iter()
+                .any(|env| sel(env).grid.is_some() || sel(env).servers.is_some());
+            let outcome = if group.len() == 1 && !sliced {
+                group[0].outcome.clone()
+            } else {
+                merge_sweep(group)?
+            };
+            members.push(obj(vec![
+                ("name", Json::Str(format!("{name}-{}", models[0]))),
+                ("outcome", outcome),
+            ]));
+        }
+        i = j;
+    }
+    Ok(obj(vec![
+        ("kind", Json::Str("campaign".into())),
+        ("experiments", Json::Arr(members)),
+    ]))
+}
+
+/// Reduce sweep slices of one model: the winner is the argmin over
+/// `(tco_per_token, grid_index, server_index)` — the engine's exact
+/// tie-break — and contributes its `best` and `slo` subtrees verbatim
+/// (its SLO stage ran at the global optimum's grid point over the full
+/// server set, so the subtree is the single-process one bit-for-bit).
+fn merge_sweep(group: &[&Envelope]) -> std::result::Result<Json, String> {
+    let mut win: Option<(f64, usize, usize, usize)> = None; // (score, gi, si, group pos)
+    for (k, env) in group.iter().enumerate() {
+        let idx = sel(env).index;
+        match env.outcome.get("kind").and_then(Json::as_str) {
+            Some("sweep") => {}
+            other => return Err(format!("shard {idx}: expected a sweep outcome, got {other:?}")),
+        }
+        let best = env
+            .outcome
+            .get("best")
+            .ok_or_else(|| format!("shard {idx}: sweep outcome has no 'best'"))?;
+        if matches!(best, Json::Null) {
+            continue;
+        }
+        let field = |key: &str| {
+            best.get(key)
+                .and_then(Json::as_f64)
+                .ok_or_else(|| format!("shard {idx}: 'best' lacks a numeric '{key}'"))
+        };
+        let score = field("tco_per_token")?;
+        let gi = field("grid_index")? as usize;
+        let si = field("server_index")? as usize;
+        let better = match win {
+            None => true,
+            Some((bs, bgi, bsi, _)) => score < bs || (score == bs && (gi, si) < (bgi, bsi)),
+        };
+        if better {
+            win = Some((score, gi, si, k));
+        }
+    }
+    // Template: every engine-invariant field of a shard outcome (model,
+    // grid_workloads, feasible_servers, pareto_frontier) is already in
+    // global coordinates, so the first shard's copy is the merged one.
+    let mut m = match &group[0].outcome {
+        Json::Obj(m) => m.clone(),
+        _ => return Err(format!("shard {}: outcome is not an object", sel(group[0]).index)),
+    };
+    let donor = match win {
+        Some((_, _, _, k)) => group[k],
+        // Every slice infeasible: all shards reported the identical
+        // fallback (best null; slo null or {"feasible": false}).
+        None => group[0],
+    };
+    m.insert("best".into(), donor.outcome.get("best").cloned().unwrap_or(Json::Null));
+    m.insert("slo".into(), donor.outcome.get("slo").cloned().unwrap_or(Json::Null));
+    m.insert("engine".into(), merge_engine(group));
+    Ok(Json::Obj(m))
+}
+
+/// Engine-variant counters of merged sweep slices: work counters and wall
+/// time sum, `threads` reports the max, and absent/null values stay null.
+/// Diagnostic only — bit-identity is promised outside `"engine"`.
+fn merge_engine(group: &[&Envelope]) -> Json {
+    let keys = [
+        "threads",
+        "wall_s",
+        "pairs",
+        "servers_pruned",
+        "candidates",
+        "simulated",
+        "mappings_pruned",
+        "mappings_infeasible",
+        "slo_validated",
+        "slo_aborted_early",
+    ];
+    let mut m = BTreeMap::new();
+    for key in keys {
+        let vals: Vec<f64> = group
+            .iter()
+            .filter_map(|env| {
+                env.outcome.get("engine").and_then(|en| en.get(key)).and_then(Json::as_f64)
+            })
+            .collect();
+        let v = if vals.is_empty() {
+            Json::Null
+        } else if key == "threads" {
+            Json::Num(vals.iter().cloned().fold(0.0, f64::max))
+        } else {
+            Json::Num(vals.iter().sum())
+        };
+        m.insert(key.to_string(), v);
+    }
+    Json::Obj(m)
+}
+
+/// Recursively drop every `"engine"` key, leaving only the
+/// engine-invariant content two outcomes can be compared on.
+pub fn strip_engine(v: &Json) -> Json {
+    match v {
+        Json::Obj(m) => Json::Obj(
+            m.iter()
+                .filter(|(k, _)| k.as_str() != "engine")
+                .map(|(k, x)| (k.clone(), strip_engine(x)))
+                .collect(),
+        ),
+        Json::Arr(xs) => Json::Arr(xs.iter().map(strip_engine).collect()),
+        other => other.clone(),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::experiment::{EngineKnobs, SpaceSpec};
+
+    fn spec(task: Task, models: &[&str]) -> Experiment {
+        let models: Vec<String> = models.iter().map(|s| s.to_string()).collect();
+        Experiment {
+            name: Experiment::default_name(task, &models),
+            task,
+            models,
+            space: SpaceSpec::Coarse,
+            workload: None,
+            serve: None,
+            load: 0.8,
+            engine: EngineKnobs::default(),
+            shard: None,
+        }
+    }
+
+    #[test]
+    fn chunks_are_contiguous_and_balanced() {
+        assert_eq!(chunks(8, 3), vec![(0, 3), (3, 6), (6, 8)]);
+        assert_eq!(chunks(33, 8).len(), 8);
+        assert_eq!(chunks(33, 8)[0], (0, 5));
+        assert_eq!(chunks(3, 8), vec![(0, 1), (1, 2), (2, 3)]);
+        assert_eq!(chunks(5, 1), vec![(0, 5)]);
+        // Cover exactly, no gaps.
+        for (len, parts) in [(33, 8), (8, 3), (7, 7), (10, 4)] {
+            let cs = chunks(len, parts);
+            assert_eq!(cs[0].0, 0);
+            assert_eq!(cs.last().unwrap().1, len);
+            for w in cs.windows(2) {
+                assert_eq!(w[0].1, w[1].0);
+            }
+        }
+    }
+
+    #[test]
+    fn plan_splits_models_then_grid() {
+        let mut engine = Engine::new();
+        // 8-model optimize over 3 workers: model chunks 3/3/2.
+        let e = spec(
+            Task::Optimize,
+            &["gpt2", "megatron", "gpt3", "gopher", "mt-nlg", "bloom", "palm", "llama2-70b"],
+        );
+        let shards = plan(&e, 3, &mut engine).unwrap();
+        assert_eq!(shards.len(), 3);
+        assert_eq!(shards[0].models.len(), 3);
+        assert_eq!(shards[2].models, vec!["palm".to_string(), "llama2-70b".to_string()]);
+        let fp = e.fingerprint();
+        for (i, s) in shards.iter().enumerate() {
+            s.validate().unwrap();
+            let sel = s.shard.as_ref().unwrap();
+            assert_eq!((sel.index, sel.of, sel.parent_models), (i, 3, 8));
+            assert_eq!(sel.parent, fp);
+            assert_eq!(s.name, e.name);
+        }
+        // Single-model sweep over 8 workers: contiguous grid slices
+        // covering the whole 33-point grid.
+        let e = spec(Task::Sweep, &["gpt3"]);
+        let shards = plan(&e, 8, &mut engine).unwrap();
+        assert_eq!(shards.len(), 8);
+        let mut cursor = 0;
+        for s in &shards {
+            let (lo, hi) = s.shard.as_ref().unwrap().grid.unwrap();
+            assert_eq!(lo, cursor);
+            cursor = hi;
+        }
+        let model = ModelSpec::by_name("gpt3").unwrap();
+        assert_eq!(cursor, Workload::study_grid(&model).len());
+        // workers=1 yields one trivial shard (uniform envelope path).
+        let one = plan(&e, 1, &mut engine).unwrap();
+        assert_eq!(one.len(), 1);
+        let sel = one[0].shard.as_ref().unwrap();
+        assert_eq!((sel.index, sel.of), (0, 1));
+        assert!(sel.grid.is_none() && sel.servers.is_none());
+        // A shard cannot be re-planned.
+        assert!(plan(&one[0], 2, &mut engine).is_err());
+    }
+
+    #[test]
+    fn envelope_round_trips_and_rejects_corruption() {
+        let mut engine = Engine::new();
+        let e = spec(Task::Sweep, &["gpt3"]);
+        let shards = plan(&e, 2, &mut engine).unwrap();
+        let env = Envelope::new(
+            shards[0].clone(),
+            obj(vec![("kind", Json::Str("sweep".into())), ("best", Json::Null)]),
+        );
+        let text = env.to_json().to_string();
+        let back = Envelope::from_json_str(&text).unwrap();
+        assert_eq!(back.spec, env.spec);
+        assert_eq!(back.outcome, env.outcome);
+        // Truncation is an error, not a panic.
+        assert!(Envelope::from_json_str(&text[..text.len() / 2]).is_err());
+        // A plain (unsharded) spec is rejected as a shard outcome.
+        let plain = Envelope::new(e.clone(), env.outcome.clone());
+        let err = Envelope::from_json_str(&plain.to_json().to_string()).unwrap_err();
+        assert!(err.contains("no shard marker"), "{err}");
+    }
+
+    #[test]
+    fn merge_rejects_mixed_plans_and_reports_missing() {
+        let mut engine = Engine::new();
+        let a = spec(Task::Optimize, &["gpt2", "megatron"]);
+        let shards = plan(&a, 2, &mut engine).unwrap();
+        let rows = |n: usize| {
+            Json::Arr((0..n).map(|i| Json::Num(i as f64)).collect())
+        };
+        let env = |s: &Experiment, n: usize| {
+            Envelope::new(
+                s.clone(),
+                obj(vec![("kind", Json::Str("optimize".into())), ("rows", rows(n))]),
+            )
+        };
+        // Complete merge concatenates rows, no manifest.
+        let m = merge(&[env(&shards[0], 1), env(&shards[1], 2)]).unwrap();
+        assert!(m.missing.is_empty());
+        assert_eq!(m.outcome.get("rows").unwrap().as_arr().unwrap().len(), 3);
+        assert!(m.outcome.get("missing_shards").is_none());
+        // Partial merge records the absent shard and keeps the rest.
+        let m = merge(&[env(&shards[1], 2)]).unwrap();
+        assert_eq!(m.missing, vec![0]);
+        assert_eq!(m.outcome.get("missing_shards").unwrap().as_arr().unwrap().len(), 1);
+        // A shard of a different parent spec is refused.
+        let b = spec(Task::Optimize, &["gpt2", "gpt3"]);
+        let foreign = plan(&b, 2, &mut engine).unwrap();
+        let err = merge(&[env(&shards[0], 1), env(&foreign[1], 1)]).unwrap_err();
+        assert!(err.contains("different parent"), "{err}");
+        // Duplicate indices are refused.
+        let err = merge(&[env(&shards[0], 1), env(&shards[0], 1)]).unwrap_err();
+        assert!(err.contains("duplicate"), "{err}");
+        assert!(merge(&[]).is_err());
+    }
+
+    #[test]
+    fn merge_sweep_reduces_by_score_then_indices() {
+        let mut engine = Engine::new();
+        let e = spec(Task::Sweep, &["gpt3"]);
+        let shards = plan(&e, 3, &mut engine).unwrap();
+        let sweep_env = |s: &Experiment, best: Json| {
+            Envelope::new(
+                s.clone(),
+                obj(vec![
+                    ("kind", Json::Str("sweep".into())),
+                    ("model", Json::Str("gpt3".into())),
+                    ("best", best),
+                    ("slo", Json::Null),
+                    ("engine", obj(vec![("wall_s", Json::Num(1.0)), ("threads", Json::Num(2.0))])),
+                ]),
+            )
+        };
+        let best = |score: f64, gi: usize, si: usize| {
+            obj(vec![
+                ("tco_per_token", Json::Num(score)),
+                ("grid_index", Json::Num(gi as f64)),
+                ("server_index", Json::Num(si as f64)),
+            ])
+        };
+        // Equal scores: the (grid_index, server_index) tie-break picks the
+        // lexicographically smallest, regardless of shard order.
+        let m = merge(&[
+            sweep_env(&shards[2], best(1.0, 30, 0)),
+            sweep_env(&shards[0], best(1.0, 2, 5)),
+            sweep_env(&shards[1], Json::Null),
+        ])
+        .unwrap();
+        let b = m.outcome.get("best").unwrap();
+        assert_eq!(b.get("grid_index").unwrap().as_usize(), Some(2));
+        // Engine counters summed, threads maxed.
+        let en = m.outcome.get("engine").unwrap();
+        assert_eq!(en.get("wall_s").unwrap().as_f64(), Some(3.0));
+        assert_eq!(en.get("threads").unwrap().as_f64(), Some(2.0));
+        // All-null bests merge to a null best.
+        let m = merge(&[
+            sweep_env(&shards[0], Json::Null),
+            sweep_env(&shards[1], Json::Null),
+            sweep_env(&shards[2], Json::Null),
+        ])
+        .unwrap();
+        assert!(matches!(m.outcome.get("best"), Some(Json::Null)));
+    }
+}

@@ -9,7 +9,16 @@
 //!   continuous batching on a seeded trace (`--smoke` for the CI preset)
 //! * `run <spec.json>...`     — execute declarative experiment specs
 //!   (several files = a campaign sharing one engine; `--json` for
-//!   machine-readable outcomes)
+//!   machine-readable outcomes); `--distributed --run-dir DIR [--workers N]`
+//!   shards one spec across child worker processes with timeouts, retries
+//!   and atomic checkpoints, `--resume DIR` re-runs only missing shards
+//! * `shard <spec.json> --workers N` — print (or `--out DIR` write) the
+//!   child shard specs the distributed planner would run
+//! * `merge <envelope.json>...` — recombine shard outcome envelopes into
+//!   the single-process outcome (bit-identical outside `"engine"`);
+//!   missing shards degrade to a partial merge + manifest + exit 1
+//! * `run-shard <shard.json> --out-file PATH` — distributed worker child
+//!   (honors the orchestrator's `CC_FAULT` injection in tests/CI)
 //! * `validate <spec.json>...` — strict-parse + validate experiment specs
 //! * `table2` / `fig7`..`fig15` — regenerate a paper table/figure
 //! * `serve`                  — load AOT artifacts and serve a demo stream
@@ -44,8 +53,13 @@ use chiplet_cloud::{Error, Result};
 fn usage() -> ! {
     eprintln!(
         "usage: ccloud <cmd> [--full] [--out DIR] [--json] [--model NAME] [--threads N] [--seq] ...\n\
-         cmds: explore optimize sweep serve-sim run validate table2 fig7..fig15 ablate serve ccmem\n\
+         cmds: explore optimize sweep serve-sim run shard merge run-shard validate table2\n\
+         fig7..fig15 ablate serve ccmem\n\
          run/validate: ccloud run experiments/spec.json [more.json ...] [--json]\n\
+         distributed: ccloud run spec.json --distributed --run-dir DIR [--workers N]\n\
+         [--timeout-s S] [--retries K] [--backoff-ms MS] [--fault-plan PLAN] | --resume DIR\n\
+         shard/merge: ccloud shard spec.json --workers N [--out DIR];\n\
+         ccloud merge run/shards/*.outcome.json [--out DIR]\n\
          serve-sim/sweep serving-model flags: [--slo-ttft S] [--slo-tpot S] [--prefill-chunk N]\n\
          [--paged] [--replicas N] [--route rr|jsq|jsq-tokens] [--rps R] [--trace poisson|bursty|closed]"
     );
@@ -58,7 +72,7 @@ fn main() -> Result<()> {
     // The `--key value` grammar lets a boolean flag placed before a
     // positional argument swallow it (`run --seq a.json b.json` would
     // silently drop a.json from the campaign) — reject that loudly.
-    args.reject_valued_flags(&["json", "seq", "full", "paged", "smoke"])
+    args.reject_valued_flags(&["json", "seq", "full", "paged", "smoke", "distributed"])
         .map_err(Error::Config)?;
     let out_dir: Option<PathBuf> = args.get("out").map(PathBuf::from);
     let out = out_dir.as_deref();
@@ -119,8 +133,32 @@ fn main() -> Result<()> {
                 cli::apply_engine_overrides(&mut e, &args)?;
                 specs.push(e);
             }
+            if args.has("distributed") || args.has("resume") {
+                if specs.len() != 1 {
+                    return Err(Error::Config(
+                        "--distributed runs exactly one spec (shard it instead of listing \
+                         several files)"
+                            .into(),
+                    ));
+                }
+                return run_distributed(&specs[0], &args);
+            }
             let mut engine = experiment::Engine::new();
-            let mut results = engine.run_campaign(&specs)?;
+            let mut results = engine.run_campaign(&specs);
+            // Per-spec failures degrade to Outcome::Error members; a
+            // lone failing spec keeps the classic hard error.
+            let failures: Vec<(String, String)> = results
+                .iter()
+                .filter_map(|(name, o)| match o {
+                    Outcome::Error(err) => Some((name.clone(), err.clone())),
+                    _ => None,
+                })
+                .collect();
+            if results.len() == 1 {
+                if let Some((name, err)) = failures.first() {
+                    return Err(Error::Config(format!("{name}: {err}")));
+                }
+            }
             let (id, outcome) = if results.len() == 1 {
                 let (name, outcome) = results.pop().expect("one result");
                 (name, outcome)
@@ -128,6 +166,110 @@ fn main() -> Result<()> {
                 ("campaign".to_string(), Outcome::Campaign(results))
             };
             emit(&outcome, &args, out, &id);
+            if !failures.is_empty() {
+                for (name, err) in &failures {
+                    eprintln!("experiment '{name}' failed: {err}");
+                }
+                std::process::exit(1);
+            }
+        }
+        "shard" => {
+            let path = args.positional.get(1).ok_or_else(|| {
+                Error::Config(
+                    "shard needs a spec file: ccloud shard experiments/spec.json --workers N"
+                        .into(),
+                )
+            })?;
+            let mut e = cli::load_spec(Path::new(path.as_str()))?;
+            cli::apply_engine_overrides(&mut e, &args)?;
+            if !args.has("workers") {
+                return Err(Error::Config("shard needs --workers N".into()));
+            }
+            let workers = cli::parse_usize(&args, "workers", 1, 1)?;
+            let shards = experiment::shard::plan(&e, workers, &mut experiment::Engine::new())?;
+            match out {
+                Some(dir) => {
+                    for (i, s) in shards.iter().enumerate() {
+                        let p = dir.join(format!(
+                            "{}-shard-{:03}of{:03}.json",
+                            s.name,
+                            i,
+                            shards.len()
+                        ));
+                        std::fs::create_dir_all(dir)
+                            .and_then(|()| std::fs::write(&p, format!("{}\n", s.to_json())))
+                            .map_err(|err| {
+                                Error::Config(format!("{}: {err}", p.display()))
+                            })?;
+                        println!("{}", p.display());
+                    }
+                }
+                None => {
+                    for s in &shards {
+                        println!("{}", s.to_json());
+                    }
+                }
+            }
+        }
+        "merge" => {
+            let paths: Vec<&String> = args.positional.iter().skip(1).collect();
+            if paths.is_empty() {
+                return Err(Error::Config(
+                    "merge needs shard outcome files: ccloud merge run/shards/*.outcome.json"
+                        .into(),
+                ));
+            }
+            // Unreadable or corrupt envelopes are per-file diagnostics, not
+            // a crash — merge what remains and exit nonzero.
+            let mut envs = Vec::new();
+            let mut file_errors = 0usize;
+            for p in &paths {
+                let path = Path::new(p.as_str());
+                let text = match std::fs::read_to_string(path) {
+                    Ok(t) => t,
+                    Err(e) => {
+                        eprintln!("{}: {e}", path.display());
+                        file_errors += 1;
+                        continue;
+                    }
+                };
+                match experiment::shard::Envelope::from_json_str(&text) {
+                    Ok(env) => envs.push(env),
+                    Err(e) => {
+                        eprintln!("{}: {e}", path.display());
+                        file_errors += 1;
+                    }
+                }
+            }
+            let merged = experiment::shard::merge(&envs).map_err(Error::Config)?;
+            println!("{}", merged.outcome);
+            if let Some(dir) = out {
+                let p = dir.join("merged.json");
+                std::fs::create_dir_all(dir)
+                    .and_then(|()| std::fs::write(&p, format!("{}\n", merged.outcome)))
+                    .map_err(|err| Error::Config(format!("{}: {err}", p.display())))?;
+            }
+            if !merged.missing.is_empty() {
+                eprintln!(
+                    "merged {} of {} shards; missing: {:?}",
+                    envs.len(),
+                    merged.of,
+                    merged.missing
+                );
+            }
+            if file_errors > 0 || !merged.missing.is_empty() {
+                std::process::exit(1);
+            }
+        }
+        "run-shard" => {
+            let path = args.positional.get(1).ok_or_else(|| {
+                Error::Config("run-shard needs a shard spec file".into())
+            })?;
+            let out_file = args
+                .get("out-file")
+                .ok_or_else(|| Error::Config("run-shard needs --out-file PATH".into()))?
+                .to_string();
+            run_shard(Path::new(path.as_str()), Path::new(&out_file), &args)?;
         }
         "validate" => {
             let paths: Vec<&String> = args.positional.iter().skip(1).collect();
@@ -149,7 +291,9 @@ fn main() -> Result<()> {
             let batches = [1usize, 4, 16, 64, 256, 1024];
             print!("{}", report::fig8(&report::Ctx::new(space), &ctxs, &batches, out).render())
         }
-        "fig9" => print!("{}", report::fig9(&report::Ctx::new(space), &[16, 64, 256], out).render()),
+        "fig9" => {
+            print!("{}", report::fig9(&report::Ctx::new(space), &[16, 64, 256], out).render())
+        }
         "fig10" => print!("{}", report::fig10(&report::Ctx::new(space), out).render()),
         "fig11" => print!("{}", report::fig11(&report::Ctx::new(space), out).render()),
         "fig12" => print!("{}", report::fig12(&report::Ctx::new(space), out).render()),
@@ -192,6 +336,92 @@ fn emit(outcome: &Outcome, args: &Args, out: Option<&Path>, id: &str) {
             report::persist(&t, out, &tid);
         }
     }
+}
+
+/// `ccloud run --distributed`: shard one spec across child worker
+/// processes, supervise them through timeouts/retries/checkpoints, merge,
+/// and report. `--resume DIR` re-runs only missing or corrupt shards.
+/// Exits 1 (after printing the partial outcome and the missing-shard
+/// manifest) when any shard exhausted its retries.
+fn run_distributed(spec: &experiment::Experiment, args: &Args) -> Result<()> {
+    use chiplet_cloud::experiment::orchestrator::{self, FaultPlan, OrchestratorConfig};
+    let resume = args.get("resume").map(PathBuf::from);
+    let run_dir = match (&resume, args.get("run-dir")) {
+        (Some(dir), None) => dir.clone(),
+        (None, Some(dir)) => PathBuf::from(dir),
+        (None, None) => {
+            return Err(Error::Config(
+                "--distributed needs --run-dir DIR (or --resume DIR to continue one)".into(),
+            ))
+        }
+        (Some(_), Some(_)) => {
+            return Err(Error::Config(
+                "--resume DIR already names the run directory; drop --run-dir".into(),
+            ))
+        }
+    };
+    let fault_plan = match args.get("fault-plan") {
+        Some(s) => FaultPlan::parse(s).map_err(Error::Config)?,
+        None => FaultPlan::from_env().map_err(Error::Config)?,
+    };
+    let cfg = OrchestratorConfig {
+        workers: cli::parse_usize(args, "workers", 2, 1)?,
+        timeout: Duration::from_secs_f64(
+            cli::parse_positive_f64(args, "timeout-s")?.unwrap_or(600.0),
+        ),
+        retries: cli::parse_usize(args, "retries", 2, 0)?,
+        backoff: Duration::from_millis(cli::parse_usize(args, "backoff-ms", 250, 0)? as u64),
+        fault_plan,
+        ..OrchestratorConfig::default()
+    };
+    let run = orchestrator::run_distributed(spec, &run_dir, resume.is_some(), &cfg)?;
+    if args.has("json") {
+        println!("{}", run.merged.outcome);
+    } else {
+        print!("{}", report::campaign_status(&run.statuses).render());
+    }
+    eprintln!("merged outcome: {}", run.run_dir.join("outcome.json").display());
+    if !run.merged.missing.is_empty() {
+        eprintln!("missing shards after retries: {:?}", run.merged.missing);
+        std::process::exit(1);
+    }
+    Ok(())
+}
+
+/// `ccloud run-shard` — distributed worker child. Runs one shard spec and
+/// atomically checkpoints its `{spec, outcome}` envelope to `--out-file`.
+/// Honors `CC_FAULT` (set per attempt by the orchestrator's fault plan) to
+/// deterministically sabotage itself, exercising the parent's recovery
+/// paths in tests/CI.
+fn run_shard(spec_path: &Path, out_file: &Path, args: &Args) -> Result<()> {
+    use chiplet_cloud::util::proc::atomic_write;
+    let fault = std::env::var("CC_FAULT").ok();
+    match fault.as_deref() {
+        Some("kill") => {
+            eprintln!("CC_FAULT=kill: exiting before writing a checkpoint");
+            std::process::exit(57);
+        }
+        Some(v) if v.starts_with("delay:") => {
+            let ms: u64 = v["delay:".len()..]
+                .parse()
+                .map_err(|_| Error::Config(format!("CC_FAULT: bad delay '{v}'")))?;
+            std::thread::sleep(Duration::from_millis(ms));
+        }
+        _ => {}
+    }
+    let mut e = cli::load_spec(spec_path)?;
+    cli::apply_engine_overrides(&mut e, args)?;
+    let outcome = experiment::Engine::new().run(&e)?;
+    let text = format!("{}\n", experiment::shard::Envelope::new(e, outcome.to_json()).to_json());
+    let bytes = if fault.as_deref() == Some("corrupt") {
+        // Truncated checkpoint despite a clean exit: the parent must
+        // validate content, not trust exit status.
+        &text.as_bytes()[..text.len() / 2]
+    } else {
+        text.as_bytes()
+    };
+    atomic_write(out_file, bytes)
+        .map_err(|err| Error::Config(format!("{}: {err}", out_file.display())))
 }
 
 /// Demo serving loop on the AOT artifacts (see examples/serve_llm.rs for

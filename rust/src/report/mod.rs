@@ -122,6 +122,35 @@ pub fn to_json(outcome: &crate::experiment::Outcome) -> String {
     outcome.to_json().to_string()
 }
 
+/// **Campaign status** — the distributed-run supervision log as a table
+/// (`ccloud run --distributed`): one row per shard with attempt/timeout
+/// counts, whether it was adopted from a checkpoint, and the last error
+/// of shards that exhausted their retries.
+pub fn campaign_status(statuses: &[crate::experiment::orchestrator::ShardStatus]) -> Table {
+    let mut t = Table::new(vec![
+        "Shard",
+        "State",
+        "Attempts",
+        "Timeouts",
+        "Checkpoint",
+        "Wall (s)",
+        "Error",
+    ])
+    .with_title("Distributed campaign status");
+    for s in statuses {
+        t.row(vec![
+            s.index.to_string(),
+            if s.ok { "ok".to_string() } else { "FAILED".to_string() },
+            s.attempts.to_string(),
+            s.timeouts.to_string(),
+            if s.from_checkpoint { "resumed".to_string() } else { "-".to_string() },
+            fmt(s.wall_s, 2),
+            s.error.clone().unwrap_or_else(|| "-".to_string()),
+        ]);
+    }
+    t
+}
+
 /// **Fig. 7** — TCO vs die size at a min-throughput constraint (left) and
 /// throughput vs die size at a TCO budget (right), GPT-3.
 pub fn fig7(ctx: &Ctx, out_dir: Option<&Path>) -> Table {
@@ -447,7 +476,8 @@ pub fn fig14(ctx: &Ctx, out_dir: Option<&Path>) -> Table {
         for (mi, p) in r.per_model.iter().enumerate() {
             row.push(format!("{:.2}x", p.tco_per_token / opt_cost[mi]));
         }
-        row.push(r.per_model.iter().map(|p| p.mapping.n_chips().to_string()).collect::<Vec<_>>().join("/"));
+        let chips: Vec<_> = r.per_model.iter().map(|p| p.mapping.n_chips().to_string()).collect();
+        row.push(chips.join("/"));
         t.row(row);
     }
     persist(&t, out_dir, "fig14");

@@ -9,10 +9,23 @@ pub mod cli;
 pub mod csv;
 pub mod json;
 pub mod parallel;
+pub mod proc;
 pub mod prop;
 pub mod rng;
 pub mod stats;
 pub mod table;
+
+/// FNV-1a 64-bit hash. Stable across platforms and runs (unlike
+/// `DefaultHasher`), so it is safe to persist — the experiment layer uses
+/// it to fingerprint specs for shard/checkpoint identity.
+pub fn fnv1a64(bytes: &[u8]) -> u64 {
+    let mut h: u64 = 0xcbf2_9ce4_8422_2325;
+    for &b in bytes {
+        h ^= b as u64;
+        h = h.wrapping_mul(0x0000_0100_0000_01b3);
+    }
+    h
+}
 
 /// Format a dollar amount with engineering suffixes for table output.
 pub fn fmt_dollars(x: f64) -> String {
@@ -81,5 +94,14 @@ mod tests {
         assert_eq!(fmt_secs(5e-6), "5.00µs");
         assert_eq!(fmt_secs(0.25), "250.00ms");
         assert_eq!(fmt_secs(2.0), "2.00s");
+    }
+
+    #[test]
+    fn fnv1a64_reference_vectors() {
+        // Published FNV-1a test vectors — pins the hash across refactors
+        // (persisted fingerprints must never silently change meaning).
+        assert_eq!(fnv1a64(b""), 0xcbf2_9ce4_8422_2325);
+        assert_eq!(fnv1a64(b"a"), 0xaf63_dc4c_8601_ec8c);
+        assert_eq!(fnv1a64(b"foobar"), 0x85944171f73967e8);
     }
 }

@@ -1,0 +1,74 @@
+//! Process-supervision helpers for the distributed campaign orchestrator:
+//! atomic file replacement (checkpoint writes that are either complete or
+//! absent, never truncated) and deterministic retry backoff.
+
+use std::io;
+use std::path::Path;
+use std::time::Duration;
+
+/// Atomically replace `path` with `bytes`: write a temp file in the same
+/// directory, then `rename` over the target (atomic on POSIX). A reader —
+/// or a resumed orchestrator scanning checkpoints — can never observe a
+/// half-written file; a crash mid-write leaves only the temp file behind.
+pub fn atomic_write(path: &Path, bytes: &[u8]) -> io::Result<()> {
+    let dir = match path.parent() {
+        Some(p) if !p.as_os_str().is_empty() => p,
+        _ => Path::new("."),
+    };
+    std::fs::create_dir_all(dir)?;
+    let stem = path.file_name().and_then(|n| n.to_str()).unwrap_or("out");
+    let tmp = dir.join(format!(".{stem}.tmp.{}", std::process::id()));
+    std::fs::write(&tmp, bytes)?;
+    std::fs::rename(&tmp, path)
+}
+
+/// Deterministic exponential backoff: `base << attempt`, saturating, capped
+/// at `cap`. Attempt 0 (the first retry) waits `base`; there is no jitter —
+/// reproducibility of the whole failure/retry schedule matters more here
+/// than thundering-herd avoidance between a handful of local children.
+pub fn backoff_delay(base: Duration, attempt: u32, cap: Duration) -> Duration {
+    let mult = 1u32.checked_shl(attempt.min(31)).unwrap_or(u32::MAX);
+    base.checked_mul(mult).map(|d| d.min(cap)).unwrap_or(cap)
+}
+
+/// Kill a child process and reap it (best-effort; a child that already
+/// exited is fine). `wait` after `kill` is required to avoid zombies.
+pub fn kill_and_reap(child: &mut std::process::Child) {
+    let _ = child.kill();
+    let _ = child.wait();
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn backoff_doubles_and_caps() {
+        let base = Duration::from_millis(250);
+        let cap = Duration::from_secs(30);
+        assert_eq!(backoff_delay(base, 0, cap), Duration::from_millis(250));
+        assert_eq!(backoff_delay(base, 1, cap), Duration::from_millis(500));
+        assert_eq!(backoff_delay(base, 2, cap), Duration::from_millis(1000));
+        assert_eq!(backoff_delay(base, 10, cap), cap);
+        // Saturates instead of overflowing at absurd attempt counts.
+        assert_eq!(backoff_delay(base, 63, cap), cap);
+    }
+
+    #[test]
+    fn atomic_write_replaces_and_leaves_no_temp() {
+        let dir = std::env::temp_dir().join(format!("cc-proc-test-{}", std::process::id()));
+        let _ = std::fs::remove_dir_all(&dir);
+        let path = dir.join("out.json");
+        atomic_write(&path, b"first").unwrap();
+        assert_eq!(std::fs::read(&path).unwrap(), b"first");
+        atomic_write(&path, b"second").unwrap();
+        assert_eq!(std::fs::read(&path).unwrap(), b"second");
+        let leftovers: Vec<_> = std::fs::read_dir(&dir)
+            .unwrap()
+            .map(|e| e.unwrap().file_name().into_string().unwrap())
+            .filter(|n| n.contains(".tmp."))
+            .collect();
+        assert!(leftovers.is_empty(), "temp files left behind: {leftovers:?}");
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+}

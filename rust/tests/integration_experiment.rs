@@ -99,6 +99,7 @@ fn json_round_trip_property() {
             serve: r.chance(0.7).then_some(serve),
             load: 0.1 + r.f64(),
             engine: EngineKnobs { threads: r.below(8), seq: r.chance(0.5) },
+            shard: None,
         };
         let text = e.to_json_string();
         let back = Experiment::from_json_str(&text)
@@ -122,6 +123,7 @@ fn cli_sweep_goldens() {
         serve: None,
         load: 0.8,
         engine: EngineKnobs::default(),
+        shard: None,
     };
     assert_eq!(translate(&["sweep"]).unwrap(), base);
 
@@ -242,6 +244,7 @@ fn cli_serve_sim_goldens() {
         )),
         load: 0.8,
         engine: EngineKnobs::default(),
+        shard: None,
     };
     assert_eq!(translate(&["serve-sim", "--smoke"]).unwrap(), smoke);
 
@@ -269,6 +272,7 @@ fn cli_serve_sim_goldens() {
         ),
         load: 0.5,
         engine: EngineKnobs::default(),
+        shard: None,
     };
     assert_eq!(
         translate(&[
@@ -337,6 +341,7 @@ fn run_sweep_matches_direct_engine_and_json_is_engine_invariant() {
         serve: None,
         load: 0.8,
         engine: EngineKnobs::default(),
+        shard: None,
     };
     let outcome = experiment::run(&e).unwrap();
     let Outcome::Sweep(sw) = &outcome else { panic!("sweep spec → Sweep outcome") };
@@ -388,6 +393,7 @@ fn run_serve_sim_matches_direct_simulation() {
         serve: Some(spec),
         load: 0.8,
         engine: EngineKnobs::default(),
+        shard: None,
     };
     let outcome = experiment::run(&e).unwrap();
     let Outcome::Serve(so) = &outcome else { panic!("serve-sim spec → Serve outcome") };
@@ -474,10 +480,11 @@ fn campaign_shares_phase1_context_and_preserves_order() {
         )),
         load: 0.8,
         engine: EngineKnobs::default(),
+        shard: None,
     };
     let specs = [serve("first", 1), serve("second", 2)];
     let mut engine = Engine::new();
-    let results = engine.run_campaign(&specs).unwrap();
+    let results = engine.run_campaign(&specs);
     assert_eq!(engine.contexts(), 1, "same space ⇒ one shared Phase-1 sweep");
     assert_eq!(results.len(), 2);
     assert_eq!(results[0].0, "first");
@@ -511,6 +518,7 @@ fn multi_model_spec_dispatches_a_campaign() {
         )),
         load: 0.8,
         engine: EngineKnobs::default(),
+        shard: None,
     };
     let outcome = experiment::run(&e).unwrap();
     let Outcome::Campaign(members) = outcome else { panic!("multi-model → campaign") };
@@ -531,6 +539,7 @@ fn run_rejects_invalid_specs() {
         serve: None,
         load: 0.8,
         engine: EngineKnobs::default(),
+        shard: None,
     };
     assert!(experiment::run(&e).is_err(), "serve-sim without workload must be rejected");
     e.models = vec![];

@@ -1,0 +1,507 @@
+//! Distributed campaigns: the shard/merge bit-identity contract, the
+//! supervising orchestrator's robustness paths (timeouts, retries,
+//! checkpoints, resume, fault injection), and the file-handling hardening
+//! around spec/checkpoint IO.
+//!
+//! The in-process property tests pin `merge(shard(spec, N))` byte-identical
+//! (outside `"engine"`) to `Engine::run(spec)`; the process tests drive the
+//! actual `ccloud` binary (`env!("CARGO_BIN_EXE_ccloud")`) through the
+//! distributed orchestrator under seeded `CC_FAULT_PLAN` faults.
+
+use std::path::{Path, PathBuf};
+use std::process::Command;
+
+use chiplet_cloud::config::experiment::{EngineKnobs, Experiment, SpaceSpec, Task, WorkloadPoint};
+use chiplet_cloud::config::{ArrivalProcess, ServeSpec, SloSpec, TrafficSpec};
+use chiplet_cloud::experiment::shard::{merge, plan, strip_engine, Envelope};
+use chiplet_cloud::experiment::{Engine, Outcome};
+use chiplet_cloud::util::json::Json;
+use chiplet_cloud::util::prop;
+
+fn spec(task: Task, models: &[&str]) -> Experiment {
+    let models: Vec<String> = models.iter().map(|s| s.to_string()).collect();
+    Experiment {
+        name: Experiment::default_name(task, &models),
+        task,
+        models,
+        space: SpaceSpec::Coarse,
+        workload: None,
+        serve: None,
+        load: 0.8,
+        engine: EngineKnobs::default(),
+        shard: None,
+    }
+}
+
+fn serve_spec(seed: u64, slo: bool) -> ServeSpec {
+    ServeSpec::new(
+        TrafficSpec {
+            arrival: ArrivalProcess::ClosedLoop { clients: 8, think_s: 0.0 },
+            requests: 40,
+            prompt_tokens: 16,
+            new_tokens_lo: 4,
+            new_tokens_hi: 16,
+            seed,
+        },
+        if slo {
+            SloSpec::new(2.0, 0.5)
+        } else {
+            SloSpec::unconstrained()
+        },
+    )
+}
+
+/// Run every shard in-process through `engine` and merge the envelopes.
+fn run_sharded(e: &Experiment, workers: usize, engine: &mut Engine) -> Json {
+    let shards = plan(e, workers, engine).expect("plan");
+    let envs: Vec<Envelope> = shards
+        .iter()
+        .map(|s| {
+            let outcome = engine.run(s).expect("shard runs");
+            Envelope::new(s.clone(), outcome.to_json())
+        })
+        .collect();
+    let merged = merge(&envs).expect("merge");
+    assert!(merged.missing.is_empty(), "complete runs have no missing shards");
+    merged.outcome
+}
+
+// ---------------------------------------------------------------------------
+// Bit-identity: merge ∘ shard = run, modulo the "engine" counters.
+
+/// Seeded property: for randomized specs (task, models, SLO, traffic seed)
+/// and every worker count in {1, 2, 3, 8}, the merged shard outcome is
+/// *byte-identical* (string equality of the canonical JSON) to the
+/// single-process outcome outside `"engine"`.
+#[test]
+fn merged_shards_are_byte_identical_to_single_process() {
+    let mut engine = Engine::new();
+    prop::check("merge(shard(e, N)) == run(e)", 5, |r| {
+        let mut e = match r.below(4) {
+            0 => spec(Task::Sweep, &["gpt2"]),
+            1 => spec(Task::Sweep, &["gpt2", "megatron"]),
+            2 => spec(Task::Optimize, &["gpt2", "megatron", "gpt3"]),
+            _ => {
+                let mut e = spec(Task::ServeSim, &["gpt2", "megatron"]);
+                e.workload = Some(WorkloadPoint { ctx: 1024, batch: 32 });
+                e.serve = Some(serve_spec(r.below(1_000_000) as u64, false));
+                e
+            }
+        };
+        if e.task == Task::Sweep && r.chance(0.5) {
+            e.serve = Some(serve_spec(r.below(1_000_000) as u64, true));
+        }
+        // A fresh engine per case would re-sweep Phase 1; sharing is
+        // answer-preserving (pinned by integration_experiment.rs).
+        let mut engine = Engine::new();
+        let single = engine.run(&e).expect("single-process run");
+        let golden = strip_engine(&single.to_json()).to_string();
+        for workers in [1usize, 2, 3, 8] {
+            let merged = run_sharded(&e, workers, &mut engine);
+            assert_eq!(
+                strip_engine(&merged).to_string(),
+                golden,
+                "{} sharded {workers}-way diverged from the single-process outcome",
+                e.name
+            );
+        }
+    });
+    // Deterministic anchor outside the property loop: the SLO-constrained
+    // sweep (stage 2 runs the event simulator) merges bit-identically too.
+    let mut e = spec(Task::Sweep, &["gpt2"]);
+    e.serve = Some(serve_spec(7, true));
+    let single = engine.run(&e).expect("runs");
+    let golden = strip_engine(&single.to_json()).to_string();
+    for workers in [2usize, 8] {
+        let merged = run_sharded(&e, workers, &mut engine);
+        assert_eq!(strip_engine(&merged).to_string(), golden);
+    }
+}
+
+/// A partial merge (one shard withheld) degrades gracefully: the document
+/// carries the surviving members plus an explicit `missing_shards`
+/// manifest, and never panics.
+#[test]
+fn partial_merge_reports_missing_shards() {
+    let mut engine = Engine::new();
+    let e = spec(Task::Optimize, &["gpt2", "megatron", "gpt3"]);
+    let shards = plan(&e, 3, &mut engine).expect("plan");
+    let envs: Vec<Envelope> = shards
+        .iter()
+        .filter(|s| s.shard.as_ref().unwrap().index != 1)
+        .map(|s| Envelope::new(s.clone(), engine.run(s).expect("runs").to_json()))
+        .collect();
+    let merged = merge(&envs).expect("partial merge still merges");
+    assert_eq!(merged.missing, vec![1]);
+    let manifest = merged.outcome.get("missing_shards").expect("manifest present");
+    assert_eq!(manifest.as_arr().unwrap().len(), 1);
+    // The surviving models' rows are intact.
+    let rows = merged.outcome.get("rows").unwrap().as_arr().unwrap();
+    assert!(!rows.is_empty());
+}
+
+// ---------------------------------------------------------------------------
+// Campaign graceful degradation (satellite 1).
+
+/// One bad spec inside a campaign must not abort the rest: its slot
+/// carries `Outcome::Error` (rendered as a failure table and as
+/// `{"kind":"error"}` JSON) while every other spec still runs.
+#[test]
+fn campaign_degrades_per_spec_instead_of_aborting() {
+    let good = spec(Task::Sweep, &["gpt2"]);
+    let mut bad = spec(Task::Sweep, &["gpt2"]);
+    bad.name = "bad".into();
+    bad.models = vec!["no-such-model".into()];
+    let mut engine = Engine::new();
+    let results = engine.run_campaign(&[bad.clone(), good.clone()]);
+    assert_eq!(results.len(), 2);
+    let Outcome::Error(err) = &results[0].1 else { panic!("bad spec → Error outcome") };
+    assert!(err.contains("no-such-model"), "{err}");
+    assert!(matches!(results[1].1, Outcome::Sweep(_)), "good spec still ran");
+    // Rendering: the failure row appears in the campaign tables…
+    let campaign = Outcome::Campaign(results);
+    let tables = campaign.named_tables("campaign");
+    let rendered: String = tables.iter().map(|(_, t)| t.render()).collect();
+    assert!(rendered.contains("Failed experiment"));
+    assert!(rendered.contains("no-such-model"));
+    // …and as a structured member in the JSON.
+    let json = campaign.to_json().to_string();
+    assert!(json.contains("\"kind\":\"error\""), "{json}");
+}
+
+/// Shard slice bounds are validated against run-time facts: a grid slice
+/// past the study grid is a located config error, not a panic.
+#[test]
+fn out_of_range_shard_slices_error_cleanly() {
+    let mut engine = Engine::new();
+    let mut e = spec(Task::Sweep, &["gpt2"]);
+    let shards = plan(&e, 2, &mut engine).expect("plan");
+    let mut sel = shards[0].shard.clone().unwrap();
+    sel.grid = Some((0, 10_000));
+    e.shard = Some(sel);
+    let err = engine.run(&e).unwrap_err().to_string();
+    assert!(err.contains("study grid"), "{err}");
+}
+
+// ---------------------------------------------------------------------------
+// Process-level: the real binary under the supervising orchestrator.
+
+fn ccloud() -> Command {
+    Command::new(env!("CARGO_BIN_EXE_ccloud"))
+}
+
+fn temp_dir(tag: &str) -> PathBuf {
+    let dir = std::env::temp_dir().join(format!("cc-shard-{tag}-{}", std::process::id()));
+    let _ = std::fs::remove_dir_all(&dir);
+    std::fs::create_dir_all(&dir).unwrap();
+    dir
+}
+
+fn write_spec(dir: &Path, e: &Experiment) -> PathBuf {
+    let p = dir.join("spec.json");
+    std::fs::write(&p, format!("{}\n", e.to_json())).unwrap();
+    p
+}
+
+/// `ccloud run <spec> --json` single-process golden, engine-stripped.
+fn golden_json(spec_path: &Path) -> String {
+    let out = ccloud().args(["run"]).arg(spec_path).arg("--json").output().unwrap();
+    assert!(out.status.success(), "{}", String::from_utf8_lossy(&out.stderr));
+    let v = Json::parse(std::str::from_utf8(&out.stdout).unwrap().trim()).unwrap();
+    strip_engine(&v).to_string()
+}
+
+fn read_outcome(run_dir: &Path) -> Json {
+    let text = std::fs::read_to_string(run_dir.join("outcome.json")).unwrap();
+    Json::parse(text.trim()).unwrap()
+}
+
+fn read_status(run_dir: &Path) -> Json {
+    let text = std::fs::read_to_string(run_dir.join("status.json")).unwrap();
+    Json::parse(text.trim()).unwrap()
+}
+
+fn shard_row(status: &Json, index: usize) -> Json {
+    status.get("status").unwrap().as_arr().unwrap()[index].clone()
+}
+
+/// Kill, corrupt *and* delay faults on first attempts across different
+/// shards: every one is retried, the run succeeds, and the merged outcome
+/// is byte-identical to the single-process run. The fault plan arrives via
+/// the `CC_FAULT_PLAN` environment variable, as CI injects it.
+#[test]
+fn distributed_run_retries_injected_faults_and_matches_golden() {
+    let dir = temp_dir("faults");
+    let spec_path = write_spec(&dir, &spec(Task::Sweep, &["gpt2"]));
+    let golden = golden_json(&spec_path);
+    let run_dir = dir.join("run");
+    let out = ccloud()
+        .args(["run"])
+        .arg(&spec_path)
+        .args(["--distributed", "--run-dir"])
+        .arg(&run_dir)
+        .args(["--workers", "3", "--retries", "2", "--backoff-ms", "1", "--timeout-s", "60"])
+        .env("CC_FAULT_PLAN", "kill:1@0,corrupt:2@0")
+        .output()
+        .unwrap();
+    assert!(out.status.success(), "{}", String::from_utf8_lossy(&out.stderr));
+    assert_eq!(strip_engine(&read_outcome(&run_dir)).to_string(), golden);
+    let status = read_status(&run_dir);
+    assert_eq!(status.get("ok").and_then(Json::as_bool), Some(true));
+    assert_eq!(shard_row(&status, 0).get("attempts").and_then(Json::as_usize), Some(1));
+    assert_eq!(shard_row(&status, 1).get("attempts").and_then(Json::as_usize), Some(2));
+    assert_eq!(shard_row(&status, 2).get("attempts").and_then(Json::as_usize), Some(2));
+    // The status table renders (retries visible to the operator).
+    let table = ccloud()
+        .args(["run"])
+        .arg(&spec_path)
+        .args(["--resume"])
+        .arg(&run_dir)
+        .output()
+        .unwrap();
+    assert!(table.status.success());
+    let text = String::from_utf8_lossy(&table.stdout).to_string();
+    assert!(text.contains("Distributed campaign status"), "{text}");
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+/// A shard whose every attempt is killed exhausts its retries: the run
+/// exits nonzero but still writes the partial merged outcome with the
+/// explicit missing-shard manifest, and the other shards' work survives.
+#[test]
+fn exhausted_retries_degrade_to_partial_outcome() {
+    let dir = temp_dir("exhaust");
+    let spec_path = write_spec(&dir, &spec(Task::Sweep, &["gpt2"]));
+    let run_dir = dir.join("run");
+    let out = ccloud()
+        .args(["run"])
+        .arg(spec_path)
+        .args(["--distributed", "--run-dir"])
+        .arg(&run_dir)
+        .args(["--workers", "2", "--retries", "1", "--backoff-ms", "1"])
+        .args(["--fault-plan", "kill:0@0,kill:0@1"])
+        .output()
+        .unwrap();
+    assert!(!out.status.success(), "exhausted retries must exit nonzero");
+    let outcome = read_outcome(&run_dir);
+    let missing = outcome.get("missing_shards").expect("manifest in partial outcome");
+    assert_eq!(missing.as_arr().unwrap()[0].as_usize(), Some(0));
+    let status = read_status(&run_dir);
+    assert_eq!(status.get("ok").and_then(Json::as_bool), Some(false));
+    let row = shard_row(&status, 0);
+    assert_eq!(row.get("attempts").and_then(Json::as_usize), Some(2));
+    assert!(row.get("error").and_then(Json::as_str).unwrap().contains("exhausted"));
+    assert_eq!(shard_row(&status, 1).get("ok").and_then(Json::as_bool), Some(true));
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+/// `--resume` re-runs only the missing shard: the surviving checkpoint is
+/// adopted (0 attempts, marked resumed) and the final outcome matches the
+/// single-process golden.
+#[test]
+fn resume_reruns_only_the_missing_shard() {
+    let dir = temp_dir("resume");
+    let spec_path = write_spec(&dir, &spec(Task::Sweep, &["gpt2"]));
+    let golden = golden_json(&spec_path);
+    let run_dir = dir.join("run");
+    let ok = ccloud()
+        .args(["run"])
+        .arg(&spec_path)
+        .args(["--distributed", "--run-dir"])
+        .arg(&run_dir)
+        .args(["--workers", "2"])
+        .output()
+        .unwrap();
+    assert!(ok.status.success(), "{}", String::from_utf8_lossy(&ok.stderr));
+    // Fresh-run protection: the same directory without --resume is refused.
+    let again = ccloud()
+        .args(["run"])
+        .arg(&spec_path)
+        .args(["--distributed", "--run-dir"])
+        .arg(&run_dir)
+        .output()
+        .unwrap();
+    assert!(!again.status.success());
+    assert!(String::from_utf8_lossy(&again.stderr).contains("--resume"));
+    // Delete one checkpoint, corrupt nothing else; resume.
+    std::fs::remove_file(run_dir.join("shards/shard-001.outcome.json")).unwrap();
+    let resumed = ccloud()
+        .args(["run"])
+        .arg(&spec_path)
+        .args(["--resume"])
+        .arg(&run_dir)
+        .output()
+        .unwrap();
+    assert!(resumed.status.success(), "{}", String::from_utf8_lossy(&resumed.stderr));
+    let status = read_status(&run_dir);
+    let row0 = shard_row(&status, 0);
+    assert_eq!(row0.get("from_checkpoint").and_then(Json::as_bool), Some(true));
+    assert_eq!(row0.get("attempts").and_then(Json::as_usize), Some(0));
+    let row1 = shard_row(&status, 1);
+    assert_eq!(row1.get("from_checkpoint").and_then(Json::as_bool), Some(false));
+    assert_eq!(row1.get("attempts").and_then(Json::as_usize), Some(1));
+    assert_eq!(strip_engine(&read_outcome(&run_dir)).to_string(), golden);
+    // A corrupt checkpoint is re-run too (reported per-file, not a panic).
+    let ckpt = run_dir.join("shards/shard-000.outcome.json");
+    std::fs::write(ckpt, "{\"spec\": {tru").unwrap();
+    let resumed = ccloud()
+        .args(["run"])
+        .arg(&spec_path)
+        .args(["--resume"])
+        .arg(&run_dir)
+        .output()
+        .unwrap();
+    assert!(resumed.status.success(), "{}", String::from_utf8_lossy(&resumed.stderr));
+    assert!(String::from_utf8_lossy(&resumed.stderr).contains("corrupt checkpoint"));
+    assert_eq!(strip_engine(&read_outcome(&run_dir)).to_string(), golden);
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+/// A delayed child trips the per-shard timeout, is killed and reaped, and
+/// the retry (no fault on attempt 1) succeeds.
+#[test]
+fn timeout_kills_and_retries() {
+    let dir = temp_dir("timeout");
+    let spec_path = write_spec(&dir, &spec(Task::Sweep, &["gpt2"]));
+    let run_dir = dir.join("run");
+    let out = ccloud()
+        .args(["run"])
+        .arg(spec_path)
+        .args(["--distributed", "--run-dir"])
+        .arg(&run_dir)
+        .args(["--workers", "2", "--retries", "1", "--backoff-ms", "1"])
+        .args(["--timeout-s", "1", "--fault-plan", "delay:0@0:20000"])
+        .output()
+        .unwrap();
+    assert!(out.status.success(), "{}", String::from_utf8_lossy(&out.stderr));
+    let row = shard_row(&read_status(&run_dir), 0);
+    assert_eq!(row.get("timeouts").and_then(Json::as_usize), Some(1));
+    assert_eq!(row.get("attempts").and_then(Json::as_usize), Some(2));
+    assert_eq!(row.get("ok").and_then(Json::as_bool), Some(true));
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+/// The `shard` and `merge` subcommands round-trip through files: shard to
+/// a directory, run each shard spec via `run --json`, merge the hand-built
+/// envelopes, and match the single-process golden.
+#[test]
+fn shard_and_merge_subcommands_round_trip() {
+    let dir = temp_dir("cli");
+    let spec_path = write_spec(&dir, &spec(Task::Optimize, &["gpt2", "megatron"]));
+    let golden = golden_json(&spec_path);
+    let shards_dir = dir.join("shards");
+    let out = ccloud()
+        .args(["shard"])
+        .arg(&spec_path)
+        .args(["--workers", "2", "--out"])
+        .arg(shards_dir)
+        .output()
+        .unwrap();
+    assert!(out.status.success(), "{}", String::from_utf8_lossy(&out.stderr));
+    let mut envelope_paths = Vec::new();
+    for line in String::from_utf8_lossy(&out.stdout).lines() {
+        let shard_path = PathBuf::from(line.trim());
+        let run = ccloud().args(["run"]).arg(&shard_path).arg("--json").output().unwrap();
+        assert!(run.status.success(), "{}", String::from_utf8_lossy(&run.stderr));
+        let spec_json = Json::parse(&std::fs::read_to_string(&shard_path).unwrap()).unwrap();
+        let outcome = Json::parse(std::str::from_utf8(&run.stdout).unwrap().trim()).unwrap();
+        let env_path = shard_path.with_extension("outcome.json");
+        let mut m = std::collections::BTreeMap::new();
+        m.insert("spec".to_string(), spec_json);
+        m.insert("outcome".to_string(), outcome);
+        std::fs::write(&env_path, format!("{}\n", Json::Obj(m))).unwrap();
+        envelope_paths.push(env_path);
+    }
+    assert_eq!(envelope_paths.len(), 2);
+    let merged = ccloud().args(["merge"]).args(&envelope_paths).output().unwrap();
+    assert!(merged.status.success(), "{}", String::from_utf8_lossy(&merged.stderr));
+    let v = Json::parse(std::str::from_utf8(&merged.stdout).unwrap().trim()).unwrap();
+    assert_eq!(strip_engine(&v).to_string(), golden);
+    // Dropping one envelope: partial merge, manifest on stdout, exit 1.
+    let partial = ccloud().args(["merge"]).arg(&envelope_paths[0]).output().unwrap();
+    assert!(!partial.status.success());
+    let v = Json::parse(std::str::from_utf8(&partial.stdout).unwrap().trim()).unwrap();
+    assert!(v.get("missing_shards").is_some());
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+// ---------------------------------------------------------------------------
+// File-handling hardening (satellite 2).
+
+/// Missing and corrupt input files are located errors with a nonzero
+/// exit — for `run`, for `run-shard`, and per-file for `merge`.
+#[test]
+fn file_errors_are_located_and_nonzero() {
+    let dir = temp_dir("files");
+    // Missing spec file.
+    let missing = dir.join("nope.json");
+    let out = ccloud().args(["run"]).arg(missing).output().unwrap();
+    assert!(!out.status.success());
+    assert!(String::from_utf8_lossy(&out.stderr).contains("nope.json"));
+    // Truncated spec file.
+    let truncated = dir.join("truncated.json");
+    std::fs::write(&truncated, "{\"name\": \"x\", \"ta").unwrap();
+    let out = ccloud().args(["run"]).arg(&truncated).output().unwrap();
+    assert!(!out.status.success());
+    assert!(String::from_utf8_lossy(&out.stderr).contains("truncated.json"));
+    // Corrupt envelopes during merge: each is reported with its path; the
+    // valid remainder still merges (exit 1 signals the degradation).
+    let mut engine = Engine::new();
+    let e = spec(Task::Optimize, &["gpt2", "megatron"]);
+    let shards = plan(&e, 2, &mut engine).expect("plan");
+    let good_env = Envelope::new(
+        shards[0].clone(),
+        engine.run(&shards[0]).expect("runs").to_json(),
+    );
+    let good = dir.join("good.outcome.json");
+    std::fs::write(&good, format!("{}\n", good_env.to_json())).unwrap();
+    let bad = dir.join("bad.outcome.json");
+    std::fs::write(&bad, "not json at all").unwrap();
+    let out = ccloud()
+        .args(["merge"])
+        .arg(&good)
+        .arg(&bad)
+        .arg(dir.join("absent.json"))
+        .output()
+        .unwrap();
+    assert!(!out.status.success());
+    let stderr = String::from_utf8_lossy(&out.stderr).to_string();
+    assert!(stderr.contains("bad.outcome.json"), "{stderr}");
+    assert!(stderr.contains("absent.json"), "{stderr}");
+    let v = Json::parse(std::str::from_utf8(&out.stdout).unwrap().trim()).unwrap();
+    assert!(v.get("missing_shards").is_some(), "partial merge still printed");
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+/// `run --distributed` refuses several specs, a missing run dir flag, and
+/// a resume against the wrong spec (fingerprint mismatch).
+#[test]
+fn distributed_flag_validation() {
+    let dir = temp_dir("flags");
+    let a = write_spec(&dir, &spec(Task::Sweep, &["gpt2"]));
+    let out = ccloud().args(["run"]).arg(&a).args(["--distributed"]).output().unwrap();
+    assert!(!out.status.success());
+    assert!(String::from_utf8_lossy(&out.stderr).contains("--run-dir"));
+    // Wrong spec against an existing run dir.
+    let run_dir = dir.join("run");
+    let ok = ccloud()
+        .args(["run"])
+        .arg(&a)
+        .args(["--distributed", "--run-dir"])
+        .arg(&run_dir)
+        .args(["--workers", "2"])
+        .output()
+        .unwrap();
+    assert!(ok.status.success(), "{}", String::from_utf8_lossy(&ok.stderr));
+    let b_spec = {
+        let mut e = spec(Task::Sweep, &["megatron"]);
+        e.name = "other".into();
+        e
+    };
+    let b = dir.join("other.json");
+    std::fs::write(&b, format!("{}\n", b_spec.to_json())).unwrap();
+    let out = ccloud().args(["run"]).arg(&b).args(["--resume"]).arg(&run_dir).output().unwrap();
+    assert!(!out.status.success());
+    assert!(String::from_utf8_lossy(&out.stderr).contains("fingerprint"));
+    let _ = std::fs::remove_dir_all(&dir);
+}
