@@ -1,16 +1,28 @@
 //! Serving-simulator benchmarks: event-sim wall cost per simulated
 //! request, the static vs continuous goodput comparison on one seeded
 //! high-load trace (continuous must win — asserted, not just printed),
-//! the chunked-prefill / multi-replica paths, and the decode fast-forward
+//! the chunked-prefill / multi-replica paths, the decode fast-forward
 //! core against the step-by-step reference (bit-identical — asserted —
-//! and the speedup printed).
+//! and the speedup printed), and the million-request scale: quantized
+//! time vs fast-forward (tails within the documented epsilon — asserted)
+//! plus a sketched-tail multi-replica fleet run.
+//!
+//! Pass `--quick` (the CI mode) to shrink the million-request sections;
+//! set `CC_BENCH_JSON` to merge a `serve_sim` section into the sweep
+//! bench's machine-readable artifact (existing keys are preserved).
 
+use std::collections::BTreeMap;
 use std::time::Instant;
 
 use chiplet_cloud::config::{SloSpec, TrafficSpec};
 use chiplet_cloud::perf::events::{simulate_replicated, simulate_trace, IterCost, SimConfig};
 use chiplet_cloud::sched::{ContinuousBatch, KvBudget, RoutePolicy, StaticBatch};
 use chiplet_cloud::util::bench::{black_box, Bench};
+use chiplet_cloud::util::json::Json;
+
+fn obj(fields: Vec<(&str, Json)>) -> Json {
+    Json::Obj(fields.into_iter().map(|(k, v)| (k.to_string(), v)).collect::<BTreeMap<_, _>>())
+}
 
 fn cfg() -> SimConfig {
     SimConfig::new(
@@ -119,6 +131,109 @@ fn main() {
         full.iterations,
         full_s / abort_s.max(1e-12)
     );
+
+    // --- Million-request scale: quantized time vs fast-forward ---------
+    // Decode-heavy, ~50% loaded open loop: long uniform stretches between
+    // arrivals are where the closed-form clock jump beats the
+    // per-iteration replay. 1M requests stay under the default tail cap,
+    // so both runs keep exact percentiles and the comparison isolates
+    // pure quantization error.
+    let quick = std::env::args().any(|a| a == "--quick");
+    let mode = if quick { "quick" } else { "full" };
+    // The quick fleet still exceeds the default tail cap (1 << 20), so the
+    // sketched-tails path is exercised in CI too.
+    let (n_single, n_fleet) = if quick { (200_000, 2_000_000) } else { (1_000_000, 10_000_000) };
+    let million = TrafficSpec::poisson(0.6, n_single, 32, 256, 1024).with_seed(77);
+    let unconstrained = SloSpec::unconstrained();
+    let t0 = Instant::now();
+    let ff = simulate_trace(&cfg(), &mut ContinuousBatch, &million, &unconstrained);
+    let ff_s = t0.elapsed().as_secs_f64();
+    let mut quant_cfg = cfg();
+    quant_cfg.quantum = 5.0; // up to 500 decode steps per clock jump
+    let t0 = Instant::now();
+    let quant = simulate_trace(&quant_cfg, &mut ContinuousBatch, &million, &unconstrained);
+    let quant_s = t0.elapsed().as_secs_f64();
+    assert_eq!(ff.completed, quant.completed, "quantized mode diverged: completed");
+    assert_eq!(ff.tokens, quant.tokens, "quantized mode diverged: tokens");
+    let step = quant_cfg.cost.decode_step_s;
+    for (q, r, what) in [
+        (quant.ttft_p50_s, ff.ttft_p50_s, "ttft p50"),
+        (quant.ttft_p99_s, ff.ttft_p99_s, "ttft p99"),
+        (quant.tpot_p50_s, ff.tpot_p50_s, "tpot p50"),
+        (quant.tpot_p99_s, ff.tpot_p99_s, "tpot p99"),
+    ] {
+        assert!(
+            (q - r).abs() <= 2.0 * step + 1e-6 * r.abs(),
+            "quantized {what} {q} outside epsilon of reference {r}"
+        );
+    }
+    let single_speedup = ff_s / quant_s.max(1e-12);
+    println!(
+        "quantized vs fast-forward ({n_single} requests): {ff_s:.2}s -> {quant_s:.2}s \
+         ({single_speedup:.2}x, tails within 2*step + 1e-6)"
+    );
+
+    // The fleet run: 8 replicas, sketched tails (offered >> tail_cap), the
+    // arrival stream generated lazily — memory stays O(1) in requests.
+    let fleet_traffic = TrafficSpec::poisson(4.8, n_fleet, 32, 256, 1024).with_seed(78);
+    let t0 = Instant::now();
+    let fleet = simulate_replicated(
+        &quant_cfg,
+        8,
+        RoutePolicy::RoundRobin,
+        &ContinuousBatch,
+        &fleet_traffic,
+        &unconstrained,
+    );
+    let fleet_s = t0.elapsed().as_secs_f64();
+    assert_eq!(fleet.completed, n_fleet, "fleet run must serve the whole trace");
+    assert!(
+        fleet.per_request.is_empty(),
+        "a {n_fleet}-request run must use sketched tails, not per-request records"
+    );
+    assert!(fleet.ttft_p99_s.is_finite() && fleet.ttft_p99_s > 0.0);
+    println!(
+        "quantized fleet ({n_fleet} requests, 8 replicas, sketched tails): {fleet_s:.2}s \
+         ({:.0} simulated requests/s)",
+        n_fleet as f64 / fleet_s.max(1e-12)
+    );
+
+    // Merge the serve_sim section into the shared bench artifact without
+    // clobbering what bench_sweep_engine wrote.
+    if let Ok(path) = std::env::var("CC_BENCH_JSON") {
+        let mut root = match std::fs::read_to_string(&path).ok().and_then(|t| Json::parse(&t).ok())
+        {
+            Some(Json::Obj(m)) => m,
+            _ => BTreeMap::new(),
+        };
+        root.insert(
+            "serve_sim".to_string(),
+            obj(vec![
+                ("mode", Json::Str(mode.to_string())),
+                (
+                    "single",
+                    obj(vec![
+                        ("requests", Json::Num(n_single as f64)),
+                        ("fast_forward_s", Json::Num(ff_s)),
+                        ("quantized_s", Json::Num(quant_s)),
+                        ("speedup", Json::Num(single_speedup)),
+                    ]),
+                ),
+                (
+                    "fleet",
+                    obj(vec![
+                        ("requests", Json::Num(n_fleet as f64)),
+                        ("replicas", Json::Num(8.0)),
+                        ("quantized_s", Json::Num(fleet_s)),
+                        ("sketched", Json::Bool(true)),
+                    ]),
+                ),
+                ("epsilon_ok", Json::Bool(true)),
+            ]),
+        );
+        std::fs::write(&path, format!("{}\n", Json::Obj(root))).expect("write bench json");
+        println!("merged serve_sim into {path}");
+    }
 
     let st = simulate_trace(&cfg(), &mut StaticBatch::new(0.05), &trace, &slo);
     let co = simulate_trace(&cfg(), &mut ContinuousBatch, &trace, &slo);

@@ -496,6 +496,26 @@ fn validate_serve(s: &ServeSpec) -> Result<(), String> {
     if s.replicas == 0 {
         return Err("'serve.replicas' must be >= 1".into());
     }
+    if s.quantum != 0.0 && !(s.quantum > 0.0 && s.quantum.is_finite()) {
+        return Err(format!(
+            "'serve.quantum' must be a finite positive number of seconds \
+             (null/0 = exact decode replay; got {})",
+            s.quantum
+        ));
+    }
+    if let Some(p) = &s.trace_file {
+        if p.is_empty() {
+            return Err("'serve.trace_file' must be a non-empty path".into());
+        }
+        // The trace fixes the arrival times itself; any synthetic arrival
+        // shape alongside it would silently be ignored, so reject all but
+        // the rate-unset default.
+        if s.traffic.arrival != (ArrivalProcess::Poisson { rps: 0.0 }) {
+            return Err("'serve.trace_file' replaces synthetic arrivals; drop \
+                        'serve.traffic.arrival' (and any --trace/--rps flags)"
+                .into());
+        }
+    }
     Ok(())
 }
 
@@ -693,7 +713,16 @@ fn serve_from_json(v: &Json) -> Result<ServeSpec, String> {
     check_fields(
         m,
         path,
-        &["traffic", "slo", "prefill_chunk", "paged_kv", "replicas", "route"],
+        &[
+            "traffic",
+            "slo",
+            "prefill_chunk",
+            "paged_kv",
+            "replicas",
+            "route",
+            "quantum",
+            "trace_file",
+        ],
     )?;
     let traffic = match m.get("traffic") {
         None => return Err("serve is missing the required field 'traffic'".into()),
@@ -709,6 +738,26 @@ fn serve_from_json(v: &Json) -> Result<ServeSpec, String> {
             format!("field 'route' in serve: unknown policy '{s}' (expected rr, jsq or jsq-tokens)")
         })?,
     };
+    // Quantum: number of seconds, or null/absent = exact (fast-forward)
+    // decode replay.
+    let quantum = match m.get("quantum") {
+        None | Some(Json::Null) => 0.0,
+        Some(Json::Num(x)) => *x,
+        Some(_) => {
+            return Err(
+                "field 'quantum' in serve: expected a number of seconds or null (exact)".into()
+            )
+        }
+    };
+    let trace_file = match m.get("trace_file") {
+        None | Some(Json::Null) => None,
+        Some(Json::Str(s)) => Some(s.clone()),
+        Some(_) => {
+            return Err(
+                "field 'trace_file' in serve: expected a path string or null (synthetic)".into()
+            )
+        }
+    };
     Ok(ServeSpec {
         traffic,
         slo,
@@ -716,6 +765,8 @@ fn serve_from_json(v: &Json) -> Result<ServeSpec, String> {
         paged_kv: get_bool(m, path, "paged_kv")?.unwrap_or(false),
         replicas: get_usize(m, path, "replicas")?.unwrap_or(1),
         route,
+        quantum,
+        trace_file,
     })
 }
 
@@ -727,6 +778,14 @@ fn serve_to_json(s: &ServeSpec) -> Json {
     m.insert("paged_kv".into(), Json::Bool(s.paged_kv));
     m.insert("replicas".into(), Json::Num(s.replicas as f64));
     m.insert("route".into(), Json::Str(s.route.name().into()));
+    // Defaults stay un-emitted so pre-quantum specs round-trip byte-
+    // identically (absent ↔ 0.0 / None above).
+    if s.quantum != 0.0 {
+        m.insert("quantum".into(), Json::Num(s.quantum));
+    }
+    if let Some(p) = &s.trace_file {
+        m.insert("trace_file".into(), Json::Str(p.clone()));
+    }
     Json::Obj(m)
 }
 
@@ -852,6 +911,82 @@ mod tests {
         let back = Experiment::from_json_str(&s).unwrap();
         assert_eq!(back, e);
         assert!(back.serve.unwrap().slo.is_unconstrained());
+    }
+
+    #[test]
+    fn quantum_and_trace_file_round_trip_and_default_to_absent() {
+        // Defaults are never emitted: pre-quantum specs serialize
+        // byte-identically to before the fields existed.
+        let mut e = minimal();
+        e.task = Task::ServeSim;
+        e.workload = Some(WorkloadPoint { ctx: 1024, batch: 32 });
+        e.serve =
+            Some(ServeSpec::new(TrafficSpec::poisson(1.0, 10, 8, 4, 8), SloSpec::unconstrained()));
+        let s = e.to_json_string();
+        assert!(!s.contains("quantum") && !s.contains("trace_file"), "{s}");
+        assert_eq!(Experiment::from_json_str(&s).unwrap(), e);
+
+        // Set values round-trip, and explicit nulls parse as the defaults.
+        let spec = ServeSpec::new(TrafficSpec::poisson(0.0, 10, 8, 4, 8), SloSpec::unconstrained())
+            .with_quantum(0.25)
+            .with_trace_file("trace.csv");
+        e.serve = Some(spec.clone());
+        let s = e.to_json_string();
+        assert!(s.contains("\"quantum\":0.25"), "{s}");
+        assert!(s.contains("\"trace_file\":\"trace.csv\""), "{s}");
+        let back = Experiment::from_json_str(&s).unwrap();
+        assert_eq!(back, e);
+        let nulled = s
+            .replace("\"quantum\":0.25", "\"quantum\":null")
+            .replace("\"trace_file\":\"trace.csv\"", "\"trace_file\":null");
+        let back = Experiment::from_json_str(&nulled).unwrap().serve.unwrap();
+        assert_eq!(back.quantum, 0.0);
+        assert_eq!(back.trace_file, None);
+
+        // Wrong types are actionable.
+        let bad = s.replace("\"quantum\":0.25", "\"quantum\":\"fast\"");
+        let err = Experiment::from_json_str(&bad).unwrap_err();
+        assert!(err.contains("'quantum'") && err.contains("number of seconds"), "{err}");
+        let bad = s.replace("\"trace_file\":\"trace.csv\"", "\"trace_file\":7");
+        let err = Experiment::from_json_str(&bad).unwrap_err();
+        assert!(err.contains("'trace_file'") && err.contains("path string"), "{err}");
+    }
+
+    #[test]
+    fn validation_enforces_quantum_and_trace_file_rules() {
+        let serve_sim = |spec: ServeSpec| {
+            let mut e = minimal();
+            e.task = Task::ServeSim;
+            e.workload = Some(WorkloadPoint { ctx: 1024, batch: 32 });
+            e.serve = Some(spec);
+            e.validate()
+        };
+        let base =
+            || ServeSpec::new(TrafficSpec::poisson(0.0, 10, 8, 4, 8), SloSpec::unconstrained());
+        serve_sim(base().with_quantum(0.1)).unwrap();
+        serve_sim(base().with_trace_file("trace.csv")).unwrap();
+        for q in [-1.0, f64::NAN, f64::INFINITY] {
+            let err = serve_sim(base().with_quantum(q)).unwrap_err();
+            assert!(err.contains("serve.quantum"), "{err}");
+        }
+        let err = serve_sim(base().with_trace_file("")).unwrap_err();
+        assert!(err.contains("non-empty path"), "{err}");
+        // A trace fixes arrivals; any synthetic arrival shape is rejected.
+        let bursty = TrafficSpec {
+            arrival: ArrivalProcess::Bursty { rps: 1.0, burst: 4 },
+            ..TrafficSpec::poisson(0.0, 10, 8, 4, 8)
+        };
+        for t in [
+            TrafficSpec::poisson(2.0, 10, 8, 4, 8),
+            bursty,
+            TrafficSpec::closed_loop(4, 0.1, 10, 8, 4, 8),
+        ] {
+            let err = serve_sim(
+                ServeSpec::new(t, SloSpec::unconstrained()).with_trace_file("trace.csv"),
+            )
+            .unwrap_err();
+            assert!(err.contains("replaces synthetic arrivals"), "{err}");
+        }
     }
 
     #[test]
@@ -1020,7 +1155,7 @@ mod tests {
         assert!(serve(TrafficSpec::poisson(f64::NAN, 10, 8, 4, 8)).unwrap_err().contains("rps"));
         let mut e = minimal();
         let mut s = ServeSpec::new(TrafficSpec::poisson(1.0, 10, 8, 4, 8), SloSpec::new(-1.0, 0.1));
-        e.serve = Some(s);
+        e.serve = Some(s.clone());
         assert!(e.validate().unwrap_err().contains("ttft_p99_s"));
         s.slo = SloSpec::new(1.0, 0.1);
         s.replicas = 0;

@@ -124,9 +124,10 @@ impl TrafficSpec {
 /// [`Workload`] optionally carries into the sweep — and the serving-model
 /// knobs the event simulator honours: chunked prefill, paged-KV
 /// accounting, and multi-replica routing.
-#[derive(Clone, Copy, Debug, PartialEq)]
+#[derive(Clone, Debug, PartialEq)]
 pub struct ServeSpec {
-    /// Synthetic traffic description.
+    /// Synthetic traffic description (shape/volume defaults still apply
+    /// when a trace file provides the arrivals — see `trace_file`).
     pub traffic: TrafficSpec,
     /// Latency targets.
     pub slo: SloSpec,
@@ -142,11 +143,25 @@ pub struct ServeSpec {
     pub replicas: usize,
     /// Arrival routing policy across replicas.
     pub route: crate::sched::RoutePolicy,
+    /// Quantized-time decode stretches: maximum seconds of virtual time
+    /// the simulator advances per closed-form jump
+    /// ([`crate::perf::events::SimConfig::quantum`]). `0.0` (default)
+    /// keeps the bit-identical fast-forward path; positive values trade
+    /// a documented epsilon on the latency tails for O(1) decode
+    /// stretches.
+    pub quantum: f64,
+    /// Replay arrivals from an on-disk CSV trace
+    /// (`at_s,prompt_tokens,new_tokens` — see [`crate::perf::trace`])
+    /// instead of synthesizing them from `traffic.arrival`. The trace
+    /// fixes arrival instants, prompt lengths and token budgets; the
+    /// request count comes from the file. Mutually exclusive with a
+    /// non-default synthetic arrival process.
+    pub trace_file: Option<String>,
 }
 
 impl ServeSpec {
     /// Seed-model semantics: whole-prompt admission, full-context KV
-    /// reservation, one replica.
+    /// reservation, one replica, synthetic arrivals, bit-exact timing.
     pub fn new(traffic: TrafficSpec, slo: SloSpec) -> ServeSpec {
         ServeSpec {
             traffic,
@@ -155,6 +170,8 @@ impl ServeSpec {
             paged_kv: false,
             replicas: 1,
             route: crate::sched::RoutePolicy::RoundRobin,
+            quantum: 0.0,
+            trace_file: None,
         }
     }
 
@@ -174,6 +191,19 @@ impl ServeSpec {
     pub fn with_replicas(mut self, replicas: usize, route: crate::sched::RoutePolicy) -> ServeSpec {
         self.replicas = replicas.max(1);
         self.route = route;
+        self
+    }
+
+    /// Enable quantized-time decode stretches at `quantum` seconds of
+    /// virtual time per jump (see the `quantum` field).
+    pub fn with_quantum(mut self, quantum: f64) -> ServeSpec {
+        self.quantum = quantum;
+        self
+    }
+
+    /// Replay arrivals from a CSV trace file instead of synthesizing them.
+    pub fn with_trace_file<S: Into<String>>(mut self, path: S) -> ServeSpec {
+        self.trace_file = Some(path.into());
         self
     }
 }

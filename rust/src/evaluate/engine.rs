@@ -39,8 +39,10 @@ use crate::explore::pareto;
 use crate::mapping::optimizer::{candidate_mappings, optimize_mapping_bounded, SearchStats};
 use crate::mapping::{partition, Mapping};
 use crate::perf::events::{
-    open_loop_trace, simulate_replicated, simulate_replicated_on, IterCost, ServeReport, SimConfig,
+    open_loop_trace, simulate_replicated, simulate_replicated_on, simulate_replicated_stream,
+    unserved_report, IterCost, ServeReport, SimConfig,
 };
+use crate::perf::trace::TraceFile;
 use crate::perf::kernels::{KernelCache, MAC_EFFICIENCY};
 use crate::perf::{simulate_cached, DecodePerf};
 use crate::sched::{ContinuousBatch, KvBudget};
@@ -449,7 +451,23 @@ impl SweepEngine {
         // shared list is exactly what each simulation would generate
         // (closed-loop traffic materializes empty and synthesizes its
         // arrivals during the run, as before).
-        let trace = if pts.is_empty() { Vec::new() } else { open_loop_trace(&spec.traffic) };
+        // A trace file replaces the synthetic warm start: each validation
+        // re-streams the validated file (two sequential scans, O(1) memory)
+        // instead of sharing a materialized Vec.
+        let tfile = match &spec.trace_file {
+            Some(p) if !pts.is_empty() => match TraceFile::open(p) {
+                Ok(tf) => Some(tf),
+                // Callers validated the path up front; a file that vanished
+                // since means no candidate can be confirmed.
+                Err(_) => return None,
+            },
+            _ => None,
+        };
+        let trace = if pts.is_empty() || tfile.is_some() {
+            Vec::new()
+        } else {
+            open_loop_trace(&spec.traffic)
+        };
         // Speculative parallel scan: waves of candidates, results committed
         // in input (ascending-TCO) order. Wave sizes ramp geometrically
         // 1, 2, 4, … up to `threads`, so the common loose-SLO case
@@ -469,15 +487,33 @@ impl SweepEngine {
                 let mut cfg = slo_sim_config(point, w, spec);
                 cfg.reference_step = !self.fast_sim;
                 cfg.early_abort = self.fast_sim;
-                simulate_replicated_on(
-                    &cfg,
-                    spec.replicas,
-                    spec.route,
-                    &ContinuousBatch,
-                    &spec.traffic,
-                    &trace,
-                    slo,
-                )
+                match &tfile {
+                    Some(tf) => match tf.arrivals() {
+                        Ok(src) => simulate_replicated_stream(
+                            &cfg,
+                            spec.replicas,
+                            spec.route,
+                            &ContinuousBatch,
+                            &spec.traffic,
+                            tf.requests(),
+                            src,
+                            slo,
+                        ),
+                        // Mid-scan loss of the file: an unserved report
+                        // never meets a binding SLO, so the candidate is
+                        // (conservatively) rejected.
+                        Err(_) => unserved_report("continuous", spec.replicas, tf.requests()),
+                    },
+                    None => simulate_replicated_on(
+                        &cfg,
+                        spec.replicas,
+                        spec.route,
+                        &ContinuousBatch,
+                        &spec.traffic,
+                        &trace,
+                        slo,
+                    ),
+                }
             });
             // The whole wave was simulated before any result commits, so
             // the cost counters cover every member — including speculative
@@ -615,12 +651,14 @@ pub(crate) fn evaluate_server_slo(
 /// flip the execution knobs (`reference_step`, `early_abort`) on exactly
 /// the configuration the sweep uses.
 pub fn slo_sim_config(point: &DesignPoint, w: &Workload, spec: &ServeSpec) -> SimConfig {
-    SimConfig::new(
+    let mut cfg = SimConfig::new(
         w.batch.max(1),
         KvBudget::from_design(&point.server, w, &point.mapping),
         IterCost::from_perf(&point.perf, w).with_chunk(spec.prefill_chunk),
         spec.paged_kv,
-    )
+    );
+    cfg.quantum = spec.quantum;
+    cfg
 }
 
 /// Event-sim validation of one design point: continuous batching over the
@@ -637,6 +675,27 @@ pub fn slo_sim_config(point: &DesignPoint, w: &Workload, spec: &ServeSpec) -> Si
 /// [`SweepEngine::best_point_slo`].
 pub fn validate_design_slo(point: &DesignPoint, w: &Workload, spec: &ServeSpec) -> ServeReport {
     let cfg = slo_sim_config(point, w, spec);
+    if let Some(p) = &spec.trace_file {
+        let stream = match TraceFile::open(p) {
+            Ok(tf) => tf.arrivals().ok().map(|src| (src, tf.requests())),
+            Err(_) => None,
+        };
+        return match stream {
+            Some((src, offered)) => simulate_replicated_stream(
+                &cfg,
+                spec.replicas,
+                spec.route,
+                &ContinuousBatch,
+                &spec.traffic,
+                offered,
+                src,
+                &spec.slo,
+            ),
+            // Callers validated the path; a vanished file degrades to an
+            // unserved (never SLO-meeting) report.
+            None => unserved_report("continuous", spec.replicas, spec.traffic.requests),
+        };
+    }
     simulate_replicated(&cfg, spec.replicas, spec.route, &ContinuousBatch, &spec.traffic, &spec.slo)
 }
 

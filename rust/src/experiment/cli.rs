@@ -70,7 +70,9 @@ fn sweep_from_args(args: &Args, space: SpaceSpec, engine: EngineKnobs) -> Result
         // The serving model only enters the sweep through the
         // SLO-constrained selection; accepting these flags here and
         // ignoring them would misrepresent the optimum.
-        for flag in ["paged", "prefill-chunk", "replicas", "route", "trace", "rps"] {
+        for flag in
+            ["paged", "prefill-chunk", "replicas", "route", "trace", "rps", "trace-file", "quantum"]
+        {
             if args.has(flag) {
                 return Err(Error::Config(format!(
                     "--{flag} has no effect on an unconstrained sweep — add \
@@ -83,7 +85,7 @@ fn sweep_from_args(args: &Args, space: SpaceSpec, engine: EngineKnobs) -> Result
         // The sweep has no per-design rate resolution, so default to a
         // saturating closed loop unless a trace was given.
         let mut traffic = traffic_from_args(args)?;
-        if !args.has("trace") && !args.has("rps") {
+        if !args.has("trace") && !args.has("rps") && !args.has("trace-file") {
             traffic.arrival = ArrivalProcess::ClosedLoop {
                 clients: args.get_or("clients", defaults::CLIENTS),
                 think_s: args.get_or("think", 0.0),
@@ -258,7 +260,12 @@ fn traffic_from_args(args: &Args) -> Result<TrafficSpec> {
 }
 
 /// The serving-model knobs shared by `serve-sim` and `sweep`: chunked
-/// prefill, paged-KV accounting and multi-replica routing.
+/// prefill, paged-KV accounting, multi-replica routing, quantized-time
+/// decode, and trace-file replay. `--trace-file` contradicts the
+/// synthetic-arrival flags (`--trace`/`--rps`) and errors here with the
+/// flag names instead of falling through to the spec-level message. The
+/// file itself is opened (and its rows validated) at run time, where a
+/// missing or malformed trace becomes a located `Error::Config`.
 fn serve_model_from_args(args: &Args, mut spec: ServeSpec) -> Result<ServeSpec> {
     spec.prefill_chunk = parse_usize(args, "prefill-chunk", 0, 0)?;
     spec.paged_kv = args.has("paged");
@@ -269,5 +276,16 @@ fn serve_model_from_args(args: &Args, mut spec: ServeSpec) -> Result<ServeSpec> 
             Error::Config(format!("--route must be rr, jsq or jsq-tokens (got '{s}')"))
         })?,
     };
+    spec.quantum = parse_positive_f64(args, "quantum")?.unwrap_or(0.0);
+    if let Some(p) = args.get("trace-file") {
+        for flag in ["trace", "rps", "burst", "clients", "think"] {
+            if args.has(flag) {
+                return Err(Error::Config(format!(
+                    "--trace-file replays the file's recorded arrivals; drop --{flag}"
+                )));
+            }
+        }
+        spec.trace_file = Some(p.to_string());
+    }
     Ok(spec)
 }

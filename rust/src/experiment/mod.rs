@@ -37,9 +37,11 @@ pub use crate::config::experiment::{
 use crate::config::{ArrivalProcess, ModelSpec, ServeSpec, TrafficSpec, Workload};
 use crate::evaluate::{DesignPoint, SloSelection, SweepEngine, SweepStats};
 use crate::perf::events::{
-    simulate_replicated, simulate_trace, IterCost, ServeReport, SimConfig,
+    simulate_replicated, simulate_replicated_stream, simulate_trace, simulate_trace_stream,
+    IterCost, ServeReport, SimConfig,
 };
 use crate::perf::simulator::max_context;
+use crate::perf::trace::TraceFile;
 use crate::report::Ctx;
 use crate::sched::{ContinuousBatch, KvBudget, Policy, RoutePolicy, StaticBatch};
 use crate::util::json::Json;
@@ -187,9 +189,14 @@ fn run_single(ctx: &Ctx, e: &Experiment, model: &ModelSpec, engine: &SweepEngine
         ))),
         Task::ServeSim => {
             let wp = e.workload.expect("validated: serve-sim carries a workload");
-            let spec = e.serve.expect("validated: serve-sim carries a serve spec");
+            let spec = e.serve.clone().expect("validated: serve-sim carries a serve spec");
             let w = Workload::new(model.clone(), wp.ctx, wp.batch);
-            Outcome::Serve(Box::new(serve_outcome(ctx, &w, &spec, e.load, engine)))
+            match serve_outcome(ctx, &w, &spec, e.load, engine) {
+                Ok(o) => Outcome::Serve(Box::new(o)),
+                // Late trace-file failures (deleted between validation and
+                // run) degrade to a carried error, like campaign members.
+                Err(err) => Outcome::Error(err.to_string()),
+            }
         }
         Task::Optimize => unreachable!("optimize dispatches in Engine::run"),
     }
@@ -460,7 +467,7 @@ pub(crate) fn sweep_outcome_sharded(
             }
             None => spec.traffic,
         };
-        let spec = ServeSpec { traffic, ..*spec };
+        let spec = ServeSpec { traffic, ..spec.clone() };
         let selection = engine.best_point_slo(&ctx.space, &ctx.servers, &w, &spec);
         SloPart { spec, ctx: wctx, batch: wbatch, selection }
     });
@@ -481,25 +488,37 @@ pub(crate) fn sweep_outcome_sharded(
 /// Build a serve-sim outcome: static vs continuous batching on the
 /// workload's TCO/Token-optimal design, routing-policy rows across
 /// replicas, and the SLO-constrained selection under a binding SLO.
+///
+/// With a `trace_file` in the spec, arrivals replay from the validated
+/// CSV instead of the synthetic generators: the file fixes the request
+/// count and arrival shape (rate resolution is skipped), every row —
+/// including the single-replica baselines — serves the full trace, and a
+/// missing/unreadable/malformed file returns a located
+/// [`crate::Error::Config`].
 pub fn serve_outcome(
     ctx: &Ctx,
     w: &Workload,
     spec: &ServeSpec,
     load: f64,
     engine: &SweepEngine,
-) -> ServeOutcome {
+) -> crate::Result<ServeOutcome> {
     let batch = w.batch;
     let slo = spec.slo;
+    // Validate (and count) the trace up front, before any sweeping.
+    let trace = match &spec.trace_file {
+        Some(p) => Some(TraceFile::open(p).map_err(crate::Error::Config)?),
+        None => None,
+    };
     let Some(best) = engine.best_point(&ctx.space, &ctx.servers, w) else {
-        return ServeOutcome {
+        return Ok(ServeOutcome {
             model: w.model.clone(),
             ctx: w.ctx,
             batch,
-            spec: *spec,
+            spec: spec.clone(),
             feasible: false,
             rows: Vec::new(),
             slo: None,
-        };
+        });
     };
 
     // Resolve a load-relative arrival rate against the design's capacity
@@ -507,28 +526,42 @@ pub fn serve_outcome(
     // single-replica baseline rows get the per-replica *share* of that
     // rate, so every row serves the same `load` relative to its own
     // capacity instead of one server silently eating the fleet's traffic.
+    // A trace file fixes arrivals itself: rate resolution is skipped and
+    // `traffic.requests` mirrors the row count so budgets and reports
+    // line up.
     let n_replicas = spec.replicas.max(1);
-    let fleet_capacity = best.perf.tokens_per_s * n_replicas as f64;
-    let traffic = resolve_rate(&spec.traffic, load, fleet_capacity);
-    let spec = ServeSpec { traffic, ..*spec };
-    let mut single_traffic = traffic;
-    if n_replicas > 1 {
-        match &mut single_traffic.arrival {
-            ArrivalProcess::Poisson { rps } | ArrivalProcess::Bursty { rps, .. } => {
-                *rps /= n_replicas as f64
-            }
-            // closed loops self-pace; the partitioned replicated run
-            // splits the clients itself
-            ArrivalProcess::ClosedLoop { .. } => {}
+    let (traffic, single_traffic) = match &trace {
+        Some(tf) => {
+            let mut traffic = spec.traffic;
+            traffic.requests = tf.requests();
+            (traffic, traffic)
         }
-    }
+        None => {
+            let fleet_capacity = best.perf.tokens_per_s * n_replicas as f64;
+            let traffic = resolve_rate(&spec.traffic, load, fleet_capacity);
+            let mut single_traffic = traffic;
+            if n_replicas > 1 {
+                match &mut single_traffic.arrival {
+                    ArrivalProcess::Poisson { rps } | ArrivalProcess::Bursty { rps, .. } => {
+                        *rps /= n_replicas as f64
+                    }
+                    // closed loops self-pace; the partitioned replicated
+                    // run splits the clients itself
+                    ArrivalProcess::ClosedLoop { .. } => {}
+                }
+            }
+            (traffic, single_traffic)
+        }
+    };
+    let spec = ServeSpec { traffic, ..spec.clone() };
 
-    let cfg = SimConfig::new(
+    let mut cfg = SimConfig::new(
         batch.max(1),
         KvBudget::from_design(&best.server, w, &best.mapping),
         IterCost::from_perf(&best.perf, w).with_chunk(spec.prefill_chunk),
         spec.paged_kv,
     );
+    cfg.quantum = spec.quantum;
     let mut rows: Vec<(String, ServeReport)> = Vec::new();
     // Static window: a couple of token periods — long enough to coalesce,
     // short enough not to dominate TTFT at low load.
@@ -536,13 +569,40 @@ pub fn serve_outcome(
     let mut co = ContinuousBatch;
     let policies: [&mut dyn Policy; 2] = [&mut st, &mut co];
     for policy in policies {
-        let r = simulate_trace(&cfg, policy, &single_traffic, &slo);
+        let r = match &trace {
+            Some(tf) => {
+                let src = tf.arrivals().map_err(crate::Error::Config)?;
+                simulate_trace_stream(&cfg, policy, &single_traffic, tf.requests(), src, &slo)
+            }
+            None => simulate_trace(&cfg, policy, &single_traffic, &slo),
+        };
         rows.push((r.policy.clone(), r));
     }
     if spec.replicas > 1 {
         for route in [RoutePolicy::RoundRobin, RoutePolicy::Jsq, RoutePolicy::JsqTokens] {
-            let r =
-                simulate_replicated(&cfg, spec.replicas, route, &ContinuousBatch, &traffic, &slo);
+            let r = match &trace {
+                Some(tf) => {
+                    let src = tf.arrivals().map_err(crate::Error::Config)?;
+                    simulate_replicated_stream(
+                        &cfg,
+                        spec.replicas,
+                        route,
+                        &ContinuousBatch,
+                        &traffic,
+                        tf.requests(),
+                        src,
+                        &slo,
+                    )
+                }
+                None => simulate_replicated(
+                    &cfg,
+                    spec.replicas,
+                    route,
+                    &ContinuousBatch,
+                    &traffic,
+                    &slo,
+                ),
+            };
             rows.push((r.policy.clone(), r));
         }
     }
@@ -551,7 +611,7 @@ pub fn serve_outcome(
     } else {
         Some(engine.best_point_slo(&ctx.space, &ctx.servers, w, &spec))
     };
-    ServeOutcome {
+    Ok(ServeOutcome {
         model: w.model.clone(),
         ctx: w.ctx,
         batch,
@@ -559,7 +619,7 @@ pub fn serve_outcome(
         feasible: true,
         rows,
         slo: slo_part,
-    }
+    })
 }
 
 /// Build the multi-model optimize outcome: one Table-2 row per model.
@@ -818,7 +878,7 @@ impl ServeOutcome {
                 ("bound_feasible", int(sel.bound_feasible)),
             ]),
         };
-        obj(vec![
+        let mut fields = vec![
             ("kind", Json::Str("serve-sim".into())),
             ("model", Json::Str(self.model.name.into())),
             ("ctx", int(self.ctx)),
@@ -828,10 +888,20 @@ impl ServeOutcome {
             ("route", Json::Str(self.spec.route.name().into())),
             ("paged_kv", Json::Bool(self.spec.paged_kv)),
             ("prefill_chunk", int(self.spec.prefill_chunk)),
+        ];
+        // Emitted only when set, so default-mode outputs stay byte-identical.
+        if self.spec.quantum > 0.0 {
+            fields.push(("quantum", num(self.spec.quantum)));
+        }
+        if let Some(p) = &self.spec.trace_file {
+            fields.push(("trace_file", Json::Str(p.clone())));
+        }
+        fields.extend([
             ("feasible", Json::Bool(self.feasible)),
             ("rows", Json::Arr(rows)),
             ("slo", slo),
-        ])
+        ]);
+        obj(fields)
     }
 }
 

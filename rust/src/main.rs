@@ -61,7 +61,8 @@ fn usage() -> ! {
          shard/merge: ccloud shard spec.json --workers N [--out DIR];\n\
          ccloud merge run/shards/*.outcome.json [--out DIR]\n\
          serve-sim/sweep serving-model flags: [--slo-ttft S] [--slo-tpot S] [--prefill-chunk N]\n\
-         [--paged] [--replicas N] [--route rr|jsq|jsq-tokens] [--rps R] [--trace poisson|bursty|closed]"
+         [--paged] [--replicas N] [--route rr|jsq|jsq-tokens] [--rps R] [--trace poisson|bursty|closed]\n\
+         [--trace-file trace.csv] [--quantum S]"
     );
     std::process::exit(2)
 }

@@ -74,7 +74,47 @@
 //!   immediately — the completed-all requirement of [`ServeReport::meets`]
 //!   is already unmeetable). A run that *passes* its SLO never crosses the
 //!   budget, so a passing report is bit-identical with or without the
-//!   flag; only provably-failing runs return early.
+//!   flag; only provably-failing runs return early. With a constrained
+//!   TTFT target the abort also counts requests *still queued* that have
+//!   already waited past the target — their first token cannot precede
+//!   the current clock, so they are provable violators before they finish
+//!   (see [`SimConfig::early_abort`]).
+//!
+//! ## Million-request scale: quantized time, streaming, sketched tails
+//!
+//! Three further mechanisms let [`simulate_replicated`] hold 10M-request
+//! traces on 8 replicas in seconds of wall clock and O(1) memory:
+//!
+//! * **Quantized-time decode stretches** ([`SimConfig::quantum`] > 0):
+//!   fast-forward replays the reference clock's per-iteration float adds
+//!   (bit-identical, but O(iterations) inside a stretch); quantized mode
+//!   computes the iteration count `k` to the next event in closed form
+//!   and advances the clock by one fused `k·step` multiply — O(1) per
+//!   stretch regardless of its length, with at most `quantum` seconds of
+//!   virtual time per jump. **Epsilon contract**: the closed form lands
+//!   every scheduling event within one iteration of the reference
+//!   schedule (float rounding of `k·step` versus `k` repeated adds can
+//!   shift an event boundary by ±1 iteration), so per-request TTFT and
+//!   end-to-end latencies differ from the reference path by at most one
+//!   decode step plus O(k·ulp) float reconstruction error, and TPOT by at
+//!   most two steps divided by the token count; aggregate p50/p99 tails
+//!   inherit the same bound. The property suite asserts
+//!   `|quantized − reference| ≤ 2·decode_step + 1e-6·|reference|` on
+//!   TTFT/TPOT/total tails across the corpus. Default 0.0 keeps the
+//!   bit-identical fast-forward, so existing goldens do not move.
+//! * **Streaming ingestion** ([`simulate_trace_stream`],
+//!   [`simulate_replicated_stream`]): the simulator pulls arrivals from
+//!   any `(at_s, id)`-ordered iterator — the synthetic generators behind
+//!   [`open_loop_iter`] or a [`crate::perf::trace::TraceFile`] replay —
+//!   merged lazily with the event loop, so a trace is never materialized.
+//!   The slice-based `*_on` entry points delegate to the stream versions
+//!   (byte-identical by construction).
+//! * **Sketched tails** ([`SimConfig::tail_cap`]): past the cap, finished
+//!   requests fold into mergeable [`crate::util::stats::QuantileSketch`]es
+//!   (relative error ≤ 1%) instead of accumulating `per_request` records;
+//!   replica sketches merge exactly into fleet tails without
+//!   concatenating sample vectors, keeping memory O(1) in requests.
+//!   `per_request` is empty in a sketched report.
 
 use std::cmp::Reverse;
 use std::collections::{BinaryHeap, VecDeque};
@@ -87,7 +127,7 @@ use crate::util::rng::Rng;
 use crate::util::stats;
 
 /// One request arrival in a trace.
-#[derive(Clone, Copy, Debug)]
+#[derive(Clone, Copy, Debug, PartialEq)]
 pub struct Arrival {
     /// Request id (ascending with arrival order).
     pub id: u64,
@@ -106,31 +146,7 @@ pub struct Arrival {
 /// specs return an empty list — their arrivals are produced *during* the
 /// simulation (each completion schedules the client's next request).
 pub fn open_loop_trace(t: &TrafficSpec) -> Vec<Arrival> {
-    let mut rng = Rng::new(t.seed);
-    let mut out = Vec::with_capacity(t.requests);
-    let mut now = 0.0f64;
-    match t.arrival {
-        ArrivalProcess::Poisson { rps } => {
-            for id in 0..t.requests {
-                now += rng.exponential(rps.max(1e-12));
-                out.push(arrival(&mut rng, t, id as u64, now));
-            }
-        }
-        ArrivalProcess::Bursty { rps, burst } => {
-            let burst = burst.max(1);
-            // Exponential gaps between bursts with mean burst/rps keep the
-            // long-run rate at `rps` while arrivals clump.
-            let mut id = 0u64;
-            while (id as usize) < t.requests {
-                now += rng.exponential((rps / burst as f64).max(1e-12));
-                for _ in 0..burst.min(t.requests - id as usize) {
-                    out.push(arrival(&mut rng, t, id, now));
-                    id += 1;
-                }
-            }
-        }
-        ArrivalProcess::ClosedLoop { .. } => {}
-    }
+    let mut out: Vec<Arrival> = open_loop_iter(t).collect();
     // Generation is already time-ordered (the clock only advances), but the
     // tie-break by id is the contract consumers rely on — make it explicit.
     out.sort_by(|a, b| {
@@ -140,6 +156,61 @@ pub fn open_loop_trace(t: &TrafficSpec) -> Vec<Arrival> {
             .then(a.id.cmp(&b.id))
     });
     out
+}
+
+/// Lazily generate the open-loop arrivals of a traffic spec, yielding the
+/// *same draws in the same `(at_s, id)` order* as [`open_loop_trace`]
+/// materializes — the generators only ever move the clock forward, so
+/// generation order already is the sorted order (a property test holds
+/// the two bit-identical). This is the synthetic-traffic producer behind
+/// the streaming entry points ([`simulate_trace_stream`],
+/// [`simulate_replicated_stream`]); trace files provide the other
+/// producer ([`crate::perf::trace::TraceFile::arrivals`]) behind the same
+/// iterator interface. Closed-loop specs yield nothing, as with
+/// [`open_loop_trace`].
+pub fn open_loop_iter(t: &TrafficSpec) -> OpenLoopIter {
+    OpenLoopIter { traffic: *t, rng: Rng::new(t.seed), now: 0.0, next_id: 0, burst_left: 0 }
+}
+
+/// Iterator state of [`open_loop_iter`].
+pub struct OpenLoopIter {
+    traffic: TrafficSpec,
+    rng: Rng,
+    now: f64,
+    next_id: u64,
+    burst_left: usize,
+}
+
+impl Iterator for OpenLoopIter {
+    type Item = Arrival;
+
+    fn next(&mut self) -> Option<Arrival> {
+        if self.next_id as usize >= self.traffic.requests {
+            return None;
+        }
+        match self.traffic.arrival {
+            ArrivalProcess::Poisson { rps } => {
+                self.now += self.rng.exponential(rps.max(1e-12));
+            }
+            ArrivalProcess::Bursty { rps, burst } => {
+                // Exponential gaps between bursts with mean burst/rps keep
+                // the long-run rate at `rps` while arrivals clump; draws
+                // interleave exactly as the materializing loop's did (one
+                // gap draw, then one size draw per burst member).
+                let burst = burst.max(1);
+                if self.burst_left == 0 {
+                    self.now += self.rng.exponential((rps / burst as f64).max(1e-12));
+                    self.burst_left = burst;
+                }
+                self.burst_left -= 1;
+            }
+            ArrivalProcess::ClosedLoop { .. } => return None,
+        }
+        let traffic = self.traffic;
+        let a = arrival(&mut self.rng, &traffic, self.next_id, self.now);
+        self.next_id += 1;
+        Some(a)
+    }
 }
 
 fn arrival(rng: &mut Rng, t: &TrafficSpec, id: u64, at_s: f64) -> Arrival {
@@ -218,15 +289,48 @@ pub struct SimConfig {
     /// [`ServeReport::aborted_early`] and fails [`ServeReport::meets`];
     /// its tails describe a *partial* run, so enable this only where the
     /// report is consumed as a feasibility verdict (stage-2 sweep
-    /// validation), not where it is shown to a reader.
+    /// validation), not where it is shown to a reader. With a finite TTFT
+    /// target the proof also counts requests still queued that have
+    /// already out-waited the target (their eventual TTFT is provably
+    /// over), so overloaded runs abort long before requests complete.
     pub early_abort: bool,
+    /// Quantized-time decode stretches: when `> 0`, uniform decode
+    /// stretches advance as an integer iteration count times the decode
+    /// step in O(1) — one fused multiply instead of replaying per-
+    /// iteration float adds — jumping at most `quantum` seconds of
+    /// virtual time at a time. Reports are reconstructed at stretch
+    /// boundaries within the documented epsilon of the bit-exact
+    /// reference path (module docs, "Million-request scale"). `0.0`
+    /// (default) keeps the bit-identical fast-forward. Use a large
+    /// finite value (e.g. `1e9`) for maximum speed.
+    pub quantum: f64,
+    /// Completed-sample cap above which tails are tracked in mergeable
+    /// quantile sketches (relative error ≤ 1%) instead of per-request
+    /// records: runs offering more than `tail_cap` requests keep memory
+    /// O(1) and return an empty [`ServeReport::per_request`]. Runs at or
+    /// under the cap are unaffected (exact, bit-identical tails).
+    pub tail_cap: usize,
 }
+
+/// Default [`SimConfig::tail_cap`]: exact per-request tails up to ~1M
+/// completions, sketched beyond.
+pub const DEFAULT_TAIL_CAP: usize = 1 << 20;
 
 impl SimConfig {
     /// Config with the default execution knobs: fast-forward on
-    /// (`reference_step: false`), early abort off.
+    /// (`reference_step: false`), early abort off, quantized time off,
+    /// exact tails up to [`DEFAULT_TAIL_CAP`] samples.
     pub fn new(max_slots: usize, kv: KvBudget, cost: IterCost, paged_kv: bool) -> SimConfig {
-        SimConfig { max_slots, kv, cost, paged_kv, reference_step: false, early_abort: false }
+        SimConfig {
+            max_slots,
+            kv,
+            cost,
+            paged_kv,
+            reference_step: false,
+            early_abort: false,
+            quantum: 0.0,
+            tail_cap: DEFAULT_TAIL_CAP,
+        }
     }
 }
 
@@ -451,17 +555,80 @@ impl AbortRule {
     }
 }
 
+/// Bounded-memory tail accounting of one replica (or, merged, one
+/// fleet): three mergeable sketches plus the scalar aggregates that the
+/// exact path would have derived from `done`. Engaged when a run offers
+/// more than [`SimConfig::tail_cap`] requests.
+struct TailTally {
+    ttft: stats::QuantileSketch,
+    tpot: stats::QuantileSketch,
+    total: stats::QuantileSketch,
+    completed: usize,
+    tokens: usize,
+    good_tokens: usize,
+    met: usize,
+}
+
+impl TailTally {
+    fn new() -> TailTally {
+        TailTally {
+            ttft: stats::QuantileSketch::default_accuracy(),
+            tpot: stats::QuantileSketch::default_accuracy(),
+            total: stats::QuantileSketch::default_accuracy(),
+            completed: 0,
+            tokens: 0,
+            good_tokens: 0,
+            met: 0,
+        }
+    }
+
+    /// Fold one finished request in — the online mirror of what the exact
+    /// aggregate computes from `done` after the run.
+    fn record(&mut self, r: &ReqStats, slo: &SloSpec) {
+        self.completed += 1;
+        self.tokens += r.tokens;
+        if r.meets(slo) {
+            self.met += 1;
+            self.good_tokens += r.tokens;
+        }
+        self.ttft.record(r.ttft_s());
+        if r.tokens > 1 {
+            // The exact path excludes single-token requests from the TPOT
+            // vector (their TPOT is identically 0); mirror that.
+            self.tpot.record(r.tpot_s());
+        }
+        self.total.record(r.total_s());
+    }
+
+    fn merge(&mut self, other: &TailTally) {
+        self.ttft.merge(&other.ttft);
+        self.tpot.merge(&other.tpot);
+        self.total.merge(&other.total);
+        self.completed += other.completed;
+        self.tokens += other.tokens;
+        self.good_tokens += other.good_tokens;
+        self.met += other.met;
+    }
+}
+
 /// One engine replica's full simulation state: queue, slots, paged ledger
 /// and virtual clock. [`simulate_trace`] drives a single replica to
 /// completion; [`simulate_replicated`] interleaves several in global time
 /// order so arrivals can be routed on the fleet state at their instant.
-struct Replica {
+/// The lifetime is the arrival source's: replicas stream their own
+/// arrivals through a one-item lookahead (`pending`) instead of owning a
+/// materialized queue.
+struct Replica<'a> {
     cfg: SimConfig,
     /// Slot-count concurrency cap presented to the policy.
     kv_slots: usize,
     ledger: Option<KvLedger>,
-    /// Open-loop arrivals owned by this replica, (time, id)-ordered.
-    pending: VecDeque<Arrival>,
+    /// Lazy (time, id)-ordered arrival source owned by this replica
+    /// (empty for externally-routed replicas).
+    source: Box<dyn Iterator<Item = Arrival> + 'a>,
+    /// One-item lookahead over `source` — the head the reference
+    /// `pending.front()` peeks gave, without the materialized deque.
+    pending: Option<Arrival>,
     /// Closed-loop synthesis state (None for open-loop replicas).
     closed: Option<ClosedLoop>,
     traffic: TrafficSpec,
@@ -490,6 +657,11 @@ struct Replica {
     tpot_violations: usize,
     /// Set once the run is provably SLO-infeasible; the drive loop exits.
     aborted: bool,
+    /// The run's SLO, for online goodput accounting in sketched mode.
+    slo: SloSpec,
+    /// Bounded-memory tail accounting, engaged when the run offers more
+    /// than [`SimConfig::tail_cap`] requests; `done` stays empty then.
+    tally: Option<TailTally>,
     done: Vec<ReqStats>,
     now: f64,
     first_arrival: Option<f64>,
@@ -502,15 +674,19 @@ struct Replica {
     rejected: usize,
 }
 
-impl Replica {
+impl<'a> Replica<'a> {
+    #[allow(clippy::too_many_arguments)]
     fn new(
         cfg: &SimConfig,
         traffic: &TrafficSpec,
-        pending: VecDeque<Arrival>,
+        mut source: Box<dyn Iterator<Item = Arrival> + 'a>,
         closed: Option<ClosedLoop>,
         id_base: u64,
         abort: Option<AbortRule>,
-    ) -> Replica {
+        slo: &SloSpec,
+        sketched: bool,
+    ) -> Replica<'a> {
+        let pending = source.next();
         Replica {
             cfg: *cfg,
             kv_slots: if cfg.paged_kv {
@@ -519,6 +695,7 @@ impl Replica {
                 cfg.kv.concurrency(cfg.max_slots)
             },
             ledger: cfg.paged_kv.then(|| cfg.kv.ledger()),
+            source,
             pending,
             closed,
             traffic: *traffic,
@@ -533,6 +710,8 @@ impl Replica {
             ttft_violations: 0,
             tpot_violations: 0,
             aborted: false,
+            slo: *slo,
+            tally: sketched.then(TailTally::new),
             done: Vec::new(),
             now: 0.0,
             first_arrival: None,
@@ -574,10 +753,14 @@ impl Replica {
         queued + live
     }
 
-    /// Move every self-generated arrival with `at_s <= now` into the queue.
+    /// Move every self-generated arrival with `at_s <= now` into the queue,
+    /// pulling lazily from the source through the one-item lookahead.
     fn materialize(&mut self) {
-        while self.pending.front().map(|a| a.at_s <= self.now).unwrap_or(false) {
-            let a = self.pending.pop_front().unwrap();
+        while let Some(a) = self.pending {
+            if a.at_s > self.now {
+                break;
+            }
+            self.pending = self.source.next();
             self.first_arrival.get_or_insert(a.at_s);
             self.queue.push_back((a, None));
         }
@@ -601,7 +784,7 @@ impl Replica {
 
     /// Next future self-generated arrival instant, if any.
     fn next_internal_arrival(&self) -> Option<f64> {
-        let open = self.pending.front().map(|a| a.at_s);
+        let open = self.pending.map(|a| a.at_s);
         let cl = self.closed.as_ref().and_then(ClosedLoop::next_ready);
         match (open, cl) {
             (Some(a), Some(b)) => Some(a.min(b)),
@@ -672,7 +855,10 @@ impl Replica {
                 self.aborted = true;
             }
         }
-        self.done.push(stats);
+        match self.tally.as_mut() {
+            Some(t) => t.record(&stats, &self.slo),
+            None => self.done.push(stats),
+        }
         self.last_finish = self.last_finish.max(self.now);
         self.free_list.push(Reverse(idx));
         self.live_count -= 1;
@@ -846,6 +1032,122 @@ impl Replica {
         k
     }
 
+    /// Quantized-time sibling of [`Replica::fast_forward`]: the same
+    /// uniform-stretch preconditions and the same event bounds, but the
+    /// iteration count `k` to the next event is computed in closed form
+    /// and the clock advances by one fused `k·step` add — O(1) in the
+    /// stretch length instead of O(k). At most
+    /// [`SimConfig::quantum`] seconds of virtual time advance per jump.
+    ///
+    /// Epsilon contract (property-tested, see the module docs): ceil
+    /// division lands each event within one iteration of where the
+    /// reference path's repeated adds put it, so per-request latencies
+    /// differ by at most one decode step plus the float error of `k·step`
+    /// versus `k` sequential adds (O(k) ulps). An undershoot caused by
+    /// that rounding only costs another (shorter) jump at the next
+    /// decision point — progress is guaranteed because `k >= 1` and the
+    /// clock strictly advances by at least one step.
+    fn quantized_forward(&mut self, horizon: f64) -> usize {
+        // Stop one short of the earliest completion, as fast_forward does:
+        // the completion iteration itself runs the full path.
+        let max_k = match self.slots.iter().flatten().map(|s| s.remaining).min() {
+            Some(r) if r > 1 => r - 1,
+            _ => return 0,
+        };
+        let step = self.cfg.cost.decode_step_s;
+        if !step.is_finite() || step <= 0.0 {
+            return 0;
+        }
+        // Iterations until the clock reaches `target` (>= 1: the caller's
+        // decision point already cleared the current instant).
+        let now = self.now;
+        let until = |target: f64| -> usize {
+            if !target.is_finite() {
+                return usize::MAX;
+            }
+            let d = target - now;
+            if d <= 0.0 {
+                return 1;
+            }
+            let k = (d / step).ceil();
+            if k >= usize::MAX as f64 {
+                usize::MAX
+            } else {
+                (k as usize).max(1)
+            }
+        };
+        let next_arrival = self.next_internal_arrival().unwrap_or(f64::INFINITY);
+        let per_jump = if self.cfg.quantum.is_finite() {
+            let cap = (self.cfg.quantum / step).floor();
+            if cap >= usize::MAX as f64 {
+                usize::MAX
+            } else {
+                (cap as usize).max(1)
+            }
+        } else {
+            usize::MAX
+        };
+        let k = max_k.min(until(horizon)).min(until(next_arrival)).min(per_jump);
+        let dt = k as f64 * step;
+        self.now += dt;
+        self.busy_time += dt;
+        self.busy_slot_time += self.live_count as f64 * dt;
+        self.iterations += k as u64;
+        self.peak_live = self.peak_live.max(self.live_count);
+        for s in self.slots.iter_mut().flatten() {
+            s.tokens += k;
+            s.remaining -= k;
+            if let Some(l) = self.ledger.as_mut() {
+                l.append_n(s.id, k);
+            }
+        }
+        if let Some(l) = &self.ledger {
+            self.peak_kv_tokens = self.peak_kv_tokens.max(l.peak_resident_tokens());
+        }
+        k
+    }
+
+    /// Queued requests that have *already* out-waited a finite TTFT
+    /// target: their first token cannot precede `now`, so their final
+    /// TTFT provably exceeds the target before they complete — a sound
+    /// lower bound on eventual violators, disjoint from the completed
+    /// counters (queued means not completed). Open-loop queues are
+    /// `(at_s, id)`-ordered, so the violators are a queue prefix found by
+    /// binary search; closed-loop queues interleave client ready times
+    /// out of order and fall back to completed-violator counting only
+    /// (their queue depth is bounded by the client count anyway).
+    fn queued_ttft_violators(&self, ttft_s: f64) -> usize {
+        if self.closed.is_some() || !ttft_s.is_finite() || self.queue.is_empty() {
+            return 0;
+        }
+        // `now - at_s > target` is computed directly (not rearranged) so
+        // float rounding cannot overcount; it is monotone non-increasing
+        // along the sorted queue, so violators form a prefix.
+        let (mut lo, mut hi) = (0usize, self.queue.len());
+        while lo < hi {
+            let mid = lo + (hi - lo) / 2;
+            if self.now - self.queue[mid].0.at_s > ttft_s {
+                lo = mid + 1;
+            } else {
+                hi = mid;
+            }
+        }
+        lo
+    }
+
+    /// Local early-abort check on completed + in-flight TTFT violators.
+    /// A run that meets its SLO never trips this (the lower bound is at
+    /// most the final violator count, which stays under the budget), so
+    /// passing reports are unchanged by the in-flight extension.
+    fn ttft_wait_infeasible(&self) -> bool {
+        match self.abort {
+            Some(rule) => {
+                self.ttft_violations + self.queued_ttft_violators(rule.ttft_s) >= rule.budget
+            }
+            None => false,
+        }
+    }
+
     /// Drive this replica's policy loop, running every iteration that
     /// starts strictly before `horizon` (`INFINITY` = drain to
     /// completion). Returns when blocked on arrivals the replica does not
@@ -860,6 +1162,10 @@ impl Replica {
             self.materialize();
             self.reject_unservable();
             if self.aborted {
+                return;
+            }
+            if self.ttft_wait_infeasible() {
+                self.aborted = true;
                 return;
             }
             let live = self.occupied();
@@ -904,12 +1210,18 @@ impl Replica {
                     // re-decide there (the event may admit, complete, or
                     // end the horizon), unless the reference stepping was
                     // requested or the policy gives no stability contract.
-                    if !self.cfg.reference_step
-                        && self.prefilling == 0
-                        && policy.decode_stable()
-                        && self.fast_forward(horizon) > 0
+                    // Quantized mode takes the O(1) closed-form jump
+                    // instead of the bit-exact O(k) replay.
+                    if !self.cfg.reference_step && self.prefilling == 0 && policy.decode_stable()
                     {
-                        continue;
+                        let jumped = if self.cfg.quantum > 0.0 {
+                            self.quantized_forward(horizon)
+                        } else {
+                            self.fast_forward(horizon)
+                        };
+                        if jumped > 0 {
+                            continue;
+                        }
                     }
                     self.run_iteration(0)
                 }
@@ -946,17 +1258,26 @@ impl Replica {
 /// Fleet-wide early-abort check: some replica already aborted locally, or
 /// the *summed* violation counters prove the final p99 over the target
 /// even though no single replica's share crosses the budget on its own.
-fn fleet_infeasible(reps: &[Replica], rule: &AbortRule) -> bool {
+/// TTFT sums include each replica's in-flight lower bound
+/// ([`Replica::queued_ttft_violators`]) — queued requests that have
+/// already out-waited the target at their replica's clock.
+fn fleet_infeasible(reps: &[Replica<'_>], rule: &AbortRule) -> bool {
     reps.iter().any(|r| r.aborted)
-        || reps.iter().map(|r| r.ttft_violations).sum::<usize>() >= rule.budget
+        || reps
+            .iter()
+            .map(|r| r.ttft_violations + r.queued_ttft_violators(rule.ttft_s))
+            .sum::<usize>()
+            >= rule.budget
         || reps.iter().map(|r| r.tpot_violations).sum::<usize>() >= rule.budget
 }
 
 /// Merge per-replica outcomes into one report. `fleet_aborted` marks an
 /// early abort the *router* decided on fleet-wide violation counts (a
-/// replica-local abort is carried by the replica itself).
+/// replica-local abort is carried by the replica itself). Sketched
+/// replicas merge their tail tallies (exactly — bucket counts add)
+/// instead of concatenating per-request vectors.
 fn aggregate(
-    replicas: Vec<Replica>,
+    replicas: Vec<Replica<'_>>,
     policy: &str,
     offered: usize,
     slo: &SloSpec,
@@ -965,6 +1286,7 @@ fn aggregate(
     let n = replicas.len().max(1);
     let max_slots = replicas.first().map(|r| r.cfg.max_slots).unwrap_or(1);
     let mut done: Vec<ReqStats> = Vec::new();
+    let mut tally: Option<TailTally> = None;
     let mut first_arrival: Option<f64> = None;
     let mut last_finish = 0.0f64;
     let (mut busy_slot_time, mut busy_time) = (0.0f64, 0.0f64);
@@ -976,6 +1298,12 @@ fn aggregate(
         rejected += r.rejected;
         aborted_early |= r.aborted;
         done.extend(r.done);
+        if let Some(t) = r.tally {
+            match tally.as_mut() {
+                Some(m) => m.merge(&t),
+                None => tally = Some(t),
+            }
+        }
         first_arrival = match (first_arrival, r.first_arrival) {
             (Some(a), Some(b)) => Some(a.min(b)),
             (a, b) => a.or(b),
@@ -986,6 +1314,49 @@ fn aggregate(
         iterations += r.iterations;
         peak_live = peak_live.max(r.peak_live);
         peak_kv = peak_kv.max(r.peak_kv_tokens);
+    }
+    if let Some(t) = tally {
+        // Bounded-memory path: tails from the merged fleet sketch, no
+        // per-request records (entry points engage the tally on every
+        // replica of a run or none, so `done` is empty here).
+        debug_assert!(done.is_empty(), "mixed exact/sketched replicas in one run");
+        let makespan = (last_finish - first_arrival.unwrap_or(0.0)).max(0.0);
+        return ServeReport {
+            policy: policy.to_string(),
+            replicas: n,
+            offered,
+            completed: t.completed,
+            tokens: t.tokens,
+            makespan_s: makespan,
+            tokens_per_s: if makespan > 0.0 { t.tokens as f64 / makespan } else { 0.0 },
+            goodput_tokens_per_s: if makespan > 0.0 {
+                t.good_tokens as f64 / makespan
+            } else {
+                0.0
+            },
+            slo_met_frac: if t.completed == 0 {
+                0.0
+            } else {
+                t.met as f64 / t.completed as f64
+            },
+            ttft_p50_s: t.ttft.quantile(50.0),
+            ttft_p99_s: t.ttft.quantile(99.0),
+            tpot_p50_s: t.tpot.quantile(50.0),
+            tpot_p99_s: t.tpot.quantile(99.0),
+            total_p50_s: t.total.quantile(50.0),
+            total_p99_s: t.total.quantile(99.0),
+            occupancy: if busy_time > 0.0 {
+                busy_slot_time / (busy_time * max_slots as f64)
+            } else {
+                0.0
+            },
+            iterations,
+            peak_live,
+            peak_kv_tokens: peak_kv,
+            rejected,
+            aborted_early,
+            per_request: Vec::new(),
+        };
     }
     done.sort_by_key(|r| r.id);
     // One sort per metric vector (the batch API), not one per quantile.
@@ -1045,14 +1416,16 @@ fn closed_loop_state(traffic: &TrafficSpec, clients: usize, budget: usize) -> Cl
 /// Drive a policy over a traffic spec and report the serving tails.
 ///
 /// Deterministic in `(cfg, policy, traffic, slo)`: the virtual clock only
-/// advances by analytic iteration costs and seeded arrival draws.
+/// advances by analytic iteration costs and seeded arrival draws. The
+/// arrivals stream from [`open_loop_iter`] — which yields exactly the
+/// [`open_loop_trace`] order — so the trace is never materialized.
 pub fn simulate_trace(
     cfg: &SimConfig,
     policy: &mut dyn Policy,
     traffic: &TrafficSpec,
     slo: &SloSpec,
 ) -> ServeReport {
-    simulate_trace_on(cfg, policy, traffic, &open_loop_trace(traffic), slo)
+    simulate_trace_stream(cfg, policy, traffic, traffic.requests, open_loop_iter(traffic), slo)
 }
 
 /// [`simulate_trace`] over a pre-materialized open-loop arrival list — the
@@ -1072,18 +1445,49 @@ pub fn simulate_trace_on(
     trace: &[Arrival],
     slo: &SloSpec,
 ) -> ServeReport {
-    let pending: VecDeque<Arrival> = trace.to_vec().into();
+    simulate_trace_stream(cfg, policy, traffic, traffic.requests, trace.iter().copied(), slo)
+}
+
+/// Streaming variant of [`simulate_trace_on`]: drives one replica off any
+/// `(at_s, id)`-ordered arrival iterator, merged lazily with the event
+/// loop through a one-item lookahead — the source is pulled only as
+/// virtual time reaches each arrival and is never materialized. `offered`
+/// is the total request count the source will yield (synthetic specs know
+/// it from `traffic.requests`; trace files from their validation pass) —
+/// the early-abort budget and completion accounting need it up front.
+/// Closed-loop specs ignore the source, as with [`simulate_trace_on`].
+pub fn simulate_trace_stream<I>(
+    cfg: &SimConfig,
+    policy: &mut dyn Policy,
+    traffic: &TrafficSpec,
+    offered: usize,
+    source: I,
+    slo: &SloSpec,
+) -> ServeReport
+where
+    I: IntoIterator<Item = Arrival>,
+{
     let closed = match traffic.arrival {
         ArrivalProcess::ClosedLoop { clients, .. } => {
-            Some(closed_loop_state(traffic, clients.max(1), traffic.requests))
+            Some(closed_loop_state(traffic, clients.max(1), offered))
         }
         _ => None,
     };
-    let abort = AbortRule::new(cfg, traffic.requests, slo);
-    let mut replica = Replica::new(cfg, traffic, pending, closed, 0, abort);
+    let abort = AbortRule::new(cfg, offered, slo);
+    let sketched = offered > cfg.tail_cap;
+    let mut replica = Replica::new(
+        cfg,
+        traffic,
+        Box::new(source.into_iter()),
+        closed,
+        0,
+        abort,
+        slo,
+        sketched,
+    );
     replica.advance(policy, f64::INFINITY);
     let name = policy.name().to_string();
-    aggregate(vec![replica], &name, traffic.requests, slo, false)
+    aggregate(vec![replica], &name, offered, slo, false)
 }
 
 /// Simulate `replicas` independent copies of the same design behind a
@@ -1107,7 +1511,16 @@ pub fn simulate_replicated<P: Policy + Clone>(
     traffic: &TrafficSpec,
     slo: &SloSpec,
 ) -> ServeReport {
-    simulate_replicated_on(cfg, replicas, route, policy, traffic, &open_loop_trace(traffic), slo)
+    simulate_replicated_stream(
+        cfg,
+        replicas,
+        route,
+        policy,
+        traffic,
+        traffic.requests,
+        open_loop_iter(traffic),
+        slo,
+    )
 }
 
 /// [`simulate_replicated`] over a pre-materialized open-loop arrival list
@@ -1123,16 +1536,49 @@ pub fn simulate_replicated_on<P: Policy + Clone>(
     trace: &[Arrival],
     slo: &SloSpec,
 ) -> ServeReport {
+    simulate_replicated_stream(
+        cfg,
+        replicas,
+        route,
+        policy,
+        traffic,
+        traffic.requests,
+        trace.iter().copied(),
+        slo,
+    )
+}
+
+/// Streaming variant of [`simulate_replicated_on`]: the router pulls
+/// arrivals one at a time from any `(at_s, id)`-ordered iterator —
+/// synthetic ([`open_loop_iter`]) or a trace-file replay — so fleet-scale
+/// traces cost O(1) memory. `offered` is the total count the source will
+/// yield (see [`simulate_trace_stream`]).
+#[allow(clippy::too_many_arguments)]
+pub fn simulate_replicated_stream<P, I>(
+    cfg: &SimConfig,
+    replicas: usize,
+    route: RoutePolicy,
+    policy: &P,
+    traffic: &TrafficSpec,
+    offered: usize,
+    source: I,
+    slo: &SloSpec,
+) -> ServeReport
+where
+    P: Policy + Clone,
+    I: IntoIterator<Item = Arrival>,
+{
     let n = replicas.max(1);
     if n == 1 {
         let mut p = policy.clone();
-        return simulate_trace_on(cfg, &mut p, traffic, trace, slo);
+        return simulate_trace_stream(cfg, &mut p, traffic, offered, source, slo);
     }
     // Every replica carries the *fleet-wide* violation budget — its own
     // violators alone crossing it is sufficient (the fleet total can only
     // be larger), so replica-local aborts stay sound; the router below
     // additionally aborts on the fleet total between arrivals.
-    let abort = AbortRule::new(cfg, traffic.requests, slo);
+    let abort = AbortRule::new(cfg, offered, slo);
+    let sketched = offered > cfg.tail_cap;
     let mut pols: Vec<P> = (0..n).map(|_| policy.clone()).collect();
     let mut reps: Vec<Replica> = Vec::with_capacity(n);
     let label = |p: &P| format!("{} x{} {}", p.name(), n, route.name());
@@ -1147,13 +1593,22 @@ pub fn simulate_replicated_on<P: Policy + Clone>(
         for r in 0..n {
             let clients_r = clients / n + usize::from(r < clients % n);
             let budget_r = if r < active {
-                traffic.requests / active + usize::from(r < traffic.requests % active)
+                offered / active + usize::from(r < offered % active)
             } else {
                 0
             };
             let closed = closed_loop_state(traffic, clients_r, budget_r);
             let id_base = (r as u64) << 32;
-            reps.push(Replica::new(cfg, traffic, VecDeque::new(), Some(closed), id_base, abort));
+            reps.push(Replica::new(
+                cfg,
+                traffic,
+                Box::new(std::iter::empty()),
+                Some(closed),
+                id_base,
+                abort,
+                slo,
+                sketched,
+            ));
         }
         // Each replica runs its whole partition in one drain, so check the
         // fleet counters between drains: once one replica's run (or the
@@ -1170,15 +1625,24 @@ pub fn simulate_replicated_on<P: Policy + Clone>(
             reps[i].advance(&mut pols[i], f64::INFINITY);
         }
         let name = label(policy);
-        return aggregate(reps, &name, traffic.requests, slo, fleet_aborted);
+        return aggregate(reps, &name, offered, slo, fleet_aborted);
     }
 
     for _ in 0..n {
-        reps.push(Replica::new(cfg, traffic, VecDeque::new(), None, 0, abort));
+        reps.push(Replica::new(
+            cfg,
+            traffic,
+            Box::new(std::iter::empty()),
+            None,
+            0,
+            abort,
+            slo,
+            sketched,
+        ));
     }
     let mut rr_next = 0usize;
     let mut fleet_aborted = false;
-    for a in trace.iter().copied() {
+    for a in source {
         // Bring the whole fleet up to the arrival instant so the router
         // sees each replica's queue as of `a.at_s`.
         for (rep, pol) in reps.iter_mut().zip(pols.iter_mut()) {
@@ -1223,7 +1687,17 @@ pub fn simulate_replicated_on<P: Policy + Clone>(
         }
     }
     let name = label(policy);
-    aggregate(reps, &name, traffic.requests, slo, fleet_aborted)
+    aggregate(reps, &name, offered, slo, fleet_aborted)
+}
+
+/// A report for a run that could not happen (e.g. a validated trace file
+/// that became unreadable before simulation): zero completions out of
+/// `offered`, so [`ServeReport::meets`] is false — the conservative
+/// verdict.
+pub(crate) fn unserved_report(policy: &str, replicas: usize, offered: usize) -> ServeReport {
+    let mut r = aggregate(Vec::new(), policy, offered, &SloSpec::unconstrained(), false);
+    r.replicas = replicas.max(1);
+    r
 }
 
 #[cfg(test)]
@@ -1844,5 +2318,261 @@ mod tests {
         );
         assert_eq!(rep.completed, 20);
         assert_eq!(rep.peak_live, 1, "one client => one in-flight request");
+    }
+
+    /// The lazy generator must yield exactly the materialized trace, bit
+    /// for bit and in the same (time, id) order, for both open-loop
+    /// processes — the streaming entry points rest on this identity.
+    #[test]
+    fn open_loop_iter_matches_collected_trace() {
+        let specs = [
+            TrafficSpec::poisson(80.0, 200, 16, 4, 32).with_seed(11),
+            TrafficSpec {
+                arrival: ArrivalProcess::Bursty { rps: 80.0, burst: 7 },
+                ..TrafficSpec::poisson(80.0, 200, 16, 4, 32)
+            }
+            .with_seed(11),
+        ];
+        for t in &specs {
+            let eager = open_loop_trace(t);
+            let lazy: Vec<Arrival> = open_loop_iter(t).collect();
+            assert_eq!(eager.len(), lazy.len());
+            for (a, b) in eager.iter().zip(&lazy) {
+                assert_eq!(a.id, b.id);
+                assert_eq!(a.at_s.to_bits(), b.at_s.to_bits());
+                assert_eq!(a.prompt_tokens, b.prompt_tokens);
+                assert_eq!(a.new_tokens, b.new_tokens);
+            }
+        }
+        // Closed loops self-generate inside the replica: the iterator is
+        // empty by contract, like `open_loop_trace`.
+        let closed = TrafficSpec::closed_loop(4, 0.01, 50, 8, 4, 8);
+        assert_eq!(open_loop_iter(&closed).count(), 0);
+        assert!(open_loop_trace(&closed).is_empty());
+    }
+
+    /// The streaming entry points fed the materialized trace must replay
+    /// the slice entry points to the bit.
+    #[test]
+    fn stream_entry_points_match_slice_entry_points() {
+        let t = TrafficSpec {
+            arrival: ArrivalProcess::Bursty { rps: 60.0, burst: 5 },
+            ..TrafficSpec::poisson(60.0, 150, 16, 4, 32)
+        }
+        .with_seed(41);
+        let trace = open_loop_trace(&t);
+        let slo = SloSpec::unconstrained();
+        let a = simulate_trace_on(&cfg(4), &mut ContinuousBatch, &t, &trace, &slo);
+        let b = simulate_trace_stream(
+            &cfg(4),
+            &mut ContinuousBatch,
+            &t,
+            t.requests,
+            trace.iter().copied(),
+            &slo,
+        );
+        assert_eq!(a.fingerprint(), b.fingerprint());
+        let a = simulate_replicated_on(
+            &cfg(4),
+            2,
+            RoutePolicy::JsqTokens,
+            &ContinuousBatch,
+            &t,
+            &trace,
+            &slo,
+        );
+        let b = simulate_replicated_stream(
+            &cfg(4),
+            2,
+            RoutePolicy::JsqTokens,
+            &ContinuousBatch,
+            &t,
+            t.requests,
+            trace.iter().copied(),
+            &slo,
+        );
+        assert_eq!(a.fingerprint(), b.fingerprint());
+    }
+
+    /// Quantized-time mode against the bit-exact default across arrival
+    /// processes, KV accounting modes, and replica counts: identical
+    /// completion/token/rejection counts, and every latency tail within
+    /// the documented bound `2·decode_step + 1e-6·|reference|`.
+    #[test]
+    fn quantized_mode_stays_within_the_documented_epsilon() {
+        let close = |q: f64, r: f64, step: f64, what: &str| {
+            assert!(
+                (q - r).abs() <= 2.0 * step + 1e-6 * r.abs(),
+                "{what}: quantized {q} vs reference {r} (step {step})"
+            );
+        };
+        let specs = [
+            TrafficSpec::poisson(20.0, 150, 16, 8, 64).with_seed(5),
+            TrafficSpec {
+                arrival: ArrivalProcess::Bursty { rps: 20.0, burst: 6 },
+                ..TrafficSpec::poisson(20.0, 150, 16, 8, 64)
+            }
+            .with_seed(5),
+            TrafficSpec::closed_loop(6, 0.002, 120, 16, 8, 64).with_seed(5),
+        ];
+        for t in &specs {
+            for paged in [false, true] {
+                for replicas in [1usize, 2] {
+                    let mut exact = cfg(4);
+                    if paged {
+                        exact.kv = KvBudget::tokens(4096, 16);
+                        exact.paged_kv = true;
+                    }
+                    let mut quant = exact;
+                    quant.quantum = 0.05; // 5 decode steps per jump
+                    let run = |c: &SimConfig| {
+                        simulate_replicated(
+                            c,
+                            replicas,
+                            RoutePolicy::RoundRobin,
+                            &ContinuousBatch,
+                            t,
+                            &SloSpec::unconstrained(),
+                        )
+                    };
+                    let r = run(&exact);
+                    let q = run(&quant);
+                    let tag = format!("paged={paged} replicas={replicas} {:?}", t.arrival);
+                    assert_eq!(r.completed, q.completed, "{tag}");
+                    assert_eq!(r.tokens, q.tokens, "{tag}");
+                    assert_eq!(r.rejected, q.rejected, "{tag}");
+                    // The per-request epsilon is a replay contract: it
+                    // binds when the arrival sequence is exogenous. A
+                    // closed loop feeds completions back into its own
+                    // arrivals, so a one-iteration completion shift can
+                    // relabel which client draws which token budget —
+                    // counts above stay exact, tails need only be sane.
+                    if matches!(t.arrival, ArrivalProcess::ClosedLoop { .. }) {
+                        assert!(q.ttft_p99_s.is_finite() && q.ttft_p99_s >= 0.0, "{tag}");
+                        continue;
+                    }
+                    let step = exact.cost.decode_step_s;
+                    close(q.ttft_p50_s, r.ttft_p50_s, step, &tag);
+                    close(q.ttft_p99_s, r.ttft_p99_s, step, &tag);
+                    close(q.tpot_p50_s, r.tpot_p50_s, step, &tag);
+                    close(q.tpot_p99_s, r.tpot_p99_s, step, &tag);
+                    close(q.total_p99_s, r.total_p99_s, step, &tag);
+                    close(q.makespan_s, r.makespan_s, step, &tag);
+                }
+            }
+        }
+    }
+
+    /// A quantum so large it never splits a stretch takes the same jumps
+    /// as fast-forward up to float rounding (`k·step` fused vs `k`
+    /// sequential adds): identical completion and token counts, and the
+    /// clock within the documented epsilon.
+    #[test]
+    fn oversized_quantum_degenerates_to_fast_forward_jumps() {
+        let t = TrafficSpec::poisson(10.0, 100, 16, 8, 64).with_seed(23);
+        let mut quant = cfg(4);
+        quant.quantum = 1e9;
+        let a = simulate_trace(&cfg(4), &mut ContinuousBatch, &t, &SloSpec::unconstrained());
+        let b = simulate_trace(&quant, &mut ContinuousBatch, &t, &SloSpec::unconstrained());
+        assert_eq!(a.completed, b.completed);
+        assert_eq!(a.tokens, b.tokens);
+        let step = quant.cost.decode_step_s;
+        assert!(
+            (a.makespan_s - b.makespan_s).abs() <= 2.0 * step + 1e-6 * a.makespan_s.abs(),
+            "makespan {} vs {}",
+            a.makespan_s,
+            b.makespan_s
+        );
+    }
+
+    /// Dropping `tail_cap` below the offered count flips aggregation to
+    /// the sketch: counts and throughput stay exact, per-request records
+    /// are dropped, and every tail lands within the sketch's relative
+    /// accuracy of the exact order statistic.
+    #[test]
+    fn sketched_tails_track_exact_percentiles() {
+        let t = TrafficSpec::poisson(40.0, 400, 16, 1, 256).with_seed(29);
+        let exact = simulate_trace(&cfg(8), &mut ContinuousBatch, &t, &SloSpec::unconstrained());
+        let mut c = cfg(8);
+        c.tail_cap = 100; // offered 400 > cap => sketched
+        let sk = simulate_trace(&c, &mut ContinuousBatch, &t, &SloSpec::unconstrained());
+        assert_eq!(sk.completed, exact.completed);
+        assert_eq!(sk.tokens, exact.tokens);
+        assert_eq!(sk.offered, exact.offered);
+        assert!(sk.per_request.is_empty(), "sketched mode must not hold samples");
+        assert!(!exact.per_request.is_empty());
+        let alpha = crate::util::stats::SKETCH_DEFAULT_ALPHA;
+        for (q, r, what) in [
+            (sk.ttft_p50_s, exact.ttft_p50_s, "ttft p50"),
+            (sk.ttft_p99_s, exact.ttft_p99_s, "ttft p99"),
+            (sk.tpot_p50_s, exact.tpot_p50_s, "tpot p50"),
+            (sk.tpot_p99_s, exact.tpot_p99_s, "tpot p99"),
+            (sk.total_p50_s, exact.total_p50_s, "total p50"),
+            (sk.total_p99_s, exact.total_p99_s, "total p99"),
+        ] {
+            assert!(
+                (q - r).abs() <= 2.0 * alpha * r.abs() + 1e-12,
+                "{what}: sketch {q} vs exact {r}"
+            );
+        }
+        // The replicated merge path: per-replica sketches folded together
+        // must agree with the fleet-exact tails to the same bound.
+        let fleet_exact = simulate_replicated(
+            &cfg(8),
+            2,
+            RoutePolicy::RoundRobin,
+            &ContinuousBatch,
+            &t,
+            &SloSpec::unconstrained(),
+        );
+        let fleet_sk = simulate_replicated(
+            &c,
+            2,
+            RoutePolicy::RoundRobin,
+            &ContinuousBatch,
+            &t,
+            &SloSpec::unconstrained(),
+        );
+        assert_eq!(fleet_sk.completed, fleet_exact.completed);
+        assert_eq!(fleet_sk.tokens, fleet_exact.tokens);
+        assert!(
+            (fleet_sk.ttft_p99_s - fleet_exact.ttft_p99_s).abs()
+                <= 2.0 * alpha * fleet_exact.ttft_p99_s.abs() + 1e-12,
+            "merged fleet sketch p99 {} vs exact {}",
+            fleet_sk.ttft_p99_s,
+            fleet_exact.ttft_p99_s
+        );
+    }
+
+    /// In-flight TTFT lower bound: requests already waiting past the
+    /// target count against the violation budget *before* they are served,
+    /// so a one-slot replica drowning in queue aborts long before it
+    /// grinds through every stranded request — and a generous target
+    /// still replays the full run bit for bit.
+    #[test]
+    fn in_flight_ttft_wait_aborts_hopeless_queues() {
+        // One slot, one enormous resident request: everyone behind it
+        // waits ~20 virtual seconds against a 0.5 s TTFT target.
+        let t = TrafficSpec::poisson(1e6, 50, 8, 2000, 2000).with_seed(2);
+        let tight = SloSpec::new(0.5, f64::INFINITY);
+        let full = simulate_trace(&cfg(1), &mut ContinuousBatch, &t, &tight);
+        let mut c = cfg(1);
+        c.early_abort = true;
+        let aborted = simulate_trace(&c, &mut ContinuousBatch, &t, &tight);
+        assert!(!full.meets(&tight) && !aborted.meets(&tight), "verdicts must agree");
+        assert!(aborted.aborted_early);
+        assert!(
+            aborted.iterations < full.iterations,
+            "queue-wait bound must abort early: {} vs {}",
+            aborted.iterations,
+            full.iterations
+        );
+        assert!(aborted.completed < aborted.offered);
+        // A target no queued request can violate never trips the bound.
+        let loose = SloSpec::new(1e6, f64::INFINITY);
+        let a = simulate_trace(&cfg(1), &mut ContinuousBatch, &t, &loose);
+        let b = simulate_trace(&c, &mut ContinuousBatch, &t, &loose);
+        assert!(!b.aborted_early);
+        assert_eq!(a.fingerprint(), b.fingerprint());
     }
 }

@@ -10,12 +10,15 @@
 //! * [`events`] — discrete-event *serving* simulation: synthetic arrival
 //!   traces through a [`crate::sched::Policy`] at the analytic iteration
 //!   latencies, reporting TTFT/TPOT tails, occupancy and goodput.
+//! * [`trace`] — streaming ingestion of real request traces
+//!   (`serve-sim --trace-file`), validated once, replayed lazily.
 
 pub mod allreduce;
 pub mod events;
 pub mod kernels;
 pub mod pipeline;
 pub mod simulator;
+pub mod trace;
 
 pub use events::{simulate_trace, IterCost, ServeReport, SimConfig};
 pub use simulator::{simulate, simulate_cached, DecodePerf};

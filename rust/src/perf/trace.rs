@@ -1,0 +1,259 @@
+//! Streaming request-trace ingestion for the serving simulator
+//! (`ccloud serve-sim --trace-file <csv>`).
+//!
+//! Trace format — CSV with a mandatory header, one row per request:
+//!
+//! ```csv
+//! at_s,prompt_tokens,new_tokens
+//! 0.000,128,64
+//! 0.013,256,32
+//! ```
+//!
+//! * `at_s` — arrival time in seconds, finite, `>= 0`, **non-decreasing**
+//!   (the simulator merges the trace lazily with its event loop and never
+//!   re-sorts it);
+//! * `prompt_tokens` — prompt length in tokens (`>= 0`);
+//! * `new_tokens` — tokens to generate (`>= 1`).
+//!
+//! Request ids are assigned by row order. Malformed rows (wrong field
+//! count, bad numbers, time going backwards, CSV quoting errors) are
+//! reported as `path: line N: message`.
+//!
+//! [`TraceFile::open`] makes one streaming validation pass that checks
+//! every row and counts them — the simulator needs the offered request
+//! count up front (early-abort budgets, completion accounting) but the
+//! rows themselves are only pulled on demand: [`TraceFile::arrivals`]
+//! re-reads the file lazily, so a 10M-request trace costs two sequential
+//! scans and O(1) memory, never a materialized `Vec`.
+
+use std::fs::File;
+use std::io::BufReader;
+use std::path::{Path, PathBuf};
+
+use crate::perf::events::Arrival;
+use crate::util::csv::CsvReader;
+
+/// The mandatory header row of a trace file.
+pub const TRACE_HEADER: [&str; 3] = ["at_s", "prompt_tokens", "new_tokens"];
+
+/// A validated on-disk arrival trace: path plus the row count from the
+/// validation pass.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct TraceFile {
+    path: PathBuf,
+    requests: usize,
+}
+
+impl TraceFile {
+    /// Open and fully validate a trace file in one streaming pass.
+    /// Errors (missing file, bad header, malformed rows) are located
+    /// strings suitable for `Error::Config`.
+    pub fn open<P: AsRef<Path>>(path: P) -> Result<TraceFile, String> {
+        let path = path.as_ref().to_path_buf();
+        let mut rows = Rows::new(&path)?;
+        let mut requests = 0usize;
+        for row in &mut rows {
+            row?;
+            requests += 1;
+        }
+        if requests == 0 {
+            return Err(format!("{}: trace has a header but no request rows", path.display()));
+        }
+        Ok(TraceFile { path, requests })
+    }
+
+    /// Number of requests (rows) in the trace — the simulator's offered
+    /// count.
+    pub fn requests(&self) -> usize {
+        self.requests
+    }
+
+    /// The underlying path.
+    pub fn path(&self) -> &Path {
+        &self.path
+    }
+
+    /// A fresh lazy pass over the arrivals. Rows were validated by
+    /// [`TraceFile::open`]; if the file changed or vanished underneath,
+    /// opening errors here, and a row that turned malformed mid-iteration
+    /// ends the stream early — the run then completes fewer requests than
+    /// offered and reports infeasible, which is the conservative outcome.
+    pub fn arrivals(&self) -> Result<TraceArrivals, String> {
+        Ok(TraceArrivals { rows: Rows::new(&self.path)? })
+    }
+}
+
+/// Internal row-level iterator shared by the validation and replay passes.
+struct Rows {
+    reader: CsvReader<BufReader<File>>,
+    path: PathBuf,
+    last_at: f64,
+    next_id: u64,
+}
+
+impl Rows {
+    fn new(path: &Path) -> Result<Rows, String> {
+        let f = File::open(path)
+            .map_err(|e| format!("{}: cannot open trace file: {e}", path.display()))?;
+        let mut reader = CsvReader::new(BufReader::new(f));
+        match reader.next() {
+            None => {
+                return Err(format!(
+                    "{}: empty trace file (expected header '{}')",
+                    path.display(),
+                    TRACE_HEADER.join(",")
+                ))
+            }
+            Some(Err(e)) => return Err(format!("{}: {e}", path.display())),
+            Some(Ok((line, fields))) => {
+                if fields != TRACE_HEADER {
+                    return Err(format!(
+                        "{}: line {line}: expected header '{}' (got '{}')",
+                        path.display(),
+                        TRACE_HEADER.join(","),
+                        fields.join(",")
+                    ));
+                }
+            }
+        }
+        Ok(Rows { reader, path: path.to_path_buf(), last_at: f64::NEG_INFINITY, next_id: 0 })
+    }
+
+    fn row_err(&self, line: usize, msg: String) -> String {
+        format!("{}: line {line}: {msg}", self.path.display())
+    }
+
+    fn parse(&mut self, line: usize, fields: &[String]) -> Result<Arrival, String> {
+        if fields.len() != 3 {
+            return Err(self.row_err(
+                line,
+                format!("expected 3 fields ({}), got {}", TRACE_HEADER.join(","), fields.len()),
+            ));
+        }
+        let at_s: f64 = fields[0]
+            .trim()
+            .parse()
+            .map_err(|_| self.row_err(line, format!("at_s '{}' is not a number", fields[0])))?;
+        if !at_s.is_finite() || at_s < 0.0 {
+            return Err(self.row_err(line, format!("at_s {at_s} must be finite and >= 0")));
+        }
+        if at_s < self.last_at {
+            return Err(self.row_err(
+                line,
+                format!("at_s {at_s} goes backwards (previous row was {})", self.last_at),
+            ));
+        }
+        let prompt_tokens: usize = fields[1].trim().parse().map_err(|_| {
+            self.row_err(line, format!("prompt_tokens '{}' is not a non-negative integer", fields[1]))
+        })?;
+        let new_tokens: usize = fields[2].trim().parse().map_err(|_| {
+            self.row_err(line, format!("new_tokens '{}' is not a non-negative integer", fields[2]))
+        })?;
+        if new_tokens == 0 {
+            return Err(self.row_err(line, "new_tokens must be >= 1".into()));
+        }
+        self.last_at = at_s;
+        let id = self.next_id;
+        self.next_id += 1;
+        Ok(Arrival { id, at_s, prompt_tokens, new_tokens })
+    }
+}
+
+impl Iterator for Rows {
+    type Item = Result<Arrival, String>;
+
+    fn next(&mut self) -> Option<Self::Item> {
+        match self.reader.next()? {
+            Err(e) => Some(Err(format!("{}: {e}", self.path.display()))),
+            Ok((line, fields)) => Some(self.parse(line, &fields)),
+        }
+    }
+}
+
+/// Lazy arrival stream over a validated trace file — the trace-file
+/// producer behind the same iterator interface as
+/// [`crate::perf::events::open_loop_iter`].
+pub struct TraceArrivals {
+    rows: Rows,
+}
+
+impl Iterator for TraceArrivals {
+    type Item = Arrival;
+
+    fn next(&mut self) -> Option<Arrival> {
+        // Validated at open(); a file mutated mid-run degrades to a short
+        // (conservative) stream rather than a panic.
+        self.rows.next()?.ok()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::io::Write as _;
+    use std::sync::atomic::{AtomicU64, Ordering};
+
+    static UNIQ: AtomicU64 = AtomicU64::new(0);
+
+    fn write_temp(content: &str) -> PathBuf {
+        let n = UNIQ.fetch_add(1, Ordering::SeqCst);
+        let path = std::env::temp_dir()
+            .join(format!("ccloud-trace-test-{}-{n}.csv", std::process::id()));
+        let mut f = File::create(&path).unwrap();
+        f.write_all(content.as_bytes()).unwrap();
+        path
+    }
+
+    #[test]
+    fn valid_trace_counts_and_streams() {
+        let p = write_temp("at_s,prompt_tokens,new_tokens\n0.0,8,4\n0.5,16,1\n0.5,0,2\n");
+        let tf = TraceFile::open(&p).unwrap();
+        assert_eq!(tf.requests(), 3);
+        let got: Vec<Arrival> = tf.arrivals().unwrap().collect();
+        assert_eq!(got.len(), 3);
+        assert_eq!(got[0], Arrival { id: 0, at_s: 0.0, prompt_tokens: 8, new_tokens: 4 });
+        assert_eq!(got[1], Arrival { id: 1, at_s: 0.5, prompt_tokens: 16, new_tokens: 1 });
+        // Equal timestamps are fine (ties keep row order), prompt may be 0.
+        assert_eq!(got[2], Arrival { id: 2, at_s: 0.5, prompt_tokens: 0, new_tokens: 2 });
+        std::fs::remove_file(&p).ok();
+    }
+
+    #[test]
+    fn errors_are_located_by_path_and_line() {
+        let missing = std::env::temp_dir().join("ccloud-trace-test-does-not-exist.csv");
+        let e = TraceFile::open(&missing).unwrap_err();
+        assert!(e.contains("cannot open trace file"), "{e}");
+        assert!(e.contains("ccloud-trace-test-does-not-exist.csv"), "{e}");
+
+        for (body, needle, line) in [
+            ("", "empty trace file", 0),
+            ("wrong,header,row\n0.0,1,1\n", "expected header", 1),
+            ("at_s,prompt_tokens,new_tokens\n", "no request rows", 0),
+            ("at_s,prompt_tokens,new_tokens\n0.0,8\n", "expected 3 fields", 2),
+            ("at_s,prompt_tokens,new_tokens\noops,8,4\n", "is not a number", 2),
+            ("at_s,prompt_tokens,new_tokens\n-1.0,8,4\n", "must be finite and >= 0", 2),
+            ("at_s,prompt_tokens,new_tokens\n1.0,8,4\n0.5,8,4\n", "goes backwards", 3),
+            ("at_s,prompt_tokens,new_tokens\n0.0,-3,4\n", "non-negative integer", 2),
+            ("at_s,prompt_tokens,new_tokens\n0.0,8,0\n", "new_tokens must be >= 1", 2),
+            ("at_s,prompt_tokens,new_tokens\n\"0.0,8,4\n", "unterminated", 2),
+        ] {
+            let p = write_temp(body);
+            let e = TraceFile::open(&p).unwrap_err();
+            assert!(e.contains(needle), "body {body:?}: {e}");
+            if line > 0 {
+                assert!(e.contains(&format!("line {line}")), "body {body:?}: {e}");
+            }
+            std::fs::remove_file(&p).ok();
+        }
+    }
+
+    #[test]
+    fn blank_lines_and_quoted_fields_are_tolerated() {
+        let p = write_temp("at_s,prompt_tokens,new_tokens\n\n\"0.25\",8,4\n\n");
+        let tf = TraceFile::open(&p).unwrap();
+        assert_eq!(tf.requests(), 1);
+        let got: Vec<Arrival> = tf.arrivals().unwrap().collect();
+        assert_eq!(got[0].at_s, 0.25);
+        std::fs::remove_file(&p).ok();
+    }
+}

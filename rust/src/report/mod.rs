@@ -96,12 +96,12 @@ pub fn serve_sim(
     spec: &crate::config::ServeSpec,
     load: f64,
     out_dir: Option<&Path>,
-) -> Table {
+) -> crate::Result<Table> {
     let engine = crate::evaluate::SweepEngine::default();
-    let outcome = crate::experiment::serve_outcome(ctx, w, spec, load, &engine);
+    let outcome = crate::experiment::serve_outcome(ctx, w, spec, load, &engine)?;
     let t = outcome.to_table();
     persist(&t, out_dir, "serve_sim");
-    t
+    Ok(t)
 }
 
 /// **Table 2** — TCO/Token-optimal Chiplet Cloud system per model.

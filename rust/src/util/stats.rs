@@ -1,4 +1,8 @@
-//! Summary statistics used across the DSE engine, benches and reports.
+//! Summary statistics used across the DSE engine, benches and reports,
+//! plus the bounded-memory quantile sketch the serving simulator folds
+//! million-request tails into ([`QuantileSketch`]).
+
+use std::collections::BTreeMap;
 
 /// Arithmetic mean; 0.0 on empty input.
 pub fn mean(xs: &[f64]) -> f64 {
@@ -126,6 +130,151 @@ pub fn argmax(xs: &[f64]) -> Option<usize> {
         .map(|(i, _)| i)
 }
 
+/// Default relative accuracy of the serving-tail sketches: quantiles are
+/// reported within ±1% of the true order statistic.
+pub const SKETCH_DEFAULT_ALPHA: f64 = 0.01;
+
+/// Mergeable, bounded-memory quantile sketch (DDSketch-style logarithmic
+/// histogram, dependency-free).
+///
+/// Positive samples land in geometric buckets `i = ceil(ln x / ln γ)` with
+/// `γ = (1+α)/(1-α)`; every value in bucket `i` lies in `(γ^(i-1), γ^i]`,
+/// so reporting the midpoint-ish estimate `2γ^i/(γ+1)` guarantees
+/// **relative error ≤ α** against the exact order statistic. Non-positive
+/// samples collapse into a zero bucket (serving latencies are
+/// non-negative; a TTFT of exactly 0 stays exact).
+///
+/// Memory is O(number of occupied buckets) — for latencies spanning
+/// microseconds to days at α = 1% that is a few thousand `(i64, u64)`
+/// entries, independent of the sample count. Two sketches built with the
+/// same `α` merge *exactly* (bucket counts add), so per-replica tails
+/// combine into a fleet tail without concatenating sample vectors:
+/// `merge` then `quantile` equals building one sketch over the union.
+///
+/// `quantile(q)` reads the floor-rank order statistic (`rank =
+/// floor(q/100 · (n-1))`, the lower of the two indices the interpolated
+/// [`percentile`] blends), so versus the interpolated exact value the
+/// total error is bounded by α plus the gap between adjacent order
+/// statistics at that rank.
+#[derive(Clone, Debug)]
+pub struct QuantileSketch {
+    alpha: f64,
+    ln_gamma: f64,
+    buckets: BTreeMap<i32, u64>,
+    zeros: u64,
+    count: u64,
+    min: f64,
+    max: f64,
+}
+
+impl QuantileSketch {
+    /// Sketch with relative accuracy `alpha` (clamped into [1e-6, 0.5]).
+    pub fn new(alpha: f64) -> QuantileSketch {
+        let alpha = if alpha.is_finite() {
+            alpha.clamp(1e-6, 0.5)
+        } else {
+            SKETCH_DEFAULT_ALPHA
+        };
+        let gamma = (1.0 + alpha) / (1.0 - alpha);
+        QuantileSketch {
+            alpha,
+            ln_gamma: gamma.ln(),
+            buckets: BTreeMap::new(),
+            zeros: 0,
+            count: 0,
+            min: f64::INFINITY,
+            max: f64::NEG_INFINITY,
+        }
+    }
+
+    /// Sketch at [`SKETCH_DEFAULT_ALPHA`].
+    pub fn default_accuracy() -> QuantileSketch {
+        QuantileSketch::new(SKETCH_DEFAULT_ALPHA)
+    }
+
+    /// The relative accuracy this sketch was built with.
+    pub fn alpha(&self) -> f64 {
+        self.alpha
+    }
+
+    /// Number of recorded samples.
+    pub fn count(&self) -> u64 {
+        self.count
+    }
+
+    /// True if no samples have been recorded.
+    pub fn is_empty(&self) -> bool {
+        self.count == 0
+    }
+
+    /// Record one sample. NaN is dropped; non-positive values fold into
+    /// the exact zero bucket (reported as 0.0 at read time, or `min` if
+    /// negatives were recorded).
+    pub fn record(&mut self, x: f64) {
+        if x.is_nan() {
+            return;
+        }
+        self.count += 1;
+        self.min = self.min.min(x);
+        self.max = self.max.max(x);
+        if x <= 0.0 {
+            self.zeros += 1;
+            return;
+        }
+        // Float→int casts saturate in Rust, so +INF degrades to the top
+        // bucket instead of wrapping.
+        let i = (x.ln() / self.ln_gamma).ceil();
+        let i = i.clamp(i32::MIN as f64, i32::MAX as f64) as i32;
+        *self.buckets.entry(i).or_insert(0) += 1;
+    }
+
+    /// Fold `other` into `self`. Exact: quantiles of the merged sketch
+    /// equal those of a single sketch over the union of samples. Both
+    /// sketches must share the same `alpha` (the bucket boundaries differ
+    /// otherwise and the error bound would be void).
+    pub fn merge(&mut self, other: &QuantileSketch) {
+        assert_eq!(
+            self.alpha.to_bits(),
+            other.alpha.to_bits(),
+            "QuantileSketch::merge requires identical accuracy"
+        );
+        for (&i, &c) in &other.buckets {
+            *self.buckets.entry(i).or_insert(0) += c;
+        }
+        self.zeros += other.zeros;
+        self.count += other.count;
+        self.min = self.min.min(other.min);
+        self.max = self.max.max(other.max);
+    }
+
+    /// The `q`-th percentile estimate (floor-rank order statistic, within
+    /// relative `alpha`). Empty sketch reads 0.0; `q` is clamped into
+    /// [0, 100] like [`percentile`].
+    pub fn quantile(&self, q: f64) -> f64 {
+        if self.count == 0 {
+            return 0.0;
+        }
+        let q = if q.is_nan() { 0.0 } else { q.clamp(0.0, 100.0) };
+        let rank = ((q / 100.0) * (self.count - 1) as f64).floor() as u64;
+        if rank < self.zeros {
+            // Non-positive region: exact for the all-zeros case, `min`
+            // if genuine negatives were folded in.
+            return self.min.min(0.0);
+        }
+        let mut cum = self.zeros;
+        for (&i, &c) in &self.buckets {
+            cum += c;
+            if cum > rank {
+                let gamma = self.ln_gamma.exp();
+                let est = (i as f64 * self.ln_gamma).exp() * 2.0 / (gamma + 1.0);
+                // Observed extrema only ever tighten the bucket bound.
+                return est.clamp(self.min, self.max);
+            }
+        }
+        self.max
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -251,5 +400,116 @@ mod tests {
         assert_eq!(percentile(&xs, 150.0), 10.0);
         assert_eq!(percentile(&xs, -20.0), 1.0);
         assert_eq!(percentile(&xs, f64::NAN), 1.0);
+    }
+
+    /// Heavy-tailed seeded corpora for the sketch properties: exponential,
+    /// Pareto (infinite variance at shape 1.5) and lognormal-ish tails.
+    fn heavy_tailed(seed: u64, n: usize, kind: usize) -> Vec<f64> {
+        let mut rng = crate::util::rng::Rng::new(seed);
+        (0..n)
+            .map(|_| {
+                let u = rng.f64().clamp(1e-12, 1.0 - 1e-12);
+                match kind {
+                    0 => -(1.0 - u).ln(),                  // exponential(1)
+                    1 => (1.0 - u).powf(-1.0 / 1.5),       // Pareto(1.5)
+                    _ => (-(1.0 - u).ln() * 2.0 - 1.0).exp(), // lognormal-ish
+                }
+            })
+            .collect()
+    }
+
+    #[test]
+    fn sketch_quantiles_are_within_alpha_of_exact_order_stats() {
+        for seed in [1u64, 42, 9001] {
+            for kind in 0..3 {
+                let xs = heavy_tailed(seed, 50_000, kind);
+                let mut sk = QuantileSketch::default_accuracy();
+                for &x in &xs {
+                    sk.record(x);
+                }
+                let a = sk.alpha();
+                let mut sorted = xs.clone();
+                sorted.sort_by(|p, q| p.partial_cmp(q).unwrap());
+                for q in [0.0, 10.0, 50.0, 90.0, 99.0, 99.9, 100.0] {
+                    let s = sk.quantile(q);
+                    // Tight documented bound: within relative alpha of the
+                    // floor-rank order statistic.
+                    let rank = ((q / 100.0) * (xs.len() - 1) as f64).floor() as usize;
+                    let exact = sorted[rank];
+                    assert!(
+                        (s - exact).abs() <= a * exact + 1e-12,
+                        "seed={seed} kind={kind} q={q}: sketch {s} vs order stat {exact}"
+                    );
+                    // And therefore bracketed by the adjacent order stats
+                    // around the interpolated `percentiles` read.
+                    let hi = sorted[((q / 100.0) * (xs.len() - 1) as f64).ceil() as usize];
+                    assert!(s >= exact * (1.0 - a) - 1e-12 && s <= hi * (1.0 + a) + 1e-12);
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn sketch_merge_equals_fleet_sketch_bitwise() {
+        let xs = heavy_tailed(7, 40_000, 1);
+        // Four "replica" sketches, round-robin sharded...
+        let mut shards: Vec<QuantileSketch> =
+            (0..4).map(|_| QuantileSketch::default_accuracy()).collect();
+        for (i, &x) in xs.iter().enumerate() {
+            shards[i % 4].record(x);
+        }
+        // ...versus one fleet-level sketch over every sample.
+        let mut fleet = QuantileSketch::default_accuracy();
+        for &x in &xs {
+            fleet.record(x);
+        }
+        let mut merged = shards[0].clone();
+        for s in &shards[1..] {
+            merged.merge(s);
+        }
+        assert_eq!(merged.count(), fleet.count());
+        for q in [0.0, 25.0, 50.0, 90.0, 99.0, 99.9, 100.0] {
+            assert_eq!(
+                merged.quantile(q).to_bits(),
+                fleet.quantile(q).to_bits(),
+                "merge must be exact at q={q}"
+            );
+        }
+        // The merged sketch also stays within bound of the exact tail.
+        let mut sorted = xs.clone();
+        sorted.sort_by(|p, q| p.partial_cmp(q).unwrap());
+        let rank = ((99.0 / 100.0) * (xs.len() - 1) as f64).floor() as usize;
+        let exact = sorted[rank];
+        let s = merged.quantile(99.0);
+        assert!((s - exact).abs() <= merged.alpha() * exact + 1e-12);
+    }
+
+    #[test]
+    fn sketch_edge_cases() {
+        let mut sk = QuantileSketch::default_accuracy();
+        assert!(sk.is_empty());
+        assert_eq!(sk.quantile(50.0), 0.0);
+        sk.record(f64::NAN); // dropped
+        assert_eq!(sk.count(), 0);
+        sk.record(3.25);
+        // A single sample is every quantile, exactly (min==max clamp).
+        for q in [0.0, 50.0, 99.0, 100.0] {
+            assert_eq!(sk.quantile(q), 3.25);
+        }
+        let mut zeros = QuantileSketch::default_accuracy();
+        for _ in 0..10 {
+            zeros.record(0.0);
+        }
+        // Zero latencies stay exact, not "within alpha of zero".
+        assert_eq!(zeros.quantile(99.0), 0.0);
+        assert_eq!(zeros.count(), 10);
+    }
+
+    #[test]
+    #[should_panic(expected = "identical accuracy")]
+    fn sketch_merge_rejects_mismatched_accuracy() {
+        let mut a = QuantileSketch::new(0.01);
+        let b = QuantileSketch::new(0.02);
+        a.merge(&b);
     }
 }

@@ -87,6 +87,8 @@ fn json_round_trip_property() {
             paged_kv: r.chance(0.5),
             replicas: 1 + r.below(4),
             route: *r.pick(&[RoutePolicy::RoundRobin, RoutePolicy::Jsq, RoutePolicy::JsqTokens]),
+            quantum: if r.chance(0.5) { 0.0 } else { 0.001 + r.f64() * 0.1 },
+            trace_file: None,
         };
         let e = Experiment {
             name: format!("spec-{case}"),
@@ -322,6 +324,34 @@ fn cli_rejects_bad_flag_combinations() {
     assert!(err(&["serve-sim", "--trace", "what"]).contains("--trace"));
     // Unknown models are caught by spec validation.
     assert!(err(&["sweep", "--model", "gpt9000"]).contains("unknown model"));
+    // Quantized-time flag: degenerate values error instead of defaulting.
+    assert!(err(&["serve-sim", "--quantum", "0"]).contains("positive"));
+    assert!(err(&["serve-sim", "--quantum", "abc"]).contains("must be a number"));
+    // A trace file replays recorded arrivals: synthetic-arrival flags
+    // contradict it, and the error names the offending flag.
+    assert!(err(&["serve-sim", "--trace-file", "t.csv", "--trace", "poisson"])
+        .contains("drop --trace"));
+    assert!(err(&["serve-sim", "--trace-file", "t.csv", "--rps", "5"]).contains("drop --rps"));
+    assert!(err(&["serve-sim", "--trace-file", "t.csv", "--clients", "4"])
+        .contains("drop --clients"));
+    // Serving knobs (trace file included) still need a binding SLO on sweeps.
+    assert!(err(&["sweep", "--trace-file", "t.csv"]).contains("no effect"));
+}
+
+/// `--trace-file` and `--quantum` translate into the spec verbatim; the
+/// file's existence is deliberately a run-time concern, so translation
+/// succeeds on any path.
+#[test]
+fn cli_trace_file_and_quantum_goldens() {
+    let e = translate(&["serve-sim", "--trace-file", "arrivals.csv", "--quantum", "0.5"]).unwrap();
+    let s = e.serve.expect("serve-sim carries a serve spec");
+    assert_eq!(s.trace_file.as_deref(), Some("arrivals.csv"));
+    assert!((s.quantum - 0.5).abs() < 1e-15);
+    // Defaults stay inert: no flag, no quantum, no trace file.
+    let e = translate(&["serve-sim"]).unwrap();
+    let s = e.serve.expect("serve-sim carries a serve spec");
+    assert_eq!(s.trace_file, None);
+    assert_eq!(s.quantum, 0.0);
 }
 
 // ---------------------------------------------------------------------------
@@ -459,9 +489,55 @@ fn serve_sim_shim_equals_outcome_table() {
     let w = Workload::new(ModelSpec::gpt2(), 1024, 16);
     let spec = ServeSpec::new(TrafficSpec::poisson(3.0, 40, 16, 4, 8), SloSpec::unconstrained());
     let engine = SweepEngine::default();
-    let outcome = experiment::serve_outcome(&ctx, &w, &spec, 0.8, &engine);
-    let shim = report::serve_sim(&ctx, &w, &spec, 0.8, None);
+    let outcome = experiment::serve_outcome(&ctx, &w, &spec, 0.8, &engine).unwrap();
+    let shim = report::serve_sim(&ctx, &w, &spec, 0.8, None).unwrap();
     assert_eq!(outcome.to_table().render(), shim.render());
+}
+
+/// End-to-end trace-file replay: a recorded CSV drives the whole
+/// experiment path, the offered count comes from the file (the spec's own
+/// request count is ignored), and a file that vanishes before the run
+/// surfaces as a located config error absorbed into [`Outcome::Error`].
+#[test]
+fn trace_file_replay_end_to_end() {
+    let path = std::env::temp_dir().join(format!("cc-e2e-trace-{}.csv", std::process::id()));
+    let mut csv = String::from("at_s,prompt_tokens,new_tokens\n");
+    for i in 0..24 {
+        csv.push_str(&format!("{},16,{}\n", i as f64 * 0.05, 4 + (i % 8)));
+    }
+    std::fs::write(&path, csv).unwrap();
+    let mk = |p: &str| Experiment {
+        name: "trace-replay".into(),
+        task: Task::ServeSim,
+        models: vec!["gpt2".into()],
+        space: SpaceSpec::Coarse,
+        workload: Some(WorkloadPoint { ctx: 1024, batch: 16 }),
+        serve: Some(
+            ServeSpec::new(TrafficSpec::poisson(0.0, 1, 16, 4, 8), SloSpec::unconstrained())
+                .with_trace_file(p),
+        ),
+        load: 0.8,
+        engine: EngineKnobs::default(),
+        shard: None,
+    };
+    let e = mk(path.to_str().unwrap());
+    e.validate().expect("a trace-file spec with inert synthetic arrivals validates");
+    let outcome = experiment::run(&e).unwrap();
+    let Outcome::Serve(so) = &outcome else { panic!("serve-sim spec → Serve outcome") };
+    assert!(so.feasible);
+    for (label, rep) in &so.rows {
+        assert_eq!(rep.offered, 24, "{label}: offered count must come from the file");
+        assert_eq!(rep.completed, 24, "{label}: every recorded request must be served");
+    }
+    // The machine-readable outcome names the file it replayed.
+    let json = outcome.to_json().to_string();
+    assert!(json.contains("trace_file"), "{json}");
+    std::fs::remove_file(&path).unwrap();
+    // Same spec, vanished file: a located error, not a panic.
+    let o = experiment::run(&mk(path.to_str().unwrap())).unwrap();
+    let Outcome::Error(msg) = o else { panic!("missing trace file → error outcome") };
+    assert!(msg.contains("cannot open trace file"), "{msg}");
+    assert!(msg.contains("cc-e2e-trace"), "{msg}");
 }
 
 /// A campaign shares one Phase-1 context across same-space specs and

@@ -470,6 +470,124 @@ fn early_abort_verdict_always_matches_the_full_run() {
     });
 }
 
+/// Quantized-time decode ([`SimConfig::quantum`]) against the default
+/// bit-exact fast-forward across randomized open-loop traces, chunked
+/// prefill, binding paged budgets and 1–2 replicas: identical
+/// completed/token/rejected counts, and every latency tail within the
+/// documented `2·decode_step + 1e-6·|reference|` bound.
+#[test]
+fn quantized_time_stays_within_epsilon_of_reference() {
+    check("quantized time respects the epsilon contract", 30, |r| {
+        let slots = 2 + r.below(10);
+        let requests = 30 + r.below(80);
+        let prompt = r.below(48);
+        // lo >= 2 keeps every request multi-token, so the TPOT percentile
+        // vectors are never empty (NaN would defeat the epsilon compare).
+        let lo = 2 + r.below(16);
+        let hi = lo + r.below(120);
+        let arrival = if r.chance(0.5) {
+            ArrivalProcess::Poisson { rps: 0.5 + r.f64() * 40.0 }
+        } else {
+            ArrivalProcess::Bursty { rps: 0.5 + r.f64() * 25.0, burst: 1 + r.below(8) }
+        };
+        let t = TrafficSpec {
+            arrival,
+            requests,
+            prompt_tokens: prompt,
+            new_tokens_lo: lo,
+            new_tokens_hi: hi,
+            seed: r.next_u64(),
+        };
+        let mut cfg = synthetic_cfg(slots);
+        if r.chance(0.4) {
+            cfg.cost = cfg.cost.with_chunk(1 + r.below(24));
+        }
+        if r.chance(0.4) {
+            // A budget that binds (queueing) but admits every footprint —
+            // +8 absorbs block rounding so even the largest request fits.
+            let footprint = prompt + hi;
+            cfg.kv = KvBudget::tokens(footprint * (1 + r.below(slots + 1)) + 8, 8);
+            cfg.paged_kv = true;
+        }
+        let mut quant = cfg;
+        quant.quantum = 0.01 + r.f64() * 0.2; // 1 to ~21 decode steps per jump
+        let replicas = 1 + r.below(2);
+        let route = if r.chance(0.5) { RoutePolicy::Jsq } else { RoutePolicy::RoundRobin };
+        let slo = SloSpec::unconstrained();
+        let a = simulate_replicated(&cfg, replicas, route, &ContinuousBatch, &t, &slo);
+        let b = simulate_replicated(&quant, replicas, route, &ContinuousBatch, &t, &slo);
+        let tag = format!(
+            "slots {slots}, requests {requests}, tokens {lo}..{hi}, replicas {replicas}, \
+             paged {}, chunk {}, quantum {}",
+            cfg.paged_kv, cfg.cost.prefill_chunk, quant.quantum
+        );
+        assert_eq!(a.completed, b.completed, "{tag}");
+        assert_eq!(a.tokens, b.tokens, "{tag}");
+        assert_eq!(a.rejected, b.rejected, "{tag}");
+        let step = cfg.cost.decode_step_s;
+        for (q, refv, what) in [
+            (b.ttft_p50_s, a.ttft_p50_s, "ttft p50"),
+            (b.ttft_p99_s, a.ttft_p99_s, "ttft p99"),
+            (b.tpot_p50_s, a.tpot_p50_s, "tpot p50"),
+            (b.tpot_p99_s, a.tpot_p99_s, "tpot p99"),
+            (b.total_p99_s, a.total_p99_s, "total p99"),
+            (b.makespan_s, a.makespan_s, "makespan"),
+        ] {
+            assert!(
+                (q - refv).abs() <= 2.0 * step + 1e-6 * refv.abs(),
+                "{what}: quantized {q} vs reference {refv} ({tag})"
+            );
+        }
+    });
+}
+
+/// Satellite of the early-abort rule: counting requests *already waiting*
+/// past a finite TTFT target against the violation budget must preserve
+/// the feasibility verdict across randomized overload levels — including
+/// in quantized-time mode, where the abort decision points sit on coarser
+/// clock jumps.
+#[test]
+fn in_flight_ttft_abort_is_verdict_preserving() {
+    check("queue-wait abort preserves the verdict", 25, |r| {
+        let slots = 1 + r.below(4);
+        let requests = 30 + r.below(60);
+        // Long decodes on few slots: a healthy mix of keep-up runs and
+        // queues that grow without bound, where the waiting-time lower
+        // bound fires long before the stranded requests complete.
+        let t = TrafficSpec::poisson(
+            2.0 + r.f64() * 40.0,
+            requests,
+            1 + r.below(32),
+            4 + r.below(16),
+            20 + r.below(120),
+        )
+        .with_seed(r.next_u64());
+        let slo = SloSpec::new(0.005 + r.f64() * 0.5, f64::INFINITY);
+        let mut cfg = synthetic_cfg(slots);
+        if r.chance(0.5) {
+            cfg.quantum = 0.01 + r.f64() * 0.1;
+        }
+        let mut abort_cfg = cfg;
+        abort_cfg.early_abort = true;
+        let full = simulate_trace(&cfg, &mut ContinuousBatch, &t, &slo);
+        let fast = simulate_trace(&abort_cfg, &mut ContinuousBatch, &t, &slo);
+        assert_eq!(
+            full.meets(&slo),
+            fast.meets(&slo),
+            "verdict diverged (slots {slots}, requests {requests}, quantum {})",
+            cfg.quantum
+        );
+        assert!(fast.iterations <= full.iterations, "abort may never cost extra work");
+        if full.meets(&slo) {
+            assert!(!fast.aborted_early, "a passing run must never abort");
+            assert_eq!(full.fingerprint(), fast.fingerprint());
+        }
+        if fast.aborted_early {
+            assert!(!full.meets(&slo), "abort on a feasible run is unsound");
+        }
+    });
+}
+
 /// Mirror of the live-coordinator regression: even under a pathological
 /// arrival pattern the simulator never executes an empty iteration — every
 /// iteration has at least one live or admitted sequence.
