@@ -1,0 +1,433 @@
+//! String/char/comment/raw-string aware token scanner for `ccloud lint`.
+//!
+//! This is deliberately **not** a Rust parser: the lint rules only need a
+//! faithful token stream — identifiers, numeric literals classified as
+//! float or integer, and operator/punct tokens — with everything that can
+//! *hide* a token (string literals, char literals, line and nested block
+//! comments, raw and byte strings, raw identifiers, lifetimes) correctly
+//! skipped. Line numbers are tracked per token so findings are clickable
+//! `path:line` locations.
+//!
+//! Line comments whose body *starts* with the `cc-lint:` suppression
+//! marker (see [`crate::analysis`] for the syntax) are additionally
+//! returned alongside the token stream so the rule engine can honor them.
+
+/// One lexed token.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub enum Tok {
+    /// Identifier or keyword (raw identifiers arrive without the `r#`).
+    Ident(String),
+    /// Numeric literal that is float-typed by spelling: contains a
+    /// fractional part (`2.5`), an exponent (`1e15`), or an `f32`/`f64`
+    /// suffix.
+    Float,
+    /// Any other numeric literal (decimal, hex, octal, binary).
+    Int,
+    /// Operator / punctuation. Multi-character operators the rules care
+    /// about (`==`, `!=`, `::`) are single tokens; everything else is
+    /// emitted one character at a time.
+    Op(&'static str),
+    /// Operator character with no interned spelling (emitted for
+    /// completeness; rules never match on it).
+    OpChar(char),
+}
+
+/// A token plus the 1-indexed source line it starts on.
+#[derive(Clone, Debug)]
+pub struct Token {
+    pub tok: Tok,
+    pub line: u32,
+}
+
+/// Body of a `// cc-lint: ...` comment (text after the marker, trimmed).
+#[derive(Clone, Debug)]
+pub struct LintComment {
+    pub line: u32,
+    pub body: String,
+}
+
+/// Lexer output: the token stream and every `cc-lint:` comment seen.
+#[derive(Debug, Default)]
+pub struct Lexed {
+    pub tokens: Vec<Token>,
+    pub lint_comments: Vec<LintComment>,
+}
+
+/// The suppression marker looked for inside line comments.
+pub const MARKER: &str = "cc-lint:";
+
+/// Lex `src` into tokens + lint comments. Never fails: unterminated
+/// strings/comments simply consume to end of input (the compiler is the
+/// authority on well-formedness; the linter only needs to not mis-tokenize
+/// code that *does* compile).
+pub fn lex(src: &str) -> Lexed {
+    let b = src.as_bytes();
+    let mut out = Lexed::default();
+    let mut i = 0usize;
+    let mut line = 1u32;
+    while i < b.len() {
+        let c = b[i];
+        match c {
+            b'\n' => {
+                line += 1;
+                i += 1;
+            }
+            b' ' | b'\t' | b'\r' => i += 1,
+            b'/' if b.get(i + 1) == Some(&b'/') => {
+                let start = i + 2;
+                while i < b.len() && b[i] != b'\n' {
+                    i += 1;
+                }
+                if let Ok(text) = std::str::from_utf8(&b[start..i]) {
+                    // Only a comment that *leads* with the marker is a
+                    // suppression — prose mentions of `cc-lint:` inside doc
+                    // comments (like this module's own) are not.
+                    if let Some(body) = text.trim_start().strip_prefix(MARKER) {
+                        out.lint_comments
+                            .push(LintComment { line, body: body.trim().to_string() });
+                    }
+                }
+            }
+            b'/' if b.get(i + 1) == Some(&b'*') => {
+                // Block comments nest in Rust.
+                let mut depth = 1usize;
+                i += 2;
+                while i < b.len() && depth > 0 {
+                    if b[i] == b'\n' {
+                        line += 1;
+                        i += 1;
+                    } else if b[i] == b'/' && b.get(i + 1) == Some(&b'*') {
+                        depth += 1;
+                        i += 2;
+                    } else if b[i] == b'*' && b.get(i + 1) == Some(&b'/') {
+                        depth -= 1;
+                        i += 2;
+                    } else {
+                        i += 1;
+                    }
+                }
+            }
+            b'"' => i = skip_string(b, i, &mut line),
+            b'\'' => i = skip_char_or_lifetime(b, i, &mut line),
+            b'b' | b'r' if is_string_start(b, i) => i = skip_prefixed_string(b, i, &mut line),
+            c if c == b'_' || c.is_ascii_alphabetic() => {
+                let start = i;
+                while i < b.len() && (b[i] == b'_' || b[i].is_ascii_alphanumeric()) {
+                    i += 1;
+                }
+                if let Ok(id) = std::str::from_utf8(&b[start..i]) {
+                    out.tokens.push(Token { tok: Tok::Ident(id.to_string()), line });
+                }
+            }
+            c if c.is_ascii_digit() => {
+                let (end, is_float) = scan_number(b, i);
+                out.tokens.push(Token { tok: if is_float { Tok::Float } else { Tok::Int }, line });
+                i = end;
+            }
+            _ => {
+                // Raw identifiers: `r#type` (the raw-string case was
+                // handled above, so reaching `r#` here means identifier).
+                let two = &b[i..(i + 2).min(b.len())];
+                let tok = match two {
+                    b"==" => Some(Tok::Op("==")),
+                    b"!=" => Some(Tok::Op("!=")),
+                    b"::" => Some(Tok::Op("::")),
+                    _ => None,
+                };
+                if let Some(t) = tok {
+                    out.tokens.push(Token { tok: t, line });
+                    i += 2;
+                } else {
+                    let t = match c {
+                        b'.' => Tok::Op("."),
+                        b'(' => Tok::Op("("),
+                        b')' => Tok::Op(")"),
+                        b'[' => Tok::Op("["),
+                        b']' => Tok::Op("]"),
+                        b'{' => Tok::Op("{"),
+                        b'}' => Tok::Op("}"),
+                        b'#' => Tok::Op("#"),
+                        b'!' => Tok::Op("!"),
+                        b';' => Tok::Op(";"),
+                        b'-' => Tok::Op("-"),
+                        other => Tok::OpChar(other as char),
+                    };
+                    out.tokens.push(Token { tok: t, line });
+                    i += 1;
+                }
+            }
+        }
+    }
+    out
+}
+
+/// Is the `b`/`r`/`br` at `i` the start of a (raw/byte) string literal,
+/// as opposed to an ordinary identifier beginning with those letters?
+fn is_string_start(b: &[u8], i: usize) -> bool {
+    let mut j = i;
+    if b[j] == b'b' {
+        j += 1;
+    }
+    if b.get(j) == Some(&b'r') {
+        j += 1;
+        // r" or r#...#" — any number of hashes then a quote.
+        while b.get(j) == Some(&b'#') {
+            j += 1;
+        }
+        return b.get(j) == Some(&b'"');
+    }
+    // b"..." / b'...'
+    b[i] == b'b' && matches!(b.get(j), Some(&b'"') | Some(&b'\''))
+}
+
+/// Skip a plain `"..."` string (escapes honored), returning the index
+/// past the closing quote.
+fn skip_string(b: &[u8], i: usize, line: &mut u32) -> usize {
+    let mut i = i + 1;
+    while i < b.len() {
+        match b[i] {
+            b'\\' => i += 2,
+            b'\n' => {
+                *line += 1;
+                i += 1;
+            }
+            b'"' => return i + 1,
+            _ => i += 1,
+        }
+    }
+    i
+}
+
+/// Skip `b"..."`, `r"..."`, `r#"..."#`, `br#"..."#`, `b'x'`.
+fn skip_prefixed_string(b: &[u8], i: usize, line: &mut u32) -> usize {
+    let mut j = i;
+    if b[j] == b'b' {
+        j += 1;
+    }
+    if b.get(j) == Some(&b'\'') {
+        return skip_char_or_lifetime(b, j, line);
+    }
+    let mut hashes = 0usize;
+    if b.get(j) == Some(&b'r') {
+        j += 1;
+        while b.get(j) == Some(&b'#') {
+            hashes += 1;
+            j += 1;
+        }
+        // Raw strings: no escapes; closed by `"` followed by `hashes` #s.
+        j += 1; // consume the opening quote
+        while j < b.len() {
+            if b[j] == b'\n' {
+                *line += 1;
+                j += 1;
+            } else if b[j] == b'"'
+                && b[j + 1..].iter().take_while(|&&c| c == b'#').count() >= hashes
+            {
+                return j + 1 + hashes;
+            } else {
+                j += 1;
+            }
+        }
+        return j;
+    }
+    skip_string(b, j, line)
+}
+
+/// Skip a char literal (`'x'`, `'\n'`, `'\u{1F600}'`) or pass over a
+/// lifetime (`'a`, `'static`) without consuming what follows it.
+fn skip_char_or_lifetime(b: &[u8], i: usize, line: &mut u32) -> usize {
+    // Lifetime: 'ident NOT followed by a closing quote. ('a' is a char
+    // literal, 'a.cmp(...) is a lifetime... which cannot actually appear
+    // mid-expression, but the disambiguation below is the standard one.)
+    let next = b.get(i + 1).copied();
+    if let Some(c) = next {
+        if (c == b'_' || c.is_ascii_alphabetic()) && b.get(i + 2) != Some(&b'\'') {
+            // lifetime or loop label: consume `'` + identifier
+            let mut j = i + 1;
+            while j < b.len() && (b[j] == b'_' || b[j].is_ascii_alphanumeric()) {
+                j += 1;
+            }
+            return j;
+        }
+    }
+    // Char literal.
+    let mut j = i + 1;
+    while j < b.len() {
+        match b[j] {
+            b'\\' => j += 2,
+            b'\n' => {
+                *line += 1;
+                j += 1;
+            }
+            b'\'' => return j + 1,
+            _ => j += 1,
+        }
+    }
+    j
+}
+
+/// Scan a numeric literal starting at digit `i`; returns (end, is_float).
+fn scan_number(b: &[u8], i: usize) -> (usize, bool) {
+    let mut j = i;
+    let mut is_float = false;
+    if b[j] == b'0' && matches!(b.get(j + 1), Some(&b'x') | Some(&b'o') | Some(&b'b')) {
+        j += 2;
+        while j < b.len() && (b[j].is_ascii_alphanumeric() || b[j] == b'_') {
+            j += 1;
+        }
+        return (j, false);
+    }
+    while j < b.len() && (b[j].is_ascii_digit() || b[j] == b'_') {
+        j += 1;
+    }
+    // Fractional part: a dot followed by a digit (so `xs.0` tuple access
+    // and `1.max(2)` method calls stay integers).
+    if b.get(j) == Some(&b'.') && b.get(j + 1).is_some_and(|c| c.is_ascii_digit()) {
+        is_float = true;
+        j += 1;
+        while j < b.len() && (b[j].is_ascii_digit() || b[j] == b'_') {
+            j += 1;
+        }
+    } else if b.get(j) == Some(&b'.')
+        && !b.get(j + 1).is_some_and(|c| is_ident_char(*c))
+        && b.get(j + 1) != Some(&b'.')
+    {
+        // Trailing-dot float (`1.`) — but `1.method()` keeps its dot and
+        // `1..n` stays an integer range.
+        is_float = true;
+        j += 1;
+    }
+    // Exponent.
+    if matches!(b.get(j), Some(&b'e') | Some(&b'E')) {
+        let mut k = j + 1;
+        if matches!(b.get(k), Some(&b'+') | Some(&b'-')) {
+            k += 1;
+        }
+        if b.get(k).is_some_and(|c| c.is_ascii_digit()) {
+            is_float = true;
+            j = k;
+            while j < b.len() && (b[j].is_ascii_digit() || b[j] == b'_') {
+                j += 1;
+            }
+        }
+    }
+    // Type suffix (f32/f64 force float; u8..i128/usize stay int).
+    let sfx_start = j;
+    while j < b.len() && is_ident_char(b[j]) {
+        j += 1;
+    }
+    match &b[sfx_start..j] {
+        b"f32" | b"f64" => is_float = true,
+        _ => {}
+    }
+    (j, is_float)
+}
+
+fn is_ident_char(c: u8) -> bool {
+    c == b'_' || c.is_ascii_alphanumeric()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn idents(src: &str) -> Vec<String> {
+        lex(src)
+            .tokens
+            .into_iter()
+            .filter_map(|t| match t.tok {
+                Tok::Ident(s) => Some(s),
+                _ => None,
+            })
+            .collect()
+    }
+
+    #[test]
+    fn strings_comments_and_chars_hide_tokens() {
+        let src = r###"
+            let a = "unwrap() inside a string";
+            // unwrap() inside a line comment
+            /* unwrap() in /* a nested */ block comment */
+            let b = 'u'; let c = r#"raw unwrap() string"#;
+            let d = b"byte unwrap()"; let e: &'static str = "x";
+            real_ident();
+        "###;
+        let ids = idents(src);
+        assert!(!ids.contains(&"unwrap".to_string()), "{ids:?}");
+        assert!(ids.contains(&"real_ident".to_string()));
+        // the lifetime must not have eaten `static`'s following tokens
+        assert!(ids.contains(&"str".to_string()));
+    }
+
+    #[test]
+    fn float_vs_int_classification() {
+        let toks: Vec<Tok> = lex("0 1 2.5 1e15 1E-3 3f64 7u32 0x1f xs.0 1.max(2)")
+            .tokens
+            .into_iter()
+            .map(|t| t.tok)
+            .collect();
+        let nums: Vec<&Tok> =
+            toks.iter().filter(|t| matches!(t, Tok::Float | Tok::Int)).collect();
+        assert_eq!(
+            nums,
+            vec![
+                &Tok::Int,   // 0
+                &Tok::Int,   // 1
+                &Tok::Float, // 2.5
+                &Tok::Float, // 1e15
+                &Tok::Float, // 1E-3
+                &Tok::Float, // 3f64
+                &Tok::Int,   // 7u32
+                &Tok::Int,   // 0x1f
+                &Tok::Int,   // xs.0's 0
+                &Tok::Int,   // 1.max(2)'s 1
+                &Tok::Int,   // 1.max(2)'s 2
+            ]
+        );
+    }
+
+    #[test]
+    fn ranges_are_not_floats() {
+        let toks: Vec<Tok> =
+            lex("for i in 0..10 { x[1..=2]; }").tokens.into_iter().map(|t| t.tok).collect();
+        assert!(!toks.contains(&Tok::Float), "{toks:?}");
+    }
+
+    #[test]
+    fn multi_char_operators() {
+        let toks: Vec<Tok> = lex("a == b != c::d.e!").tokens.into_iter().map(|t| t.tok).collect();
+        assert!(toks.contains(&Tok::Op("==")));
+        assert!(toks.contains(&Tok::Op("!=")));
+        assert!(toks.contains(&Tok::Op("::")));
+        assert!(toks.contains(&Tok::Op(".")));
+        assert!(toks.contains(&Tok::Op("!")));
+    }
+
+    #[test]
+    fn line_numbers_and_lint_comments() {
+        let src = "line1();\n// cc-lint: allow(no-panic) locks are poison-safe\nline3();\n";
+        let lx = lex(src);
+        assert_eq!(lx.lint_comments.len(), 1);
+        assert_eq!(lx.lint_comments[0].line, 2);
+        assert_eq!(lx.lint_comments[0].body, "allow(no-panic) locks are poison-safe");
+        let line3 = lx
+            .tokens
+            .iter()
+            .find(|t| t.tok == Tok::Ident("line3".to_string()))
+            .map(|t| t.line);
+        assert_eq!(line3, Some(3));
+    }
+
+    #[test]
+    fn raw_string_with_hashes_spans_lines() {
+        let src = "a();\nlet s = r##\"multi\nline \"# unwrap() \"##;\nb();";
+        let lx = lex(src);
+        let b_line = lx
+            .tokens
+            .iter()
+            .find(|t| t.tok == Tok::Ident("b".to_string()))
+            .map(|t| t.line);
+        assert_eq!(b_line, Some(3));
+        assert!(!lx.tokens.iter().any(|t| t.tok == Tok::Ident("unwrap".to_string())));
+    }
+}

@@ -1,0 +1,179 @@
+//! `ccloud lint` — a dependency-free determinism & robustness analyzer.
+//!
+//! Every fast path in this workspace is pinned bit-identical (or
+//! epsilon-bounded) to a slow reference; that contract is otherwise
+//! enforced only by runtime property tests. This module proves the
+//! hazards that break it are absent *at the source level*:
+//!
+//! | rule id             | invariant |
+//! |---------------------|-----------|
+//! | `no-panic`          | no `unwrap`/`expect`/`panic!`/`todo!`/`unimplemented!` in library modules |
+//! | `no-wallclock`      | no `Instant::now`/`SystemTime` outside the serving/bench/proc modules |
+//! | `no-unordered-iter` | no `HashMap`/`HashSet` where iteration order reaches serialized output |
+//! | `no-float-eq`       | no bare float `==`/`!=`; no `partial_cmp(..).unwrap()` anywhere |
+//! | `no-process-exit`   | no `std::process::exit` outside `src/main.rs` |
+//!
+//! A finding is suppressed with `// cc-lint: allow(rule-id) reason` on the
+//! same line or the line above; the reason is mandatory, and a suppression
+//! that matches nothing is itself a finding (`unused-suppression`). The
+//! scanner is token-level (see [`lexer`]) — string/char/comment/raw-string
+//! aware, no full parser — and the rule set is deliberately project-shaped
+//! rather than general (see [`rules`] for the scopes and allowlists).
+//!
+//! The pass runs over its own workspace in CI (`ccloud lint`) and in a
+//! `cargo test` self-check, so the tree must stay finding-free.
+
+pub mod lexer;
+pub mod rules;
+
+pub use rules::{scan_source, FileClass, Finding, Rule};
+
+use std::path::{Path, PathBuf};
+
+use crate::util::json::Json;
+use crate::{Error, Result};
+
+/// Directories walked under the workspace root.
+const WALK_DIRS: &[&str] = &["src", "tests", "benches"];
+
+/// Subtrees excluded from the walk: the fixture corpus exists to contain
+/// deliberate violations for the linter's own tests.
+const EXCLUDE_PREFIXES: &[&str] = &["tests/lint_fixtures/"];
+
+/// Classify a workspace-relative path (`/`-separated) for rule scoping.
+pub fn classify(rel: &str) -> FileClass {
+    if rel == "src/main.rs" {
+        FileClass::Binary
+    } else if rel.starts_with("tests/") {
+        FileClass::Tests
+    } else if rel.starts_with("benches/") {
+        FileClass::Benches
+    } else {
+        FileClass::Library
+    }
+}
+
+/// Lint one file's source. `rel` is the workspace-relative path used for
+/// scoping and rendering; the class is derived via [`classify`].
+pub fn scan_file(rel: &str, src: &str) -> Vec<Finding> {
+    scan_source(rel, classify(rel), src)
+}
+
+/// Run the analyzer over the workspace rooted at `root` (the directory
+/// holding `src/`, `tests/`, `benches/`). Returns all findings sorted by
+/// (path, line, rule); an empty vector means the tree is clean. The walk
+/// is sorted at every level, so output order is deterministic.
+pub fn run(root: &Path) -> Result<Vec<Finding>> {
+    let mut findings = Vec::new();
+    let mut saw_dir = false;
+    for dir in WALK_DIRS {
+        let d = root.join(dir);
+        if !d.is_dir() {
+            continue;
+        }
+        saw_dir = true;
+        let mut files = Vec::new();
+        collect_rs_files(&d, &mut files)?;
+        files.sort();
+        for path in files {
+            let rel = relative_slash(root, &path);
+            if EXCLUDE_PREFIXES.iter().any(|p| rel.starts_with(p)) {
+                continue;
+            }
+            let src = std::fs::read_to_string(&path).map_err(|e| {
+                Error::Io(std::io::Error::new(e.kind(), format!("{}: {e}", path.display())))
+            })?;
+            findings.extend(scan_file(&rel, &src));
+        }
+    }
+    if !saw_dir {
+        return Err(Error::Config(format!(
+            "{}: not a workspace root (no src/, tests/ or benches/ directory)",
+            root.display()
+        )));
+    }
+    findings.sort_by(|a, b| (&a.path, a.line, a.rule).cmp(&(&b.path, b.line, b.rule)));
+    Ok(findings)
+}
+
+/// Recursively collect `*.rs` files under `dir`.
+fn collect_rs_files(dir: &Path, out: &mut Vec<PathBuf>) -> Result<()> {
+    for entry in std::fs::read_dir(dir)? {
+        let entry = entry?;
+        let path = entry.path();
+        if path.is_dir() {
+            collect_rs_files(&path, out)?;
+        } else if path.extension().and_then(|e| e.to_str()) == Some("rs") {
+            out.push(path);
+        }
+    }
+    Ok(())
+}
+
+/// `path` relative to `root`, `/`-separated regardless of platform.
+fn relative_slash(root: &Path, path: &Path) -> String {
+    let rel = path.strip_prefix(root).unwrap_or(path);
+    rel.components()
+        .map(|c| c.as_os_str().to_string_lossy())
+        .collect::<Vec<_>>()
+        .join("/")
+}
+
+/// Render findings as the machine-readable JSON report emitted by
+/// `ccloud lint --json`:
+/// `{"version": 1, "root": "...", "count": N, "findings": [{path, line, rule, message}]}`.
+pub fn report_json(root: &Path, findings: &[Finding]) -> String {
+    let items: Vec<Json> = findings
+        .iter()
+        .map(|f| {
+            let mut m = std::collections::BTreeMap::new();
+            m.insert("path".to_string(), Json::Str(f.path.clone()));
+            m.insert("line".to_string(), Json::Num(f64::from(f.line)));
+            m.insert("rule".to_string(), Json::Str(f.rule.id().to_string()));
+            m.insert("message".to_string(), Json::Str(f.message.clone()));
+            Json::Obj(m)
+        })
+        .collect();
+    let mut top = std::collections::BTreeMap::new();
+    top.insert("version".to_string(), Json::Num(1.0));
+    top.insert("root".to_string(), Json::Str(root.display().to_string()));
+    top.insert("count".to_string(), Json::Num(findings.len() as f64));
+    top.insert("findings".to_string(), Json::Arr(items));
+    Json::Obj(top).to_string()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn classify_matches_tree_layout() {
+        assert_eq!(classify("src/main.rs"), FileClass::Binary);
+        assert_eq!(classify("src/util/stats.rs"), FileClass::Library);
+        assert_eq!(classify("tests/integration_dse.rs"), FileClass::Tests);
+        assert_eq!(classify("benches/fig7.rs"), FileClass::Benches);
+    }
+
+    #[test]
+    fn report_json_is_parseable_and_sorted() {
+        let fs = vec![Finding {
+            path: "src/a.rs".to_string(),
+            line: 3,
+            rule: Rule::NoPanic,
+            message: "msg".to_string(),
+        }];
+        let s = report_json(Path::new("rust"), &fs);
+        let v = Json::parse(&s).expect("report must be valid JSON");
+        assert_eq!(v.get("version").and_then(Json::as_usize), Some(1));
+        assert_eq!(v.get("count").and_then(Json::as_usize), Some(1));
+        let arr = v.get("findings").and_then(Json::as_arr).expect("findings array");
+        assert_eq!(arr[0].get("rule").and_then(Json::as_str), Some("no-panic"));
+        assert_eq!(arr[0].get("line").and_then(Json::as_usize), Some(3));
+    }
+
+    #[test]
+    fn run_rejects_a_non_workspace_root() {
+        let err = run(Path::new("/definitely/not/a/workspace/root"));
+        assert!(err.is_err());
+    }
+}

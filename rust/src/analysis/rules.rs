@@ -1,0 +1,638 @@
+//! The lint rules and the token-stream matcher behind `ccloud lint`.
+//!
+//! Rules are project-specific invariants clippy cannot express — they
+//! encode *which modules* are allowed to panic, read the wall clock,
+//! iterate unordered containers into serialized output, or compare floats
+//! for equality. See the README "Static analysis" section for the rule
+//! table and the rationale behind each scope.
+
+use std::fmt;
+
+use crate::analysis::lexer::{lex, LintComment, Tok, Token};
+
+/// Which tree a file came from — decides which rules apply.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum FileClass {
+    /// `src/**` except `src/main.rs`: the library every consumer links.
+    Library,
+    /// `src/main.rs`: the CLI driver (panics and exits are its job).
+    Binary,
+    /// `tests/**`: integration tests.
+    Tests,
+    /// `benches/**`: the figure/bench harnesses.
+    Benches,
+}
+
+/// Lint rule identifiers (`rule-id` in findings and suppressions).
+#[derive(Clone, Copy, Debug, PartialEq, Eq, PartialOrd, Ord)]
+pub enum Rule {
+    /// R1: no `unwrap`/`expect`/`panic!`/`todo!`/`unimplemented!` in
+    /// library code.
+    NoPanic,
+    /// R2: no `Instant::now`/`SystemTime` outside the live-serving and
+    /// process-supervision modules.
+    NoWallclock,
+    /// R3: no `HashMap`/`HashSet` in modules whose iteration order can
+    /// reach serialized output.
+    NoUnorderedIter,
+    /// R4: no bare float `==`/`!=`, no `partial_cmp(..).unwrap()`.
+    NoFloatEq,
+    /// R5: no `std::process::exit` outside `main.rs`.
+    NoProcessExit,
+    /// Meta: a `cc-lint:` comment that is malformed or lacks a reason.
+    BadSuppression,
+    /// Meta: a well-formed suppression that suppressed nothing.
+    UnusedSuppression,
+}
+
+impl Rule {
+    /// The stable id used in findings, suppressions and the JSON report.
+    pub fn id(&self) -> &'static str {
+        match self {
+            Rule::NoPanic => "no-panic",
+            Rule::NoWallclock => "no-wallclock",
+            Rule::NoUnorderedIter => "no-unordered-iter",
+            Rule::NoFloatEq => "no-float-eq",
+            Rule::NoProcessExit => "no-process-exit",
+            Rule::BadSuppression => "bad-suppression",
+            Rule::UnusedSuppression => "unused-suppression",
+        }
+    }
+
+    /// Parse a rule id as written in an `allow(...)` suppression. The meta
+    /// rules are not suppressible, so they are not accepted here.
+    pub fn from_id(s: &str) -> Option<Rule> {
+        match s {
+            "no-panic" => Some(Rule::NoPanic),
+            "no-wallclock" => Some(Rule::NoWallclock),
+            "no-unordered-iter" => Some(Rule::NoUnorderedIter),
+            "no-float-eq" => Some(Rule::NoFloatEq),
+            "no-process-exit" => Some(Rule::NoProcessExit),
+            _ => None,
+        }
+    }
+}
+
+impl fmt::Display for Rule {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str(self.id())
+    }
+}
+
+/// One lint finding, rendered as `path:line: rule-id message`.
+#[derive(Clone, Debug)]
+pub struct Finding {
+    /// Path relative to the workspace root, `/`-separated.
+    pub path: String,
+    /// 1-indexed source line.
+    pub line: u32,
+    /// The violated rule.
+    pub rule: Rule,
+    /// Human-oriented explanation with the suggested fix.
+    pub message: String,
+}
+
+impl fmt::Display for Finding {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "{}:{}: {} {}", self.path, self.line, self.rule.id(), self.message)
+    }
+}
+
+/// Files (relative to the workspace root) allowed to panic: the property
+/// testing harness, whose *contract* is to panic on a failed property.
+const PANIC_ALLOWLIST: &[&str] = &["src/util/prop.rs"];
+
+/// Modules allowed to read the wall clock: the live serving stack
+/// (coordinator measures real request latency), the bench harness, and
+/// the OS-process supervisors (orchestrator timeouts, proc backoff).
+const WALLCLOCK_ALLOWLIST_PREFIXES: &[&str] = &["src/coordinator/"];
+const WALLCLOCK_ALLOWLIST_FILES: &[&str] =
+    &["src/util/bench.rs", "src/util/proc.rs", "src/experiment/orchestrator.rs"];
+
+/// Modules whose container iteration order reaches serialized output
+/// (JSON/CSV codecs, report tables, experiment outcomes): unordered maps
+/// are banned outright — `BTreeMap`/`BTreeSet` or an explicit sort.
+const ORDERED_OUTPUT_PREFIXES: &[&str] = &["src/report/", "src/experiment/"];
+const ORDERED_OUTPUT_FILES: &[&str] =
+    &["src/util/json.rs", "src/util/csv.rs", "src/config/experiment.rs"];
+
+fn in_panic_scope(class: FileClass, path: &str) -> bool {
+    class == FileClass::Library && !PANIC_ALLOWLIST.contains(&path)
+}
+
+fn in_wallclock_scope(class: FileClass, path: &str) -> bool {
+    class == FileClass::Library
+        && !WALLCLOCK_ALLOWLIST_PREFIXES.iter().any(|p| path.starts_with(p))
+        && !WALLCLOCK_ALLOWLIST_FILES.contains(&path)
+}
+
+fn in_ordered_output_scope(class: FileClass, path: &str) -> bool {
+    class == FileClass::Library
+        && (ORDERED_OUTPUT_PREFIXES.iter().any(|p| path.starts_with(p))
+            || ORDERED_OUTPUT_FILES.contains(&path))
+}
+
+/// A parsed suppression: `// cc-lint: allow(rule-id) reason`, plus a
+/// consumption mark so stale suppressions can be reported.
+struct Suppression {
+    line: u32,
+    rule: Rule,
+    used: bool,
+}
+
+/// Parse the body of a `cc-lint:` comment into a suppression, or a
+/// `bad-suppression` finding when malformed or reason-less.
+fn parse_suppression(c: &LintComment, path: &str) -> Result<Suppression, Finding> {
+    let bad = |msg: String| Finding {
+        path: path.to_string(),
+        line: c.line,
+        rule: Rule::BadSuppression,
+        message: msg,
+    };
+    let body = c.body.trim();
+    let Some(rest) = body.strip_prefix("allow(") else {
+        return Err(bad(format!(
+            "unrecognized cc-lint directive '{body}' — expected `cc-lint: allow(rule-id) reason`"
+        )));
+    };
+    let Some((id, reason)) = rest.split_once(')') else {
+        return Err(bad("missing ')' after the rule id".to_string()));
+    };
+    let Some(rule) = Rule::from_id(id.trim()) else {
+        return Err(bad(format!("unknown rule id '{}' in allow(...)", id.trim())));
+    };
+    if reason.trim().is_empty() {
+        return Err(bad(format!(
+            "allow({}) requires a reason: `cc-lint: allow({}) why this is sound`",
+            rule.id(),
+            rule.id()
+        )));
+    }
+    Ok(Suppression { line: c.line, rule, used: false })
+}
+
+/// Scan one file's source and return its findings.
+///
+/// `path` is the workspace-relative path used both for scoping (which
+/// rules apply) and for rendering. Findings inside `#[cfg(test)]` items
+/// are dropped for every rule except the two that pierce test code
+/// (`partial_cmp(..).unwrap()` — a NaN hazard breaks determinism wherever
+/// it sorts — and `process::exit`, which kills the whole test harness).
+pub fn scan_source(path: &str, class: FileClass, src: &str) -> Vec<Finding> {
+    let lexed = lex(src);
+    let test_region = mark_test_regions(&lexed.tokens);
+    let mut sups: Vec<Suppression> = Vec::new();
+    let mut findings: Vec<Finding> = Vec::new();
+    for c in &lexed.lint_comments {
+        match parse_suppression(c, path) {
+            Ok(s) => sups.push(s),
+            Err(f) => findings.push(f),
+        }
+    }
+
+    let mut emit = |line: u32, rule: Rule, message: String, sups: &mut [Suppression]| {
+        // A suppression covers findings on its own line (trailing comment)
+        // or on the line directly below (comment-above style).
+        if let Some(s) = sups
+            .iter_mut()
+            .find(|s| s.rule == rule && (s.line == line || s.line + 1 == line))
+        {
+            s.used = true;
+            return;
+        }
+        findings.push(Finding { path: path.to_string(), line, rule, message });
+    };
+
+    let toks = &lexed.tokens;
+    let lib_rules = |i: usize| !test_region[i];
+    for i in 0..toks.len() {
+        let line = toks[i].line;
+        match &toks[i].tok {
+            Tok::Op(".") if in_panic_scope(class, path) && lib_rules(i) => {
+                if let Some(name) = ident_at(toks, i + 1) {
+                    if (name == "unwrap" || name == "expect") && is_op(toks, i + 2, "(") {
+                        emit(
+                            toks[i + 1].line,
+                            Rule::NoPanic,
+                            format!(
+                                "`.{name}()` can panic in library code; return a located \
+                                 `crate::Error` or recover (suppress only with a reason)"
+                            ),
+                            &mut sups,
+                        );
+                    }
+                }
+            }
+            Tok::Ident(id)
+                if (id == "panic" || id == "todo" || id == "unimplemented")
+                    && is_op(toks, i + 1, "!")
+                    && in_panic_scope(class, path)
+                    && lib_rules(i) =>
+            {
+                emit(
+                    line,
+                    Rule::NoPanic,
+                    format!("`{id}!` aborts library callers; return a located `crate::Error`"),
+                    &mut sups,
+                );
+            }
+            Tok::Ident(id)
+                if id == "Instant"
+                    && is_op(toks, i + 1, "::")
+                    && ident_at(toks, i + 2) == Some("now")
+                    && in_wallclock_scope(class, path)
+                    && lib_rules(i) =>
+            {
+                emit(
+                    line,
+                    Rule::NoWallclock,
+                    "`Instant::now()` leaks wall-clock time into a simulation/engine path; \
+                     thread a virtual clock through instead"
+                        .to_string(),
+                    &mut sups,
+                );
+            }
+            Tok::Ident(id)
+                if id == "SystemTime" && in_wallclock_scope(class, path) && lib_rules(i) =>
+            {
+                emit(
+                    line,
+                    Rule::NoWallclock,
+                    "`SystemTime` is wall-clock state; simulation and engine paths must be \
+                     clock-free"
+                        .to_string(),
+                    &mut sups,
+                );
+            }
+            Tok::Ident(id)
+                if (id == "HashMap" || id == "HashSet")
+                    && in_ordered_output_scope(class, path)
+                    && lib_rules(i) =>
+            {
+                emit(
+                    line,
+                    Rule::NoUnorderedIter,
+                    format!(
+                        "`{id}` iteration order is nondeterministic and this module feeds \
+                         serialized output; use `BTreeMap`/`BTreeSet` or sort explicitly"
+                    ),
+                    &mut sups,
+                );
+            }
+            Tok::Op(op @ ("==" | "!="))
+                if class == FileClass::Library && lib_rules(i) && float_operand(toks, i) =>
+            {
+                emit(
+                    line,
+                    Rule::NoFloatEq,
+                    format!(
+                        "bare float `{op}` — use an epsilon, `total_cmp`, or `to_bits()` \
+                         (exact-representation comparisons need a suppression explaining \
+                         why they are exact)"
+                    ),
+                    &mut sups,
+                );
+            }
+            Tok::Ident(id) if id == "partial_cmp" && is_op(toks, i + 1, "(") => {
+                // Pierces tests/benches and #[cfg(test)]: a NaN-panicking
+                // sort comparator is a determinism bug wherever it runs.
+                if let Some(j) = matching_paren(toks, i + 1) {
+                    if is_op(toks, j + 1, ".")
+                        && matches!(ident_at(toks, j + 2), Some("unwrap") | Some("expect"))
+                    {
+                        emit(
+                            line,
+                            Rule::NoFloatEq,
+                            "`partial_cmp(..).unwrap()` panics on NaN; use \
+                             `util::stats::total_cmp_f64` (NaN sorts last) instead"
+                                .to_string(),
+                            &mut sups,
+                        );
+                    }
+                }
+            }
+            Tok::Ident(id)
+                if id == "process"
+                    && is_op(toks, i + 1, "::")
+                    && ident_at(toks, i + 2) == Some("exit")
+                    && class != FileClass::Binary =>
+            {
+                // Pierces tests: exit() in a test kills the whole harness.
+                emit(
+                    line,
+                    Rule::NoProcessExit,
+                    "`process::exit` skips destructors and is only the CLI driver's \
+                     (`src/main.rs`) prerogative; return an error instead"
+                        .to_string(),
+                    &mut sups,
+                );
+            }
+            _ => {}
+        }
+    }
+
+    for s in &sups {
+        if !s.used {
+            findings.push(Finding {
+                path: path.to_string(),
+                line: s.line,
+                rule: Rule::UnusedSuppression,
+                message: format!(
+                    "allow({}) suppresses nothing on this or the next line — remove it",
+                    s.rule.id()
+                ),
+            });
+        }
+    }
+    findings.sort_by(|a, b| (a.line, a.rule).cmp(&(b.line, b.rule)));
+    findings
+}
+
+/// Identifier text at token index `i`, if any.
+fn ident_at(toks: &[Token], i: usize) -> Option<&str> {
+    match toks.get(i).map(|t| &t.tok) {
+        Some(Tok::Ident(s)) => Some(s.as_str()),
+        _ => None,
+    }
+}
+
+/// Is token `i` the operator `op`?
+fn is_op(toks: &[Token], i: usize, op: &str) -> bool {
+    matches!(toks.get(i).map(|t| &t.tok), Some(Tok::Op(o)) if *o == op)
+}
+
+/// Index of the `)` matching the `(` at `open` (same nesting level).
+fn matching_paren(toks: &[Token], open: usize) -> Option<usize> {
+    let mut depth = 0usize;
+    for (j, t) in toks.iter().enumerate().skip(open) {
+        match t.tok {
+            Tok::Op("(") => depth += 1,
+            Tok::Op(")") => {
+                depth = depth.saturating_sub(1);
+                if depth == 0 {
+                    return Some(j);
+                }
+            }
+            _ => {}
+        }
+    }
+    None
+}
+
+/// Does the `==`/`!=` at token `i` have a float-literal operand? Checks
+/// the token before and after, looking through a unary minus on the right
+/// (`x == -1.0`). This is a spelling-level heuristic: it catches literal
+/// comparisons (the common determinism hazard) and leaves typed-variable
+/// comparisons to review.
+fn float_operand(toks: &[Token], i: usize) -> bool {
+    if i > 0 && matches!(toks[i - 1].tok, Tok::Float) {
+        return true;
+    }
+    match toks.get(i + 1).map(|t| &t.tok) {
+        Some(Tok::Float) => true,
+        Some(Tok::Op("-")) => matches!(toks.get(i + 2).map(|t| &t.tok), Some(Tok::Float)),
+        _ => false,
+    }
+}
+
+/// Mark every token covered by a `#[cfg(test)]` item (attribute included).
+///
+/// Recognition is token-level: a `#[...]` attribute whose content mentions
+/// `cfg` and `test` (and not `not`) starts an exempt region that runs to
+/// the end of the annotated item — the matching `}` of the item's first
+/// brace, or the first `;` when no brace opens (e.g. a `use`). This covers
+/// the `#[cfg(test)] mod tests { ... }` idiom (and single test items); it
+/// deliberately does not try to be a full attribute grammar.
+fn mark_test_regions(toks: &[Token]) -> Vec<bool> {
+    let mut exempt = vec![false; toks.len()];
+    let mut i = 0usize;
+    while i < toks.len() {
+        if is_op(toks, i, "#") && is_op(toks, i + 1, "[") {
+            // Scan the attribute to its closing bracket.
+            let mut depth = 0usize;
+            let mut j = i + 1;
+            let mut saw_cfg = false;
+            let mut saw_test = false;
+            let mut saw_not = false;
+            while j < toks.len() {
+                match &toks[j].tok {
+                    Tok::Op("[") => depth += 1,
+                    Tok::Op("]") => {
+                        depth -= 1;
+                        if depth == 0 {
+                            break;
+                        }
+                    }
+                    Tok::Ident(s) if s == "cfg" => saw_cfg = true,
+                    Tok::Ident(s) if s == "test" => saw_test = true,
+                    Tok::Ident(s) if s == "not" => saw_not = true,
+                    _ => {}
+                }
+                j += 1;
+            }
+            if saw_cfg && saw_test && !saw_not && j < toks.len() {
+                // Exempt from the attribute through the end of the item.
+                let end = item_end(toks, j + 1);
+                for flag in exempt.iter_mut().take(end.min(toks.len())).skip(i) {
+                    *flag = true;
+                }
+                i = end;
+                continue;
+            }
+            i = j + 1;
+            continue;
+        }
+        i += 1;
+    }
+    exempt
+}
+
+/// End (exclusive token index) of the item starting at `start`: just past
+/// the `}` matching its first `{`, or just past the first top-level `;`.
+fn item_end(toks: &[Token], start: usize) -> usize {
+    let mut j = start;
+    while j < toks.len() {
+        match toks[j].tok {
+            Tok::Op("{") => {
+                let mut depth = 0usize;
+                while j < toks.len() {
+                    match toks[j].tok {
+                        Tok::Op("{") => depth += 1,
+                        Tok::Op("}") => {
+                            depth -= 1;
+                            if depth == 0 {
+                                return j + 1;
+                            }
+                        }
+                        _ => {}
+                    }
+                    j += 1;
+                }
+                return j;
+            }
+            Tok::Op(";") => return j + 1,
+            _ => j += 1,
+        }
+    }
+    j
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn scan(path: &str, class: FileClass, src: &str) -> Vec<Finding> {
+        scan_source(path, class, src)
+    }
+
+    #[test]
+    fn unwrap_in_library_flagged_but_not_in_tests_class() {
+        let src = "fn f() { x.unwrap(); }";
+        let fs = scan("src/a.rs", FileClass::Library, src);
+        assert_eq!(fs.len(), 1);
+        assert_eq!(fs[0].rule, Rule::NoPanic);
+        assert_eq!(fs[0].line, 1);
+        assert!(scan("tests/a.rs", FileClass::Tests, src).is_empty());
+        assert!(scan("benches/a.rs", FileClass::Benches, src).is_empty());
+        assert!(scan("src/main.rs", FileClass::Binary, src).is_empty());
+    }
+
+    #[test]
+    fn unwrap_variants_are_not_flagged() {
+        let src = "fn f() { x.unwrap_or(0); y.unwrap_or_else(|e| e.into_inner()); \
+                   z.unwrap_or_default(); p.expect_byte(b'x'); }";
+        assert!(scan("src/a.rs", FileClass::Library, src).is_empty());
+    }
+
+    #[test]
+    fn cfg_test_mod_is_exempt_for_panics_only() {
+        let src = "fn lib() {}\n#[cfg(test)]\nmod tests {\n  fn t() { x.unwrap(); \
+                   v.sort_by(|a, b| a.partial_cmp(b).unwrap()); }\n}\n";
+        let fs = scan("src/a.rs", FileClass::Library, src);
+        // The unwrap is exempt (test code); the NaN-hazard comparator is not.
+        assert_eq!(fs.len(), 1, "{fs:?}");
+        assert_eq!(fs[0].rule, Rule::NoFloatEq);
+        assert_eq!(fs[0].line, 4);
+    }
+
+    #[test]
+    fn suppression_consumes_and_requires_reason() {
+        let ok = "fn f() { x.unwrap(); } // cc-lint: allow(no-panic) invariant: x was checked\n";
+        assert!(scan("src/a.rs", FileClass::Library, ok).is_empty());
+        let above =
+            "// cc-lint: allow(no-panic) poisoning recovered by design\nfn f() { x.unwrap(); }\n";
+        assert!(scan("src/a.rs", FileClass::Library, above).is_empty());
+        let noreason = "fn f() { x.unwrap(); } // cc-lint: allow(no-panic)\n";
+        let fs = scan("src/a.rs", FileClass::Library, noreason);
+        assert_eq!(fs.len(), 2, "{fs:?}"); // bad-suppression + the unsuppressed finding
+        assert!(fs.iter().any(|f| f.rule == Rule::BadSuppression));
+        assert!(fs.iter().any(|f| f.rule == Rule::NoPanic));
+    }
+
+    #[test]
+    fn unused_and_unknown_suppressions_are_findings() {
+        let stale = "// cc-lint: allow(no-panic) nothing here panics\nfn f() {}\n";
+        let fs = scan("src/a.rs", FileClass::Library, stale);
+        assert_eq!(fs.len(), 1);
+        assert_eq!(fs[0].rule, Rule::UnusedSuppression);
+        let unknown = "// cc-lint: allow(no-such-rule) whatever\nfn f() {}\n";
+        let fs = scan("src/a.rs", FileClass::Library, unknown);
+        assert_eq!(fs.len(), 1);
+        assert_eq!(fs[0].rule, Rule::BadSuppression);
+    }
+
+    #[test]
+    fn wallclock_scoping() {
+        let src = "fn f() { let t = Instant::now(); }";
+        assert_eq!(scan("src/perf/events.rs", FileClass::Library, src).len(), 1);
+        assert!(scan("src/coordinator/batcher.rs", FileClass::Library, src).is_empty());
+        assert!(scan("src/util/bench.rs", FileClass::Library, src).is_empty());
+        assert!(scan("src/util/proc.rs", FileClass::Library, src).is_empty());
+        assert!(scan("src/experiment/orchestrator.rs", FileClass::Library, src).is_empty());
+        // `Instant` as a type (no ::now) is fine anywhere.
+        assert!(scan("src/perf/events.rs", FileClass::Library, "fn f(t: Instant) {}").is_empty());
+        let sys = "fn f() { let t = SystemTime::now(); }";
+        let fs = scan("src/perf/events.rs", FileClass::Library, sys);
+        assert_eq!(fs.len(), 1);
+        assert_eq!(fs[0].rule, Rule::NoWallclock);
+    }
+
+    #[test]
+    fn unordered_iter_scoping() {
+        let src = "use std::collections::HashMap;\nfn f() { let m: HashMap<u32, u32>; }";
+        let fs = scan("src/report/mod.rs", FileClass::Library, src);
+        assert_eq!(fs.len(), 2, "use + type mention: {fs:?}");
+        assert!(fs.iter().all(|f| f.rule == Rule::NoUnorderedIter));
+        // Outside the serialization-adjacent modules the rule is silent.
+        assert!(scan("src/explore/pareto.rs", FileClass::Library, src).is_empty());
+    }
+
+    #[test]
+    fn float_eq_literal_heuristic() {
+        for bad in
+            ["x == 0.0", "0.5 != y", "x == -1.0", "x == 1e15", "a.b() == 2.5", "x != 1E-3"]
+        {
+            let src = format!("fn f() {{ if {bad} {{}} }}");
+            let fs = scan("src/a.rs", FileClass::Library, &src);
+            assert_eq!(fs.len(), 1, "{bad}: {fs:?}");
+            assert_eq!(fs[0].rule, Rule::NoFloatEq, "{bad}");
+        }
+        for ok in ["x == 0", "x != y", "i == n - 1", "x <= 0.5", "x == '.'", "s == \"0.5\""] {
+            let src = format!("fn f() {{ if {ok} {{}} }}");
+            assert!(
+                scan("src/a.rs", FileClass::Library, &src).is_empty(),
+                "{ok} must not be flagged"
+            );
+        }
+        // Tests may assert exact float equality freely.
+        assert!(scan("tests/a.rs", FileClass::Tests, "fn f() { if x == 0.0 {} }").is_empty());
+    }
+
+    #[test]
+    fn partial_cmp_unwrap_pierces_everywhere() {
+        let src = "fn f() { v.sort_by(|a, b| a.partial_cmp(b).unwrap()); }";
+        for (path, class) in [
+            ("src/a.rs", FileClass::Library),
+            ("tests/a.rs", FileClass::Tests),
+            ("benches/a.rs", FileClass::Benches),
+        ] {
+            let fs = scan(path, class, src);
+            assert_eq!(fs.len(), 1, "{path}: {fs:?}");
+            assert_eq!(fs[0].rule, Rule::NoFloatEq);
+        }
+        // The multi-line chained form must match too (the engine's
+        // pts.sort_by spans lines), and `unwrap_or(...)` must not.
+        let chained = "fn f() { xs.sort_by(|a, b| {\n a.x\n .partial_cmp(&b.x)\n \
+                       .unwrap()\n });\n}";
+        assert_eq!(scan("src/a.rs", FileClass::Library, chained).len(), 1);
+        let or = "fn f() { v.sort_by(|a, b| a.partial_cmp(b).unwrap_or(Ordering::Equal)); }";
+        assert!(scan("src/a.rs", FileClass::Library, or).is_empty());
+    }
+
+    #[test]
+    fn process_exit_only_in_main() {
+        let src = "fn f() { std::process::exit(1); }";
+        assert!(scan("src/main.rs", FileClass::Binary, src).is_empty());
+        for (path, class) in [
+            ("src/a.rs", FileClass::Library),
+            ("tests/a.rs", FileClass::Tests),
+            ("benches/a.rs", FileClass::Benches),
+        ] {
+            let fs = scan(path, class, src);
+            assert_eq!(fs.len(), 1, "{path}");
+            assert_eq!(fs[0].rule, Rule::NoProcessExit);
+        }
+    }
+
+    #[test]
+    fn panic_allowlist_and_macros() {
+        let src = "fn f() { panic!(\"boom\"); todo!(); unimplemented!(); }";
+        let fs = scan("src/a.rs", FileClass::Library, src);
+        assert_eq!(fs.len(), 3, "{fs:?}");
+        assert!(fs.iter().all(|f| f.rule == Rule::NoPanic));
+        assert!(scan("src/util/prop.rs", FileClass::Library, src).is_empty());
+        // assert!/debug_assert! are NOT in R1's list (invariant checks stay).
+        let asserts = "fn f() { assert!(x > 0); assert_eq!(a, b); debug_assert!(ok); }";
+        assert!(scan("src/a.rs", FileClass::Library, asserts).is_empty());
+    }
+}

@@ -496,6 +496,7 @@ fn validate_serve(s: &ServeSpec) -> Result<(), String> {
     if s.replicas == 0 {
         return Err("'serve.replicas' must be >= 1".into());
     }
+    // cc-lint: allow(no-float-eq) 0.0 is the exact spec-default sentinel the codec writes for an absent quantum; no arithmetic ever produces it
     if s.quantum != 0.0 && !(s.quantum > 0.0 && s.quantum.is_finite()) {
         return Err(format!(
             "'serve.quantum' must be a finite positive number of seconds \
@@ -780,6 +781,7 @@ fn serve_to_json(s: &ServeSpec) -> Json {
     m.insert("route".into(), Json::Str(s.route.name().into()));
     // Defaults stay un-emitted so pre-quantum specs round-trip byte-
     // identically (absent ↔ 0.0 / None above).
+    // cc-lint: allow(no-float-eq) exact round-trip of the codec's own 0.0 absent-field sentinel, mirroring the validate() check
     if s.quantum != 0.0 {
         m.insert("quantum".into(), Json::Num(s.quantum));
     }

@@ -22,6 +22,7 @@ use std::time::{Duration, Instant};
 
 use crate::coordinator::request::Request;
 use crate::sched::{sanitize, Action, KvBudget, Policy, SchedView, StaticBatch};
+use crate::util::sync::{lock_unpoisoned, wait_timeout_unpoisoned, wait_unpoisoned};
 
 /// Batcher tuning knobs.
 #[derive(Clone, Debug)]
@@ -111,13 +112,13 @@ impl Batcher {
 
     /// Enqueue a request.
     pub fn submit(&self, req: Request) {
-        self.queue.lock().unwrap().push_back(req);
+        lock_unpoisoned(&self.queue).push_back(req);
         self.nonempty.notify_all();
     }
 
     /// Number of queued requests.
     pub fn queued(&self) -> usize {
-        self.queue.lock().unwrap().len()
+        lock_unpoisoned(&self.queue).len()
     }
 
     /// Signal shutdown: `next_batch` returns None once drained.
@@ -127,7 +128,7 @@ impl Batcher {
     /// lock (and re-checks the flag before parking), so no wakeup can be
     /// missed and the waits need no insurance timeouts.
     pub fn close(&self) {
-        let _q = self.queue.lock().unwrap();
+        let _q = lock_unpoisoned(&self.queue);
         self.closed.store(true, Ordering::SeqCst);
         self.nonempty.notify_all();
     }
@@ -208,7 +209,9 @@ impl Batcher {
         let mut slots: Vec<Option<Request>> = Vec::with_capacity(self.cfg.batch);
         let mut prompts = Vec::with_capacity(self.cfg.batch);
         for _ in 0..n {
-            let req = q.pop_front().unwrap();
+            // `n` was clamped to the queue length above, so the queue
+            // cannot run dry mid-batch; bail rather than panic if it does.
+            let Some(req) = q.pop_front() else { break };
             prompts.push(self.fit_prompt(&req.prompt));
             slots.push(Some(req));
         }
@@ -235,7 +238,7 @@ impl Batcher {
     /// under the queue lock, so no wakeup can be missed (see
     /// [`Batcher::close`]).
     pub fn next_batch_policy(&self, policy: &mut dyn Policy) -> Option<Batch> {
-        let mut q = self.queue.lock().unwrap();
+        let mut q = lock_unpoisoned(&self.queue);
         loop {
             if self.is_closed() {
                 if q.is_empty() {
@@ -270,16 +273,17 @@ impl Batcher {
                         // (the policy will admit on the next pass).
                         continue;
                     }
-                    let (guard, _) = self
-                        .nonempty
-                        .wait_timeout(q, Duration::from_secs_f64(deadline_s - now_s))
-                        .unwrap();
+                    let (guard, _) = wait_timeout_unpoisoned(
+                        &self.nonempty,
+                        q,
+                        Duration::from_secs_f64(deadline_s - now_s),
+                    );
                     q = guard;
                 }
                 // `sanitize` never returns Decode when `live == 0`; treat it
                 // like an open-ended wait if a custom policy insists.
                 Action::Wait(None) | Action::Decode => {
-                    q = self.nonempty.wait(q).unwrap();
+                    q = wait_unpoisoned(&self.nonempty, q);
                 }
             }
         }

@@ -6,6 +6,7 @@ use std::time::{Duration, Instant};
 
 use crate::coordinator::request::Response;
 use crate::util::stats;
+use crate::util::sync::lock_unpoisoned;
 
 /// Aggregated serving metrics (thread safe).
 #[derive(Default)]
@@ -70,7 +71,7 @@ impl Metrics {
     pub fn record_batch(&self, live: usize, total: usize, steps: usize, prefill_s: f64, decode_s: f64) {
         let now = Instant::now();
         let wall = (prefill_s + decode_s).max(0.0);
-        let mut m = self.inner.lock().unwrap();
+        let mut m = lock_unpoisoned(&self.inner);
         m.batches += 1;
         m.live_slots += live as u64;
         m.total_slots += total as u64;
@@ -86,12 +87,12 @@ impl Metrics {
 
     /// Record a completed response.
     pub fn record_response(&self, resp: Response) {
-        self.inner.lock().unwrap().responses.push(resp);
+        lock_unpoisoned(&self.inner).responses.push(resp);
     }
 
     /// Summarize.
     pub fn summary(&self) -> Summary {
-        let m = self.inner.lock().unwrap();
+        let m = lock_unpoisoned(&self.inner);
         let totals: Vec<f64> = m.responses.iter().map(|r| r.total_s()).collect();
         let queues: Vec<f64> = m.responses.iter().map(|r| r.queue_s).collect();
         let ttfts: Vec<f64> = m.responses.iter().map(|r| r.ttft_s).collect();

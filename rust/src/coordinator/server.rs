@@ -123,7 +123,7 @@ impl Coordinator {
                 while let Some(batch) = batcher.next_batch_policy(policy) {
                     let rs = run_batch(&engine, &metrics, batch)?;
                     replica_batches[rid].fetch_add(1, Ordering::Relaxed);
-                    responses.lock().unwrap().extend(rs);
+                    crate::util::sync::lock_unpoisoned(&responses).extend(rs);
                 }
                 Ok(())
             }));
@@ -152,7 +152,7 @@ impl Coordinator {
         for w in self.workers.drain(..) {
             w.join().map_err(|_| Error::Runtime("worker panicked".into()))??;
         }
-        let mut rs = std::mem::take(&mut *self.responses.lock().unwrap());
+        let mut rs = std::mem::take(&mut *crate::util::sync::lock_unpoisoned(&self.responses));
         rs.sort_by_key(|r| r.id);
         Ok(rs)
     }

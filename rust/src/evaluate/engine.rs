@@ -321,10 +321,12 @@ impl SweepEngine {
                 best = Some((*score, wi, si));
             }
         }
-        let winner = best.map(|(_, wi, si)| {
+        let winner = best.and_then(|(_, wi, si)| {
             // Exact, unpruned recomputation of the winning pair (cheap: one
-            // server × one workload).
-            let point = evaluate_server_bounded(
+            // server × one workload). The pair scored finite above, so the
+            // unpruned re-evaluation yields a point; `and_then` keeps that
+            // invariant a no-winner outcome instead of a panic.
+            evaluate_server_bounded(
                 space,
                 &servers[si],
                 &grid[wi],
@@ -333,8 +335,7 @@ impl SweepEngine {
                 f64::INFINITY,
             )
             .0
-            .expect("winning pair must re-evaluate");
-            (wi, si, point)
+            .map(|point| (wi, si, point))
         });
         (winner, stats)
     }
@@ -438,9 +439,7 @@ impl SweepEngine {
             }
         }
         pts.sort_by(|a, b| {
-            a.2.tco_per_token
-                .partial_cmp(&b.2.tco_per_token)
-                .unwrap_or(std::cmp::Ordering::Equal)
+            crate::util::stats::total_cmp_f64(&a.2.tco_per_token, &b.2.tco_per_token)
                 .then(a.0.cmp(&b.0))
                 .then(a.1.cmp(&b.1))
         });

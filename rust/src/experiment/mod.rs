@@ -188,8 +188,15 @@ fn run_single(ctx: &Ctx, e: &Experiment, model: &ModelSpec, engine: &SweepEngine
             e.shard.as_ref(),
         ))),
         Task::ServeSim => {
-            let wp = e.workload.expect("validated: serve-sim carries a workload");
-            let spec = e.serve.clone().expect("validated: serve-sim carries a serve spec");
+            // validate() requires both fields on a serve-sim spec; a spec
+            // that dodged validation degrades to a carried error, exactly
+            // like a mid-campaign execution failure.
+            let (Some(wp), Some(spec)) = (e.workload, e.serve.clone()) else {
+                return Outcome::Error(
+                    "serve-sim spec lacks its workload/serve sections (unvalidated spec?)"
+                        .to_string(),
+                );
+            };
             let w = Workload::new(model.clone(), wp.ctx, wp.batch);
             match serve_outcome(ctx, &w, &spec, e.load, engine) {
                 Ok(o) => Outcome::Serve(Box::new(o)),
@@ -445,6 +452,7 @@ pub(crate) fn sweep_outcome_sharded(
     let (srv_lo, srv_hi) = sel.and_then(|s| s.servers).unwrap_or((0, ctx.servers.len()));
     let grid = &grid_full[glo..ghi];
     let servers = &ctx.servers[srv_lo..srv_hi];
+    // cc-lint: allow(no-wallclock) engine wall-time counter, quarantined under the outcome's engine-variant "engine" JSON key (never in the invariant payload)
     let t0 = Instant::now();
     let (win, stats) = engine.best_over_grid_argmin(&ctx.space, servers, grid);
     let wall_s = t0.elapsed().as_secs_f64();

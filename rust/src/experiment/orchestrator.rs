@@ -352,7 +352,9 @@ pub fn run_distributed(
         let now = Instant::now();
         while running.len() < workers {
             let Some(pos) = pending.iter().position(|&(_, _, t)| t <= now) else { break };
-            let (index, attempt, _) = pending.remove(pos).expect("position is in range");
+            // `pos` came from `iter().position` on this same deque, so the
+            // remove cannot miss; bail from the launch loop if it ever does.
+            let Some((index, attempt, _)) = pending.remove(pos) else { break };
             let spec_path = shards_dir.join(spec_name(index));
             let out_path = shards_dir.join(outcome_name(index));
             let mut cmd = Command::new(&exe);
@@ -417,7 +419,9 @@ pub fn run_distributed(
                     std::fs::read_to_string(&p).map_err(|e| format!("{}: {e}", p.display()))?;
                 let env = Envelope::from_json_str(&text)
                     .map_err(|e| format!("{}: {e}", p.display()))?;
-                let s = env.spec.shard.as_ref().expect("from_json_str checked the marker");
+                let Some(s) = env.spec.shard.as_ref() else {
+                    return Err(format!("{}: checkpoint lacks a shard marker", p.display()));
+                };
                 if s.index != slot.index || s.parent != fp {
                     return Err(format!(
                         "{}: checkpoint is for shard {} of fingerprint {}",

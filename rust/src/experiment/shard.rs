@@ -60,7 +60,8 @@ pub fn plan(e: &Experiment, workers: usize, engine: &mut Engine) -> Result<Vec<E
     } else {
         for (mi, name) in e.models.iter().enumerate() {
             let share = worker_share(workers, n_models, mi);
-            let model = ModelSpec::by_name(name).expect("validated model");
+            let model = ModelSpec::by_name(name)
+                .ok_or_else(|| Error::Config(format!("unknown model '{name}' in shard plan")))?;
             let grid_len = Workload::study_grid(&model).len();
             if share <= 1 {
                 parts.push((vec![name.clone()], None, None));
@@ -195,6 +196,7 @@ pub struct Merged {
 }
 
 fn sel(env: &Envelope) -> &ShardSel {
+    // cc-lint: allow(no-panic) Envelope::from_json_str rejects markerless envelopes before merge
     env.spec.shard.as_ref().expect("merge checked the shard marker")
 }
 

@@ -23,6 +23,8 @@
 //! * `table2` / `fig7`..`fig15` — regenerate a paper table/figure
 //! * `serve`                  — load AOT artifacts and serve a demo stream
 //! * `ccmem`                  — run the CC-MEM cycle simulator validations
+//! * `lint [ROOT] [--json]`   — static determinism/robustness analyzer over
+//!   the workspace (`src`, `tests`, `benches`); exits 1 on any finding
 //!
 //! The experiment-shaped subcommands (`sweep`, `serve-sim`, `optimize`,
 //! `table2`, `run`) are pure CLI→[`Experiment`] translations dispatched
@@ -54,7 +56,8 @@ fn usage() -> ! {
     eprintln!(
         "usage: ccloud <cmd> [--full] [--out DIR] [--json] [--model NAME] [--threads N] [--seq] ...\n\
          cmds: explore optimize sweep serve-sim run shard merge run-shard validate table2\n\
-         fig7..fig15 ablate serve ccmem\n\
+         fig7..fig15 ablate serve ccmem lint\n\
+         lint: ccloud lint [WORKSPACE_ROOT] [--json] — zero findings = exit 0\n\
          run/validate: ccloud run experiments/spec.json [more.json ...] [--json]\n\
          distributed: ccloud run spec.json --distributed --run-dir DIR [--workers N]\n\
          [--timeout-s S] [--retries K] [--backoff-ms MS] [--fault-plan PLAN] | --resume DIR\n\
@@ -315,6 +318,34 @@ fn main() -> Result<()> {
         }
         "serve" => serve(&args)?,
         "ccmem" => ccmem(),
+        "lint" => {
+            // Root is the workspace directory holding src/tests/benches:
+            // given explicitly, or auto-detected (cwd, else cwd/rust so the
+            // command works from the repository root too).
+            let root = match args.positional.get(1) {
+                Some(p) => PathBuf::from(p.as_str()),
+                None => {
+                    let cwd = std::env::current_dir()?;
+                    if cwd.join("src").is_dir() {
+                        cwd
+                    } else {
+                        cwd.join("rust")
+                    }
+                }
+            };
+            let findings = chiplet_cloud::analysis::run(&root)?;
+            if args.has("json") {
+                println!("{}", chiplet_cloud::analysis::report_json(&root, &findings));
+            } else {
+                for f in &findings {
+                    println!("{f}");
+                }
+            }
+            eprintln!("ccloud lint: {} finding(s) in {}", findings.len(), root.display());
+            if !findings.is_empty() {
+                std::process::exit(1);
+            }
+        }
         _ => usage(),
     }
     Ok(())

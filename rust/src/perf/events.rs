@@ -150,10 +150,7 @@ pub fn open_loop_trace(t: &TrafficSpec) -> Vec<Arrival> {
     // Generation is already time-ordered (the clock only advances), but the
     // tie-break by id is the contract consumers rely on — make it explicit.
     out.sort_by(|a, b| {
-        a.at_s
-            .partial_cmp(&b.at_s)
-            .unwrap_or(std::cmp::Ordering::Equal)
-            .then(a.id.cmp(&b.id))
+        crate::util::stats::total_cmp_f64(&a.at_s, &b.at_s).then(a.id.cmp(&b.id))
     });
     out
 }
@@ -813,8 +810,7 @@ impl<'a> Replica<'a> {
         let Some(l) = &self.ledger else { return };
         let capacity = l.capacity_blocks();
         while let Some((a, c)) = self.queue.front().copied() {
-            if self.ledger.as_ref().unwrap().blocks_for(a.prompt_tokens + a.new_tokens) <= capacity
-            {
+            if l.blocks_for(a.prompt_tokens + a.new_tokens) <= capacity {
                 break;
             }
             self.queue.pop_front();
@@ -883,13 +879,17 @@ impl<'a> Replica<'a> {
             .collect();
         let mut t = if decoding.is_empty() { 0.0 } else { self.cfg.cost.decode_step_s };
         for _ in 0..n {
-            let (a, c) = self.queue.pop_front().expect("sanitized admission");
+            // `n` comes from sanitize(), which never exceeds the queue
+            // length — an empty queue here means the admission plan is
+            // stale, and admitting nothing is the benign degradation.
+            let Some((a, c)) = self.queue.pop_front() else { break };
             if let Some(l) = self.ledger.as_mut() {
                 let ok = l.admit(a.id, a.prompt_tokens, a.prompt_tokens + a.new_tokens);
                 debug_assert!(ok, "sanitize admitted past the paged KV capacity");
             }
             // Lowest free index, as the reference `position(is_none)` scan
             // picked — slot order decides per-iteration processing order.
+            // cc-lint: allow(no-panic) sanitize() caps admissions at the free-slot count; silently dropping an admitted request here would corrupt the ledger, so a desync must abort
             let Reverse(free) = self.free_list.pop().expect("free slot");
             debug_assert!(self.slots[free].is_none(), "free list desynced");
             self.slots[free] = Some(Slot {
@@ -931,7 +931,9 @@ impl<'a> Replica<'a> {
         self.peak_live = self.peak_live.max(occ);
         // Decode completions for the slots decoding at iteration start.
         for i in decoding {
-            let s = self.slots[i].as_mut().expect("decoding slot");
+            // Selected as occupied at iteration start; nothing in between
+            // vacates slots, so a None here simply has no work to do.
+            let Some(s) = self.slots[i].as_mut() else { continue };
             s.tokens += 1;
             s.remaining -= 1;
             let (id, finished) = (s.id, s.remaining == 0);
@@ -939,8 +941,9 @@ impl<'a> Replica<'a> {
                 l.append(id);
             }
             if finished {
-                let slot = self.slots[i].take().expect("finished slot");
-                self.finish(i, slot);
+                if let Some(slot) = self.slots[i].take() {
+                    self.finish(i, slot);
+                }
             }
         }
         // Prefill completions: the first token emerges with the last chunk.
@@ -955,8 +958,9 @@ impl<'a> Replica<'a> {
                     l.append(id);
                 }
                 if finished {
-                    let slot = self.slots[i].take().expect("finished slot");
-                    self.finish(i, slot);
+                    if let Some(slot) = self.slots[i].take() {
+                        self.finish(i, slot);
+                    }
                 }
             }
         }
@@ -1664,10 +1668,10 @@ where
                 t
             }
             RoutePolicy::Jsq => {
-                (0..n).min_by_key(|&i| (reps[i].outstanding(), i)).expect("replicas > 0")
+                (0..n).min_by_key(|&i| (reps[i].outstanding(), i)).unwrap_or(0)
             }
             RoutePolicy::JsqTokens => {
-                (0..n).min_by_key(|&i| (reps[i].outstanding_tokens(), i)).expect("replicas > 0")
+                (0..n).min_by_key(|&i| (reps[i].outstanding_tokens(), i)).unwrap_or(0)
             }
         };
         reps[target].enqueue(a);

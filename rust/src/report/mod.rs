@@ -171,7 +171,7 @@ pub fn fig7(ctx: &Ctx, out_dir: Option<&Path>) -> Table {
         tco_budget / 1e6
     ));
     let mut dies: Vec<f64> = points.iter().map(|p| p.server.chiplet.die_mm2).collect();
-    dies.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    dies.sort_by(crate::util::stats::total_cmp_f64);
     dies.dedup();
     for die in dies {
         let at_die: Vec<&DesignPoint> =

@@ -61,6 +61,7 @@ impl ModelEngine {
     /// Load artifacts for `name` from `dir`, compile both functions on the
     /// CPU PJRT client and upload the weights.
     pub fn load(dir: impl AsRef<std::path::Path>, name: &str) -> Result<ModelEngine> {
+        // cc-lint: allow(no-wallclock) live PJRT compile/upload timing for operator logs, not a simulation quantity
         let t0 = Instant::now();
         let manifest = Manifest::load(dir, name)?;
         let client = PjRtClient::cpu()?;
@@ -119,7 +120,11 @@ impl ModelEngine {
         let mut args: Vec<&PjRtBuffer> = self.weights.iter().collect();
         args.push(&ids_buf);
         let outs = self.prefill_exe.execute_b::<&PjRtBuffer>(&args)?;
-        let mut row = outs.into_iter().next().unwrap().into_iter();
+        let mut row = outs
+            .into_iter()
+            .next()
+            .ok_or_else(|| Error::Runtime("prefill returned no output rows".into()))?
+            .into_iter();
         // return_tuple=True → single tuple output; handle an untupling
         // runtime too.
         let (logits, state) = self.take_outputs(&mut row, p)?;
@@ -149,7 +154,11 @@ impl ModelEngine {
         args.push(&state.k);
         args.push(&state.v);
         let outs = self.decode_exe.execute_b::<&PjRtBuffer>(&args)?;
-        let mut row = outs.into_iter().next().unwrap().into_iter();
+        let mut row = outs
+            .into_iter()
+            .next()
+            .ok_or_else(|| Error::Runtime("decode returned no output rows".into()))?
+            .into_iter();
         let (logits, new_state) = self.take_outputs(&mut row, state.pos + 1)?;
         *state = new_state;
         self.argmax_logits(&logits)
@@ -197,9 +206,11 @@ impl ModelEngine {
                         parts.len()
                     )));
                 }
-                let v_lit = parts.pop().unwrap();
-                let k_lit = parts.pop().unwrap();
-                let logits = parts.pop().unwrap();
+                let (Some(v_lit), Some(k_lit), Some(logits)) =
+                    (parts.pop(), parts.pop(), parts.pop())
+                else {
+                    return Err(Error::Runtime("tuple output lost a member".into()));
+                };
                 let k = self.buffer_from_literal(&k_lit)?;
                 let v = self.buffer_from_literal(&v_lit)?;
                 // anchor the uploads: await a 1-element readback before the

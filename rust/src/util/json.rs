@@ -51,6 +51,7 @@ impl Json {
 
     /// As usize if numeric and integral.
     pub fn as_usize(&self) -> Option<usize> {
+        // cc-lint: allow(no-float-eq) fract()==0.0 is the exact IEEE-754 integrality test (fract of an integer-valued double is exactly +0.0, never an epsilon)
         self.as_f64().and_then(|x| if x >= 0.0 && x.fract() == 0.0 { Some(x as usize) } else { None })
     }
 
@@ -95,7 +96,7 @@ impl<'a> Parser<'a> {
         self.b.get(self.i).copied()
     }
 
-    fn expect(&mut self, c: u8) -> Result<(), String> {
+    fn expect_byte(&mut self, c: u8) -> Result<(), String> {
         if self.peek() == Some(c) {
             self.i += 1;
             Ok(())
@@ -147,7 +148,7 @@ impl<'a> Parser<'a> {
     }
 
     fn string(&mut self) -> Result<String, String> {
-        self.expect(b'"')?;
+        self.expect_byte(b'"')?;
         let mut out = String::new();
         loop {
             match self.peek() {
@@ -196,7 +197,7 @@ impl<'a> Parser<'a> {
     }
 
     fn array(&mut self) -> Result<Json, String> {
-        self.expect(b'[')?;
+        self.expect_byte(b'[')?;
         let mut out = Vec::new();
         self.skip_ws();
         if self.peek() == Some(b']') {
@@ -220,7 +221,7 @@ impl<'a> Parser<'a> {
     }
 
     fn object(&mut self) -> Result<Json, String> {
-        self.expect(b'{')?;
+        self.expect_byte(b'{')?;
         let mut out = BTreeMap::new();
         self.skip_ws();
         if self.peek() == Some(b'}') {
@@ -231,7 +232,7 @@ impl<'a> Parser<'a> {
             self.skip_ws();
             let key = self.string()?;
             self.skip_ws();
-            self.expect(b':')?;
+            self.expect_byte(b':')?;
             let val = self.value()?;
             out.insert(key, val);
             self.skip_ws();
@@ -264,6 +265,18 @@ impl fmt::Display for Json {
             Json::Null => write!(f, "null"),
             Json::Bool(b) => write!(f, "{b}"),
             Json::Num(x) => {
+                // Canonical number form: integer-valued doubles print
+                // without a fractional part so outcome documents diff and
+                // hash stably across writers. Exactness argument for the
+                // allowlisted comparison below: `fract()` of an
+                // integer-valued double is exactly +0.0 (no rounding is
+                // involved — the fractional bits are literally zero), and
+                // the `|x| < 1e15 < 2^53` guard keeps the `as i64` cast
+                // inside the range where every integer is representable,
+                // so the printed digits equal the stored value bit-for-bit.
+                // -0.0 canonicalizes to "0" by design (its fract is -0.0,
+                // which compares equal to 0.0).
+                // cc-lint: allow(no-float-eq) exact integrality test, see the canonicalization note above
                 if x.fract() == 0.0 && x.abs() < 1e15 {
                     write!(f, "{}", *x as i64)
                 } else {
@@ -340,6 +353,40 @@ mod tests {
         assert_eq!(Json::parse("-1.5e3").unwrap().as_f64(), Some(-1500.0));
         assert_eq!(Json::parse("42").unwrap().as_usize(), Some(42));
         assert_eq!(Json::parse("1.5").unwrap().as_usize(), None);
+    }
+
+    #[test]
+    fn number_canonicalization_boundaries() {
+        // The 1e15 guard: the last integer below it prints via the i64
+        // path, 1e15 itself takes the float path — both must re-parse to
+        // the identical double (the suppression in Display is earned by
+        // this round-trip staying bit-exact).
+        let below = 1e15 - 1.0;
+        assert_eq!(Json::Num(below).to_string(), "999999999999999");
+        let back = Json::parse(&Json::Num(below).to_string()).unwrap();
+        assert_eq!(back.as_f64().unwrap().to_bits(), below.to_bits());
+        let at = Json::parse(&Json::Num(1e15).to_string()).unwrap();
+        assert_eq!(at.as_f64().unwrap().to_bits(), 1e15_f64.to_bits());
+    }
+
+    #[test]
+    fn negative_zero_canonicalizes_to_zero() {
+        // Documented policy: -0.0 prints as "0" (fract(-0.0) is -0.0,
+        // which == 0.0 exactly). The sign bit is deliberately dropped —
+        // outcome hashing wants one spelling for the one numeric value.
+        assert_eq!(Json::Num(-0.0).to_string(), "0");
+        let back = Json::parse("0").unwrap();
+        assert_eq!(back.as_f64(), Some(0.0));
+    }
+
+    #[test]
+    fn subnormals_roundtrip_exactly() {
+        for x in [5e-324_f64, 2.2250738585072009e-308, 4.9406564584124654e-321] {
+            assert!(x.is_subnormal() || x > 0.0);
+            let s = Json::Num(x).to_string();
+            let back = Json::parse(&s).unwrap();
+            assert_eq!(back.as_f64().unwrap().to_bits(), x.to_bits(), "{s}");
+        }
     }
 
     #[test]

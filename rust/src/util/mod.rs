@@ -13,6 +13,7 @@ pub mod proc;
 pub mod prop;
 pub mod rng;
 pub mod stats;
+pub mod sync;
 pub mod table;
 
 /// FNV-1a 64-bit hash. Stable across platforms and runs (unlike

@@ -61,7 +61,13 @@ where
             .map(|c| s.spawn(move || c.iter().map(f).collect::<Vec<R>>()))
             .collect();
         for h in handles {
-            parts.push(h.join().expect("sweep worker panicked"));
+            // A worker panic (e.g. a failed property assertion running
+            // under par_map) is re-raised on the caller's thread with its
+            // original payload instead of a second, less informative panic.
+            match h.join() {
+                Ok(part) => parts.push(part),
+                Err(payload) => std::panic::resume_unwind(payload),
+            }
         }
     });
     parts.into_iter().flatten().collect()

@@ -4,6 +4,17 @@
 
 use std::collections::BTreeMap;
 
+/// The approved total-order comparator for `f64` sorts (`ccloud lint`
+/// rule `no-float-eq` bans `partial_cmp(..).unwrap()`, which panics on
+/// NaN mid-sort). IEEE-754 `totalOrder`: `-NaN < -inf < ... < -0.0 <
+/// +0.0 < ... < +inf < +NaN` — so a stray (positive) NaN sorts **last**
+/// instead of aborting the run, and percentile reads below 100 stay
+/// NaN-free. Signature matches `sort_by`'s comparator directly:
+/// `v.sort_by(total_cmp_f64)`.
+pub fn total_cmp_f64(a: &f64, b: &f64) -> std::cmp::Ordering {
+    a.total_cmp(b)
+}
+
 /// Arithmetic mean; 0.0 on empty input.
 pub fn mean(xs: &[f64]) -> f64 {
     if xs.is_empty() {
@@ -36,13 +47,15 @@ pub fn stddev(xs: &[f64]) -> f64 {
 /// Hardened for the tail-latency reporting paths: empty input returns 0.0,
 /// a single element is its own percentile for every `q`, and `q` is
 /// clamped into [0, 100] (a NaN `q` reads as 0) — out-of-range quantiles
-/// used to index past the end of the sorted vector.
+/// used to index past the end of the sorted vector. NaN **samples** sort
+/// last ([`total_cmp_f64`]) instead of panicking mid-sort: quantiles below
+/// the NaN fraction stay finite and p100 of a NaN-containing input is NaN.
 pub fn percentile(xs: &[f64], q: f64) -> f64 {
     if xs.is_empty() {
         return 0.0;
     }
     let mut v = xs.to_vec();
-    v.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    v.sort_by(total_cmp_f64);
     percentile_of_sorted(&v, q)
 }
 
@@ -56,7 +69,7 @@ pub fn percentiles(xs: &mut [f64], qs: &[f64]) -> Vec<f64> {
     if xs.is_empty() {
         return vec![0.0; qs.len()];
     }
-    xs.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    xs.sort_by(total_cmp_f64);
     qs.iter().map(|&q| percentile_of_sorted(xs, q)).collect()
 }
 
@@ -115,19 +128,17 @@ pub fn max(xs: &[f64]) -> f64 {
 }
 
 /// Index of the minimum value (first occurrence). None on empty input.
+/// NaN entries rank last ([`total_cmp_f64`]), so they are never the
+/// argmin unless every entry is NaN.
 pub fn argmin(xs: &[f64]) -> Option<usize> {
-    xs.iter()
-        .enumerate()
-        .min_by(|a, b| a.1.partial_cmp(b.1).unwrap())
-        .map(|(i, _)| i)
+    xs.iter().enumerate().min_by(|a, b| total_cmp_f64(a.1, b.1)).map(|(i, _)| i)
 }
 
-/// Index of the maximum value (first occurrence). None on empty input.
+/// Index of the maximum value (last occurrence among exact ties). NaN
+/// entries rank above +inf in the total order, so an input containing NaN
+/// reports a NaN index — callers that must ignore NaN should filter first.
 pub fn argmax(xs: &[f64]) -> Option<usize> {
-    xs.iter()
-        .enumerate()
-        .max_by(|a, b| a.1.partial_cmp(b.1).unwrap())
-        .map(|(i, _)| i)
+    xs.iter().enumerate().max_by(|a, b| total_cmp_f64(a.1, b.1)).map(|(i, _)| i)
 }
 
 /// Default relative accuracy of the serving-tail sketches: quantiles are
@@ -295,7 +306,7 @@ mod tests {
     }
 
     #[test]
-    fn percentiles() {
+    fn percentile_interpolation() {
         let xs: Vec<f64> = (1..=100).map(|x| x as f64).collect();
         assert!((percentile(&xs, 0.0) - 1.0).abs() < 1e-9);
         assert!((percentile(&xs, 100.0) - 100.0).abs() < 1e-9);
@@ -393,6 +404,53 @@ mod tests {
     }
 
     #[test]
+    fn nan_samples_sort_last_instead_of_panicking() {
+        // Documented policy (see total_cmp_f64): a stray NaN must never
+        // abort a report run. It ranks above every finite sample, so only
+        // the very top of the distribution reads as NaN.
+        let xs = [3.0, f64::NAN, 1.0, 2.0];
+        assert_eq!(percentile(&xs, 0.0), 1.0);
+        assert_eq!(percentile(&xs, 50.0), 2.5);
+        assert!(percentile(&xs, 100.0).is_nan());
+        let mut batch = xs;
+        let got = percentiles(&mut batch, &[0.0, 50.0, 100.0]);
+        assert_eq!(got[0], 1.0);
+        assert_eq!(got[1], 2.5);
+        assert!(got[2].is_nan());
+        // argmin ignores NaN; argmax reports it (callers filter).
+        assert_eq!(argmin(&xs), Some(2));
+        assert_eq!(argmax(&xs), Some(1));
+        assert_eq!(argmin(&[f64::NAN]), Some(0));
+    }
+
+    #[test]
+    fn sketch_tolerates_nan_by_dropping_it() {
+        // Documented policy: the sketch rejects NaN at record time, so
+        // fleet tails stay finite even when a replica misbehaves.
+        let mut sk = QuantileSketch::default_accuracy();
+        sk.record(1.0);
+        sk.record(f64::NAN);
+        sk.record(3.0);
+        assert_eq!(sk.count(), 2);
+        for q in [0.0, 50.0, 99.0, 100.0] {
+            assert!(sk.quantile(q).is_finite(), "q={q}");
+        }
+        assert!(sk.quantile(100.0) <= 3.0 * (1.0 + sk.alpha()));
+    }
+
+    #[test]
+    fn total_cmp_orders_nan_and_signed_zero() {
+        use std::cmp::Ordering;
+        assert_eq!(total_cmp_f64(&1.0, &f64::NAN), Ordering::Less);
+        assert_eq!(total_cmp_f64(&f64::INFINITY, &f64::NAN), Ordering::Less);
+        assert_eq!(total_cmp_f64(&-0.0, &0.0), Ordering::Less);
+        let mut v = [f64::NAN, 2.0, f64::NEG_INFINITY, -0.0];
+        v.sort_by(total_cmp_f64);
+        assert_eq!(v[0], f64::NEG_INFINITY);
+        assert!(v[3].is_nan());
+    }
+
+    #[test]
     fn out_of_range_quantiles_clamp() {
         let xs: Vec<f64> = (1..=10).map(|x| x as f64).collect();
         // These used to index past the sorted vector (panic) or saturate
@@ -429,7 +487,7 @@ mod tests {
                 }
                 let a = sk.alpha();
                 let mut sorted = xs.clone();
-                sorted.sort_by(|p, q| p.partial_cmp(q).unwrap());
+                sorted.sort_by(total_cmp_f64);
                 for q in [0.0, 10.0, 50.0, 90.0, 99.0, 99.9, 100.0] {
                     let s = sk.quantile(q);
                     // Tight documented bound: within relative alpha of the
@@ -477,7 +535,7 @@ mod tests {
         }
         // The merged sketch also stays within bound of the exact tail.
         let mut sorted = xs.clone();
-        sorted.sort_by(|p, q| p.partial_cmp(q).unwrap());
+        sorted.sort_by(total_cmp_f64);
         let rank = ((99.0 / 100.0) * (xs.len() - 1) as f64).floor() as usize;
         let exact = sorted[rank];
         let s = merged.quantile(99.0);

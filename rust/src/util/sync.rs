@@ -1,0 +1,68 @@
+//! Poison-recovering wrappers around `std::sync` locking.
+//!
+//! The serving coordinator shares request queues and metrics between the
+//! submit path and the batcher thread. `Mutex::lock().unwrap()` turns one
+//! panicked holder into a cascade: every later lock attempt panics on the
+//! poison flag, taking down threads that could have carried on. These
+//! wrappers recover the guard from a poisoned lock instead — the protected
+//! data in this crate is always in a consistent state between operations
+//! (plain queues/counters mutated by short critical sections, no
+//! multi-step invariants held across a panic point), so continuing with
+//! the inner value is sound and keeps shutdown/drain paths reachable.
+//! They are also the `no-panic`-clean spelling `ccloud lint` expects
+//! library code to use.
+
+use std::sync::{Condvar, Mutex, MutexGuard, WaitTimeoutResult};
+use std::time::Duration;
+
+/// Lock `m`, recovering the guard if a previous holder panicked.
+pub fn lock_unpoisoned<T>(m: &Mutex<T>) -> MutexGuard<'_, T> {
+    m.lock().unwrap_or_else(|e| e.into_inner())
+}
+
+/// `Condvar::wait`, recovering the re-acquired guard on poison.
+pub fn wait_unpoisoned<'a, T>(cv: &Condvar, g: MutexGuard<'a, T>) -> MutexGuard<'a, T> {
+    cv.wait(g).unwrap_or_else(|e| e.into_inner())
+}
+
+/// `Condvar::wait_timeout`, recovering the re-acquired guard on poison.
+pub fn wait_timeout_unpoisoned<'a, T>(
+    cv: &Condvar,
+    g: MutexGuard<'a, T>,
+    d: Duration,
+) -> (MutexGuard<'a, T>, WaitTimeoutResult) {
+    cv.wait_timeout(g, d).unwrap_or_else(|e| e.into_inner())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::Arc;
+
+    #[test]
+    fn lock_recovers_from_poison() {
+        let m = Arc::new(Mutex::new(7u32));
+        let m2 = Arc::clone(&m);
+        // Poison the mutex by panicking while holding it.
+        let _ = std::thread::spawn(move || {
+            let _g = m2.lock();
+            panic!("poison on purpose");
+        })
+        .join();
+        assert!(m.is_poisoned());
+        let mut g = lock_unpoisoned(&m);
+        assert_eq!(*g, 7);
+        *g += 1;
+        drop(g);
+        assert_eq!(*lock_unpoisoned(&m), 8);
+    }
+
+    #[test]
+    fn wait_timeout_returns_on_timeout() {
+        let m = Mutex::new(());
+        let cv = Condvar::new();
+        let g = lock_unpoisoned(&m);
+        let (_g, res) = wait_timeout_unpoisoned(&cv, g, Duration::from_millis(1));
+        assert!(res.timed_out());
+    }
+}

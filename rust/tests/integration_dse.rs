@@ -8,6 +8,7 @@ use chiplet_cloud::config::{ModelSpec, Workload};
 use chiplet_cloud::evaluate::{self, sparsity};
 use chiplet_cloud::explore::phase1;
 use chiplet_cloud::report::{self, Ctx};
+use chiplet_cloud::util::stats::total_cmp_f64;
 
 fn ctx() -> Ctx {
     Ctx::coarse()
@@ -38,7 +39,7 @@ fn fig7_small_dies_win() {
     let pts = evaluate::sweep(&c.space, &c.servers, &w);
     let best = pts
         .iter()
-        .min_by(|a, b| a.tco_per_token.partial_cmp(&b.tco_per_token).unwrap())
+        .min_by(|a, b| total_cmp_f64(&a.tco_per_token, &b.tco_per_token))
         .unwrap();
     assert!(best.server.chiplet.die_mm2 <= 400.0, "optimal die {}", best.server.chiplet.die_mm2);
     // best big-die (>=700) point vs best overall

@@ -1,0 +1,158 @@
+//! Integration tests for `ccloud lint`: each rule demonstrated against the
+//! fixture corpus in `tests/lint_fixtures/` (deliberate violations, so the
+//! directory is excluded from the workspace walk), plus the self-check —
+//! the analyzer run over its own workspace must report zero findings.
+
+use std::path::Path;
+
+use chiplet_cloud::analysis::{self, classify, scan_source, FileClass, Finding, Rule};
+use chiplet_cloud::util::json::Json;
+
+const NO_PANIC: &str = include_str!("lint_fixtures/no_panic.rs");
+const NO_WALLCLOCK: &str = include_str!("lint_fixtures/no_wallclock.rs");
+const NO_UNORDERED: &str = include_str!("lint_fixtures/no_unordered_iter.rs");
+const NO_FLOAT_EQ: &str = include_str!("lint_fixtures/no_float_eq.rs");
+const NO_PROCESS_EXIT: &str = include_str!("lint_fixtures/no_process_exit.rs");
+const SUPPRESSIONS: &str = include_str!("lint_fixtures/suppressions.rs");
+const CLEAN: &str = include_str!("lint_fixtures/clean.rs");
+
+/// `(line, rule)` pairs of a finding list, for golden comparisons.
+fn shape(fs: &[Finding]) -> Vec<(u32, Rule)> {
+    fs.iter().map(|f| (f.line, f.rule)).collect()
+}
+
+#[test]
+fn no_panic_golden() {
+    // unwrap, expect, panic!, todo!, unimplemented! — one finding each;
+    // the suppressed lock (line 20) and the #[cfg(test)] mod are silent.
+    let fs = scan_source("src/fixture.rs", FileClass::Library, NO_PANIC);
+    let want = vec![
+        (6, Rule::NoPanic),
+        (7, Rule::NoPanic),
+        (9, Rule::NoPanic),
+        (11, Rule::NoPanic),
+        (15, Rule::NoPanic),
+    ];
+    assert_eq!(shape(&fs), want, "{fs:#?}");
+    // The property harness is allowlisted — every panic is fine there, and
+    // the now-pointless suppression surfaces as the only finding.
+    let fs = scan_source("src/util/prop.rs", FileClass::Library, NO_PANIC);
+    assert_eq!(shape(&fs), vec![(19, Rule::UnusedSuppression)], "{fs:#?}");
+}
+
+#[test]
+fn no_wallclock_golden() {
+    // Instant::now() and the SystemTime mention; suppressed one silent.
+    let fs = scan_source("src/perf/fixture.rs", FileClass::Library, NO_WALLCLOCK);
+    let want = vec![(8, Rule::NoWallclock), (9, Rule::NoWallclock)];
+    assert_eq!(shape(&fs), want, "{fs:#?}");
+    // The serving stack measures real latency — allowlisted prefix.
+    let fs = scan_source("src/coordinator/fixture.rs", FileClass::Library, NO_WALLCLOCK);
+    assert_eq!(shape(&fs), vec![(14, Rule::UnusedSuppression)], "{fs:#?}");
+}
+
+#[test]
+fn no_unordered_iter_golden() {
+    // The `use` and the return type each mention HashMap; the counted
+    // HashSet carries a suppression with its reason.
+    let fs = scan_source("src/report/fixture.rs", FileClass::Library, NO_UNORDERED);
+    let want = vec![(6, Rule::NoUnorderedIter), (8, Rule::NoUnorderedIter)];
+    assert_eq!(shape(&fs), want, "{fs:#?}");
+    // Outside the serialization-adjacent modules the rule is silent.
+    let fs = scan_source("src/explore/fixture.rs", FileClass::Library, NO_UNORDERED);
+    assert_eq!(shape(&fs), vec![(13, Rule::UnusedSuppression)], "{fs:#?}");
+}
+
+#[test]
+fn no_float_eq_golden() {
+    // Four bare literal comparisons plus the NaN-panicking comparator —
+    // whose `.unwrap()` is also a no-panic violation in library code.
+    let fs = scan_source("src/fixture.rs", FileClass::Library, NO_FLOAT_EQ);
+    let want = vec![
+        (6, Rule::NoFloatEq),
+        (7, Rule::NoFloatEq),
+        (8, Rule::NoFloatEq),
+        (9, Rule::NoFloatEq),
+        (14, Rule::NoPanic),
+        (14, Rule::NoFloatEq),
+    ];
+    assert_eq!(shape(&fs), want, "{fs:#?}");
+    // In test code the bare comparisons are fine, but the NaN hazard in a
+    // sort comparator pierces; the exact-sentinel suppression (line 18)
+    // has nothing left to suppress and is reported stale.
+    let fs = scan_source("tests/fixture.rs", FileClass::Tests, NO_FLOAT_EQ);
+    let want = vec![(14, Rule::NoFloatEq), (18, Rule::UnusedSuppression)];
+    assert_eq!(shape(&fs), want, "{fs:#?}");
+}
+
+#[test]
+fn no_process_exit_golden() {
+    // Flagged in library code AND in tests (exit kills the harness)...
+    for (path, class) in
+        [("src/fixture.rs", FileClass::Library), ("tests/fixture.rs", FileClass::Tests)]
+    {
+        let fs = scan_source(path, class, NO_PROCESS_EXIT);
+        assert_eq!(shape(&fs), vec![(6, Rule::NoProcessExit)], "{path}: {fs:#?}");
+    }
+    // ...but exiting is main.rs's prerogative, where the fixture's
+    // suppression consequently suppresses nothing.
+    let fs = scan_source("src/main.rs", FileClass::Binary, NO_PROCESS_EXIT);
+    assert_eq!(shape(&fs), vec![(10, Rule::UnusedSuppression)], "{fs:#?}");
+}
+
+#[test]
+fn suppression_misuse_golden() {
+    let fs = scan_source("src/fixture.rs", FileClass::Library, SUPPRESSIONS);
+    let want = vec![
+        // Reason-less allow: the directive is rejected AND the unwrap it
+        // meant to cover is reported.
+        (5, Rule::NoPanic),
+        (5, Rule::BadSuppression),
+        (9, Rule::BadSuppression),
+        (13, Rule::BadSuppression),
+        (17, Rule::UnusedSuppression),
+    ];
+    assert_eq!(shape(&fs), want, "{fs:#?}");
+}
+
+#[test]
+fn clean_fixture_is_clean() {
+    let fs = scan_source("src/fixture.rs", FileClass::Library, CLEAN);
+    assert!(fs.is_empty(), "{fs:#?}");
+}
+
+#[test]
+fn classify_and_scan_file_agree() {
+    assert_eq!(classify("src/main.rs"), FileClass::Binary);
+    assert_eq!(classify("src/analysis/rules.rs"), FileClass::Library);
+    assert_eq!(classify("tests/integration_lint.rs"), FileClass::Tests);
+    assert_eq!(classify("benches/fig7.rs"), FileClass::Benches);
+    // scan_file derives the class from the path: main.rs may exit.
+    let fs = analysis::scan_file("src/main.rs", "fn f() { std::process::exit(0); }");
+    assert!(fs.is_empty(), "{fs:#?}");
+}
+
+#[test]
+fn workspace_self_check_is_finding_free() {
+    // The contract the CI lint step enforces, asserted from `cargo test`:
+    // the workspace that ships this analyzer passes it.
+    let root = Path::new(env!("CARGO_MANIFEST_DIR"));
+    let findings = analysis::run(root).expect("lint walk succeeds");
+    assert!(
+        findings.is_empty(),
+        "workspace must be lint-clean:\n{}",
+        findings.iter().map(|f| f.to_string()).collect::<Vec<_>>().join("\n")
+    );
+}
+
+#[test]
+fn json_report_round_trips() {
+    let root = Path::new(env!("CARGO_MANIFEST_DIR"));
+    let findings = analysis::run(root).expect("lint walk succeeds");
+    let report = analysis::report_json(root, &findings);
+    let v = Json::parse(&report).expect("report is valid JSON");
+    assert_eq!(v.get("version").and_then(Json::as_usize), Some(1));
+    assert_eq!(v.get("count").and_then(Json::as_usize), Some(findings.len()));
+    let arr = v.get("findings").and_then(Json::as_arr).expect("findings array");
+    assert_eq!(arr.len(), findings.len());
+}

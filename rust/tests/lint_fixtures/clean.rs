@@ -1,0 +1,39 @@
+//! Fixture: a library file with zero findings. Every hazard the rules
+//! police appears here only in its approved form — or hidden inside
+//! strings, chars and comments, which the lexer must see through.
+
+use std::collections::BTreeMap;
+
+// unwrap() panic!() Instant::now() HashMap == 0.0  <- comment, not code
+const DOC: &str = "unwrap() and HashMap and x == 0.0 inside a string";
+const RAW: &str = r#"process::exit(1) in a raw string"#;
+const BYTE: &[u8] = b"SystemTime in a byte string";
+const CH: char = '"';
+
+fn recover(x: Option<f64>, v: &mut [f64]) -> f64 {
+    v.sort_by(|a, b| a.total_cmp(b));
+    let y = x.unwrap_or(0.0);
+    if (y - 1.0).abs() < f64::EPSILON {
+        return v.first().copied().unwrap_or_default();
+    }
+    y
+}
+
+fn tabulate(rows: &[(String, u64)]) -> BTreeMap<String, u64> {
+    let map: BTreeMap<String, u64> = rows.iter().cloned().collect();
+    assert!(map.len() <= rows.len());
+    map
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn tests_may_panic_and_compare_exactly() {
+        let x: Option<f64> = Some(2.0);
+        assert!(x.unwrap() == 2.0);
+        let s = DOC.to_string();
+        assert!(!s.is_empty());
+    }
+}

@@ -1,0 +1,28 @@
+//! Fixture: `no-float-eq` violations — bare literal float comparisons and
+//! the NaN-panicking comparator — plus a suppressed exact comparison and
+//! clean alternatives. Scanned as `src/fixture.rs` (Library class).
+
+fn bare_comparisons(x: f64, y: f64) -> bool {
+    let a = x == 0.0;
+    let b = 0.5 != y;
+    let c = x == -1.0;
+    let d = y == 1e15;
+    a && b && c && d
+}
+
+fn nan_hazard(v: &mut [f64]) {
+    v.sort_by(|a, b| a.partial_cmp(b).unwrap());
+}
+
+fn suppressed(x: f64) -> bool {
+    // cc-lint: allow(no-float-eq) 0.0 is the codec's exact absent-field sentinel
+    x == 0.0
+}
+
+fn clean(v: &mut [f64], x: f64, y: f64) -> bool {
+    v.sort_by(|a, b| a.total_cmp(b));
+    let close = (x - y).abs() < 1e-9;
+    let ints = (x as u64) == 3;
+    let range = (1.0..=2.0).contains(&x);
+    close && ints && range && x <= 0.5
+}

@@ -1,0 +1,36 @@
+//! Fixture: `no-panic` violations, a suppressed occurrence, and clean code.
+//! Scanned by `integration_lint.rs` as `src/fixture.rs` (Library class);
+//! this directory is excluded from the workspace walk.
+
+fn violations(x: Option<u32>, y: Result<u32, ()>) -> u32 {
+    let a = x.unwrap();
+    let b = y.expect("present");
+    if a + b == 0 {
+        panic!("boom");
+    }
+    todo!();
+}
+
+fn unfinished() {
+    unimplemented!();
+}
+
+fn suppressed(m: &std::sync::Mutex<u32>) -> u32 {
+    // cc-lint: allow(no-panic) lock poisoning is recovered by the caller's retry loop
+    *m.lock().unwrap()
+}
+
+fn clean(x: Option<u32>, v: &[f64]) -> u32 {
+    assert!(!v.is_empty());
+    debug_assert_eq!(v.len(), v.len());
+    x.unwrap_or_default()
+}
+
+#[cfg(test)]
+mod tests {
+    #[test]
+    fn test_code_may_unwrap() {
+        let x: Option<u32> = Some(1);
+        assert_eq!(x.unwrap(), 1);
+    }
+}

@@ -1,0 +1,19 @@
+//! Fixture: `no-process-exit` violations. Scanned as `src/fixture.rs`
+//! (flagged), as `tests/fixture.rs` (still flagged — the rule pierces
+//! tests), and as `src/main.rs` (Binary class — silent).
+
+fn violation(code: i32) -> ! {
+    std::process::exit(code)
+}
+
+fn suppressed(code: i32) -> ! {
+    // cc-lint: allow(no-process-exit) fault-injection child must die without unwinding
+    std::process::exit(code)
+}
+
+fn clean(code: i32) -> Result<(), String> {
+    if code != 0 {
+        return Err(format!("exit code {code}"));
+    }
+    Ok(())
+}

@@ -1,0 +1,20 @@
+//! Fixture: `no-unordered-iter` violations plus the ordered alternative.
+//! Scanned as `src/report/fixture.rs` (serialization-adjacent, in scope)
+//! and as `src/explore/fixture.rs` (out of scope — must be silent).
+
+use std::collections::BTreeMap;
+use std::collections::HashMap;
+
+fn violation(rows: &[(String, f64)]) -> HashMap<String, f64> {
+    rows.iter().cloned().collect()
+}
+
+fn suppressed(rows: &[(String, f64)]) -> usize {
+    // cc-lint: allow(no-unordered-iter) counted then discarded; iteration order never escapes
+    let m: std::collections::HashSet<&str> = rows.iter().map(|(k, _)| k.as_str()).collect();
+    m.len()
+}
+
+fn clean(rows: &[(String, f64)]) -> BTreeMap<String, f64> {
+    rows.iter().cloned().collect()
+}

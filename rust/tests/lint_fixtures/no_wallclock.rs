@@ -1,0 +1,20 @@
+//! Fixture: `no-wallclock` violations plus a suppressed occurrence.
+//! Scanned as `src/perf/fixture.rs` (in scope) and as
+//! `src/coordinator/fixture.rs` (allowlisted prefix — must be silent).
+
+use std::time::{Duration, Instant};
+
+fn violations() -> Duration {
+    let t0 = Instant::now();
+    let _epoch = std::time::SystemTime::UNIX_EPOCH;
+    t0.elapsed()
+}
+
+fn suppressed() -> Instant {
+    // cc-lint: allow(no-wallclock) operator-log timestamp, never enters a simulated quantity
+    Instant::now()
+}
+
+fn clean(t: Instant, d: Duration) -> bool {
+    t.elapsed() >= d
+}

@@ -1,0 +1,18 @@
+//! Fixture: malformed, reason-less, unknown-rule and stale suppressions —
+//! each is itself a finding. Scanned as `src/fixture.rs` (Library class).
+
+fn missing_reason(x: Option<u32>) -> u32 {
+    x.unwrap() // cc-lint: allow(no-panic)
+}
+
+fn unknown_rule() {
+    // cc-lint: allow(no-such-rule) the id does not exist
+}
+
+fn not_an_allow() {
+    // cc-lint: forbid(no-panic) only allow(...) is a directive
+}
+
+fn stale() {
+    // cc-lint: allow(no-panic) nothing on this or the next line panics
+}
