@@ -5,7 +5,10 @@
 //! core against the step-by-step reference (bit-identical — asserted —
 //! and the speedup printed), and the million-request scale: quantized
 //! time vs fast-forward (tails within the documented epsilon — asserted)
-//! plus a sketched-tail multi-replica fleet run.
+//! plus a sketched-tail multi-replica fleet run and a failure-aware fleet
+//! section (fault-free runs through the failure-aware entry point are
+//! bit-identical to the default path — asserted — and a scripted mid-run
+//! outage keeps request conservation — asserted).
 //!
 //! Pass `--quick` (the CI mode) to shrink the million-request sections;
 //! set `CC_BENCH_JSON` to merge a `serve_sim` section into the sweep
@@ -14,8 +17,10 @@
 use std::collections::BTreeMap;
 use std::time::Instant;
 
-use chiplet_cloud::config::{SloSpec, TrafficSpec};
-use chiplet_cloud::perf::events::{simulate_replicated, simulate_trace, IterCost, SimConfig};
+use chiplet_cloud::config::{FaultSpec, SloSpec, TrafficSpec};
+use chiplet_cloud::perf::events::{
+    simulate_replicated, simulate_replicated_faults, simulate_trace, IterCost, SimConfig,
+};
 use chiplet_cloud::sched::{ContinuousBatch, KvBudget, RoutePolicy, StaticBatch};
 use chiplet_cloud::util::bench::{black_box, Bench};
 use chiplet_cloud::util::json::Json;
@@ -198,6 +203,66 @@ fn main() {
         n_fleet as f64 / fleet_s.max(1e-12)
     );
 
+    // --- Failure-aware fleet: none-identity + scripted outage ----------
+    // First the safety property the fault model is built on: running the
+    // failure-aware entry point with `FaultSpec::none` must be
+    // bit-identical to the default replicated path — the fault machinery
+    // may not perturb a fault-free run at all.
+    let n_fault = if quick { 100_000 } else { 1_000_000 };
+    let fault_traffic = TrafficSpec::poisson(9.0, n_fault, 32, 64, 256).with_seed(79);
+    let plain = simulate_replicated(
+        &quant_cfg,
+        4,
+        RoutePolicy::Jsq,
+        &ContinuousBatch,
+        &fault_traffic,
+        &unconstrained,
+    );
+    let none = simulate_replicated_faults(
+        &quant_cfg,
+        4,
+        RoutePolicy::Jsq,
+        &ContinuousBatch,
+        &fault_traffic,
+        &FaultSpec::none(),
+        &unconstrained,
+    );
+    assert_eq!(
+        plain.fingerprint(),
+        none.fingerprint(),
+        "FaultSpec::none must be bit-identical to the default replicated path"
+    );
+    // Then a scripted outage: one of four replicas down for the middle
+    // half of the run. The virtual makespan is ~requests/rps, so the plan
+    // is phrased as fractions of that span.
+    let span = n_fault as f64 / 9.0;
+    let plan = format!("fail:0@{:.3},recover:0@{:.3}", span * 0.25, span * 0.75);
+    let faults = FaultSpec::scripted(FaultSpec::parse_plan(&plan).expect("plan parses"));
+    let t0 = Instant::now();
+    let faulted = simulate_replicated_faults(
+        &quant_cfg,
+        4,
+        RoutePolicy::Jsq,
+        &ContinuousBatch,
+        &fault_traffic,
+        &faults,
+        &unconstrained,
+    );
+    let fault_s = t0.elapsed().as_secs_f64();
+    assert_eq!(
+        faulted.completed + faulted.rejected + faulted.lost,
+        faulted.offered,
+        "request conservation broke under the scripted outage"
+    );
+    assert!(faulted.downtime_frac > 0.0, "the scripted outage must accrue downtime");
+    println!(
+        "faulted fleet ({n_fault} requests, 4 replicas, 1 down mid-run): {fault_s:.2}s, \
+         {} re-dispatched, {} lost, downtime {:.1}%",
+        faulted.redispatched,
+        faulted.lost,
+        faulted.downtime_frac * 100.0
+    );
+
     // Merge the serve_sim section into the shared bench artifact without
     // clobbering what bench_sweep_engine wrote.
     if let Ok(path) = std::env::var("CC_BENCH_JSON") {
@@ -226,6 +291,19 @@ fn main() {
                         ("replicas", Json::Num(8.0)),
                         ("quantized_s", Json::Num(fleet_s)),
                         ("sketched", Json::Bool(true)),
+                    ]),
+                ),
+                (
+                    "faults",
+                    obj(vec![
+                        ("requests", Json::Num(n_fault as f64)),
+                        ("replicas", Json::Num(4.0)),
+                        ("plan", Json::Str(plan.clone())),
+                        ("wall_s", Json::Num(fault_s)),
+                        ("redispatched", Json::Num(faulted.redispatched as f64)),
+                        ("lost", Json::Num(faulted.lost as f64)),
+                        ("downtime_frac", Json::Num(faulted.downtime_frac)),
+                        ("fault_free_identical", Json::Bool(true)),
                     ]),
                 ),
                 ("epsilon_ok", Json::Bool(true)),

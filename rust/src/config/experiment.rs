@@ -25,7 +25,7 @@
 use std::collections::BTreeMap;
 
 use crate::config::models::ModelSpec;
-use crate::config::workload::{ArrivalProcess, ServeSpec, SloSpec, TrafficSpec};
+use crate::config::workload::{ArrivalProcess, FaultSpec, ServeSpec, SloSpec, TrafficSpec};
 use crate::sched::RoutePolicy;
 use crate::util::json::Json;
 
@@ -517,6 +517,56 @@ fn validate_serve(s: &ServeSpec) -> Result<(), String> {
                 .into());
         }
     }
+    validate_faults(s)?;
+    Ok(())
+}
+
+fn validate_faults(s: &ServeSpec) -> Result<(), String> {
+    let f = &s.faults;
+    if !f.mtbf_s.is_finite() || f.mtbf_s < 0.0 {
+        return Err(format!(
+            "'serve.faults.mtbf_s' must be finite and >= 0 (0 = no stochastic \
+             failures; got {})",
+            f.mtbf_s
+        ));
+    }
+    if f.mtbf_s > 0.0 && !(f.mttr_s.is_finite() && f.mttr_s > 0.0) {
+        return Err(format!(
+            "'serve.faults.mttr_s' must be positive and finite when mtbf_s > 0 \
+             (got {})",
+            f.mttr_s
+        ));
+    }
+    for e in &f.plan {
+        if e.replica >= s.replicas.max(1) {
+            return Err(format!(
+                "'serve.faults.plan' names replica {} but the spec serves {} \
+                 replica(s)",
+                e.replica,
+                s.replicas.max(1)
+            ));
+        }
+    }
+    if f.availability < 0.0 || f.availability > 1.0 || f.availability.is_nan() {
+        return Err(format!(
+            "'serve.faults.availability' must be in [0, 1] (0 = no redundancy \
+             sizing; got {})",
+            f.availability
+        ));
+    }
+    if f.availability > 0.0 && f.is_none() {
+        return Err("'serve.faults.availability' sizes redundancy *under faults*; \
+                    give mtbf_s/mttr_s or a scripted plan (or drop the target)"
+            .into());
+    }
+    if !f.is_none() {
+        if let ArrivalProcess::ClosedLoop { .. } = s.traffic.arrival {
+            return Err("'serve.faults' needs an open-loop arrival process \
+                        (poisson/bursty or a trace file) — closed-loop clients \
+                        are partitioned per replica and cannot fail over"
+                .into());
+        }
+    }
     Ok(())
 }
 
@@ -723,6 +773,7 @@ fn serve_from_json(v: &Json) -> Result<ServeSpec, String> {
             "route",
             "quantum",
             "trace_file",
+            "faults",
         ],
     )?;
     let traffic = match m.get("traffic") {
@@ -759,6 +810,10 @@ fn serve_from_json(v: &Json) -> Result<ServeSpec, String> {
             )
         }
     };
+    let faults = match m.get("faults") {
+        None | Some(Json::Null) => FaultSpec::none(),
+        Some(v) => faults_from_json(v)?,
+    };
     Ok(ServeSpec {
         traffic,
         slo,
@@ -768,7 +823,53 @@ fn serve_from_json(v: &Json) -> Result<ServeSpec, String> {
         route,
         quantum,
         trace_file,
+        faults,
     })
+}
+
+fn faults_from_json(v: &Json) -> Result<FaultSpec, String> {
+    let m = as_obj(v, "serve.faults")?;
+    let path = "serve.faults";
+    check_fields(
+        m,
+        path,
+        &["mtbf_s", "mttr_s", "seed", "plan", "max_redispatch", "availability", "max_spares"],
+    )?;
+    let plan = match m.get("plan") {
+        None | Some(Json::Null) => Vec::new(),
+        Some(Json::Str(s)) => FaultSpec::parse_plan(s)
+            .map_err(|e| format!("field 'plan' in {path}: {e}"))?,
+        Some(_) => {
+            return Err(format!(
+                "field 'plan' in {path}: expected a scripted-plan string \
+                 (e.g. \"fail:0@10,recover:0@30\") or null"
+            ))
+        }
+    };
+    let defaults = FaultSpec::none();
+    Ok(FaultSpec {
+        mtbf_s: get_f64(m, path, "mtbf_s")?.unwrap_or(0.0),
+        mttr_s: get_f64(m, path, "mttr_s")?.unwrap_or(0.0),
+        seed: get_usize(m, path, "seed")?.unwrap_or(0) as u64,
+        plan,
+        max_redispatch: get_usize(m, path, "max_redispatch")?.unwrap_or(defaults.max_redispatch),
+        availability: get_f64(m, path, "availability")?.unwrap_or(0.0),
+        max_spares: get_usize(m, path, "max_spares")?.unwrap_or(defaults.max_spares),
+    })
+}
+
+pub(crate) fn faults_to_json(f: &FaultSpec) -> Json {
+    let mut m = BTreeMap::new();
+    m.insert("mtbf_s".into(), Json::Num(f.mtbf_s));
+    m.insert("mttr_s".into(), Json::Num(f.mttr_s));
+    m.insert("seed".into(), Json::Num(f.seed as f64));
+    if !f.plan.is_empty() {
+        m.insert("plan".into(), Json::Str(f.plan_string()));
+    }
+    m.insert("max_redispatch".into(), Json::Num(f.max_redispatch as f64));
+    m.insert("availability".into(), Json::Num(f.availability));
+    m.insert("max_spares".into(), Json::Num(f.max_spares as f64));
+    Json::Obj(m)
 }
 
 fn serve_to_json(s: &ServeSpec) -> Json {
@@ -787,6 +888,11 @@ fn serve_to_json(s: &ServeSpec) -> Json {
     }
     if let Some(p) = &s.trace_file {
         m.insert("trace_file".into(), Json::Str(p.clone()));
+    }
+    // Absent ↔ the full default (not just "inert"): a tweaked-but-inert
+    // spec still emits, so `from_json(to_json(e)) == e` holds exactly.
+    if s.faults != FaultSpec::none() {
+        m.insert("faults".into(), faults_to_json(&s.faults));
     }
     Json::Obj(m)
 }
@@ -989,6 +1095,118 @@ mod tests {
             .unwrap_err();
             assert!(err.contains("replaces synthetic arrivals"), "{err}");
         }
+    }
+
+    #[test]
+    fn faults_round_trip_and_default_to_absent() {
+        use crate::config::workload::{FaultEvent, FaultSpec};
+        // Fault-free specs serialize byte-identically to pre-fault specs.
+        let mut e = minimal();
+        e.task = Task::ServeSim;
+        e.workload = Some(WorkloadPoint { ctx: 1024, batch: 32 });
+        e.serve =
+            Some(ServeSpec::new(TrafficSpec::poisson(1.0, 10, 8, 4, 8), SloSpec::unconstrained()));
+        let s = e.to_json_string();
+        assert!(!s.contains("faults"), "{s}");
+        assert_eq!(Experiment::from_json_str(&s).unwrap(), e);
+
+        // A stochastic spec with a scripted plan round-trips exactly.
+        let faults = FaultSpec {
+            mtbf_s: 120.0,
+            mttr_s: 6.5,
+            seed: 9,
+            plan: vec![
+                FaultEvent { replica: 0, at_s: 10.0, up: false },
+                FaultEvent { replica: 0, at_s: 30.5, up: true },
+            ],
+            max_redispatch: 2,
+            availability: 0.995,
+            max_spares: 3,
+        };
+        e.serve = Some(
+            ServeSpec::new(TrafficSpec::poisson(1.0, 10, 8, 4, 8), SloSpec::new(1.0, 0.1))
+                .with_replicas(3, RoutePolicy::Jsq)
+                .with_faults(faults),
+        );
+        let s = e.to_json_string();
+        assert!(s.contains("\"plan\":\"fail:0@10,recover:0@30.5\""), "{s}");
+        assert_eq!(Experiment::from_json_str(&s).unwrap(), e);
+        e.validate().unwrap();
+        // Explicit null parses as no faults.
+        let nulled = Experiment::from_json_str(
+            r#"{"task":"sweep","models":["gpt3"],
+                "serve":{"traffic":{"arrival":{"kind":"poisson"}},"faults":null}}"#,
+        )
+        .unwrap();
+        assert!(nulled.serve.unwrap().faults.is_none());
+        // Unknown fault fields and bad plan strings are located errors.
+        let err = Experiment::from_json_str(
+            r#"{"task":"sweep","models":["gpt3"],
+                "serve":{"traffic":{"arrival":{"kind":"poisson"}},"faults":{"mtbf":5}}}"#,
+        )
+        .unwrap_err();
+        assert!(err.contains("unknown field 'mtbf'") && err.contains("serve.faults"), "{err}");
+        let err = Experiment::from_json_str(
+            r#"{"task":"sweep","models":["gpt3"],
+                "serve":{"traffic":{"arrival":{"kind":"poisson"}},"faults":{"plan":"boom:0@1"}}}"#,
+        )
+        .unwrap_err();
+        assert!(err.contains("'plan'") && err.contains("unknown kind"), "{err}");
+    }
+
+    #[test]
+    fn validation_enforces_fault_rules() {
+        use crate::config::workload::{FaultEvent, FaultSpec};
+        let check = |spec: ServeSpec| {
+            let mut e = minimal();
+            e.task = Task::ServeSim;
+            e.workload = Some(WorkloadPoint { ctx: 1024, batch: 32 });
+            e.serve = Some(spec);
+            e.validate()
+        };
+        let base = || {
+            ServeSpec::new(TrafficSpec::poisson(1.0, 10, 8, 4, 8), SloSpec::new(1.0, 0.1))
+                .with_replicas(3, RoutePolicy::Jsq)
+        };
+        check(base().with_faults(FaultSpec::mtbf(100.0, 5.0, 1))).unwrap();
+        check(base().with_faults(FaultSpec::scripted(
+            FaultSpec::parse_plan("fail:2@5,recover:2@9").unwrap(),
+        )))
+        .unwrap();
+        // mtbf without a repair time cannot model recovery.
+        let err = check(base().with_faults(FaultSpec::mtbf(100.0, 0.0, 1))).unwrap_err();
+        assert!(err.contains("mttr_s"), "{err}");
+        let err =
+            check(base().with_faults(FaultSpec::mtbf(f64::NAN, 5.0, 1))).unwrap_err();
+        assert!(err.contains("mtbf_s"), "{err}");
+        // Plan events must name replicas the spec actually serves.
+        let err = check(base().with_faults(FaultSpec::scripted(vec![FaultEvent {
+            replica: 3,
+            at_s: 1.0,
+            up: false,
+        }])))
+        .unwrap_err();
+        assert!(err.contains("replica 3"), "{err}");
+        // Availability targets need a fault model and live in [0, 1].
+        let err = check(
+            base().with_faults(FaultSpec::none().with_availability(0.99)),
+        )
+        .unwrap_err();
+        assert!(err.contains("under faults"), "{err}");
+        let err = check(
+            base().with_faults(FaultSpec::mtbf(100.0, 5.0, 1).with_availability(1.5)),
+        )
+        .unwrap_err();
+        assert!(err.contains("availability"), "{err}");
+        // Closed-loop clients cannot fail over.
+        let closed = ServeSpec::new(
+            TrafficSpec::closed_loop(4, 0.1, 10, 8, 4, 8),
+            SloSpec::new(1.0, 0.1),
+        )
+        .with_replicas(3, RoutePolicy::RoundRobin)
+        .with_faults(FaultSpec::mtbf(100.0, 5.0, 1));
+        let err = check(closed).unwrap_err();
+        assert!(err.contains("open-loop"), "{err}");
     }
 
     #[test]

@@ -17,4 +17,6 @@ pub mod workload;
 pub use experiment::{EngineKnobs, Experiment, SpaceSpec, Task, WorkloadPoint};
 pub use hardware::{ExploreSpace, TechParams};
 pub use models::{Attention, ModelSpec};
-pub use workload::{ArrivalProcess, ServeSpec, SloSpec, TrafficSpec, Workload};
+pub use workload::{
+    ArrivalProcess, FaultEvent, FaultSpec, ServeSpec, SloSpec, TrafficSpec, Workload,
+};

@@ -120,6 +120,148 @@ impl TrafficSpec {
     }
 }
 
+/// One scripted fault-plan event: a replica going down or coming back up
+/// at a fixed virtual-time instant.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct FaultEvent {
+    /// Replica index the event applies to.
+    pub replica: usize,
+    /// Virtual time of the transition, seconds since trace start.
+    pub at_s: f64,
+    /// `true` = the replica recovers; `false` = it fails.
+    pub up: bool,
+}
+
+/// Replica failure model for the multi-replica serving simulator: either a
+/// seeded per-replica MTBF/MTTR renewal process (exponential up/down
+/// durations) or an explicit scripted plan of `fail`/`recover` events —
+/// the plan, when non-empty, replaces the stochastic process entirely, so
+/// tests and CI get exact schedules. [`FaultSpec::none`] (the default)
+/// disables the whole mechanism: fault-free runs take the unmodified
+/// simulation path and stay byte-identical to pre-fault reports.
+#[derive(Clone, Debug, PartialEq)]
+pub struct FaultSpec {
+    /// Mean time between failures per replica, seconds; 0 = no stochastic
+    /// failures (scripted `plan` events may still fire).
+    pub mtbf_s: f64,
+    /// Mean time to repair per failure, seconds.
+    pub mttr_s: f64,
+    /// PRNG seed of the stochastic failure/recovery processes (one
+    /// independent stream per replica).
+    pub seed: u64,
+    /// Scripted transitions; non-empty replaces the stochastic process.
+    pub plan: Vec<FaultEvent>,
+    /// Re-dispatches a request may survive before it counts as `lost`
+    /// (each crash of its replica costs one try; recompute starts from
+    /// scratch on the new replica).
+    pub max_redispatch: usize,
+    /// Availability target for redundancy sizing: the SLO-constrained
+    /// sweep searches N+k replica counts and selects the cheapest fleet
+    /// whose SLO holds under faults with at least this completed/offered
+    /// fraction. `0.0` (default) keeps the fixed replica count.
+    pub availability: f64,
+    /// Maximum spare replicas the redundancy search may add on top of the
+    /// spec's base replica count.
+    pub max_spares: usize,
+}
+
+impl FaultSpec {
+    /// No failures: the simulator takes the unmodified fault-free path.
+    pub fn none() -> FaultSpec {
+        FaultSpec {
+            mtbf_s: 0.0,
+            mttr_s: 0.0,
+            seed: 0,
+            plan: Vec::new(),
+            max_redispatch: 3,
+            availability: 0.0,
+            max_spares: 4,
+        }
+    }
+
+    /// Seeded stochastic failures: exponential up-times with mean
+    /// `mtbf_s`, exponential repair times with mean `mttr_s`.
+    pub fn mtbf(mtbf_s: f64, mttr_s: f64, seed: u64) -> FaultSpec {
+        FaultSpec { mtbf_s, mttr_s, seed, ..FaultSpec::none() }
+    }
+
+    /// Scripted failures only (see [`FaultSpec::parse_plan`] for the
+    /// string grammar).
+    pub fn scripted(plan: Vec<FaultEvent>) -> FaultSpec {
+        FaultSpec { plan, ..FaultSpec::none() }
+    }
+
+    /// Same spec with an availability target for redundancy sizing.
+    pub fn with_availability(mut self, availability: f64) -> FaultSpec {
+        self.availability = availability;
+        self
+    }
+
+    /// True when the spec disables the fault model entirely — no
+    /// stochastic process and no scripted events. The simulator entry
+    /// points delegate to the fault-free path in this case, which is what
+    /// keeps `FaultSpec::none()` runs byte-identical by construction.
+    pub fn is_none(&self) -> bool {
+        // cc-lint: allow(no-float-eq) 0.0 is the exact spec-default sentinel for "no stochastic process"; no arithmetic ever produces it
+        self.mtbf_s == 0.0 && self.plan.is_empty()
+    }
+
+    /// Parse a scripted plan: comma-separated `fail:<replica>@<t>` /
+    /// `recover:<replica>@<t>` entries (seconds of virtual time),
+    /// mirroring the orchestrator's `CC_FAULT_PLAN` grammar. Empty (or
+    /// all-whitespace) means no events.
+    pub fn parse_plan(s: &str) -> Result<Vec<FaultEvent>, String> {
+        let mut plan = Vec::new();
+        for raw in s.split(',').map(str::trim).filter(|t| !t.is_empty()) {
+            let (kind, target) = raw
+                .split_once(':')
+                .ok_or_else(|| format!("fault '{raw}': expected <kind>:<replica>@<t>"))?;
+            let up = match kind {
+                "fail" => false,
+                "recover" => true,
+                other => {
+                    return Err(format!(
+                        "fault '{raw}': unknown kind '{other}' (expected fail or recover)"
+                    ))
+                }
+            };
+            let (replica, at) = target
+                .split_once('@')
+                .ok_or_else(|| format!("fault '{raw}': expected <replica>@<t>"))?;
+            let replica: usize = replica
+                .parse()
+                .map_err(|_| format!("fault '{raw}': bad replica index '{replica}'"))?;
+            let at_s: f64 = at
+                .parse()
+                .map_err(|_| format!("fault '{raw}': bad time '{at}'"))?;
+            if !at_s.is_finite() || at_s < 0.0 {
+                return Err(format!("fault '{raw}': time must be finite and >= 0"));
+            }
+            plan.push(FaultEvent { replica, at_s, up });
+        }
+        Ok(plan)
+    }
+
+    /// Render the scripted plan back to the [`FaultSpec::parse_plan`]
+    /// grammar (round-trips exactly: Rust's shortest-float formatting
+    /// re-parses to the same bits).
+    pub fn plan_string(&self) -> String {
+        self.plan
+            .iter()
+            .map(|e| {
+                format!("{}:{}@{}", if e.up { "recover" } else { "fail" }, e.replica, e.at_s)
+            })
+            .collect::<Vec<_>>()
+            .join(",")
+    }
+}
+
+impl Default for FaultSpec {
+    fn default() -> Self {
+        FaultSpec::none()
+    }
+}
+
 /// Traffic plus the SLO it must be served under — the serving-layer spec a
 /// [`Workload`] optionally carries into the sweep — and the serving-model
 /// knobs the event simulator honours: chunked prefill, paged-KV
@@ -157,6 +299,9 @@ pub struct ServeSpec {
     /// request count comes from the file. Mutually exclusive with a
     /// non-default synthetic arrival process.
     pub trace_file: Option<String>,
+    /// Replica failure model ([`FaultSpec::none`] = every replica is up
+    /// forever — the pre-fault behaviour, byte-identical).
+    pub faults: FaultSpec,
 }
 
 impl ServeSpec {
@@ -172,6 +317,7 @@ impl ServeSpec {
             route: crate::sched::RoutePolicy::RoundRobin,
             quantum: 0.0,
             trace_file: None,
+            faults: FaultSpec::none(),
         }
     }
 
@@ -204,6 +350,12 @@ impl ServeSpec {
     /// Replay arrivals from a CSV trace file instead of synthesizing them.
     pub fn with_trace_file<S: Into<String>>(mut self, path: S) -> ServeSpec {
         self.trace_file = Some(path.into());
+        self
+    }
+
+    /// Serve under the given replica failure model.
+    pub fn with_faults(mut self, faults: FaultSpec) -> ServeSpec {
+        self.faults = faults;
         self
     }
 }
@@ -351,6 +503,7 @@ mod tests {
         assert_eq!(s.prefill_chunk, 0);
         assert!(!s.paged_kv);
         assert_eq!(s.replicas, 1);
+        assert!(s.faults.is_none());
     }
 
     #[test]
@@ -372,5 +525,43 @@ mod tests {
     fn resident_dominated_by_weights_at_small_batch() {
         let w = Workload::new(ModelSpec::gpt3(), 2048, 1);
         assert!(w.resident_bytes() < w.model.weight_bytes() * 1.05);
+    }
+
+    #[test]
+    fn fault_plan_grammar_parses_and_round_trips() {
+        let plan = FaultSpec::parse_plan("fail:0@5.5, recover:0@12 ,fail:2@100").unwrap();
+        assert_eq!(
+            plan,
+            vec![
+                FaultEvent { replica: 0, at_s: 5.5, up: false },
+                FaultEvent { replica: 0, at_s: 12.0, up: true },
+                FaultEvent { replica: 2, at_s: 100.0, up: false },
+            ]
+        );
+        let spec = FaultSpec::scripted(plan.clone());
+        assert!(!spec.is_none());
+        assert_eq!(FaultSpec::parse_plan(&spec.plan_string()).unwrap(), plan);
+        assert!(FaultSpec::parse_plan("").unwrap().is_empty());
+        assert!(FaultSpec::parse_plan("   ").unwrap().is_empty());
+    }
+
+    #[test]
+    fn fault_plan_grammar_rejects_malformed_entries() {
+        for bad in ["explode:0@1", "fail:0", "fail:x@1", "fail:0@soon", "fail:0@-1", "fail:0@inf"]
+        {
+            let err = FaultSpec::parse_plan(bad).unwrap_err();
+            assert!(err.contains("fault"), "{bad}: {err}");
+        }
+    }
+
+    #[test]
+    fn fault_spec_none_is_inert_and_detectable() {
+        assert!(FaultSpec::none().is_none());
+        assert!(FaultSpec::default().is_none());
+        assert!(!FaultSpec::mtbf(100.0, 5.0, 7).is_none());
+        let s = ServeSpec::new(TrafficSpec::poisson(10.0, 10, 64, 8, 32), SloSpec::unconstrained())
+            .with_faults(FaultSpec::mtbf(100.0, 5.0, 7).with_availability(0.99));
+        assert!((s.faults.availability - 0.99).abs() < 1e-12);
+        assert_eq!(s.faults.seed, 7);
     }
 }

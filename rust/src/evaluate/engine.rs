@@ -39,8 +39,9 @@ use crate::explore::pareto;
 use crate::mapping::optimizer::{candidate_mappings, optimize_mapping_bounded, SearchStats};
 use crate::mapping::{partition, Mapping};
 use crate::perf::events::{
-    open_loop_trace, simulate_replicated, simulate_replicated_on, simulate_replicated_stream,
-    unserved_report, IterCost, ServeReport, SimConfig,
+    open_loop_trace, simulate_replicated_faults, simulate_replicated_on,
+    simulate_replicated_stream, simulate_replicated_stream_faults, unserved_report, IterCost,
+    ServeReport, SimConfig,
 };
 use crate::perf::trace::TraceFile;
 use crate::perf::kernels::{KernelCache, MAC_EFFICIENCY};
@@ -360,6 +361,10 @@ pub struct SloSelection {
     /// Validations the simulator aborted early as provably SLO-infeasible
     /// (a subset of `validated`; 0 when `fast_sim` is off).
     pub aborted_early: usize,
+    /// Replica count of the confirmed fleet: `spec.replicas` on fault-free
+    /// runs, possibly larger when an availability target sized spares in
+    /// (see [`SweepEngine::best_point_slo`]'s redundancy sizing).
+    pub replicas: usize,
 }
 
 /// Optimistic (admissible) steady-state TTFT bound for one request of
@@ -443,6 +448,14 @@ impl SweepEngine {
                 .then(a.0.cmp(&b.0))
                 .then(a.1.cmp(&b.1))
         });
+        // A non-none fault model changes what "meets the SLO" means (and,
+        // with an availability target, how many replicas to buy), so the
+        // whole stage-2 scan moves to the failure-aware sequential path.
+        // The fault-free scan below is untouched — existing goldens stay
+        // byte-identical.
+        if !spec.faults.is_none() {
+            return self.size_redundancy(w, spec, pts, bound_feasible);
+        }
         // Cross-candidate warm start: every stage-2 validation replays the
         // *same* seeded traffic, so the open-loop trace is materialized
         // once here and shared across all waves instead of being re-drawn
@@ -528,11 +541,117 @@ impl SweepEngine {
                         bound_feasible,
                         validated,
                         aborted_early,
+                        replicas: spec.replicas.max(1),
                     });
                 }
             }
             start += n;
             wave = (wave * 2).min(threads);
+        }
+        None
+    }
+
+    /// Failure-aware stage 2: validate candidates under the spec's
+    /// [`crate::config::workload::FaultSpec`] and, when an availability
+    /// target is set, size redundancy — for each candidate try replica
+    /// counts `base..=base + max_spares` and commit the first
+    /// (candidate, fleet) whose faulted report passes
+    /// [`ServeReport::meets_available`].
+    ///
+    /// Pairs are scanned in ascending *fleet* cost order: a fleet of `n`
+    /// replicas of a design costs `tco_per_token * n / base` relative to
+    /// the base fleet the traffic was sized for (same offered tokens,
+    /// `n/base` times the hardware), so the first pass is the cheapest
+    /// fleet whose SLO holds under faults. Ties break by candidate rank
+    /// then by `n` (fewest spares first), keeping the scan deterministic.
+    ///
+    /// Sequential on purpose: faulted runs never arm the early-abort
+    /// proof (re-dispatched arrivals break its sorted-queue argument —
+    /// see [`crate::perf::events`]), and the N+k grid is small, so the
+    /// speculative wave machinery buys little here and the simple scan
+    /// keeps commit order trivially identical to cost order. Without an
+    /// availability target (`availability == 0.0`) no spares are tried:
+    /// the scan degenerates to "does the base fleet hold the SLO *under
+    /// faults*", which is still [`ServeReport::meets_available`] — its
+    /// completed-fraction term is vacuous at 0.0 and only the latency
+    /// tails bind.
+    fn size_redundancy(
+        &self,
+        w: &Workload,
+        spec: &ServeSpec,
+        pts: Vec<(usize, usize, DesignPoint)>,
+        bound_feasible: usize,
+    ) -> Option<SloSelection> {
+        let base = spec.replicas.max(1);
+        let spares = if spec.faults.availability > 0.0 { spec.faults.max_spares } else { 0 };
+        let tfile = match &spec.trace_file {
+            Some(p) if !pts.is_empty() => match TraceFile::open(p) {
+                Ok(tf) => Some(tf),
+                // Callers validated the path up front; a file that vanished
+                // since means no candidate can be confirmed.
+                Err(_) => return None,
+            },
+            _ => None,
+        };
+        // (candidate index, fleet size, relative fleet cost).
+        let mut plan: Vec<(usize, usize, f64)> = Vec::new();
+        for (pi, (_, _, point)) in pts.iter().enumerate() {
+            for n in base..=base + spares {
+                plan.push((pi, n, point.tco_per_token * n as f64 / base as f64));
+            }
+        }
+        plan.sort_by(|a, b| {
+            crate::util::stats::total_cmp_f64(&a.2, &b.2)
+                .then(a.0.cmp(&b.0))
+                .then(a.1.cmp(&b.1))
+        });
+        let mut validated = 0usize;
+        for (pi, n, _) in plan {
+            let point = &pts[pi].2;
+            let mut cfg = slo_sim_config(point, w, spec);
+            cfg.reference_step = !self.fast_sim;
+            // Ignored by the faulted simulator, but kept off so the
+            // configuration states what actually runs.
+            cfg.early_abort = false;
+            let report = match &tfile {
+                Some(tf) => match tf.arrivals() {
+                    Ok(src) => simulate_replicated_stream_faults(
+                        &cfg,
+                        n,
+                        spec.route,
+                        &ContinuousBatch,
+                        &spec.traffic,
+                        tf.requests(),
+                        src,
+                        &spec.faults,
+                        &spec.slo,
+                    ),
+                    // Mid-scan loss of the file: an unserved report never
+                    // meets an availability target, so the pair is
+                    // (conservatively) rejected.
+                    Err(_) => unserved_report("continuous", n, tf.requests()),
+                },
+                None => simulate_replicated_faults(
+                    &cfg,
+                    n,
+                    spec.route,
+                    &ContinuousBatch,
+                    &spec.traffic,
+                    &spec.faults,
+                    &spec.slo,
+                ),
+            };
+            validated += 1;
+            if report.meets_available(&spec.slo, spec.faults.availability) {
+                return Some(SloSelection {
+                    point: point.clone(),
+                    report,
+                    bound_feasible,
+                    validated,
+                    aborted_early: 0,
+                    replicas: n,
+                });
+            }
         }
         None
     }
@@ -672,6 +791,10 @@ pub fn slo_sim_config(point: &DesignPoint, w: &Workload, spec: &ServeSpec) -> Si
 /// off): the report is full-fidelity and suitable for display. The sweep's
 /// internal stage-2 scan additionally enables early abort — see
 /// [`SweepEngine::best_point_slo`].
+///
+/// Runs through the failure-aware entry points, which delegate to the
+/// exact fault-free code path when `spec.faults` is none — so fault-free
+/// reports stay byte-identical to the pre-fault simulator.
 pub fn validate_design_slo(point: &DesignPoint, w: &Workload, spec: &ServeSpec) -> ServeReport {
     let cfg = slo_sim_config(point, w, spec);
     if let Some(p) = &spec.trace_file {
@@ -680,7 +803,7 @@ pub fn validate_design_slo(point: &DesignPoint, w: &Workload, spec: &ServeSpec) 
             Err(_) => None,
         };
         return match stream {
-            Some((src, offered)) => simulate_replicated_stream(
+            Some((src, offered)) => simulate_replicated_stream_faults(
                 &cfg,
                 spec.replicas,
                 spec.route,
@@ -688,6 +811,7 @@ pub fn validate_design_slo(point: &DesignPoint, w: &Workload, spec: &ServeSpec) 
                 &spec.traffic,
                 offered,
                 src,
+                &spec.faults,
                 &spec.slo,
             ),
             // Callers validated the path; a vanished file degrades to an
@@ -695,7 +819,15 @@ pub fn validate_design_slo(point: &DesignPoint, w: &Workload, spec: &ServeSpec) 
             None => unserved_report("continuous", spec.replicas, spec.traffic.requests),
         };
     }
-    simulate_replicated(&cfg, spec.replicas, spec.route, &ContinuousBatch, &spec.traffic, &spec.slo)
+    simulate_replicated_faults(
+        &cfg,
+        spec.replicas,
+        spec.route,
+        &ContinuousBatch,
+        &spec.traffic,
+        &spec.faults,
+        &spec.slo,
+    )
 }
 
 /// Evaluate one server design for a workload with the TCO/Token objective,
@@ -919,6 +1051,50 @@ mod tests {
             .expect("feasible");
         assert_eq!(p0.mapping, p1.mapping);
         assert_eq!(r1.expect("spec attached → report").completed, 20);
+    }
+
+    /// The redundancy-sizing acceptance shape in miniature: a scripted,
+    /// never-recovering kill of replica 0 plus an availability target
+    /// forces the selection to buy at least one spare over the fault-free
+    /// optimum — a strictly more redundant and strictly costlier fleet.
+    #[test]
+    fn availability_target_buys_a_spare_replica() {
+        use crate::config::workload::FaultSpec;
+        let (space, servers) = setup();
+        let w = Workload::new(ModelSpec::megatron(), 1024, 64);
+        // Generous-but-finite tails: only the availability term binds.
+        let slo = SloSpec::new(1e6, 1e6);
+        let traffic = TrafficSpec::poisson(2.0, 20, 16, 4, 8);
+        let engine = SweepEngine::default();
+        let free = engine
+            .best_point_slo(&space, &servers, &w, &ServeSpec::new(traffic.clone(), slo))
+            .expect("fault-free selection feasible");
+        assert_eq!(free.replicas, 1);
+        let faults = FaultSpec::scripted(FaultSpec::parse_plan("fail:0@0.05").expect("plan"))
+            .with_availability(0.9);
+        let spec = ServeSpec::new(traffic, slo).with_faults(faults);
+        let sized = engine
+            .best_point_slo(&space, &servers, &w, &spec)
+            .expect("a spare makes the fleet available");
+        // A one-replica fleet loses (almost) the whole run to the
+        // unrecovered kill, so the target forces at least one spare...
+        assert!(
+            sized.replicas > free.replicas,
+            "expected a spare over the fault-free fleet of {}",
+            free.replicas
+        );
+        // ...making the chosen fleet strictly costlier than the fault-free
+        // optimum's.
+        assert!(
+            sized.point.tco_per_token * sized.replicas as f64
+                > free.point.tco_per_token * free.replicas as f64
+        );
+        assert!(sized.report.meets_available(&slo, 0.9));
+        assert_eq!(
+            sized.report.completed + sized.report.rejected + sized.report.lost,
+            sized.report.offered,
+            "faulted-run conservation broke"
+        );
     }
 
     #[test]

@@ -11,7 +11,7 @@
 use std::path::Path;
 
 use crate::config::experiment::{defaults, EngineKnobs, Experiment, SpaceSpec, Task, WorkloadPoint};
-use crate::config::{ArrivalProcess, ModelSpec, ServeSpec, SloSpec, TrafficSpec};
+use crate::config::{ArrivalProcess, FaultSpec, ModelSpec, ServeSpec, SloSpec, TrafficSpec};
 use crate::sched::RoutePolicy;
 use crate::util::cli::Args;
 use crate::{Error, Result};
@@ -70,9 +70,22 @@ fn sweep_from_args(args: &Args, space: SpaceSpec, engine: EngineKnobs) -> Result
         // The serving model only enters the sweep through the
         // SLO-constrained selection; accepting these flags here and
         // ignoring them would misrepresent the optimum.
-        for flag in
-            ["paged", "prefill-chunk", "replicas", "route", "trace", "rps", "trace-file", "quantum"]
-        {
+        for flag in [
+            "paged",
+            "prefill-chunk",
+            "replicas",
+            "route",
+            "trace",
+            "rps",
+            "trace-file",
+            "quantum",
+            "faults",
+            "mtbf",
+            "mttr",
+            "fault-seed",
+            "availability",
+            "max-spares",
+        ] {
             if args.has(flag) {
                 return Err(Error::Config(format!(
                     "--{flag} has no effect on an unconstrained sweep — add \
@@ -277,6 +290,24 @@ fn serve_model_from_args(args: &Args, mut spec: ServeSpec) -> Result<ServeSpec> 
         })?,
     };
     spec.quantum = parse_positive_f64(args, "quantum")?.unwrap_or(0.0);
+    // Failure model: a scripted plan (`--faults`) or a stochastic
+    // MTBF/MTTR process (`--mtbf`/`--mttr`), with the availability target
+    // and spare budget that drive redundancy sizing. Coherence (mtbf
+    // needs mttr, availability needs a fault model, plan replicas in
+    // range) is enforced by `Experiment::validate`, same as the JSON path.
+    let mut faults = FaultSpec::none();
+    if let Some(plan) = args.get("faults") {
+        faults.plan =
+            FaultSpec::parse_plan(plan).map_err(|e| Error::Config(format!("--faults: {e}")))?;
+    }
+    faults.mtbf_s = parse_positive_f64(args, "mtbf")?.unwrap_or(0.0);
+    faults.mttr_s = parse_positive_f64(args, "mttr")?.unwrap_or(0.0);
+    faults.seed = parse_usize(args, "fault-seed", 0, 0)? as u64;
+    if let Some(a) = parse_positive_f64(args, "availability")? {
+        faults.availability = a;
+    }
+    faults.max_spares = parse_usize(args, "max-spares", faults.max_spares, 0)?;
+    spec.faults = faults;
     if let Some(p) = args.get("trace-file") {
         for flag in ["trace", "rps", "burst", "clients", "think"] {
             if args.has(flag) {

@@ -37,8 +37,8 @@ pub use crate::config::experiment::{
 use crate::config::{ArrivalProcess, ModelSpec, ServeSpec, TrafficSpec, Workload};
 use crate::evaluate::{DesignPoint, SloSelection, SweepEngine, SweepStats};
 use crate::perf::events::{
-    simulate_replicated, simulate_replicated_stream, simulate_trace, simulate_trace_stream,
-    IterCost, ServeReport, SimConfig,
+    simulate_replicated_faults, simulate_replicated_stream_faults, simulate_trace,
+    simulate_trace_stream, IterCost, ServeReport, SimConfig,
 };
 use crate::perf::simulator::max_context;
 use crate::perf::trace::TraceFile;
@@ -586,12 +586,15 @@ pub fn serve_outcome(
         };
         rows.push((r.policy.clone(), r));
     }
-    if spec.replicas > 1 {
+    // The replicated rows run through the failure-aware entry points;
+    // with `FaultSpec::none` they delegate to the fault-free path, so
+    // fault-free rows stay byte-identical to the pre-fault reports.
+    if spec.replicas > 1 || !spec.faults.is_none() {
         for route in [RoutePolicy::RoundRobin, RoutePolicy::Jsq, RoutePolicy::JsqTokens] {
             let r = match &trace {
                 Some(tf) => {
                     let src = tf.arrivals().map_err(crate::Error::Config)?;
-                    simulate_replicated_stream(
+                    simulate_replicated_stream_faults(
                         &cfg,
                         spec.replicas,
                         route,
@@ -599,15 +602,17 @@ pub fn serve_outcome(
                         &traffic,
                         tf.requests(),
                         src,
+                        &spec.faults,
                         &slo,
                     )
                 }
-                None => simulate_replicated(
+                None => simulate_replicated_faults(
                     &cfg,
                     spec.replicas,
                     route,
                     &ContinuousBatch,
                     &traffic,
+                    &spec.faults,
                     &slo,
                 ),
             };
@@ -771,12 +776,20 @@ impl SweepOutcome {
         let slo = match &self.slo {
             None => Json::Null,
             Some(part) => match &part.selection {
-                Some(sel) => obj(vec![
-                    ("feasible", Json::Bool(true)),
-                    ("design", design_json(part.ctx, part.batch, &sel.point)),
-                    ("report", report_json(&sel.report)),
-                    ("bound_feasible", int(sel.bound_feasible)),
-                ]),
+                Some(sel) => {
+                    let mut f = vec![
+                        ("feasible", Json::Bool(true)),
+                        ("design", design_json(part.ctx, part.batch, &sel.point)),
+                        ("report", report_json(&sel.report)),
+                        ("bound_feasible", int(sel.bound_feasible)),
+                    ];
+                    // Only when redundancy sizing bought spares, so
+                    // fault-free outputs stay byte-identical.
+                    if sel.replicas != part.spec.replicas.max(1) {
+                        f.push(("replicas", int(sel.replicas)));
+                    }
+                    obj(f)
+                }
                 None => obj(vec![("feasible", Json::Bool(false))]),
             },
         };
@@ -849,12 +862,20 @@ impl ServeOutcome {
         match &self.slo {
             None => {}
             Some(Some(sel)) => {
+                // Sized fleets carry their replica count; fault-free
+                // labels are unchanged.
+                let fleet = if sel.replicas != self.spec.replicas.max(1) {
+                    format!(", x{}", sel.replicas)
+                } else {
+                    String::new()
+                };
                 let label = format!(
-                    "slo-opt ({:.0} mm², tp={} pp={}, ${:.3}/1M)",
+                    "slo-opt ({:.0} mm², tp={} pp={}, ${:.3}/1M{})",
                     sel.point.server.chiplet.die_mm2,
                     sel.point.mapping.tp,
                     sel.point.mapping.pp,
                     sel.point.tco_per_mtok(),
+                    fleet,
                 );
                 t.row(report_row(label, &sel.report));
             }
@@ -879,12 +900,20 @@ impl ServeOutcome {
         let slo = match &self.slo {
             None => Json::Null,
             Some(None) => obj(vec![("feasible", Json::Bool(false))]),
-            Some(Some(sel)) => obj(vec![
-                ("feasible", Json::Bool(true)),
-                ("design", design_json(self.ctx, self.batch, &sel.point)),
-                ("report", report_json(&sel.report)),
-                ("bound_feasible", int(sel.bound_feasible)),
-            ]),
+            Some(Some(sel)) => {
+                let mut f = vec![
+                    ("feasible", Json::Bool(true)),
+                    ("design", design_json(self.ctx, self.batch, &sel.point)),
+                    ("report", report_json(&sel.report)),
+                    ("bound_feasible", int(sel.bound_feasible)),
+                ];
+                // Only when redundancy sizing bought spares, so fault-free
+                // outputs stay byte-identical.
+                if sel.replicas != self.spec.replicas.max(1) {
+                    f.push(("replicas", int(sel.replicas)));
+                }
+                obj(f)
+            }
         };
         let mut fields = vec![
             ("kind", Json::Str("serve-sim".into())),
@@ -903,6 +932,9 @@ impl ServeOutcome {
         }
         if let Some(p) = &self.spec.trace_file {
             fields.push(("trace_file", Json::Str(p.clone())));
+        }
+        if !self.spec.faults.is_none() {
+            fields.push(("faults", crate::config::experiment::faults_to_json(&self.spec.faults)));
         }
         fields.extend([
             ("feasible", Json::Bool(self.feasible)),
@@ -1036,7 +1068,7 @@ fn design_json(ctx: usize, batch: usize, p: &DesignPoint) -> Json {
 
 /// A serve report flattened to its aggregate metrics.
 fn report_json(r: &ServeReport) -> Json {
-    obj(vec![
+    let mut fields = vec![
         ("policy", Json::Str(r.policy.clone())),
         ("replicas", int(r.replicas)),
         ("offered", int(r.offered)),
@@ -1056,5 +1088,13 @@ fn report_json(r: &ServeReport) -> Json {
         ("peak_kv_tokens", int(r.peak_kv_tokens)),
         ("rejected", int(r.rejected)),
         ("aborted_early", Json::Bool(r.aborted_early)),
-    ])
+    ];
+    // Failure accounting is emitted only when the run actually saw faults,
+    // so fault-free outputs stay byte-identical to pre-fault reports.
+    if r.redispatched > 0 || r.lost > 0 || r.downtime_frac > 0.0 {
+        fields.push(("redispatched", int(r.redispatched)));
+        fields.push(("lost", int(r.lost)));
+        fields.push(("downtime_frac", num(r.downtime_frac)));
+    }
+    obj(fields)
 }

@@ -171,6 +171,26 @@ impl Default for OrchestratorConfig {
     }
 }
 
+/// One resolved attempt of one shard, in attempt order — the post-mortem
+/// record `status.json` carries so a retried shard's causes don't have to
+/// be scraped out of interleaved worker logs.
+#[derive(Clone, Debug)]
+pub struct AttemptRecord {
+    /// Attempt ordinal (0-based), matching the `CC_FAULT_PLAN` grammar.
+    pub attempt: usize,
+    /// Fault the schedule injected into this attempt
+    /// ([`FaultAction::env_value`] form), if any.
+    pub fault: Option<String>,
+    /// The attempt hit the wall-clock timeout.
+    pub timeout: bool,
+    /// Failure cause; `None` means the attempt produced a validated
+    /// checkpoint.
+    pub cause: Option<String>,
+    /// Backoff applied before the follow-up attempt, in milliseconds
+    /// (0 on success or when retries were exhausted).
+    pub backoff_ms: u64,
+}
+
 /// Supervision record of one shard across all its attempts.
 #[derive(Clone, Debug)]
 pub struct ShardStatus {
@@ -188,6 +208,9 @@ pub struct ShardStatus {
     pub error: Option<String>,
     /// Child wall-clock seconds summed over attempts.
     pub wall_s: f64,
+    /// Per-attempt post-mortem records, in attempt order (empty when the
+    /// shard was adopted from a checkpoint and never launched).
+    pub history: Vec<AttemptRecord>,
 }
 
 /// Everything `run_distributed` produced: the merged (possibly partial)
@@ -294,6 +317,7 @@ pub fn run_distributed(
             ok: false,
             error: None,
             wall_s: 0.0,
+            history: Vec::new(),
         })
         .collect();
     let mut envelopes: Vec<Option<Envelope>> = vec![None; n];
@@ -384,6 +408,7 @@ pub fn run_distributed(
                     attempt,
                     cfg,
                     format!("spawn failed: {e}"),
+                    false,
                 ),
             }
         }
@@ -391,6 +416,7 @@ pub fn run_distributed(
         let mut k = 0;
         while k < running.len() {
             let slot = &mut running[k];
+            let mut timed_out = false;
             let done: Option<std::result::Result<(), String>> = match slot.child.try_wait() {
                 Ok(Some(st)) if st.success() => Some(Ok(())),
                 Ok(Some(st)) => Some(Err(match st.code() {
@@ -400,6 +426,7 @@ pub fn run_distributed(
                 Ok(None) if Instant::now() >= slot.deadline => {
                     kill_and_reap(&mut slot.child);
                     statuses[slot.index].timeouts += 1;
+                    timed_out = true;
                     Some(Err(format!("timed out after {:.1}s", cfg.timeout.as_secs_f64())))
                 }
                 Ok(None) => None,
@@ -434,10 +461,21 @@ pub fn run_distributed(
             });
             match validated {
                 Ok(env) => {
+                    let fault =
+                        cfg.fault_plan.lookup(slot.index, slot.attempt).map(|f| f.env_value());
                     statuses[slot.index].ok = true;
+                    statuses[slot.index].history.push(AttemptRecord {
+                        attempt: slot.attempt,
+                        fault,
+                        timeout: false,
+                        cause: None,
+                        backoff_ms: 0,
+                    });
                     envelopes[slot.index] = Some(env);
                 }
-                Err(e) => fail(&mut statuses[slot.index], &mut pending, slot.attempt, cfg, e),
+                Err(e) => {
+                    fail(&mut statuses[slot.index], &mut pending, slot.attempt, cfg, e, timed_out)
+                }
             }
         }
         if !pending.is_empty() || !running.is_empty() {
@@ -474,20 +512,38 @@ pub fn run_distributed(
 }
 
 /// Record a failed attempt: requeue with deterministic backoff while
-/// retries remain, otherwise mark the shard exhausted.
+/// retries remain, otherwise mark the shard exhausted. Either way the
+/// attempt lands in the shard's [`AttemptRecord`] history with its cause,
+/// injected fault, timeout flag, and the backoff actually applied.
 fn fail(
     status: &mut ShardStatus,
     pending: &mut VecDeque<(usize, usize, Instant)>,
     attempt: usize,
     cfg: &OrchestratorConfig,
     err: String,
+    timed_out: bool,
 ) {
     eprintln!("shard {} attempt {attempt}: {err}", status.index);
+    let fault = cfg.fault_plan.lookup(status.index, attempt).map(|f| f.env_value());
     if attempt < cfg.retries {
         let delay = backoff_delay(cfg.backoff, attempt.min(31) as u32, Duration::from_secs(30));
         pending.push_back((status.index, attempt + 1, Instant::now() + delay));
+        status.history.push(AttemptRecord {
+            attempt,
+            fault,
+            timeout: timed_out,
+            cause: Some(err.clone()),
+            backoff_ms: delay.as_millis() as u64,
+        });
         status.error = Some(err);
     } else {
+        status.history.push(AttemptRecord {
+            attempt,
+            fault,
+            timeout: timed_out,
+            cause: Some(err.clone()),
+            backoff_ms: 0,
+        });
         status.error = Some(format!("{err} (retries exhausted after {} attempts)", attempt + 1));
     }
 }
@@ -505,6 +561,25 @@ pub fn status_to_json(fingerprint: &str, merged: &Merged, statuses: &[ShardStatu
                 statuses
                     .iter()
                     .map(|s| {
+                        let history = s
+                            .history
+                            .iter()
+                            .map(|a| {
+                                obj(vec![
+                                    ("attempt", int(a.attempt)),
+                                    (
+                                        "fault",
+                                        a.fault.clone().map(Json::Str).unwrap_or(Json::Null),
+                                    ),
+                                    ("timeout", Json::Bool(a.timeout)),
+                                    (
+                                        "cause",
+                                        a.cause.clone().map(Json::Str).unwrap_or(Json::Null),
+                                    ),
+                                    ("backoff_ms", int(a.backoff_ms as usize)),
+                                ])
+                            })
+                            .collect();
                         obj(vec![
                             ("index", int(s.index)),
                             ("attempts", int(s.attempts)),
@@ -512,7 +587,12 @@ pub fn status_to_json(fingerprint: &str, merged: &Merged, statuses: &[ShardStatu
                             ("from_checkpoint", Json::Bool(s.from_checkpoint)),
                             ("ok", Json::Bool(s.ok)),
                             ("error", s.error.clone().map(Json::Str).unwrap_or(Json::Null)),
-                            ("wall_s", num(s.wall_s)),
+                            ("history", Json::Arr(history)),
+                            // Wall-clock is nondeterministic by nature, so
+                            // it lives under the row's "engine" key like the
+                            // sweep outcome's counters — never in the
+                            // invariant payload.
+                            ("engine", obj(vec![("wall_s", num(s.wall_s))])),
                         ])
                     })
                     .collect(),
@@ -576,6 +656,13 @@ mod tests {
                 ok: true,
                 error: None,
                 wall_s: 0.5,
+                history: vec![AttemptRecord {
+                    attempt: 0,
+                    fault: None,
+                    timeout: false,
+                    cause: None,
+                    backoff_ms: 0,
+                }],
             },
             ShardStatus {
                 index: 1,
@@ -585,6 +672,29 @@ mod tests {
                 ok: false,
                 error: Some("timed out after 0.1s (retries exhausted after 3 attempts)".into()),
                 wall_s: 0.3,
+                history: vec![
+                    AttemptRecord {
+                        attempt: 0,
+                        fault: Some("kill".into()),
+                        timeout: false,
+                        cause: Some("killed by a signal".into()),
+                        backoff_ms: 250,
+                    },
+                    AttemptRecord {
+                        attempt: 1,
+                        fault: None,
+                        timeout: true,
+                        cause: Some("timed out after 0.1s".into()),
+                        backoff_ms: 500,
+                    },
+                    AttemptRecord {
+                        attempt: 2,
+                        fault: None,
+                        timeout: true,
+                        cause: Some("timed out after 0.1s".into()),
+                        backoff_ms: 0,
+                    },
+                ],
             },
         ];
         let v = status_to_json("deadbeefdeadbeef", &merged, &statuses);
@@ -598,5 +708,20 @@ mod tests {
             .and_then(Json::as_str)
             .unwrap()
             .contains("exhausted"));
+        // Per-attempt post-mortem: causes, injected fault, timeout flag and
+        // backoff are all readable straight from the row.
+        let hist = rows[1].get("history").and_then(Json::as_arr).unwrap();
+        assert_eq!(hist.len(), 3);
+        assert_eq!(hist[0].get("fault").and_then(Json::as_str), Some("kill"));
+        assert_eq!(hist[0].get("backoff_ms").and_then(Json::as_usize), Some(250));
+        assert_eq!(hist[1].get("timeout").and_then(Json::as_bool), Some(true));
+        assert_eq!(hist[2].get("backoff_ms").and_then(Json::as_usize), Some(0));
+        assert!(hist[1].get("cause").and_then(Json::as_str).unwrap().contains("timed out"));
+        // A clean first attempt records a null cause...
+        let ok_hist = rows[0].get("history").and_then(Json::as_arr).unwrap();
+        assert!(matches!(ok_hist[0].get("cause"), Some(Json::Null)));
+        // ...and wall-clock is quarantined under the row's "engine" key.
+        assert!(rows[0].get("wall_s").is_none());
+        assert!(rows[0].get("engine").and_then(|e| e.get("wall_s")).is_some());
     }
 }

@@ -65,7 +65,9 @@ fn usage() -> ! {
          ccloud merge run/shards/*.outcome.json [--out DIR]\n\
          serve-sim/sweep serving-model flags: [--slo-ttft S] [--slo-tpot S] [--prefill-chunk N]\n\
          [--paged] [--replicas N] [--route rr|jsq|jsq-tokens] [--rps R] [--trace poisson|bursty|closed]\n\
-         [--trace-file trace.csv] [--quantum S]"
+         [--trace-file trace.csv] [--quantum S]\n\
+         faults: [--faults fail:R@T,recover:R@T,...] [--mtbf S] [--mttr S] [--fault-seed N]\n\
+         [--availability A] [--max-spares K]"
     );
     std::process::exit(2)
 }

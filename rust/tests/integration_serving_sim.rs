@@ -5,10 +5,13 @@
 //! These run entirely on analytic/virtual time — no artifacts needed.
 
 use chiplet_cloud::arch::{ChipletDesign, ServerDesign};
-use chiplet_cloud::config::{ArrivalProcess, ModelSpec, ServeSpec, SloSpec, TrafficSpec, Workload};
+use chiplet_cloud::config::{
+    ArrivalProcess, FaultSpec, ModelSpec, ServeSpec, SloSpec, TrafficSpec, Workload,
+};
 use chiplet_cloud::mapping::Mapping;
 use chiplet_cloud::perf::events::{
-    open_loop_trace, simulate_replicated, simulate_trace, IterCost, SimConfig,
+    open_loop_trace, simulate_replicated, simulate_replicated_faults, simulate_trace, IterCost,
+    SimConfig,
 };
 use chiplet_cloud::perf::simulate;
 use chiplet_cloud::sched::{ContinuousBatch, KvBudget, RoutePolicy, StaticBatch};
@@ -586,6 +589,253 @@ fn in_flight_ttft_abort_is_verdict_preserving() {
             assert!(!full.meets(&slo), "abort on a feasible run is unsound");
         }
     });
+}
+
+/// Failure-model identity property: with `FaultSpec::none` the
+/// failure-aware entry point is **fingerprint-identical** to the default
+/// replicated path across randomized traces, policies, routes, paged
+/// budgets and replica counts — the fault model cannot perturb a
+/// fault-free run by even a bit.
+#[test]
+fn fault_none_is_fingerprint_identical_to_the_default_path() {
+    check("FaultSpec::none == simulate_replicated", 30, |r| {
+        let slots = 2 + r.below(10);
+        let requests = 20 + r.below(60);
+        let arrival = match r.below(3) {
+            0 => ArrivalProcess::Poisson { rps: 0.5 + r.f64() * 40.0 },
+            1 => ArrivalProcess::Bursty { rps: 0.5 + r.f64() * 25.0, burst: 1 + r.below(8) },
+            _ => ArrivalProcess::ClosedLoop { clients: 1 + r.below(8), think_s: r.f64() * 0.05 },
+        };
+        let t = TrafficSpec {
+            arrival,
+            requests,
+            prompt_tokens: 1 + r.below(47),
+            new_tokens_lo: 1 + r.below(8),
+            new_tokens_hi: 9 + r.below(60),
+            seed: r.next_u64(),
+        };
+        let mut cfg = synthetic_cfg(slots);
+        if r.chance(0.4) {
+            cfg.cost = cfg.cost.with_chunk(1 + r.below(24));
+        }
+        if r.chance(0.4) {
+            let footprint = t.prompt_tokens + t.new_tokens_hi;
+            cfg.kv = KvBudget::tokens(footprint * (1 + r.below(slots + 1)) + 8, 8);
+            cfg.paged_kv = true;
+        }
+        let replicas = 1 + r.below(3);
+        let route = match r.below(3) {
+            0 => RoutePolicy::RoundRobin,
+            1 => RoutePolicy::Jsq,
+            _ => RoutePolicy::JsqTokens,
+        };
+        let slo = SloSpec::unconstrained();
+        let (a, b) = if r.chance(0.3) {
+            let p = StaticBatch::new(r.f64() * 0.05);
+            (
+                simulate_replicated(&cfg, replicas, route, &p, &t, &slo),
+                simulate_replicated_faults(&cfg, replicas, route, &p, &t, &FaultSpec::none(), &slo),
+            )
+        } else {
+            let p = ContinuousBatch;
+            (
+                simulate_replicated(&cfg, replicas, route, &p, &t, &slo),
+                simulate_replicated_faults(&cfg, replicas, route, &p, &t, &FaultSpec::none(), &slo),
+            )
+        };
+        assert_eq!(
+            a.fingerprint(),
+            b.fingerprint(),
+            "fault-free fault path diverged (slots {slots}, requests {requests}, \
+             replicas {replicas})"
+        );
+        assert_eq!(b.redispatched, 0);
+        assert_eq!(b.lost, 0);
+        assert_eq!(b.downtime_frac.to_bits(), 0.0f64.to_bits());
+    });
+}
+
+/// Conservation invariant under faults: across poisson/bursty arrivals,
+/// rr/jsq/jsq-tokens routing, paged and full-reservation KV, and both
+/// scripted and stochastic fault schedules, every offered request is
+/// accounted for exactly once: completed + rejected + lost == offered.
+/// Runs are also bit-reproducible under replay.
+#[test]
+fn fault_conservation_holds_across_the_matrix() {
+    let routes = [RoutePolicy::RoundRobin, RoutePolicy::Jsq, RoutePolicy::JsqTokens];
+    let slo = SloSpec::unconstrained();
+    for (ai, arrival) in [
+        ArrivalProcess::Poisson { rps: 45.0 },
+        ArrivalProcess::Bursty { rps: 30.0, burst: 8 },
+    ]
+    .into_iter()
+    .enumerate()
+    {
+        for route in routes {
+            for paged in [false, true] {
+                for (fi, faults) in [
+                    FaultSpec::scripted(
+                        FaultSpec::parse_plan("fail:0@0.5,recover:0@2.0,fail:1@1.0").unwrap(),
+                    ),
+                    FaultSpec::mtbf(1.0, 0.4, 7 + ai as u64),
+                ]
+                .into_iter()
+                .enumerate()
+                {
+                    let t = TrafficSpec {
+                        arrival,
+                        requests: 150,
+                        prompt_tokens: 16,
+                        new_tokens_lo: 4,
+                        new_tokens_hi: 24,
+                        seed: 1000 + fi as u64,
+                    };
+                    let mut cfg = synthetic_cfg(4);
+                    if paged {
+                        cfg.kv = KvBudget::tokens((16 + 24) * 6 + 8, 8);
+                        cfg.paged_kv = true;
+                    }
+                    let run = || {
+                        simulate_replicated_faults(
+                            &cfg,
+                            2,
+                            route,
+                            &ContinuousBatch,
+                            &t,
+                            &faults,
+                            &slo,
+                        )
+                    };
+                    let rep = run();
+                    let tag = format!(
+                        "arrival {ai}, route {}, paged {paged}, faults {fi}",
+                        route.name()
+                    );
+                    assert_eq!(
+                        rep.completed + rep.rejected + rep.lost,
+                        rep.offered,
+                        "conservation broke: {tag}"
+                    );
+                    assert_eq!(rep.offered, 150, "{tag}");
+                    assert_eq!(rep.fingerprint(), run().fingerprint(), "replay diverged: {tag}");
+                    assert!(
+                        (0.0..1.0).contains(&rep.downtime_frac),
+                        "downtime_frac {} out of range: {tag}",
+                        rep.downtime_frac
+                    );
+                }
+            }
+        }
+    }
+}
+
+/// Scripted-plan golden: killing 1 of 3 replicas mid-run strictly degrades
+/// p99 TTFT versus the fault-free fleet, and recovery restores goodput
+/// versus losing the replica forever (the backlog drains once the third
+/// replica returns, instead of stretching the makespan).
+#[test]
+fn killing_one_of_three_degrades_ttft_and_recovery_restores_goodput() {
+    // 3 replicas x 4 slots at 10 ms/step ≈ 1200 tok/s fleet capacity;
+    // 66 req/s x ~20-token mean ≈ 1320 tok/s offered: mild overload, so a
+    // backlog exists fleet-wide from early on and JSQ keeps every replica
+    // busy — the kill at t=1.0 is guaranteed to hit in-flight work.
+    let t = TrafficSpec::poisson(66.0, 300, 16, 8, 32).with_seed(5);
+    let cfg = synthetic_cfg(4);
+    let slo = SloSpec::unconstrained();
+    let run = |faults: &FaultSpec| {
+        simulate_replicated_faults(&cfg, 3, RoutePolicy::Jsq, &ContinuousBatch, &t, faults, &slo)
+    };
+    let clean = run(&FaultSpec::none());
+    let recover =
+        run(&FaultSpec::scripted(FaultSpec::parse_plan("fail:0@1.0,recover:0@2.5").unwrap()));
+    let forever = run(&FaultSpec::scripted(FaultSpec::parse_plan("fail:0@1.0").unwrap()));
+    for (rep, tag) in [(&clean, "clean"), (&recover, "recover"), (&forever, "forever")] {
+        assert_eq!(
+            rep.completed + rep.rejected + rep.lost,
+            rep.offered,
+            "conservation broke: {tag}"
+        );
+    }
+    assert_eq!(clean.completed, 300);
+    // Two live replicas absorb the traffic, so nothing is lost — the kill
+    // shows up purely as re-dispatch work and latency.
+    assert_eq!(recover.lost, 0);
+    assert_eq!(forever.lost, 0);
+    assert!(recover.redispatched > 0, "in-flight work on the dead replica must re-dispatch");
+    assert!(recover.downtime_frac > 0.0);
+    assert!(
+        forever.downtime_frac > recover.downtime_frac,
+        "an unrecovered replica accrues more downtime: {} vs {}",
+        forever.downtime_frac,
+        recover.downtime_frac
+    );
+    // The outage strictly degrades the p99 TTFT tail...
+    assert!(
+        recover.ttft_p99_s > clean.ttft_p99_s,
+        "kill must degrade p99 TTFT: faulted {} vs clean {}",
+        recover.ttft_p99_s,
+        clean.ttft_p99_s
+    );
+    // ...and recovery restores goodput relative to the never-recovered
+    // fleet, which serves the tail at 2/3 capacity and stretches the run.
+    assert!(
+        recover.goodput_tokens_per_s > forever.goodput_tokens_per_s,
+        "recovery must restore goodput: {} vs {}",
+        recover.goodput_tokens_per_s,
+        forever.goodput_tokens_per_s
+    );
+}
+
+/// End-to-end acceptance on the checked-in availability spec: the
+/// selection buys a strictly more redundant — and strictly costlier —
+/// fleet than the fault-free optimum, and its confirming report passes
+/// the availability target under the scripted faults.
+#[test]
+fn availability_spec_buys_redundancy_end_to_end() {
+    use chiplet_cloud::experiment::{Engine, Experiment, Outcome};
+    let path = concat!(env!("CARGO_MANIFEST_DIR"), "/../experiments/availability-serve.json");
+    let text = std::fs::read_to_string(path).expect("checked-in availability spec");
+    let e = Experiment::from_json_str(&text).expect("spec parses");
+    let mut engine = Engine::new();
+    let out = engine.run(&e).expect("spec runs");
+    let Outcome::Serve(o) = out else { panic!("serve-sim spec must yield a serve outcome") };
+    let sel = o
+        .slo
+        .as_ref()
+        .expect("binding SLO")
+        .as_ref()
+        .expect("a spare-equipped fleet must meet the availability target");
+    assert!(
+        sel.replicas > o.spec.replicas,
+        "availability target must buy spares: {} vs base {}",
+        sel.replicas,
+        o.spec.replicas
+    );
+    assert!(sel.report.meets_available(&o.spec.slo, o.spec.faults.availability));
+    assert_eq!(
+        sel.report.completed + sel.report.rejected + sel.report.lost,
+        sel.report.offered,
+        "conservation broke on the confirming report"
+    );
+    // The same spec with the fault model stripped selects the base fleet —
+    // and the sized fleet is strictly costlier.
+    let mut free = e.clone();
+    free.serve.as_mut().expect("serve spec").faults = FaultSpec::none();
+    let Outcome::Serve(o2) = engine.run(&free).expect("fault-free spec runs") else {
+        panic!("serve-sim spec must yield a serve outcome")
+    };
+    let base = o2
+        .slo
+        .as_ref()
+        .expect("binding SLO")
+        .as_ref()
+        .expect("the fault-free selection must be feasible");
+    assert_eq!(base.replicas, o2.spec.replicas);
+    assert!(
+        sel.point.tco_per_token * sel.replicas as f64
+            > base.point.tco_per_token * base.replicas as f64,
+        "the sized fleet must be strictly costlier than the fault-free optimum"
+    );
 }
 
 /// Mirror of the live-coordinator regression: even under a pathological
