@@ -8,7 +8,10 @@
 //! plus a sketched-tail multi-replica fleet run and a failure-aware fleet
 //! section (fault-free runs through the failure-aware entry point are
 //! bit-identical to the default path — asserted — and a scripted mid-run
-//! outage keeps request conservation — asserted).
+//! outage keeps request conservation — asserted), and an overcommit
+//! section on a block-bound paged pool (expected-residency admission must
+//! out-goodput max-footprint reservation — asserted — while the
+//! overcommit-off run keeps the pre-overcommit report shape).
 //!
 //! Pass `--quick` (the CI mode) to shrink the million-request sections;
 //! set `CC_BENCH_JSON` to merge a `serve_sim` section into the sweep
@@ -17,7 +20,7 @@
 use std::collections::BTreeMap;
 use std::time::Instant;
 
-use chiplet_cloud::config::{FaultSpec, SloSpec, TrafficSpec};
+use chiplet_cloud::config::{FaultSpec, OvercommitSpec, SloSpec, TrafficSpec};
 use chiplet_cloud::perf::events::{
     simulate_replicated, simulate_replicated_faults, simulate_trace, IterCost, SimConfig,
 };
@@ -263,6 +266,49 @@ fn main() {
         faulted.downtime_frac * 100.0
     );
 
+    // --- Overcommit: expected-residency vs reservation admission -------
+    // A saturating trace over a block-bound paged pool (the shape the
+    // simulator's own unit test validates, at bench scale): reservation
+    // admits ~3.5 mean-footprint requests into the 32-block pool, lazy
+    // allocation roughly doubles the admitted concurrency, and 16 slots
+    // keep the slot count from binding first.
+    let n_oc = if quick { 20_000 } else { 200_000 };
+    let oc_traffic = TrafficSpec::poisson(1e4, n_oc, 8, 4, 120).with_seed(17);
+    let mut reserved_cfg = cfg();
+    reserved_cfg.max_slots = 16;
+    reserved_cfg.kv = KvBudget::tokens(256, 8);
+    reserved_cfg.paged_kv = true;
+    let mut oc_cfg = reserved_cfg.clone();
+    oc_cfg.overcommit = Some(OvercommitSpec::quantile(0.5));
+    let t0 = Instant::now();
+    let rs = simulate_trace(&reserved_cfg, &mut ContinuousBatch, &oc_traffic, &unconstrained);
+    let rs_s = t0.elapsed().as_secs_f64();
+    let t0 = Instant::now();
+    let oc = simulate_trace(&oc_cfg, &mut ContinuousBatch, &oc_traffic, &unconstrained);
+    let oc_s = t0.elapsed().as_secs_f64();
+    // Overcommit off: no preemption state, and the report keeps the
+    // pre-overcommit aggregate arity — the new machinery is invisible.
+    assert_eq!(rs.preempted, 0, "reservation admission must never preempt");
+    assert!(rs.tiers.is_empty() && rs.windows.is_empty());
+    assert_eq!(rs.fingerprint().0.len(), 24, "off-path report shape drifted");
+    // Overcommit on: preempted work still finishes, and lazy admission
+    // strictly wins goodput on the block-bound pool.
+    assert_eq!(oc.completed, oc.offered, "preempted work must still finish");
+    assert_eq!(rs.completed, rs.offered);
+    assert!(oc.preempted > 0, "the block-bound pool must force preemptions");
+    let oc_gain = oc.goodput_tokens_per_s / rs.goodput_tokens_per_s.max(1e-12);
+    assert!(
+        oc_gain > 1.0,
+        "overcommit must out-goodput reservation admission: {} vs {}",
+        oc.goodput_tokens_per_s,
+        rs.goodput_tokens_per_s
+    );
+    println!(
+        "overcommit ({n_oc} requests, 32-block pool): goodput {:.0} -> {:.0} tok/s \
+         ({oc_gain:.2}x, {} preempted; wall {rs_s:.2}s -> {oc_s:.2}s)",
+        rs.goodput_tokens_per_s, oc.goodput_tokens_per_s, oc.preempted
+    );
+
     // Merge the serve_sim section into the shared bench artifact without
     // clobbering what bench_sweep_engine wrote.
     if let Ok(path) = std::env::var("CC_BENCH_JSON") {
@@ -304,6 +350,17 @@ fn main() {
                         ("lost", Json::Num(faulted.lost as f64)),
                         ("downtime_frac", Json::Num(faulted.downtime_frac)),
                         ("fault_free_identical", Json::Bool(true)),
+                    ]),
+                ),
+                (
+                    "overcommit",
+                    obj(vec![
+                        ("requests", Json::Num(n_oc as f64)),
+                        ("reserved_goodput_tok_s", Json::Num(rs.goodput_tokens_per_s)),
+                        ("overcommit_goodput_tok_s", Json::Num(oc.goodput_tokens_per_s)),
+                        ("goodput_gain", Json::Num(oc_gain)),
+                        ("preempted", Json::Num(oc.preempted as f64)),
+                        ("off_shape_identical", Json::Bool(true)),
                     ]),
                 ),
                 ("epsilon_ok", Json::Bool(true)),

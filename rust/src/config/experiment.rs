@@ -25,7 +25,10 @@
 use std::collections::BTreeMap;
 
 use crate::config::models::ModelSpec;
-use crate::config::workload::{ArrivalProcess, FaultSpec, ServeSpec, SloSpec, TrafficSpec};
+use crate::config::workload::{
+    ArrivalProcess, FaultSpec, OvercommitSpec, ResidencyEstimate, ServeSpec, SloSpec, TierSpec,
+    TokenDist, TrafficSpec,
+};
 use crate::sched::RoutePolicy;
 use crate::util::json::Json;
 
@@ -486,6 +489,72 @@ fn validate_serve(s: &ServeSpec) -> Result<(), String> {
             return Err("'serve.traffic.arrival.burst' must be >= 1".into());
         }
     }
+    if let TokenDist::Pareto { alpha } = t.new_tokens_dist {
+        if !alpha.is_finite() || alpha <= 0.0 {
+            return Err(format!(
+                "'serve.traffic.new_tokens_dist.alpha' must be finite and > 0 (got {alpha})"
+            ));
+        }
+    }
+    if let Some(tiers) = &t.tiers {
+        if !(0.0..=1.0).contains(&tiers.interactive_share) || tiers.interactive_share.is_nan() {
+            return Err(format!(
+                "'serve.traffic.tiers.interactive_share' must be in [0, 1] (got {})",
+                tiers.interactive_share
+            ));
+        }
+        if tiers.interactive_new_tokens_lo == 0 {
+            return Err("'serve.traffic.tiers.interactive_new_tokens_lo' must be >= 1".into());
+        }
+        if tiers.interactive_new_tokens_lo > tiers.interactive_new_tokens_hi {
+            return Err(format!(
+                "'serve.traffic.tiers.interactive_new_tokens_lo' ({}) exceeds \
+                 'interactive_new_tokens_hi' ({})",
+                tiers.interactive_new_tokens_lo, tiers.interactive_new_tokens_hi
+            ));
+        }
+        for (name, v) in [
+            ("interactive_slo.ttft_p99_s", tiers.interactive_slo.ttft_p99_s),
+            ("interactive_slo.tpot_p99_s", tiers.interactive_slo.tpot_p99_s),
+            ("batch_slo.ttft_p99_s", tiers.batch_slo.ttft_p99_s),
+            ("batch_slo.tpot_p99_s", tiers.batch_slo.tpot_p99_s),
+        ] {
+            if v.is_nan() || v <= 0.0 {
+                return Err(format!(
+                    "'serve.traffic.tiers.{name}' must be positive \
+                     (null = unconstrained; got {v})"
+                ));
+            }
+        }
+        if s.trace_file.is_some() {
+            return Err("'serve.traffic.tiers' needs synthetic arrivals (a CSV trace \
+                        carries no tier tags); drop 'serve.trace_file'"
+                .into());
+        }
+    }
+    if let Some(oc) = &s.overcommit {
+        if !s.paged_kv {
+            return Err("'serve.overcommit' needs block-granular accounting; set \
+                        'serve.paged_kv' to true"
+                .into());
+        }
+        if let ResidencyEstimate::Quantile(q) = oc.estimate {
+            if !q.is_finite() || q <= 0.0 || q >= 1.0 {
+                return Err(format!(
+                    "'serve.overcommit.quantile' must be in (0, 1) (got {q})"
+                ));
+            }
+        }
+    }
+    // cc-lint: allow(no-float-eq) 0.0 is the exact spec-default sentinel the codec writes for an absent window; no arithmetic ever produces it
+    if s.goodput_window_s != 0.0 && !(s.goodput_window_s > 0.0 && s.goodput_window_s.is_finite())
+    {
+        return Err(format!(
+            "'serve.goodput_window_s' must be a finite positive number of seconds \
+             (null/0 = no windowed rows; got {})",
+            s.goodput_window_s
+        ));
+    }
     for (name, v) in [("ttft_p99_s", s.slo.ttft_p99_s), ("tpot_p99_s", s.slo.tpot_p99_s)] {
         if v.is_nan() || v <= 0.0 {
             return Err(format!(
@@ -708,17 +777,129 @@ fn arrival_to_json(a: &ArrivalProcess) -> Json {
     Json::Obj(m)
 }
 
+fn token_dist_from_json(v: &Json) -> Result<TokenDist, String> {
+    let path = "serve.traffic.new_tokens_dist";
+    let m = as_obj(v, path)?;
+    let kind = get_str(m, path, "kind")?
+        .ok_or(format!("{path} is missing the required field 'kind'"))?;
+    match kind.as_str() {
+        "uniform" => {
+            check_fields(m, path, &["kind"])?;
+            Ok(TokenDist::Uniform)
+        }
+        "pareto" => {
+            check_fields(m, path, &["kind", "alpha"])?;
+            let alpha = get_f64(m, path, "alpha")?
+                .ok_or(format!("{path} with kind 'pareto' needs the field 'alpha'"))?;
+            Ok(TokenDist::Pareto { alpha })
+        }
+        other => Err(format!(
+            "field 'kind' in {path}: unknown distribution '{other}' \
+             (expected uniform or pareto)"
+        )),
+    }
+}
+
+fn token_dist_to_json(d: &TokenDist) -> Json {
+    let mut m = BTreeMap::new();
+    match d {
+        TokenDist::Uniform => {
+            m.insert("kind".into(), Json::Str("uniform".into()));
+        }
+        TokenDist::Pareto { alpha } => {
+            m.insert("kind".into(), Json::Str("pareto".into()));
+            m.insert("alpha".into(), Json::Num(*alpha));
+        }
+    }
+    Json::Obj(m)
+}
+
+fn tiers_from_json(v: &Json) -> Result<TierSpec, String> {
+    let path = "serve.traffic.tiers";
+    let m = as_obj(v, path)?;
+    check_fields(
+        m,
+        path,
+        &[
+            "interactive_share",
+            "interactive_new_tokens_lo",
+            "interactive_new_tokens_hi",
+            "interactive_slo",
+            "batch_slo",
+            "max_consecutive_interactive",
+        ],
+    )?;
+    let slo_of = |key: &str| -> Result<SloSpec, String> {
+        match m.get(key) {
+            None | Some(Json::Null) => Ok(SloSpec::unconstrained()),
+            Some(v) => {
+                let sm = as_obj(v, path)?;
+                let p = format!("{path}.{key}");
+                check_fields(sm, &p, &["ttft_p99_s", "tpot_p99_s"])?;
+                Ok(SloSpec {
+                    ttft_p99_s: get_slo_target(sm, &p, "ttft_p99_s")?,
+                    tpot_p99_s: get_slo_target(sm, &p, "tpot_p99_s")?,
+                })
+            }
+        }
+    };
+    let share = get_f64(m, path, "interactive_share")?
+        .ok_or(format!("{path} is missing the required field 'interactive_share'"))?;
+    Ok(TierSpec {
+        interactive_share: share,
+        interactive_new_tokens_lo: get_usize(m, path, "interactive_new_tokens_lo")?
+            .unwrap_or(defaults::NEW_TOKENS_LO),
+        interactive_new_tokens_hi: get_usize(m, path, "interactive_new_tokens_hi")?
+            .unwrap_or(defaults::NEW_TOKENS_HI),
+        interactive_slo: slo_of("interactive_slo")?,
+        batch_slo: slo_of("batch_slo")?,
+        max_consecutive_interactive: get_usize(m, path, "max_consecutive_interactive")?
+            .unwrap_or(8),
+    })
+}
+
+fn tiers_to_json(t: &TierSpec) -> Json {
+    let mut m = BTreeMap::new();
+    m.insert("interactive_share".into(), Json::Num(t.interactive_share));
+    m.insert("interactive_new_tokens_lo".into(), Json::Num(t.interactive_new_tokens_lo as f64));
+    m.insert("interactive_new_tokens_hi".into(), Json::Num(t.interactive_new_tokens_hi as f64));
+    m.insert("interactive_slo".into(), slo_to_json(&t.interactive_slo));
+    m.insert("batch_slo".into(), slo_to_json(&t.batch_slo));
+    m.insert(
+        "max_consecutive_interactive".into(),
+        Json::Num(t.max_consecutive_interactive as f64),
+    );
+    Json::Obj(m)
+}
+
 fn traffic_from_json(v: &Json) -> Result<TrafficSpec, String> {
     let m = as_obj(v, "serve.traffic")?;
     let path = "serve.traffic";
     check_fields(
         m,
         path,
-        &["arrival", "requests", "prompt_tokens", "new_tokens_lo", "new_tokens_hi", "seed"],
+        &[
+            "arrival",
+            "requests",
+            "prompt_tokens",
+            "new_tokens_lo",
+            "new_tokens_hi",
+            "new_tokens_dist",
+            "tiers",
+            "seed",
+        ],
     )?;
     let arrival = match m.get("arrival") {
         None => return Err("serve.traffic is missing the required field 'arrival'".into()),
         Some(v) => arrival_from_json(v)?,
+    };
+    let new_tokens_dist = match m.get("new_tokens_dist") {
+        None | Some(Json::Null) => TokenDist::Uniform,
+        Some(v) => token_dist_from_json(v)?,
+    };
+    let tiers = match m.get("tiers") {
+        None | Some(Json::Null) => None,
+        Some(v) => Some(tiers_from_json(v)?),
     };
     Ok(TrafficSpec {
         arrival,
@@ -726,6 +907,8 @@ fn traffic_from_json(v: &Json) -> Result<TrafficSpec, String> {
         prompt_tokens: get_usize(m, path, "prompt_tokens")?.unwrap_or(defaults::PROMPT_TOKENS),
         new_tokens_lo: get_usize(m, path, "new_tokens_lo")?.unwrap_or(defaults::NEW_TOKENS_LO),
         new_tokens_hi: get_usize(m, path, "new_tokens_hi")?.unwrap_or(defaults::NEW_TOKENS_HI),
+        new_tokens_dist,
+        tiers,
         seed: get_usize(m, path, "seed")?.unwrap_or(defaults::SEED as usize) as u64,
     })
 }
@@ -737,6 +920,14 @@ fn traffic_to_json(t: &TrafficSpec) -> Json {
     m.insert("prompt_tokens".into(), Json::Num(t.prompt_tokens as f64));
     m.insert("new_tokens_lo".into(), Json::Num(t.new_tokens_lo as f64));
     m.insert("new_tokens_hi".into(), Json::Num(t.new_tokens_hi as f64));
+    // Defaults stay un-emitted so pre-tier specs (and their fingerprints)
+    // round-trip byte-identically (absent ↔ Uniform / None).
+    if t.new_tokens_dist != TokenDist::Uniform {
+        m.insert("new_tokens_dist".into(), token_dist_to_json(&t.new_tokens_dist));
+    }
+    if let Some(tiers) = &t.tiers {
+        m.insert("tiers".into(), tiers_to_json(tiers));
+    }
     m.insert("seed".into(), Json::Num(t.seed as f64));
     Json::Obj(m)
 }
@@ -774,6 +965,8 @@ fn serve_from_json(v: &Json) -> Result<ServeSpec, String> {
             "quantum",
             "trace_file",
             "faults",
+            "overcommit",
+            "goodput_window_s",
         ],
     )?;
     let traffic = match m.get("traffic") {
@@ -814,6 +1007,19 @@ fn serve_from_json(v: &Json) -> Result<ServeSpec, String> {
         None | Some(Json::Null) => FaultSpec::none(),
         Some(v) => faults_from_json(v)?,
     };
+    let overcommit = match m.get("overcommit") {
+        None | Some(Json::Null) => None,
+        Some(v) => Some(overcommit_from_json(v)?),
+    };
+    let goodput_window_s = match m.get("goodput_window_s") {
+        None | Some(Json::Null) => 0.0,
+        Some(Json::Num(x)) => *x,
+        Some(_) => {
+            return Err("field 'goodput_window_s' in serve: expected a number of \
+                        seconds or null (no windowed rows)"
+                .into())
+        }
+    };
     Ok(ServeSpec {
         traffic,
         slo,
@@ -824,7 +1030,49 @@ fn serve_from_json(v: &Json) -> Result<ServeSpec, String> {
         quantum,
         trace_file,
         faults,
+        overcommit,
+        goodput_window_s,
     })
+}
+
+fn overcommit_from_json(v: &Json) -> Result<OvercommitSpec, String> {
+    let path = "serve.overcommit";
+    let m = as_obj(v, path)?;
+    check_fields(m, path, &["estimate", "quantile"])?;
+    let estimate = get_str(m, path, "estimate")?
+        .ok_or(format!("{path} is missing the required field 'estimate'"))?;
+    match estimate.as_str() {
+        "quantile" => {
+            let q = get_f64(m, path, "quantile")?.unwrap_or(0.5);
+            Ok(OvercommitSpec::quantile(q))
+        }
+        "mean" => {
+            if m.contains_key("quantile") {
+                return Err(format!(
+                    "field 'quantile' in {path}: only valid with estimate 'quantile'"
+                ));
+            }
+            Ok(OvercommitSpec::running_mean())
+        }
+        other => Err(format!(
+            "field 'estimate' in {path}: unknown estimator '{other}' \
+             (expected quantile or mean)"
+        )),
+    }
+}
+
+fn overcommit_to_json(o: &OvercommitSpec) -> Json {
+    let mut m = BTreeMap::new();
+    match o.estimate {
+        ResidencyEstimate::Quantile(q) => {
+            m.insert("estimate".into(), Json::Str("quantile".into()));
+            m.insert("quantile".into(), Json::Num(q));
+        }
+        ResidencyEstimate::RunningMean => {
+            m.insert("estimate".into(), Json::Str("mean".into()));
+        }
+    }
+    Json::Obj(m)
 }
 
 fn faults_from_json(v: &Json) -> Result<FaultSpec, String> {
@@ -893,6 +1141,13 @@ fn serve_to_json(s: &ServeSpec) -> Json {
     // spec still emits, so `from_json(to_json(e)) == e` holds exactly.
     if s.faults != FaultSpec::none() {
         m.insert("faults".into(), faults_to_json(&s.faults));
+    }
+    if let Some(oc) = &s.overcommit {
+        m.insert("overcommit".into(), overcommit_to_json(oc));
+    }
+    // cc-lint: allow(no-float-eq) exact round-trip of the codec's own 0.0 absent-field sentinel, mirroring the validate() check
+    if s.goodput_window_s != 0.0 {
+        m.insert("goodput_window_s".into(), Json::Num(s.goodput_window_s));
     }
     Json::Obj(m)
 }
@@ -1094,6 +1349,163 @@ mod tests {
             )
             .unwrap_err();
             assert!(err.contains("replaces synthetic arrivals"), "{err}");
+        }
+    }
+
+    #[test]
+    fn overcommit_tiers_and_windows_round_trip_and_default_to_absent() {
+        use crate::config::workload::{OvercommitSpec, TierSpec, TokenDist};
+        // Feature-off specs serialize byte-identically to pre-PR specs:
+        // none of the new fields appear, and fingerprints are unmoved.
+        let mut e = minimal();
+        e.task = Task::ServeSim;
+        e.workload = Some(WorkloadPoint { ctx: 1024, batch: 32 });
+        e.serve =
+            Some(ServeSpec::new(TrafficSpec::poisson(1.0, 10, 8, 4, 8), SloSpec::unconstrained()));
+        let s = e.to_json_string();
+        for field in ["overcommit", "goodput_window_s", "new_tokens_dist", "tiers"] {
+            assert!(!s.contains(field), "{field} leaked into {s}");
+        }
+        assert_eq!(Experiment::from_json_str(&s).unwrap(), e);
+
+        // The full feature surface round-trips exactly.
+        let tiers = TierSpec::new(0.7, 4, 16, SloSpec::new(0.5, 0.05), SloSpec::unconstrained())
+            .with_fairness(4);
+        let traffic = TrafficSpec::poisson(1.0, 10, 8, 4, 256)
+            .with_token_dist(TokenDist::Pareto { alpha: 1.25 })
+            .with_tiers(tiers);
+        e.serve = Some(
+            ServeSpec::new(traffic, SloSpec::new(0.5, 0.05))
+                .with_paged_kv()
+                .with_overcommit(OvercommitSpec::quantile(0.6))
+                .with_goodput_window(30.0),
+        );
+        let s = e.to_json_string();
+        assert!(s.contains("\"new_tokens_dist\":{\"alpha\":1.25,\"kind\":\"pareto\"}"), "{s}");
+        assert!(s.contains("\"overcommit\":{\"estimate\":\"quantile\",\"quantile\":0.6}"), "{s}");
+        assert!(s.contains("\"goodput_window_s\":30"), "{s}");
+        assert!(s.contains("\"interactive_share\":0.7"), "{s}");
+        assert!(s.contains("\"max_consecutive_interactive\":4"), "{s}");
+        let back = Experiment::from_json_str(&s).unwrap();
+        assert_eq!(back, e);
+        back.validate().unwrap();
+
+        // The running-mean estimator round-trips without a quantile field.
+        e.serve.as_mut().unwrap().overcommit = Some(OvercommitSpec::running_mean());
+        let s = e.to_json_string();
+        assert!(s.contains("\"overcommit\":{\"estimate\":\"mean\"}"), "{s}");
+        assert_eq!(Experiment::from_json_str(&s).unwrap(), e);
+
+        // Explicit nulls parse as the defaults.
+        let nulled = Experiment::from_json_str(
+            r#"{"task":"sweep","models":["gpt3"],
+                "serve":{"traffic":{"arrival":{"kind":"poisson"},
+                                    "new_tokens_dist":null,"tiers":null},
+                         "overcommit":null,"goodput_window_s":null}}"#,
+        )
+        .unwrap();
+        let sv = nulled.serve.unwrap();
+        assert_eq!(sv.overcommit, None);
+        assert_eq!(sv.traffic.new_tokens_dist, TokenDist::Uniform);
+        assert!(sv.traffic.tiers.is_none());
+        // cc-lint: allow(no-float-eq) 0.0 is the exact codec default under test
+        assert!(sv.goodput_window_s == 0.0);
+
+        // Unknown fields inside the new objects are located errors.
+        let err = Experiment::from_json_str(
+            r#"{"task":"sweep","models":["gpt3"],
+                "serve":{"traffic":{"arrival":{"kind":"poisson"},
+                                    "new_tokens_dist":{"kind":"zipf"}}}}"#,
+        )
+        .unwrap_err();
+        assert!(err.contains("unknown distribution 'zipf'"), "{err}");
+        let err = Experiment::from_json_str(
+            r#"{"task":"sweep","models":["gpt3"],
+                "serve":{"overcommit":{"estimate":"mean","quantile":0.5},
+                         "traffic":{"arrival":{"kind":"poisson"}}}}"#,
+        )
+        .unwrap_err();
+        assert!(err.contains("only valid with estimate 'quantile'"), "{err}");
+        let err = Experiment::from_json_str(
+            r#"{"task":"sweep","models":["gpt3"],
+                "serve":{"traffic":{"arrival":{"kind":"poisson"},
+                                    "tiers":{"interactive_share":0.5,"priority":9}}}}"#,
+        )
+        .unwrap_err();
+        assert!(err.contains("unknown field 'priority'") && err.contains("tiers"), "{err}");
+    }
+
+    #[test]
+    fn validation_enforces_overcommit_and_tier_rules() {
+        use crate::config::workload::{OvercommitSpec, TierSpec, TokenDist};
+        let check = |spec: ServeSpec| {
+            let mut e = minimal();
+            e.task = Task::ServeSim;
+            e.workload = Some(WorkloadPoint { ctx: 1024, batch: 32 });
+            e.serve = Some(spec);
+            e.validate()
+        };
+        let base =
+            || ServeSpec::new(TrafficSpec::poisson(1.0, 10, 8, 4, 8), SloSpec::unconstrained());
+        // Overcommit needs paged KV.
+        let err = check(base().with_overcommit(OvercommitSpec::quantile(0.5))).unwrap_err();
+        assert!(err.contains("paged_kv"), "{err}");
+        check(base().with_paged_kv().with_overcommit(OvercommitSpec::quantile(0.5))).unwrap();
+        check(base().with_paged_kv().with_overcommit(OvercommitSpec::running_mean())).unwrap();
+        // Quantile strictly inside (0, 1).
+        for q in [0.0, 1.0, -0.5, f64::NAN, f64::INFINITY] {
+            let err = check(base().with_paged_kv().with_overcommit(OvercommitSpec::quantile(q)))
+                .unwrap_err();
+            assert!(err.contains("overcommit.quantile"), "{err}");
+        }
+        // Pareto shape must be finite and positive.
+        let with_dist = |alpha: f64| {
+            let mut s = base();
+            s.traffic = s.traffic.with_token_dist(TokenDist::Pareto { alpha });
+            s
+        };
+        check(with_dist(1.1)).unwrap();
+        for alpha in [0.0, -1.0, f64::NAN, f64::INFINITY] {
+            let err = check(with_dist(alpha)).unwrap_err();
+            assert!(err.contains("new_tokens_dist.alpha"), "{err}");
+        }
+        // Tier shares, budgets and SLOs are validated.
+        let with_tiers = |t: TierSpec| {
+            let mut s = base();
+            s.traffic = s.traffic.with_tiers(t);
+            s
+        };
+        let good = TierSpec::new(0.5, 4, 16, SloSpec::new(0.5, 0.05), SloSpec::unconstrained());
+        check(with_tiers(good)).unwrap();
+        let err = check(with_tiers(TierSpec { interactive_share: 1.5, ..good })).unwrap_err();
+        assert!(err.contains("interactive_share"), "{err}");
+        let err =
+            check(with_tiers(TierSpec { interactive_new_tokens_lo: 0, ..good })).unwrap_err();
+        assert!(err.contains("interactive_new_tokens_lo"), "{err}");
+        let err =
+            check(with_tiers(TierSpec { interactive_new_tokens_lo: 99, ..good })).unwrap_err();
+        assert!(err.contains("exceeds"), "{err}");
+        let err = check(with_tiers(TierSpec {
+            interactive_slo: SloSpec::new(-1.0, 0.1),
+            ..good
+        }))
+        .unwrap_err();
+        assert!(err.contains("interactive_slo.ttft_p99_s"), "{err}");
+        // Tiers need synthetic arrivals (no tier tags in a CSV trace).
+        let mut s = ServeSpec::new(
+            TrafficSpec::poisson(0.0, 10, 8, 4, 8).with_tiers(good),
+            SloSpec::unconstrained(),
+        )
+        .with_trace_file("trace.csv");
+        let err = check(s.clone()).unwrap_err();
+        assert!(err.contains("no tier tags"), "{err}");
+        s.trace_file = None;
+        check(s).unwrap();
+        // Windows must be finite and non-negative.
+        check(base().with_goodput_window(30.0)).unwrap();
+        for w in [-1.0, f64::NAN, f64::INFINITY] {
+            let err = check(base().with_goodput_window(w)).unwrap_err();
+            assert!(err.contains("goodput_window_s"), "{err}");
         }
     }
 

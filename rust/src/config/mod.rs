@@ -18,5 +18,6 @@ pub use experiment::{EngineKnobs, Experiment, SpaceSpec, Task, WorkloadPoint};
 pub use hardware::{ExploreSpace, TechParams};
 pub use models::{Attention, ModelSpec};
 pub use workload::{
-    ArrivalProcess, FaultEvent, FaultSpec, ServeSpec, SloSpec, TrafficSpec, Workload,
+    ArrivalProcess, FaultEvent, FaultSpec, OvercommitSpec, ResidencyEstimate, ServeSpec, SloSpec,
+    TierSpec, TokenDist, TrafficSpec, Workload,
 };

@@ -63,6 +63,146 @@ pub enum ArrivalProcess {
     },
 }
 
+/// Distribution of per-request generated-token budgets on the inclusive
+/// support `[new_tokens_lo, new_tokens_hi]`.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub enum TokenDist {
+    /// Discrete uniform over the support (the seed-model default).
+    Uniform,
+    /// Bounded (truncated) Pareto with shape `alpha`: heavy-tailed budgets
+    /// whose mass concentrates near the low end while rare requests run to
+    /// the high end — the regime where expected-residency overcommit beats
+    /// max-footprint admission.
+    Pareto {
+        /// Tail index; smaller = heavier tail. Must be finite and > 0.
+        alpha: f64,
+    },
+}
+
+impl TokenDist {
+    /// Mean of the distribution on `[lo, hi]` (support clamped to at least
+    /// `[1, 1]`). The `Uniform` arm reproduces the historical
+    /// `(lo + hi).max(2) / 2` capacity-planning mean bit-for-bit.
+    pub fn mean(&self, lo: usize, hi: usize) -> f64 {
+        match *self {
+            TokenDist::Uniform => (lo + hi).max(2) as f64 / 2.0,
+            TokenDist::Pareto { alpha } => {
+                let l = lo.max(1) as f64;
+                let h = hi.max(lo.max(1)) as f64;
+                if h <= l {
+                    return l;
+                }
+                if (alpha - 1.0).abs() < 1e-9 {
+                    // α → 1 limit of the bounded-Pareto mean.
+                    (h * l / (h - l)) * (h / l).ln()
+                } else {
+                    let ratio = (l / h).powf(alpha);
+                    (l.powf(alpha) / (1.0 - ratio))
+                        * (alpha / (alpha - 1.0))
+                        * (l.powf(1.0 - alpha) - h.powf(1.0 - alpha))
+                }
+            }
+        }
+    }
+
+    /// Inverse CDF at `q` ∈ [0, 1) on `[lo, hi]`, in fractional tokens.
+    pub fn quantile(&self, q: f64, lo: usize, hi: usize) -> f64 {
+        let l = lo.max(1) as f64;
+        let h = hi.max(lo.max(1)) as f64;
+        let q = q.clamp(0.0, 1.0 - 1e-12);
+        match *self {
+            TokenDist::Uniform => l + q * (h - l),
+            TokenDist::Pareto { alpha } => {
+                let ratio = (l / h).powf(alpha);
+                l / (1.0 - q * (1.0 - ratio)).powf(1.0 / alpha)
+            }
+        }
+    }
+
+    /// Draw a token budget from one uniform variate `u` ∈ [0, 1), rounded
+    /// and clamped to the inclusive support. The synthetic-arrival
+    /// generator only calls this for non-uniform distributions (`Uniform`
+    /// keeps its historical `rng.range(lo, hi)` draw so uniform token
+    /// streams stay byte-identical).
+    pub fn sample_unit(&self, u: f64, lo: usize, hi: usize) -> usize {
+        let lo = lo.max(1);
+        let hi = hi.max(lo);
+        (self.quantile(u, lo, hi).round() as usize).clamp(lo, hi)
+    }
+}
+
+impl Default for TokenDist {
+    fn default() -> Self {
+        TokenDist::Uniform
+    }
+}
+
+/// Two-tier traffic classes for priority scheduling: an interactive tier
+/// (short uniform budgets, tight SLO) sharing the fleet with a batch tier
+/// (the base traffic's token-budget distribution, loose SLO). Tier 0 is
+/// interactive, tier 1 is batch.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct TierSpec {
+    /// Fraction of arrivals that are interactive (tier 0), in [0, 1].
+    pub interactive_share: f64,
+    /// Minimum generated tokens for interactive requests (inclusive).
+    pub interactive_new_tokens_lo: usize,
+    /// Maximum generated tokens for interactive requests (inclusive).
+    pub interactive_new_tokens_hi: usize,
+    /// Latency targets the interactive tier must hold — the SLO
+    /// `best_point_slo` validates when tiers are active.
+    pub interactive_slo: SloSpec,
+    /// Latency targets reported for the batch tier (informational; batch
+    /// absorbs preemption and is not design-binding).
+    pub batch_slo: SloSpec,
+    /// Fairness knob bounding batch starvation: after this many
+    /// consecutive interactive admissions while batch requests wait, the
+    /// next admission must come from the batch tier. 0 = strict priority
+    /// (unbounded starvation).
+    pub max_consecutive_interactive: usize,
+}
+
+impl TierSpec {
+    /// Interactive share with uniform interactive budgets in `[lo, hi]`
+    /// and the given per-tier SLOs; the fairness bound defaults to 8.
+    pub fn new(
+        interactive_share: f64,
+        lo: usize,
+        hi: usize,
+        interactive_slo: SloSpec,
+        batch_slo: SloSpec,
+    ) -> TierSpec {
+        TierSpec {
+            interactive_share,
+            interactive_new_tokens_lo: lo,
+            interactive_new_tokens_hi: hi,
+            interactive_slo,
+            batch_slo,
+            max_consecutive_interactive: 8,
+        }
+    }
+
+    /// Same spec with a different fairness bound.
+    pub fn with_fairness(mut self, max_consecutive_interactive: usize) -> TierSpec {
+        self.max_consecutive_interactive = max_consecutive_interactive;
+        self
+    }
+
+    /// Mean interactive token budget (uniform on the interactive range).
+    pub fn interactive_mean(&self) -> f64 {
+        TokenDist::Uniform.mean(self.interactive_new_tokens_lo, self.interactive_new_tokens_hi)
+    }
+
+    /// The SLO a request of `tier` is scored against.
+    pub fn slo_for(&self, tier: u8) -> SloSpec {
+        if tier == 0 {
+            self.interactive_slo
+        } else {
+            self.batch_slo
+        }
+    }
+}
+
 /// A synthetic traffic description for the serving simulator: arrival
 /// process plus per-request shape, all seeded for reproducibility.
 #[derive(Clone, Copy, Debug, PartialEq)]
@@ -77,6 +217,12 @@ pub struct TrafficSpec {
     pub new_tokens_lo: usize,
     /// Maximum generated tokens per request (inclusive).
     pub new_tokens_hi: usize,
+    /// Distribution of generated-token budgets on `[lo, hi]`
+    /// ([`TokenDist::Uniform`] = the seed-model behaviour, byte-identical).
+    pub new_tokens_dist: TokenDist,
+    /// Optional interactive/batch tier split (`None` = single-class
+    /// traffic, byte-identical to the pre-tier paths).
+    pub tiers: Option<TierSpec>,
     /// PRNG seed for inter-arrival times and token budgets.
     pub seed: u64,
 }
@@ -90,6 +236,8 @@ impl TrafficSpec {
             prompt_tokens: prompt,
             new_tokens_lo: lo,
             new_tokens_hi: hi,
+            new_tokens_dist: TokenDist::Uniform,
+            tiers: None,
             seed: 42,
         }
     }
@@ -109,6 +257,8 @@ impl TrafficSpec {
             prompt_tokens: prompt,
             new_tokens_lo: lo,
             new_tokens_hi: hi,
+            new_tokens_dist: TokenDist::Uniform,
+            tiers: None,
             seed: 42,
         }
     }
@@ -117,6 +267,90 @@ impl TrafficSpec {
     pub fn with_seed(mut self, seed: u64) -> TrafficSpec {
         self.seed = seed;
         self
+    }
+
+    /// Same spec with a different token-budget distribution.
+    pub fn with_token_dist(mut self, dist: TokenDist) -> TrafficSpec {
+        self.new_tokens_dist = dist;
+        self
+    }
+
+    /// Split arrivals into interactive/batch tiers.
+    pub fn with_tiers(mut self, tiers: TierSpec) -> TrafficSpec {
+        self.tiers = Some(tiers);
+        self
+    }
+
+    /// Mean generated tokens per request across tiers — the
+    /// capacity-planning mean `resolve_rate` divides fleet throughput by.
+    /// Uniform single-tier traffic reproduces the historical
+    /// `(lo + hi).max(2) / 2` expression bit-for-bit.
+    pub fn mean_new_tokens(&self) -> f64 {
+        let base = self.new_tokens_dist.mean(self.new_tokens_lo, self.new_tokens_hi);
+        match self.tiers {
+            None => base,
+            Some(t) => {
+                t.interactive_share * t.interactive_mean() + (1.0 - t.interactive_share) * base
+            }
+        }
+    }
+
+    /// Inverse-CDF token budget at `q` for the given tier (tier 0 =
+    /// interactive when tiers are configured; otherwise the base
+    /// distribution). Drives expected-residency admission charges.
+    pub fn quantile_new_tokens(&self, tier: u8, q: f64) -> f64 {
+        match self.tiers {
+            Some(t) if tier == 0 => TokenDist::Uniform.quantile(
+                q,
+                t.interactive_new_tokens_lo,
+                t.interactive_new_tokens_hi,
+            ),
+            _ => self.new_tokens_dist.quantile(q, self.new_tokens_lo, self.new_tokens_hi),
+        }
+    }
+
+    /// Maximum generated tokens a request of `tier` may run to.
+    pub fn max_new_tokens(&self, tier: u8) -> usize {
+        match self.tiers {
+            Some(t) if tier == 0 => {
+                t.interactive_new_tokens_hi.max(t.interactive_new_tokens_lo).max(1)
+            }
+            _ => self.new_tokens_hi.max(self.new_tokens_lo).max(1),
+        }
+    }
+}
+
+/// Expected-residency estimator used by overcommit admission charges.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub enum ResidencyEstimate {
+    /// Charge `prompt + quantile(q)` of the per-tier token-budget
+    /// distribution (`q` ∈ (0, 1)).
+    Quantile(f64),
+    /// Charge `prompt + running mean` of completed requests' generated
+    /// tokens (falls back to the request's own max before any completion
+    /// has been observed).
+    RunningMean,
+}
+
+/// KV overcommit: admit against *expected* residency instead of maximum
+/// footprint, and preempt (recompute-on-resume) on block exhaustion.
+/// `None` on [`ServeSpec::overcommit`] keeps reserved max-footprint
+/// admission — byte-identical to the pre-overcommit paths.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct OvercommitSpec {
+    /// How the admission charge is estimated.
+    pub estimate: ResidencyEstimate,
+}
+
+impl OvercommitSpec {
+    /// Charge the `q`-quantile of the token-budget distribution.
+    pub fn quantile(q: f64) -> OvercommitSpec {
+        OvercommitSpec { estimate: ResidencyEstimate::Quantile(q) }
+    }
+
+    /// Charge the observed running mean of completed budgets.
+    pub fn running_mean() -> OvercommitSpec {
+        OvercommitSpec { estimate: ResidencyEstimate::RunningMean }
     }
 }
 
@@ -302,6 +536,13 @@ pub struct ServeSpec {
     /// Replica failure model ([`FaultSpec::none`] = every replica is up
     /// forever — the pre-fault behaviour, byte-identical).
     pub faults: FaultSpec,
+    /// KV overcommit + preemption (`None` = reserved max-footprint
+    /// admission, the pre-overcommit behaviour, byte-identical). Requires
+    /// `paged_kv`.
+    pub overcommit: Option<OvercommitSpec>,
+    /// Width of the sketch-backed windowed-goodput buckets, seconds of
+    /// virtual time; `0.0` (default) disables windowed rows entirely.
+    pub goodput_window_s: f64,
 }
 
 impl ServeSpec {
@@ -318,6 +559,8 @@ impl ServeSpec {
             quantum: 0.0,
             trace_file: None,
             faults: FaultSpec::none(),
+            overcommit: None,
+            goodput_window_s: 0.0,
         }
     }
 
@@ -356,6 +599,19 @@ impl ServeSpec {
     /// Serve under the given replica failure model.
     pub fn with_faults(mut self, faults: FaultSpec) -> ServeSpec {
         self.faults = faults;
+        self
+    }
+
+    /// Enable KV overcommit + preemption (expected-residency admission).
+    pub fn with_overcommit(mut self, overcommit: OvercommitSpec) -> ServeSpec {
+        self.overcommit = Some(overcommit);
+        self
+    }
+
+    /// Enable sketch-backed windowed-goodput rows at `window_s`-second
+    /// buckets of virtual time.
+    pub fn with_goodput_window(mut self, window_s: f64) -> ServeSpec {
+        self.goodput_window_s = window_s;
         self
     }
 }
@@ -552,6 +808,99 @@ mod tests {
             let err = FaultSpec::parse_plan(bad).unwrap_err();
             assert!(err.contains("fault"), "{bad}: {err}");
         }
+    }
+
+    #[test]
+    fn uniform_token_dist_mean_matches_the_historical_expression() {
+        let t = TrafficSpec::poisson(10.0, 100, 64, 16, 128);
+        assert_eq!(t.new_tokens_dist, TokenDist::Uniform);
+        assert!(t.tiers.is_none());
+        // cc-lint: allow(no-float-eq) bit-identity with the historical capacity-planning mean is the contract under test
+        assert!(t.mean_new_tokens() == (16 + 128).max(2) as f64 / 2.0);
+    }
+
+    #[test]
+    fn bounded_pareto_tail_mass_and_mean_match_the_analytic_form() {
+        let (lo, hi, alpha) = (16usize, 2048usize, 1.2f64);
+        let dist = TokenDist::Pareto { alpha };
+        let mut rng = crate::util::rng::Rng::new(1234);
+        let n = 200_000usize;
+        let q90 = dist.quantile(0.9, lo, hi);
+        let mut sum = 0.0f64;
+        let mut above_q90 = 0usize;
+        let mut lo_seen = usize::MAX;
+        let mut hi_seen = 0usize;
+        for _ in 0..n {
+            let x = dist.sample_unit(rng.f64(), lo, hi);
+            sum += x as f64;
+            if (x as f64) > q90 {
+                above_q90 += 1;
+            }
+            lo_seen = lo_seen.min(x);
+            hi_seen = hi_seen.max(x);
+        }
+        let mean = sum / n as f64;
+        let analytic = dist.mean(lo, hi);
+        assert!((mean - analytic).abs() / analytic < 0.02, "mean={mean} analytic={analytic}");
+        // Tail mass: ~10% of draws exceed the analytic 90th percentile
+        // (rounding to integers smears the threshold slightly).
+        let tail = above_q90 as f64 / n as f64;
+        assert!((tail - 0.1).abs() < 0.02, "tail={tail}");
+        // Support is respected and both ends are reachable.
+        assert!(lo_seen >= lo && hi_seen <= hi, "seen=[{lo_seen},{hi_seen}]");
+        assert_eq!(lo_seen, lo);
+        // Heavy tail: the mean sits far below the midpoint of the support.
+        assert!(analytic < (lo + hi) as f64 / 4.0, "analytic={analytic}");
+    }
+
+    #[test]
+    fn pareto_mean_is_continuous_through_alpha_one() {
+        let (lo, hi) = (16usize, 2048usize);
+        let at_one = TokenDist::Pareto { alpha: 1.0 }.mean(lo, hi);
+        let near = TokenDist::Pareto { alpha: 1.0 + 1e-7 }.mean(lo, hi);
+        assert!((at_one - near).abs() / at_one < 1e-3, "at_one={at_one} near={near}");
+        // Degenerate support falls back to the point mass.
+        // cc-lint: allow(no-float-eq) exact fallback value is the contract
+        assert!(TokenDist::Pareto { alpha: 1.5 }.mean(8, 8) == 8.0);
+    }
+
+    #[test]
+    fn tier_spec_selects_per_tier_budgets_and_slos() {
+        let tiers = TierSpec::new(0.75, 8, 32, SloSpec::new(0.5, 0.05), SloSpec::new(5.0, 0.5));
+        let t = TrafficSpec::poisson(10.0, 100, 64, 16, 2048)
+            .with_token_dist(TokenDist::Pareto { alpha: 1.2 })
+            .with_tiers(tiers);
+        // Interactive tier draws from the uniform [8, 32] range.
+        assert!((t.quantile_new_tokens(0, 0.5) - 20.0).abs() < 1e-9);
+        assert_eq!(t.max_new_tokens(0), 32);
+        // Batch tier draws from the heavy-tailed base distribution.
+        assert!(t.quantile_new_tokens(1, 0.99) > 100.0);
+        assert_eq!(t.max_new_tokens(1), 2048);
+        // Tier-weighted mean interpolates interactive and base means.
+        let base = TokenDist::Pareto { alpha: 1.2 }.mean(16, 2048);
+        let want = 0.75 * 20.0 + 0.25 * base;
+        assert!((t.mean_new_tokens() - want).abs() < 1e-9);
+        // Per-tier SLO lookup.
+        assert!((tiers.slo_for(0).ttft_p99_s - 0.5).abs() < 1e-12);
+        assert!((tiers.slo_for(1).ttft_p99_s - 5.0).abs() < 1e-12);
+        assert_eq!(tiers.max_consecutive_interactive, 8);
+        assert_eq!(tiers.with_fairness(3).max_consecutive_interactive, 3);
+    }
+
+    #[test]
+    fn overcommit_spec_builders_and_serve_defaults() {
+        let s = ServeSpec::new(TrafficSpec::poisson(10.0, 10, 64, 8, 32), SloSpec::unconstrained());
+        assert!(s.overcommit.is_none());
+        // cc-lint: allow(no-float-eq) 0.0 is the exact "windows off" spec default
+        assert!(s.goodput_window_s == 0.0);
+        let s = s.with_paged_kv().with_overcommit(OvercommitSpec::quantile(0.5));
+        assert_eq!(s.overcommit, Some(OvercommitSpec::quantile(0.5)));
+        assert_eq!(
+            OvercommitSpec::running_mean().estimate,
+            ResidencyEstimate::RunningMean
+        );
+        let s = s.with_goodput_window(30.0);
+        assert!((s.goodput_window_s - 30.0).abs() < 1e-12);
     }
 
     #[test]

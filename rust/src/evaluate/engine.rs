@@ -425,7 +425,7 @@ impl SweepEngine {
         w: &Workload,
         spec: &ServeSpec,
     ) -> Option<SloSelection> {
-        let slo = &spec.slo;
+        let slo = validation_slo(spec);
         // Deliberately exhaustive per server (no shared incumbent / cost
         // pruning), keeping each server's cheapest few bound-feasible
         // mappings rather than one: stage 2 may reject the cheapest
@@ -533,7 +533,7 @@ impl SweepEngine {
             validated += reports.len();
             aborted_early += reports.iter().filter(|r| r.aborted_early).count();
             for (offset, report) in reports.into_iter().enumerate() {
-                if report.meets(slo) {
+                if serve_verdict(&report, spec) {
                     let point = pts[start + offset].2.clone();
                     return Some(SloSelection {
                         point,
@@ -642,7 +642,7 @@ impl SweepEngine {
                 ),
             };
             validated += 1;
-            if report.meets_available(&spec.slo, spec.faults.availability) {
+            if serve_verdict_available(&report, spec) {
                 return Some(SloSelection {
                     point: point.clone(),
                     report,
@@ -676,7 +676,7 @@ impl SweepEngine {
         w: &Workload,
     ) -> Option<(DesignPoint, Option<ServeReport>)> {
         match &w.serve {
-            Some(spec) if spec.slo.is_unconstrained() => {
+            Some(spec) if validation_slo(spec).is_unconstrained() => {
                 self.best_point(space, servers, w).map(|p| {
                     let report = validate_design_slo(&p, w, spec);
                     (p, Some(report))
@@ -776,7 +776,41 @@ pub fn slo_sim_config(point: &DesignPoint, w: &Workload, spec: &ServeSpec) -> Si
         spec.paged_kv,
     );
     cfg.quantum = spec.quantum;
+    cfg.overcommit = spec.overcommit;
+    cfg.window_s = spec.goodput_window_s;
     cfg
+}
+
+/// The SLO stage 1 filters and stage 2 validates against: the interactive
+/// tier's targets when the traffic is tiered (only that tier's tails are
+/// held — batch absorbs queueing and preemption), the spec's run-wide SLO
+/// otherwise. Identical to `&spec.slo` for untiered specs, so existing
+/// selections are untouched.
+pub fn validation_slo(spec: &ServeSpec) -> &SloSpec {
+    match &spec.traffic.tiers {
+        Some(ts) => &ts.interactive_slo,
+        None => &spec.slo,
+    }
+}
+
+/// The stage-2 verdict on one candidate's report: tiered specs pass on
+/// the interactive tier ([`ServeReport::meets_tier`]), untiered ones on
+/// the run-wide tails ([`ServeReport::meets`]).
+fn serve_verdict(report: &ServeReport, spec: &ServeSpec) -> bool {
+    match &spec.traffic.tiers {
+        Some(ts) => report.meets_tier(0, &ts.interactive_slo),
+        None => report.meets(&spec.slo),
+    }
+}
+
+/// [`serve_verdict`] under faults: the completion requirement relaxes to
+/// the availability fraction either way.
+fn serve_verdict_available(report: &ServeReport, spec: &ServeSpec) -> bool {
+    let availability = spec.faults.availability;
+    match &spec.traffic.tiers {
+        Some(ts) => report.meets_tier_available(0, &ts.interactive_slo, availability),
+        None => report.meets_available(&spec.slo, availability),
+    }
 }
 
 /// Event-sim validation of one design point: continuous batching over the

@@ -13,7 +13,8 @@ pub mod sensitivity;
 pub mod sparsity;
 
 pub use engine::{
-    slo_sim_config, validate_design_slo, SloSelection, SweepEngine, SweepStats, WorkloadBounds,
+    slo_sim_config, validate_design_slo, validation_slo, SloSelection, SweepEngine, SweepStats,
+    WorkloadBounds,
 };
 
 use crate::arch::ServerDesign;

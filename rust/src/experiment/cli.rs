@@ -11,7 +11,10 @@
 use std::path::Path;
 
 use crate::config::experiment::{defaults, EngineKnobs, Experiment, SpaceSpec, Task, WorkloadPoint};
-use crate::config::{ArrivalProcess, FaultSpec, ModelSpec, ServeSpec, SloSpec, TrafficSpec};
+use crate::config::{
+    ArrivalProcess, FaultSpec, ModelSpec, OvercommitSpec, ServeSpec, SloSpec, TokenDist,
+    TrafficSpec,
+};
 use crate::sched::RoutePolicy;
 use crate::util::cli::Args;
 use crate::{Error, Result};
@@ -85,6 +88,8 @@ fn sweep_from_args(args: &Args, space: SpaceSpec, engine: EngineKnobs) -> Result
             "fault-seed",
             "availability",
             "max-spares",
+            "overcommit",
+            "goodput-window",
         ] {
             if args.has(flag) {
                 return Err(Error::Config(format!(
@@ -268,6 +273,10 @@ fn traffic_from_args(args: &Args) -> Result<TrafficSpec> {
         prompt_tokens: prompt,
         new_tokens_lo: lo,
         new_tokens_hi: hi,
+        // Heavy-tailed token budgets and priority tiers are JSON-spec-only
+        // knobs; the CLI keeps the uniform single-tier shape.
+        new_tokens_dist: TokenDist::Uniform,
+        tiers: None,
         seed: args.get_or("seed", defaults::SEED),
     })
 }
@@ -290,6 +299,29 @@ fn serve_model_from_args(args: &Args, mut spec: ServeSpec) -> Result<ServeSpec> 
         })?,
     };
     spec.quantum = parse_positive_f64(args, "quantum")?.unwrap_or(0.0);
+    // Overcommit admission: a residency quantile in (0,1), or `mean` for
+    // the observed-running-mean estimator. Needs `--paged` — the pairing
+    // is enforced by spec validation, same as the JSON path. Priority
+    // tiers have no flag form (structured per-tier SLOs): use a JSON spec.
+    spec.overcommit = match args.get("overcommit") {
+        None => None,
+        Some("mean") => Some(OvercommitSpec::running_mean()),
+        Some(raw) => {
+            let q: f64 = raw.parse().map_err(|_| {
+                Error::Config(format!(
+                    "--overcommit must be a quantile in (0,1) or 'mean' (got '{raw}')"
+                ))
+            })?;
+            if !(q > 0.0 && q < 1.0) {
+                return Err(Error::Config(format!(
+                    "--overcommit must be a quantile in (0,1) or 'mean' (got '{raw}')"
+                )));
+            }
+            Some(OvercommitSpec::quantile(q))
+        }
+    };
+    // Windowed-goodput rows: bucket width in virtual seconds (absent = off).
+    spec.goodput_window_s = parse_positive_f64(args, "goodput-window")?.unwrap_or(0.0);
     // Failure model: a scripted plan (`--faults`) or a stochastic
     // MTBF/MTTR process (`--mtbf`/`--mttr`), with the availability target
     // and spare budget that drive redundancy sizing. Coherence (mtbf

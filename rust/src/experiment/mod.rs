@@ -35,10 +35,10 @@ pub use crate::config::experiment::{
 };
 
 use crate::config::{ArrivalProcess, ModelSpec, ServeSpec, TrafficSpec, Workload};
-use crate::evaluate::{DesignPoint, SloSelection, SweepEngine, SweepStats};
+use crate::evaluate::{validation_slo, DesignPoint, SloSelection, SweepEngine, SweepStats};
 use crate::perf::events::{
     simulate_replicated_faults, simulate_replicated_stream_faults, simulate_trace,
-    simulate_trace_stream, IterCost, ServeReport, SimConfig,
+    simulate_trace_stream, IterCost, ServeReport, SimConfig, TierReport, WindowRow,
 };
 use crate::perf::simulator::max_context;
 use crate::perf::trace::TraceFile;
@@ -351,7 +351,14 @@ pub struct ServeOutcome {
     pub rows: Vec<(String, ServeReport)>,
     /// `None` = unconstrained SLO (no selection row); `Some(None)` = no
     /// design meets the SLO; `Some(Some(sel))` = the confirmed selection.
+    /// Tiered specs validate the interactive tier's SLO (see
+    /// [`crate::evaluate::validation_slo`]).
     pub slo: Option<Option<SloSelection>>,
+    /// Reservation-admission baseline, present only when the spec ran with
+    /// overcommit and a binding SLO: the same constrained selection re-run
+    /// with overcommit stripped, so reports can state the TCO/token delta
+    /// lazy admission buys. Shapes mirror `slo`'s inner option.
+    pub reserved: Option<Option<SloSelection>>,
 }
 
 /// Outcome of an optimize experiment: one Table-2 row per model.
@@ -403,7 +410,9 @@ pub(crate) fn resolve_rate(
     load: f64,
     capacity_tokens_per_s: f64,
 ) -> TrafficSpec {
-    let mean_tokens = (traffic.new_tokens_lo + traffic.new_tokens_hi).max(2) as f64 / 2.0;
+    // Distribution- and tier-aware mean; uniform single-tier traffic
+    // reproduces the historical `(lo + hi).max(2) / 2` bit-for-bit.
+    let mean_tokens = traffic.mean_new_tokens();
     let capacity_rps = capacity_tokens_per_s / mean_tokens;
     let mut traffic = *traffic;
     match &mut traffic.arrival {
@@ -526,6 +535,7 @@ pub fn serve_outcome(
             feasible: false,
             rows: Vec::new(),
             slo: None,
+            reserved: None,
         });
     };
 
@@ -570,6 +580,8 @@ pub fn serve_outcome(
         spec.paged_kv,
     );
     cfg.quantum = spec.quantum;
+    cfg.overcommit = spec.overcommit;
+    cfg.window_s = spec.goodput_window_s;
     let mut rows: Vec<(String, ServeReport)> = Vec::new();
     // Static window: a couple of token periods — long enough to coalesce,
     // short enough not to dominate TTFT at low load.
@@ -619,10 +631,21 @@ pub fn serve_outcome(
             rows.push((r.policy.clone(), r));
         }
     }
-    let slo_part = if slo.is_unconstrained() {
+    // Tiered specs gate selection on the *interactive* SLO: a run-level
+    // unconstrained SLO with a binding interactive tier still selects.
+    let slo_part = if validation_slo(&spec).is_unconstrained() {
         None
     } else {
         Some(engine.best_point_slo(&ctx.space, &ctx.servers, w, &spec))
+    };
+    // The overcommit win, quantified: the same constrained selection under
+    // reservation admission, so reports can state the TCO/token delta.
+    let reserved = match &slo_part {
+        Some(_) if spec.overcommit.is_some() => {
+            let base = ServeSpec { overcommit: None, ..spec.clone() };
+            Some(engine.best_point_slo(&ctx.space, &ctx.servers, w, &base))
+        }
+        _ => None,
     };
     Ok(ServeOutcome {
         model: w.model.clone(),
@@ -632,6 +655,7 @@ pub fn serve_outcome(
         feasible: true,
         rows,
         slo: slo_part,
+        reserved,
     })
 }
 
@@ -857,7 +881,20 @@ impl ServeOutcome {
             return t;
         }
         for (label, r) in &self.rows {
-            t.row(report_row(label.clone(), r));
+            // Preemption count rides in the label, so plain rows
+            // (preempted == 0) stay byte-identical.
+            let head = if r.preempted > 0 {
+                format!("{label} (pre {})", r.preempted)
+            } else {
+                label.clone()
+            };
+            t.row(report_row(head, r));
+            for tr in &r.tiers {
+                t.row(tier_row(label, tr));
+            }
+            for wr in &r.windows {
+                t.row(window_row(label, wr, self.spec.goodput_window_s));
+            }
         }
         match &self.slo {
             None => {}
@@ -881,6 +918,31 @@ impl ServeOutcome {
             }
             Some(None) => {
                 t.row(padded("slo-opt: no design meets the SLO"));
+            }
+        }
+        match &self.reserved {
+            None => {}
+            Some(Some(base)) => {
+                // The reservation-admission fleet the same spec would have
+                // bought; its Δ column is the overcommit TCO/token saving.
+                let delta = match &self.slo {
+                    Some(Some(sel)) => format!(
+                        ", d{:+.1}%",
+                        (sel.point.tco_per_token / base.point.tco_per_token - 1.0) * 100.0
+                    ),
+                    _ => String::new(),
+                };
+                let label = format!(
+                    "reserved-opt ({:.0} mm², tp={} pp={}, ${:.3}/1M{delta})",
+                    base.point.server.chiplet.die_mm2,
+                    base.point.mapping.tp,
+                    base.point.mapping.pp,
+                    base.point.tco_per_mtok(),
+                );
+                t.row(report_row(label, &base.report));
+            }
+            Some(None) => {
+                t.row(padded("reserved-opt: no design meets the SLO without overcommit"));
             }
         }
         t
@@ -936,6 +998,30 @@ impl ServeOutcome {
         if !self.spec.faults.is_none() {
             fields.push(("faults", crate::config::experiment::faults_to_json(&self.spec.faults)));
         }
+        // Present only when the spec ran with overcommit and a binding SLO:
+        // the reservation-admission baseline selection, plus the explicit
+        // TCO/token delta when both fleets exist (negative = overcommit
+        // is cheaper), so CI can assert the win without recomputing.
+        if let Some(res) = &self.reserved {
+            let j = match res {
+                None => obj(vec![("feasible", Json::Bool(false))]),
+                Some(base) => {
+                    let mut f = vec![
+                        ("feasible", Json::Bool(true)),
+                        ("design", design_json(self.ctx, self.batch, &base.point)),
+                        ("report", report_json(&base.report)),
+                    ];
+                    if let Some(Some(sel)) = &self.slo {
+                        f.push((
+                            "overcommit_tco_delta_frac",
+                            num(sel.point.tco_per_token / base.point.tco_per_token - 1.0),
+                        ));
+                    }
+                    obj(f)
+                }
+            };
+            fields.push(("reserved_baseline", j));
+        }
         fields.extend([
             ("feasible", Json::Bool(self.feasible)),
             ("rows", Json::Arr(rows)),
@@ -959,6 +1045,48 @@ fn report_row(label: String, r: &ServeReport) -> Vec<String> {
         crate::util::fmt_secs(r.tpot_p99_s),
         fmt(r.occupancy * 100.0, 0),
         fmt(r.slo_met_frac * 100.0, 0),
+    ]
+}
+
+/// Per-tier sub-row nested under its policy row (tiered runs only).
+/// Throughput and occupancy are whole-replica quantities, so those cells
+/// stay blank.
+fn tier_row(label: &str, tr: &TierReport) -> Vec<String> {
+    let name = if tr.tier == 0 { "interactive" } else { "batch" };
+    vec![
+        format!("  {label}/{name}"),
+        tr.completed.to_string(),
+        tr.tokens.to_string(),
+        "-".to_string(),
+        fmt(tr.goodput_tokens_per_s, 1),
+        crate::util::fmt_secs(tr.ttft_p50_s),
+        crate::util::fmt_secs(tr.ttft_p99_s),
+        crate::util::fmt_secs(tr.tpot_p99_s),
+        "-".to_string(),
+        fmt(tr.slo_met_frac * 100.0, 0),
+    ]
+}
+
+/// One windowed-goodput sub-row: completions, tokens and the SLO-good
+/// token *rate* inside `[start, start + window)`.
+fn window_row(label: &str, wr: &WindowRow, window_s: f64) -> Vec<String> {
+    let rate = if window_s > 0.0 { wr.good_tokens as f64 / window_s } else { 0.0 };
+    let met = if wr.tokens > 0 {
+        fmt(wr.good_tokens as f64 / wr.tokens as f64 * 100.0, 0)
+    } else {
+        "-".to_string()
+    };
+    vec![
+        format!("  {label} [{:.1}s,{:.1}s)", wr.start_s, wr.start_s + window_s),
+        wr.completed.to_string(),
+        wr.tokens.to_string(),
+        "-".to_string(),
+        fmt(rate, 1),
+        "-".to_string(),
+        "-".to_string(),
+        "-".to_string(),
+        "-".to_string(),
+        met,
     ]
 }
 
@@ -1095,6 +1223,47 @@ fn report_json(r: &ServeReport) -> Json {
         fields.push(("redispatched", int(r.redispatched)));
         fields.push(("lost", int(r.lost)));
         fields.push(("downtime_frac", num(r.downtime_frac)));
+    }
+    // Overcommit/tier/window accounting, likewise only when those serving
+    // models actually ran, so plain outputs stay byte-identical.
+    if r.preempted > 0 {
+        fields.push(("preempted", int(r.preempted)));
+    }
+    if !r.tiers.is_empty() {
+        let tiers = r
+            .tiers
+            .iter()
+            .map(|tr| {
+                obj(vec![
+                    ("tier", int(tr.tier as usize)),
+                    ("completed", int(tr.completed)),
+                    ("tokens", int(tr.tokens)),
+                    ("slo_met_frac", num(tr.slo_met_frac)),
+                    ("ttft_p50_s", num(tr.ttft_p50_s)),
+                    ("ttft_p99_s", num(tr.ttft_p99_s)),
+                    ("tpot_p50_s", num(tr.tpot_p50_s)),
+                    ("tpot_p99_s", num(tr.tpot_p99_s)),
+                    ("goodput_tokens_per_s", num(tr.goodput_tokens_per_s)),
+                    ("preempted", int(tr.preempted)),
+                ])
+            })
+            .collect();
+        fields.push(("tiers", Json::Arr(tiers)));
+    }
+    if !r.windows.is_empty() {
+        let windows = r
+            .windows
+            .iter()
+            .map(|wr| {
+                obj(vec![
+                    ("start_s", num(wr.start_s)),
+                    ("completed", int(wr.completed)),
+                    ("tokens", int(wr.tokens)),
+                    ("good_tokens", int(wr.good_tokens)),
+                ])
+            })
+            .collect();
+        fields.push(("windows", Json::Arr(windows)));
     }
     obj(fields)
 }

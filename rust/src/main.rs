@@ -66,6 +66,8 @@ fn usage() -> ! {
          serve-sim/sweep serving-model flags: [--slo-ttft S] [--slo-tpot S] [--prefill-chunk N]\n\
          [--paged] [--replicas N] [--route rr|jsq|jsq-tokens] [--rps R] [--trace poisson|bursty|closed]\n\
          [--trace-file trace.csv] [--quantum S]\n\
+         overcommit: [--overcommit Q|mean] (needs --paged) [--goodput-window S];\n\
+         priority tiers are JSON-spec only (traffic.tiers)\n\
          faults: [--faults fail:R@T,recover:R@T,...] [--mtbf S] [--mttr S] [--fault-seed N]\n\
          [--availability A] [--max-spares K]"
     );

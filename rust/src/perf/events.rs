@@ -145,14 +145,64 @@
 //! `completed + rejected + lost == offered`. `FaultSpec::none` delegates
 //! to the fault-free entry points and is **byte-identical** to them by
 //! construction.
+//!
+//! ## Overcommit, priority tiers and windowed goodput
+//!
+//! Three serving-side mechanisms, all off by default and byte-identical
+//! to the legacy paths when disabled:
+//!
+//! * **Overcommit admission** ([`SimConfig::overcommit`], requires
+//!   `paged_kv`): instead of reserving every request's *maximum* KV
+//!   footprint up front, admission charges only the **expected** residency
+//!   — prompt plus a configurable quantile of the token-budget
+//!   distribution, or the observed running mean of released requests
+//!   ([`crate::config::OvercommitSpec`]) — against an
+//!   [`OvercommitLedger`] that allocates blocks lazily as tokens are
+//!   generated (the vLLM discipline). When a decode step needs a block
+//!   and none is free, the engine **preempts** the lowest-priority,
+//!   most-recently-admitted resident sequence: its blocks are freed, its
+//!   request re-queues at the head with its original arrival stamp and
+//!   full token budget, and it recomputes from scratch on re-admission
+//!   (the same recompute penalty a crash pays). Preemptions are counted
+//!   in [`ServeReport::preempted`] and conserve requests — nothing is
+//!   ever dropped by a preemption, so
+//!   `completed + rejected + lost == offered` still holds.
+//!   [`Replica::reject_unservable`] keeps rejecting requests whose *max*
+//!   footprint exceeds the whole capacity, which guarantees a lone
+//!   resident sequence always fits — so a preemption victim provably
+//!   exists whenever an append fails, and thrash is bounded.
+//! * **Priority tiers** ([`crate::config::TierSpec`] on the traffic
+//!   spec): arrivals carry a tier tag (0 = interactive, 1 = batch) drawn
+//!   from the spec's interactive share, with per-tier token-budget
+//!   ranges. Admission consults a [`TierSelector`] — interactive first,
+//!   with a bounded batch-starvation fairness knob — and the report
+//!   grows per-tier tails ([`ServeReport::tiers`]); each request's SLO
+//!   verdict uses its own tier's targets. Preemption victims are chosen
+//!   batch-first, so the interactive tier's tail is what overcommit
+//!   protects.
+//! * **Windowed goodput** ([`SimConfig::window_s`] > 0): completions
+//!   fold into fixed-width virtual-time buckets
+//!   ([`ServeReport::windows`]) — completed/token/good-token counts per
+//!   window, merged across replicas by bucket — giving a throughput
+//!   time-series without per-request records even in sketched mode.
+//!
+//! Early abort is disabled whenever overcommit or tiers are active:
+//! preemption re-queues requests out of arrival order, which breaks the
+//! sorted-queue proof behind the in-flight TTFT bound.
 
 use std::cmp::Reverse;
 use std::collections::{BTreeMap, BinaryHeap, VecDeque};
 
-use crate::config::workload::{ArrivalProcess, FaultEvent, FaultSpec, SloSpec, TrafficSpec};
+use crate::config::workload::{
+    ArrivalProcess, FaultEvent, FaultSpec, OvercommitSpec, ResidencyEstimate, SloSpec, TokenDist,
+    TrafficSpec,
+};
 use crate::config::Workload;
 use crate::perf::DecodePerf;
-use crate::sched::{sanitize, Action, KvBudget, KvLedger, Policy, RoutePolicy, SchedView};
+use crate::sched::{
+    sanitize, Action, KvBudget, KvLedger, OvercommitLedger, Policy, RoutePolicy, SchedView,
+    TierSelector,
+};
 use crate::util::rng::Rng;
 use crate::util::stats;
 
@@ -167,6 +217,9 @@ pub struct Arrival {
     pub prompt_tokens: usize,
     /// Tokens to generate (>= 1; the first comes from the prefill).
     pub new_tokens: usize,
+    /// Priority tier (0 = interactive, 1 = batch). Always 0 when the
+    /// traffic spec carries no [`crate::config::TierSpec`].
+    pub tier: u8,
 }
 
 /// Generate the open-loop arrival list for a traffic spec, in `(at_s, id)`
@@ -240,9 +293,34 @@ impl Iterator for OpenLoopIter {
     }
 }
 
+/// One base-distribution token-budget draw. The Uniform arm keeps the
+/// historical `rng.range` path (one `next_u64` per draw) so legacy
+/// streams replay byte-identically; Pareto inverts one unit draw.
+fn draw_new_tokens(rng: &mut Rng, t: &TrafficSpec, lo: usize, hi: usize) -> usize {
+    match t.new_tokens_dist {
+        TokenDist::Uniform => rng.range(lo, hi),
+        dist @ TokenDist::Pareto { .. } => dist.sample_unit(rng.f64(), lo, hi),
+    }
+}
+
 fn arrival(rng: &mut Rng, t: &TrafficSpec, id: u64, at_s: f64) -> Arrival {
     let (lo, hi) = (t.new_tokens_lo.max(1), t.new_tokens_hi.max(t.new_tokens_lo).max(1));
-    Arrival { id, at_s, prompt_tokens: t.prompt_tokens, new_tokens: rng.range(lo, hi) }
+    let (tier, new_tokens) = match t.tiers {
+        Some(ts) => {
+            // The tier coin flips first, then the tier's own budget draw
+            // — tiered streams need not match untiered ones (only the
+            // tiers-off path carries a byte-identity contract).
+            if rng.chance(ts.interactive_share) {
+                let ilo = ts.interactive_new_tokens_lo.max(1);
+                let ihi = ts.interactive_new_tokens_hi.max(ilo);
+                (0u8, rng.range(ilo, ihi))
+            } else {
+                (1u8, draw_new_tokens(rng, t, lo, hi))
+            }
+        }
+        None => (0u8, draw_new_tokens(rng, t, lo, hi)),
+    };
+    Arrival { id, at_s, prompt_tokens: t.prompt_tokens, new_tokens, tier }
 }
 
 /// Analytic per-iteration costs driving the simulator's virtual clock.
@@ -337,6 +415,15 @@ pub struct SimConfig {
     /// O(1) and return an empty [`ServeReport::per_request`]. Runs at or
     /// under the cap are unaffected (exact, bit-identical tails).
     pub tail_cap: usize,
+    /// Expected-residency overcommit admission with exhaustion-driven
+    /// preemption (module docs, "Overcommit, priority tiers and windowed
+    /// goodput"). Requires `paged_kv`; `None` (default) keeps the
+    /// reserve-the-maximum ledger byte-identically.
+    pub overcommit: Option<OvercommitSpec>,
+    /// Goodput window width, seconds of virtual time: when `> 0`,
+    /// completions fold into fixed-width buckets reported as
+    /// [`ServeReport::windows`]. `0.0` (default) disables windowed rows.
+    pub window_s: f64,
 }
 
 /// Default [`SimConfig::tail_cap`]: exact per-request tails up to ~1M
@@ -357,6 +444,8 @@ impl SimConfig {
             early_abort: false,
             quantum: 0.0,
             tail_cap: DEFAULT_TAIL_CAP,
+            overcommit: None,
+            window_s: 0.0,
         }
     }
 }
@@ -374,6 +463,8 @@ pub struct ReqStats {
     pub finish_s: f64,
     /// Tokens generated.
     pub tokens: usize,
+    /// Priority tier the request arrived with (0 when tiers are off).
+    pub tier: u8,
 }
 
 impl ReqStats {
@@ -466,8 +557,60 @@ pub struct ServeReport {
     /// Fraction of fleet capacity lost to downtime: down replica-seconds
     /// over `replicas ×` the run's span. 0.0 on fault-free runs.
     pub downtime_frac: f64,
+    /// Preemption events under overcommit admission: a resident sequence
+    /// lost its KV blocks to an exhausted pool and re-queued for a
+    /// recompute-from-scratch retry. One request can count several
+    /// times. 0 when overcommit is off. Preemptions conserve requests:
+    /// `completed + rejected + lost == offered` still holds.
+    pub preempted: usize,
+    /// Per-tier tails and goodput (tier 0 = interactive, tier 1 =
+    /// batch), present only when the traffic spec carries tiers.
+    pub tiers: Vec<TierReport>,
+    /// Fixed-width virtual-time goodput buckets, present only when
+    /// [`SimConfig::window_s`] > 0; merged across replicas by bucket.
+    pub windows: Vec<WindowRow>,
     /// Per-request records, sorted by request id.
     pub per_request: Vec<ReqStats>,
+}
+
+/// One priority tier's slice of a [`ServeReport`].
+#[derive(Clone, Copy, Debug)]
+pub struct TierReport {
+    /// Tier tag (0 = interactive, 1 = batch).
+    pub tier: u8,
+    /// Requests of this tier completed.
+    pub completed: usize,
+    /// Tokens generated for this tier.
+    pub tokens: usize,
+    /// Fraction of this tier's completions meeting *its own* SLO.
+    pub slo_met_frac: f64,
+    /// TTFT p50, s.
+    pub ttft_p50_s: f64,
+    /// TTFT p99, s.
+    pub ttft_p99_s: f64,
+    /// TPOT p50, s.
+    pub tpot_p50_s: f64,
+    /// TPOT p99, s.
+    pub tpot_p99_s: f64,
+    /// Tokens per second of SLO-compliant requests of this tier, over
+    /// the run's makespan.
+    pub goodput_tokens_per_s: f64,
+    /// Preemption events whose victim belonged to this tier.
+    pub preempted: usize,
+}
+
+/// One fixed-width goodput window of a [`ServeReport`] (completions
+/// bucketed by finish time).
+#[derive(Clone, Copy, Debug)]
+pub struct WindowRow {
+    /// Window start, seconds of virtual time (width = `window_s`).
+    pub start_s: f64,
+    /// Requests finished inside the window.
+    pub completed: usize,
+    /// Tokens those completions generated.
+    pub tokens: usize,
+    /// Tokens of the SLO-compliant subset.
+    pub good_tokens: usize,
 }
 
 /// A [`ServeReport`] flattened to bit-exact integers: every aggregate
@@ -503,6 +646,43 @@ impl ServeReport {
             && self.tpot_p99_s <= slo.tpot_p99_s
     }
 
+    /// The SLO verdict for one priority tier: every offered request still
+    /// has to complete (preempted requests recompute and finish, so
+    /// overcommit does not relax this), but only the named tier's tails
+    /// are held to the targets — the tiered design selection validates
+    /// the interactive tier while batch absorbs the preemption penalty.
+    /// Falls back to [`ServeReport::meets`] when the run carried no
+    /// tiers.
+    pub fn meets_tier(&self, tier: u8, slo: &SloSpec) -> bool {
+        match self.tiers.iter().find(|t| t.tier == tier) {
+            Some(t) => {
+                self.completed == self.offered
+                    && t.ttft_p99_s <= slo.ttft_p99_s
+                    && t.tpot_p99_s <= slo.tpot_p99_s
+            }
+            None => self.meets(slo),
+        }
+    }
+
+    /// [`ServeReport::meets_tier`] under faults: the completion term
+    /// relaxes to the availability fraction (as in
+    /// [`ServeReport::meets_available`]) while only the named tier's tails
+    /// are held to the targets. Falls back to `meets_available` when the
+    /// run carried no tiers.
+    pub fn meets_tier_available(&self, tier: u8, slo: &SloSpec, availability: f64) -> bool {
+        if self.offered == 0 || self.aborted_early {
+            return false;
+        }
+        match self.tiers.iter().find(|t| t.tier == tier) {
+            Some(t) => {
+                self.completed as f64 / self.offered as f64 >= availability
+                    && t.ttft_p99_s <= slo.ttft_p99_s
+                    && t.tpot_p99_s <= slo.tpot_p99_s
+            }
+            None => self.meets_available(slo, availability),
+        }
+    }
+
     /// Everything a bit-identity assertion between two runs must compare,
     /// as exact integers: two reports fingerprint equal iff every count,
     /// every float (to the bit) and every per-request record match. The
@@ -512,7 +692,7 @@ impl ServeReport {
     /// label is deliberately excluded (compared runs share it by
     /// construction).
     pub fn fingerprint(&self) -> ReportFingerprint {
-        let agg = vec![
+        let mut agg = vec![
             self.replicas as u64,
             self.offered as u64,
             self.completed as u64,
@@ -536,7 +716,30 @@ impl ServeReport {
             self.redispatched as u64,
             self.lost as u64,
             self.downtime_frac.to_bits(),
+            self.preempted as u64,
         ];
+        for t in &self.tiers {
+            agg.extend([
+                t.tier as u64,
+                t.completed as u64,
+                t.tokens as u64,
+                t.slo_met_frac.to_bits(),
+                t.ttft_p50_s.to_bits(),
+                t.ttft_p99_s.to_bits(),
+                t.tpot_p50_s.to_bits(),
+                t.tpot_p99_s.to_bits(),
+                t.goodput_tokens_per_s.to_bits(),
+                t.preempted as u64,
+            ]);
+        }
+        for w in &self.windows {
+            agg.extend([
+                w.start_s.to_bits(),
+                w.completed as u64,
+                w.tokens as u64,
+                w.good_tokens as u64,
+            ]);
+        }
         let per = self
             .per_request
             .iter()
@@ -567,6 +770,8 @@ struct Slot {
     /// shrinks as chunks land, but a crashed request recomputes the whole
     /// prompt from scratch on its next replica.
     prompt_tokens: usize,
+    /// Priority tier the request arrived with (0 when tiers are off).
+    tier: u8,
     /// Closed-loop client that owns the request, if any.
     client: Option<usize>,
 }
@@ -681,6 +886,14 @@ impl TailTally {
     }
 }
 
+/// One goodput window's running counters (see [`WindowRow`]).
+#[derive(Clone, Copy, Debug, Default)]
+struct WindowAcc {
+    completed: usize,
+    tokens: usize,
+    good_tokens: usize,
+}
+
 /// One engine replica's full simulation state: queue, slots, paged ledger
 /// and virtual clock. [`simulate_trace`] drives a single replica to
 /// completion; [`simulate_replicated`] interleaves several in global time
@@ -731,6 +944,21 @@ struct Replica<'a> {
     /// Bounded-memory tail accounting, engaged when the run offers more
     /// than [`SimConfig::tail_cap`] requests; `done` stays empty then.
     tally: Option<TailTally>,
+    /// Per-tier sketched tails, engaged only when sketched *and* tiered
+    /// (index = tier tag; the overall `tally` keeps recording too).
+    tier_tallies: Option<Vec<TailTally>>,
+    /// Expected-residency ledger; Some when overcommit is on (it then
+    /// replaces the reservation `ledger`).
+    oc: Option<OvercommitLedger>,
+    /// Tier-ordered admission state; Some when the traffic carries tiers.
+    selector: Option<TierSelector>,
+    /// Preemption events on this replica.
+    preempted: usize,
+    /// Preemption events by victim tier (index = tier tag, capped at 1).
+    preempted_by_tier: [usize; 2],
+    /// Windowed goodput buckets (bucket index -> accumulators), engaged
+    /// when `cfg.window_s > 0`.
+    windows: BTreeMap<u64, WindowAcc>,
     done: Vec<ReqStats>,
     now: f64,
     first_arrival: Option<f64>,
@@ -756,6 +984,9 @@ impl<'a> Replica<'a> {
         sketched: bool,
     ) -> Replica<'a> {
         let pending = source.next();
+        // Overcommit replaces the reserve-the-maximum ledger with the
+        // lazily-allocating one (validate() requires paged_kv with it).
+        let oc_on = cfg.overcommit.is_some() && cfg.paged_kv;
         Replica {
             cfg: *cfg,
             kv_slots: if cfg.paged_kv {
@@ -763,7 +994,13 @@ impl<'a> Replica<'a> {
             } else {
                 cfg.kv.concurrency(cfg.max_slots)
             },
-            ledger: cfg.paged_kv.then(|| cfg.kv.ledger()),
+            ledger: (cfg.paged_kv && !oc_on).then(|| cfg.kv.ledger()),
+            oc: oc_on
+                .then(|| OvercommitLedger::new(cfg.kv.capacity_tokens, cfg.kv.block_tokens)),
+            selector: traffic.tiers.map(|t| TierSelector::new(t.max_consecutive_interactive)),
+            preempted: 0,
+            preempted_by_tier: [0, 0],
+            windows: BTreeMap::new(),
             source,
             pending,
             closed,
@@ -780,6 +1017,8 @@ impl<'a> Replica<'a> {
             aborted: false,
             slo: *slo,
             tally: sketched.then(TailTally::new),
+            tier_tallies: (sketched && traffic.tiers.is_some())
+                .then(|| vec![TailTally::new(), TailTally::new()]),
             done: Vec::new(),
             now: 0.0,
             first_arrival: None,
@@ -860,8 +1099,34 @@ impl<'a> Replica<'a> {
         }
     }
 
+    /// The KV tokens one request is charged at admission. Reservation
+    /// mode charges the maximum footprint; overcommit charges prompt +
+    /// the expected generation length — a distribution quantile, or the
+    /// observed running mean of released requests (max footprint until
+    /// the first release seeds the mean) — clamped to the request's own
+    /// budget so no one is charged more than it could ever hold.
+    fn expected_charge(&self, a: &Arrival) -> usize {
+        let Some(spec) = self.cfg.overcommit else {
+            return a.prompt_tokens + a.new_tokens;
+        };
+        let expect = match spec.estimate {
+            ResidencyEstimate::Quantile(q) => self.traffic.quantile_new_tokens(a.tier, q),
+            ResidencyEstimate::RunningMean => {
+                match self.oc.as_ref().and_then(OvercommitLedger::observed_mean) {
+                    Some(m) => m,
+                    None => return a.prompt_tokens + a.new_tokens,
+                }
+            }
+        };
+        let expect = if expect.is_finite() { expect.round() as usize } else { a.new_tokens };
+        a.prompt_tokens + expect.clamp(1, a.new_tokens.max(1))
+    }
+
     /// Head-of-line requests the paged ledger accepts right now.
     fn kv_admissible(&self) -> usize {
+        if let Some(l) = &self.oc {
+            return l.admissible(self.queue.iter().map(|(a, _)| self.expected_charge(a)));
+        }
         match &self.ledger {
             Some(l) => {
                 l.admissible(self.queue.iter().map(|(a, _)| a.prompt_tokens + a.new_tokens))
@@ -878,10 +1143,42 @@ impl<'a> Replica<'a> {
     /// in the report, so SLO validation still fails conservatively; a
     /// closed-loop client whose request is rejected goes back to thinking.
     fn reject_unservable(&mut self) {
-        let Some(l) = &self.ledger else { return };
-        let capacity = l.capacity_blocks();
+        // Under overcommit the same max-footprint test runs against the
+        // overcommit ledger's geometry: a request that could never fit
+        // even alone must be shed, which is also what guarantees every
+        // failing append has a preemption victim (a lone sequence fits).
+        let (block_tokens, capacity) = if let Some(l) = &self.ledger {
+            (l.block_tokens(), l.capacity_blocks())
+        } else if let Some(l) = &self.oc {
+            (l.block_tokens(), l.capacity_blocks())
+        } else {
+            return;
+        };
+        let fits = |a: &Arrival| {
+            (a.prompt_tokens + a.new_tokens).div_ceil(block_tokens).max(1) <= capacity
+        };
+        if self.selector.is_some() {
+            // Tiered admission picks anywhere in the queue, so oversized
+            // requests must be shed wherever they sit — an unservable
+            // batch request mid-queue would otherwise be picked, admitted
+            // on its (fitting) expected charge, and then preempt forever.
+            let mut i = 0;
+            while i < self.queue.len() {
+                let (a, c) = self.queue[i];
+                if fits(&a) {
+                    i += 1;
+                    continue;
+                }
+                let _ = self.queue.remove(i);
+                self.rejected += 1;
+                if let (Some(cl), Some(c)) = (self.closed.as_mut(), c) {
+                    cl.ready[c] = self.now + cl.think_s;
+                }
+            }
+            return;
+        }
         while let Some((a, c)) = self.queue.front().copied() {
-            if l.blocks_for(a.prompt_tokens + a.new_tokens) <= capacity {
+            if fits(&a) {
                 break;
             }
             self.queue.pop_front();
@@ -908,6 +1205,7 @@ impl<'a> Replica<'a> {
             first_token_s: slot.first_token_s,
             finish_s: self.now,
             tokens: slot.tokens,
+            tier: slot.tier,
         };
         if let Some(a) = self.abort {
             // Strictly-above mirrors the percentile proof: p99 > target
@@ -922,9 +1220,27 @@ impl<'a> Replica<'a> {
                 self.aborted = true;
             }
         }
+        // Each request is judged against its own tier's SLO when tiers
+        // are on; the run SLO otherwise (identical when tiers are off).
+        let slo = match self.traffic.tiers {
+            Some(ts) => ts.slo_for(slot.tier),
+            None => self.slo,
+        };
         match self.tally.as_mut() {
-            Some(t) => t.record(&stats, &self.slo),
+            Some(t) => t.record(&stats, &slo),
             None => self.done.push(stats),
+        }
+        if let Some(tt) = self.tier_tallies.as_mut() {
+            tt[usize::from(slot.tier.min(1))].record(&stats, &slo);
+        }
+        if self.cfg.window_s > 0.0 {
+            let bucket = (self.now / self.cfg.window_s).floor().max(0.0) as u64;
+            let w = self.windows.entry(bucket).or_default();
+            w.completed += 1;
+            w.tokens += stats.tokens;
+            if stats.meets(&slo) {
+                w.good_tokens += stats.tokens;
+            }
         }
         self.last_finish = self.last_finish.max(self.now);
         self.free_list.push(Reverse(idx));
@@ -932,9 +1248,56 @@ impl<'a> Replica<'a> {
         if let Some(l) = self.ledger.as_mut() {
             l.release(slot.id);
         }
+        if let Some(l) = self.oc.as_mut() {
+            l.release(slot.id);
+        }
         if let (Some(cl), Some(c)) = (self.closed.as_mut(), slot.client) {
             cl.ready[c] = self.now + cl.think_s;
         }
+    }
+
+    /// Preempt the lowest-priority, most-recently-admitted resident
+    /// sequence other than `keep`: its blocks are freed (no residency
+    /// observation — the run was cut short), its request re-queues at the
+    /// head with its original arrival stamp and *full* token budget for a
+    /// recompute-from-scratch retry. Returns false when no victim exists,
+    /// which [`Replica::reject_unservable`]'s lone-sequence-fits guarantee
+    /// makes unreachable in practice — callers then stop retrying instead
+    /// of spinning.
+    fn preempt_one(&mut self, keep: u64) -> bool {
+        let Some(victim) = self.oc.as_ref().and_then(|l| l.preempt_candidate(keep)) else {
+            return false;
+        };
+        let mut idx = None;
+        for (i, slot) in self.slots.iter().enumerate() {
+            if matches!(slot, Some(s) if s.id == victim) {
+                idx = Some(i);
+                break;
+            }
+        }
+        let Some(i) = idx else { return false };
+        let Some(s) = self.slots[i].take() else { return false };
+        if s.prefill_remaining > 0 {
+            self.prefilling -= 1;
+        }
+        self.free_list.push(Reverse(i));
+        self.live_count -= 1;
+        if let Some(l) = self.oc.as_mut() {
+            l.preempt(victim);
+        }
+        self.preempted += 1;
+        self.preempted_by_tier[usize::from(s.tier.min(1))] += 1;
+        let retry = Arrival {
+            id: s.id,
+            at_s: s.arrival_s,
+            prompt_tokens: s.prompt_tokens,
+            // tokens + remaining is the original budget whether the slot
+            // was mid-prefill or mid-decode.
+            new_tokens: s.tokens + s.remaining,
+            tier: s.tier,
+        };
+        self.queue.push_front((retry, s.client));
+        true
     }
 
     /// Fail this replica at its current clock: every resident request
@@ -957,6 +1320,7 @@ impl<'a> Replica<'a> {
                     // tokens + remaining is the original budget whether the
                     // slot was mid-prefill or mid-decode.
                     new_tokens: s.tokens + s.remaining,
+                    tier: s.tier,
                 });
             }
         }
@@ -964,7 +1328,11 @@ impl<'a> Replica<'a> {
         self.free_list = (0..self.cfg.max_slots).map(Reverse).collect();
         self.live_count = 0;
         self.prefilling = 0;
-        self.ledger = self.cfg.paged_kv.then(|| self.cfg.kv.ledger());
+        let oc_on = self.oc.is_some();
+        self.ledger = (self.cfg.paged_kv && !oc_on).then(|| self.cfg.kv.ledger());
+        self.oc = oc_on.then(|| {
+            OvercommitLedger::new(self.cfg.kv.capacity_tokens, self.cfg.kv.block_tokens)
+        });
         victims
             .sort_by(|a, b| stats::total_cmp_f64(&a.at_s, &b.at_s).then(a.id.cmp(&b.id)));
         victims
@@ -986,10 +1354,47 @@ impl<'a> Replica<'a> {
             // `n` comes from sanitize(), which never exceeds the queue
             // length — an empty queue here means the admission plan is
             // stale, and admitting nothing is the benign degradation.
-            let Some((a, c)) = self.queue.pop_front() else { break };
-            if let Some(l) = self.ledger.as_mut() {
+            // Tiered admission picks by priority (bounded batch
+            // starvation); FIFO otherwise.
+            let picked = match self.selector.as_mut() {
+                Some(sel) => {
+                    match sel.pick(self.queue.iter().map(|(a, _)| a.tier)) {
+                        Some(i) => i,
+                        None => break,
+                    }
+                }
+                None => 0,
+            };
+            let entry = if picked == 0 {
+                self.queue.pop_front()
+            } else {
+                self.queue.remove(picked)
+            };
+            let Some((a, c)) = entry else { break };
+            if self.oc.is_some() {
+                let charge = self.expected_charge(&a);
+                let ok = match self.oc.as_mut() {
+                    Some(l) => l.admit(a.id, a.prompt_tokens, charge, a.tier),
+                    None => false,
+                };
+                if !ok {
+                    // The sanitize() admissibility count was a FIFO-prefix
+                    // estimate; an out-of-order pick (or a mean that moved)
+                    // can overshoot. Put the request back and stop
+                    // admitting this iteration.
+                    self.queue.insert(picked.min(self.queue.len()), (a, c));
+                    break;
+                }
+            } else if let Some(l) = self.ledger.as_mut() {
                 let ok = l.admit(a.id, a.prompt_tokens, a.prompt_tokens + a.new_tokens);
-                debug_assert!(ok, "sanitize admitted past the paged KV capacity");
+                if self.selector.is_none() {
+                    debug_assert!(ok, "sanitize admitted past the paged KV capacity");
+                } else if !ok {
+                    // Out-of-order picks void the FIFO-prefix proof; put
+                    // the request back rather than corrupting the ledger.
+                    self.queue.insert(picked.min(self.queue.len()), (a, c));
+                    break;
+                }
             }
             // Lowest free index, as the reference `position(is_none)` scan
             // picked — slot order decides per-iteration processing order.
@@ -1004,6 +1409,7 @@ impl<'a> Replica<'a> {
                 remaining: a.new_tokens,
                 prefill_remaining: a.prompt_tokens,
                 prompt_tokens: a.prompt_tokens,
+                tier: a.tier,
                 client: c,
             });
             self.live_count += 1;
@@ -1035,6 +1441,8 @@ impl<'a> Replica<'a> {
         self.busy_slot_time += occ as f64 * t;
         self.peak_live = self.peak_live.max(occ);
         // Decode completions for the slots decoding at iteration start.
+        // A preemption can vacate a later-decoding slot mid-loop; the
+        // `let Some` guard already tolerates vacated slots.
         for i in decoding {
             // Selected as occupied at iteration start; nothing in between
             // vacates slots, so a None here simply has no work to do.
@@ -1045,6 +1453,7 @@ impl<'a> Replica<'a> {
             if let Some(l) = self.ledger.as_mut() {
                 l.append(id);
             }
+            self.oc_append(id);
             if finished {
                 if let Some(slot) = self.slots[i].take() {
                     self.finish(i, slot);
@@ -1062,6 +1471,7 @@ impl<'a> Replica<'a> {
                 if let Some(l) = self.ledger.as_mut() {
                     l.append(id);
                 }
+                self.oc_append(id);
                 if finished {
                     if let Some(slot) = self.slots[i].take() {
                         self.finish(i, slot);
@@ -1071,6 +1481,28 @@ impl<'a> Replica<'a> {
         }
         if let Some(l) = &self.ledger {
             self.peak_kv_tokens = self.peak_kv_tokens.max(l.peak_resident_tokens());
+        }
+        if let Some(l) = &self.oc {
+            self.peak_kv_tokens = self.peak_kv_tokens.max(l.peak_resident_tokens());
+        }
+    }
+
+    /// Record one generated token against the overcommit ledger,
+    /// preempting victims until the block fits (no-op when overcommit is
+    /// off). See [`Replica::preempt_one`] for why a victim always exists
+    /// while the pool is exhausted.
+    fn oc_append(&mut self, id: u64) {
+        if self.oc.is_none() {
+            return;
+        }
+        loop {
+            let appended = match self.oc.as_mut() {
+                Some(l) => l.append(id),
+                None => true,
+            };
+            if appended || !self.preempt_one(id) {
+                return;
+            }
         }
     }
 
@@ -1104,6 +1536,20 @@ impl<'a> Replica<'a> {
             Some(r) if r > 1 => r - 1,
             _ => return 0,
         };
+        // Under overcommit, additionally stop before any bulk append
+        // could outgrow the free block pool: a stretch capped this way
+        // provably needs no preemption, so skipping it is exact. Cap 0
+        // falls back to per-iteration stepping, which preempts.
+        let max_k = match &self.oc {
+            Some(l) => {
+                let cap = l.bulk_append_cap();
+                if cap == 0 {
+                    return 0;
+                }
+                max_k.min(cap)
+            }
+            None => max_k,
+        };
         let step = self.cfg.cost.decode_step_s;
         if !step.is_finite() || step <= 0.0 {
             // Degenerate costs (pinned-to-INFINITY guards, zero periods)
@@ -1134,8 +1580,14 @@ impl<'a> Replica<'a> {
             if let Some(l) = self.ledger.as_mut() {
                 l.append_n(s.id, k);
             }
+            if let Some(l) = self.oc.as_mut() {
+                l.append_n(s.id, k);
+            }
         }
         if let Some(l) = &self.ledger {
+            self.peak_kv_tokens = self.peak_kv_tokens.max(l.peak_resident_tokens());
+        }
+        if let Some(l) = &self.oc {
             self.peak_kv_tokens = self.peak_kv_tokens.max(l.peak_resident_tokens());
         }
         k
@@ -1162,6 +1614,17 @@ impl<'a> Replica<'a> {
         let max_k = match self.slots.iter().flatten().map(|s| s.remaining).min() {
             Some(r) if r > 1 => r - 1,
             _ => return 0,
+        };
+        // Overcommit: same preemption-free stretch cap as fast_forward.
+        let max_k = match &self.oc {
+            Some(l) => {
+                let cap = l.bulk_append_cap();
+                if cap == 0 {
+                    return 0;
+                }
+                max_k.min(cap)
+            }
+            None => max_k,
         };
         let step = self.cfg.cost.decode_step_s;
         if !step.is_finite() || step <= 0.0 {
@@ -1209,8 +1672,14 @@ impl<'a> Replica<'a> {
             if let Some(l) = self.ledger.as_mut() {
                 l.append_n(s.id, k);
             }
+            if let Some(l) = self.oc.as_mut() {
+                l.append_n(s.id, k);
+            }
         }
         if let Some(l) = &self.ledger {
+            self.peak_kv_tokens = self.peak_kv_tokens.max(l.peak_resident_tokens());
+        }
+        if let Some(l) = &self.oc {
             self.peak_kv_tokens = self.peak_kv_tokens.max(l.peak_resident_tokens());
         }
         k
@@ -1362,6 +1831,23 @@ impl<'a> Replica<'a> {
             }
         }
     }
+}
+
+/// The run's early-abort rule, with the overcommit/tiers suppression:
+/// preemption and tier-ordered admission re-queue and reorder requests,
+/// breaking the sorted-queue proof behind the in-flight TTFT bound (the
+/// same reason the faulted router never arms the rule), so those runs are
+/// always simulated in full.
+fn abort_rule(
+    cfg: &SimConfig,
+    traffic: &TrafficSpec,
+    offered: usize,
+    slo: &SloSpec,
+) -> Option<AbortRule> {
+    if cfg.overcommit.is_some() || traffic.tiers.is_some() {
+        return None;
+    }
+    AbortRule::new(cfg, offered, slo)
 }
 
 /// Fleet-wide early-abort check: some replica already aborted locally, or
@@ -1611,17 +2097,26 @@ fn aggregate(
 ) -> ServeReport {
     let n = replicas.len().max(1);
     let max_slots = replicas.first().map(|r| r.cfg.max_slots).unwrap_or(1);
+    let tiers_spec = replicas.first().and_then(|r| r.traffic.tiers);
+    let window_s = replicas.first().map(|r| r.cfg.window_s).unwrap_or(0.0);
     let mut done: Vec<ReqStats> = Vec::new();
     let mut tally: Option<TailTally> = None;
+    let mut tier_tallies: Option<Vec<TailTally>> = None;
+    let mut window_accs: BTreeMap<u64, WindowAcc> = BTreeMap::new();
     let mut first_arrival: Option<f64> = None;
     let mut last_finish = 0.0f64;
     let (mut busy_slot_time, mut busy_time) = (0.0f64, 0.0f64);
     let mut iterations = 0u64;
     let (mut peak_live, mut peak_kv) = (0usize, 0usize);
     let mut rejected = 0usize;
+    let mut preempted = 0usize;
+    let mut preempted_by_tier = [0usize; 2];
     let mut aborted_early = fleet_aborted;
     for r in replicas {
         rejected += r.rejected;
+        preempted += r.preempted;
+        preempted_by_tier[0] += r.preempted_by_tier[0];
+        preempted_by_tier[1] += r.preempted_by_tier[1];
         aborted_early |= r.aborted;
         done.extend(r.done);
         if let Some(t) = r.tally {
@@ -1629,6 +2124,22 @@ fn aggregate(
                 Some(m) => m.merge(&t),
                 None => tally = Some(t),
             }
+        }
+        if let Some(tt) = r.tier_tallies {
+            match tier_tallies.as_mut() {
+                Some(m) => {
+                    for (a, b) in m.iter_mut().zip(&tt) {
+                        a.merge(b);
+                    }
+                }
+                None => tier_tallies = Some(tt),
+            }
+        }
+        for (b, w) in r.windows {
+            let e = window_accs.entry(b).or_default();
+            e.completed += w.completed;
+            e.tokens += w.tokens;
+            e.good_tokens += w.good_tokens;
         }
         first_arrival = match (first_arrival, r.first_arrival) {
             (Some(a), Some(b)) => Some(a.min(b)),
@@ -1641,12 +2152,48 @@ fn aggregate(
         peak_live = peak_live.max(r.peak_live);
         peak_kv = peak_kv.max(r.peak_kv_tokens);
     }
+    let windows: Vec<WindowRow> = window_accs
+        .into_iter()
+        .map(|(b, w)| WindowRow {
+            start_s: b as f64 * window_s,
+            completed: w.completed,
+            tokens: w.tokens,
+            good_tokens: w.good_tokens,
+        })
+        .collect();
     if let Some(t) = tally {
         // Bounded-memory path: tails from the merged fleet sketch, no
         // per-request records (entry points engage the tally on every
         // replica of a run or none, so `done` is empty here).
         debug_assert!(done.is_empty(), "mixed exact/sketched replicas in one run");
         let makespan = (last_finish - first_arrival.unwrap_or(0.0)).max(0.0);
+        let tiers: Vec<TierReport> = match (&tiers_spec, &tier_tallies) {
+            (Some(_), Some(tt)) => tt
+                .iter()
+                .enumerate()
+                .map(|(i, t)| TierReport {
+                    tier: i as u8,
+                    completed: t.completed,
+                    tokens: t.tokens,
+                    slo_met_frac: if t.completed == 0 {
+                        0.0
+                    } else {
+                        t.met as f64 / t.completed as f64
+                    },
+                    ttft_p50_s: t.ttft.quantile(50.0),
+                    ttft_p99_s: t.ttft.quantile(99.0),
+                    tpot_p50_s: t.tpot.quantile(50.0),
+                    tpot_p99_s: t.tpot.quantile(99.0),
+                    goodput_tokens_per_s: if makespan > 0.0 {
+                        t.good_tokens as f64 / makespan
+                    } else {
+                        0.0
+                    },
+                    preempted: preempted_by_tier[i.min(1)],
+                })
+                .collect(),
+            _ => Vec::new(),
+        };
         return ServeReport {
             policy: policy.to_string(),
             replicas: n,
@@ -1684,6 +2231,9 @@ fn aggregate(
             redispatched: 0,
             lost: 0,
             downtime_frac: 0.0,
+            preempted,
+            tiers,
+            windows,
             per_request: Vec::new(),
         };
     }
@@ -1696,9 +2246,53 @@ fn aggregate(
     let tpot_p = stats::percentiles(&mut tpots, &[50.0, 99.0]);
     let total_p = stats::percentiles(&mut totals, &[50.0, 99.0]);
     let tokens: usize = done.iter().map(|r| r.tokens).sum();
-    let good_tokens: usize = done.iter().filter(|r| r.meets(slo)).map(|r| r.tokens).sum();
-    let met = done.iter().filter(|r| r.meets(slo)).count();
+    // Each request is judged against its own tier's SLO; without tiers
+    // this is exactly the run-wide SLO (the pre-tier behaviour).
+    let slo_of = |r: &ReqStats| match tiers_spec {
+        Some(ts) => ts.slo_for(r.tier),
+        None => *slo,
+    };
+    let good_tokens: usize = done.iter().filter(|r| r.meets(&slo_of(r))).map(|r| r.tokens).sum();
+    let met = done.iter().filter(|r| r.meets(&slo_of(r))).count();
     let makespan = (last_finish - first_arrival.unwrap_or(0.0)).max(0.0);
+    let tiers: Vec<TierReport> = match tiers_spec {
+        Some(ts) => (0u8..2)
+            .map(|tier| {
+                let tslo = ts.slo_for(tier);
+                let sub: Vec<&ReqStats> = done.iter().filter(|r| r.tier == tier).collect();
+                let mut ttfts: Vec<f64> = sub.iter().map(|r| r.ttft_s()).collect();
+                let mut tpots: Vec<f64> =
+                    sub.iter().filter(|r| r.tokens > 1).map(|r| r.tpot_s()).collect();
+                let ttft_p = stats::percentiles(&mut ttfts, &[50.0, 99.0]);
+                let tpot_p = stats::percentiles(&mut tpots, &[50.0, 99.0]);
+                let t_tokens: usize = sub.iter().map(|r| r.tokens).sum();
+                let t_good: usize =
+                    sub.iter().filter(|r| r.meets(&tslo)).map(|r| r.tokens).sum();
+                let t_met = sub.iter().filter(|r| r.meets(&tslo)).count();
+                TierReport {
+                    tier,
+                    completed: sub.len(),
+                    tokens: t_tokens,
+                    slo_met_frac: if sub.is_empty() {
+                        0.0
+                    } else {
+                        t_met as f64 / sub.len() as f64
+                    },
+                    ttft_p50_s: ttft_p[0],
+                    ttft_p99_s: ttft_p[1],
+                    tpot_p50_s: tpot_p[0],
+                    tpot_p99_s: tpot_p[1],
+                    goodput_tokens_per_s: if makespan > 0.0 {
+                        t_good as f64 / makespan
+                    } else {
+                        0.0
+                    },
+                    preempted: preempted_by_tier[usize::from(tier.min(1))],
+                }
+            })
+            .collect(),
+        None => Vec::new(),
+    };
     ServeReport {
         policy: policy.to_string(),
         replicas: n,
@@ -1728,6 +2322,9 @@ fn aggregate(
         redispatched: 0,
         lost: 0,
         downtime_frac: 0.0,
+        preempted,
+        tiers,
+        windows,
         per_request: done,
     }
 }
@@ -1815,7 +2412,7 @@ where
         }
         _ => None,
     };
-    let abort = AbortRule::new(cfg, offered, slo);
+    let abort = abort_rule(cfg, traffic, offered, slo);
     let sketched = offered > cfg.tail_cap;
     let mut replica = Replica::new(
         cfg,
@@ -1919,7 +2516,7 @@ where
     // violators alone crossing it is sufficient (the fleet total can only
     // be larger), so replica-local aborts stay sound; the router below
     // additionally aborts on the fleet total between arrivals.
-    let abort = AbortRule::new(cfg, offered, slo);
+    let abort = abort_rule(cfg, traffic, offered, slo);
     let sketched = offered > cfg.tail_cap;
     let mut pols: Vec<P> = (0..n).map(|_| policy.clone()).collect();
     let mut reps: Vec<Replica> = Vec::with_capacity(n);
@@ -2177,6 +2774,7 @@ pub(crate) fn unserved_report(policy: &str, replicas: usize, offered: usize) -> 
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::config::workload::TierSpec;
     use crate::sched::{ContinuousBatch, StaticBatch};
 
     fn cost() -> IterCost {
@@ -2710,9 +3308,9 @@ mod tests {
     fn jsq_tokens_routes_on_outstanding_work_not_count() {
         let t = TrafficSpec::poisson(1.0, 3, 1, 1, 1000);
         let trace = vec![
-            Arrival { id: 0, at_s: 0.0, prompt_tokens: 1, new_tokens: 1000 },
-            Arrival { id: 1, at_s: 0.001, prompt_tokens: 1, new_tokens: 4 },
-            Arrival { id: 2, at_s: 0.002, prompt_tokens: 1, new_tokens: 4 },
+            Arrival { id: 0, at_s: 0.0, prompt_tokens: 1, new_tokens: 1000, tier: 0 },
+            Arrival { id: 1, at_s: 0.001, prompt_tokens: 1, new_tokens: 4, tier: 0 },
+            Arrival { id: 2, at_s: 0.002, prompt_tokens: 1, new_tokens: 4, tier: 0 },
         ];
         let run = |route: RoutePolicy| {
             simulate_replicated_on(
@@ -3159,5 +3757,161 @@ mod tests {
             assert_eq!(a.completed + a.rejected + a.lost, a.offered, "seed {seed}");
             assert!(a.downtime_frac > 0.0 && a.downtime_frac < 1.0, "seed {seed}");
         }
+    }
+
+    /// Overcommit on a pool far smaller than the aggregate footprint must
+    /// preempt (the optimism was real), conserve every request (preempted
+    /// work recomputes and finishes), stay within the physical capacity,
+    /// and replay bit-identically.
+    #[test]
+    fn overcommit_preempts_conserves_and_replays() {
+        let mut c = cfg(8);
+        c.kv = KvBudget::tokens(64, 8);
+        c.paged_kv = true;
+        c.overcommit = Some(OvercommitSpec::quantile(0.5));
+        // Footprint 8 + U[4,48] <= 56 tokens: everything fits alone, so
+        // nothing is shed and conservation reads completed == offered.
+        let t = TrafficSpec::poisson(1000.0, 60, 8, 4, 48).with_seed(11);
+        let slo = SloSpec::unconstrained();
+        let rep = simulate_trace(&c, &mut ContinuousBatch, &t, &slo);
+        assert!(rep.preempted > 0, "a 64-token pool under ~34-token charges must preempt");
+        assert_eq!(rep.rejected, 0);
+        assert_eq!(rep.completed, rep.offered, "preempted requests recompute and finish");
+        assert!(rep.peak_kv_tokens <= 64, "peak kv={}", rep.peak_kv_tokens);
+        let again = simulate_trace(&c, &mut ContinuousBatch, &t, &slo);
+        assert_eq!(rep.fingerprint(), again.fingerprint());
+    }
+
+    /// With overcommit and tiers off, the report carries none of the new
+    /// state: no preemptions, no tier rows, no windows — the shape the
+    /// off-path byte-identity property rests on.
+    #[test]
+    fn plain_runs_carry_no_overcommit_state() {
+        let t = TrafficSpec::poisson(100.0, 40, 16, 4, 16);
+        let rep = simulate_trace(&cfg(4), &mut ContinuousBatch, &t, &SloSpec::unconstrained());
+        assert_eq!(rep.preempted, 0);
+        assert!(rep.tiers.is_empty());
+        assert!(rep.windows.is_empty());
+    }
+
+    /// Tier-ordered admission must buy the interactive tier a tighter TTFT
+    /// tail than batch under overload, while the fairness bound keeps
+    /// batch completing (bounded starvation).
+    #[test]
+    fn tiers_favor_interactive_ttft_without_starving_batch() {
+        let islo = SloSpec::new(0.5, 0.05);
+        let bslo = SloSpec::unconstrained();
+        let tiers = TierSpec::new(0.5, 2, 8, islo, bslo).with_fairness(4);
+        // Batch budgets 32..64 on 2 slots at 50 req/s: heavy overload, so
+        // queue order decides TTFT.
+        let t = TrafficSpec::poisson(50.0, 80, 16, 32, 64).with_seed(13).with_tiers(tiers);
+        let rep = simulate_trace(&cfg(2), &mut ContinuousBatch, &t, &SloSpec::unconstrained());
+        assert_eq!(rep.completed, rep.offered);
+        assert_eq!(rep.tiers.len(), 2);
+        let (i, b) = (&rep.tiers[0], &rep.tiers[1]);
+        assert_eq!((i.tier, b.tier), (0, 1));
+        assert!(i.completed > 0 && b.completed > 0, "both tiers must be sampled and served");
+        assert!(
+            i.ttft_p99_s < b.ttft_p99_s,
+            "priority admission must show in the tails: interactive {} vs batch {}",
+            i.ttft_p99_s,
+            b.ttft_p99_s
+        );
+        assert_eq!(i.completed + b.completed, rep.completed);
+        assert_eq!(i.tokens + b.tokens, rep.tokens);
+    }
+
+    /// Windowed goodput rows partition the run: bucket sums reproduce the
+    /// aggregate counters exactly and buckets come out time-ordered.
+    #[test]
+    fn goodput_windows_partition_the_run() {
+        let mut c = cfg(4);
+        c.window_s = 0.5;
+        let t = TrafficSpec::poisson(50.0, 60, 8, 4, 8).with_seed(3);
+        let rep = simulate_trace(&c, &mut ContinuousBatch, &t, &SloSpec::unconstrained());
+        assert!(!rep.windows.is_empty());
+        assert!(rep.windows.windows(2).all(|w| w[0].start_s < w[1].start_s));
+        assert_eq!(rep.windows.iter().map(|w| w.completed).sum::<usize>(), rep.completed);
+        assert_eq!(rep.windows.iter().map(|w| w.tokens).sum::<usize>(), rep.tokens);
+        assert!(rep.windows.iter().all(|w| w.good_tokens <= w.tokens));
+    }
+
+    /// The decode fast-forward must stay bit-identical to per-iteration
+    /// stepping with the overcommit ledger in the loop: the bulk-append
+    /// cap provably excludes preemption inside a jumped stretch.
+    #[test]
+    fn fast_forward_matches_reference_under_overcommit() {
+        let mut c = cfg(8);
+        c.kv = KvBudget::tokens(768, 16);
+        c.paged_kv = true;
+        c.overcommit = Some(OvercommitSpec::quantile(0.5));
+        let t = TrafficSpec::poisson(3.0, 40, 16, 32, 128).with_seed(7);
+        let mut reference = c;
+        reference.reference_step = true;
+        let a = simulate_trace(&reference, &mut ContinuousBatch, &t, &SloSpec::unconstrained());
+        let b = simulate_trace(&c, &mut ContinuousBatch, &t, &SloSpec::unconstrained());
+        assert!(a.peak_kv_tokens > 0);
+        assert_eq!(a.fingerprint(), b.fingerprint());
+    }
+
+    /// The overcommit payoff when the block pool (not the slot count)
+    /// bounds concurrency: reservation pins a request's whole footprint
+    /// for its whole residency, while lazy allocation holds only the
+    /// grown prefix — roughly half the block-time — so the same trace
+    /// runs ~2x the concurrency and finishes sooner even paying the
+    /// recompute penalty for preemptions.
+    #[test]
+    fn overcommit_outserves_reservation_on_a_block_bound_pool() {
+        let mut reserved = cfg(16);
+        reserved.kv = KvBudget::tokens(256, 8);
+        reserved.paged_kv = true;
+        let mut oc = reserved;
+        oc.overcommit = Some(OvercommitSpec::quantile(0.5));
+        // Mean footprint 8 + 62 = 70 tokens (9 blocks): the 32-block pool
+        // sustains ~3.5 reserved requests but ~6.5 lazily-grown ones, and
+        // 16 slots keep the slot count from binding first.
+        let t = TrafficSpec::poisson(1e4, 300, 8, 4, 120).with_seed(17);
+        let slo = SloSpec::unconstrained();
+        let r = simulate_trace(&reserved, &mut ContinuousBatch, &t, &slo);
+        let o = simulate_trace(&oc, &mut ContinuousBatch, &t, &slo);
+        assert_eq!(r.completed, r.offered);
+        assert_eq!(o.completed, o.offered, "preempted work must still finish");
+        assert_eq!(o.tokens, r.tokens, "same seeded budgets either way");
+        assert!(o.peak_live > r.peak_live, "lazy allocation must admit more concurrency");
+        assert!(
+            o.makespan_s < r.makespan_s,
+            "overcommit concurrency must finish sooner: {} vs {}",
+            o.makespan_s,
+            r.makespan_s
+        );
+        assert!(o.goodput_tokens_per_s > r.goodput_tokens_per_s);
+    }
+
+    /// Overcommit + tiers across a replicated fleet: conservation holds,
+    /// preemption lands on batch first, and the run replays bit-identically.
+    #[test]
+    fn replicated_overcommit_tiers_conserve_and_replay() {
+        let mut c = cfg(4);
+        c.kv = KvBudget::tokens(96, 8);
+        c.paged_kv = true;
+        c.overcommit = Some(OvercommitSpec::quantile(0.5));
+        let tiers =
+            TierSpec::new(0.4, 2, 8, SloSpec::new(0.5, 0.05), SloSpec::unconstrained())
+                .with_fairness(4);
+        let t = TrafficSpec::poisson(200.0, 120, 8, 16, 48).with_seed(29).with_tiers(tiers);
+        let slo = SloSpec::unconstrained();
+        let run = || {
+            simulate_replicated(&c, 2, RoutePolicy::JsqTokens, &ContinuousBatch, &t, &slo)
+        };
+        let rep = run();
+        assert_eq!(rep.completed + rep.rejected, rep.offered);
+        assert_eq!(rep.completed, rep.offered, "nothing here exceeds the pool alone");
+        assert!(rep.preempted > 0);
+        assert_eq!(
+            rep.tiers.iter().map(|t| t.preempted).sum::<usize>(),
+            rep.preempted,
+            "per-tier preemption counts must partition the total"
+        );
+        assert_eq!(rep.fingerprint(), run().fingerprint());
     }
 }

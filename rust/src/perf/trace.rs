@@ -155,7 +155,7 @@ impl Rows {
         self.last_at = at_s;
         let id = self.next_id;
         self.next_id += 1;
-        Ok(Arrival { id, at_s, prompt_tokens, new_tokens })
+        Ok(Arrival { id, at_s, prompt_tokens, new_tokens, tier: 0 })
     }
 }
 
@@ -211,10 +211,10 @@ mod tests {
         assert_eq!(tf.requests(), 3);
         let got: Vec<Arrival> = tf.arrivals().unwrap().collect();
         assert_eq!(got.len(), 3);
-        assert_eq!(got[0], Arrival { id: 0, at_s: 0.0, prompt_tokens: 8, new_tokens: 4 });
-        assert_eq!(got[1], Arrival { id: 1, at_s: 0.5, prompt_tokens: 16, new_tokens: 1 });
+        assert_eq!(got[0], Arrival { id: 0, at_s: 0.0, prompt_tokens: 8, new_tokens: 4, tier: 0 });
+        assert_eq!(got[1], Arrival { id: 1, at_s: 0.5, prompt_tokens: 16, new_tokens: 1, tier: 0 });
         // Equal timestamps are fine (ties keep row order), prompt may be 0.
-        assert_eq!(got[2], Arrival { id: 2, at_s: 0.5, prompt_tokens: 0, new_tokens: 2 });
+        assert_eq!(got[2], Arrival { id: 2, at_s: 0.5, prompt_tokens: 0, new_tokens: 2, tier: 0 });
         std::fs::remove_file(&p).ok();
     }
 

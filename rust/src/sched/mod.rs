@@ -19,6 +19,11 @@
 //!   decode, and admission never exceeds the KV-capacity budget.
 //! * [`KvBudget`] — the CC-MEM KV-capacity admission limit, derived from
 //!   the (server, workload, mapping) triple of `arch`/`mapping`.
+//! * [`OvercommitLedger`] — expected-residency admission with lazy block
+//!   allocation and exhaustion-driven preemption (vLLM-style overcommit;
+//!   see [`overcommit`]).
+//! * [`TierSelector`] — tier-ordered admission with a fairness bound on
+//!   batch starvation (see [`tier`]).
 //!
 //! Both drivers run the same trait. The discrete-event simulator executes
 //! every action literally (it owns virtual time and per-slot state). The
@@ -30,11 +35,15 @@
 
 pub mod budget;
 pub mod ledger;
+pub mod overcommit;
 pub mod policy;
+pub mod tier;
 
 pub use budget::KvBudget;
 pub use ledger::KvLedger;
+pub use overcommit::OvercommitLedger;
 pub use policy::{ContinuousBatch, StaticBatch};
+pub use tier::TierSelector;
 
 /// How arrivals are routed across serving replicas (N independent queues,
 /// each running its own policy instance — see

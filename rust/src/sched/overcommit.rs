@@ -1,0 +1,387 @@
+//! Expected-residency KV accounting — the overcommit ledger.
+//!
+//! [`super::KvLedger`] reserves every admitted request's *maximum* KV
+//! footprint (prompt + full token budget), so a heavy-tailed workload pins
+//! blocks for tokens that are rarely generated and each replica serves far
+//! fewer users than its SRAM allows. This ledger is the vLLM-style answer:
+//! admission is gated on an *expected-residency charge* (a quantile of the
+//! token-budget distribution, or the observed running mean), while blocks
+//! are allocated **lazily** — one at a time, as residency actually grows.
+//!
+//! The price of optimism is that a replica can run out of blocks
+//! mid-decode. [`OvercommitLedger::append`] then reports the exhaustion
+//! (instead of panicking or silently over-allocating, which the reserved
+//! ledger's `debug_assert` forbids by construction) and the caller
+//! **preempts** a victim — [`OvercommitLedger::preempt_candidate`] picks
+//! the lowest-priority, most-recently-admitted slot — frees its blocks,
+//! and re-queues the victim to recompute from scratch on resume.
+//!
+//! The ledger is standalone rather than layered over [`super::KvLedger`]
+//! because the reserved ledger's residency-within-reservation invariant is
+//! exactly what overcommit violates on purpose.
+
+use std::collections::BTreeMap;
+
+/// Per-slot allocation record.
+#[derive(Clone, Copy, Debug)]
+struct OcSlot {
+    /// KV tokens currently resident (prompt + generated so far).
+    resident_tokens: usize,
+    /// Blocks actually allocated to the slot (grows lazily).
+    used_blocks: usize,
+    /// Prompt tokens (to attribute generated tokens on release).
+    prompt_tokens: usize,
+    /// Priority tier (0 = interactive, higher = lower priority).
+    tier: u8,
+    /// Admission order stamp — preemption evicts the most recent first.
+    admit_seq: u64,
+}
+
+/// Lazy, block-granular KV allocator with expected-residency admission for
+/// one engine replica.
+#[derive(Clone, Debug)]
+pub struct OvercommitLedger {
+    /// Allocation block size, tokens (>= 1).
+    block_tokens: usize,
+    /// Total capacity, blocks.
+    capacity_blocks: usize,
+    /// Blocks allocated across live slots.
+    used_blocks: usize,
+    /// KV tokens resident across live slots.
+    resident_tokens: usize,
+    /// High-water mark of `resident_tokens`.
+    peak_resident_tokens: usize,
+    /// Monotone admission stamp.
+    admit_seq: u64,
+    /// Sum of generated tokens over completed (released) requests.
+    observed_sum: f64,
+    /// Completed (released) requests observed.
+    observed_n: u64,
+    slots: BTreeMap<u64, OcSlot>,
+}
+
+impl OvercommitLedger {
+    /// Ledger over `capacity_tokens` of KV, allocated in blocks of
+    /// `block_tokens` (clamped to >= 1), mirroring [`super::KvLedger::new`].
+    pub fn new(capacity_tokens: usize, block_tokens: usize) -> OvercommitLedger {
+        let block_tokens = block_tokens.max(1);
+        OvercommitLedger {
+            block_tokens,
+            capacity_blocks: capacity_tokens / block_tokens,
+            used_blocks: 0,
+            resident_tokens: 0,
+            peak_resident_tokens: 0,
+            admit_seq: 0,
+            observed_sum: 0.0,
+            observed_n: 0,
+            slots: BTreeMap::new(),
+        }
+    }
+
+    /// Blocks needed to hold `tokens` KV entries.
+    pub fn blocks_for(&self, tokens: usize) -> usize {
+        tokens.div_ceil(self.block_tokens).max(1)
+    }
+
+    /// Allocation block size, tokens.
+    pub fn block_tokens(&self) -> usize {
+        self.block_tokens
+    }
+
+    /// Total capacity, blocks.
+    pub fn capacity_blocks(&self) -> usize {
+        self.capacity_blocks
+    }
+
+    /// Unallocated blocks available right now.
+    pub fn free_blocks(&self) -> usize {
+        self.capacity_blocks - self.used_blocks
+    }
+
+    /// KV tokens resident across live slots right now.
+    pub fn resident_tokens(&self) -> usize {
+        self.resident_tokens
+    }
+
+    /// High-water mark of resident KV tokens.
+    pub fn peak_resident_tokens(&self) -> usize {
+        self.peak_resident_tokens
+    }
+
+    /// Live (admitted, unreleased) slots.
+    pub fn live(&self) -> usize {
+        self.slots.len()
+    }
+
+    /// Mean generated tokens across completed requests, when any have been
+    /// observed — the `RunningMean` residency estimator.
+    pub fn observed_mean(&self) -> Option<f64> {
+        if self.observed_n == 0 {
+            None
+        } else {
+            Some(self.observed_sum / self.observed_n as f64)
+        }
+    }
+
+    /// How many of the given requests — in order, no skipping, mirroring
+    /// [`super::KvLedger::admissible`]'s FIFO contract — fit the free
+    /// blocks right now. `charges` yields each queued request's
+    /// *expected-residency* charge in tokens (prompt + expected new).
+    pub fn admissible(&self, charges: impl Iterator<Item = usize>) -> usize {
+        let mut free = self.free_blocks();
+        let mut n = 0;
+        for tokens in charges {
+            let need = self.blocks_for(tokens);
+            if need > free {
+                break;
+            }
+            free -= need;
+            n += 1;
+        }
+        n
+    }
+
+    /// Admit a slot: gate on its expected-residency `charge_tokens`
+    /// fitting the free blocks, but allocate only what the prompt needs —
+    /// the rest arrives lazily through [`OvercommitLedger::append`].
+    /// Returns false (no state change) when the charge does not fit.
+    pub fn admit(&mut self, id: u64, prompt_tokens: usize, charge_tokens: usize, tier: u8) -> bool {
+        let need = self.blocks_for(charge_tokens.max(prompt_tokens));
+        if need > self.free_blocks() || self.slots.contains_key(&id) {
+            return false;
+        }
+        let used = self.blocks_for(prompt_tokens);
+        self.used_blocks += used;
+        self.resident_tokens += prompt_tokens;
+        self.peak_resident_tokens = self.peak_resident_tokens.max(self.resident_tokens);
+        self.slots.insert(
+            id,
+            OcSlot {
+                resident_tokens: prompt_tokens,
+                used_blocks: used,
+                prompt_tokens,
+                tier,
+                admit_seq: self.admit_seq,
+            },
+        );
+        self.admit_seq += 1;
+        true
+    }
+
+    /// One more token resident in slot `id`. Returns false — with **no
+    /// state change** — when the token needs a fresh block and none is
+    /// free: the caller must preempt a victim and retry (or give up).
+    #[must_use]
+    pub fn append(&mut self, id: u64) -> bool {
+        let free = self.free_blocks();
+        let Some(slot) = self.slots.get_mut(&id) else { return true };
+        if slot.resident_tokens + 1 > slot.used_blocks * self.block_tokens {
+            if free == 0 {
+                return false;
+            }
+            slot.used_blocks += 1;
+            self.used_blocks += 1;
+        }
+        slot.resident_tokens += 1;
+        self.resident_tokens += 1;
+        self.peak_resident_tokens = self.peak_resident_tokens.max(self.resident_tokens);
+        true
+    }
+
+    /// `n` consecutive appends to slot `id` as one O(1) update, for the
+    /// decode fast-forward. The caller must have bounded `n` so the grown
+    /// residency fits the free blocks (see the fast-forward's conservative
+    /// per-slot cap); exceeding it is a logic error.
+    pub fn append_n(&mut self, id: u64, n: usize) {
+        if n == 0 {
+            return;
+        }
+        let free = self.free_blocks();
+        let Some(slot) = self.slots.get_mut(&id) else { return };
+        let new_used = (slot.resident_tokens + n).div_ceil(self.block_tokens).max(1);
+        let grow = new_used.saturating_sub(slot.used_blocks);
+        debug_assert!(grow <= free, "fast-forward outgrew the free blocks for slot {id}");
+        slot.used_blocks += grow;
+        self.used_blocks += grow;
+        slot.resident_tokens += n;
+        self.resident_tokens += n;
+        self.peak_resident_tokens = self.peak_resident_tokens.max(self.resident_tokens);
+    }
+
+    /// Free a finished slot and record its generated-token count for the
+    /// running-mean estimator.
+    pub fn release(&mut self, id: u64) {
+        if let Some(slot) = self.slots.remove(&id) {
+            self.used_blocks -= slot.used_blocks;
+            self.resident_tokens -= slot.resident_tokens;
+            self.observed_sum +=
+                slot.resident_tokens.saturating_sub(slot.prompt_tokens) as f64;
+            self.observed_n += 1;
+        }
+    }
+
+    /// Evict slot `id`: free its blocks and residency with **no**
+    /// completion observation (the request will recompute from scratch).
+    pub fn preempt(&mut self, id: u64) {
+        if let Some(slot) = self.slots.remove(&id) {
+            self.used_blocks -= slot.used_blocks;
+            self.resident_tokens -= slot.resident_tokens;
+        }
+    }
+
+    /// Largest per-slot token advance `k` provably safe to bulk-append to
+    /// *every* live slot at once — the decode fast-forward's preemption-
+    /// free stretch bound. Each slot first consumes its own in-block
+    /// headroom, then at most `floor(free / live)` fresh blocks, so the
+    /// total growth can never exceed the free pool and
+    /// [`OvercommitLedger::append_n`] never outgrows it. Returns 0 when a
+    /// single uniform step could already need a preemption (callers then
+    /// take the per-iteration path, which preempts); `usize::MAX` with no
+    /// live slots.
+    pub fn bulk_append_cap(&self) -> usize {
+        if self.slots.is_empty() {
+            return usize::MAX;
+        }
+        let headroom = self
+            .slots
+            .values()
+            .map(|s| (s.used_blocks * self.block_tokens).saturating_sub(s.resident_tokens))
+            .min()
+            .unwrap_or(0);
+        headroom + (self.free_blocks() / self.slots.len()) * self.block_tokens
+    }
+
+    /// The slot to evict when blocks run out: lowest priority first
+    /// (highest tier number), most recently admitted within a tier —
+    /// interactive incumbents and long-resident work survive. `excluding`
+    /// (the slot whose append hit the wall) is never its own victim.
+    pub fn preempt_candidate(&self, excluding: u64) -> Option<u64> {
+        self.slots
+            .iter()
+            .filter(|(id, _)| **id != excluding)
+            .max_by_key(|(_, s)| (s.tier, s.admit_seq))
+            .map(|(id, _)| *id)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn admission_gates_on_the_charge_not_the_max_footprint() {
+        // 4 blocks of 8 tokens. Max-footprint admission (KvLedger) fits
+        // two 16-token reservations; charging the expected 8 fits four.
+        let mut l = OvercommitLedger::new(32, 8);
+        for id in 0..4u64 {
+            assert!(l.admit(id, 4, 8, 1), "slot {id}");
+        }
+        assert_eq!(l.live(), 4);
+        assert_eq!(l.free_blocks(), 0);
+        assert!(!l.admit(9, 4, 8, 1), "full ledger must reject");
+        // Duplicate ids are rejected like the reserved ledger.
+        let mut l = OvercommitLedger::new(1000, 8);
+        assert!(l.admit(1, 4, 8, 0));
+        assert!(!l.admit(1, 4, 8, 0));
+    }
+
+    #[test]
+    fn blocks_allocate_lazily_and_appends_report_exhaustion() {
+        let mut l = OvercommitLedger::new(16, 8); // 2 blocks
+        assert!(l.admit(1, 2, 4, 0)); // 1 block allocated for the prompt
+        assert_eq!(l.free_blocks(), 1);
+        for _ in 0..6 {
+            assert!(l.append(1)); // fills block 1
+        }
+        assert!(l.append(1)); // 9th token: lazily grabs block 2
+        assert_eq!(l.free_blocks(), 0);
+        for _ in 0..7 {
+            assert!(l.append(1)); // fills block 2
+        }
+        // 17th token needs a third block: exhaustion, no state change.
+        let before = l.resident_tokens();
+        assert!(!l.append(1));
+        assert_eq!(l.resident_tokens(), before);
+        // Freeing another way out: preempt is not possible (only slot), so
+        // release shows blocks coming back.
+        l.release(1);
+        assert_eq!(l.free_blocks(), 2);
+        assert_eq!(l.live(), 0);
+    }
+
+    #[test]
+    fn preemption_victim_is_lowest_priority_most_recent() {
+        let mut l = OvercommitLedger::new(1000, 8);
+        assert!(l.admit(10, 4, 8, 0)); // interactive, oldest
+        assert!(l.admit(11, 4, 8, 1)); // batch
+        assert!(l.admit(12, 4, 8, 1)); // batch, most recent
+        assert!(l.admit(13, 4, 8, 0)); // interactive, most recent
+        assert_eq!(l.preempt_candidate(99), Some(12));
+        l.preempt(12);
+        assert_eq!(l.preempt_candidate(99), Some(11));
+        l.preempt(11);
+        // Only interactive left: most recent goes first.
+        assert_eq!(l.preempt_candidate(99), Some(13));
+        // The appender is never its own victim.
+        assert_eq!(l.preempt_candidate(13), Some(10));
+        l.preempt(13);
+        l.preempt(10);
+        assert_eq!(l.preempt_candidate(99), None);
+        assert_eq!(l.resident_tokens(), 0);
+        assert_eq!(l.free_blocks(), l.capacity_blocks());
+    }
+
+    #[test]
+    fn running_mean_observes_releases_but_not_preemptions() {
+        let mut l = OvercommitLedger::new(1000, 8);
+        assert_eq!(l.observed_mean(), None);
+        assert!(l.admit(1, 10, 20, 0));
+        for _ in 0..6 {
+            assert!(l.append(1));
+        }
+        l.release(1); // generated 6
+        assert!(l.admit(2, 10, 20, 0));
+        for _ in 0..10 {
+            assert!(l.append(2));
+        }
+        l.preempt(2); // not observed
+        assert!((l.observed_mean().unwrap() - 6.0).abs() < 1e-12);
+        assert!(l.admit(3, 10, 20, 0));
+        for _ in 0..2 {
+            assert!(l.append(3));
+        }
+        l.release(3); // generated 2 → mean 4
+        assert!((l.observed_mean().unwrap() - 4.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn append_n_matches_n_single_appends() {
+        let mut bulk = OvercommitLedger::new(256, 8);
+        let mut single = bulk.clone();
+        assert!(bulk.admit(1, 10, 20, 0) && single.admit(1, 10, 20, 0));
+        assert!(bulk.admit(2, 4, 12, 1) && single.admit(2, 4, 12, 1));
+        bulk.append_n(1, 17);
+        bulk.append_n(2, 5);
+        bulk.append_n(9, 3); // unknown slot: no-op
+        bulk.append_n(1, 0); // zero-length: no-op
+        for _ in 0..17 {
+            assert!(single.append(1));
+        }
+        for _ in 0..5 {
+            assert!(single.append(2));
+        }
+        assert!(single.append(9));
+        assert_eq!(bulk.resident_tokens(), single.resident_tokens());
+        assert_eq!(bulk.peak_resident_tokens(), single.peak_resident_tokens());
+        assert_eq!(bulk.free_blocks(), single.free_blocks());
+        assert_eq!(bulk.live(), single.live());
+    }
+
+    #[test]
+    fn admissible_is_fifo_prefix_over_charges() {
+        let mut l = OvercommitLedger::new(32, 8); // 4 blocks
+        assert!(l.admit(9, 8, 8, 0)); // 1 block used
+        let n = l.admissible([16usize, 24, 1].into_iter());
+        assert_eq!(n, 1, "no skipping past a charge that does not fit");
+    }
+}

@@ -7,7 +7,8 @@ use std::path::Path;
 
 use chiplet_cloud::config::experiment::{EngineKnobs, Experiment, SpaceSpec, Task, WorkloadPoint};
 use chiplet_cloud::config::{
-    ArrivalProcess, ModelSpec, ServeSpec, SloSpec, TrafficSpec, Workload,
+    ArrivalProcess, FaultSpec, ModelSpec, OvercommitSpec, ServeSpec, SloSpec, TierSpec, TokenDist,
+    TrafficSpec, Workload,
 };
 use chiplet_cloud::evaluate::{self, SweepEngine};
 use chiplet_cloud::experiment::{self, cli, Engine, Outcome};
@@ -73,6 +74,16 @@ fn json_round_trip_property() {
             if r.chance(0.5) { f64::INFINITY } else { 0.001 + r.f64() },
             if r.chance(0.5) { f64::INFINITY } else { 0.001 + r.f64() },
         );
+        let tiers = r.chance(0.3).then(|| {
+            TierSpec::new(
+                r.f64(),
+                1 + r.below(8),
+                9 + r.below(32),
+                SloSpec::new(0.001 + r.f64(), 0.001 + r.f64()),
+                if r.chance(0.5) { SloSpec::unconstrained() } else { SloSpec::new(10.0, 1.0) },
+            )
+            .with_fairness(r.below(8))
+        });
         let serve = ServeSpec {
             traffic: TrafficSpec {
                 arrival,
@@ -80,6 +91,12 @@ fn json_round_trip_property() {
                 prompt_tokens: r.below(128),
                 new_tokens_lo: lo,
                 new_tokens_hi: lo + r.below(100),
+                new_tokens_dist: if r.chance(0.3) {
+                    TokenDist::Pareto { alpha: 0.5 + r.f64() * 2.0 }
+                } else {
+                    TokenDist::Uniform
+                },
+                tiers,
                 seed: r.below(1_000_000) as u64,
             },
             slo,
@@ -89,6 +106,17 @@ fn json_round_trip_property() {
             route: *r.pick(&[RoutePolicy::RoundRobin, RoutePolicy::Jsq, RoutePolicy::JsqTokens]),
             quantum: if r.chance(0.5) { 0.0 } else { 0.001 + r.f64() * 0.1 },
             trace_file: None,
+            faults: if r.chance(0.3) {
+                FaultSpec::mtbf(10.0 + r.f64() * 100.0, 1.0 + r.f64() * 10.0, r.below(1 << 30) as u64)
+            } else {
+                FaultSpec::none()
+            },
+            overcommit: match r.below(3) {
+                0 => Some(OvercommitSpec::quantile(0.05 + r.f64() * 0.9)),
+                1 => Some(OvercommitSpec::running_mean()),
+                _ => None,
+            },
+            goodput_window_s: if r.chance(0.5) { 0.0 } else { 1.0 + r.f64() * 60.0 },
         };
         let e = Experiment {
             name: format!("spec-{case}"),
@@ -153,6 +181,8 @@ fn cli_sweep_goldens() {
             prompt_tokens: 64,
             new_tokens_lo: 16,
             new_tokens_hi: 128,
+            new_tokens_dist: TokenDist::Uniform,
+            tiers: None,
             seed: 42,
         },
         SloSpec::new(f64::INFINITY, 0.05),
@@ -171,6 +201,8 @@ fn cli_sweep_goldens() {
             prompt_tokens: 64,
             new_tokens_lo: 8,
             new_tokens_hi: 32,
+            new_tokens_dist: TokenDist::Uniform,
+            tiers: None,
             seed: 42,
         },
         SloSpec::new(2.0, 0.05),
@@ -196,6 +228,8 @@ fn cli_sweep_goldens() {
                 prompt_tokens: 64,
                 new_tokens_lo: 16,
                 new_tokens_hi: 128,
+                new_tokens_dist: TokenDist::Uniform,
+                tiers: None,
                 seed: 42,
             },
             SloSpec::new(f64::INFINITY, 0.05),
@@ -240,6 +274,8 @@ fn cli_serve_sim_goldens() {
                 prompt_tokens: 32,
                 new_tokens_lo: 8,
                 new_tokens_hi: 32,
+                new_tokens_dist: TokenDist::Uniform,
+                tiers: None,
                 seed: 42,
             },
             SloSpec::unconstrained(),
@@ -265,12 +301,16 @@ fn cli_serve_sim_goldens() {
                     prompt_tokens: 16,
                     new_tokens_lo: 4,
                     new_tokens_hi: 8,
+                    new_tokens_dist: TokenDist::Uniform,
+                    tiers: None,
                     seed: 7,
                 },
                 SloSpec::new(1.5, 0.02),
             )
             .with_paged_kv()
-            .with_replicas(3, RoutePolicy::Jsq),
+            .with_replicas(3, RoutePolicy::Jsq)
+            .with_overcommit(OvercommitSpec::quantile(0.8))
+            .with_goodput_window(5.0),
         ),
         load: 0.5,
         engine: EngineKnobs::default(),
@@ -281,11 +321,18 @@ fn cli_serve_sim_goldens() {
             "serve-sim", "--ctx", "2048", "--batch", "64", "--load", "0.5", "--trace", "bursty",
             "--rps", "3.5", "--burst", "4", "--requests", "50", "--prompt-tokens", "16",
             "--tokens-lo", "4", "--tokens-hi", "8", "--seed", "7", "--slo-ttft", "1.5",
-            "--slo-tpot", "0.02", "--paged", "--replicas", "3", "--route", "jsq",
+            "--slo-tpot", "0.02", "--paged", "--replicas", "3", "--route", "jsq", "--overcommit",
+            "0.8", "--goodput-window", "5",
         ])
         .unwrap(),
         full
     );
+
+    // The running-mean estimator spells as the literal 'mean'.
+    let e = translate(&["serve-sim", "--paged", "--overcommit", "mean"]).unwrap();
+    let s = e.serve.expect("serve-sim carries a serve spec");
+    assert_eq!(s.overcommit, Some(OvercommitSpec::running_mean()));
+    assert_eq!(s.goodput_window_s, 0.0, "window stays inert without its flag");
 }
 
 #[test]
@@ -336,6 +383,13 @@ fn cli_rejects_bad_flag_combinations() {
         .contains("drop --clients"));
     // Serving knobs (trace file included) still need a binding SLO on sweeps.
     assert!(err(&["sweep", "--trace-file", "t.csv"]).contains("no effect"));
+    // Overcommit admission: degenerate quantiles error, the flag needs a
+    // binding SLO on sweeps, and spec validation requires the paged ledger.
+    assert!(err(&["serve-sim", "--paged", "--overcommit", "1.5"]).contains("quantile"));
+    assert!(err(&["serve-sim", "--paged", "--overcommit", "abc"]).contains("quantile"));
+    assert!(err(&["sweep", "--overcommit", "0.8"]).contains("no effect"));
+    assert!(err(&["sweep", "--goodput-window", "5"]).contains("no effect"));
+    assert!(err(&["serve-sim", "--overcommit", "0.8"]).contains("paged_kv"));
 }
 
 /// `--trace-file` and `--quantum` translate into the spec verbatim; the

@@ -6,7 +6,8 @@
 
 use chiplet_cloud::arch::{ChipletDesign, ServerDesign};
 use chiplet_cloud::config::{
-    ArrivalProcess, FaultSpec, ModelSpec, ServeSpec, SloSpec, TrafficSpec, Workload,
+    ArrivalProcess, FaultSpec, ModelSpec, OvercommitSpec, ServeSpec, SloSpec, TierSpec, TokenDist,
+    TrafficSpec, Workload,
 };
 use chiplet_cloud::mapping::Mapping;
 use chiplet_cloud::perf::events::{
@@ -97,6 +98,8 @@ fn closed_loop_never_exceeds_kv_budget() {
             prompt_tokens: 1 + r.below(32),
             new_tokens_lo: 1,
             new_tokens_hi: 1 + r.below(24),
+            new_tokens_dist: TokenDist::Uniform,
+            tiers: None,
             seed: r.next_u64(),
         };
         let cfg = SimConfig::new(
@@ -389,6 +392,8 @@ fn fast_forward_matches_reference_step_bit_for_bit() {
             prompt_tokens: prompt,
             new_tokens_lo: lo,
             new_tokens_hi: hi,
+            new_tokens_dist: TokenDist::Uniform,
+            tiers: None,
             seed,
         };
         let mut cfg = synthetic_cfg(slots);
@@ -499,6 +504,8 @@ fn quantized_time_stays_within_epsilon_of_reference() {
             prompt_tokens: prompt,
             new_tokens_lo: lo,
             new_tokens_hi: hi,
+            new_tokens_dist: TokenDist::Uniform,
+            tiers: None,
             seed: r.next_u64(),
         };
         let mut cfg = synthetic_cfg(slots);
@@ -612,6 +619,8 @@ fn fault_none_is_fingerprint_identical_to_the_default_path() {
             prompt_tokens: 1 + r.below(47),
             new_tokens_lo: 1 + r.below(8),
             new_tokens_hi: 9 + r.below(60),
+            new_tokens_dist: TokenDist::Uniform,
+            tiers: None,
             seed: r.next_u64(),
         };
         let mut cfg = synthetic_cfg(slots);
@@ -688,6 +697,8 @@ fn fault_conservation_holds_across_the_matrix() {
                         prompt_tokens: 16,
                         new_tokens_lo: 4,
                         new_tokens_hi: 24,
+                        new_tokens_dist: TokenDist::Uniform,
+                        tiers: None,
                         seed: 1000 + fi as u64,
                     };
                     let mut cfg = synthetic_cfg(4);
@@ -854,4 +865,241 @@ fn no_empty_iterations_under_sparse_traffic() {
     let max_iters: u64 = rep.per_request.iter().map(|r| r.tokens as u64).sum();
     assert!(rep.iterations <= max_iters, "{} > {}", rep.iterations, max_iters);
     assert!(rep.occupancy > 0.0);
+}
+
+// ---------------------------------------------------------------------------
+// Overcommit admission + priority tiers.
+
+/// Conservation invariant under preemption: across poisson/bursty
+/// arrivals, 1–2 replicas, both residency estimators and tiers on/off, a
+/// block-bound paged pool forces mid-decode preemptions, yet every offered
+/// request is accounted for exactly once (preempted requests re-queue and
+/// recompute rather than vanish), per-tier preemption tallies sum to the
+/// aggregate, and runs replay bit-identically.
+#[test]
+fn overcommit_preemption_conserves_across_the_matrix() {
+    let slo = SloSpec::unconstrained();
+    let mut total_preempted = 0usize;
+    for (ai, arrival) in [
+        ArrivalProcess::Poisson { rps: 200.0 },
+        ArrivalProcess::Bursty { rps: 200.0, burst: 8 },
+    ]
+    .into_iter()
+    .enumerate()
+    {
+        for replicas in [1usize, 2] {
+            for tiered in [false, true] {
+                for (oi, oc) in
+                    [OvercommitSpec::quantile(0.5), OvercommitSpec::running_mean()]
+                        .into_iter()
+                        .enumerate()
+                {
+                    let mut t = TrafficSpec {
+                        arrival,
+                        ..TrafficSpec::poisson(200.0, 120, 8, 4, 48)
+                    }
+                    .with_seed(500 + ai as u64);
+                    if tiered {
+                        t = t.with_tiers(
+                            TierSpec::new(0.4, 2, 8, SloSpec::new(0.5, 0.05), slo)
+                                .with_fairness(2),
+                        );
+                    }
+                    // 12 blocks of 8 tokens: the 0.5-quantile charge
+                    // (8 + 26 = 34 tokens, 5 blocks) admits pairs that can
+                    // each grow to 56 tokens (7 blocks) — exhaustion, and
+                    // therefore preemption, is routine.
+                    let mut cfg = synthetic_cfg(4);
+                    cfg.kv = KvBudget::tokens(96, 8);
+                    cfg.paged_kv = true;
+                    cfg.overcommit = Some(oc);
+                    let run = || {
+                        simulate_replicated(
+                            &cfg,
+                            replicas,
+                            RoutePolicy::Jsq,
+                            &ContinuousBatch,
+                            &t,
+                            &slo,
+                        )
+                    };
+                    let rep = run();
+                    let tag = format!(
+                        "arrival {ai}, replicas {replicas}, tiered {tiered}, estimator {oi}"
+                    );
+                    assert_eq!(
+                        rep.completed + rep.rejected + rep.lost,
+                        rep.offered,
+                        "conservation broke: {tag}"
+                    );
+                    assert_eq!(rep.offered, 120, "{tag}");
+                    assert_eq!(rep.lost, 0, "no faults, nothing may be lost: {tag}");
+                    if tiered {
+                        assert_eq!(rep.tiers.len(), 2, "{tag}");
+                        let by_tier: usize = rep.tiers.iter().map(|t| t.preempted).sum();
+                        assert_eq!(by_tier, rep.preempted, "tier tallies must sum: {tag}");
+                        assert_eq!(
+                            rep.tiers.iter().map(|t| t.completed).sum::<usize>(),
+                            rep.completed,
+                            "{tag}"
+                        );
+                    } else {
+                        assert!(rep.tiers.is_empty(), "{tag}");
+                    }
+                    assert_eq!(rep.fingerprint(), run().fingerprint(), "replay diverged: {tag}");
+                    total_preempted += rep.preempted;
+                }
+            }
+        }
+    }
+    assert!(total_preempted > 0, "the block-bound matrix must preempt somewhere");
+}
+
+/// Identity property: with overcommit and tiers off, randomized runs carry
+/// no tier/window/preemption state — the report fingerprint keeps exactly
+/// the pre-overcommit aggregate arity — and an overcommit spec on an
+/// unpaged config is inert (expected-residency admission is a paged-KV
+/// mechanism), leaving runs bit-identical to the plain path.
+#[test]
+fn overcommit_off_and_inert_paths_stay_fingerprint_identical() {
+    check("overcommit off/inert identity", 25, |r| {
+        let slots = 2 + r.below(10);
+        let arrival = match r.below(3) {
+            0 => ArrivalProcess::Poisson { rps: 0.5 + r.f64() * 40.0 },
+            1 => ArrivalProcess::Bursty { rps: 0.5 + r.f64() * 25.0, burst: 1 + r.below(8) },
+            _ => ArrivalProcess::ClosedLoop { clients: 1 + r.below(8), think_s: r.f64() * 0.05 },
+        };
+        let t = TrafficSpec {
+            arrival,
+            ..TrafficSpec::poisson(0.0, 20 + r.below(60), 1 + r.below(32), 1, 1 + r.below(24))
+        }
+        .with_seed(r.next_u64());
+        let replicas = 1 + r.below(2);
+        let mut cfg = synthetic_cfg(slots);
+        if r.chance(0.5) {
+            let footprint = t.prompt_tokens + t.new_tokens_hi;
+            cfg.kv = KvBudget::tokens(footprint * (1 + r.below(slots + 1)) + 8, 8);
+            cfg.paged_kv = true;
+        }
+        let route = RoutePolicy::Jsq;
+        let plain =
+            simulate_replicated(&cfg, replicas, route, &ContinuousBatch, &t, &SloSpec::unconstrained());
+        // Off path: no preemption state, no tier or window rows, and the
+        // aggregate fingerprint keeps its fixed arity.
+        assert_eq!(plain.preempted, 0);
+        assert!(plain.tiers.is_empty());
+        assert!(plain.windows.is_empty());
+        assert_eq!(plain.fingerprint().0.len(), 24);
+        // Inert path: overcommit on an unpaged config changes nothing.
+        if !cfg.paged_kv {
+            let mut oc_cfg = cfg.clone();
+            oc_cfg.overcommit = Some(if r.chance(0.5) {
+                OvercommitSpec::quantile(0.2 + r.f64() * 0.6)
+            } else {
+                OvercommitSpec::running_mean()
+            });
+            let oc = simulate_replicated(
+                &oc_cfg,
+                replicas,
+                route,
+                &ContinuousBatch,
+                &t,
+                &SloSpec::unconstrained(),
+            );
+            assert_eq!(plain.fingerprint(), oc.fingerprint(), "unpaged overcommit must be inert");
+        }
+    });
+}
+
+/// Fairness bound: at feasible load with an ample pool, tier-ordered
+/// admission with a finite `max_consecutive_interactive` never starves the
+/// batch tier — every offered request of both tiers completes — and the
+/// windowed goodput rows partition the completions exactly.
+#[test]
+fn batch_tier_is_never_starved_at_feasible_load() {
+    // 4 slots at 10 ms/step ≈ 400 tok/s capacity; 10 req/s at ≤ 24 tokens
+    // ≈ 140 tok/s offered: comfortably feasible.
+    let t = TrafficSpec::poisson(10.0, 100, 8, 4, 24)
+        .with_seed(77)
+        .with_tiers(
+            TierSpec::new(0.6, 2, 8, SloSpec::new(2.0, 0.5), SloSpec::unconstrained())
+                .with_fairness(1),
+        );
+    let mut cfg = synthetic_cfg(4);
+    // 64 blocks of 8: four max-footprint residents need 16 blocks, so the
+    // pool never binds and no preemption can occur.
+    cfg.kv = KvBudget::tokens(512, 8);
+    cfg.paged_kv = true;
+    cfg.overcommit = Some(OvercommitSpec::quantile(0.8));
+    cfg.window_s = 2.0;
+    let rep = simulate_replicated(
+        &cfg,
+        1,
+        RoutePolicy::RoundRobin,
+        &ContinuousBatch,
+        &t,
+        &SloSpec::unconstrained(),
+    );
+    assert_eq!(rep.completed, rep.offered, "feasible load must fully drain");
+    assert_eq!(rep.preempted, 0, "an ample pool must not preempt");
+    assert_eq!(rep.tiers.len(), 2);
+    for tr in &rep.tiers {
+        assert!(tr.completed > 0, "tier {} starved", tr.tier);
+        assert!(tr.tokens > 0, "tier {} generated nothing", tr.tier);
+    }
+    assert!(!rep.windows.is_empty(), "window rows must be emitted");
+    assert_eq!(rep.windows.iter().map(|w| w.completed).sum::<usize>(), rep.completed);
+    assert_eq!(rep.windows.iter().map(|w| w.tokens).sum::<usize>(), rep.tokens);
+}
+
+/// End-to-end acceptance on the checked-in overcommit spec: heavy-tailed
+/// Pareto budgets over a block-bound pool make the fleet preempt, the
+/// interactive tier still meets its SLO, and expected-residency admission
+/// strictly beats the reservation (max-footprint) baseline on goodput per
+/// TCO-dollar whenever that baseline is feasible at all.
+#[test]
+fn overcommit_tiers_spec_wins_goodput_per_tco_end_to_end() {
+    use chiplet_cloud::experiment::{Engine, Experiment, Outcome};
+    let path = concat!(env!("CARGO_MANIFEST_DIR"), "/../experiments/overcommit-tiers-serve.json");
+    let text = std::fs::read_to_string(path).expect("checked-in overcommit spec");
+    let e = Experiment::from_json_str(&text).expect("spec parses");
+    e.validate().expect("spec validates");
+    let mut engine = Engine::new();
+    let out = engine.run(&e).expect("spec runs");
+    let Outcome::Serve(o) = out else { panic!("serve-sim spec must yield a serve outcome") };
+    let spec = &o.spec;
+    let tiers = spec.traffic.tiers.as_ref().expect("spec carries tiers");
+    let sel = o
+        .slo
+        .as_ref()
+        .expect("the interactive tier's SLO binds the selection")
+        .as_ref()
+        .expect("some design must serve the interactive tier");
+    let rep = &sel.report;
+    assert_eq!(
+        rep.completed + rep.rejected + rep.lost,
+        rep.offered,
+        "conservation broke on the confirming report"
+    );
+    assert!(rep.preempted > 0, "the heavy-tailed trace must force preemptions");
+    assert_eq!(rep.tiers.len(), 2, "per-tier rows must be reported");
+    assert!(!rep.windows.is_empty(), "windowed goodput rows must be reported");
+    assert!(
+        rep.meets_tier(0, &tiers.interactive_slo),
+        "interactive p99 must hold: ttft {} tpot {}",
+        rep.tiers[0].ttft_p99_s,
+        rep.tiers[0].tpot_p99_s
+    );
+    // The reservation baseline (same spec, overcommit stripped) rides
+    // along in the outcome; when it is feasible, lazy admission must win
+    // on goodput per TCO-dollar.
+    let reserved = o.reserved.as_ref().expect("an overcommit run must carry its baseline");
+    if let Some(base) = reserved.as_ref() {
+        let oc_value = rep.goodput_tokens_per_s / sel.point.tco_per_token;
+        let rs_value = base.report.goodput_tokens_per_s / base.point.tco_per_token;
+        assert!(
+            oc_value > rs_value,
+            "overcommit must win goodput/TCO: {oc_value} vs {rs_value}"
+        );
+    }
 }

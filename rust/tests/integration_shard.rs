@@ -37,12 +37,9 @@ fn serve_spec(seed: u64, slo: bool) -> ServeSpec {
     ServeSpec::new(
         TrafficSpec {
             arrival: ArrivalProcess::ClosedLoop { clients: 8, think_s: 0.0 },
-            requests: 40,
-            prompt_tokens: 16,
-            new_tokens_lo: 4,
-            new_tokens_hi: 16,
-            seed,
-        },
+            ..TrafficSpec::poisson(0.0, 40, 16, 4, 16)
+        }
+        .with_seed(seed),
         if slo {
             SloSpec::new(2.0, 0.5)
         } else {
